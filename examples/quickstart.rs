@@ -1,0 +1,32 @@
+//! Quickstart: auto-tune a parameter in ~20 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! The "application" is a function whose runtime depends on an integer
+//! parameter (imagine an OpenMP chunk size); PATSMA finds the fastest value
+//! while the application keeps running.
+
+use patsma::tuner::Autotuning;
+use patsma::workloads::synthetic::chunk_cost_model;
+
+fn main() {
+    // Parameter domain [1, 128], no stabilisation iterations, CSA with
+    // 4 coupled optimizers × 8 iterations (paper Alg. 2 constructor).
+    let mut at = Autotuning::new(1.0, 128.0, 0, 1, 4, 8);
+    let mut chunk = [1i32; 1];
+
+    // Entire-Execution mode with an application-supplied cost (Alg. 3's
+    // entireExec): the closure returns the cost of running with `p`.
+    at.entire_exec(&mut chunk, |p| chunk_cost_model(p[0] as f64, 48.0));
+
+    println!("tuned chunk = {} (true optimum ≈ 48)", chunk[0]);
+    println!(
+        "evaluations = {}, target iterations = {} (Eq. 1: 4 × 8 × (0+1) = 32)",
+        at.evaluations(),
+        at.target_iterations()
+    );
+    let (best, cost) = at.best().expect("history");
+    println!("best measured: chunk {} at cost {:.4}", best[0] as i64, cost);
+}

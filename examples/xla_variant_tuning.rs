@@ -1,0 +1,76 @@
+//! The full three-layer path (DESIGN.md §Hardware-Adaptation): PATSMA
+//! auto-tunes the **Pallas block size** by selecting among AOT-compiled XLA
+//! executables at runtime, via PJRT, with zero Python on the request path.
+//!
+//! ```bash
+//! make artifacts   # once: python lowers the Pallas kernels to HLO text
+//! cargo run --release --example xla_variant_tuning
+//! ```
+
+use patsma::benchkit::fmt_time;
+use patsma::runtime::{default_artifact_dir, Engine, XlaVariantWorkload};
+use patsma::tuner::Autotuning;
+use patsma::workloads::Workload;
+
+fn main() {
+    let dir = default_artifact_dir();
+    let engine = match Engine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!(
+                "could not load artifacts from {} — run `make artifacts` first\n{e:#}",
+                dir.display()
+            );
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "loaded {} compiled variants from {}\n",
+        engine.variants().len(),
+        dir.display()
+    );
+
+    for kind in ["rb_sweep", "wave"] {
+        let mut w = match kind {
+            "rb_sweep" => XlaVariantWorkload::rb(&engine).unwrap(),
+            _ => XlaVariantWorkload::wave(&engine).unwrap(),
+        };
+        println!("=== {kind}: {} block-size variants ===", w.num_variants());
+        for i in 0..w.num_variants() {
+            let m = w.variant_meta(i);
+            println!(
+                "  [{i}] {}  block {:>3}×{:<3}  VMEM ≈ {:>5} KiB",
+                m.name,
+                m.bm,
+                m.bn,
+                m.vmem_bytes / 1024
+            );
+        }
+
+        // Tune the variant index with CSA, measuring real PJRT execution
+        // latency (the paper's runtime-cost loop, one layer down).
+        let (lo, hi) = w.bounds();
+        let mut at = Autotuning::with_seed(lo[0], hi[0], 1, 1, 3, 6, 2024);
+        let mut variant = [0i32; 1];
+        at.entire_exec_runtime(&mut variant, |p| {
+            let _ = w.run_iteration(p);
+        });
+        let meta = w.variant_meta(variant[0].max(0) as usize).clone();
+        println!(
+            "\n  CSA selected {} (block {}×{}) after {} evaluations",
+            meta.name,
+            meta.bm,
+            meta.bn,
+            at.evaluations()
+        );
+        for s in at.history().iter().take(8) {
+            let m = w.variant_meta((s.point[0] as usize).min(w.num_variants() - 1));
+            println!(
+                "    tested {:<22} → {}",
+                format!("{}×{}", m.bm, m.bn),
+                fmt_time(s.cost)
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,109 @@
+"""AOT pipeline: lower the L2 models (with their L1 Pallas kernels) to HLO
+text artifacts the Rust runtime loads via PJRT.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+
+* ``rb_sweep_bm{bm}_bn{bn}.hlo.txt``  - one per stencil variant (n = 256,
+  float64): ``(padded) -> (padded', residual)``;
+* ``wave_bm{bm}_bn{bn}.hlo.txt``      - one per wave variant (n = 128,
+  float32): ``(curr_padded, prev, vfact) -> (curr', prev', energy)``;
+* ``manifest.txt`` - one line per artifact:
+  ``kind name file n bm bn vmem_bytes``.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from ``python/``).
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import stencil, wave  # noqa: E402
+
+# Problem sizes baked into the artifacts (XLA executables are static-shape).
+RB_N = 256
+WAVE_N = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_rb(bm: int, bn: int) -> str:
+    spec = jax.ShapeDtypeStruct((RB_N + 2, RB_N + 2), jnp.float64)
+
+    def fn(padded):
+        return model.rb_sweep(padded, bm, bn)
+
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_wave(bm: int, bn: int) -> str:
+    cp = jax.ShapeDtypeStruct((WAVE_N + 4, WAVE_N + 4), jnp.float32)
+    inner = jax.ShapeDtypeStruct((WAVE_N, WAVE_N), jnp.float32)
+
+    def fn(curr_padded, prev, vfact):
+        return model.wave_step(curr_padded, prev, vfact, bm, bn)
+
+    return to_hlo_text(jax.jit(fn).lower(cp, inner, inner))
+
+
+def build(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for bm, bn in stencil.RB_VARIANTS:
+        if RB_N % bm or RB_N % bn:
+            continue
+        name = f"rb_sweep_bm{bm}_bn{bn}"
+        path = f"{name}.hlo.txt"
+        text = lower_rb(bm, bn)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"rb_sweep {name} {path} {RB_N} {bm} {bn} "
+            f"{stencil.vmem_bytes(bm, bn, dtype_bytes=8)}"
+        )
+        print(f"  {name}: {len(text)} chars")
+    for bm, bn in wave.WAVE_VARIANTS:
+        if WAVE_N % bm or WAVE_N % bn:
+            continue
+        name = f"wave_bm{bm}_bn{bn}"
+        path = f"{name}.hlo.txt"
+        text = lower_wave(bm, bn)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"wave {name} {path} {WAVE_N} {bm} {bn} {wave.vmem_bytes(bm, bn)}"
+        )
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = build(args.out_dir)
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

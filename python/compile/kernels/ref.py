@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels - the build-time correctness
+signal. Everything here is deliberately written with whole-array ops (no
+tiling, no pallas) so a disagreement always indicts the kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rb_colour_step_ref(padded, colour: int):
+    """Reference for stencil.rb_colour_step: one colour phase on the padded
+    grid; returns the (n, n) interior."""
+    win = padded
+    centre = win[1:-1, 1:-1]
+    new = 0.25 * (win[:-2, 1:-1] + win[2:, 1:-1] + win[1:-1, :-2] + win[1:-1, 2:])
+    n = centre.shape[0]
+    rows = jnp.arange(1, n + 1)[:, None]
+    cols = jnp.arange(1, n + 1)[None, :]
+    mask = ((rows + cols) % 2) == colour
+    return jnp.where(mask, new, centre)
+
+
+def rb_sweep_ref(padded):
+    """Full red-black sweep (colour 0 then colour 1), matching the Rust
+    substrate's ordering; returns (new_padded, residual)."""
+    before = padded[1:-1, 1:-1]
+    interior = rb_colour_step_ref(padded, 0)
+    padded = padded.at[1:-1, 1:-1].set(interior)
+    interior = rb_colour_step_ref(padded, 1)
+    padded = padded.at[1:-1, 1:-1].set(interior)
+    diff = jnp.sum(jnp.abs(padded[1:-1, 1:-1] - before))
+    return padded, diff
+
+
+def rb_sweep_numpy(padded_np: np.ndarray):
+    """Loop-level numpy oracle (matches rust/src/workloads/rb_gauss_seidel.rs
+    cell by cell): in-place Gauss-Seidel within the sweep."""
+    g = padded_np.astype(np.float64).copy()
+    side = g.shape[0]
+    n = side - 2
+    diff = 0.0
+    for colour in (0, 1):
+        for i in range(1, n + 1):
+            j0 = 1 + ((i + 1 + colour) % 2)
+            for j in range(j0, n + 1, 2):
+                old = g[i, j]
+                new = 0.25 * (g[i, j - 1] + g[i, j + 1] + g[i - 1, j] + g[i + 1, j])
+                g[i, j] = new
+                diff += abs(new - old)
+    return g, diff
+
+
+def wave_step_ref(curr_padded, prev, vfact):
+    """Reference for wave.wave_step_tiles (4th-order Laplacian leapfrog)."""
+    w0, w1, w2 = -5.0 / 2.0, 4.0 / 3.0, -1.0 / 12.0
+    win = curr_padded
+    c = win[2:-2, 2:-2]
+    lap = (
+        2.0 * w0 * c
+        + w1 * (win[1:-3, 2:-2] + win[3:-1, 2:-2] + win[2:-2, 1:-3] + win[2:-2, 3:-1])
+        + w2 * (win[:-4, 2:-2] + win[4:, 2:-2] + win[2:-2, :-4] + win[2:-2, 4:])
+    )
+    return 2.0 * c - prev + vfact * lap

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: tiled red-black Gauss-Seidel colour sweep.
+
+The paper's SS3 example parallelises the red-black sweep with
+``schedule(dynamic, chunk)`` on a CPU. The TPU-shaped analogue of that
+granularity knob (DESIGN.md SSHardware-Adaptation) is the Pallas ``BlockSpec``
+tile ``(bm, bn)``: it fixes the HBM->VMEM window each grid step stages, just
+as ``chunk`` fixes the iteration window each OpenMP thread claims. The
+auto-tuner picks among AOT-compiled ``(bm, bn)`` variants at runtime.
+
+Kernel contract (one colour phase of the sweep):
+
+    out[i, j] = 0.25 * (p[i-1,j] + p[i+1,j] + p[i,j-1] + p[i,j+1])
+                                        if (i + j) % 2 == colour
+    out[i, j] = p[i, j]                 otherwise
+
+with ``p`` the padded ``(n+2, n+2)`` grid (fixed Dirichlet ring) and ``out``
+the ``(n, n)`` interior, indices 1-based on the padded grid to match the
+Rust substrate's colouring exactly.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes byte-identically.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-size variants compiled by aot.py. Every (bm, bn) must divide the
+# interior size n. VMEM working set per grid step is
+# (bm+2)*(bn+2 [input window]) + bm*bn [output] floats.
+RB_VARIANTS = [
+    (8, 8),
+    (16, 16),
+    (32, 32),
+    (64, 64),
+    (128, 128),
+    (32, 128),
+    (128, 32),
+    (256, 256),
+]
+
+
+def _rb_colour_kernel(p_ref, o_ref, *, colour: int, bm: int, bn: int):
+    """One (bm, bn) output tile of the colour-sweep.
+
+    ``p_ref`` holds the full padded grid (the interpret-mode stand-in for a
+    VMEM-staged halo window); ``o_ref`` is this program's output tile.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    # Stage the (bm+2, bn+2) halo window for this tile.
+    win = pl.load(p_ref, (pl.dslice(i * bm, bm + 2), pl.dslice(j * bn, bn + 2)))
+    centre = win[1:-1, 1:-1]
+    new = 0.25 * (win[:-2, 1:-1] + win[2:, 1:-1] + win[1:-1, :-2] + win[1:-1, 2:])
+    # Global (padded-grid) coordinates of the tile's cells: rows i*bm+1 ...
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm + 1
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn + 1
+    mask = ((rows + cols) % 2) == colour
+    o_ref[...] = jnp.where(mask, new, centre)
+
+
+def rb_colour_step(padded, colour: int, bm: int, bn: int):
+    """Apply one colour phase; returns the updated (n, n) interior.
+
+    ``padded``: (n+2, n+2) float32, n divisible by bm and bn.
+    """
+    n = padded.shape[0] - 2
+    assert padded.shape == (n + 2, n + 2), "padded grid must be square"
+    assert n % bm == 0 and n % bn == 0, f"{bm}x{bn} must divide {n}"
+    grid = (n // bm, n // bn)
+    return pl.pallas_call(
+        partial(_rb_colour_kernel, colour=colour, bm=bm, bn=bn),
+        out_shape=jax.ShapeDtypeStruct((n, n), padded.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec(padded.shape, lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(padded)
+
+
+def vmem_bytes(bm: int, bn: int, halo: int = 1, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (input window + output
+    tile), used for the SSPerf roofline notes in DESIGN.md/EXPERIMENTS.md."""
+    h2 = 2 * halo
+    return dtype_bytes * ((bm + h2) * (bn + h2) + bm * bn)

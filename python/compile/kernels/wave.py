@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: tiled 2-D acoustic leapfrog update (the FDM hot-spot).
+
+A 2-D slice of the 3-D FDM propagator the paper's validation studies tune
+(refs [10, 11]): 4th-order Laplacian in space, 2nd-order leapfrog in time,
+
+    nxt[i,j] = 2 c[i,j] - prv[i,j] + vf[i,j] * lap4(c)[i,j]
+
+where ``c`` arrives padded with a halo of 2 and ``prv``/``vf``/``nxt`` are
+interior-sized. Tiling mirrors stencil.py: the ``(bm, bn)`` output tile
+stages a ``(bm+4, bn+4)`` input window - the knob the auto-tuner turns.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4th-order centred second-derivative coefficients.
+W0 = -5.0 / 2.0
+W1 = 4.0 / 3.0
+W2 = -1.0 / 12.0
+
+# Halo radius.
+RADIUS = 2
+
+# Block-size variants compiled by aot.py (interior n = 128).
+WAVE_VARIANTS = [
+    (8, 8),
+    (16, 16),
+    (32, 32),
+    (64, 64),
+    (128, 128),
+    (16, 64),
+    (64, 16),
+]
+
+
+def _wave_kernel(c_ref, p_ref, v_ref, o_ref, *, bm: int, bn: int):
+    """One (bm, bn) tile of the leapfrog update."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    win = pl.load(
+        c_ref,
+        (pl.dslice(i * bm, bm + 2 * RADIUS), pl.dslice(j * bn, bn + 2 * RADIUS)),
+    )
+    c = win[2:-2, 2:-2]
+    lap = (
+        2.0 * W0 * c
+        + W1 * (win[1:-3, 2:-2] + win[3:-1, 2:-2] + win[2:-2, 1:-3] + win[2:-2, 3:-1])
+        + W2 * (win[:-4, 2:-2] + win[4:, 2:-2] + win[2:-2, :-4] + win[2:-2, 4:])
+    )
+    prv = p_ref[...]
+    vf = v_ref[...]
+    o_ref[...] = 2.0 * c - prv + vf * lap
+
+
+def wave_step_tiles(curr_padded, prev, vfact, bm: int, bn: int):
+    """One leapfrog step; returns the (n, n) next interior field.
+
+    ``curr_padded``: (n+4, n+4); ``prev``/``vfact``: (n, n).
+    """
+    n = curr_padded.shape[0] - 2 * RADIUS
+    assert prev.shape == (n, n) and vfact.shape == (n, n)
+    assert n % bm == 0 and n % bn == 0, f"{bm}x{bn} must divide {n}"
+    grid = (n // bm, n // bn)
+    return pl.pallas_call(
+        partial(_wave_kernel, bm=bm, bn=bn),
+        out_shape=jax.ShapeDtypeStruct((n, n), curr_padded.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(curr_padded.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(curr_padded, prev, vfact)
+
+
+def vmem_bytes(bm: int, bn: int, dtype_bytes: int = 4) -> int:
+    """VMEM working-set estimate: halo window + prev + vfact + out tiles."""
+    h2 = 2 * RADIUS
+    return dtype_bytes * ((bm + h2) * (bn + h2) + 3 * bm * bn)

@@ -1,0 +1,73 @@
+"""L2: the JAX compute graphs the Rust runtime executes, calling the L1
+Pallas kernels.
+
+Two models, mirroring the Rust substrate workloads so the runtime-tuning
+experiments can cross-check numerics between layers:
+
+* ``rb_sweep`` - one full red-black Gauss-Seidel sweep (float64, matching
+  ``rust/src/workloads/rb_gauss_seidel.rs``): padded grid in, padded grid +
+  residual out. One executable per (bm, bn) kernel variant.
+* ``wave_step`` - one 2-D leapfrog FDM step (float32): state in, state +
+  field energy out. One executable per variant.
+
+The functions are shape-specialised at lowering time (aot.py): XLA/PJRT
+executables are static-shape, so each (n, bm, bn) combination is its own
+artifact - exactly the "pre-compiled variant" model the auto-tuner selects
+among at runtime.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.stencil import rb_colour_step
+from .kernels.wave import wave_step_tiles
+
+
+def rb_sweep(padded, bm: int, bn: int):
+    """One full red-black sweep: colour 0 then colour 1.
+
+    Returns ``(new_padded, residual)`` with ``residual = sum |delta|`` over
+    the interior - the same quantity the Rust substrate reports.
+    """
+    before = padded[1:-1, 1:-1]
+    interior = rb_colour_step(padded, 0, bm, bn)
+    padded = padded.at[1:-1, 1:-1].set(interior)
+    interior = rb_colour_step(padded, 1, bm, bn)
+    padded = padded.at[1:-1, 1:-1].set(interior)
+    diff = jnp.sum(jnp.abs(padded[1:-1, 1:-1] - before))
+    return padded, diff
+
+
+def wave_step(curr_padded, prev, vfact, bm: int, bn: int):
+    """One leapfrog step of the 2-D acoustic model.
+
+    State convention (halo 2, Dirichlet ring kept at zero):
+      * ``curr_padded``: (n+4, n+4) current field;
+      * ``prev``: (n, n) previous interior;
+      * ``vfact``: (n, n) squared Courant factor.
+
+    Returns ``(next_padded, next_prev, energy)`` so the caller feeds the
+    outputs straight back in - the Rust runtime's time-stepping loop.
+    """
+    nxt = wave_step_tiles(curr_padded, prev, vfact, bm, bn)
+    next_prev = curr_padded[2:-2, 2:-2]
+    next_padded = curr_padded.at[2:-2, 2:-2].set(nxt)
+    energy = jnp.sum(jnp.square(nxt))
+    return next_padded, next_prev, energy
+
+
+def initial_rb_grid(n: int):
+    """The same asymmetric Laplace boundary problem the Rust substrate
+    builds (rb_gauss_seidel.rs init_grid), padded (n+2, n+2) float64."""
+    side = n + 2
+    g = jnp.zeros((side, side), dtype=jnp.float64)
+    g = g.at[0, :].set(100.0)
+    frac = jnp.arange(side, dtype=jnp.float64) / (side - 1)
+    g = g.at[:, 0].set(100.0 * (1.0 - frac))
+    g = g.at[:, side - 1].set(50.0 * (1.0 - frac))
+    # Corners follow the row-0 / row-last rule like the Rust code (top edge
+    # written first, then side ramps overwrite their columns).
+    g = g.at[side - 1, :].set(0.0)
+    g = g.at[side - 1, 0].set(0.0)
+    g = g.at[0, 0].set(100.0)
+    g = g.at[0, side - 1].set(50.0)
+    return g

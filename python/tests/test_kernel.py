@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE build-time
+signal) plus hypothesis sweeps over shapes, block sizes and data."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref, stencil, wave
+
+RNG = np.random.default_rng(1234)
+
+
+def random_padded(n: int, dtype=jnp.float64, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=(n + 2, n + 2)), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Red-black stencil kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 16), (32, 32), (16, 32), (32, 16)])
+@pytest.mark.parametrize("colour", [0, 1])
+def test_rb_colour_matches_ref(bm, bn, colour):
+    n = 32
+    p = random_padded(n, seed=42)
+    out_kernel = stencil.rb_colour_step(p, colour, bm, bn)
+    out_ref = ref.rb_colour_step_ref(p, colour)
+    np.testing.assert_allclose(out_kernel, out_ref, rtol=0, atol=0)
+
+
+def test_rb_colour_preserves_other_colour():
+    n = 16
+    p = random_padded(n, seed=7)
+    out = stencil.rb_colour_step(p, 0, 8, 8)
+    centre = np.asarray(p)[1:-1, 1:-1]
+    rows = np.arange(1, n + 1)[:, None]
+    cols = np.arange(1, n + 1)[None, :]
+    other = ((rows + cols) % 2) == 1
+    np.testing.assert_array_equal(np.asarray(out)[other], centre[other])
+
+
+def test_rb_full_sweep_matches_numpy_loop_oracle():
+    """The tiled two-phase sweep equals the in-place loop-level Gauss-Seidel
+    (proving the colour decomposition preserves GS semantics)."""
+    from compile import model
+
+    n = 16
+    p = random_padded(n, seed=3)
+    new_padded, diff = model.rb_sweep(p, 8, 8)
+    g_np, diff_np = ref.rb_sweep_numpy(np.asarray(p))
+    np.testing.assert_allclose(np.asarray(new_padded), g_np, rtol=1e-12, atol=1e-12)
+    assert abs(float(diff) - diff_np) < 1e-9 * max(diff_np, 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=4),
+    bshape=st.sampled_from([4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    colour=st.sampled_from([0, 1]),
+)
+def test_rb_colour_hypothesis_shapes(n_blocks, bshape, seed, colour):
+    """Property: kernel == oracle for every (grid, block, data, colour)."""
+    n = n_blocks * bshape
+    p = random_padded(n, seed=seed)
+    out_kernel = stencil.rb_colour_step(p, colour, bshape, bshape)
+    out_ref = ref.rb_colour_step_ref(p, colour)
+    np.testing.assert_allclose(out_kernel, out_ref, rtol=0, atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_rb_colour_f32_dtype(seed):
+    n = 16
+    p = random_padded(n, dtype=jnp.float32, seed=seed)
+    out_kernel = stencil.rb_colour_step(p, 0, 8, 8)
+    out_ref = ref.rb_colour_step_ref(p, 0)
+    assert out_kernel.dtype == jnp.float32
+    np.testing.assert_allclose(out_kernel, out_ref, rtol=1e-6, atol=1e-6)
+
+
+def test_rb_rejects_nondividing_blocks():
+    p = random_padded(30)
+    with pytest.raises(AssertionError):
+        stencil.rb_colour_step(p, 0, 8, 8)
+
+
+def test_rb_variants_all_divide_default_n():
+    for bm, bn in stencil.RB_VARIANTS:
+        assert 256 % bm == 0 and 256 % bn == 0
+
+
+def test_vmem_estimate_monotone():
+    sizes = [stencil.vmem_bytes(b, b) for b in (8, 16, 32, 64)]
+    assert sizes == sorted(sizes)
+    assert stencil.vmem_bytes(8, 8) == 4 * (10 * 10 + 64)
+
+
+# ---------------------------------------------------------------------------
+# Wave kernel
+# ---------------------------------------------------------------------------
+
+
+def wave_inputs(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    curr = jnp.asarray(
+        rng.uniform(-1.0, 1.0, size=(n + 4, n + 4)), dtype=jnp.float32
+    )
+    prev = jnp.asarray(rng.uniform(-1.0, 1.0, size=(n, n)), dtype=jnp.float32)
+    vf = jnp.asarray(rng.uniform(0.0, 0.1, size=(n, n)), dtype=jnp.float32)
+    return curr, prev, vf
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 16), (8, 32), (32, 8), (32, 32)])
+def test_wave_matches_ref(bm, bn):
+    n = 32
+    curr, prev, vf = wave_inputs(n, seed=5)
+    out_kernel = wave.wave_step_tiles(curr, prev, vf, bm, bn)
+    out_ref = ref.wave_step_ref(curr, prev, vf)
+    np.testing.assert_allclose(out_kernel, out_ref, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=3),
+    bshape=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_wave_hypothesis_shapes(n_blocks, bshape, seed):
+    n = n_blocks * bshape
+    curr, prev, vf = wave_inputs(n, seed=seed)
+    out_kernel = wave.wave_step_tiles(curr, prev, vf, bshape, bshape)
+    out_ref = ref.wave_step_ref(curr, prev, vf)
+    np.testing.assert_allclose(out_kernel, out_ref, rtol=1e-6, atol=1e-6)
+
+
+def test_wave_zero_field_stays_zero():
+    n = 16
+    curr = jnp.zeros((n + 4, n + 4), dtype=jnp.float32)
+    prev = jnp.zeros((n, n), dtype=jnp.float32)
+    vf = jnp.full((n, n), 0.05, dtype=jnp.float32)
+    out = wave.wave_step_tiles(curr, prev, vf, 8, 8)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_wave_variants_divide_default_n():
+    for bm, bn in wave.WAVE_VARIANTS:
+        assert 128 % bm == 0 and 128 % bn == 0

@@ -1,0 +1,91 @@
+"""L2 correctness: model-level semantics (sweep convergence, leapfrog
+stability, state plumbing) and lowering shape checks."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_rb_sweep_reduces_residual():
+    padded = model.initial_rb_grid(32)
+    residuals = []
+    for _ in range(20):
+        padded, diff = model.rb_sweep(padded, 16, 16)
+        residuals.append(float(diff))
+    assert residuals[-1] < residuals[0] * 0.9
+    assert all(np.isfinite(residuals))
+
+
+def test_rb_sweep_is_variant_independent():
+    """The tuned parameter must not change the numerics - the invariant
+    behind the whole paper, at the XLA layer."""
+    p1 = model.initial_rb_grid(64)
+    p2 = model.initial_rb_grid(64)
+    for _ in range(3):
+        p1, d1 = model.rb_sweep(p1, 8, 8)
+        p2, d2 = model.rb_sweep(p2, 32, 64)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+        assert float(d1) == float(d2)
+
+
+def test_rb_sweep_boundary_untouched():
+    padded = model.initial_rb_grid(16)
+    boundary_before = np.asarray(padded).copy()
+    padded, _ = model.rb_sweep(padded, 8, 8)
+    after = np.asarray(padded)
+    np.testing.assert_array_equal(after[0, :], boundary_before[0, :])
+    np.testing.assert_array_equal(after[-1, :], boundary_before[-1, :])
+    np.testing.assert_array_equal(after[:, 0], boundary_before[:, 0])
+    np.testing.assert_array_equal(after[:, -1], boundary_before[:, -1])
+
+
+def test_initial_grid_matches_rust_structure():
+    g = np.asarray(model.initial_rb_grid(8))
+    side = 10
+    assert g.shape == (side, side)
+    assert g[0, 1] == 100.0  # top edge hot
+    assert g[side - 1, 1] == 0.0  # bottom cold
+    assert abs(g[0, side - 1] - 50.0) < 1e-12  # right ramp at top
+    assert np.all(g[1:-1, 1:-1] == 0.0)  # interior zero
+
+
+def test_wave_step_state_plumbing():
+    n = 16
+    rng = np.random.default_rng(11)
+    curr = jnp.asarray(rng.uniform(-1, 1, (n + 4, n + 4)), dtype=jnp.float32)
+    prev = jnp.asarray(rng.uniform(-1, 1, (n, n)), dtype=jnp.float32)
+    vf = jnp.full((n, n), 0.04, dtype=jnp.float32)
+    nxt_padded, nxt_prev, energy = model.wave_step(curr, prev, vf, 8, 8)
+    # prev' is the old interior.
+    np.testing.assert_array_equal(
+        np.asarray(nxt_prev), np.asarray(curr)[2:-2, 2:-2]
+    )
+    # interior of next_padded equals the reference update.
+    expected = ref.wave_step_ref(curr, prev, vf)
+    np.testing.assert_allclose(
+        np.asarray(nxt_padded)[2:-2, 2:-2], expected, rtol=1e-6, atol=1e-6
+    )
+    assert float(energy) >= 0.0
+
+
+def test_wave_energy_bounded_over_steps():
+    """Leapfrog with small Courant factor on a zero-boundary box: energy of
+    a random initial field must stay bounded over many steps."""
+    n = 32
+    rng = np.random.default_rng(5)
+    interior = rng.uniform(-1, 1, (n, n)).astype(np.float32) * 0.01
+    curr = jnp.zeros((n + 4, n + 4), dtype=jnp.float32).at[2:-2, 2:-2].set(interior)
+    prev = jnp.asarray(interior)
+    vf = jnp.full((n, n), 0.05, dtype=jnp.float32)
+    peak = 0.0
+    for _ in range(100):
+        curr, prev, e = model.wave_step(curr, prev, vf, 16, 16)
+        peak = max(peak, float(e))
+        assert np.isfinite(float(e))
+    assert float(e) < peak * 10.0, "leapfrog unstable"

@@ -1,0 +1,101 @@
+//! `cargo bench --bench perf` — the §Perf microbenchmarks (EXPERIMENTS.md):
+//!
+//! 1. `parallel_for` dispatch latency (empty body) — the floor below which
+//!    chunk effects cannot be measured;
+//! 2. tuner `single_exec_runtime` overhead vs calling the target directly —
+//!    the paper's "minimal execution overhead" claim, quantified;
+//! 3. per-schedule scheduling overhead at fine granularity (counter
+//!    contention) on a real loop body.
+
+use patsma::benchkit::{bench, fmt_time, render_table};
+use patsma::sched::{Schedule, ThreadPool};
+use patsma::tuner::Autotuning;
+use patsma::workloads::rb_gauss_seidel::RbGaussSeidel;
+use std::hint::black_box;
+
+fn main() {
+    let quick = std::env::var("PATSMA_QUICK").is_ok();
+    let samples = if quick { 200 } else { 2000 };
+    let pool = ThreadPool::global();
+    println!("# §Perf microbenchmarks ({} threads)\n", pool.threads());
+
+    // --- 1. dispatch latency ---
+    let mut rows = Vec::new();
+    for t in [1usize, 2, pool.threads().min(8), pool.threads()] {
+        let p = ThreadPool::new(t);
+        rows.push(bench(&format!("empty region, {t} threads"), 50, samples, || {
+            p.parallel_for_blocks(0, t, Schedule::Static, |r| {
+                black_box(r.len());
+            });
+        }));
+    }
+    println!(
+        "{}",
+        render_table("1. fork/join dispatch latency (empty body)", &rows, None)
+    );
+
+    // --- 2. tuner overhead on the hot path ---
+    let n = 256;
+    let mut w_direct = RbGaussSeidel::new(n, pool);
+    let direct = bench("direct sweep(32)", 10, if quick { 50 } else { 300 }, || {
+        let _ = w_direct.sweep(32);
+    });
+    let mut w_tuned = RbGaussSeidel::new(n, pool);
+    // A tuner that converged long ago: measures the pure bypass overhead.
+    let mut at = Autotuning::with_seed(32.0, 32.0, 0, 1, 1, 1, 1);
+    let mut chunk = [32i32; 1];
+    while !at.is_finished() {
+        at.single_exec_runtime(&mut chunk, |p| w_tuned.sweep(p[0] as usize));
+    }
+    let bypass = bench(
+        "single_exec_runtime after convergence",
+        10,
+        if quick { 50 } else { 300 },
+        || {
+            let _ = at.single_exec_runtime(&mut chunk, |p| w_tuned.sweep(p[0] as usize));
+        },
+    );
+    let overhead = (bypass.median() - direct.median()).max(0.0);
+    println!(
+        "{}",
+        render_table(
+            "2. tuner bypass overhead (RB-GS n=256, chunk=32)",
+            &[direct.clone(), bypass.clone()],
+            Some(0)
+        )
+    );
+    println!(
+        "bypass overhead ≈ {} per iteration ({:.3}% of the sweep)\n",
+        fmt_time(overhead),
+        100.0 * overhead / direct.median()
+    );
+
+    // --- 3. scheduling overhead vs granularity on a real body ---
+    let mut rows = Vec::new();
+    let work = 4096usize;
+    for (label, sched) in [
+        ("dynamic,1", Schedule::Dynamic(1)),
+        ("dynamic,8", Schedule::Dynamic(8)),
+        ("dynamic,64", Schedule::Dynamic(64)),
+        ("guided,1", Schedule::Guided(1)),
+        ("static", Schedule::Static),
+    ] {
+        rows.push(bench(label, 20, if quick { 100 } else { 500 }, || {
+            pool.parallel_for_blocks(0, work, sched, |r| {
+                let mut acc = 0u64;
+                for i in r {
+                    acc = acc.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9));
+                }
+                black_box(acc);
+            });
+        }));
+    }
+    println!(
+        "{}",
+        render_table(
+            &format!("3. schedule overhead, {work} trivial iterations"),
+            &rows,
+            Some(4)
+        )
+    );
+}

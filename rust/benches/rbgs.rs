@@ -1,0 +1,16 @@
+//! `cargo bench --bench rbgs` — regenerates experiment(s): e5 e6
+//! (see DESIGN.md §4 for the paper artifact each id reproduces).
+//! Set PATSMA_QUICK=1 for the fast CI variant.
+
+fn main() {
+    let quick = std::env::var("PATSMA_QUICK").is_ok();
+    for id in ["e5", "e6", ] {
+        match patsma::coordinator::run(id, quick) {
+            Ok(out) => println!("{out}"),
+            Err(e) => {
+                eprintln!("{id} failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

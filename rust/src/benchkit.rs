@@ -1,0 +1,146 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every `rust/benches/*.rs` target (`cargo bench`, `harness =
+//! false`) and by the experiment coordinator. Protocol per measurement:
+//! warm-up runs, then `samples` timed runs, reported as a [`Measurement`]
+//! with median / mean / CI so run-to-run noise is visible in the tables.
+
+use crate::stats::Summary;
+use std::time::Instant;
+
+/// Result of benchmarking one configuration.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Configuration label (row name in the report).
+    pub label: String,
+    /// Per-sample wall-clock seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    /// Batch statistics over the samples.
+    pub fn summary(&self) -> Summary {
+        Summary::from_samples(&self.samples)
+    }
+
+    /// Median seconds (the headline number; robust to scheduler noise).
+    pub fn median(&self) -> f64 {
+        self.summary().median()
+    }
+}
+
+/// Benchmark a closure: `warmup` unrecorded runs, then `samples` timed runs.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, samples: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        label: label.to_string(),
+        samples: out,
+    }
+}
+
+/// Pretty seconds: ns/µs/ms/s with 3 significant digits.
+pub fn fmt_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        return format!("{secs}");
+    }
+    let abs = secs.abs();
+    if abs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Render a markdown table: header + one row per measurement, with speedup
+/// relative to `baseline_idx` (if given).
+pub fn render_table(title: &str, rows: &[Measurement], baseline_idx: Option<usize>) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("\n## {title}\n\n"));
+    s.push_str("| config | median | mean ± 95% CI | min | speedup |\n");
+    s.push_str("|---|---|---|---|---|\n");
+    let base = baseline_idx.map(|i| rows[i].median());
+    for m in rows {
+        let sum = m.summary();
+        let speedup = match base {
+            Some(b) if sum.median() > 0.0 => format!("{:.2}×", b / sum.median()),
+            _ => "—".to_string(),
+        };
+        s.push_str(&format!(
+            "| {} | {} | {} ± {} | {} | {} |\n",
+            m.label,
+            fmt_time(sum.median()),
+            fmt_time(sum.mean()),
+            fmt_time(sum.ci95_half_width()),
+            fmt_time(sum.min()),
+            speedup
+        ));
+    }
+    s
+}
+
+/// Render a two-column CSV (for plotting cost curves).
+pub fn render_csv(header: (&str, &str), points: &[(f64, f64)]) -> String {
+    let mut s = format!("{},{}\n", header.0, header.1);
+    for (x, y) in points {
+        s.push_str(&format!("{x},{y}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_requested_samples() {
+        let mut count = 0;
+        let m = bench("x", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.median() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_includes_speedup_column() {
+        let rows = vec![
+            Measurement {
+                label: "base".into(),
+                samples: vec![2.0, 2.0],
+            },
+            Measurement {
+                label: "fast".into(),
+                samples: vec![1.0, 1.0],
+            },
+        ];
+        let t = render_table("T", &rows, Some(0));
+        assert!(t.contains("2.00×"), "{t}");
+        assert!(t.contains("| base |"));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let c = render_csv(("iter", "cost"), &[(1.0, 0.5), (2.0, 0.25)]);
+        assert_eq!(c.lines().count(), 3);
+        assert!(c.starts_with("iter,cost\n"));
+    }
+}

@@ -1,0 +1,394 @@
+//! Hand-rolled CLI (no `clap` offline).
+//!
+//! ```text
+//! patsma list                      # experiments and workloads
+//! patsma experiment <id|all> [--quick]
+//! patsma tune <workload> [--optimizer csa|nm|sa|random|pso|grid]
+//!                        [--num-opt N] [--max-iter N] [--ignore N]
+//!                        [--seed N] [--mode single|entire]
+//! patsma verify [<workload>]       # parallel-vs-oracle checks
+//! patsma demo                      # 30-second guided tour
+//! ```
+
+use crate::coordinator;
+use crate::optimizer::{
+    Csa, CsaConfig, GridSearch, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm,
+    PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
+};
+use crate::tuner::Autotuning;
+use crate::workloads::{
+    conv2d::Conv2d, fdm3d::Fdm3d, matmul::MatMul, rb_gauss_seidel::RbGaussSeidel, rtm::Rtm,
+    spmv::Spmv, Workload,
+};
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// List experiments and workloads.
+    List,
+    /// Run one experiment (or all).
+    Experiment { id: String, quick: bool },
+    /// Tune a workload's parameters.
+    Tune {
+        workload: String,
+        optimizer: String,
+        num_opt: usize,
+        max_iter: usize,
+        ignore: u32,
+        seed: u64,
+        single_mode: bool,
+    },
+    /// Verify workloads against their sequential oracles.
+    Verify { workload: Option<String> },
+    /// Guided demo.
+    Demo,
+    /// Help text.
+    Help,
+}
+
+/// Parse `args` (without argv[0]).
+pub fn parse(args: &[String]) -> Result<Command> {
+    let mut it = args.iter();
+    let cmd = match it.next().map(String::as_str) {
+        None | Some("help") | Some("--help") | Some("-h") => return Ok(Command::Help),
+        Some(c) => c,
+    };
+    let rest: Vec<&String> = it.collect();
+    let flag_val = |name: &str| -> Option<&str> {
+        rest.iter()
+            .position(|a| a.as_str() == name)
+            .and_then(|i| rest.get(i + 1).map(|s| s.as_str()))
+    };
+    let has_flag = |name: &str| rest.iter().any(|a| a.as_str() == name);
+    match cmd {
+        "list" => Ok(Command::List),
+        "experiment" => {
+            let id = rest
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "all".to_string());
+            Ok(Command::Experiment {
+                id,
+                quick: has_flag("--quick"),
+            })
+        }
+        "tune" => {
+            let workload = rest
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .map(|s| s.to_string())
+                .context("tune: missing workload (try `patsma list`)")?;
+            Ok(Command::Tune {
+                workload,
+                optimizer: flag_val("--optimizer").unwrap_or("csa").to_string(),
+                num_opt: flag_val("--num-opt").unwrap_or("4").parse()?,
+                max_iter: flag_val("--max-iter").unwrap_or("8").parse()?,
+                ignore: flag_val("--ignore").unwrap_or("1").parse()?,
+                seed: flag_val("--seed").unwrap_or("42").parse()?,
+                single_mode: flag_val("--mode").unwrap_or("entire") == "single",
+            })
+        }
+        "verify" => Ok(Command::Verify {
+            workload: rest
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .map(|s| s.to_string()),
+        }),
+        "demo" => Ok(Command::Demo),
+        other => bail!("unknown command {other:?}; try `patsma help`"),
+    }
+}
+
+/// Known workload names.
+pub const WORKLOADS: &[&str] = &[
+    "rb-gauss-seidel",
+    "fdm3d",
+    "rtm",
+    "matmul",
+    "conv2d",
+    "spmv",
+    "xla-rb",
+    "xla-wave",
+];
+
+fn make_workload(name: &str) -> Result<Box<dyn Workload>> {
+    Ok(match name {
+        "rb-gauss-seidel" => Box::new(RbGaussSeidel::with_size(384)),
+        "fdm3d" => Box::new(Fdm3d::with_size(56, 56, 64)),
+        "rtm" => Box::new(Rtm::with_size(32, 32, 40, 40)),
+        "matmul" => Box::new(MatMul::with_size(256)),
+        "conv2d" => Box::new(Conv2d::with_size(512, 512, 7)),
+        "spmv" => Box::new(Spmv::with_size(200_000, 50_000, 12)),
+        other => bail!("unknown workload {other:?}; known: {WORKLOADS:?}"),
+    })
+}
+
+fn make_optimizer(kind: &str, dim: usize, num_opt: usize, max_iter: usize, seed: u64)
+    -> Result<Box<dyn NumericalOptimizer>> {
+    Ok(match kind {
+        "csa" => Box::new(Csa::new(CsaConfig::new(dim, num_opt, max_iter).with_seed(seed))),
+        "nm" => Box::new(NelderMead::new(
+            NelderMeadConfig::new(dim, 1e-9, num_opt * max_iter).with_seed(seed),
+        )),
+        "sa" => Box::new(SimulatedAnnealing::new(
+            SaConfig::new(dim, num_opt * max_iter).with_seed(seed),
+        )),
+        "random" => Box::new(RandomSearch::new(dim, num_opt * max_iter, seed)),
+        "pso" => Box::new(ParticleSwarm::new(
+            PsoConfig::new(dim, num_opt, max_iter).with_seed(seed),
+        )),
+        "grid" => Box::new(GridSearch::new(dim, (num_opt * max_iter).max(2))),
+        other => bail!("unknown optimizer {other:?} (csa|nm|sa|random|pso|grid)"),
+    })
+}
+
+/// Execute a parsed command; returns the text to print.
+pub fn execute(cmd: Command) -> Result<String> {
+    match cmd {
+        Command::Help => Ok(HELP.to_string()),
+        Command::List => {
+            let mut s = String::from("experiments:\n");
+            for d in coordinator::registry() {
+                s.push_str(&format!("  {:4} {}\n", d.id, d.paper_ref));
+            }
+            s.push_str("\nworkloads:\n");
+            for w in WORKLOADS {
+                s.push_str(&format!("  {w}\n"));
+            }
+            Ok(s)
+        }
+        Command::Experiment { id, quick } => coordinator::run(&id, quick),
+        Command::Verify { workload } => {
+            let names: Vec<&str> = match &workload {
+                Some(w) => vec![w.as_str()],
+                None => vec!["rb-gauss-seidel", "fdm3d", "rtm", "matmul", "conv2d", "spmv"],
+            };
+            let mut s = String::new();
+            for name in names {
+                let mut w = make_workload(name)?;
+                match w.verify() {
+                    Ok(()) => s.push_str(&format!("{name}: OK\n")),
+                    Err(e) => {
+                        s.push_str(&format!("{name}: FAILED — {e}\n"));
+                        bail!("{s}");
+                    }
+                }
+            }
+            Ok(s)
+        }
+        Command::Tune {
+            workload,
+            optimizer,
+            num_opt,
+            max_iter,
+            ignore,
+            seed,
+            single_mode,
+        } => {
+            if workload.starts_with("xla-") {
+                return tune_xla(&workload, num_opt, max_iter, ignore, seed);
+            }
+            let mut w = make_workload(&workload)?;
+            let (lo, hi) = w.bounds();
+            let dim = w.dim();
+            let opt = make_optimizer(&optimizer, dim, num_opt, max_iter, seed)?;
+            let mut at = Autotuning::with_optimizer(lo, hi, ignore, opt);
+            let mut point = vec![1i32; dim];
+            let t0 = std::time::Instant::now();
+            if single_mode {
+                while !at.is_finished() {
+                    at.single_exec_runtime(&mut point, |p| w.run_iteration(p));
+                }
+            } else {
+                at.entire_exec_runtime(&mut point, |p| {
+                    let _ = w.run_iteration(p);
+                });
+            }
+            let elapsed = t0.elapsed().as_secs_f64();
+            let mut s = format!(
+                "workload={} optimizer={} mode={}\n tuned point = {:?}\n evaluations = {} \
+                 target iterations = {}\n tuning wall-clock = {}\n",
+                workload,
+                at.optimizer_name(),
+                if single_mode { "single" } else { "entire" },
+                point,
+                at.evaluations(),
+                at.target_iterations(),
+                crate::benchkit::fmt_time(elapsed),
+            );
+            if let Some((bp, bc)) = at.best() {
+                s.push_str(&format!(
+                    " best measured: {:?} at {}\n",
+                    bp,
+                    crate::benchkit::fmt_time(bc)
+                ));
+            }
+            Ok(s)
+        }
+        Command::Demo => {
+            let mut s = String::from("PATSMA demo — tuning RB Gauss–Seidel's chunk:\n");
+            let mut w = RbGaussSeidel::with_size(256);
+            let mut at = Autotuning::with_seed(1.0, 256.0, 0, 1, 4, 6, 7);
+            let mut chunk = [1i32; 1];
+            at.entire_exec_runtime(&mut chunk, |p| {
+                let _ = w.sweep(p[0].max(1) as usize);
+            });
+            s.push_str(&format!(
+                " tuned chunk = {} after {} evaluations\n",
+                chunk[0],
+                at.evaluations()
+            ));
+            for smp in at.history().iter().take(8) {
+                s.push_str(&format!(
+                    "   tested chunk {:>4} → {}\n",
+                    smp.point[0] as i64,
+                    crate::benchkit::fmt_time(smp.cost)
+                ));
+            }
+            s.push_str(" (see `patsma experiment all` for the full reproduction)\n");
+            Ok(s)
+        }
+    }
+}
+
+fn tune_xla(which: &str, num_opt: usize, max_iter: usize, ignore: u32, seed: u64) -> Result<String> {
+    let dir = crate::runtime::default_artifact_dir();
+    let engine = crate::runtime::Engine::load(&dir)?;
+    let mut w = match which {
+        "xla-rb" => crate::runtime::XlaVariantWorkload::rb(&engine)?,
+        "xla-wave" => crate::runtime::XlaVariantWorkload::wave(&engine)?,
+        other => bail!("unknown xla workload {other:?} (xla-rb|xla-wave)"),
+    };
+    let (lo, hi) = {
+        let b = w.bounds();
+        (b.0, b.1)
+    };
+    let mut at = Autotuning::with_optimizer(
+        lo,
+        hi,
+        ignore,
+        Box::new(Csa::new(CsaConfig::new(1, num_opt, max_iter).with_seed(seed))),
+    );
+    let mut variant = [0i32; 1];
+    at.entire_exec_runtime(&mut variant, |p| {
+        let _ = w.run_iteration(p);
+    });
+    let meta = w.variant_meta(variant[0].max(0) as usize);
+    Ok(format!(
+        "selected variant {} (block {}×{}, VMEM ≈ {} KiB) after {} evaluations\n",
+        meta.name,
+        meta.bm,
+        meta.bn,
+        meta.vmem_bytes / 1024,
+        at.evaluations()
+    ))
+}
+
+const HELP: &str = "\
+PATSMA — Parameter Auto-tuning for Shared Memory Algorithms
+(Rust + JAX + Pallas reproduction of Fernandes et al., SoftwareX 2024)
+
+USAGE:
+  patsma list                               experiments & workloads
+  patsma experiment <e1..e11|all> [--quick] regenerate a paper table/figure
+  patsma tune <workload> [--optimizer csa|nm|sa|random|pso|grid]
+              [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
+              [--mode single|entire]
+  patsma verify [<workload>]                parallel vs sequential oracle
+  patsma demo                               30-second tour
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_help_variants() {
+        assert_eq!(parse(&v(&[])).unwrap(), Command::Help);
+        assert_eq!(parse(&v(&["--help"])).unwrap(), Command::Help);
+        assert_eq!(parse(&v(&["help"])).unwrap(), Command::Help);
+    }
+
+    #[test]
+    fn parse_experiment_defaults_to_all() {
+        assert_eq!(
+            parse(&v(&["experiment"])).unwrap(),
+            Command::Experiment {
+                id: "all".into(),
+                quick: false
+            }
+        );
+        assert_eq!(
+            parse(&v(&["experiment", "e5", "--quick"])).unwrap(),
+            Command::Experiment {
+                id: "e5".into(),
+                quick: true
+            }
+        );
+    }
+
+    #[test]
+    fn parse_tune_flags() {
+        let c = parse(&v(&[
+            "tune",
+            "spmv",
+            "--optimizer",
+            "nm",
+            "--max-iter",
+            "12",
+            "--ignore",
+            "2",
+            "--mode",
+            "single",
+        ]))
+        .unwrap();
+        match c {
+            Command::Tune {
+                workload,
+                optimizer,
+                max_iter,
+                ignore,
+                single_mode,
+                ..
+            } => {
+                assert_eq!(workload, "spmv");
+                assert_eq!(optimizer, "nm");
+                assert_eq!(max_iter, 12);
+                assert_eq!(ignore, 2);
+                assert!(single_mode);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_command() {
+        assert!(parse(&v(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn tune_requires_workload() {
+        assert!(parse(&v(&["tune"])).is_err());
+    }
+
+    #[test]
+    fn list_and_help_execute() {
+        let s = execute(Command::List).unwrap();
+        assert!(s.contains("e10"));
+        assert!(s.contains("spmv"));
+        let h = execute(Command::Help).unwrap();
+        assert!(h.contains("USAGE"));
+    }
+
+    #[test]
+    fn unknown_workload_and_optimizer_rejected() {
+        assert!(make_workload("nope").is_err());
+        assert!(make_optimizer("nope", 1, 2, 3, 4).is_err());
+    }
+}

@@ -1,0 +1,655 @@
+//! The paper's experiments (DESIGN.md §4, E1–E11).
+//!
+//! Sizes are chosen so `quick` mode finishes in seconds (CI / `cargo test`)
+//! and full mode in tens of seconds with tighter statistics. Every function
+//! returns self-contained markdown; the EXPERIMENTS.md records are captured
+//! from these outputs.
+
+use crate::benchkit::{self, bench, Measurement};
+use crate::optimizer::{
+    Csa, CsaConfig, GridSearch, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm,
+    PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
+};
+use crate::sched::ThreadPool;
+use crate::tuner::Autotuning;
+use crate::workloads::fdm3d::Fdm3d;
+use crate::workloads::rb_gauss_seidel::RbGaussSeidel;
+use crate::workloads::rtm::{Phase, Rtm};
+use crate::workloads::synthetic;
+use crate::workloads::Workload;
+use anyhow::Result;
+
+fn pool() -> &'static ThreadPool {
+    ThreadPool::global()
+}
+
+/// Baseline chunk values every speedup table compares against:
+/// OpenMP's `dynamic` default (1), a static-equal share, and "one claim".
+fn baseline_chunks(n_iters: usize, threads: usize) -> Vec<(String, usize)> {
+    vec![
+        ("dynamic,1 (OpenMP default)".to_string(), 1),
+        (
+            format!("dynamic,{} (n/threads)", (n_iters / threads).max(1)),
+            (n_iters / threads).max(1),
+        ),
+        (format!("dynamic,{n_iters} (single claim)"), n_iters),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// E1 / E2 — the two execution modes of Fig. 1
+// ---------------------------------------------------------------------
+
+/// E1 (Fig. 1a): tuning interleaved with the application loop. The table
+/// compares a plain fixed-chunk run of the whole loop against a run whose
+/// first iterations carry the auto-tuning — the paper's "minimal execution
+/// overhead" claim is the near-1× ratio, and convergence is the bypass.
+pub fn e1_single_iteration_mode(quick: bool) -> Result<String> {
+    let n = if quick { 192 } else { 384 };
+    let app_iters = if quick { 120 } else { 400 };
+    let (num_opt, max_iter) = (4, if quick { 5 } else { 8 });
+
+    let mut out = String::new();
+    let mut rows = Vec::new();
+
+    // Plain application: fixed default chunk for the whole loop.
+    let mut w = RbGaussSeidel::new(n, pool());
+    rows.push(bench("plain loop, chunk=1", 1, if quick { 3 } else { 5 }, || {
+        w.reset_state();
+        for _ in 0..app_iters {
+            let _ = w.sweep(1);
+        }
+    }));
+
+    // Single-Iteration mode: same loop, tuner inside (Alg. 6).
+    let mut w = RbGaussSeidel::new(n, pool());
+    let max_chunk = n as f64;
+    rows.push(bench(
+        "same loop with in-loop tuning (Alg. 6)",
+        1,
+        if quick { 3 } else { 5 },
+        || {
+            w.reset_state();
+            let mut at = Autotuning::with_seed(1.0, max_chunk, 0, 1, num_opt, max_iter, 21);
+            let mut chunk = [1i32; 1];
+            for _ in 0..app_iters {
+                at.single_exec_runtime(&mut chunk, |p| w.sweep(p[0].max(1) as usize));
+            }
+            assert!(at.is_finished(), "budget must fit inside the app loop");
+        },
+    ));
+
+    out.push_str(&benchkit::render_table(
+        &format!("E1: RB-GS n={n}, {app_iters}-iteration application loop"),
+        &rows,
+        Some(0),
+    ));
+
+    // The bypass: after convergence the tuner adds nothing but the final
+    // chunk. Demonstrated via the chunk trace.
+    let mut w = RbGaussSeidel::new(n, pool());
+    let mut at = Autotuning::with_seed(1.0, max_chunk, 0, 1, num_opt, max_iter, 21);
+    let mut chunk = [1i32; 1];
+    let mut trace = Vec::new();
+    for i in 0..app_iters {
+        at.single_exec_runtime(&mut chunk, |p| w.sweep(p[0].max(1) as usize));
+        trace.push((i as f64, chunk[0] as f64));
+    }
+    let converged_at = at.target_iterations();
+    out.push_str(&format!(
+        "\ntuning consumed the first {converged_at} of {app_iters} target iterations, \
+         then bypassed with final chunk = {}\n",
+        chunk[0]
+    ));
+    out.push_str("\n```csv\n");
+    let tail: Vec<(f64, f64)> = trace
+        .iter()
+        .step_by((app_iters / 40).max(1))
+        .copied()
+        .collect();
+    out.push_str(&benchkit::render_csv(("app_iter", "chunk"), &tail));
+    out.push_str("```\n");
+    Ok(out)
+}
+
+/// E2 (Fig. 1b): the full optimization runs up front on a replica, then the
+/// main loop uses the result. Overhead = the replica iterations.
+pub fn e2_entire_execution_mode(quick: bool) -> Result<String> {
+    let n = if quick { 192 } else { 384 };
+    let app_iters = if quick { 120 } else { 400 };
+    let (num_opt, max_iter) = (4, if quick { 5 } else { 8 });
+    let samples = if quick { 3 } else { 5 };
+
+    let mut rows = Vec::new();
+
+    let mut w = RbGaussSeidel::new(n, pool());
+    rows.push(bench("plain loop, chunk=1", 1, samples, || {
+        w.reset_state();
+        for _ in 0..app_iters {
+            let _ = w.sweep(1);
+        }
+    }));
+
+    let mut w = RbGaussSeidel::new(n, pool());
+    let mut tuned_chunk_record = 0i32;
+    rows.push(bench(
+        "entireExecRuntime (Alg. 5) + main loop",
+        1,
+        samples,
+        || {
+            w.reset_state();
+            let mut at = Autotuning::with_seed(1.0, n as f64, 0, 1, num_opt, max_iter, 22);
+            let mut chunk = [1i32; 1];
+            // Tuning on a replica of the target (the same method here).
+            at.entire_exec_runtime(&mut chunk, |p| {
+                let _ = w.sweep(p[0].max(1) as usize);
+            });
+            tuned_chunk_record = chunk[0];
+            // Main loop with the final solution.
+            for _ in 0..app_iters {
+                let _ = w.sweep(chunk[0].max(1) as usize);
+            }
+        },
+    ));
+
+    let mut out = benchkit::render_table(
+        &format!("E2: RB-GS n={n}, {app_iters}-iteration main loop (tuning replica included)"),
+        &rows,
+        Some(0),
+    );
+    let evals = num_opt * max_iter;
+    out.push_str(&format!(
+        "\ntuned chunk = {tuned_chunk_record}; entire-mode overhead = {evals} extra replica \
+         iterations executed before the main loop (vs 0 extra for E1's single mode)\n"
+    ));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// E3 / E4 — evaluation-count laws
+// ---------------------------------------------------------------------
+
+/// E3 (Eq. 1): `num_eval = max_iter * (ignore + 1) * num_opt` for CSA.
+pub fn e3_eq1_csa_eval_law(quick: bool) -> Result<String> {
+    let combos: &[(usize, usize, u32)] = if quick {
+        &[(2, 3, 0), (4, 5, 1), (3, 4, 2)]
+    } else {
+        &[
+            (1, 1, 0),
+            (2, 3, 0),
+            (4, 5, 1),
+            (3, 4, 2),
+            (5, 10, 0),
+            (8, 6, 3),
+            (6, 2, 1),
+        ]
+    };
+    let mut out = String::from(
+        "\n| num_opt | max_iter | ignore | predicted | measured | |\n|---|---|---|---|---|---|\n",
+    );
+    for &(num_opt, max_iter, ignore) in combos {
+        let mut at = Autotuning::new(1.0, 64.0, ignore, 1, num_opt, max_iter);
+        let mut p = [0i32; 1];
+        at.entire_exec(&mut p, |x| (x[0] as f64 - 40.0).powi(2));
+        let predicted = (max_iter * (ignore as usize + 1) * num_opt) as u64;
+        let measured = at.target_iterations();
+        let ok = if predicted == measured { "OK" } else { "MISMATCH" };
+        out.push_str(&format!(
+            "| {num_opt} | {max_iter} | {ignore} | {predicted} | {measured} | {ok} |\n"
+        ));
+        assert_eq!(predicted, measured);
+    }
+    Ok(out)
+}
+
+/// E4 (Eq. 2): `num_eval = max_iter * (ignore + 1)` for Nelder–Mead.
+pub fn e4_eq2_nm_eval_law(quick: bool) -> Result<String> {
+    let combos: &[(usize, u32)] = if quick {
+        &[(10, 0), (12, 2)]
+    } else {
+        &[(5, 0), (10, 0), (12, 2), (25, 1), (40, 3)]
+    };
+    let mut out = String::from(
+        "\n| max_iter | ignore | predicted | measured | |\n|---|---|---|---|---|\n",
+    );
+    for &(max_iter, ignore) in combos {
+        let nm = NelderMead::new(NelderMeadConfig::new(1, 0.0, max_iter));
+        let mut at = Autotuning::with_optimizer(vec![1.0], vec![64.0], ignore, Box::new(nm));
+        // Continuous points: integer rounding would quantise the landscape
+        // into plateaus whose zero cost-spread triggers NM's *other*
+        // stopping rule (error) before the budget — Eq. (2) characterises
+        // the budget-bound case.
+        let mut p = [0.0f64; 1];
+        at.entire_exec(&mut p, |x| (x[0] - 40.0).powi(2) + 1.0);
+        let predicted = (max_iter * (ignore as usize + 1)) as u64;
+        let measured = at.target_iterations();
+        let ok = if predicted == measured { "OK" } else { "MISMATCH" };
+        out.push_str(&format!(
+            "| {max_iter} | {ignore} | {predicted} | {measured} | {ok} |\n"
+        ));
+        assert_eq!(predicted, measured);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// E5 / E6 — the paper's §3 RB-GS walk-through
+// ---------------------------------------------------------------------
+
+/// E5 (Alg. 5): tune the chunk with `entire_exec_runtime`, then compare the
+/// tuned sweep time against the baseline chunks.
+pub fn e5_rbgs_entire(quick: bool) -> Result<String> {
+    let n = if quick { 256 } else { 512 };
+    let samples = if quick { 5 } else { 15 };
+    let mut w = RbGaussSeidel::new(n, pool());
+
+    // Tune.
+    let mut at = Autotuning::with_seed(1.0, n as f64, 1, 1, 5, if quick { 6 } else { 10 }, 5);
+    let mut chunk = [1i32; 1];
+    at.entire_exec_runtime(&mut chunk, |p| {
+        let _ = w.sweep(p[0].max(1) as usize);
+    });
+    let tuned = chunk[0].max(1) as usize;
+
+    // Compare.
+    let mut rows = Vec::new();
+    for (label, c) in baseline_chunks(n, pool().threads()) {
+        let mut wb = RbGaussSeidel::new(n, pool());
+        rows.push(bench(&label, 2, samples, || {
+            let _ = wb.sweep(c);
+        }));
+    }
+    let mut wt = RbGaussSeidel::new(n, pool());
+    rows.push(bench(&format!("PATSMA-tuned chunk={tuned}"), 2, samples, || {
+        let _ = wt.sweep(tuned);
+    }));
+
+    let mut out = benchkit::render_table(
+        &format!(
+            "E5: RB-GS n={n}, {} threads — per-sweep time by chunk",
+            pool().threads()
+        ),
+        &rows,
+        Some(0),
+    );
+    let best_baseline = rows[..rows.len() - 1]
+        .iter()
+        .map(|m| m.median())
+        .fold(f64::INFINITY, f64::min);
+    let tuned_t = rows.last().unwrap().median();
+    out.push_str(&format!(
+        "\ntuned vs best baseline: {:.2}× (≥ ~1× expected: the tuner should find a \
+         competitive-or-better chunk)\n",
+        best_baseline / tuned_t
+    ));
+    Ok(out)
+}
+
+/// E6 (Alg. 6): in-loop tuning; reports the per-iteration cost curve and
+/// the chunk trajectory (the paper's Fig. 1a behaviour on real hardware).
+pub fn e6_rbgs_single(quick: bool) -> Result<String> {
+    let n = if quick { 256 } else { 512 };
+    let iters = if quick { 80 } else { 200 };
+    let mut w = RbGaussSeidel::new(n, pool());
+    let mut at = Autotuning::with_seed(1.0, n as f64, 0, 1, 4, if quick { 5 } else { 8 }, 6);
+    let mut chunk = [1i32; 1];
+    let mut curve = Vec::new();
+    for i in 0..iters {
+        let t0 = std::time::Instant::now();
+        at.single_exec_runtime(&mut chunk, |p| w.sweep(p[0].max(1) as usize));
+        curve.push((i as f64, t0.elapsed().as_secs_f64() * 1e3));
+    }
+    let mut out = format!(
+        "\nfinal chunk = {} (converged after {} tuning target-iterations of {iters} total)\n",
+        chunk[0],
+        at.target_iterations()
+    );
+    out.push_str("\n```csv\n");
+    let pts: Vec<(f64, f64)> = curve.iter().step_by((iters / 40).max(1)).copied().collect();
+    out.push_str(&benchkit::render_csv(("app_iter", "sweep_ms"), &pts));
+    out.push_str("```\n");
+    // Post-convergence iterations must be at least as fast on median as the
+    // tuning phase (the tuner tested bad chunks along the way).
+    let mid = at
+        .history()
+        .len()
+        .min(curve.len().saturating_sub(1));
+    let tuning_phase: Vec<f64> = curve[..mid].iter().map(|&(_, y)| y).collect();
+    let tuned_phase: Vec<f64> = curve[mid..].iter().map(|&(_, y)| y).collect();
+    if !tuning_phase.is_empty() && !tuned_phase.is_empty() {
+        let med = |v: &[f64]| crate::stats::Summary::from_samples(v).median();
+        out.push_str(&format!(
+            "\nmedian sweep during tuning: {:.3} ms; after convergence: {:.3} ms\n",
+            med(&tuning_phase),
+            med(&tuned_phase)
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// E7 — optimizer comparison (the paper's §2.1 CSA-vs-NM claim)
+// ---------------------------------------------------------------------
+
+/// E7: success rate and mean final cost per optimizer per landscape, at an
+/// equalised evaluation budget.
+pub fn e7_optimizer_comparison(quick: bool) -> Result<String> {
+    let seeds: u64 = if quick { 5 } else { 15 };
+    let budget = 150usize; // evaluations per run
+    let dim = 2usize;
+
+    let mk: Vec<(&str, Box<dyn Fn(u64) -> Box<dyn NumericalOptimizer>>)> = vec![
+        (
+            "CSA",
+            Box::new(move |s| {
+                Box::new(Csa::new(CsaConfig::new(dim, 5, budget / 5).with_seed(s)))
+            }),
+        ),
+        (
+            "Nelder–Mead",
+            Box::new(move |s| {
+                Box::new(NelderMead::new(
+                    NelderMeadConfig::new(dim, 0.0, budget).with_seed(s),
+                ))
+            }),
+        ),
+        (
+            "SA (uncoupled)",
+            Box::new(move |s| {
+                Box::new(SimulatedAnnealing::new(
+                    SaConfig::new(dim, budget - 1).with_seed(s),
+                ))
+            }),
+        ),
+        (
+            "Random",
+            Box::new(move |s| Box::new(RandomSearch::new(dim, budget, s))),
+        ),
+        (
+            "PSO (user ext.)",
+            Box::new(move |s| {
+                Box::new(ParticleSwarm::new(
+                    PsoConfig::new(dim, 6, budget / 6).with_seed(s),
+                ))
+            }),
+        ),
+        (
+            "Grid (12/dim)",
+            Box::new(move |_| Box::new(GridSearch::new(dim, 12))),
+        ),
+    ];
+
+    let mut out = String::from(
+        "\n| landscape | optimizer | success | mean final cost | mean |x−opt| |\n|---|---|---|---|---|\n",
+    );
+    for b in synthetic::suite() {
+        for (name, make) in &mk {
+            let mut hits = 0u32;
+            let mut cost_sum = 0.0;
+            let mut dist_sum = 0.0;
+            for s in 0..seeds {
+                let mut opt = make(s.wrapping_mul(0x9E37).wrapping_add(7));
+                let (best, cost) = crate::optimizer::drive(opt.as_mut(), b.f);
+                let dist = best
+                    .iter()
+                    .map(|v| (v - b.optimum_coord).abs())
+                    .fold(0.0f64, f64::max);
+                if dist < 0.15 {
+                    hits += 1;
+                }
+                cost_sum += cost;
+                dist_sum += dist;
+            }
+            out.push_str(&format!(
+                "| {} | {} | {}/{} | {:.4} | {:.3} |\n",
+                b.name,
+                name,
+                hits,
+                seeds,
+                cost_sum / seeds as f64,
+                dist_sum / seeds as f64
+            ));
+        }
+    }
+    out.push_str(
+        "\nexpected shape (paper §2.1): CSA ≈ NM on unimodal (sphere/rosenbrock); CSA \
+         clearly ahead of NM on multimodal (rastrigin/ackley/griewank), where NM traps.\n",
+    );
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// E8 / E9 — the companion-paper workloads
+// ---------------------------------------------------------------------
+
+/// E8 (refs [10,11]): chunk auto-tuning on the 3-D FDM propagator.
+pub fn e8_fdm3d(quick: bool) -> Result<String> {
+    let (nx, ny, nz) = if quick { (48, 48, 56) } else { (72, 72, 96) };
+    let samples = if quick { 5 } else { 10 };
+    let mut w = Fdm3d::new(nx, ny, nz, pool());
+    let planes = nz - 8;
+
+    // FDM steps are short (~0.3 ms) so single measurements are noisy on a
+    // shared box: use ignore=1 for stabilisation (§2.3) and measure two
+    // steps per target iteration to average scheduler spikes. The user-set
+    // domain follows §2.3's "carefully assess which parameters can be
+    // adjusted": with `threads` workers, any chunk beyond a few shares of
+    // `planes/threads` guarantees idle cores, so the searched upper bound
+    // is 4 shares (on 24 threads / 88 planes that is [1, 12]).
+    let max_chunk = ((planes / pool().threads()).max(1) * 4).min(planes);
+    let mut at =
+        Autotuning::with_seed(1.0, max_chunk as f64, 1, 1, 4, if quick { 5 } else { 12 }, 8);
+    let mut chunk = [1i32; 1];
+    at.entire_exec_runtime(&mut chunk, |p| {
+        let c = p[0].max(1) as usize;
+        let _ = w.step_chunk(c);
+        let _ = w.step_chunk(c);
+    });
+    let tuned = chunk[0].max(1) as usize;
+
+    let mut rows = Vec::new();
+    for (label, c) in baseline_chunks(planes, pool().threads()) {
+        let mut wb = Fdm3d::new(nx, ny, nz, pool());
+        rows.push(bench(&label, 2, samples, || {
+            let _ = wb.step_chunk(c);
+        }));
+    }
+    let mut wt = Fdm3d::new(nx, ny, nz, pool());
+    rows.push(bench(&format!("PATSMA-tuned chunk={tuned}"), 2, samples, || {
+        let _ = wt.step_chunk(tuned);
+    }));
+    Ok(benchkit::render_table(
+        &format!("E8: FDM3D {nx}×{ny}×{nz} — per-time-step cost by z-plane chunk"),
+        &rows,
+        Some(0),
+    ))
+}
+
+/// E9 (refs [12,13]): RTM with per-phase re-tuning through `reset` — the
+/// forward and backward passes have different cost profiles.
+pub fn e9_rtm_phases(quick: bool) -> Result<String> {
+    let (g, steps) = if quick { (24, 24) } else { (40, 48) };
+    let mut rtm = Rtm::new(g, g, g + 8, steps, pool());
+    let planes = g;
+
+    // Tune the forward phase in-loop (Alg. 6 style).
+    let mut at = Autotuning::with_seed(1.0, planes as f64, 0, 1, 3, 4, 9);
+    let mut chunk = [1i32; 1];
+    let mut fwd_time = 0.0;
+    let t0 = std::time::Instant::now();
+    while rtm.phase() == Phase::Forward {
+        at.single_exec_runtime(&mut chunk, |p| rtm.step_chunk(p[0].max(1) as usize));
+    }
+    fwd_time += t0.elapsed().as_secs_f64();
+    let fwd_chunk = chunk[0];
+    let fwd_evals = at.evaluations();
+
+    // Context change → soft reset → re-tune for the backward phase.
+    at.reset(0);
+    let t0 = std::time::Instant::now();
+    while !rtm.is_complete() {
+        at.single_exec_runtime(&mut chunk, |p| rtm.step_chunk(p[0].max(1) as usize));
+    }
+    let bwd_time = t0.elapsed().as_secs_f64();
+    let bwd_chunk = chunk[0];
+
+    let mut out = format!(
+        "\n| phase | tuned chunk | wall-clock | optimizer evals |\n|---|---|---|---|\n\
+         | forward | {fwd_chunk} | {} | {fwd_evals} |\n\
+         | backward (after reset) | {bwd_chunk} | {} | {} |\n",
+        benchkit::fmt_time(fwd_time),
+        benchkit::fmt_time(bwd_time),
+        at.evaluations(),
+    );
+    out.push_str(&format!(
+        "\nimage L2 norm = {:.4e} (nonzero ⇒ the migration produced a result); the reset \
+         re-established costs for the backward phase rather than trusting stale forward \
+         measurements.\n",
+        rtm.image_norm()
+    ));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// E10 — Pallas block-size variants through PJRT
+// ---------------------------------------------------------------------
+
+/// E10: exhaustive latency per AOT variant + CSA-selected variant. Needs
+/// `artifacts/`; returns a note when they are absent (CI without Python).
+pub fn e10_xla_variants(quick: bool) -> Result<String> {
+    let dir = crate::runtime::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        return Ok(format!(
+            "\nartifacts not found at {} — run `make artifacts` first\n",
+            dir.display()
+        ));
+    }
+    let engine = crate::runtime::Engine::load(&dir)?;
+    let samples = if quick { 3 } else { 7 };
+
+    let mut out = String::new();
+    for kind in ["rb_sweep", "wave"] {
+        let ids = engine.variants_of(kind);
+        if ids.is_empty() {
+            continue;
+        }
+        let mut rows: Vec<Measurement> = Vec::new();
+        for &vid in &ids {
+            let meta = engine.meta(vid).clone();
+            let label = format!(
+                "{} (block {}×{}, VMEM ≈ {} KiB)",
+                meta.name,
+                meta.bm,
+                meta.bn,
+                meta.vmem_bytes / 1024
+            );
+            match kind {
+                "rb_sweep" => {
+                    let mut st = crate::runtime::RbState::initial(meta.n);
+                    rows.push(bench(&label, 1, samples, || {
+                        let _ = engine.rb_sweep(vid, &mut st).expect("exec");
+                    }));
+                }
+                _ => {
+                    let mut st = crate::runtime::WaveState::new(meta.n, 0.04);
+                    rows.push(bench(&label, 1, samples, || {
+                        st.inject_ricker(0.04);
+                        let _ = engine.wave_step(vid, &mut st).expect("exec");
+                        st.step += 1;
+                    }));
+                }
+            }
+        }
+        // Exhaustive best.
+        let best_idx = rows
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.median().partial_cmp(&b.1.median()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        out.push_str(&benchkit::render_table(
+            &format!("E10: {kind} variant latency (interpret-mode HLO on CPU PJRT)"),
+            &rows,
+            Some(0),
+        ));
+        out.push_str(&format!(
+            "\nexhaustive best: {}\n",
+            rows[best_idx].label
+        ));
+
+        // CSA selection over the variant index.
+        let mut w = match kind {
+            "rb_sweep" => crate::runtime::XlaVariantWorkload::rb(&engine)?,
+            _ => crate::runtime::XlaVariantWorkload::wave(&engine)?,
+        };
+        let (lo, hi) = w.bounds();
+        let mut at = Autotuning::with_seed(lo[0], hi[0], 1, 1, 3, if quick { 4 } else { 6 }, 10);
+        let mut variant = [0i32; 1];
+        at.entire_exec_runtime(&mut variant, |p| {
+            let _ = w.run_iteration(p);
+        });
+        let meta = w.variant_meta(variant[0].max(0) as usize);
+        out.push_str(&format!(
+            "CSA-selected: {} after {} evaluations (vs {} for exhaustive)\n",
+            meta.name,
+            at.evaluations(),
+            ids.len()
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// E11 — the `ignore` stabilisation parameter
+// ---------------------------------------------------------------------
+
+/// E11: a cost model with a transient spike on the first iteration after a
+/// parameter change (cache/DVFS stabilisation, paper §2.3). With
+/// `ignore = 0` the spike pollutes the measurements; `ignore ≥ 1` discards
+/// it and recovers the true optimum.
+pub fn e11_ignore_parameter(quick: bool) -> Result<String> {
+    let best = 48.0;
+    let seeds: u64 = if quick { 5 } else { 15 };
+    let mut out = String::from(
+        "\n| ignore | mean tuned chunk | mean |chunk−48| | target iterations |\n|---|---|---|---|\n",
+    );
+    for ignore in [0u32, 1, 2] {
+        let mut dist_sum = 0.0;
+        let mut chunk_sum = 0.0;
+        let mut iters = 0u64;
+        for seed in 0..seeds {
+            let mut at = Autotuning::with_seed(1.0, 128.0, ignore, 1, 4, 12, 100 + seed);
+            let mut chunk = [1i32; 1];
+            let mut last = -1i32;
+            at.entire_exec(&mut chunk, |p| {
+                let base = synthetic::chunk_cost_model(p[0] as f64, best);
+                // Transient on the first iteration after a parameter change
+                // (cold caches / frequency ramp), proportional to how far
+                // the working set moved — the path-dependent noise the
+                // `ignore` protocol exists to discard (§2.3).
+                let transient = if p[0] != last {
+                    20.0 * ((p[0] - last).abs() as f64) / 128.0
+                } else {
+                    0.0
+                };
+                last = p[0];
+                base + transient
+            });
+            dist_sum += (chunk[0] as f64 - best).abs();
+            chunk_sum += chunk[0] as f64;
+            iters = at.target_iterations();
+        }
+        out.push_str(&format!(
+            "| {ignore} | {:.1} | {:.1} | {iters} |\n",
+            chunk_sum / seeds as f64,
+            dist_sum / seeds as f64,
+        ));
+    }
+    out.push_str(
+        "\nexpected shape: with ignore=0 every measurement carries the transient, so the \
+         landscape is uniformly inflated (tuning still works but on noisy data); ignore≥1 \
+         pays (ignore) extra target iterations per candidate to measure the stabilised \
+         cost (Eq. 1).\n",
+    );
+    Ok(out)
+}

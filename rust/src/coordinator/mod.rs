@@ -1,0 +1,134 @@
+//! Experiment coordinator: binds workloads, tuners and optimizers into the
+//! paper's experiments (DESIGN.md §4) and renders the tables/series.
+//!
+//! Each experiment is a plain function returning markdown, shared by three
+//! front-ends:
+//! * `patsma experiment <id>` (the CLI),
+//! * `cargo bench --bench <name>` (one bench target per table/figure),
+//! * EXPERIMENTS.md (whose recorded outputs come from these functions).
+
+pub mod experiments;
+
+use anyhow::{bail, Result};
+
+/// Experiment registry entry.
+pub struct ExperimentDef {
+    /// Identifier (`e1` .. `e11`).
+    pub id: &'static str,
+    /// What paper artifact it regenerates.
+    pub paper_ref: &'static str,
+    /// Runner; `quick` trades sample counts for speed (CI mode).
+    pub run: fn(quick: bool) -> Result<String>,
+}
+
+/// All experiments, in paper order.
+pub fn registry() -> Vec<ExperimentDef> {
+    vec![
+        ExperimentDef {
+            id: "e1",
+            paper_ref: "Fig. 1(a) — Single Iteration mode",
+            run: experiments::e1_single_iteration_mode,
+        },
+        ExperimentDef {
+            id: "e2",
+            paper_ref: "Fig. 1(b) — Entire Execution mode",
+            run: experiments::e2_entire_execution_mode,
+        },
+        ExperimentDef {
+            id: "e3",
+            paper_ref: "Eq. (1) — CSA evaluation-count law",
+            run: experiments::e3_eq1_csa_eval_law,
+        },
+        ExperimentDef {
+            id: "e4",
+            paper_ref: "Eq. (2) — Nelder–Mead evaluation-count law",
+            run: experiments::e4_eq2_nm_eval_law,
+        },
+        ExperimentDef {
+            id: "e5",
+            paper_ref: "§3 Alg. 5 — RB-GS entireExecRuntime chunk tuning",
+            run: experiments::e5_rbgs_entire,
+        },
+        ExperimentDef {
+            id: "e6",
+            paper_ref: "§3 Alg. 6 — RB-GS singleExecRuntime in-loop tuning",
+            run: experiments::e6_rbgs_single,
+        },
+        ExperimentDef {
+            id: "e7",
+            paper_ref: "§2.1 — CSA vs NM (vs SA/random/PSO/grid) on multimodal costs",
+            run: experiments::e7_optimizer_comparison,
+        },
+        ExperimentDef {
+            id: "e8",
+            paper_ref: "refs [10,11] — 3-D FDM chunk auto-tuning",
+            run: experiments::e8_fdm3d,
+        },
+        ExperimentDef {
+            id: "e9",
+            paper_ref: "refs [12,13] — RTM per-phase re-tuning via reset",
+            run: experiments::e9_rtm_phases,
+        },
+        ExperimentDef {
+            id: "e10",
+            paper_ref: "§Hardware-Adaptation — Pallas block-size variants via PJRT",
+            run: experiments::e10_xla_variants,
+        },
+        ExperimentDef {
+            id: "e11",
+            paper_ref: "§2.3 — the `ignore` stabilisation parameter",
+            run: experiments::e11_ignore_parameter,
+        },
+    ]
+}
+
+/// Run one experiment (or `all`) and return the concatenated markdown.
+pub fn run(id: &str, quick: bool) -> Result<String> {
+    let reg = registry();
+    if id == "all" {
+        let mut out = String::new();
+        for def in &reg {
+            out.push_str(&format!("\n# {} — {}\n", def.id.to_uppercase(), def.paper_ref));
+            out.push_str(&(def.run)(quick)?);
+        }
+        return Ok(out);
+    }
+    match reg.iter().find(|d| d.id == id) {
+        Some(def) => {
+            let mut out = format!("\n# {} — {}\n", def.id.to_uppercase(), def.paper_ref);
+            out.push_str(&(def.run)(quick)?);
+            Ok(out)
+        }
+        None => bail!(
+            "unknown experiment {id}; known: {} or all",
+            reg.iter().map(|d| d.id).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_e1_to_e11() {
+        let ids: Vec<&str> = registry().iter().map(|d| d.id).collect();
+        assert_eq!(
+            ids,
+            vec!["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11"]
+        );
+    }
+
+    #[test]
+    fn unknown_experiment_is_an_error() {
+        assert!(run("e99", true).is_err());
+    }
+
+    #[test]
+    fn eval_law_experiments_run_quickly() {
+        let out = run("e3", true).unwrap();
+        assert!(out.contains("OK"), "{out}");
+        let out = run("e4", true).unwrap();
+        assert!(out.contains("OK"), "{out}");
+    }
+}

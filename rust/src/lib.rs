@@ -1,0 +1,21 @@
+//! # PATSMA — Parameter Auto-tuning for Shared Memory Algorithms
+//!
+//! Rust + JAX + Pallas reproduction of Fernandes et al., *PATSMA: Parameter
+//! Auto-tuning for Shared Memory Algorithms*, SoftwareX 2024
+//! (10.1016/j.softx.2024.101789).
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod optimizer;
+pub mod ptr;
+pub mod tuner;
+pub mod workloads;
+pub mod rng;
+pub mod runtime;
+pub mod sched;
+pub mod stats;
+pub mod testkit;

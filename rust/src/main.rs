@@ -1,0 +1,17 @@
+//! `patsma` — the L3 coordinator binary.
+//!
+//! Self-contained after `make artifacts`: Python never runs on any code
+//! path reachable from here.
+
+use patsma::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match cli::parse(&args).and_then(cli::execute) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

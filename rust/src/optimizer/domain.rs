@@ -1,0 +1,115 @@
+//! Internal search-domain helpers.
+//!
+//! Optimizers search `[-1, 1]^d`. Candidate generation (Cauchy jumps, simplex
+//! reflections, particle velocities) can leave the box; these helpers bring
+//! points back in a way that does not pile probability mass on the walls.
+
+/// Clamp every coordinate into `[-1, 1]`.
+pub fn clamp(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v = v.clamp(-1.0, 1.0);
+    }
+}
+
+/// Reflect every coordinate back into `[-1, 1]` (billiard reflection).
+///
+/// Unlike clamping, reflection preserves the distribution's spread near the
+/// boundary, which matters for the heavy-tailed CSA generation step: a Cauchy
+/// jump that overshoots the wall should land somewhere *inside*, not exactly
+/// on it, or the optimizer wastes evaluations re-testing the walls.
+pub fn reflect(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        if v.is_nan() {
+            *v = 0.0;
+            continue;
+        }
+        // Fold the real line onto [-1, 1] with period 4 (reflect at both walls).
+        let mut t = (*v + 1.0).rem_euclid(4.0);
+        if t > 2.0 {
+            t = 4.0 - t;
+        }
+        *v = t - 1.0;
+    }
+}
+
+/// Wrap every coordinate into `[-1, 1)` (torus topology). Used by the plain
+/// SA baseline, matching the wrap-around strategy in the original PATSMA CSA
+/// implementation.
+pub fn wrap(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        if v.is_nan() {
+            *v = 0.0;
+            continue;
+        }
+        *v = (*v + 1.0).rem_euclid(2.0) - 1.0;
+    }
+}
+
+/// True when every coordinate lies in `[-1, 1]`.
+pub fn contains(x: &[f64]) -> bool {
+    x.iter().all(|v| (-1.0..=1.0).contains(v))
+}
+
+/// Squared Euclidean distance between two points.
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_into_box() {
+        let mut x = [1.5, -2.0, 0.3];
+        clamp(&mut x);
+        assert_eq!(x, [1.0, -1.0, 0.3]);
+    }
+
+    #[test]
+    fn reflect_small_overshoot() {
+        let mut x = [1.2, -1.2];
+        reflect(&mut x);
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] + 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reflect_identity_inside() {
+        let mut x = [0.25, -0.75, 1.0, -1.0];
+        let orig = x;
+        reflect(&mut x);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reflect_huge_jump_stays_in_box() {
+        let mut x = [1234.567, -9876.5];
+        reflect(&mut x);
+        assert!(contains(&x), "{x:?}");
+    }
+
+    #[test]
+    fn reflect_nan_recovers() {
+        let mut x = [f64::NAN];
+        reflect(&mut x);
+        assert_eq!(x[0], 0.0);
+    }
+
+    #[test]
+    fn wrap_torus() {
+        let mut x = [1.5];
+        wrap(&mut x);
+        assert!((x[0] + 0.5).abs() < 1e-12);
+        let mut y = [-1.25];
+        wrap(&mut y);
+        assert!((y[0] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist2_basic() {
+        assert_eq!(dist2(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Exhaustive grid search — the "ground truth" baseline.
+//!
+//! Evaluates a regular lattice over `[-1, 1]^d`. For the discrete parameter
+//! spaces PATSMA targets (chunk sizes, kernel-variant indices) a fine enough
+//! grid *is* exhaustive search, so experiment E10 uses it to compute the true
+//! optimum that CSA's sampled search is compared against.
+
+use super::{NumericalOptimizer, ResetLevel};
+
+/// Exhaustive lattice search over `[-1, 1]^d` with `points_per_dim` samples
+/// per axis (endpoints included).
+pub struct GridSearch {
+    dim: usize,
+    points_per_dim: usize,
+    index: usize,
+    total: usize,
+    pending: bool,
+    evals: u64,
+    best_point: Vec<f64>,
+    best_cost: f64,
+    current: Vec<f64>,
+    done: bool,
+}
+
+impl GridSearch {
+    /// A lattice of `points_per_dim^dim` candidates.
+    pub fn new(dim: usize, points_per_dim: usize) -> Self {
+        assert!(dim >= 1);
+        assert!(points_per_dim >= 1);
+        let total = points_per_dim.pow(dim as u32);
+        Self {
+            dim,
+            points_per_dim,
+            index: 0,
+            total,
+            pending: false,
+            evals: 0,
+            best_point: vec![0.0; dim],
+            best_cost: f64::INFINITY,
+            current: vec![0.0; dim],
+            done: false,
+        }
+    }
+
+    /// Decode linear index -> lattice point in `[-1, 1]^d`.
+    fn decode(&self, mut idx: usize, out: &mut [f64]) {
+        for d in 0..self.dim {
+            let i = idx % self.points_per_dim;
+            idx /= self.points_per_dim;
+            out[d] = if self.points_per_dim == 1 {
+                0.0
+            } else {
+                -1.0 + 2.0 * i as f64 / (self.points_per_dim - 1) as f64
+            };
+        }
+    }
+
+    /// Total number of lattice points.
+    pub fn total_points(&self) -> usize {
+        self.total
+    }
+}
+
+impl NumericalOptimizer for GridSearch {
+    fn run(&mut self, cost: f64) -> &[f64] {
+        let cost = if cost.is_nan() { f64::INFINITY } else { cost };
+        if self.pending {
+            self.pending = false;
+            self.evals += 1;
+            if cost < self.best_cost {
+                self.best_cost = cost;
+                self.best_point.copy_from_slice(&self.current);
+            }
+            self.index += 1;
+            if self.index >= self.total {
+                self.done = true;
+            }
+        }
+        if self.done {
+            self.current.copy_from_slice(&self.best_point);
+            return &self.current;
+        }
+        let idx = self.index;
+        let mut pt = vec![0.0; self.dim];
+        self.decode(idx, &mut pt);
+        self.current.copy_from_slice(&pt);
+        self.pending = true;
+        &self.current
+    }
+
+    fn num_points(&self) -> usize {
+        1
+    }
+
+    fn dimension(&self) -> usize {
+        self.dim
+    }
+
+    fn is_end(&self) -> bool {
+        self.done
+    }
+
+    fn reset(&mut self, level: ResetLevel) {
+        self.index = 0;
+        self.pending = false;
+        self.done = false;
+        self.evals = 0;
+        if level == ResetLevel::Hard {
+            self.best_cost = f64::INFINITY;
+            self.best_point.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evals
+    }
+
+    fn best(&self) -> Option<(&[f64], f64)> {
+        if self.best_cost.is_finite() {
+            Some((&self.best_point, self.best_cost))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::drive;
+
+    #[test]
+    fn visits_every_lattice_point() {
+        let mut gs = GridSearch::new(2, 5);
+        let mut seen = Vec::new();
+        let (_, _) = drive(&mut gs, |x| {
+            seen.push((x[0], x[1]));
+            x[0] * x[0] + x[1] * x[1]
+        });
+        assert_eq!(seen.len(), 25);
+        assert_eq!(gs.evaluations(), 25);
+        // Endpoints present.
+        assert!(seen.iter().any(|&(a, b)| a == -1.0 && b == -1.0));
+        assert!(seen.iter().any(|&(a, b)| a == 1.0 && b == 1.0));
+    }
+
+    #[test]
+    fn finds_exact_lattice_optimum() {
+        let mut gs = GridSearch::new(1, 21); // lattice step 0.1, includes 0.4
+        let (best, cost) = drive(&mut gs, |x| (x[0] - 0.4).powi(2));
+        assert!((best[0] - 0.4).abs() < 1e-12, "{best:?}");
+        assert!(cost < 1e-20);
+    }
+
+    #[test]
+    fn single_point_per_dim() {
+        let mut gs = GridSearch::new(3, 1);
+        let (best, _) = drive(&mut gs, |x| x.iter().sum());
+        assert_eq!(best, vec![0.0; 3]);
+        assert_eq!(gs.evaluations(), 1);
+    }
+
+    #[test]
+    fn reset_replays_grid() {
+        let mut gs = GridSearch::new(1, 4);
+        let _ = drive(&mut gs, |x| x[0]);
+        gs.reset(ResetLevel::Soft);
+        assert!(!gs.is_end());
+        let _ = drive(&mut gs, |x| -x[0]);
+        assert_eq!(gs.evaluations(), 4);
+    }
+}

@@ -1,0 +1,222 @@
+//! Numerical optimizers — the paper's Algorithm 1 interface.
+//!
+//! Every optimizer is *staged*: instead of taking a cost closure, the caller
+//! drives it one evaluation at a time through [`NumericalOptimizer::run`].
+//! `run(cost)` feeds back the cost of the **previously returned** candidate
+//! and yields the next candidate to test. This inversion of control is the
+//! core design decision of PATSMA (paper §2.2): it lets the "cost function"
+//! be something that cannot be expressed as a function — e.g. the wall-clock
+//! time of a piece of the calling application — and it lets tuning interleave
+//! with normal application progress (Single-Iteration mode).
+//!
+//! All optimizers search the **internal domain** `[-1, 1]^d`; the
+//! [`crate::tuner::Autotuning`] front-end rescales candidates to the user's
+//! `[min, max]` box and rounds for integer points. Keeping the internal
+//! domain fixed makes optimizer hyper-parameters (temperatures, simplex
+//! sizes, inertia weights) problem-independent.
+//!
+//! Implemented optimizers:
+//! * [`csa::Csa`] — Coupled Simulated Annealing (the paper's primary method).
+//! * [`nelder_mead::NelderMead`] — simplex search (the paper's second method).
+//! * [`sa::SimulatedAnnealing`] — a single uncoupled SA chain (ablation
+//!   baseline: what CSA's coupling buys).
+//! * [`random_search::RandomSearch`], [`grid_search::GridSearch`] — the
+//!   baselines the auto-tuning literature compares against.
+//! * [`pso::ParticleSwarm`] — a third-party-style extension, included to
+//!   demonstrate the paper's §2.2 claim that new optimizers drop in by
+//!   implementing this one trait.
+
+pub mod csa;
+pub mod domain;
+pub mod grid_search;
+pub mod nelder_mead;
+pub mod pso;
+pub mod random_search;
+pub mod sa;
+
+pub use csa::{Csa, CsaConfig};
+pub use grid_search::GridSearch;
+pub use nelder_mead::{NelderMead, NelderMeadConfig};
+pub use pso::{ParticleSwarm, PsoConfig};
+pub use random_search::RandomSearch;
+pub use sa::{SaConfig, SimulatedAnnealing};
+
+/// How much optimizer state a `reset` discards (paper §2.2: "a zero level
+/// corresponds to a lighter reset ... higher levels result in a complete
+/// reset").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResetLevel {
+    /// Keep the *solutions* found so far (points) as starting material, but
+    /// discard their measured *costs* and restart schedules (temperatures,
+    /// iteration counters). A reset is requested precisely because the
+    /// execution context changed (e.g. RTM switching from the forward to
+    /// the backward phase), so old cost measurements are stale by
+    /// definition and must be re-established; `best()` returns `None`
+    /// until a new cost arrives.
+    Soft,
+    /// Forget everything except the configuration; identical to a freshly
+    /// constructed optimizer (modulo the RNG stream position).
+    Hard,
+}
+
+impl ResetLevel {
+    /// Map the paper's integer levels (0 = lightest) onto the enum.
+    pub fn from_level(level: u32) -> Self {
+        if level == 0 {
+            ResetLevel::Soft
+        } else {
+            ResetLevel::Hard
+        }
+    }
+}
+
+/// The staged-optimizer interface (paper Algorithm 1).
+///
+/// Contract, mirroring §2.2 of the paper:
+/// * The first `run` call's `cost` argument is ignored (there is no previous
+///   candidate yet); by convention callers pass `0.0`.
+/// * Each subsequent `run(cost)` associates `cost` with the candidate
+///   returned by the **previous** call, then returns the next candidate.
+/// * Once [`is_end`](NumericalOptimizer::is_end) turns true, `run` keeps
+///   returning the final (best) solution and stops consuming costs — the
+///   caller may keep invoking it harmlessly (Single-Iteration mode relies on
+///   this to become a pass-through).
+pub trait NumericalOptimizer: Send {
+    /// Feed the previous candidate's cost; get the next candidate (internal
+    /// domain `[-1, 1]^d`). After the end of optimization, returns the best
+    /// solution found.
+    fn run(&mut self, cost: f64) -> &[f64];
+
+    /// Number of candidate solutions produced per optimizer iteration
+    /// (`num_opt` for CSA, 1 for Nelder–Mead).
+    fn num_points(&self) -> usize;
+
+    /// Dimensionality of the search space.
+    fn dimension(&self) -> usize;
+
+    /// True once the optimization has finished and `run` returns the final
+    /// solution.
+    fn is_end(&self) -> bool;
+
+    /// Reset the optimization (optional; default is a no-op as in Alg. 1).
+    fn reset(&mut self, _level: ResetLevel) {}
+
+    /// Print debug/verbose state (optional).
+    fn print(&self) {}
+
+    /// Optimizer name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Number of costs consumed so far (i.e. completed evaluations).
+    fn evaluations(&self) -> u64;
+
+    /// Best point found so far (internal domain) and its cost.
+    /// `None` before the first cost has been consumed.
+    fn best(&self) -> Option<(&[f64], f64)>;
+}
+
+/// Convenience driver for plain function minimization (used by tests,
+/// benches and `Autotuning::exec`-style flows): repeatedly evaluate `f` on
+/// the candidates until the optimizer ends, then return (best_point, cost).
+///
+/// This is exactly the loop an application runs by hand when it owns the
+/// cost; having it in one place keeps the staged contract testable.
+pub fn drive<F>(opt: &mut dyn NumericalOptimizer, mut f: F) -> (Vec<f64>, f64)
+where
+    F: FnMut(&[f64]) -> f64,
+{
+    let mut cost = 0.0; // first call: ignored by contract
+    while !opt.is_end() {
+        let candidate = opt.run(cost).to_vec();
+        if opt.is_end() {
+            break;
+        }
+        cost = f(&candidate);
+    }
+    let final_point = opt.run(0.0).to_vec();
+    let best_cost = opt.best().map(|(_, c)| c).unwrap_or(f64::INFINITY);
+    (final_point, best_cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A trivial staged optimizer used to pin down the trait contract.
+    struct Probe {
+        points: Vec<Vec<f64>>,
+        idx: usize,
+        pending: bool,
+        evals: u64,
+        best: Option<(Vec<f64>, f64)>,
+        current: Vec<f64>,
+    }
+
+    impl Probe {
+        fn new(points: Vec<Vec<f64>>) -> Self {
+            Self {
+                points,
+                idx: 0,
+                pending: false,
+                evals: 0,
+                best: None,
+                current: vec![0.0],
+            }
+        }
+    }
+
+    impl NumericalOptimizer for Probe {
+        fn run(&mut self, cost: f64) -> &[f64] {
+            if self.pending {
+                self.pending = false;
+                self.evals += 1;
+                let prev = &self.points[self.idx - 1];
+                if self.best.as_ref().map(|(_, c)| cost < *c).unwrap_or(true) {
+                    self.best = Some((prev.clone(), cost));
+                }
+            }
+            if self.idx < self.points.len() {
+                self.current = self.points[self.idx].clone();
+                self.idx += 1;
+                self.pending = true;
+            } else {
+                self.current = self.best.as_ref().unwrap().0.clone();
+            }
+            &self.current
+        }
+        fn num_points(&self) -> usize {
+            1
+        }
+        fn dimension(&self) -> usize {
+            1
+        }
+        fn is_end(&self) -> bool {
+            self.idx >= self.points.len() && self.evals >= self.points.len() as u64
+        }
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn evaluations(&self) -> u64 {
+            self.evals
+        }
+        fn best(&self) -> Option<(&[f64], f64)> {
+            self.best.as_ref().map(|(p, c)| (p.as_slice(), *c))
+        }
+    }
+
+    #[test]
+    fn drive_returns_best() {
+        let mut p = Probe::new(vec![vec![0.5], vec![-0.5], vec![0.1]]);
+        let (point, cost) = drive(&mut p, |x| x[0].abs());
+        assert_eq!(point, vec![0.1]);
+        assert!((cost - 0.1).abs() < 1e-12);
+        assert_eq!(p.evaluations(), 3);
+    }
+
+    #[test]
+    fn reset_level_mapping() {
+        assert_eq!(ResetLevel::from_level(0), ResetLevel::Soft);
+        assert_eq!(ResetLevel::from_level(1), ResetLevel::Hard);
+        assert_eq!(ResetLevel::from_level(9), ResetLevel::Hard);
+    }
+}

@@ -1,0 +1,575 @@
+//! Nelder–Mead simplex search — the paper's second optimizer.
+//!
+//! NM (Nelder & Mead, Comput. J. 1965) maintains a simplex of `dim + 1`
+//! vertices and iteratively replaces the worst vertex through reflection /
+//! expansion / contraction, shrinking the whole simplex when all else fails.
+//! The paper positions it as "a more direct approach, often delivering
+//! quicker results" but "prone to becoming trapped in local minima ...
+//! better suited for simpler problems" (§2.1) — experiment E7 reproduces
+//! exactly this trade-off against CSA.
+//!
+//! ## Staged execution & evaluation accounting
+//!
+//! Like every [`NumericalOptimizer`], NM is driven one evaluation at a time.
+//! The paper's constructor is `NelderMead(dim, error, max_iter = 0)` where
+//! `error` is a convergence threshold and `max_iter` bounds the evaluation
+//! count; Eq. (2) — `num_eval = max_iter * (ignore + 1)` — makes `max_iter`
+//! the number of **cost evaluations**, which is what this implementation
+//! enforces (experiment E4). `max_iter = 0` means "until convergence".
+
+use super::domain;
+use super::{NumericalOptimizer, ResetLevel};
+use crate::rng::Xoshiro256pp;
+
+/// Standard NM coefficients (reflection / expansion / contraction / shrink).
+const ALPHA: f64 = 1.0;
+const CHI: f64 = 2.0;
+const GAMMA: f64 = 0.5;
+const SIGMA: f64 = 0.5;
+
+/// Nelder–Mead configuration (paper Alg. 2 constructor surface).
+#[derive(Debug, Clone)]
+pub struct NelderMeadConfig {
+    /// Problem dimensionality.
+    pub dim: usize,
+    /// Convergence threshold: stop when the standard deviation of the
+    /// simplex's vertex costs drops below this.
+    pub error: f64,
+    /// Maximum number of cost evaluations (0 = until convergence), per
+    /// paper Eq. (2).
+    pub max_iter: usize,
+    /// Edge length of the initial simplex (internal-domain units).
+    pub step: f64,
+    /// Seed for the (only mildly stochastic) initial-simplex jitter applied
+    /// on hard reset.
+    pub seed: u64,
+}
+
+impl NelderMeadConfig {
+    /// Paper-facing constructor: `NelderMead(dim, error, max_iter = 0)`.
+    pub fn new(dim: usize, error: f64, max_iter: usize) -> Self {
+        Self {
+            dim,
+            error,
+            max_iter,
+            step: 0.5,
+            seed: 0x0A11_5EED,
+        }
+    }
+
+    /// Builder-style seed override.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Which proposal the previously returned point was.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Stage {
+    /// Measuring initial vertex `i`.
+    Init(usize),
+    /// Reflection point outstanding.
+    Reflect,
+    /// Expansion point outstanding (reflection cost attached).
+    Expand { fr: f64 },
+    /// Contraction point outstanding; `outside` selects the comparator.
+    Contract { fr: f64, outside: bool },
+    /// Re-measuring shrunk vertex `i`.
+    Shrink(usize),
+}
+
+/// Nelder–Mead simplex optimizer (see module docs).
+pub struct NelderMead {
+    cfg: NelderMeadConfig,
+    rng: Xoshiro256pp,
+    /// Simplex vertices (dim+1 × dim) and their costs.
+    verts: Vec<Vec<f64>>,
+    costs: Vec<f64>,
+    stage: Option<Stage>,
+    /// Scratch proposal points.
+    xr: Vec<f64>,
+    xe: Vec<f64>,
+    xc: Vec<f64>,
+    centroid: Vec<f64>,
+    evals: u64,
+    best_point: Vec<f64>,
+    best_cost: f64,
+    current: Vec<f64>,
+    done: bool,
+}
+
+impl NelderMead {
+    /// Construct from a full config.
+    pub fn new(cfg: NelderMeadConfig) -> Self {
+        assert!(cfg.dim >= 1, "dim must be >= 1");
+        assert!(cfg.error >= 0.0, "error must be >= 0");
+        let mut rng = Xoshiro256pp::new(cfg.seed);
+        let verts = Self::initial_simplex(&mut rng, cfg.dim, cfg.step, false);
+        Self {
+            costs: vec![f64::INFINITY; cfg.dim + 1],
+            stage: None,
+            xr: vec![0.0; cfg.dim],
+            xe: vec![0.0; cfg.dim],
+            xc: vec![0.0; cfg.dim],
+            centroid: vec![0.0; cfg.dim],
+            evals: 0,
+            best_point: vec![0.0; cfg.dim],
+            best_cost: f64::INFINITY,
+            current: vec![0.0; cfg.dim],
+            done: false,
+            verts,
+            rng,
+            cfg,
+        }
+    }
+
+    /// Paper-facing constructor.
+    pub fn with_params(dim: usize, error: f64, max_iter: usize) -> Self {
+        Self::new(NelderMeadConfig::new(dim, error, max_iter))
+    }
+
+    /// Axis-aligned initial simplex anchored at the domain centre (jittered
+    /// after a hard reset so the retry explores differently).
+    fn initial_simplex(
+        rng: &mut Xoshiro256pp,
+        dim: usize,
+        step: f64,
+        jitter: bool,
+    ) -> Vec<Vec<f64>> {
+        let mut v0 = vec![0.0; dim];
+        if jitter {
+            for v in v0.iter_mut() {
+                *v = rng.uniform(-0.5, 0.5);
+            }
+        }
+        let mut verts = vec![v0.clone()];
+        for d in 0..dim {
+            let mut v = v0.clone();
+            v[d] += step;
+            domain::reflect(&mut v);
+            verts.push(v);
+        }
+        verts
+    }
+
+    fn note_best(&mut self, point: &[f64], cost: f64) {
+        if cost < self.best_cost {
+            self.best_cost = cost;
+            self.best_point.copy_from_slice(point);
+        }
+    }
+
+    /// Order the simplex by cost (ascending) and recompute the centroid of
+    /// all vertices except the worst.
+    fn order_and_centroid(&mut self) {
+        let n = self.verts.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| self.costs[a].partial_cmp(&self.costs[b]).unwrap());
+        let verts: Vec<Vec<f64>> = idx.iter().map(|&i| self.verts[i].clone()).collect();
+        let costs: Vec<f64> = idx.iter().map(|&i| self.costs[i]).collect();
+        self.verts = verts;
+        self.costs = costs;
+        for d in 0..self.cfg.dim {
+            self.centroid[d] =
+                self.verts[..n - 1].iter().map(|v| v[d]).sum::<f64>() / (n - 1) as f64;
+        }
+    }
+
+    /// Standard deviation of the simplex's vertex costs (convergence metric).
+    fn cost_spread(&self) -> f64 {
+        let n = self.costs.len() as f64;
+        let mean = self.costs.iter().sum::<f64>() / n;
+        (self.costs.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / n).sqrt()
+    }
+
+    fn budget_left(&self) -> bool {
+        self.cfg.max_iter == 0 || (self.evals as usize) < self.cfg.max_iter
+    }
+
+    /// Check terminal conditions; if still going, emit the reflection
+    /// proposal for the next NM step.
+    fn next_step(&mut self) -> &[f64] {
+        self.order_and_centroid();
+        if !self.budget_left() || self.cost_spread() <= self.cfg.error {
+            self.done = true;
+            self.current.copy_from_slice(&self.best_point);
+            return &self.current;
+        }
+        // Reflection: xr = c + alpha (c - worst).
+        let worst = self.verts.last().unwrap();
+        for d in 0..self.cfg.dim {
+            self.xr[d] = self.centroid[d] + ALPHA * (self.centroid[d] - worst[d]);
+        }
+        domain::reflect(&mut self.xr);
+        self.stage = Some(Stage::Reflect);
+        self.current.copy_from_slice(&self.xr);
+        &self.current
+    }
+
+    fn replace_worst(&mut self, point: &[f64], cost: f64) {
+        let last = self.verts.len() - 1;
+        self.verts[last].copy_from_slice(point);
+        self.costs[last] = cost;
+    }
+
+    /// Begin the shrink phase: move every non-best vertex toward the best
+    /// and queue them for re-measurement.
+    fn start_shrink(&mut self) -> &[f64] {
+        let best = self.verts[0].clone();
+        for i in 1..self.verts.len() {
+            for d in 0..self.cfg.dim {
+                self.verts[i][d] = best[d] + SIGMA * (self.verts[i][d] - best[d]);
+            }
+            domain::reflect(&mut self.verts[i]);
+            self.costs[i] = f64::INFINITY;
+        }
+        self.stage = Some(Stage::Shrink(1));
+        self.current.copy_from_slice(&self.verts[1]);
+        &self.current
+    }
+}
+
+impl NumericalOptimizer for NelderMead {
+    fn run(&mut self, cost: f64) -> &[f64] {
+        let cost = if cost.is_nan() { f64::INFINITY } else { cost };
+
+        if self.done {
+            self.current.copy_from_slice(&self.best_point);
+            return &self.current;
+        }
+
+        // File the cost for whatever was outstanding, then decide what to
+        // propose next.
+        match self.stage.take() {
+            None => {
+                // First call ever: cost is ignored by contract; hand out
+                // vertex 0.
+                self.stage = Some(Stage::Init(0));
+                self.current.copy_from_slice(&self.verts[0]);
+                &self.current
+            }
+            Some(Stage::Init(i)) => {
+                self.evals += 1;
+                self.costs[i] = cost;
+                let pt = self.verts[i].clone();
+                self.note_best(&pt, cost);
+                if i + 1 < self.verts.len() {
+                    if !self.budget_left() {
+                        // Budget exhausted mid-initialisation: give the
+                        // remaining vertices pessimistic costs and finish.
+                        self.done = true;
+                        self.current.copy_from_slice(&self.best_point);
+                        return &self.current;
+                    }
+                    self.stage = Some(Stage::Init(i + 1));
+                    self.current.copy_from_slice(&self.verts[i + 1]);
+                    &self.current
+                } else {
+                    self.next_step()
+                }
+            }
+            Some(Stage::Reflect) => {
+                self.evals += 1;
+                let fr = cost;
+                let pt = self.xr.clone();
+                self.note_best(&pt, fr);
+                let f_best = self.costs[0];
+                let f_second_worst = self.costs[self.costs.len() - 2];
+                let f_worst = *self.costs.last().unwrap();
+                if fr < f_best {
+                    if !self.budget_left() {
+                        self.replace_worst(&pt, fr);
+                        return self.next_step();
+                    }
+                    // Expansion: xe = c + chi (xr - c).
+                    for d in 0..self.cfg.dim {
+                        self.xe[d] = self.centroid[d] + CHI * (self.xr[d] - self.centroid[d]);
+                    }
+                    domain::reflect(&mut self.xe);
+                    self.stage = Some(Stage::Expand { fr });
+                    self.current.copy_from_slice(&self.xe);
+                    &self.current
+                } else if fr < f_second_worst {
+                    self.replace_worst(&pt, fr);
+                    self.next_step()
+                } else {
+                    if !self.budget_left() {
+                        return self.next_step();
+                    }
+                    // Contraction. Outside if the reflection improved on the
+                    // worst vertex, inside otherwise.
+                    let outside = fr < f_worst;
+                    let toward: &[f64] = if outside { &self.xr } else { &self.verts[self.verts.len() - 1] };
+                    for d in 0..self.cfg.dim {
+                        self.xc[d] = self.centroid[d] + GAMMA * (toward[d] - self.centroid[d]);
+                    }
+                    domain::reflect(&mut self.xc);
+                    self.stage = Some(Stage::Contract { fr, outside });
+                    self.current.copy_from_slice(&self.xc);
+                    &self.current
+                }
+            }
+            Some(Stage::Expand { fr }) => {
+                self.evals += 1;
+                let fe = cost;
+                let pt = self.xe.clone();
+                self.note_best(&pt, fe);
+                if fe < fr {
+                    self.replace_worst(&pt, fe);
+                } else {
+                    let xr = self.xr.clone();
+                    self.replace_worst(&xr, fr);
+                }
+                self.next_step()
+            }
+            Some(Stage::Contract { fr, outside }) => {
+                self.evals += 1;
+                let fc = cost;
+                let pt = self.xc.clone();
+                self.note_best(&pt, fc);
+                let f_worst = *self.costs.last().unwrap();
+                let comparator = if outside { fr } else { f_worst };
+                if fc <= comparator {
+                    self.replace_worst(&pt, fc);
+                    self.next_step()
+                } else if !self.budget_left() {
+                    self.next_step()
+                } else {
+                    self.start_shrink()
+                }
+            }
+            Some(Stage::Shrink(i)) => {
+                self.evals += 1;
+                self.costs[i] = cost;
+                let pt = self.verts[i].clone();
+                self.note_best(&pt, cost);
+                if i + 1 < self.verts.len() {
+                    if !self.budget_left() {
+                        self.done = true;
+                        self.current.copy_from_slice(&self.best_point);
+                        return &self.current;
+                    }
+                    self.stage = Some(Stage::Shrink(i + 1));
+                    self.current.copy_from_slice(&self.verts[i + 1]);
+                    &self.current
+                } else {
+                    self.next_step()
+                }
+            }
+        }
+    }
+
+    fn num_points(&self) -> usize {
+        1
+    }
+
+    fn dimension(&self) -> usize {
+        self.cfg.dim
+    }
+
+    fn is_end(&self) -> bool {
+        self.done
+    }
+
+    fn reset(&mut self, level: ResetLevel) {
+        match level {
+            ResetLevel::Soft => {
+                // Rebuild the simplex around the best point found so far
+                // (the retained solution); discard all stale costs.
+                let anchor = self.best_point.clone();
+                let step = self.cfg.step;
+                self.verts = (0..=self.cfg.dim)
+                    .map(|i| {
+                        let mut v = anchor.clone();
+                        if i > 0 {
+                            v[i - 1] += step;
+                            domain::reflect(&mut v);
+                        }
+                        v
+                    })
+                    .collect();
+                self.costs.iter_mut().for_each(|c| *c = f64::INFINITY);
+                self.best_cost = f64::INFINITY;
+                self.stage = None;
+                self.evals = 0;
+                self.done = false;
+            }
+            ResetLevel::Hard => {
+                self.verts =
+                    Self::initial_simplex(&mut self.rng, self.cfg.dim, self.cfg.step, true);
+                self.costs.iter_mut().for_each(|c| *c = f64::INFINITY);
+                self.stage = None;
+                self.evals = 0;
+                self.best_cost = f64::INFINITY;
+                self.best_point.iter_mut().for_each(|v| *v = 0.0);
+                self.done = false;
+            }
+        }
+    }
+
+    fn print(&self) {
+        eprintln!(
+            "[NM] evals={}/{} spread={:.3e} best={:.6e}",
+            self.evals,
+            self.cfg.max_iter,
+            self.cost_spread(),
+            self.best_cost
+        );
+    }
+
+    fn name(&self) -> &'static str {
+        "nelder-mead"
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evals
+    }
+
+    fn best(&self) -> Option<(&[f64], f64)> {
+        if self.best_cost.is_finite() {
+            Some((&self.best_point, self.best_cost))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::drive;
+
+    fn sphere(x: &[f64]) -> f64 {
+        x.iter().map(|v| v * v).sum()
+    }
+
+    fn shifted_quadratic(x: &[f64]) -> f64 {
+        x.iter().map(|v| (v - 0.4) * (v - 0.4)).sum()
+    }
+
+    fn multimodal(x: &[f64]) -> f64 {
+        let t = x[0] - 0.5;
+        t * t + 0.3 * (1.0 - (6.0 * std::f64::consts::PI * t).cos())
+    }
+
+    #[test]
+    fn eq2_evaluation_count_law() {
+        // Paper Eq. (2): num_eval = max_iter (×(ignore+1) at tuner level),
+        // with error = 0 so the budget is the only stopping rule — E4.
+        for &k in &[5usize, 10, 23, 40] {
+            let mut nm = NelderMead::with_params(2, 0.0, k);
+            let _ = drive(&mut nm, |x| sphere(x) + 1.0); // spread never hits 0
+            assert_eq!(nm.evaluations(), k as u64, "max_iter={k}");
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut nm = NelderMead::with_params(2, 1e-10, 300);
+        let (best, cost) = drive(&mut nm, shifted_quadratic);
+        assert!(cost < 1e-6, "cost {cost}");
+        for v in &best {
+            assert!((v - 0.4).abs() < 1e-3, "best {best:?}");
+        }
+    }
+
+    #[test]
+    fn error_threshold_stops_early() {
+        let mut nm = NelderMead::with_params(2, 1e-3, 10_000);
+        let _ = drive(&mut nm, shifted_quadratic);
+        assert!(
+            nm.evaluations() < 500,
+            "error threshold ignored: {} evals",
+            nm.evaluations()
+        );
+    }
+
+    #[test]
+    fn gets_trapped_on_multimodal() {
+        // The paper's §2.1 caveat: NM is prone to local minima. With a
+        // small initial simplex inside a local basin, NM converges to the
+        // trap near x = 1/6, not the global minimum at 0.5 — the expected
+        // *failure*, contrasted with CSA in experiment E7.
+        let mut cfg = NelderMeadConfig::new(1, 1e-12, 500);
+        cfg.step = 0.1; // simplex {0, 0.1} sits in the basin of x = 1/6
+        let mut nm = NelderMead::new(cfg);
+        let (best, _) = drive(&mut nm, multimodal);
+        assert!(
+            (best[0] - 0.5).abs() > 0.05,
+            "NM unexpectedly found the global minimum: {best:?}"
+        );
+    }
+
+    #[test]
+    fn proposals_stay_in_domain() {
+        let mut nm = NelderMead::with_params(3, 0.0, 200);
+        let mut cost = 0.0;
+        while !nm.is_end() {
+            let c = nm.run(cost).to_vec();
+            if nm.is_end() {
+                break;
+            }
+            assert!(c.iter().all(|v| (-1.0..=1.0).contains(v)), "{c:?}");
+            // Push the simplex toward the boundary to exercise reflection.
+            cost = (c[0] - 2.0).powi(2);
+        }
+    }
+
+    #[test]
+    fn run_after_end_returns_best() {
+        let mut nm = NelderMead::with_params(1, 0.0, 7);
+        let _ = drive(&mut nm, sphere);
+        let evals = nm.evaluations();
+        let a = nm.run(42.0).to_vec();
+        let b = nm.run(-42.0).to_vec();
+        assert_eq!(a, b);
+        assert_eq!(nm.evaluations(), evals);
+    }
+
+    #[test]
+    fn soft_reset_restarts_around_best() {
+        let mut nm = NelderMead::with_params(1, 1e-10, 200);
+        let _ = drive(&mut nm, shifted_quadratic);
+        nm.reset(ResetLevel::Soft);
+        assert!(!nm.is_end());
+        // Costs discarded; best re-established by the next drive.
+        assert!(nm.best().is_none());
+        // Re-drive on a shifted landscape; must adapt.
+        let (best, _) = drive(&mut nm, |x| (x[0] + 0.2).powi(2));
+        assert!((best[0] + 0.2).abs() < 0.05, "{best:?}");
+    }
+
+    #[test]
+    fn hard_reset_clears_best() {
+        let mut nm = NelderMead::with_params(2, 0.0, 20);
+        let _ = drive(&mut nm, sphere);
+        nm.reset(ResetLevel::Hard);
+        assert!(nm.best().is_none());
+        assert_eq!(nm.evaluations(), 0);
+        assert!(!nm.is_end());
+    }
+
+    #[test]
+    fn num_points_is_one() {
+        let nm = NelderMead::with_params(4, 1e-6, 10);
+        assert_eq!(nm.num_points(), 1);
+        assert_eq!(nm.dimension(), 4);
+    }
+
+    #[test]
+    fn tiny_budget_is_safe() {
+        // Budget smaller than the initial simplex: must terminate cleanly.
+        let mut nm = NelderMead::with_params(5, 0.0, 2);
+        let (best, _) = drive(&mut nm, sphere);
+        assert_eq!(best.len(), 5);
+        assert!(nm.evaluations() <= 2);
+    }
+
+    #[test]
+    fn unlimited_budget_converges_by_error() {
+        let mut nm = NelderMead::with_params(2, 1e-8, 0);
+        let (_, cost) = drive(&mut nm, shifted_quadratic);
+        assert!(cost < 1e-4);
+    }
+}

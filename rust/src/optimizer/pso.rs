@@ -1,0 +1,299 @@
+//! Particle Swarm Optimization — the "user-supplied optimizer" extension.
+//!
+//! The paper claims (§2.2) that PATSMA "can be easily extendable to
+//! accommodate other optimization techniques" by implementing the
+//! `NumericalOptimizer` interface. This module is the proof: a standard
+//! global-best PSO (Kennedy & Eberhart 1995, constriction form) written
+//! against [`NumericalOptimizer`] only — no other crate internals — and
+//! usable everywhere CSA is (tuner, coordinator, benches).
+
+use super::domain;
+use super::{NumericalOptimizer, ResetLevel};
+use crate::rng::Xoshiro256pp;
+
+/// PSO hyper-parameters (standard constriction-coefficient settings).
+#[derive(Debug, Clone)]
+pub struct PsoConfig {
+    /// Problem dimensionality.
+    pub dim: usize,
+    /// Number of particles.
+    pub swarm: usize,
+    /// Number of swarm iterations; evaluations = swarm * max_iter
+    /// (the first iteration measures the initial positions).
+    pub max_iter: usize,
+    /// Inertia weight.
+    pub inertia: f64,
+    /// Cognitive (personal-best) acceleration.
+    pub c1: f64,
+    /// Social (global-best) acceleration.
+    pub c2: f64,
+    /// Velocity clamp (fraction of the domain width).
+    pub v_max: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl PsoConfig {
+    /// Standard settings.
+    pub fn new(dim: usize, swarm: usize, max_iter: usize) -> Self {
+        Self {
+            dim,
+            swarm,
+            max_iter,
+            inertia: 0.729,
+            c1: 1.49445,
+            c2: 1.49445,
+            v_max: 0.5,
+            seed: 0x9A12_71CE,
+        }
+    }
+
+    /// Builder-style seed override.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Global-best particle swarm (see module docs).
+pub struct ParticleSwarm {
+    cfg: PsoConfig,
+    rng: Xoshiro256pp,
+    pos: Vec<Vec<f64>>,
+    vel: Vec<Vec<f64>>,
+    pbest: Vec<Vec<f64>>,
+    pbest_cost: Vec<f64>,
+    iter: usize,
+    next_particle: usize,
+    pending: Option<usize>,
+    evals: u64,
+    best_point: Vec<f64>,
+    best_cost: f64,
+    current: Vec<f64>,
+    done: bool,
+}
+
+impl ParticleSwarm {
+    /// Construct from a full config.
+    pub fn new(cfg: PsoConfig) -> Self {
+        assert!(cfg.dim >= 1);
+        assert!(cfg.swarm >= 1);
+        let mut rng = Xoshiro256pp::new(cfg.seed);
+        let pos: Vec<Vec<f64>> = (0..cfg.swarm)
+            .map(|i| {
+                if i == 0 {
+                    vec![0.0; cfg.dim]
+                } else {
+                    (0..cfg.dim).map(|_| rng.uniform(-1.0, 1.0)).collect()
+                }
+            })
+            .collect();
+        let vel = (0..cfg.swarm)
+            .map(|_| {
+                (0..cfg.dim)
+                    .map(|_| rng.uniform(-cfg.v_max, cfg.v_max))
+                    .collect()
+            })
+            .collect();
+        let done = cfg.max_iter == 0;
+        Self {
+            pbest: pos.clone(),
+            pbest_cost: vec![f64::INFINITY; cfg.swarm],
+            iter: 1,
+            next_particle: 0,
+            pending: None,
+            evals: 0,
+            best_point: vec![0.0; cfg.dim],
+            best_cost: f64::INFINITY,
+            current: vec![0.0; cfg.dim],
+            done,
+            pos,
+            vel,
+            rng,
+            cfg,
+        }
+    }
+
+    /// Convenience constructor.
+    pub fn with_params(dim: usize, swarm: usize, max_iter: usize) -> Self {
+        Self::new(PsoConfig::new(dim, swarm, max_iter))
+    }
+
+    /// Velocity + position update for all particles (one swarm step).
+    fn advance_swarm(&mut self) {
+        for i in 0..self.cfg.swarm {
+            for d in 0..self.cfg.dim {
+                let r1 = self.rng.next_f64();
+                let r2 = self.rng.next_f64();
+                let v = self.cfg.inertia * self.vel[i][d]
+                    + self.cfg.c1 * r1 * (self.pbest[i][d] - self.pos[i][d])
+                    + self.cfg.c2 * r2 * (self.best_point[d] - self.pos[i][d]);
+                self.vel[i][d] = v.clamp(-self.cfg.v_max, self.cfg.v_max);
+                self.pos[i][d] += self.vel[i][d];
+            }
+            domain::reflect(&mut self.pos[i]);
+        }
+    }
+}
+
+impl NumericalOptimizer for ParticleSwarm {
+    fn run(&mut self, cost: f64) -> &[f64] {
+        let cost = if cost.is_nan() { f64::INFINITY } else { cost };
+
+        if let Some(i) = self.pending.take() {
+            self.evals += 1;
+            if cost < self.pbest_cost[i] {
+                self.pbest_cost[i] = cost;
+                let p = self.pos[i].clone();
+                self.pbest[i].copy_from_slice(&p);
+            }
+            if cost < self.best_cost {
+                self.best_cost = cost;
+                let p = self.pos[i].clone();
+                self.best_point.copy_from_slice(&p);
+            }
+            self.next_particle = i + 1;
+            if self.next_particle >= self.cfg.swarm {
+                // Swarm iteration complete.
+                self.iter += 1;
+                if self.iter > self.cfg.max_iter {
+                    self.done = true;
+                } else {
+                    self.advance_swarm();
+                    self.next_particle = 0;
+                }
+            }
+        }
+
+        if self.done {
+            self.current.copy_from_slice(&self.best_point);
+            return &self.current;
+        }
+
+        let i = self.next_particle;
+        self.current.copy_from_slice(&self.pos[i]);
+        self.pending = Some(i);
+        &self.current
+    }
+
+    fn num_points(&self) -> usize {
+        self.cfg.swarm
+    }
+
+    fn dimension(&self) -> usize {
+        self.cfg.dim
+    }
+
+    fn is_end(&self) -> bool {
+        self.done
+    }
+
+    fn reset(&mut self, level: ResetLevel) {
+        match level {
+            ResetLevel::Soft => {
+                // Particle 0 restarts from the retained best solution; all
+                // stale costs (personal and global bests) are discarded.
+                if self.best_cost.is_finite() {
+                    let bp = self.best_point.clone();
+                    self.pos[0].copy_from_slice(&bp);
+                }
+                self.iter = 1;
+                self.next_particle = 0;
+                self.pending = None;
+                self.pbest_cost.iter_mut().for_each(|c| *c = f64::INFINITY);
+                self.best_cost = f64::INFINITY;
+                self.done = self.cfg.max_iter == 0;
+            }
+            ResetLevel::Hard => {
+                let mut fresh = Self::new(PsoConfig {
+                    seed: self.cfg.seed.wrapping_add(1),
+                    ..self.cfg.clone()
+                });
+                std::mem::swap(self, &mut fresh);
+            }
+        }
+    }
+
+    fn print(&self) {
+        eprintln!(
+            "[PSO] iter={}/{} best={:.6e} evals={}",
+            self.iter, self.cfg.max_iter, self.best_cost, self.evals
+        );
+    }
+
+    fn name(&self) -> &'static str {
+        "pso"
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evals
+    }
+
+    fn best(&self) -> Option<(&[f64], f64)> {
+        if self.best_cost.is_finite() {
+            Some((&self.best_point, self.best_cost))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::drive;
+
+    fn sphere(x: &[f64]) -> f64 {
+        x.iter().map(|v| v * v).sum()
+    }
+
+    #[test]
+    fn evaluation_budget() {
+        let mut pso = ParticleSwarm::with_params(2, 6, 10);
+        let _ = drive(&mut pso, sphere);
+        assert_eq!(pso.evaluations(), 60);
+    }
+
+    #[test]
+    fn converges_on_sphere() {
+        let mut pso = ParticleSwarm::new(PsoConfig::new(2, 10, 40).with_seed(1));
+        let (_, cost) = drive(&mut pso, sphere);
+        assert!(cost < 1e-3, "cost {cost}");
+    }
+
+    #[test]
+    fn positions_in_domain() {
+        let mut pso = ParticleSwarm::with_params(3, 5, 20);
+        let mut cost = 0.0;
+        while !pso.is_end() {
+            let c = pso.run(cost).to_vec();
+            if pso.is_end() {
+                break;
+            }
+            assert!(c.iter().all(|v| (-1.0..=1.0).contains(v)));
+            cost = sphere(&c);
+        }
+    }
+
+    #[test]
+    fn usable_through_trait_object() {
+        // The §2.2 extensibility claim: PSO must work behind the same dyn
+        // interface the tuner uses.
+        let mut opt: Box<dyn NumericalOptimizer> =
+            Box::new(ParticleSwarm::with_params(1, 4, 15));
+        let (best, _) = drive(opt.as_mut(), |x| (x[0] - 0.25).powi(2));
+        assert!((best[0] - 0.25).abs() < 0.1, "{best:?}");
+    }
+
+    #[test]
+    fn reset_levels() {
+        let mut pso = ParticleSwarm::with_params(1, 3, 10);
+        let _ = drive(&mut pso, sphere);
+        pso.reset(ResetLevel::Soft);
+        assert!(!pso.is_end());
+        assert!(pso.best().is_none(), "costs are stale after reset");
+        pso.reset(ResetLevel::Hard);
+        assert!(pso.best().is_none());
+        assert_eq!(pso.evaluations(), 0);
+    }
+}

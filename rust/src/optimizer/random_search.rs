@@ -1,0 +1,172 @@
+//! Uniform random search — the weakest baseline the auto-tuning literature
+//! compares against (every candidate drawn i.i.d. uniform over the box).
+//!
+//! Random search is surprisingly competitive in low dimension and serves as
+//! the "is the optimizer doing anything at all?" control in experiment E7.
+
+use super::{NumericalOptimizer, ResetLevel};
+use crate::rng::Xoshiro256pp;
+
+/// Uniform random search over `[-1, 1]^d`.
+pub struct RandomSearch {
+    dim: usize,
+    max_iter: usize,
+    seed: u64,
+    rng: Xoshiro256pp,
+    pending: bool,
+    evals: u64,
+    best_point: Vec<f64>,
+    best_cost: f64,
+    current: Vec<f64>,
+    done: bool,
+}
+
+impl RandomSearch {
+    /// `max_iter` candidate evaluations over a `dim`-dimensional box.
+    pub fn new(dim: usize, max_iter: usize, seed: u64) -> Self {
+        assert!(dim >= 1);
+        Self {
+            dim,
+            max_iter,
+            seed,
+            rng: Xoshiro256pp::new(seed),
+            pending: false,
+            evals: 0,
+            best_point: vec![0.0; dim],
+            best_cost: f64::INFINITY,
+            current: vec![0.0; dim],
+            done: max_iter == 0,
+        }
+    }
+}
+
+impl NumericalOptimizer for RandomSearch {
+    fn run(&mut self, cost: f64) -> &[f64] {
+        let cost = if cost.is_nan() { f64::INFINITY } else { cost };
+        if self.pending {
+            self.pending = false;
+            self.evals += 1;
+            if cost < self.best_cost {
+                self.best_cost = cost;
+                self.best_point.copy_from_slice(&self.current);
+            }
+            if self.evals as usize >= self.max_iter {
+                self.done = true;
+            }
+        }
+        if self.done {
+            self.current.copy_from_slice(&self.best_point);
+            return &self.current;
+        }
+        // First candidate is the best point so far (the centre on a fresh
+        // optimizer — same "sane default first" policy as CSA chain 0; the
+        // retained solution after a soft reset), the rest are uniform.
+        if self.evals == 0 {
+            let bp = self.best_point.clone();
+            self.current.copy_from_slice(&bp);
+        } else {
+            for v in self.current.iter_mut() {
+                *v = self.rng.uniform(-1.0, 1.0);
+            }
+        }
+        self.pending = true;
+        &self.current
+    }
+
+    fn num_points(&self) -> usize {
+        1
+    }
+
+    fn dimension(&self) -> usize {
+        self.dim
+    }
+
+    fn is_end(&self) -> bool {
+        self.done
+    }
+
+    fn reset(&mut self, level: ResetLevel) {
+        self.pending = false;
+        self.evals = 0;
+        self.done = self.max_iter == 0;
+        // Costs are stale after any reset; Soft keeps the best point as the
+        // first re-probe (see the `evals == 0` branch in `run`), Hard
+        // forgets it and re-seeds the stream.
+        self.best_cost = f64::INFINITY;
+        if level == ResetLevel::Hard {
+            self.rng = Xoshiro256pp::new(self.seed.wrapping_add(1));
+            self.best_point.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evals
+    }
+
+    fn best(&self) -> Option<(&[f64], f64)> {
+        if self.best_cost.is_finite() {
+            Some((&self.best_point, self.best_cost))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::drive;
+
+    fn sphere(x: &[f64]) -> f64 {
+        x.iter().map(|v| v * v).sum()
+    }
+
+    #[test]
+    fn exact_budget() {
+        let mut rs = RandomSearch::new(2, 37, 1);
+        let _ = drive(&mut rs, sphere);
+        assert_eq!(rs.evaluations(), 37);
+    }
+
+    #[test]
+    fn improves_with_budget() {
+        let (_, small) = drive(&mut RandomSearch::new(2, 5, 2), sphere);
+        let (_, large) = drive(&mut RandomSearch::new(2, 500, 2), sphere);
+        assert!(large <= small);
+    }
+
+    #[test]
+    fn first_probe_is_center() {
+        let mut rs = RandomSearch::new(3, 10, 3);
+        assert_eq!(rs.run(0.0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn in_domain() {
+        let mut rs = RandomSearch::new(2, 200, 4);
+        let mut cost = 0.0;
+        while !rs.is_end() {
+            let c = rs.run(cost).to_vec();
+            if rs.is_end() {
+                break;
+            }
+            assert!(c.iter().all(|v| (-1.0..=1.0).contains(v)));
+            cost = sphere(&c);
+        }
+    }
+
+    #[test]
+    fn soft_reset_reprobes_best_point() {
+        let mut rs = RandomSearch::new(1, 20, 5);
+        let _ = drive(&mut rs, |x| (x[0] - 0.4).powi(2));
+        let best = rs.best().map(|(p, _)| p.to_vec()).unwrap();
+        rs.reset(ResetLevel::Soft);
+        assert!(rs.best().is_none(), "costs are stale after reset");
+        assert!(!rs.is_end());
+        assert_eq!(rs.run(0.0).to_vec(), best, "first re-probe = kept point");
+    }
+}

@@ -1,0 +1,299 @@
+//! Plain (uncoupled) Simulated Annealing — ablation baseline.
+//!
+//! A single SA chain (Kirkpatrick, Gelatt, Vecchi 1983) with the classic
+//! Metropolis acceptance and a geometric acceptance-temperature schedule.
+//! PATSMA's CSA is "derived from SA ... orchestrating the execution of
+//! multiple SA optimizers" (paper §2.1); this module is what you get
+//! *without* the coupling, so the optimizer benches (E7) can show what the
+//! coupling buys.
+
+use super::domain;
+use super::{NumericalOptimizer, ResetLevel};
+use crate::rng::Xoshiro256pp;
+
+/// Plain-SA hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct SaConfig {
+    /// Problem dimensionality.
+    pub dim: usize,
+    /// Number of candidate evaluations (one chain, so iterations ==
+    /// evaluations net of the initial measurement).
+    pub max_iter: usize,
+    /// Initial generation temperature (Cauchy jump scale).
+    pub t_gen0: f64,
+    /// Initial acceptance temperature.
+    pub t_ac0: f64,
+    /// Geometric cooling factor per iteration for the acceptance
+    /// temperature.
+    pub cooling: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl SaConfig {
+    /// Sensible defaults matching the CSA per-chain settings.
+    pub fn new(dim: usize, max_iter: usize) -> Self {
+        Self {
+            dim,
+            max_iter,
+            t_gen0: 1.0,
+            t_ac0: 1.0,
+            cooling: 0.95,
+            seed: 0xD15E_A5ED,
+        }
+    }
+
+    /// Builder-style seed override.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// What the previously returned point was.
+#[derive(Debug, Clone, Copy)]
+enum Pending {
+    Init,
+    Candidate,
+}
+
+/// Single-chain simulated annealing (see module docs).
+pub struct SimulatedAnnealing {
+    cfg: SaConfig,
+    rng: Xoshiro256pp,
+    x: Vec<f64>,
+    energy: f64,
+    cand: Vec<f64>,
+    iter: usize,
+    t_gen: f64,
+    t_ac: f64,
+    pending: Option<Pending>,
+    evals: u64,
+    best_point: Vec<f64>,
+    best_cost: f64,
+    current: Vec<f64>,
+    done: bool,
+}
+
+impl SimulatedAnnealing {
+    /// Construct from a full config.
+    pub fn new(cfg: SaConfig) -> Self {
+        assert!(cfg.dim >= 1);
+        let rng = Xoshiro256pp::new(cfg.seed);
+        let done = cfg.max_iter == 0;
+        Self {
+            x: vec![0.0; cfg.dim],
+            energy: f64::INFINITY,
+            cand: vec![0.0; cfg.dim],
+            iter: 1,
+            t_gen: cfg.t_gen0,
+            t_ac: cfg.t_ac0,
+            pending: None,
+            evals: 0,
+            best_point: vec![0.0; cfg.dim],
+            best_cost: f64::INFINITY,
+            current: vec![0.0; cfg.dim],
+            done,
+            rng,
+            cfg,
+        }
+    }
+
+    /// Convenience constructor mirroring `Csa::with_params`.
+    pub fn with_params(dim: usize, max_iter: usize) -> Self {
+        Self::new(SaConfig::new(dim, max_iter))
+    }
+
+    fn note_best(&mut self, point: &[f64], cost: f64) {
+        if cost < self.best_cost {
+            self.best_cost = cost;
+            self.best_point.copy_from_slice(point);
+        }
+    }
+
+    fn generate(&mut self) {
+        for d in 0..self.cfg.dim {
+            self.cand[d] = self.x[d] + self.t_gen * self.rng.cauchy();
+        }
+        domain::reflect(&mut self.cand);
+    }
+}
+
+impl NumericalOptimizer for SimulatedAnnealing {
+    fn run(&mut self, cost: f64) -> &[f64] {
+        let cost = if cost.is_nan() { f64::INFINITY } else { cost };
+
+        if let Some(p) = self.pending.take() {
+            self.evals += 1;
+            match p {
+                Pending::Init => {
+                    self.energy = cost;
+                    let pt = self.x.clone();
+                    self.note_best(&pt, cost);
+                }
+                Pending::Candidate => {
+                    let pt = self.cand.clone();
+                    self.note_best(&pt, cost);
+                    // Metropolis acceptance.
+                    let accept = cost < self.energy || {
+                        let a = ((self.energy - cost) / self.t_ac).exp();
+                        self.rng.next_f64() < a
+                    };
+                    if accept {
+                        self.x.copy_from_slice(&self.cand);
+                        self.energy = cost;
+                    }
+                    // Schedules.
+                    self.iter += 1;
+                    self.t_ac *= self.cfg.cooling;
+                    self.t_gen = self.cfg.t_gen0 / self.iter as f64;
+                    if self.iter > self.cfg.max_iter {
+                        self.done = true;
+                    }
+                }
+            }
+        }
+
+        if self.done {
+            self.current.copy_from_slice(&self.best_point);
+            return &self.current;
+        }
+
+        if self.energy.is_infinite() {
+            self.pending = Some(Pending::Init);
+            self.current.copy_from_slice(&self.x);
+            return &self.current;
+        }
+
+        self.generate();
+        self.pending = Some(Pending::Candidate);
+        self.current.copy_from_slice(&self.cand);
+        &self.current
+    }
+
+    fn num_points(&self) -> usize {
+        1
+    }
+
+    fn dimension(&self) -> usize {
+        self.cfg.dim
+    }
+
+    fn is_end(&self) -> bool {
+        self.done
+    }
+
+    fn reset(&mut self, level: ResetLevel) {
+        match level {
+            ResetLevel::Soft => {
+                // Keep the best point as the restart position; discard
+                // stale costs (see `ResetLevel::Soft` docs).
+                if self.best_cost.is_finite() {
+                    let bp = self.best_point.clone();
+                    self.x.copy_from_slice(&bp);
+                }
+                self.t_gen = self.cfg.t_gen0;
+                self.t_ac = self.cfg.t_ac0;
+                self.iter = 1;
+                self.energy = f64::INFINITY;
+                self.best_cost = f64::INFINITY;
+                self.pending = None;
+                self.done = self.cfg.max_iter == 0;
+            }
+            ResetLevel::Hard => {
+                self.x.iter_mut().for_each(|v| *v = 0.0);
+                self.energy = f64::INFINITY;
+                self.t_gen = self.cfg.t_gen0;
+                self.t_ac = self.cfg.t_ac0;
+                self.iter = 1;
+                self.pending = None;
+                self.evals = 0;
+                self.best_cost = f64::INFINITY;
+                self.best_point.iter_mut().for_each(|v| *v = 0.0);
+                self.done = self.cfg.max_iter == 0;
+            }
+        }
+    }
+
+    fn print(&self) {
+        eprintln!(
+            "[SA] iter={}/{} T_gen={:.4e} T_ac={:.4e} best={:.6e}",
+            self.iter, self.cfg.max_iter, self.t_gen, self.t_ac, self.best_cost
+        );
+    }
+
+    fn name(&self) -> &'static str {
+        "sa"
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evals
+    }
+
+    fn best(&self) -> Option<(&[f64], f64)> {
+        if self.best_cost.is_finite() {
+            Some((&self.best_point, self.best_cost))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::drive;
+
+    fn sphere(x: &[f64]) -> f64 {
+        x.iter().map(|v| v * v).sum()
+    }
+
+    #[test]
+    fn finds_sphere_minimum() {
+        let mut sa = SimulatedAnnealing::new(SaConfig::new(2, 300).with_seed(1));
+        let (_, cost) = drive(&mut sa, sphere);
+        assert!(cost < 5e-2, "cost {cost}");
+    }
+
+    #[test]
+    fn evaluation_count_is_max_iter_plus_init() {
+        let mut sa = SimulatedAnnealing::with_params(1, 10);
+        let _ = drive(&mut sa, sphere);
+        // 1 init measurement + max_iter candidates.
+        assert_eq!(sa.evaluations(), 11);
+    }
+
+    #[test]
+    fn stays_in_domain() {
+        let mut sa = SimulatedAnnealing::with_params(2, 100);
+        let mut cost = 0.0;
+        while !sa.is_end() {
+            let c = sa.run(cost).to_vec();
+            if sa.is_end() {
+                break;
+            }
+            assert!(c.iter().all(|v| (-1.0..=1.0).contains(v)));
+            cost = sphere(&c);
+        }
+    }
+
+    #[test]
+    fn reset_behaviour() {
+        let mut sa = SimulatedAnnealing::with_params(1, 50);
+        let _ = drive(&mut sa, sphere);
+        sa.reset(ResetLevel::Soft);
+        assert!(!sa.is_end());
+        assert!(sa.best().is_none(), "costs are stale after reset");
+        sa.reset(ResetLevel::Hard);
+        assert!(sa.best().is_none());
+    }
+
+    #[test]
+    fn deterministic() {
+        let go = |seed| {
+            let mut sa = SimulatedAnnealing::new(SaConfig::new(2, 40).with_seed(seed));
+            drive(&mut sa, sphere)
+        };
+        assert_eq!(go(5), go(5));
+    }
+}

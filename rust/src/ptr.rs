@@ -1,0 +1,119 @@
+//! Shared raw-pointer wrapper for disjoint parallel writes.
+//!
+//! The workloads hand mutable buffers to `parallel_for` closures where each
+//! scheduled block writes a disjoint set of elements. [`SharedMut`] wraps
+//! the raw pointer so the *wrapper* (not the bare pointer) is captured by
+//! the closure — Rust 2021's disjoint-capture rules would otherwise pull
+//! the non-`Sync` raw pointer field straight into the closure.
+//!
+//! Accessors go through methods so the closure captures `&SharedMut`, and
+//! all dereferences remain `unsafe` at the call site where the disjointness
+//! argument lives.
+
+/// A raw mutable pointer assertable as shareable because all concurrent
+/// writes are index-disjoint (the caller's proof obligation, documented at
+/// each use site).
+pub struct SharedMut<T>(*mut T);
+
+unsafe impl<T: Send> Sync for SharedMut<T> {}
+unsafe impl<T: Send> Send for SharedMut<T> {}
+
+impl<T> SharedMut<T> {
+    /// Wrap a buffer's base pointer.
+    pub fn new(p: *mut T) -> Self {
+        Self(p)
+    }
+
+    /// Raw pointer to element `i`.
+    ///
+    /// # Safety contract (enforced at call sites)
+    /// Concurrent accesses must target disjoint indices, or be read-only.
+    #[inline(always)]
+    pub fn at(&self, i: usize) -> *mut T {
+        // SAFETY of the add: callers index within the wrapped allocation.
+        unsafe { self.0.add(i) }
+    }
+
+    /// Base pointer.
+    #[inline(always)]
+    pub fn ptr(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Read-only counterpart: shared immutable view of a buffer used from many
+/// threads (always safe to read; wrapper exists only to carry the pointer
+/// into closures).
+pub struct SharedConst<T>(*const T);
+
+unsafe impl<T: Sync> Sync for SharedConst<T> {}
+unsafe impl<T: Sync> Send for SharedConst<T> {}
+
+impl<T> SharedConst<T> {
+    /// Wrap a buffer's base pointer.
+    pub fn new(p: *const T) -> Self {
+        Self(p)
+    }
+
+    /// Read element `i` (caller guarantees `i` is in bounds and no thread
+    /// writes it concurrently).
+    #[inline(always)]
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        *self.0.add(i)
+    }
+
+    /// Raw pointer to element `i`.
+    #[inline(always)]
+    pub fn at(&self, i: usize) -> *const T {
+        unsafe { self.0.add(i) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let mut buf = vec![0u64; 64];
+        let p = SharedMut::new(buf.as_mut_ptr());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let p = &p;
+                s.spawn(move || {
+                    for i in (t..64).step_by(4) {
+                        unsafe { *p.at(i) = i as u64 };
+                    }
+                });
+            }
+        });
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn shared_const_reads() {
+        let buf: Vec<u32> = (0..32).collect();
+        let p = SharedConst::new(buf.as_ptr());
+        let sum = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let p = &p;
+                let sum = &sum;
+                s.spawn(move || {
+                    let mut local = 0usize;
+                    for i in (t..32).step_by(4) {
+                        local += unsafe { p.read(i) } as usize;
+                    }
+                    sum.fetch_add(local, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..32).sum::<u32>() as usize);
+    }
+}

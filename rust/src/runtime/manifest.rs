@@ -1,0 +1,122 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` is written by `python/compile/aot.py`, one line
+//! per AOT-compiled variant:
+//!
+//! ```text
+//! kind name file n bm bn vmem_bytes
+//! ```
+//!
+//! (whitespace-separated; `kind` is `rb_sweep` or `wave`). Plain text keeps
+//! the interchange dependency-free — the offline build has no serde.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled kernel variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantMeta {
+    /// Model kind: `rb_sweep` or `wave`.
+    pub kind: String,
+    /// Unique variant name (e.g. `rb_sweep_bm32_bn32`).
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: PathBuf,
+    /// Interior problem size baked into the executable.
+    pub n: usize,
+    /// Pallas block rows.
+    pub bm: usize,
+    /// Pallas block cols.
+    pub bn: usize,
+    /// Estimated VMEM working set per grid step (bytes).
+    pub vmem_bytes: u64,
+}
+
+/// Parse `manifest.txt` in `dir`. Unknown kinds are kept (forward
+/// compatibility); malformed lines are errors.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<VariantMeta>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    parse_manifest_str(&text, dir)
+}
+
+/// Parse manifest content (separated out for tests).
+pub fn parse_manifest_str(text: &str, dir: &Path) -> Result<Vec<VariantMeta>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 7 {
+            bail!("manifest line {}: want 7 fields, got {}", lineno + 1, f.len());
+        }
+        let parse =
+            |s: &str, what: &str| -> Result<usize> {
+                s.parse::<usize>()
+                    .with_context(|| format!("manifest line {}: bad {what}: {s}", lineno + 1))
+            };
+        let meta = VariantMeta {
+            kind: f[0].to_string(),
+            name: f[1].to_string(),
+            file: dir.join(f[2]),
+            n: parse(f[3], "n")?,
+            bm: parse(f[4], "bm")?,
+            bn: parse(f[5], "bn")?,
+            vmem_bytes: parse(f[6], "vmem_bytes")? as u64,
+        };
+        if meta.n % meta.bm != 0 || meta.n % meta.bn != 0 {
+            bail!(
+                "manifest line {}: block {}x{} does not divide n={}",
+                lineno + 1,
+                meta.bm,
+                meta.bn,
+                meta.n
+            );
+        }
+        out.push(meta);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_well_formed_lines() {
+        let text = "\
+# comment
+rb_sweep rb_sweep_bm8_bn8 rb_sweep_bm8_bn8.hlo.txt 256 8 8 912
+
+wave wave_bm16_bn16 wave_bm16_bn16.hlo.txt 128 16 16 4672
+";
+        let v = parse_manifest_str(text, Path::new("/arts")).unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].kind, "rb_sweep");
+        assert_eq!(v[0].n, 256);
+        assert_eq!(v[1].file, Path::new("/arts/wave_bm16_bn16.hlo.txt"));
+        assert_eq!(v[1].vmem_bytes, 4672);
+    }
+
+    #[test]
+    fn rejects_wrong_field_count() {
+        let err = parse_manifest_str("rb_sweep only three", Path::new(".")).unwrap_err();
+        assert!(err.to_string().contains("7 fields"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_dividing_block() {
+        let text = "rb_sweep x x.hlo.txt 100 33 10 1";
+        let err = parse_manifest_str(text, Path::new(".")).unwrap_err();
+        assert!(err.to_string().contains("does not divide"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        let text = "rb_sweep x x.hlo.txt abc 8 8 1";
+        assert!(parse_manifest_str(text, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,428 @@
+//! PJRT runtime — loads the AOT artifacts and executes them on the
+//! request path with **zero Python**.
+//!
+//! `python/compile/aot.py` runs once at build time (`make artifacts`) and
+//! emits HLO text per Pallas block-size variant; this module compiles each
+//! artifact with the PJRT CPU client at startup and exposes:
+//!
+//! * [`Engine`] — owns the client and the compiled executables;
+//! * [`RbState`] / [`WaveState`] — typed wrappers for the models' state
+//!   tensors, fed back step to step;
+//! * [`XlaVariantWorkload`] — a [`crate::workloads::Workload`] whose single
+//!   tunable parameter is the *variant index*, so the PATSMA tuner selects
+//!   the fastest Pallas tile size by measured latency (experiment E10, the
+//!   §Hardware-Adaptation analogue of chunk tuning).
+
+pub mod manifest;
+
+pub use manifest::VariantMeta;
+
+use crate::workloads::Workload;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A compiled kernel variant.
+pub struct Variant {
+    /// Manifest metadata.
+    pub meta: VariantMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime engine (see module docs).
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    variants: Vec<Variant>,
+}
+
+// SAFETY: the PJRT C API guarantees clients, loaded executables and buffers
+// are thread-safe (concurrent Execute calls are supported); the `xla` crate
+// wrappers are thin pointers that don't add thread-affine state. The crate
+// simply never declared the auto-traits.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Compile every artifact listed in `dir/manifest.txt` on the PJRT CPU
+    /// client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let metas = manifest::parse_manifest(dir)?;
+        if metas.is_empty() {
+            bail!("empty manifest in {}", dir.display());
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut variants = Vec::with_capacity(metas.len());
+        for meta in metas {
+            let path = meta.file.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-UTF8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", meta.name))?;
+            variants.push(Variant { meta, exe });
+        }
+        Ok(Engine { client, variants })
+    }
+
+    /// All variants.
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    /// Indices of variants of the given kind, manifest order.
+    pub fn variants_of(&self, kind: &str) -> Vec<usize> {
+        self.variants
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.meta.kind == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Metadata for variant `idx`.
+    pub fn meta(&self, idx: usize) -> &VariantMeta {
+        &self.variants[idx].meta
+    }
+
+    /// Execute one red–black sweep with variant `idx` (must be an
+    /// `rb_sweep` variant whose `n` matches the state).
+    pub fn rb_sweep(&self, idx: usize, state: &mut RbState) -> Result<f64> {
+        let v = &self.variants[idx];
+        if v.meta.kind != "rb_sweep" {
+            bail!("variant {} is not an rb_sweep", v.meta.name);
+        }
+        let side = v.meta.n + 2;
+        if state.padded.len() != side * side {
+            bail!(
+                "state size {} != executable size {}",
+                state.padded.len(),
+                side * side
+            );
+        }
+        let input = xla::Literal::vec1(&state.padded).reshape(&[side as i64, side as i64])?;
+        let result = v.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let (new_padded, diff) = result.to_tuple2()?;
+        state.padded = new_padded.to_vec::<f64>()?;
+        Ok(diff.get_first_element::<f64>()?)
+    }
+
+    /// Execute one leapfrog step with variant `idx` (must be a `wave`
+    /// variant). Returns the field energy.
+    pub fn wave_step(&self, idx: usize, state: &mut WaveState) -> Result<f64> {
+        let v = &self.variants[idx];
+        if v.meta.kind != "wave" {
+            bail!("variant {} is not a wave model", v.meta.name);
+        }
+        let n = v.meta.n;
+        let side = n + 4;
+        if state.curr_padded.len() != side * side || state.prev.len() != n * n {
+            bail!("state does not match executable size n={n}");
+        }
+        let curr =
+            xla::Literal::vec1(&state.curr_padded).reshape(&[side as i64, side as i64])?;
+        let prev = xla::Literal::vec1(&state.prev).reshape(&[n as i64, n as i64])?;
+        let vf = xla::Literal::vec1(&state.vfact).reshape(&[n as i64, n as i64])?;
+        let result = v.exe.execute::<xla::Literal>(&[curr, prev, vf])?[0][0].to_literal_sync()?;
+        let (new_curr, new_prev, energy) = result.to_tuple3()?;
+        state.curr_padded = new_curr.to_vec::<f32>()?;
+        state.prev = new_prev.to_vec::<f32>()?;
+        Ok(energy.get_first_element::<f32>()? as f64)
+    }
+}
+
+/// Red–black solver state: the padded `(n+2)²` grid, row-major `f64`.
+#[derive(Debug, Clone)]
+pub struct RbState {
+    /// Padded grid.
+    pub padded: Vec<f64>,
+    /// Interior size.
+    pub n: usize,
+}
+
+impl RbState {
+    /// The same initial Laplace problem as
+    /// `workloads::rb_gauss_seidel::RbGaussSeidel` (and
+    /// `python/compile/model.py::initial_rb_grid`).
+    pub fn initial(n: usize) -> Self {
+        let side = n + 2;
+        let mut g = vec![0.0f64; side * side];
+        for j in 0..side {
+            g[j] = 100.0;
+            g[(side - 1) * side + j] = 0.0;
+        }
+        for i in 0..side {
+            let frac = i as f64 / (side - 1) as f64;
+            g[i * side] = 100.0 * (1.0 - frac);
+            g[i * side + side - 1] = 50.0 * (1.0 - frac);
+        }
+        Self { padded: g, n }
+    }
+
+    /// Interior values (row-major `n × n`).
+    pub fn interior(&self) -> Vec<f64> {
+        let side = self.n + 2;
+        let mut out = Vec::with_capacity(self.n * self.n);
+        for i in 1..=self.n {
+            out.extend_from_slice(&self.padded[i * side + 1..i * side + 1 + self.n]);
+        }
+        out
+    }
+}
+
+/// Wave-model state: padded current field (halo 2), previous interior and
+/// the Courant-factor field, row-major `f32`.
+#[derive(Debug, Clone)]
+pub struct WaveState {
+    /// `(n+4)²` current field.
+    pub curr_padded: Vec<f32>,
+    /// `n²` previous interior.
+    pub prev: Vec<f32>,
+    /// `n²` squared Courant factors.
+    pub vfact: Vec<f32>,
+    /// Interior size.
+    pub n: usize,
+    /// Time-step counter (drives the source term injected host-side).
+    pub step: u64,
+}
+
+impl WaveState {
+    /// Zero field with a uniform Courant factor.
+    pub fn new(n: usize, courant2: f32) -> Self {
+        Self {
+            curr_padded: vec![0.0; (n + 4) * (n + 4)],
+            prev: vec![0.0; n * n],
+            vfact: vec![courant2; n * n],
+            n,
+            step: 0,
+        }
+    }
+
+    /// Inject a Ricker wavelet sample at the grid centre (host-side source,
+    /// matching the Fdm3d substrate's source model).
+    pub fn inject_ricker(&mut self, freq: f64) {
+        let t = self.step as f64 * freq - 1.5;
+        let a = std::f64::consts::PI * std::f64::consts::PI * t * t;
+        let s = ((1.0 - 2.0 * a) * (-a).exp()) as f32;
+        let side = self.n + 4;
+        let c = side / 2;
+        self.curr_padded[c * side + c] += s;
+    }
+
+    /// Field energy (host-side check).
+    pub fn energy(&self) -> f64 {
+        self.curr_padded
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum()
+    }
+}
+
+/// A [`Workload`] whose tunable parameter is the variant index — PATSMA
+/// tunes the Pallas block size through this (experiment E10).
+pub struct XlaVariantWorkload<'e> {
+    engine: &'e Engine,
+    /// Engine variant indices (all of one kind), tuner-index order.
+    variant_ids: Vec<usize>,
+    kind: &'static str,
+    rb: Option<RbState>,
+    wave: Option<WaveState>,
+}
+
+impl<'e> XlaVariantWorkload<'e> {
+    /// Tune over the engine's `rb_sweep` variants.
+    pub fn rb(engine: &'e Engine) -> Result<Self> {
+        let ids = engine.variants_of("rb_sweep");
+        if ids.is_empty() {
+            bail!("no rb_sweep variants loaded");
+        }
+        let n = engine.meta(ids[0]).n;
+        Ok(Self {
+            engine,
+            variant_ids: ids,
+            kind: "rb_sweep",
+            rb: Some(RbState::initial(n)),
+            wave: None,
+        })
+    }
+
+    /// Tune over the engine's `wave` variants.
+    pub fn wave(engine: &'e Engine) -> Result<Self> {
+        let ids = engine.variants_of("wave");
+        if ids.is_empty() {
+            bail!("no wave variants loaded");
+        }
+        let n = engine.meta(ids[0]).n;
+        Ok(Self {
+            engine,
+            variant_ids: ids,
+            kind: "wave",
+            rb: None,
+            wave: Some(WaveState::new(n, 0.04)),
+        })
+    }
+
+    /// Number of selectable variants.
+    pub fn num_variants(&self) -> usize {
+        self.variant_ids.len()
+    }
+
+    /// Variant metadata by *tuner index*.
+    pub fn variant_meta(&self, tuner_idx: usize) -> &VariantMeta {
+        self.engine.meta(self.variant_ids[tuner_idx])
+    }
+}
+
+impl Workload for XlaVariantWorkload<'_> {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            "rb_sweep" => "xla-rb-variants",
+            _ => "xla-wave-variants",
+        }
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        (vec![0.0], vec![(self.variant_ids.len() - 1) as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        let idx = (params[0].max(0) as usize).min(self.variant_ids.len() - 1);
+        let vid = self.variant_ids[idx];
+        match self.kind {
+            "rb_sweep" => {
+                let state = self.rb.as_mut().expect("rb state");
+                self.engine.rb_sweep(vid, state).expect("rb_sweep exec")
+            }
+            _ => {
+                let state = self.wave.as_mut().expect("wave state");
+                state.inject_ricker(0.04);
+                let e = self.engine.wave_step(vid, state).expect("wave exec");
+                state.step += 1;
+                e
+            }
+        }
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        // Cross-variant determinism: every variant must produce the same
+        // numbers from the same state (the paper's invariant at the XLA
+        // layer). Checked pairwise against variant 0.
+        match self.kind {
+            "rb_sweep" => {
+                let n = self.engine.meta(self.variant_ids[0]).n;
+                let mut base = RbState::initial(n);
+                let d0 = self
+                    .engine
+                    .rb_sweep(self.variant_ids[0], &mut base)
+                    .map_err(|e| e.to_string())?;
+                for &vid in &self.variant_ids[1..] {
+                    let mut s = RbState::initial(n);
+                    let d = self
+                        .engine
+                        .rb_sweep(vid, &mut s)
+                        .map_err(|e| e.to_string())?;
+                    if s.padded != base.padded || d != d0 {
+                        return Err(format!(
+                            "variant {} diverges from variant 0",
+                            self.engine.meta(vid).name
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            _ => {
+                let n = self.engine.meta(self.variant_ids[0]).n;
+                let mk = || {
+                    let mut st = WaveState::new(n, 0.04);
+                    st.inject_ricker(0.04);
+                    st
+                };
+                let mut base = mk();
+                let e0 = self
+                    .engine
+                    .wave_step(self.variant_ids[0], &mut base)
+                    .map_err(|e| e.to_string())?;
+                for &vid in &self.variant_ids[1..] {
+                    let mut s = mk();
+                    let e = self
+                        .engine
+                        .wave_step(vid, &mut s)
+                        .map_err(|e| e.to_string())?;
+                    if s.curr_padded != base.curr_padded || e != e0 {
+                        return Err(format!(
+                            "variant {} diverges from variant 0",
+                            self.engine.meta(vid).name
+                        ));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn reset_state(&mut self) {
+        if let Some(rb) = &mut self.rb {
+            *rb = RbState::initial(rb.n);
+        }
+        if let Some(w) = &mut self.wave {
+            *w = WaveState::new(w.n, w.vfact[0]);
+        }
+    }
+}
+
+/// Locate the artifact directory: `$PATSMA_ARTIFACTS`, else `./artifacts`
+/// (cwd), else `<crate root>/artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PATSMA_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from("artifacts");
+    if cwd.join("manifest.txt").exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rb_state_initial_matches_substrate() {
+        use crate::sched::ThreadPool;
+        use std::sync::OnceLock;
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        let pool = P.get_or_init(|| ThreadPool::new(2));
+        let rb = crate::workloads::rb_gauss_seidel::RbGaussSeidel::new(16, pool);
+        let st = RbState::initial(16);
+        assert_eq!(rb.grid(), &st.padded[..], "layer-3 vs runtime init grid");
+    }
+
+    #[test]
+    fn interior_extraction() {
+        let mut st = RbState::initial(2);
+        // side = 4; interior cells at (1,1),(1,2),(2,1),(2,2).
+        st.padded[1 * 4 + 1] = 7.0;
+        st.padded[2 * 4 + 2] = 9.0;
+        let inner = st.interior();
+        assert_eq!(inner.len(), 4);
+        assert_eq!(inner[0], 7.0);
+        assert_eq!(inner[3], 9.0);
+    }
+
+    #[test]
+    fn wave_state_ricker_injects_at_centre() {
+        let mut st = WaveState::new(8, 0.04);
+        st.inject_ricker(0.04);
+        assert!(st.energy() > 0.0);
+        let side = 12;
+        let c = side / 2;
+        assert_ne!(st.curr_padded[c * side + c], 0.0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Per-region scheduling metrics.
+//!
+//! The experiments use these to *explain* tuned chunk values: a chunk that
+//! is too small shows up as a high block count (scheduling overhead); one
+//! that is too large shows up as busy-time imbalance across the team.
+
+/// Per-thread accounting for one parallel region.
+#[derive(Debug, Clone)]
+pub struct LoopMetrics {
+    /// Nanoseconds each team member spent inside loop bodies.
+    pub busy_ns: Vec<u64>,
+    /// Number of scheduled blocks each member executed.
+    pub blocks: Vec<u64>,
+}
+
+impl LoopMetrics {
+    /// Empty metrics for a team of `threads`.
+    pub fn new(threads: usize) -> Self {
+        Self {
+            busy_ns: vec![0; threads],
+            blocks: vec![0; threads],
+        }
+    }
+
+    /// Team size.
+    pub fn threads(&self) -> usize {
+        self.busy_ns.len()
+    }
+
+    /// Total blocks scheduled (≈ number of atomic claims under dynamic).
+    pub fn total_blocks(&self) -> u64 {
+        self.blocks.iter().sum()
+    }
+
+    /// Total busy nanoseconds across the team.
+    pub fn total_busy_ns(&self) -> u64 {
+        self.busy_ns.iter().sum()
+    }
+
+    /// Load imbalance in `[0, 1)`: `(max - mean) / max` over per-thread
+    /// busy time. 0 = perfectly balanced; →1 = one thread did everything.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.busy_ns.iter().copied().max().unwrap_or(0) as f64;
+        if max == 0.0 {
+            return 0.0;
+        }
+        let mean = self.total_busy_ns() as f64 / self.threads() as f64;
+        (max - mean) / max
+    }
+
+    /// Accumulate another region's metrics (e.g. over time-steps).
+    pub fn merge(&mut self, other: &LoopMetrics) {
+        assert_eq!(self.threads(), other.threads());
+        for i in 0..self.threads() {
+            self.busy_ns[i] += other.busy_ns[i];
+            self.blocks[i] += other.blocks[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_zero_when_balanced() {
+        let mut m = LoopMetrics::new(4);
+        m.busy_ns = vec![100, 100, 100, 100];
+        assert_eq!(m.imbalance(), 0.0);
+    }
+
+    #[test]
+    fn imbalance_high_when_skewed() {
+        let mut m = LoopMetrics::new(4);
+        m.busy_ns = vec![1000, 0, 0, 0];
+        assert!((m.imbalance() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_of_idle_region_is_zero() {
+        let m = LoopMetrics::new(4);
+        assert_eq!(m.imbalance(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LoopMetrics::new(2);
+        a.busy_ns = vec![10, 20];
+        a.blocks = vec![1, 2];
+        let mut b = LoopMetrics::new(2);
+        b.busy_ns = vec![5, 5];
+        b.blocks = vec![3, 4];
+        a.merge(&b);
+        assert_eq!(a.busy_ns, vec![15, 25]);
+        assert_eq!(a.total_blocks(), 10);
+    }
+}

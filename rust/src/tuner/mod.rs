@@ -1,0 +1,741 @@
+//! The `Autotuning` front-end — the paper's Algorithms 2 and 3.
+//!
+//! `Autotuning` manages the interface between a numerical optimizer and the
+//! target application. It owns:
+//!
+//! * the **user domain**: `min` / `max` bounds per dimension, with integer
+//!   or floating-point points ([`PointValue`]); optimizers always work in
+//!   the internal `[-1, 1]^d` box and candidates are rescaled on the way
+//!   out;
+//! * the **`ignore` protocol** (paper §2.3): each candidate solution is run
+//!   for `ignore + 1` target iterations, the first `ignore` of which are
+//!   discarded so the execution stabilises (cache warm-up, frequency
+//!   ramping) before the one measured iteration. This gives the paper's
+//!   evaluation-count laws Eq. (1)/(2):
+//!   `target_iterations = evaluations * (ignore + 1)`;
+//! * the **execution modes** of Fig. 1:
+//!   - *Single Iteration* (`single_exec*`, or raw `start`/`end`): one
+//!     auto-tuning step per target call, inside the application loop; once
+//!     the optimizer ends, the methods become pass-throughs running the
+//!     final solution (the "bypass" of §2.1);
+//!   - *Entire Execution* (`entire_exec*`): drive the full optimization on
+//!     a replica of the target up front, then hand back the final solution;
+//! * **cost plumbing**: the `*_runtime` variants measure wall-clock around
+//!   the target (Start/End Measure in Fig. 1); `exec` and the non-runtime
+//!   variants accept any application-defined cost (energy, residual, ...).
+
+pub mod point;
+
+pub use point::PointValue;
+
+use crate::optimizer::{Csa, CsaConfig, NumericalOptimizer, ResetLevel};
+use std::time::Instant;
+
+/// One completed cost evaluation, recorded for reports and experiments.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// The candidate as handed to the application (user domain, after any
+    /// integer rounding).
+    pub point: Vec<f64>,
+    /// The cost fed back to the optimizer.
+    pub cost: f64,
+    /// Count of target iterations executed up to and including this sample.
+    pub target_iterations: u64,
+}
+
+/// Tuning lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Optimization in progress.
+    Tuning,
+    /// Optimizer finished; `start`/`exec`/`single_exec*` are pass-throughs
+    /// using the final solution.
+    Finished,
+}
+
+/// The paper's `Autotuning` class (Alg. 2 constructors, Alg. 3 methods).
+pub struct Autotuning {
+    min: Vec<f64>,
+    max: Vec<f64>,
+    ignore: u32,
+    opt: Box<dyn NumericalOptimizer>,
+    phase: Phase,
+    /// Current candidate, internal domain; `None` before the first call.
+    candidate: Option<Vec<f64>>,
+    /// Target iterations left for the current candidate (counts down from
+    /// `ignore + 1`; the cost of the last one is the measured cost).
+    runs_left: u32,
+    /// Wall-clock anchor between `start` and `end`.
+    timer: Option<Instant>,
+    /// Final solution (internal domain) once `phase == Finished`.
+    final_internal: Vec<f64>,
+    /// The candidate exactly as last written to the application (user
+    /// domain, post-rounding) — what history records.
+    last_written: Vec<f64>,
+    /// Completed evaluations log.
+    history: Vec<Sample>,
+    /// Total target iterations executed under tuning control.
+    target_iterations: u64,
+}
+
+impl Autotuning {
+    /// Paper constructor, Alg. 2 line 4: default optimizer (CSA) with
+    /// `dim`, `num_opt`, `max_iter`; scalar bounds broadcast to all
+    /// dimensions.
+    pub fn new(
+        min: f64,
+        max: f64,
+        ignore: u32,
+        dim: usize,
+        num_opt: usize,
+        max_iter: usize,
+    ) -> Self {
+        Self::with_optimizer(
+            vec![min; dim],
+            vec![max; dim],
+            ignore,
+            Box::new(Csa::new(CsaConfig::new(dim, num_opt, max_iter))),
+        )
+    }
+
+    /// Paper constructor, Alg. 2 line 5: user-supplied optimizer
+    /// (per-dimension bounds).
+    pub fn with_optimizer(
+        min: Vec<f64>,
+        max: Vec<f64>,
+        ignore: u32,
+        opt: Box<dyn NumericalOptimizer>,
+    ) -> Self {
+        let dim = opt.dimension();
+        assert_eq!(min.len(), dim, "min bounds/dimension mismatch");
+        assert_eq!(max.len(), dim, "max bounds/dimension mismatch");
+        for (lo, hi) in min.iter().zip(&max) {
+            assert!(lo <= hi, "min {lo} > max {hi}");
+            assert!(lo.is_finite() && hi.is_finite(), "non-finite bounds");
+        }
+        Self {
+            min,
+            max,
+            ignore,
+            opt,
+            phase: Phase::Tuning,
+            candidate: None,
+            runs_left: ignore + 1,
+            timer: None,
+            final_internal: vec![0.0; dim],
+            last_written: vec![0.0; dim],
+            history: Vec::new(),
+            target_iterations: 0,
+        }
+    }
+
+    /// Convenience: CSA with an explicit seed (experiments pin seeds).
+    pub fn with_seed(
+        min: f64,
+        max: f64,
+        ignore: u32,
+        dim: usize,
+        num_opt: usize,
+        max_iter: usize,
+        seed: u64,
+    ) -> Self {
+        Self::with_optimizer(
+            vec![min; dim],
+            vec![max; dim],
+            ignore,
+            Box::new(Csa::new(CsaConfig::new(dim, num_opt, max_iter).with_seed(seed))),
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // Domain handling
+    // ------------------------------------------------------------------
+
+    /// Rescale one internal coordinate to the user domain.
+    #[inline]
+    fn rescale(&self, d: usize, x: f64) -> f64 {
+        self.min[d] + (x + 1.0) * 0.5 * (self.max[d] - self.min[d])
+    }
+
+    /// Write the given internal point into the application's buffer,
+    /// rounding for integer point types and recording what was written.
+    fn write_point<P: PointValue>(&mut self, internal: &[f64], point: &mut [P]) {
+        assert_eq!(
+            point.len(),
+            self.dimension(),
+            "point buffer/dimension mismatch"
+        );
+        for d in 0..point.len() {
+            let mut u = self.rescale(d, internal[d]);
+            if P::IS_INTEGER {
+                u = u.round();
+            }
+            u = u.clamp(self.min[d], self.max[d]);
+            point[d] = P::from_f64(u);
+            self.last_written[d] = point[d].to_f64();
+        }
+    }
+
+    /// Ensure a candidate is in flight; fetch the first one if needed.
+    fn ensure_candidate(&mut self) {
+        if self.phase == Phase::Finished || self.candidate.is_some() {
+            return;
+        }
+        // First optimizer call: cost argument is ignored by contract.
+        let first = self.opt.run(0.0).to_vec();
+        if self.opt.is_end() {
+            self.final_internal = first;
+            self.phase = Phase::Finished;
+        } else {
+            self.candidate = Some(first);
+            self.runs_left = self.ignore + 1;
+        }
+    }
+
+    /// Account one completed target iteration with cost `cost` for the
+    /// current candidate; advance the optimizer when the candidate's
+    /// measurement iteration completes.
+    fn submit_cost(&mut self, cost: f64) {
+        if self.phase == Phase::Finished {
+            return;
+        }
+        debug_assert!(self.candidate.is_some(), "cost without candidate");
+        self.target_iterations += 1;
+        if self.runs_left > 1 {
+            // Stabilisation iteration (paper §2.3): discard.
+            self.runs_left -= 1;
+            return;
+        }
+        // The measured iteration: log it and step the optimizer.
+        self.history.push(Sample {
+            point: self.last_written.clone(),
+            cost,
+            target_iterations: self.target_iterations,
+        });
+        let next = self.opt.run(cost).to_vec();
+        if self.opt.is_end() {
+            self.final_internal = next;
+            self.phase = Phase::Finished;
+            self.candidate = None;
+        } else {
+            self.candidate = Some(next);
+            self.runs_left = self.ignore + 1;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Base methods (Alg. 3 lines 5–8)
+    // ------------------------------------------------------------------
+
+    /// Set the start boundary of the measured code section: writes the
+    /// candidate (or, after convergence, the final solution) into `point`
+    /// and starts the wall-clock measurement.
+    pub fn start<P: PointValue>(&mut self, point: &mut [P]) {
+        self.ensure_candidate();
+        match self.phase {
+            Phase::Finished => {
+                let f = self.final_internal.clone();
+                self.write_point(&f, point);
+                self.timer = None;
+            }
+            Phase::Tuning => {
+                let c = self.candidate.clone().expect("candidate in flight");
+                self.write_point(&c, point);
+                self.timer = Some(Instant::now());
+            }
+        }
+    }
+
+    /// Set the end boundary of the measured code section: stops the
+    /// wall-clock measurement and feeds the elapsed time as the cost.
+    /// A `end` without a matching `start` (or after convergence) is a
+    /// harmless no-op, so the call can stay in the application loop after
+    /// tuning finishes.
+    pub fn end(&mut self) {
+        if let Some(t0) = self.timer.take() {
+            let cost = t0.elapsed().as_secs_f64();
+            self.submit_cost(cost);
+        }
+    }
+
+    /// Application-defined cost (Alg. 3 line 8): feed `cost` for the last
+    /// returned solution and receive the next candidate in `point`. On the
+    /// first call the cost is ignored (nothing was returned yet), matching
+    /// the `run` contract of §2.2.
+    pub fn exec<P: PointValue>(&mut self, point: &mut [P], cost: f64) {
+        if self.candidate.is_some() {
+            self.submit_cost(cost);
+        }
+        self.ensure_candidate();
+        let internal = match self.phase {
+            Phase::Finished => self.final_internal.clone(),
+            Phase::Tuning => self.candidate.clone().expect("candidate in flight"),
+        };
+        self.write_point(&internal, point);
+    }
+
+    // ------------------------------------------------------------------
+    // Pre-programmed methods (Alg. 3 lines 10–16)
+    // ------------------------------------------------------------------
+
+    /// Entire-Execution mode, runtime cost (Fig. 1b): run the complete
+    /// auto-tuning by repeatedly invoking `target` (a replica of the real
+    /// method) and measuring its wall-clock; leaves the final solution in
+    /// `point`.
+    pub fn entire_exec_runtime<P: PointValue>(
+        &mut self,
+        point: &mut [P],
+        mut target: impl FnMut(&[P]),
+    ) {
+        while !self.is_finished() {
+            self.start(point);
+            target(point);
+            self.end();
+        }
+        let f = self.final_internal.clone();
+        self.write_point(&f, point);
+    }
+
+    /// Entire-Execution mode, application-defined cost: `target` returns
+    /// the cost of running with the given point.
+    pub fn entire_exec<P: PointValue>(
+        &mut self,
+        point: &mut [P],
+        mut target: impl FnMut(&[P]) -> f64,
+    ) {
+        while !self.is_finished() {
+            self.ensure_candidate();
+            if self.is_finished() {
+                break;
+            }
+            let c = self.candidate.clone().expect("candidate in flight");
+            self.write_point(&c, point);
+            let cost = target(point);
+            self.submit_cost(cost);
+        }
+        let f = self.final_internal.clone();
+        self.write_point(&f, point);
+    }
+
+    /// Single-Iteration mode, runtime cost (Fig. 1a): executes exactly one
+    /// target iteration per call, tuning while the application runs; after
+    /// convergence it keeps calling `target` with the final solution at
+    /// zero optimizer overhead. Returns `target`'s return value (Alg. 6
+    /// uses this for the Gauss–Seidel residual).
+    pub fn single_exec_runtime<P: PointValue, R>(
+        &mut self,
+        point: &mut [P],
+        target: impl FnOnce(&[P]) -> R,
+    ) -> R {
+        self.start(point);
+        let out = target(point);
+        self.end();
+        out
+    }
+
+    /// Single-Iteration mode, application-defined cost: one target
+    /// iteration per call; `target` returns `(cost, value)`.
+    pub fn single_exec<P: PointValue, R>(
+        &mut self,
+        point: &mut [P],
+        target: impl FnOnce(&[P]) -> (f64, R),
+    ) -> R {
+        self.ensure_candidate();
+        let internal = match self.phase {
+            Phase::Finished => self.final_internal.clone(),
+            Phase::Tuning => self.candidate.clone().expect("candidate in flight"),
+        };
+        self.write_point(&internal, point);
+        let (cost, out) = target(point);
+        if self.phase == Phase::Tuning {
+            self.submit_cost(cost);
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection & control
+    // ------------------------------------------------------------------
+
+    /// True once the optimizer has finished and the final solution is
+    /// available (the Single-Iteration "bypass" state).
+    pub fn is_finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    /// Problem dimensionality.
+    pub fn dimension(&self) -> usize {
+        self.opt.dimension()
+    }
+
+    /// The `ignore` parameter (stabilisation iterations per candidate).
+    pub fn ignore(&self) -> u32 {
+        self.ignore
+    }
+
+    /// Completed optimizer evaluations so far.
+    pub fn evaluations(&self) -> u64 {
+        self.opt.evaluations()
+    }
+
+    /// Total target iterations executed under tuning control (the
+    /// left-hand side of the paper's Eq. (1)/(2)).
+    pub fn target_iterations(&self) -> u64 {
+        self.target_iterations
+    }
+
+    /// The evaluation log (one entry per measured candidate).
+    pub fn history(&self) -> &[Sample] {
+        &self.history
+    }
+
+    /// Best (user-domain point, cost) measured so far.
+    pub fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.history
+            .iter()
+            .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+            .map(|s| (s.point.clone(), s.cost))
+    }
+
+    /// Final solution in the user domain (`None` until finished); not yet
+    /// rounded for any particular point type.
+    pub fn final_point(&self) -> Option<Vec<f64>> {
+        if self.is_finished() {
+            Some(
+                (0..self.dimension())
+                    .map(|d| self.rescale(d, self.final_internal[d]))
+                    .collect(),
+            )
+        } else {
+            None
+        }
+    }
+
+    /// Reset the auto-tuning (paper §2.2 levels: 0 = soft, ≥1 = hard).
+    /// Restarts the tuning phase; the history log is retained as a record.
+    pub fn reset(&mut self, level: u32) {
+        self.opt.reset(ResetLevel::from_level(level));
+        self.phase = Phase::Tuning;
+        self.candidate = None;
+        self.runs_left = self.ignore + 1;
+        self.timer = None;
+        if ResetLevel::from_level(level) == ResetLevel::Hard {
+            self.history.clear();
+            self.target_iterations = 0;
+        }
+    }
+
+    /// Optimizer name (for reports).
+    pub fn optimizer_name(&self) -> &'static str {
+        self.opt.name()
+    }
+
+    /// Print optimizer debug state (paper's optional `print`).
+    pub fn print(&self) {
+        self.opt.print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{GridSearch, NelderMead, NelderMeadConfig};
+
+    /// Quadratic cost in the *user* domain with minimum at `target`.
+    fn user_cost(point: &[i32], target: f64) -> f64 {
+        point.iter().map(|&p| (p as f64 - target).powi(2)).sum()
+    }
+
+    #[test]
+    fn eq1_target_iteration_law_csa() {
+        // Paper Eq. (1): num_eval = max_iter * (ignore + 1) * num_opt,
+        // where num_eval counts *target iterations* — experiment E3.
+        for &(ignore, num_opt, max_iter) in &[(0u32, 4usize, 5usize), (2, 3, 4), (1, 5, 6)] {
+            let mut at = Autotuning::new(1.0, 64.0, ignore, 1, num_opt, max_iter);
+            let mut chunk = [0i32; 1];
+            at.entire_exec(&mut chunk, |p| user_cost(p, 40.0));
+            assert_eq!(
+                at.target_iterations(),
+                (max_iter * (ignore as usize + 1) * num_opt) as u64,
+                "ignore={ignore} num_opt={num_opt} max_iter={max_iter}"
+            );
+        }
+    }
+
+    #[test]
+    fn eq2_target_iteration_law_nm() {
+        // Paper Eq. (2): num_eval = max_iter * (ignore + 1) — experiment E4.
+        for &(ignore, max_iter) in &[(0u32, 10usize), (2, 12), (3, 8)] {
+            let nm = NelderMead::new(NelderMeadConfig::new(1, 0.0, max_iter));
+            let mut at =
+                Autotuning::with_optimizer(vec![1.0], vec![64.0], ignore, Box::new(nm));
+            let mut chunk = [0i32; 1];
+            at.entire_exec(&mut chunk, |p| user_cost(p, 40.0) + 1.0);
+            assert_eq!(
+                at.target_iterations(),
+                (max_iter * (ignore as usize + 1)) as u64,
+                "ignore={ignore} max_iter={max_iter}"
+            );
+        }
+    }
+
+    #[test]
+    fn entire_exec_finds_minimum_integer_domain() {
+        let mut at = Autotuning::with_seed(1.0, 128.0, 0, 1, 5, 40, 7);
+        let mut chunk = [0i32; 1];
+        at.entire_exec(&mut chunk, |p| user_cost(p, 96.0));
+        assert!(at.is_finished());
+        assert!(
+            (chunk[0] - 96).abs() <= 8,
+            "tuned chunk {} too far from optimum 96",
+            chunk[0]
+        );
+    }
+
+    #[test]
+    fn points_respect_bounds_and_are_integers() {
+        let mut at = Autotuning::with_seed(1.0, 64.0, 1, 1, 4, 30, 3);
+        let mut chunk = [0i32; 1];
+        let mut seen = Vec::new();
+        at.entire_exec(&mut chunk, |p| {
+            seen.push(p[0]);
+            user_cost(p, 10.0)
+        });
+        assert!(!seen.is_empty());
+        for &c in &seen {
+            assert!((1..=64).contains(&c), "chunk {c} out of [1, 64]");
+        }
+    }
+
+    #[test]
+    fn ignore_discards_stabilisation_iterations() {
+        // With ignore = 2 every candidate runs 3 target iterations but only
+        // every third cost reaches the optimizer. Make the discarded ones
+        // absurdly expensive: if they leaked into the optimizer, tuning
+        // would diverge away from the optimum.
+        let mut call = 0u32;
+        let mut at = Autotuning::with_seed(1.0, 128.0, 2, 1, 4, 30, 11);
+        let mut chunk = [0i32; 1];
+        at.entire_exec(&mut chunk, |p| {
+            call += 1;
+            if call % 3 != 0 {
+                1e9 // stabilisation iteration: must be ignored
+            } else {
+                user_cost(p, 32.0)
+            }
+        });
+        assert!(at.is_finished());
+        assert!(
+            (chunk[0] - 32).abs() <= 13,
+            "ignored costs leaked into tuning: chunk {}",
+            chunk[0]
+        );
+        // Every evaluation consumed exactly ignore+1 target iterations.
+        assert_eq!(at.target_iterations(), at.evaluations() * 3);
+    }
+
+    #[test]
+    fn single_exec_converges_then_bypasses() {
+        // Single-Iteration mode (Fig. 1a): tuning happens inside the
+        // application loop; after convergence the optimizer is bypassed.
+        let mut at = Autotuning::with_seed(1.0, 64.0, 0, 1, 4, 10, 5);
+        let mut chunk = [0i32; 1];
+        let mut app_iters = 0u32;
+        // A "main loop" much longer than the tuning budget.
+        for _ in 0..200 {
+            at.single_exec(&mut chunk, |p| {
+                app_iters += 1;
+                (user_cost(p, 20.0), ())
+            });
+        }
+        assert!(at.is_finished());
+        // The application ran every single time (tuning added no extra
+        // target iterations — the paper's "minimal overhead" claim)...
+        assert_eq!(app_iters, 200);
+        // ...and tuning consumed only the first num_eval of them.
+        assert_eq!(at.target_iterations(), 40);
+        // After convergence the written chunk is frozen at the final value.
+        let frozen = chunk[0];
+        at.single_exec(&mut chunk, |_| (0.0, ()));
+        assert_eq!(chunk[0], frozen);
+    }
+
+    #[test]
+    fn single_exec_runtime_measures_and_returns_value() {
+        let mut at = Autotuning::with_seed(1.0, 8.0, 0, 1, 2, 3, 9);
+        let mut chunk = [0i32; 1];
+        let mut total = 0.0f64;
+        for i in 0..20 {
+            let r = at.single_exec_runtime(&mut chunk, |p| {
+                // Busy-wait proportional to |chunk - 5| so the tuner has a
+                // real wall-clock signal; return a value like Alg. 6 does.
+                let work = 200 * (1 + (p[0] - 5).unsigned_abs() as u64);
+                let t0 = Instant::now();
+                let mut acc = 0u64;
+                while acc < work {
+                    acc += 1;
+                    std::hint::black_box(acc);
+                }
+                let _ = t0;
+                i as f64
+            });
+            total += r;
+        }
+        assert!(at.is_finished());
+        assert_eq!(total, (0..20).map(|i| i as f64).sum::<f64>());
+        assert!(!at.history().is_empty());
+    }
+
+    #[test]
+    fn start_end_manual_boundaries() {
+        let mut at = Autotuning::with_seed(1.0, 16.0, 0, 1, 2, 4, 13);
+        let mut chunk = [0i32; 1];
+        while !at.is_finished() {
+            at.start(&mut chunk);
+            std::hint::black_box(chunk[0]);
+            at.end();
+        }
+        // end() after convergence is a harmless no-op.
+        at.start(&mut chunk);
+        at.end();
+        at.end();
+        assert!(at.is_finished());
+        assert_eq!(at.evaluations(), 8); // 2 chains × 4 iterations
+    }
+
+    #[test]
+    fn exec_first_cost_is_ignored() {
+        // The first exec call's cost must not reach the optimizer
+        // (contract of §2.2/§2.4: cost belongs to the *last returned*
+        // solution, and nothing was returned yet).
+        let mut at = Autotuning::with_seed(0.0, 1.0, 0, 1, 2, 3, 17);
+        let mut p = [0.0f64; 1];
+        at.exec(&mut p, f64::MAX); // garbage cost, must be dropped
+        assert_eq!(at.evaluations(), 0);
+        at.exec(&mut p, 1.0);
+        assert_eq!(at.evaluations(), 1);
+    }
+
+    #[test]
+    fn float_points_are_not_rounded() {
+        let mut at = Autotuning::with_seed(0.0, 1.0, 0, 1, 3, 10, 19);
+        let mut p = [0.0f64; 1];
+        let mut saw_fractional = false;
+        at.entire_exec(&mut p, |x| {
+            if x[0].fract() != 0.0 {
+                saw_fractional = true;
+            }
+            (x[0] - 0.5).powi(2)
+        });
+        assert!(saw_fractional, "float domain was quantised");
+        assert!((0.0..=1.0).contains(&p[0]));
+    }
+
+    #[test]
+    fn grid_search_tuner_is_exhaustive() {
+        // Grid over [1, 8] with 8 points per dim == exhaustive integer scan.
+        let gs = GridSearch::new(1, 8);
+        let mut at = Autotuning::with_optimizer(vec![1.0], vec![8.0], 0, Box::new(gs));
+        let mut chunk = [0i32; 1];
+        let mut tested = Vec::new();
+        at.entire_exec(&mut chunk, |p| {
+            tested.push(p[0]);
+            (p[0] as f64 - 6.0).abs()
+        });
+        assert_eq!(tested, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(chunk[0], 6, "exhaustive scan must find the exact optimum");
+    }
+
+    #[test]
+    fn reset_retunes_after_context_change() {
+        // RTM use case (E9): tune for one phase, context changes, soft
+        // reset, tune again — final solution must track the new optimum.
+        let mut at = Autotuning::with_seed(1.0, 64.0, 0, 1, 4, 25, 23);
+        let mut chunk = [0i32; 1];
+        at.entire_exec(&mut chunk, |p| user_cost(p, 8.0));
+        let first = chunk[0];
+        assert!((first - 8).abs() <= 6, "phase-1 chunk {first}");
+
+        at.reset(0);
+        assert!(!at.is_finished());
+        at.entire_exec(&mut chunk, |p| user_cost(p, 56.0));
+        assert!(
+            (chunk[0] - 56).abs() <= 7,
+            "after reset chunk {} did not track new optimum 56",
+            chunk[0]
+        );
+    }
+
+    #[test]
+    fn hard_reset_clears_history() {
+        let mut at = Autotuning::with_seed(1.0, 16.0, 0, 1, 2, 3, 29);
+        let mut chunk = [0i32; 1];
+        at.entire_exec(&mut chunk, |p| user_cost(p, 4.0));
+        assert!(!at.history().is_empty());
+        at.reset(1);
+        assert!(at.history().is_empty());
+        assert_eq!(at.target_iterations(), 0);
+    }
+
+    #[test]
+    fn history_records_rounded_points() {
+        let mut at = Autotuning::with_seed(1.0, 32.0, 0, 1, 3, 8, 31);
+        let mut chunk = [0i32; 1];
+        at.entire_exec(&mut chunk, |p| user_cost(p, 16.0));
+        for s in at.history() {
+            assert_eq!(s.point[0].fract(), 0.0, "history has unrounded point");
+            assert!((1.0..=32.0).contains(&s.point[0]));
+        }
+    }
+
+    #[test]
+    fn best_returns_minimum_of_history() {
+        let mut at = Autotuning::with_seed(1.0, 64.0, 0, 1, 4, 20, 37);
+        let mut chunk = [0i32; 1];
+        at.entire_exec(&mut chunk, |p| user_cost(p, 48.0));
+        let (bp, bc) = at.best().unwrap();
+        for s in at.history() {
+            assert!(s.cost >= bc);
+        }
+        assert!((bp[0] - 48.0).abs() <= 16.0);
+    }
+
+    #[test]
+    fn multidimensional_tuning() {
+        // Two chunk parameters (the paper's two-loop RB variant).
+        let mut at = Autotuning::with_seed(1.0, 64.0, 0, 2, 5, 50, 41);
+        let mut chunk = [0i32; 2];
+        at.entire_exec(&mut chunk, |p| {
+            (p[0] as f64 - 12.0).powi(2) + (p[1] as f64 - 50.0).powi(2)
+        });
+        assert!((chunk[0] - 12).abs() <= 8, "{chunk:?}");
+        assert!((chunk[1] - 50).abs() <= 8, "{chunk:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "point buffer/dimension mismatch")]
+    fn dimension_mismatch_panics() {
+        let mut at = Autotuning::new(1.0, 8.0, 0, 2, 2, 2);
+        let mut chunk = [0i32; 1]; // wrong: dim is 2
+        at.start(&mut chunk);
+    }
+
+    #[test]
+    #[should_panic(expected = "min")]
+    fn inverted_bounds_panic() {
+        let _ = Autotuning::with_optimizer(
+            vec![10.0],
+            vec![1.0],
+            0,
+            Box::new(GridSearch::new(1, 4)),
+        );
+    }
+
+    #[test]
+    fn degenerate_bounds_pin_parameter() {
+        let mut at = Autotuning::with_seed(7.0, 7.0, 0, 1, 2, 3, 43);
+        let mut chunk = [0i32; 1];
+        at.entire_exec(&mut chunk, |p| p[0] as f64);
+        assert_eq!(chunk[0], 7);
+    }
+}

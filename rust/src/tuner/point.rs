@@ -1,0 +1,98 @@
+//! Point-type abstraction.
+//!
+//! The paper's execution methods are templates over the point type
+//! (`exec<double>(point, cost)`, §2.4), "restricted to integer or
+//! floating-point arithmetic types". [`PointValue`] is the Rust equivalent:
+//! the tuner works internally in `f64` and converts at the API boundary,
+//! rounding for integer types.
+
+/// A scalar the tuner can hand to the application (paper: int or
+/// floating-point arithmetic types).
+pub trait PointValue: Copy + PartialEq + std::fmt::Debug + Send + 'static {
+    /// Whether rescaled solutions must be rounded to the nearest integer.
+    const IS_INTEGER: bool;
+
+    /// Convert from the tuner's internal `f64` (already rescaled to the
+    /// user domain). Integer types round half-up and saturate.
+    fn from_f64(x: f64) -> Self;
+
+    /// Convert to `f64` for bookkeeping and reports.
+    fn to_f64(self) -> f64;
+}
+
+macro_rules! impl_point_int {
+    ($($t:ty),*) => {$(
+        impl PointValue for $t {
+            const IS_INTEGER: bool = true;
+            #[inline]
+            fn from_f64(x: f64) -> Self {
+                let r = x.round();
+                if r >= <$t>::MAX as f64 {
+                    <$t>::MAX
+                } else if r <= <$t>::MIN as f64 {
+                    <$t>::MIN
+                } else {
+                    r as $t
+                }
+            }
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+        }
+    )*};
+}
+
+macro_rules! impl_point_float {
+    ($($t:ty),*) => {$(
+        impl PointValue for $t {
+            const IS_INTEGER: bool = false;
+            #[inline]
+            fn from_f64(x: f64) -> Self {
+                x as $t
+            }
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+        }
+    )*};
+}
+
+impl_point_int!(i32, i64, u32, u64, usize);
+impl_point_float!(f32, f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_rounding() {
+        assert_eq!(i32::from_f64(2.4), 2);
+        assert_eq!(i32::from_f64(2.5), 3);
+        assert_eq!(i32::from_f64(-2.5), -3); // round half away from zero
+        assert_eq!(usize::from_f64(7.9), 8);
+    }
+
+    #[test]
+    fn integer_saturation() {
+        assert_eq!(i32::from_f64(1e300), i32::MAX);
+        assert_eq!(i32::from_f64(-1e300), i32::MIN);
+        assert_eq!(u32::from_f64(-5.0), u32::MIN);
+    }
+
+    #[test]
+    fn float_passthrough() {
+        assert_eq!(f64::from_f64(3.25), 3.25);
+        assert_eq!(f32::from_f64(3.25), 3.25f32);
+        assert!(!f64::IS_INTEGER);
+        assert!(i64::IS_INTEGER);
+    }
+
+    #[test]
+    fn roundtrip() {
+        for v in [-100i64, -1, 0, 1, 42, 1_000_000] {
+            assert_eq!(i64::from_f64(v.to_f64()), v);
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Direct 2-D convolution — the second related-work workload ([5–7] all
+//! tune convolutions).
+//!
+//! `out = img ⊛ kernel` (valid padding) with the output-row loop under
+//! `Dynamic(chunk)`. Uniform per-row cost makes this the *contention-
+//! dominated* counterpart to [`super::spmv`]: the best chunk is usually
+//! large, and tiny chunks visibly pay for the shared-counter traffic —
+//! the opposite corner of the trade-off space from the imbalanced SpMV.
+
+use super::Workload;
+use crate::rng::Xoshiro256pp;
+use crate::sched::{Schedule, ThreadPool};
+
+/// Direct 2-D convolution workload (see module docs).
+pub struct Conv2d {
+    h: usize,
+    w: usize,
+    k: usize,
+    img: Vec<f32>,
+    kernel: Vec<f32>,
+    out: Vec<f32>,
+    pool: &'static ThreadPool,
+}
+
+impl Conv2d {
+    /// `h × w` image with a `k × k` kernel (k odd, k ≤ min(h, w)).
+    pub fn new(h: usize, w: usize, k: usize, pool: &'static ThreadPool) -> Self {
+        assert!(k % 2 == 1, "kernel must be odd");
+        assert!(k <= h && k <= w, "kernel larger than image");
+        let mut rng = Xoshiro256pp::new(0xC0_11F0);
+        let img = (0..h * w).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        // A Gaussian-ish separable bump, normalised.
+        let mut kernel: Vec<f32> = (0..k * k)
+            .map(|i| {
+                let y = (i / k) as f32 - (k / 2) as f32;
+                let x = (i % k) as f32 - (k / 2) as f32;
+                (-(x * x + y * y) / (k as f32)).exp()
+            })
+            .collect();
+        let s: f32 = kernel.iter().sum();
+        kernel.iter_mut().for_each(|v| *v /= s);
+        let oh = h - k + 1;
+        let ow = w - k + 1;
+        Self {
+            h,
+            w,
+            k,
+            img,
+            kernel,
+            out: vec![0.0; oh * ow],
+            pool,
+        }
+    }
+
+    /// Default-pool constructor.
+    pub fn with_size(h: usize, w: usize, k: usize) -> Self {
+        Self::new(h, w, k, super::default_pool())
+    }
+
+    /// Output dimensions.
+    pub fn out_dims(&self) -> (usize, usize) {
+        (self.h - self.k + 1, self.w - self.k + 1)
+    }
+
+    /// One convolution with the row loop under `Dynamic(chunk)`; returns a
+    /// checksum.
+    pub fn convolve(&mut self, chunk: usize) -> f64 {
+        let (oh, ow) = self.out_dims();
+        let (w, k) = (self.w, self.k);
+        let img = crate::ptr::SharedConst::new(self.img.as_ptr());
+        let ker = crate::ptr::SharedConst::new(self.kernel.as_ptr());
+        let out = crate::ptr::SharedMut::new(self.out.as_mut_ptr());
+        self.pool
+            .parallel_for_blocks(0, oh, Schedule::Dynamic(chunk.max(1)), |rows| {
+                let img = img.at(0);
+                let ker = ker.at(0);
+                for oy in rows {
+                    // SAFETY: output row oy written by exactly one claim.
+                    let orow = unsafe { std::slice::from_raw_parts_mut(out.at(oy * ow), ow) };
+                    for (ox, o) in orow.iter_mut().enumerate() {
+                        let mut acc = 0.0f32;
+                        for ky in 0..k {
+                            let irow = unsafe { img.add((oy + ky) * w + ox) };
+                            let krow = unsafe { ker.add(ky * k) };
+                            for kx in 0..k {
+                                acc += unsafe { *irow.add(kx) * *krow.add(kx) };
+                            }
+                        }
+                        *o = acc;
+                    }
+                }
+            });
+        self.checksum()
+    }
+
+    /// Sequential oracle.
+    pub fn convolve_sequential(&mut self) -> f64 {
+        let (oh, ow) = self.out_dims();
+        let (w, k) = (self.w, self.k);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0.0f32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        acc += self.img[(oy + ky) * w + ox + kx] * self.kernel[ky * k + kx];
+                    }
+                }
+                self.out[oy * ow + ox] = acc;
+            }
+        }
+        self.checksum()
+    }
+
+    fn checksum(&self) -> f64 {
+        self.out.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Output access.
+    pub fn output(&self) -> &[f32] {
+        &self.out
+    }
+}
+
+impl Workload for Conv2d {
+    fn name(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        let (oh, _) = self.out_dims();
+        (vec![1.0], vec![oh as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        self.convolve(params[0].max(1) as usize)
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        let cp = self.convolve(3);
+        let par = self.out.clone();
+        let cs = self.convolve_sequential();
+        for (i, (a, b)) in par.iter().zip(self.out.iter()).enumerate() {
+            if a != b {
+                return Err(format!("out[{i}]: {a} != {b}"));
+            }
+        }
+        if cp != cs {
+            return Err(format!("checksum {cp} != {cs}"));
+        }
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        self.out.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ThreadPool;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let mut w = Conv2d::new(40, 36, 5, pool());
+        w.verify().expect("verify failed");
+    }
+
+    #[test]
+    fn identical_across_chunks() {
+        let mut a = Conv2d::new(32, 32, 3, pool());
+        let mut b = Conv2d::new(32, 32, 3, pool());
+        assert_eq!(a.convolve(1), b.convolve(10));
+        assert_eq!(a.output(), b.output());
+    }
+
+    #[test]
+    fn normalised_kernel_preserves_constant() {
+        let mut w = Conv2d::new(16, 16, 3, pool());
+        w.img.iter_mut().for_each(|v| *v = 2.0);
+        w.convolve(2);
+        for &v in w.output() {
+            assert!((v - 2.0).abs() < 1e-5, "{v}");
+        }
+    }
+
+    #[test]
+    fn out_dims_valid_padding() {
+        let w = Conv2d::new(20, 30, 5, pool());
+        assert_eq!(w.out_dims(), (16, 26));
+    }
+
+    #[test]
+    #[should_panic(expected = "odd")]
+    fn even_kernel_rejected() {
+        let _ = Conv2d::new(16, 16, 4, pool());
+    }
+}

@@ -1,0 +1,466 @@
+//! 3-D acoustic wave propagation by finite differences — the workload of
+//! the paper's validation studies [10, 11] (Barros et al. 2018, Fernandes
+//! et al. 2018: "Auto-tuning of 3D acoustic wave propagation in shared
+//! memory environments").
+//!
+//! Second-order leapfrog in time, 8th-order centred stencil in space:
+//!
+//! ```text
+//! p_next = 2 p - p_prev + v² dt² ∇²p + s(t) δ(x − x_src)
+//! ```
+//!
+//! with a Ricker-wavelet source and an absorbing sponge (exponential taper)
+//! on all faces — the standard seismic-modelling kernel. The substitution
+//! for the papers' proprietary velocity models is a layered synthetic model
+//! (see DESIGN.md §6): scheduling behaviour depends on the loop structure,
+//! not the velocity values.
+//!
+//! The tuned parameter is the `Dynamic(chunk)` granularity of the parallel
+//! loop over `z`-planes, exactly as in [10, 11] (their OpenMP collapse over
+//! the outer dimension).
+
+use super::Workload;
+use crate::sched::{Schedule, ThreadPool};
+
+/// 8th-order centred second-derivative coefficients (c0, c1, .., c4).
+const C: [f32; 5] = [
+    -205.0 / 72.0,
+    8.0 / 5.0,
+    -1.0 / 5.0,
+    8.0 / 315.0,
+    -1.0 / 560.0,
+];
+
+/// Stencil radius.
+const R: usize = 4;
+
+/// 3-D acoustic FDM propagator (see module docs).
+pub struct Fdm3d {
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    /// `v² dt² / h²` per cell (pre-multiplied Courant factor).
+    vfact: Vec<f32>,
+    /// Sponge damping multiplier per cell (1 in the interior).
+    damp: Vec<f32>,
+    /// Wavefields: previous and current time level.
+    p_prev: Vec<f32>,
+    p_curr: Vec<f32>,
+    /// Current time-step index.
+    step: u64,
+    /// Source position (flattened index).
+    src_idx: usize,
+    /// Ricker peak frequency in units of 1/steps.
+    src_freq: f64,
+    pool: &'static ThreadPool,
+}
+
+impl Fdm3d {
+    /// Build a propagator over an `nx × ny × nz` grid (all ≥ `2R + 1`) on
+    /// the given pool.
+    pub fn new(nx: usize, ny: usize, nz: usize, pool: &'static ThreadPool) -> Self {
+        assert!(nx > 2 * R && ny > 2 * R && nz > 2 * R, "grid too small");
+        let mut w = Self {
+            nx,
+            ny,
+            nz,
+            vfact: Vec::new(),
+            damp: Vec::new(),
+            p_prev: Vec::new(),
+            p_curr: Vec::new(),
+            step: 0,
+            src_idx: 0,
+            src_freq: 0.04,
+            pool,
+        };
+        w.build_model();
+        w.reset_state();
+        w
+    }
+
+    /// Default-pool constructor.
+    pub fn with_size(nx: usize, ny: usize, nz: usize) -> Self {
+        Self::new(nx, ny, nz, super::default_pool())
+    }
+
+    #[inline]
+    fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.ny + y) * self.nx + x
+    }
+
+    /// Number of cells.
+    pub fn cells(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    /// Layered velocity model (three layers + a dipping fast block) and an
+    /// exponential sponge taper, mirroring the structure of the papers'
+    /// seismic models.
+    fn build_model(&mut self) {
+        let (nx, ny, nz) = (self.nx, self.ny, self.nz);
+        let n = nx * ny * nz;
+        let mut vfact = vec![0.0f32; n];
+        // Stability: v_max dt / h <= 0.3 in 3-D 8th order; fold everything
+        // into vfact = (v dt / h)^2 with v in [1500, 4500] m/s scaled.
+        let courant_slow = 0.12f32;
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let depth_frac = z as f32 / nz as f32;
+                    // Layers: slow, medium, fast with a dipping interface.
+                    let dip = (x as f32 / nx as f32) * 0.15;
+                    let mut c = if depth_frac < 0.3 + dip {
+                        courant_slow
+                    } else if depth_frac < 0.6 + dip {
+                        courant_slow * 1.8
+                    } else {
+                        courant_slow * 2.6
+                    };
+                    c = c.min(0.34);
+                    vfact[self.idx_raw(nx, ny, x, y, z)] = c * c;
+                }
+            }
+        }
+        // Sponge: exponential decay over `taper` cells from each face.
+        let taper = (nx.min(ny).min(nz) / 8).max(R + 1);
+        let alpha = 0.015f32;
+        let mut damp = vec![1.0f32; n];
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let dx = x.min(nx - 1 - x);
+                    let dy = y.min(ny - 1 - y);
+                    let dz = z.min(nz - 1 - z);
+                    let d = dx.min(dy).min(dz);
+                    if d < taper {
+                        let w = (taper - d) as f32;
+                        damp[self.idx_raw(nx, ny, x, y, z)] = (-alpha * w * w / taper as f32).exp();
+                    }
+                }
+            }
+        }
+        self.vfact = vfact;
+        self.damp = damp;
+        self.src_idx = self.idx_raw(nx, ny, nx / 2, ny / 2, nz / 4);
+    }
+
+    #[inline]
+    fn idx_raw(&self, nx: usize, ny: usize, x: usize, y: usize, z: usize) -> usize {
+        (z * ny + y) * nx + x
+    }
+
+    /// Ricker wavelet value at the given step.
+    fn ricker(&self, step: u64) -> f32 {
+        let t = step as f64 * self.src_freq - 1.5;
+        let a = std::f64::consts::PI * std::f64::consts::PI * t * t;
+        ((1.0 - 2.0 * a) * (-a).exp()) as f32
+    }
+
+    /// One leapfrog time-step with the z-plane loop under `sched`.
+    /// Returns the L2 energy of the new wavefield (the application value).
+    pub fn step_schedule(&mut self, sched: Schedule) -> f64 {
+        let (nx, ny, nz) = (self.nx, self.ny, self.nz);
+        let src = self.ricker(self.step);
+        let stride_y = nx;
+        let stride_z = nx * ny;
+        // p_next is computed into p_prev's buffer (classic double-buffer):
+        // p_next = 2 p - p_prev + vfact * lap(p), then swap roles.
+        let p = crate::ptr::SharedConst::new(self.p_curr.as_ptr());
+        let pq = crate::ptr::SharedMut::new(self.p_prev.as_mut_ptr());
+        let vf = crate::ptr::SharedConst::new(self.vfact.as_ptr());
+        let dampp = crate::ptr::SharedConst::new(self.damp.as_ptr());
+        let src_idx = self.src_idx;
+        // Per-plane energies for a deterministic reduction.
+        let mut plane_energy = vec![0.0f64; nz];
+        let pe = crate::ptr::SharedMut::new(plane_energy.as_mut_ptr());
+        self.pool.parallel_for_blocks(R, nz - R, sched, |planes| {
+            let p = p.at(0);
+            let q = pq.ptr();
+            let vf = vf.at(0);
+            let dampp = dampp.at(0);
+            for z in planes {
+                let mut acc = 0.0f64;
+                for y in R..ny - R {
+                    let row = (z * ny + y) * nx;
+                    for x in R..nx - R {
+                        let i = row + x;
+                        // SAFETY: each (x,y,z) interior cell is written by
+                        // exactly one iteration; reads of `p` are shared and
+                        // immutable this step; q[i] read-then-write is local
+                        // to this iteration.
+                        unsafe {
+                            let c0 = *p.add(i);
+                            let mut lap = 3.0 * C[0] * c0;
+                            // x, y, z axes, orders 1..=4.
+                            for r in 1..=R {
+                                lap += C[r]
+                                    * (*p.add(i + r)
+                                        + *p.add(i - r)
+                                        + *p.add(i + r * stride_y)
+                                        + *p.add(i - r * stride_y)
+                                        + *p.add(i + r * stride_z)
+                                        + *p.add(i - r * stride_z));
+                            }
+                            let mut new = 2.0 * c0 - *q.add(i) + *vf.add(i) * lap;
+                            if i == src_idx {
+                                new += src;
+                            }
+                            new *= *dampp.add(i);
+                            *q.add(i) = new;
+                            acc += (new as f64) * (new as f64);
+                        }
+                    }
+                }
+                unsafe {
+                    *pe.at(z) = acc;
+                }
+            }
+        });
+        std::mem::swap(&mut self.p_prev, &mut self.p_curr);
+        self.step += 1;
+        plane_energy.iter().sum()
+    }
+
+    /// One time-step with `Dynamic(chunk)` over z-planes (the tuned form).
+    pub fn step_chunk(&mut self, chunk: usize) -> f64 {
+        self.step_schedule(Schedule::Dynamic(chunk.max(1)))
+    }
+
+    /// Sequential oracle time-step (identical arithmetic, plain loops).
+    pub fn step_sequential(&mut self) -> f64 {
+        let (nx, ny, nz) = (self.nx, self.ny, self.nz);
+        let src = self.ricker(self.step);
+        let stride_y = nx;
+        let stride_z = nx * ny;
+        let mut energy = 0.0f64;
+        for z in R..nz - R {
+            let mut acc = 0.0f64;
+            for y in R..ny - R {
+                let row = (z * ny + y) * nx;
+                for x in R..nx - R {
+                    let i = row + x;
+                    let c0 = self.p_curr[i];
+                    let mut lap = 3.0 * C[0] * c0;
+                    for r in 1..=R {
+                        lap += C[r]
+                            * (self.p_curr[i + r]
+                                + self.p_curr[i - r]
+                                + self.p_curr[i + r * stride_y]
+                                + self.p_curr[i - r * stride_y]
+                                + self.p_curr[i + r * stride_z]
+                                + self.p_curr[i - r * stride_z]);
+                    }
+                    let mut new = 2.0 * c0 - self.p_prev[i] + self.vfact[i] * lap;
+                    if i == self.src_idx {
+                        new += src;
+                    }
+                    new *= self.damp[i];
+                    self.p_prev[i] = new;
+                    acc += (new as f64) * (new as f64);
+                }
+            }
+            energy += acc;
+        }
+        std::mem::swap(&mut self.p_prev, &mut self.p_curr);
+        self.step += 1;
+        energy
+    }
+
+    /// Read access to the current wavefield.
+    pub fn wavefield(&self) -> &[f32] {
+        &self.p_curr
+    }
+
+    /// Record the wavefield value at a surface receiver line
+    /// (z = R plane, y = ny/2), used by RTM.
+    pub fn record_receivers(&self, out: &mut [f32]) {
+        let y = self.ny / 2;
+        for (r, o) in out.iter_mut().enumerate() {
+            let x = R + r;
+            if x < self.nx - R {
+                *o = self.p_curr[self.idx(x, y, R)];
+            }
+        }
+    }
+
+    /// Inject values (adjoint source) at the receiver line — the backward
+    /// pass of RTM.
+    pub fn inject_receivers(&mut self, values: &[f32]) {
+        let y = self.ny / 2;
+        for (r, &v) in values.iter().enumerate() {
+            let x = R + r;
+            if x < self.nx - R {
+                let i = self.idx(x, y, R);
+                self.p_curr[i] += v;
+            }
+        }
+    }
+
+    /// Number of receivers on the surface line.
+    pub fn num_receivers(&self) -> usize {
+        self.nx - 2 * R
+    }
+
+    /// Current step index.
+    pub fn step_index(&self) -> u64 {
+        self.step
+    }
+
+    /// Grid dimensions.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.nx, self.ny, self.nz)
+    }
+}
+
+impl Workload for Fdm3d {
+    fn name(&self) -> &'static str {
+        "fdm3d"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        // chunk in [1, interior z-planes].
+        (vec![1.0], vec![(self.nz - 2 * R) as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        self.step_chunk(params[0].max(1) as usize)
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        self.reset_state();
+        let mut seq = Fdm3d::new(self.nx, self.ny, self.nz, self.pool);
+        for step in 0..5 {
+            let ep = self.step_chunk(3);
+            let es = seq.step_sequential();
+            if (ep - es).abs() > 1e-9 * es.abs().max(1e-30) {
+                return Err(format!("step {step}: energy {ep} != {es}"));
+            }
+        }
+        for (i, (a, b)) in self.p_curr.iter().zip(seq.p_curr.iter()).enumerate() {
+            if a != b {
+                return Err(format!("wavefield[{i}]: {a} != {b}"));
+            }
+        }
+        self.reset_state();
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        let n = self.cells();
+        self.p_prev = vec![0.0; n];
+        self.p_curr = vec![0.0; n];
+        self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ThreadPool;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    fn small() -> Fdm3d {
+        Fdm3d::new(24, 20, 28, pool())
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let mut w = small();
+        w.verify().expect("verification failed");
+    }
+
+    #[test]
+    fn identical_across_chunks() {
+        let mut a = small();
+        let mut b = small();
+        for _ in 0..4 {
+            let ea = a.step_chunk(1);
+            let eb = b.step_chunk(7);
+            assert_eq!(ea, eb);
+        }
+        assert_eq!(a.wavefield(), b.wavefield());
+    }
+
+    #[test]
+    fn source_injects_energy() {
+        let mut w = small();
+        let mut e = 0.0;
+        for _ in 0..20 {
+            e = w.step_chunk(2);
+        }
+        assert!(e > 0.0, "no energy after 20 steps");
+    }
+
+    #[test]
+    fn stability_over_many_steps() {
+        // With the chosen Courant factors the scheme must not blow up.
+        let mut w = small();
+        let mut peak: f64 = 0.0;
+        for _ in 0..150 {
+            let e = w.step_chunk(4);
+            peak = peak.max(e);
+            assert!(e.is_finite(), "energy went non-finite");
+        }
+        let final_e = w.step_chunk(4);
+        assert!(
+            final_e < peak * 10.0,
+            "instability: final {final_e} vs peak {peak}"
+        );
+    }
+
+    #[test]
+    fn sponge_absorbs_at_boundaries() {
+        let mut w = small();
+        for _ in 0..120 {
+            w.step_chunk(4);
+        }
+        // Corners (inside the stencil ring) should stay tiny relative to
+        // the interior peak.
+        let (nx, ny, _) = w.dims();
+        let corner = w.wavefield()[(R * ny + R) * nx + R].abs();
+        let center = w.wavefield()[w.src_idx].abs();
+        assert!(
+            corner < center.max(1e-6),
+            "sponge ineffective: corner {corner} centre {center}"
+        );
+    }
+
+    #[test]
+    fn receivers_record_something() {
+        let mut w = small();
+        for _ in 0..60 {
+            w.step_chunk(4);
+        }
+        let mut rec = vec![0.0f32; w.num_receivers()];
+        w.record_receivers(&mut rec);
+        assert!(rec.iter().any(|&v| v != 0.0), "silent receivers");
+    }
+
+    #[test]
+    fn reset_clears_wavefield() {
+        let mut w = small();
+        for _ in 0..10 {
+            w.step_chunk(2);
+        }
+        w.reset_state();
+        assert!(w.wavefield().iter().all(|&v| v == 0.0));
+        assert_eq!(w.step_index(), 0);
+    }
+
+    #[test]
+    fn workload_bounds_sane() {
+        let w = small();
+        let (lo, hi) = w.bounds();
+        assert_eq!(lo[0], 1.0);
+        assert_eq!(hi[0], (28 - 2 * R) as f64);
+    }
+}

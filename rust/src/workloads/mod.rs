@@ -1,0 +1,59 @@
+//! Shared-memory workloads — the applications PATSMA tunes.
+//!
+//! Each workload is an iterative method with one or more performance
+//! parameters (canonically the `Dynamic(chunk)` loop-scheduling chunk) and a
+//! sequential oracle for correctness:
+//!
+//! | module | paper role |
+//! |---|---|
+//! | [`rb_gauss_seidel`] | the paper's §3 running example (Alg. 4–6) |
+//! | [`fdm3d`] | 3-D acoustic FDM wave propagation (refs [10, 11]) |
+//! | [`rtm`] | 3-D reverse time migration (refs [12, 13]) |
+//! | [`matmul`] | blocked matrix multiply (related-work workload [5–7]) |
+//! | [`conv2d`] | 2-D convolution (related-work workload [5–7]) |
+//! | [`spmv`] | skewed CSR SpMV — the irregular workload where dynamic scheduling shines |
+//! | [`synthetic`] | closed-form cost landscapes for optimizer ground truth |
+
+pub mod conv2d;
+pub mod fdm3d;
+pub mod matmul;
+pub mod rb_gauss_seidel;
+pub mod rtm;
+pub mod spmv;
+pub mod synthetic;
+
+use crate::sched::ThreadPool;
+
+/// An iterative target method with tunable integer performance parameters.
+///
+/// `run_iteration` executes **one** target iteration (one sweep, one
+/// time-step, one multiply) with the given parameter values — the unit the
+/// tuner wraps with `start`/`end`. The returned value is the application's
+/// own output (residual, checksum), never used by the tuner in runtime mode.
+pub trait Workload {
+    /// Workload name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Number of tunable parameters.
+    fn dim(&self) -> usize;
+
+    /// Per-parameter inclusive bounds in the user domain.
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>);
+
+    /// Execute one target iteration with the given parameters.
+    fn run_iteration(&mut self, params: &[i32]) -> f64;
+
+    /// Check the parallel implementation against a sequential oracle;
+    /// returns a human-readable error on mismatch.
+    fn verify(&mut self) -> Result<(), String>;
+
+    /// Reset transient state so a fresh tuning run starts from identical
+    /// conditions (grids re-initialised, iteration counters zeroed).
+    fn reset_state(&mut self);
+}
+
+/// Shared helper: the pool every workload runs on (tests may inject their
+/// own pool through the workload constructors instead).
+pub fn default_pool() -> &'static ThreadPool {
+    ThreadPool::global()
+}

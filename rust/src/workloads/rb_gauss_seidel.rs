@@ -1,0 +1,340 @@
+//! Red–Black Gauss–Seidel — the paper's §3 running example (Alg. 4).
+//!
+//! Solves the Laplace equation on an `(n+2)²` grid with fixed boundary
+//! values by Gauss–Seidel relaxation, parallelised with the red–black
+//! colouring: cells are coloured like a checkerboard, all black cells are
+//! updated first (they only read red neighbours), then all red cells (they
+//! read the *updated* black neighbours). Cells of one colour have no mutual
+//! dependencies, so each colour's sweep is an embarrassingly parallel loop —
+//! which the paper schedules with `schedule(dynamic, chunk)` and lets
+//! PATSMA tune `chunk`.
+//!
+//! The parallel sweep is bitwise identical to the sequential oracle: within
+//! a colour every cell update reads only other-colour cells, so the
+//! iteration order cannot change the result. The per-sweep residual `diff`
+//! is accumulated per *row* into a preallocated buffer and reduced
+//! sequentially, keeping it deterministic under any schedule.
+
+use super::Workload;
+use crate::sched::{Schedule, ThreadPool};
+
+/// Red–Black Gauss–Seidel Laplace solver (paper Alg. 4).
+pub struct RbGaussSeidel {
+    /// Interior size `n` (grid is `(n+2) x (n+2)` with fixed borders).
+    n: usize,
+    /// Row-major grid, `(n+2) * (n+2)`.
+    grid: Vec<f64>,
+    /// Per-row |update| sums; reduced sequentially for a deterministic
+    /// residual.
+    row_diff: Vec<f64>,
+    pool: &'static ThreadPool,
+    /// Completed sweeps since the last reset.
+    sweeps: u64,
+}
+
+impl RbGaussSeidel {
+    /// Interior `n × n` problem on the given pool.
+    pub fn new(n: usize, pool: &'static ThreadPool) -> Self {
+        assert!(n >= 1);
+        let mut w = Self {
+            n,
+            grid: Vec::new(),
+            row_diff: vec![0.0; n + 2],
+            pool,
+            sweeps: 0,
+        };
+        w.reset_state();
+        w
+    }
+
+    /// Default-pool constructor.
+    pub fn with_size(n: usize) -> Self {
+        Self::new(n, super::default_pool())
+    }
+
+    /// Grid side including the boundary ring.
+    #[inline]
+    fn side(&self) -> usize {
+        self.n + 2
+    }
+
+    /// Initial condition: zero interior, "hot" top edge and linear ramps on
+    /// the sides — an asymmetric, well-conditioned Laplace problem.
+    fn init_grid(n: usize) -> Vec<f64> {
+        let side = n + 2;
+        let mut g = vec![0.0f64; side * side];
+        for j in 0..side {
+            g[j] = 100.0; // top edge (row 0)
+            g[(side - 1) * side + j] = 0.0; // bottom edge
+        }
+        for i in 0..side {
+            let frac = i as f64 / (side - 1) as f64;
+            g[i * side] = 100.0 * (1.0 - frac); // left ramp
+            g[i * side + side - 1] = 50.0 * (1.0 - frac); // right ramp
+        }
+        g
+    }
+
+    /// One colour's sweep over rows `1..=n` under the given schedule.
+    /// `colour` is the parity of `i + j` to update.
+    fn sweep_colour(&mut self, colour: usize, sched: Schedule) -> f64 {
+        let side = self.side();
+        let n = self.n;
+        self.row_diff[..].iter_mut().for_each(|d| *d = 0.0);
+        // Aliasing argument: rows of one colour only read cells of the
+        // other colour; writes are disjoint per (i, j) and reads never
+        // target a cell any other iteration writes.
+        let grid_ptr = crate::ptr::SharedMut::new(self.grid.as_mut_ptr());
+        let diff_ptr = crate::ptr::SharedMut::new(self.row_diff.as_mut_ptr());
+        self.pool.parallel_for_blocks(1, n + 1, sched, |rows| {
+            let g = grid_ptr.ptr();
+            let d = diff_ptr.ptr();
+            for i in rows {
+                let mut acc = 0.0;
+                // Cells in row i with (i + j) % 2 == colour.
+                let j0 = 1 + ((i + 1 + colour) % 2);
+                let mut j = j0;
+                while j <= n {
+                    let idx = i * side + j;
+                    // SAFETY: disjoint writes (unique (i,j) per iteration);
+                    // reads touch only other-colour cells, written in the
+                    // previous phase.
+                    unsafe {
+                        let old = *g.add(idx);
+                        let new = 0.25
+                            * (*g.add(idx - 1)
+                                + *g.add(idx + 1)
+                                + *g.add(idx - side)
+                                + *g.add(idx + side));
+                        *g.add(idx) = new;
+                        acc += (new - old).abs();
+                    }
+                    j += 2;
+                }
+                unsafe {
+                    *d.add(i) = acc;
+                }
+            }
+        });
+        self.row_diff.iter().sum()
+    }
+
+    /// One full red–black sweep (paper's `matrix_calculation`): black cells
+    /// then red cells, each under `Dynamic(chunk)`. Returns the residual.
+    pub fn sweep(&mut self, chunk: usize) -> f64 {
+        self.sweep_schedules(
+            Schedule::Dynamic(chunk.max(1)),
+            Schedule::Dynamic(chunk.max(1)),
+        )
+    }
+
+    /// Full sweep with independent schedules per colour (the paper's
+    /// two-chunk variant, §3).
+    pub fn sweep_schedules(&mut self, black: Schedule, red: Schedule) -> f64 {
+        let d1 = self.sweep_colour(0, black);
+        let d2 = self.sweep_colour(1, red);
+        self.sweeps += 1;
+        d1 + d2
+    }
+
+    /// Sequential reference sweep (the oracle).
+    pub fn sweep_sequential(&mut self) -> f64 {
+        let side = self.side();
+        let n = self.n;
+        let mut total = 0.0;
+        for colour in 0..2 {
+            for i in 1..=n {
+                let j0 = 1 + ((i + 1 + colour) % 2);
+                let mut j = j0;
+                let mut acc = 0.0;
+                while j <= n {
+                    let idx = i * side + j;
+                    let old = self.grid[idx];
+                    let new = 0.25
+                        * (self.grid[idx - 1]
+                            + self.grid[idx + 1]
+                            + self.grid[idx - side]
+                            + self.grid[idx + side]);
+                    self.grid[idx] = new;
+                    acc += (new - old).abs();
+                    j += 2;
+                }
+                total += acc;
+            }
+        }
+        self.sweeps += 1;
+        total
+    }
+
+    /// Borrow the grid (tests, imaging).
+    pub fn grid(&self) -> &[f64] {
+        &self.grid
+    }
+
+    /// Completed sweeps since the last reset.
+    pub fn sweeps(&self) -> u64 {
+        self.sweeps
+    }
+
+    /// Solve to convergence with a fixed chunk; returns (sweeps, residual).
+    pub fn solve(&mut self, chunk: usize, tol: f64, max_sweeps: u64) -> (u64, f64) {
+        let mut diff = f64::INFINITY;
+        let mut sweeps = 0;
+        while diff > tol && sweeps < max_sweeps {
+            diff = self.sweep(chunk);
+            sweeps += 1;
+        }
+        (sweeps, diff)
+    }
+}
+
+impl Workload for RbGaussSeidel {
+    fn name(&self) -> &'static str {
+        "rb-gauss-seidel"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        // chunk in [1, n]: one row per claim up to "all rows in one claim".
+        (vec![1.0], vec![self.n as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        self.sweep(params[0].max(1) as usize)
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        let mut seq = RbGaussSeidel::new(self.n, self.pool);
+        self.reset_state();
+        for sweep in 0..5 {
+            let dp = self.sweep(3);
+            let ds = seq.sweep_sequential();
+            if (dp - ds).abs() > 1e-9 * ds.abs().max(1.0) {
+                return Err(format!("sweep {sweep}: residual {dp} != {ds}"));
+            }
+        }
+        for (i, (a, b)) in self.grid.iter().zip(seq.grid.iter()).enumerate() {
+            if a != b {
+                return Err(format!("grid[{i}]: parallel {a} != sequential {b}"));
+            }
+        }
+        self.reset_state();
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        self.grid = Self::init_grid(self.n);
+        self.row_diff.iter_mut().for_each(|d| *d = 0.0);
+        self.sweeps = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ThreadPool;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let mut w = RbGaussSeidel::new(33, pool());
+        w.verify().expect("verification failed");
+    }
+
+    #[test]
+    fn verify_across_chunk_values() {
+        // The invariant behind the whole paper: the tuned parameter must
+        // not change the numerics, only the speed.
+        let mut ref_w = RbGaussSeidel::new(24, pool());
+        let mut ref_diffs = Vec::new();
+        for _ in 0..3 {
+            ref_diffs.push(ref_w.sweep_sequential());
+        }
+        for chunk in [1usize, 2, 5, 24, 100] {
+            let mut w = RbGaussSeidel::new(24, pool());
+            for (s, &rd) in ref_diffs.iter().enumerate() {
+                let d = w.sweep(chunk);
+                assert!(
+                    (d - rd).abs() < 1e-12,
+                    "chunk {chunk} sweep {s}: {d} vs {rd}"
+                );
+            }
+            assert_eq!(w.grid(), ref_w.grid(), "grid mismatch at chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn residual_decreases_monotonically_eventually() {
+        let mut w = RbGaussSeidel::new(16, pool());
+        let first = w.sweep(4);
+        let mut last = first;
+        for _ in 0..300 {
+            let d = w.sweep(4);
+            assert!(d <= last * 1.5, "residual exploding: {d} after {last}");
+            last = d;
+        }
+        assert!(
+            last < 0.05 * first,
+            "not converging: residual {last} vs initial {first}"
+        );
+    }
+
+    #[test]
+    fn solve_converges() {
+        let mut w = RbGaussSeidel::new(16, pool());
+        let (sweeps, diff) = w.solve(4, 1e-3, 10_000);
+        assert!(diff <= 1e-3, "diff {diff}");
+        assert!(sweeps < 10_000);
+        // Boundary must be untouched.
+        assert_eq!(w.grid()[0], 100.0);
+    }
+
+    #[test]
+    fn reset_state_restores_initial_conditions() {
+        let mut w = RbGaussSeidel::new(12, pool());
+        let initial = w.grid().to_vec();
+        let _ = w.sweep(2);
+        assert_ne!(w.grid(), &initial[..]);
+        w.reset_state();
+        assert_eq!(w.grid(), &initial[..]);
+        assert_eq!(w.sweeps(), 0);
+    }
+
+    #[test]
+    fn workload_trait_surface() {
+        let mut w = RbGaussSeidel::new(8, pool());
+        assert_eq!(w.dim(), 1);
+        let (lo, hi) = w.bounds();
+        assert_eq!(lo, vec![1.0]);
+        assert_eq!(hi, vec![8.0]);
+        let r = w.run_iteration(&[3]);
+        assert!(r.is_finite() && r > 0.0);
+    }
+
+    #[test]
+    fn degenerate_one_row_grid() {
+        let mut w = RbGaussSeidel::new(1, pool());
+        let d = w.sweep(1);
+        assert!(d.is_finite());
+    }
+
+    #[test]
+    fn two_schedule_variant_matches_single() {
+        let mut a = RbGaussSeidel::new(16, pool());
+        let mut b = RbGaussSeidel::new(16, pool());
+        for _ in 0..3 {
+            let da = a.sweep(4);
+            let db = b.sweep_schedules(Schedule::Dynamic(4), Schedule::Dynamic(4));
+            assert_eq!(da, db);
+        }
+        assert_eq!(a.grid(), b.grid());
+    }
+}

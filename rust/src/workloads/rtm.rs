@@ -1,0 +1,332 @@
+//! 3-D Reverse Time Migration — the workload of the paper's validation
+//! studies [12, 13] (Assis et al., IEEE Access 2020: "Auto-tuning of
+//! dynamic scheduling applied to 3D reverse time migration on multicore
+//! systems").
+//!
+//! RTM images subsurface reflectors by cross-correlating two wavefields:
+//!
+//! 1. **Forward pass** — propagate the source wavelet through a smooth
+//!    migration model, storing decimated snapshots of the wavefield;
+//! 2. **Backward pass** — propagate the recorded receiver data reversed in
+//!    time through the same model;
+//! 3. **Imaging condition** — `image(x) += src(x, t) · rcv(x, t)` at
+//!    matching times.
+//!
+//! The "observed" receiver data is synthesised by forward modelling
+//! (substitution for field data — DESIGN.md §6). Both passes run the same
+//! parallel z-plane loop as [`Fdm3d`], and — the key point of [12] — the
+//! two passes have *different* optimal chunks (the backward pass touches
+//! the snapshot arrays too, changing the memory traffic), so PATSMA's
+//! `reset` is used between phases. Experiment E9 reproduces this.
+
+use super::fdm3d::Fdm3d;
+use super::Workload;
+use crate::sched::ThreadPool;
+
+/// RTM phase selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Source-side forward propagation (records snapshots).
+    Forward,
+    /// Receiver-side backward propagation + imaging.
+    Backward,
+}
+
+/// 3-D RTM driver built on two [`Fdm3d`] propagators (see module docs).
+pub struct Rtm {
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    /// Total time-steps per pass.
+    steps: usize,
+    /// Snapshot decimation (store every `snap_every`-th source wavefield).
+    snap_every: usize,
+    /// Source propagator (forward pass).
+    fwd: Fdm3d,
+    /// Receiver propagator (backward pass).
+    bwd: Fdm3d,
+    /// Receiver traces from the synthetic observation run:
+    /// `steps × num_receivers`.
+    observed: Vec<Vec<f32>>,
+    /// Stored source snapshots (decimated), most recent last.
+    snapshots: Vec<(u64, Vec<f32>)>,
+    /// The migration image.
+    image: Vec<f64>,
+    /// Where we are in the current pass.
+    phase: Phase,
+    cursor: usize,
+    pool: &'static ThreadPool,
+}
+
+impl Rtm {
+    /// Build an RTM job over an `nx × ny × nz` grid with `steps` time-steps
+    /// per pass. The synthetic observed data is modelled immediately
+    /// (sequentially deterministic, chunk-independent).
+    pub fn new(
+        nx: usize,
+        ny: usize,
+        nz: usize,
+        steps: usize,
+        pool: &'static ThreadPool,
+    ) -> Self {
+        let mut fwd = Fdm3d::new(nx, ny, nz, pool);
+        let bwd = Fdm3d::new(nx, ny, nz, pool);
+        // Synthesise the "observed" shot record by forward modelling.
+        let nrec = fwd.num_receivers();
+        let mut observed = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            fwd.step_chunk(8);
+            let mut rec = vec![0.0f32; nrec];
+            fwd.record_receivers(&mut rec);
+            observed.push(rec);
+        }
+        fwd.reset_state();
+        let cells = nx * ny * nz;
+        Self {
+            nx,
+            ny,
+            nz,
+            steps,
+            snap_every: 4,
+            fwd,
+            bwd,
+            observed,
+            snapshots: Vec::new(),
+            image: vec![0.0; cells],
+            phase: Phase::Forward,
+            cursor: 0,
+            pool,
+        }
+    }
+
+    /// Default-pool constructor.
+    pub fn with_size(nx: usize, ny: usize, nz: usize, steps: usize) -> Self {
+        Self::new(nx, ny, nz, steps, super::default_pool())
+    }
+
+    /// Current phase.
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Steps completed in the current phase.
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Total steps per pass.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// True when both passes have completed.
+    pub fn is_complete(&self) -> bool {
+        self.phase == Phase::Backward && self.cursor >= self.steps
+    }
+
+    /// The migration image (valid after completion).
+    pub fn image(&self) -> &[f64] {
+        &self.image
+    }
+
+    /// Execute one time-step of the current phase with the given chunk;
+    /// advances phases automatically. Returns the step's field energy.
+    pub fn step_chunk(&mut self, chunk: usize) -> f64 {
+        match self.phase {
+            Phase::Forward => {
+                let e = self.fwd.step_chunk(chunk);
+                if self.cursor % self.snap_every == 0 {
+                    self.snapshots
+                        .push((self.fwd.step_index(), self.fwd.wavefield().to_vec()));
+                }
+                self.cursor += 1;
+                if self.cursor >= self.steps {
+                    self.phase = Phase::Backward;
+                    self.cursor = 0;
+                }
+                e
+            }
+            Phase::Backward => {
+                if self.cursor >= self.steps {
+                    return 0.0;
+                }
+                // Inject the observed trace reversed in time, then step.
+                let t_rev = self.steps - 1 - self.cursor;
+                let trace = self.observed[t_rev].clone();
+                self.bwd.inject_receivers(&trace);
+                let e = self.bwd.step_chunk(chunk);
+                // Imaging condition at snapshot times: the source wavefield
+                // at forward-time t_rev correlates with the receiver field
+                // holding data from the same physical time.
+                if t_rev % self.snap_every as usize == 0 {
+                    if let Some((_, snap)) = self
+                        .snapshots
+                        .iter()
+                        .find(|(s, _)| *s == (t_rev + 1) as u64)
+                    {
+                        let rcv = self.bwd.wavefield();
+                        let img = crate::ptr::SharedMut::new(self.image.as_mut_ptr());
+                        let s = crate::ptr::SharedConst::new(snap.as_ptr());
+                        let v = crate::ptr::SharedConst::new(rcv.as_ptr());
+                        let n = self.image.len();
+                        self.pool.parallel_for_blocks(
+                            0,
+                            n,
+                            crate::sched::Schedule::Static,
+                            |r| {
+                                for i in r {
+                                    // SAFETY: disjoint writes per index.
+                                    unsafe {
+                                        *img.at(i) +=
+                                            (s.read(i) as f64) * (v.read(i) as f64);
+                                    }
+                                }
+                            },
+                        );
+                    }
+                }
+                self.cursor += 1;
+                e
+            }
+        }
+    }
+
+    /// Run both passes to completion with fixed chunks; returns the image
+    /// L2 norm (used by tests and benches).
+    pub fn run_all(&mut self, fwd_chunk: usize, bwd_chunk: usize) -> f64 {
+        while self.phase == Phase::Forward {
+            self.step_chunk(fwd_chunk);
+        }
+        while !self.is_complete() {
+            self.step_chunk(bwd_chunk);
+        }
+        self.image_norm()
+    }
+
+    /// L2 norm of the migration image.
+    pub fn image_norm(&self) -> f64 {
+        self.image.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+impl Workload for Rtm {
+    fn name(&self) -> &'static str {
+        "rtm"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        (vec![1.0], vec![(self.nz - 8) as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        if self.is_complete() {
+            // Auto-restart so long tuning sessions always have work.
+            self.reset_state();
+        }
+        self.step_chunk(params[0].max(1) as usize)
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        // Chunk-independence of the final image: run the whole job twice
+        // with different chunks, demand bitwise-equal images.
+        let mut a = Rtm::new(self.nx, self.ny, self.nz, self.steps, self.pool);
+        let mut b = Rtm::new(self.nx, self.ny, self.nz, self.steps, self.pool);
+        let na = a.run_all(1, 5);
+        let nb = b.run_all(6, 2);
+        if a.image != b.image {
+            return Err("image differs across chunk values".into());
+        }
+        if na == 0.0 || nb == 0.0 {
+            return Err("empty image".into());
+        }
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        self.fwd.reset_state();
+        self.bwd.reset_state();
+        self.snapshots.clear();
+        self.image.iter_mut().for_each(|v| *v = 0.0);
+        self.phase = Phase::Forward;
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ThreadPool;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    fn small() -> Rtm {
+        Rtm::new(20, 16, 24, 24, pool())
+    }
+
+    #[test]
+    fn phases_advance_and_complete() {
+        let mut rtm = small();
+        assert_eq!(rtm.phase(), Phase::Forward);
+        for _ in 0..24 {
+            rtm.step_chunk(4);
+        }
+        assert_eq!(rtm.phase(), Phase::Backward);
+        for _ in 0..24 {
+            rtm.step_chunk(4);
+        }
+        assert!(rtm.is_complete());
+    }
+
+    #[test]
+    fn image_nonzero_after_run() {
+        let mut rtm = small();
+        let norm = rtm.run_all(4, 4);
+        assert!(norm > 0.0, "empty migration image");
+    }
+
+    #[test]
+    fn image_chunk_independent() {
+        let mut rtm = small();
+        rtm.verify().expect("image depends on chunk");
+    }
+
+    #[test]
+    fn reset_restores_forward_phase() {
+        let mut rtm = small();
+        let _ = rtm.run_all(4, 4);
+        rtm.reset_state();
+        assert_eq!(rtm.phase(), Phase::Forward);
+        assert_eq!(rtm.cursor(), 0);
+        assert_eq!(rtm.image_norm(), 0.0);
+    }
+
+    #[test]
+    fn run_iteration_autorestarts() {
+        let mut rtm = small();
+        let total_steps = 2 * rtm.steps();
+        for _ in 0..total_steps {
+            rtm.run_iteration(&[3]);
+        }
+        assert!(rtm.is_complete());
+        // One more iteration restarts the job rather than panicking.
+        rtm.run_iteration(&[3]);
+        assert_eq!(rtm.phase(), Phase::Forward);
+        assert_eq!(rtm.cursor(), 1);
+    }
+
+    #[test]
+    fn observed_data_is_deterministic() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.observed, b.observed);
+        assert!(a.observed.iter().any(|t| t.iter().any(|&v| v != 0.0)));
+    }
+}

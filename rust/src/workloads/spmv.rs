@@ -1,0 +1,242 @@
+//! Sparse matrix–vector multiply (CSR) with a power-law row-length
+//! distribution — the *imbalance-dominated* workload.
+//!
+//! This is the case the paper's motivation (§1) describes: per-iteration
+//! cost varies wildly across loop indices ("workload significance ...
+//! control flow deviations"), so `schedule(dynamic, chunk)` with a
+//! well-chosen chunk beats both static partitioning (load imbalance) and
+//! `chunk = 1` (counter contention). The row lengths follow a truncated
+//! Zipf distribution, like real web/social sparsity patterns.
+
+use super::Workload;
+use crate::rng::Xoshiro256pp;
+use crate::sched::{Schedule, ThreadPool};
+
+/// CSR sparse matrix–vector product workload (see module docs).
+pub struct Spmv {
+    rows: usize,
+    #[allow(dead_code)]
+    cols: usize,
+    /// CSR row pointers (`rows + 1`).
+    row_ptr: Vec<usize>,
+    /// Column indices.
+    col_idx: Vec<u32>,
+    /// Values.
+    vals: Vec<f32>,
+    /// Input vector.
+    x: Vec<f32>,
+    /// Output vector.
+    y: Vec<f32>,
+    pool: &'static ThreadPool,
+}
+
+impl Spmv {
+    /// Build a `rows × cols` matrix whose row lengths follow a truncated
+    /// Zipf(α) with mean ≈ `avg_nnz_per_row`.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        avg_nnz_per_row: usize,
+        seed: u64,
+        pool: &'static ThreadPool,
+    ) -> Self {
+        assert!(rows >= 1 && cols >= 1);
+        let mut rng = Xoshiro256pp::new(seed);
+        // Zipf-ish lengths: len = min(max_len, base / u^0.7) gives a long
+        // tail; rescale to hit the target mean.
+        let max_len = cols.min(64 * avg_nnz_per_row.max(1));
+        let raw: Vec<f64> = (0..rows)
+            .map(|_| {
+                let u = rng.next_f64().max(1e-9);
+                1.0 / u.powf(0.7)
+            })
+            .collect();
+        let raw_mean = raw.iter().sum::<f64>() / rows as f64;
+        let scale = avg_nnz_per_row as f64 / raw_mean;
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for r in raw {
+            let len = ((r * scale).round() as usize).clamp(1, max_len);
+            for _ in 0..len {
+                col_idx.push(rng.next_below(cols as u64) as u32);
+                vals.push(rng.uniform(-1.0, 1.0) as f32);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let x = (0..cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        Self {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            vals,
+            x,
+            y: vec![0.0; rows],
+            pool,
+        }
+    }
+
+    /// Default-pool constructor.
+    pub fn with_size(rows: usize, cols: usize, avg_nnz: usize) -> Self {
+        Self::new(rows, cols, avg_nnz, 0x5EED_5B4D, super::default_pool())
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Maximum row length (imbalance indicator).
+    pub fn max_row_len(&self) -> usize {
+        (0..self.rows)
+            .map(|r| self.row_ptr[r + 1] - self.row_ptr[r])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// `y = A x` with the row loop under `Dynamic(chunk)`; returns a
+    /// checksum of `y`.
+    pub fn multiply(&mut self, chunk: usize) -> f64 {
+        let rp = crate::ptr::SharedConst::new(self.row_ptr.as_ptr());
+        let ci = crate::ptr::SharedConst::new(self.col_idx.as_ptr());
+        let va = crate::ptr::SharedConst::new(self.vals.as_ptr());
+        let xv = crate::ptr::SharedConst::new(self.x.as_ptr());
+        let y = crate::ptr::SharedMut::new(self.y.as_mut_ptr());
+        self.pool
+            .parallel_for_blocks(0, self.rows, Schedule::Dynamic(chunk.max(1)), |rows| {
+                let rp = rp.at(0);
+                let ci = ci.at(0);
+                let va = va.at(0);
+                let xv = xv.at(0);
+                for r in rows {
+                    // SAFETY: y[r] written by exactly one claim; all other
+                    // reads are shared immutable.
+                    unsafe {
+                        let lo = *rp.add(r);
+                        let hi = *rp.add(r + 1);
+                        let mut acc = 0.0f32;
+                        for k in lo..hi {
+                            acc += *va.add(k) * *xv.add(*ci.add(k) as usize);
+                        }
+                        *y.at(r) = acc;
+                    }
+                }
+            });
+        self.checksum()
+    }
+
+    /// Sequential oracle.
+    pub fn multiply_sequential(&mut self) -> f64 {
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                acc += self.vals[k] * self.x[self.col_idx[k] as usize];
+            }
+            self.y[r] = acc;
+        }
+        self.checksum()
+    }
+
+    fn checksum(&self) -> f64 {
+        self.y.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Output vector access.
+    pub fn output(&self) -> &[f32] {
+        &self.y
+    }
+}
+
+impl Workload for Spmv {
+    fn name(&self) -> &'static str {
+        "spmv"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        (vec![1.0], vec![(self.rows / 2).max(2) as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        self.multiply(params[0].max(1) as usize)
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        let cp = self.multiply(4);
+        let par = self.y.clone();
+        let cs = self.multiply_sequential();
+        for (i, (a, b)) in par.iter().zip(self.y.iter()).enumerate() {
+            if a != b {
+                return Err(format!("y[{i}]: {a} != {b}"));
+            }
+        }
+        if cp != cs {
+            return Err(format!("checksum {cp} != {cs}"));
+        }
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        self.y.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ThreadPool;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let mut w = Spmv::new(500, 300, 8, 42, pool());
+        w.verify().expect("verify failed");
+    }
+
+    #[test]
+    fn identical_across_chunks() {
+        let mut a = Spmv::new(200, 100, 6, 7, pool());
+        let mut b = Spmv::new(200, 100, 6, 7, pool());
+        assert_eq!(a.multiply(1), b.multiply(32));
+        assert_eq!(a.output(), b.output());
+    }
+
+    #[test]
+    fn row_lengths_are_skewed() {
+        let w = Spmv::new(2000, 1000, 8, 11, pool());
+        let mean = w.nnz() as f64 / 2000.0;
+        assert!(
+            w.max_row_len() as f64 > 4.0 * mean,
+            "distribution not skewed: max {} mean {mean}",
+            w.max_row_len()
+        );
+        // Mean near the target.
+        assert!((mean - 8.0).abs() < 4.0, "mean {mean}");
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let a = Spmv::new(100, 50, 4, 3, pool());
+        let b = Spmv::new(100, 50, 4, 3, pool());
+        assert_eq!(a.row_ptr, b.row_ptr);
+        assert_eq!(a.vals, b.vals);
+    }
+
+    #[test]
+    fn every_row_has_at_least_one_entry() {
+        let w = Spmv::new(300, 100, 3, 9, pool());
+        for r in 0..300 {
+            assert!(w.row_ptr[r + 1] > w.row_ptr[r], "empty row {r}");
+        }
+    }
+}

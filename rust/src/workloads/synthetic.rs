@@ -1,0 +1,228 @@
+//! Closed-form optimization landscapes — ground truth for the optimizer
+//! experiments (E7).
+//!
+//! All functions take points in the optimizers' internal `[-1, 1]^d` box
+//! and are shifted so the global optimum is *not* at the centre (CSA and
+//! friends probe the centre first; an un-shifted benchmark would hand them
+//! the answer). Each entry records the known optimum for assertions.
+
+/// A synthetic benchmark function.
+#[derive(Clone, Copy)]
+pub struct Benchmark {
+    /// Display name.
+    pub name: &'static str,
+    /// The cost function over `[-1, 1]^d`.
+    pub f: fn(&[f64]) -> f64,
+    /// Per-coordinate location of the global minimum.
+    pub optimum_coord: f64,
+    /// Cost at the global minimum.
+    pub optimum_cost: f64,
+    /// Whether the landscape has deceptive local minima.
+    pub multimodal: bool,
+}
+
+/// Shift applied so optima are off-centre.
+const S: f64 = 0.35;
+
+/// Convex bowl: `Σ (x − S)²`.
+pub fn sphere(x: &[f64]) -> f64 {
+    x.iter().map(|v| (v - S) * (v - S)).sum()
+}
+
+/// Rosenbrock valley (scaled to the unit box), minimum at `x = S` after
+/// the shift.
+pub fn rosenbrock(x: &[f64]) -> f64 {
+    let z: Vec<f64> = x.iter().map(|v| (v - S) * 2.0 + 1.0).collect();
+    let mut s = 0.0;
+    for i in 0..z.len().saturating_sub(1) {
+        s += 100.0 * (z[i + 1] - z[i] * z[i]).powi(2) + (1.0 - z[i]).powi(2);
+    }
+    if z.len() == 1 {
+        s = (1.0 - z[0]).powi(2);
+    }
+    s * 1e-2
+}
+
+/// Rastrigin: a regular grid of traps around a parabolic bowl.
+pub fn rastrigin(x: &[f64]) -> f64 {
+    x.iter()
+        .map(|v| {
+            let t = (v - S) * 3.0;
+            t * t - 10.0 * (2.0 * std::f64::consts::PI * t).cos() + 10.0
+        })
+        .sum::<f64>()
+        * 1e-1
+}
+
+/// Ackley: an exponential well surrounded by ripples.
+pub fn ackley(x: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    let (mut s1, mut s2) = (0.0, 0.0);
+    for v in x {
+        let t = (v - S) * 3.0;
+        s1 += t * t;
+        s2 += (2.0 * std::f64::consts::PI * t).cos();
+    }
+    -20.0 * (-0.2 * (s1 / n).sqrt()).exp() - (s2 / n).exp() + 20.0 + std::f64::consts::E
+}
+
+/// Griewank: product-of-cosines ripples on a bowl.
+pub fn griewank(x: &[f64]) -> f64 {
+    let mut s = 0.0;
+    let mut p = 1.0;
+    for (i, v) in x.iter().enumerate() {
+        let t = (v - S) * 20.0;
+        s += t * t / 4000.0;
+        p *= (t / ((i + 1) as f64).sqrt()).cos();
+    }
+    s - p + 1.0
+}
+
+/// Schwefel-like deceptive landscape: the second-best basin is far from
+/// the global one.
+pub fn schwefel(x: &[f64]) -> f64 {
+    x.iter()
+        .map(|v| {
+            let t = (v - S) * 400.0;
+            -t * (t.abs().sqrt()).sin()
+        })
+        .sum::<f64>()
+        * 1e-3
+        + 0.4 * x.len() as f64
+}
+
+/// The fixed benchmark suite used by experiment E7.
+pub fn suite() -> Vec<Benchmark> {
+    vec![
+        Benchmark {
+            name: "sphere",
+            f: sphere,
+            optimum_coord: S,
+            optimum_cost: 0.0,
+            multimodal: false,
+        },
+        Benchmark {
+            name: "rosenbrock",
+            f: rosenbrock,
+            optimum_coord: S,
+            optimum_cost: 0.0,
+            multimodal: false,
+        },
+        Benchmark {
+            name: "rastrigin",
+            f: rastrigin,
+            optimum_coord: S,
+            optimum_cost: 0.0,
+            multimodal: true,
+        },
+        Benchmark {
+            name: "ackley",
+            f: ackley,
+            optimum_coord: S,
+            optimum_cost: 0.0,
+            multimodal: true,
+        },
+        Benchmark {
+            name: "griewank",
+            f: griewank,
+            optimum_coord: S,
+            optimum_cost: 0.0,
+            multimodal: true,
+        },
+    ]
+}
+
+/// A synthetic *runtime* model for tuner tests without real workloads:
+/// cost(chunk) over an integer domain shaped like real dynamic-scheduling
+/// curves — contention penalty at tiny chunks, imbalance penalty at huge
+/// ones, minimum at `best`.
+pub fn chunk_cost_model(chunk: f64, best: f64) -> f64 {
+    let c = chunk.max(1.0);
+    // contention ~ 1/c, imbalance ~ (c/best - 1)^2 past the optimum.
+    let contention = best / c;
+    let imbalance = ((c - best) / best).max(0.0).powi(2);
+    1.0 + 0.5 * contention + 0.8 * imbalance
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optima_are_where_advertised() {
+        for b in suite() {
+            for dim in [1usize, 2, 4] {
+                let opt = vec![b.optimum_coord; dim];
+                let at_opt = (b.f)(&opt);
+                assert!(
+                    (at_opt - b.optimum_cost).abs() < 1e-6,
+                    "{} dim {dim}: f(opt) = {at_opt}",
+                    b.name
+                );
+                // Nearby points are worse (local minimality).
+                for delta in [0.05, -0.05] {
+                    let mut p = opt.clone();
+                    p[0] += delta;
+                    assert!(
+                        (b.f)(&p) >= at_opt - 1e-9,
+                        "{}: not locally minimal",
+                        b.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multimodal_functions_have_traps() {
+        // Each multimodal function must have a strictly better-than-
+        // -neighbourhood point away from the optimum (a trap).
+        for b in suite().into_iter().filter(|b| b.multimodal) {
+            let mut found_trap = false;
+            for i in 0..200 {
+                let x = -1.0 + 2.0 * i as f64 / 199.0;
+                if (x - b.optimum_coord).abs() < 0.2 {
+                    continue;
+                }
+                let c = (b.f)(&[x]);
+                let l = (b.f)(&[x - 0.01]);
+                let r = (b.f)(&[x + 0.01]);
+                if c < l && c < r {
+                    found_trap = true;
+                    break;
+                }
+            }
+            assert!(found_trap, "{} has no local trap", b.name);
+        }
+    }
+
+    #[test]
+    fn centre_is_not_the_optimum() {
+        for b in suite() {
+            let at_centre = (b.f)(&[0.0, 0.0]);
+            let at_opt = (b.f)(&[b.optimum_coord, b.optimum_coord]);
+            assert!(
+                at_centre > at_opt + 1e-9,
+                "{}: centre probe would win",
+                b.name
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_model_minimum_near_best() {
+        let best = 24.0;
+        let at_best = chunk_cost_model(best, best);
+        assert!(chunk_cost_model(1.0, best) > at_best);
+        assert!(chunk_cost_model(200.0, best) > at_best);
+        // Scan for the argmin.
+        let argmin = (1..=256)
+            .min_by(|&a, &b| {
+                chunk_cost_model(a as f64, best)
+                    .partial_cmp(&chunk_cost_model(b as f64, best))
+                    .unwrap()
+            })
+            .unwrap();
+        assert!((argmin as f64 - best).abs() <= 8.0, "argmin {argmin}");
+    }
+}

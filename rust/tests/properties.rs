@@ -1,0 +1,246 @@
+//! Property-based tests over the coordinator invariants (the in-repo
+//! `testkit` substitutes for proptest — DESIGN.md §6).
+//!
+//! Invariants covered:
+//! 1. scheduling: every `parallel_for` covers each index exactly once, for
+//!    random (range, schedule, chunk, team) combinations;
+//! 2. tuner domain: every candidate handed to the application lies in
+//!    `[min, max]` and is integral for integer points, for random bounds
+//!    and optimizer configs;
+//! 3. evaluation laws: Eq. (1) holds for random (num_opt, max_iter,
+//!    ignore);
+//! 4. optimizer domain: every staged optimizer emits points inside
+//!    `[-1, 1]^d` for random configs and adversarial costs;
+//! 5. determinism: same seed ⇒ same tuning trajectory.
+
+use patsma::optimizer::{
+    Csa, CsaConfig, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm, PsoConfig,
+    RandomSearch, SaConfig, SimulatedAnnealing,
+};
+use patsma::sched::{Schedule, ThreadPool};
+use patsma::testkit::{forall, Draw};
+use patsma::tuner::Autotuning;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::OnceLock;
+
+fn pool() -> &'static ThreadPool {
+    static P: OnceLock<ThreadPool> = OnceLock::new();
+    P.get_or_init(|| ThreadPool::new(4))
+}
+
+#[test]
+fn prop_parallel_for_exact_coverage() {
+    forall(
+        0xC0FFEE,
+        60,
+        |r| {
+            let n = Draw::usize_in(r, 0, 500);
+            let sched = match Draw::usize_in(r, 0, 3) {
+                0 => Schedule::Static,
+                1 => Schedule::StaticChunk(Draw::usize_in(r, 1, 64)),
+                2 => Schedule::Dynamic(Draw::usize_in(r, 1, 64)),
+                _ => Schedule::Guided(Draw::usize_in(r, 1, 16)),
+            };
+            (n, sched)
+        },
+        |&(n, sched)| {
+            let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            pool().parallel_for(0, n, sched, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                let c = h.load(Ordering::Relaxed);
+                if c != 1 {
+                    return Err(format!("index {i} executed {c} times under {sched}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tuner_candidates_respect_bounds_and_integrality() {
+    forall(
+        0xB0B0,
+        40,
+        |r| {
+            let lo = Draw::f64_in(r, 1.0, 50.0).round();
+            let hi = lo + Draw::f64_in(r, 1.0, 500.0).round();
+            let num_opt = Draw::usize_in(r, 1, 6);
+            let max_iter = Draw::usize_in(r, 1, 8);
+            let ignore = Draw::usize_in(r, 0, 3) as u32;
+            let seed = r.next_u64();
+            (lo, hi, num_opt, max_iter, ignore, seed)
+        },
+        |&(lo, hi, num_opt, max_iter, ignore, seed)| {
+            let mut at = Autotuning::with_seed(lo, hi, ignore, 1, num_opt, max_iter, seed);
+            let mut p = [0i32; 1];
+            let mut violations = Vec::new();
+            at.entire_exec(&mut p, |x| {
+                let v = x[0] as f64;
+                if v < lo || v > hi {
+                    violations.push(v);
+                }
+                (v - (lo + hi) / 2.0).abs()
+            });
+            if !violations.is_empty() {
+                return Err(format!("candidates out of [{lo}, {hi}]: {violations:?}"));
+            }
+            if (p[0] as f64) < lo || (p[0] as f64) > hi {
+                return Err(format!("final point {} out of [{lo}, {hi}]", p[0]));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eq1_holds_for_random_configs() {
+    forall(
+        0xE0_1,
+        40,
+        |r| {
+            (
+                Draw::usize_in(r, 1, 8),
+                Draw::usize_in(r, 1, 10),
+                Draw::usize_in(r, 0, 4) as u32,
+            )
+        },
+        |&(num_opt, max_iter, ignore)| {
+            let mut at = Autotuning::new(1.0, 64.0, ignore, 1, num_opt, max_iter);
+            let mut p = [0i32; 1];
+            at.entire_exec(&mut p, |x| x[0] as f64);
+            let predicted = (max_iter * (ignore as usize + 1) * num_opt) as u64;
+            if at.target_iterations() != predicted {
+                return Err(format!(
+                    "Eq.(1) violated: predicted {predicted}, measured {}",
+                    at.target_iterations()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_optimizers_stay_in_internal_domain() {
+    forall(
+        0xD0_2,
+        30,
+        |r| {
+            let dim = Draw::usize_in(r, 1, 4);
+            let kind = Draw::usize_in(r, 0, 4);
+            let seed = r.next_u64();
+            // Adversarial cost scale, including huge and tiny.
+            let scale = 10f64.powi(Draw::usize_in(r, 0, 12) as i32 - 6);
+            (dim, kind, seed, scale)
+        },
+        |&(dim, kind, seed, scale)| {
+            let mut opt: Box<dyn NumericalOptimizer> = match kind {
+                0 => Box::new(Csa::new(CsaConfig::new(dim, 3, 10).with_seed(seed))),
+                1 => Box::new(NelderMead::new(
+                    NelderMeadConfig::new(dim, 0.0, 30).with_seed(seed),
+                )),
+                2 => Box::new(SimulatedAnnealing::new(
+                    SaConfig::new(dim, 25).with_seed(seed),
+                )),
+                3 => Box::new(RandomSearch::new(dim, 25, seed)),
+                _ => Box::new(ParticleSwarm::new(
+                    PsoConfig::new(dim, 4, 6).with_seed(seed),
+                )),
+            };
+            let mut cost = 0.0;
+            let mut guard = 0;
+            while !opt.is_end() && guard < 10_000 {
+                let c = opt.run(cost).to_vec();
+                if opt.is_end() {
+                    break;
+                }
+                if !c.iter().all(|v| (-1.0..=1.0).contains(v)) {
+                    return Err(format!("{} emitted {c:?}", opt.name()));
+                }
+                cost = scale * c.iter().map(|v| v * v).sum::<f64>();
+                guard += 1;
+            }
+            if guard >= 10_000 {
+                return Err(format!("{} never terminated", opt.name()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_same_seed_same_trajectory() {
+    forall(
+        0x5A_3,
+        20,
+        |r| {
+            (
+                Draw::usize_in(r, 1, 5),
+                Draw::usize_in(r, 2, 8),
+                r.next_u64(),
+            )
+        },
+        |&(num_opt, max_iter, seed)| {
+            let run = || {
+                let mut at = Autotuning::with_seed(1.0, 99.0, 0, 1, num_opt, max_iter, seed);
+                let mut p = [0i32; 1];
+                let mut tested = Vec::new();
+                at.entire_exec(&mut p, |x| {
+                    tested.push(x[0]);
+                    (x[0] as f64 - 70.0).abs()
+                });
+                (tested, p[0])
+            };
+            let a = run();
+            let b = run();
+            if a != b {
+                return Err(format!("divergent trajectories: {a:?} vs {b:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_exec_never_exceeds_app_iterations() {
+    // The paper's "minimal overhead" claim as an invariant: single-exec
+    // tuning must execute exactly one target iteration per call, no more.
+    forall(
+        0xAB_4,
+        25,
+        |r| {
+            (
+                Draw::usize_in(r, 1, 4),
+                Draw::usize_in(r, 1, 6),
+                Draw::usize_in(r, 0, 2) as u32,
+                Draw::usize_in(r, 10, 200),
+                r.next_u64(),
+            )
+        },
+        |&(num_opt, max_iter, ignore, app_iters, seed)| {
+            let mut at = Autotuning::with_seed(1.0, 32.0, ignore, 1, num_opt, max_iter, seed);
+            let mut p = [0i32; 1];
+            let mut calls = 0u64;
+            for _ in 0..app_iters {
+                at.single_exec(&mut p, |x| {
+                    calls += 1;
+                    ((x[0] as f64 - 20.0).abs(), ())
+                });
+            }
+            if calls != app_iters as u64 {
+                return Err(format!("{calls} target calls for {app_iters} app iterations"));
+            }
+            let budget = (num_opt * max_iter * (ignore as usize + 1)) as u64;
+            if at.target_iterations() > budget.min(app_iters as u64) {
+                return Err(format!(
+                    "tuning consumed {} iterations, budget {budget}, app {app_iters}",
+                    at.target_iterations()
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,133 @@
+//! Integration: AOT artifacts → PJRT runtime → cross-layer numerics.
+//!
+//! Requires `make artifacts` to have produced `artifacts/` (the Makefile
+//! orders this before `cargo test`). The engine is compiled once and shared
+//! across tests; the heavyweight check is the *cross-layer* one — the XLA
+//! red–black sweep (L2/L1, AOT'd Pallas) must match the Rust shared-memory
+//! substrate (L3) bit-for-bit step after step, proving the three layers
+//! implement the same algorithm.
+
+use patsma::runtime::{default_artifact_dir, Engine, RbState, WaveState, XlaVariantWorkload};
+use patsma::sched::ThreadPool;
+use patsma::tuner::Autotuning;
+use patsma::workloads::rb_gauss_seidel::RbGaussSeidel;
+use patsma::workloads::Workload;
+use std::sync::OnceLock;
+
+fn engine() -> &'static Engine {
+    static E: OnceLock<Engine> = OnceLock::new();
+    E.get_or_init(|| {
+        let dir = default_artifact_dir();
+        Engine::load(&dir).unwrap_or_else(|e| {
+            panic!(
+                "failed to load artifacts from {} — run `make artifacts` first: {e:#}",
+                dir.display()
+            )
+        })
+    })
+}
+
+#[test]
+fn manifest_has_both_kinds() {
+    let e = engine();
+    assert!(!e.variants_of("rb_sweep").is_empty());
+    assert!(!e.variants_of("wave").is_empty());
+}
+
+#[test]
+fn rb_sweep_executes_and_converges() {
+    let e = engine();
+    let ids = e.variants_of("rb_sweep");
+    let n = e.meta(ids[0]).n;
+    let mut st = RbState::initial(n);
+    let d0 = e.rb_sweep(ids[0], &mut st).expect("first sweep");
+    assert!(d0.is_finite() && d0 > 0.0);
+    let mut last = d0;
+    for _ in 0..5 {
+        last = e.rb_sweep(ids[0], &mut st).expect("sweep");
+    }
+    assert!(last < d0, "residual not decreasing: {last} vs {d0}");
+}
+
+#[test]
+fn rb_variants_agree_bitwise() {
+    let e = engine();
+    let mut w = XlaVariantWorkload::rb(e).unwrap();
+    w.verify().expect("variant divergence");
+}
+
+#[test]
+fn wave_variants_agree_bitwise() {
+    let e = engine();
+    let mut w = XlaVariantWorkload::wave(e).unwrap();
+    w.verify().expect("variant divergence");
+}
+
+#[test]
+fn cross_layer_rb_sweep_matches_rust_substrate() {
+    // The headline integration check: L1 Pallas (via interpret-mode HLO,
+    // through PJRT) computes the exact same Gauss–Seidel trajectory as the
+    // L3 Rust thread-pool substrate.
+    let e = engine();
+    let ids = e.variants_of("rb_sweep");
+    let n = e.meta(ids[0]).n;
+
+    static P: OnceLock<ThreadPool> = OnceLock::new();
+    let pool = P.get_or_init(|| ThreadPool::new(4));
+    let mut rust_side = RbGaussSeidel::new(n, pool);
+    let mut xla_side = RbState::initial(n);
+
+    for sweep in 0..3 {
+        let d_rust = rust_side.sweep(7);
+        let d_xla = e.rb_sweep(ids[0], &mut xla_side).expect("xla sweep");
+        assert!(
+            (d_rust - d_xla).abs() <= 1e-9 * d_rust.abs().max(1.0),
+            "sweep {sweep}: residual rust {d_rust} vs xla {d_xla}"
+        );
+    }
+    let rust_grid = rust_side.grid();
+    let max_err = rust_grid
+        .iter()
+        .zip(&xla_side.padded)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(
+        max_err < 1e-12,
+        "cross-layer grid divergence: max abs err {max_err}"
+    );
+}
+
+#[test]
+fn wave_step_produces_energy_and_stays_stable() {
+    let e = engine();
+    let ids = e.variants_of("wave");
+    let n = e.meta(ids[0]).n;
+    let mut st = WaveState::new(n, 0.04);
+    let mut peak = 0.0f64;
+    for _ in 0..50 {
+        st.inject_ricker(0.04);
+        let en = e.wave_step(ids[0], &mut st).expect("wave step");
+        st.step += 1;
+        assert!(en.is_finite());
+        peak = peak.max(en);
+    }
+    assert!(peak > 0.0, "no energy injected");
+}
+
+#[test]
+fn tuner_selects_a_variant_end_to_end() {
+    // E10 smoke: CSA over the variant index through the real PJRT path.
+    let e = engine();
+    let mut w = XlaVariantWorkload::rb(e).unwrap();
+    let (lo, hi) = w.bounds();
+    let mut at = Autotuning::with_seed(lo[0], hi[0], 0, 1, 3, 6, 99);
+    let mut variant = [0i32; 1];
+    at.entire_exec_runtime(&mut variant, |p| {
+        let _ = w.run_iteration(p);
+    });
+    assert!(at.is_finished());
+    let chosen = variant[0] as usize;
+    assert!(chosen < w.num_variants());
+    // The tuner's history must contain real, positive latencies.
+    assert!(at.history().iter().all(|s| s.cost > 0.0));
+}

@@ -1,0 +1,83 @@
+//! Integration: every workload's parallel implementation against its
+//! sequential oracle, at sizes larger than the unit tests use.
+
+use patsma::workloads::{
+    conv2d::Conv2d, fdm3d::Fdm3d, matmul::MatMul, rb_gauss_seidel::RbGaussSeidel, rtm::Rtm,
+    spmv::Spmv, Workload,
+};
+use patsma::sched::ThreadPool;
+use std::sync::OnceLock;
+
+fn pool() -> &'static ThreadPool {
+    static P: OnceLock<ThreadPool> = OnceLock::new();
+    P.get_or_init(|| ThreadPool::new(4))
+}
+
+#[test]
+fn verify_rb_gauss_seidel() {
+    RbGaussSeidel::new(97, pool()).verify().unwrap();
+}
+
+#[test]
+fn verify_fdm3d() {
+    Fdm3d::new(28, 26, 32, pool()).verify().unwrap();
+}
+
+#[test]
+fn verify_rtm() {
+    Rtm::new(20, 18, 24, 20, pool()).verify().unwrap();
+}
+
+#[test]
+fn verify_matmul() {
+    MatMul::new(96, pool()).verify().unwrap();
+}
+
+#[test]
+fn verify_conv2d() {
+    Conv2d::new(80, 64, 7, pool()).verify().unwrap();
+}
+
+#[test]
+fn verify_spmv() {
+    Spmv::new(3000, 1500, 10, 77, pool()).verify().unwrap();
+}
+
+#[test]
+fn tuning_each_workload_end_to_end() {
+    // Every workload is tunable through the public API with a small budget.
+    use patsma::tuner::Autotuning;
+    let mut workloads: Vec<Box<dyn Workload>> = vec![
+        Box::new(RbGaussSeidel::new(64, pool())),
+        Box::new(Fdm3d::new(24, 24, 28, pool())),
+        Box::new(MatMul::new(64, pool())),
+        Box::new(Conv2d::new(64, 64, 5, pool())),
+        Box::new(Spmv::new(2000, 800, 8, 5, pool())),
+    ];
+    for w in workloads.iter_mut() {
+        let (lo, hi) = w.bounds();
+        let dim = w.dim();
+        let mut at = Autotuning::with_optimizer(
+            lo.clone(),
+            hi.clone(),
+            0,
+            Box::new(patsma::optimizer::Csa::new(
+                patsma::optimizer::CsaConfig::new(dim, 3, 4).with_seed(1),
+            )),
+        );
+        let mut point = vec![1i32; dim];
+        at.entire_exec_runtime(&mut point, |p| {
+            let _ = w.run_iteration(p);
+        });
+        assert!(at.is_finished(), "{} tuning did not finish", w.name());
+        for (d, &v) in point.iter().enumerate() {
+            assert!(
+                (v as f64) >= lo[d] && (v as f64) <= hi[d],
+                "{}: tuned point {v} out of [{}, {}]",
+                w.name(),
+                lo[d],
+                hi[d]
+            );
+        }
+    }
+}
