@@ -1,0 +1,3 @@
+# L2 package marker: keeps `pip install -e python` able to discover the
+# package (setuptools ignores directories without __init__.py). Submodules
+# import jax lazily at their own import time, not here.

@@ -4,7 +4,7 @@
 
 fn main() {
     let quick = std::env::var("PATSMA_QUICK").is_ok();
-    for id in ["e1", "e2", ] {
+    for id in ["e1", "e2"] {
         match patsma::coordinator::run(id, quick) {
             Ok(out) => println!("{out}"),
             Err(e) => {

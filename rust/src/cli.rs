@@ -7,6 +7,10 @@
 //!                        [--num-opt N] [--max-iter N] [--ignore N]
 //!                        [--seed N] [--mode single|entire]
 //! patsma verify [<workload>]       # parallel-vs-oracle checks
+//! patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
+//!                    [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
+//!                    [--registry PATH]
+//! patsma service report [--registry PATH]
 //! patsma demo                      # 30-second guided tour
 //! ```
 
@@ -15,12 +19,13 @@ use crate::optimizer::{
     Csa, CsaConfig, GridSearch, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm,
     PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
 };
+use crate::service::{self, OptimizerSpec, SessionSpec, TuningService};
 use crate::tuner::Autotuning;
-use crate::workloads::{
-    conv2d::Conv2d, fdm3d::Fdm3d, matmul::MatMul, rb_gauss_seidel::RbGaussSeidel, rtm::Rtm,
-    spmv::Spmv, Workload,
-};
+use crate::workloads::{self, rb_gauss_seidel::RbGaussSeidel, Workload};
 use anyhow::{bail, Context, Result};
+
+/// Default path of the on-disk service registry.
+pub const DEFAULT_REGISTRY: &str = "patsma-service-registry.txt";
 
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,6 +46,19 @@ pub enum Command {
     },
     /// Verify workloads against their sequential oracles.
     Verify { workload: Option<String> },
+    /// Run a batch of concurrent tuning sessions through the service.
+    ServiceRun {
+        sessions: usize,
+        concurrency: usize,
+        optimizer: String,
+        num_opt: usize,
+        max_iter: usize,
+        ignore: u32,
+        seed: u64,
+        registry: String,
+    },
+    /// Render a saved service registry.
+    ServiceReport { registry: String },
     /// Guided demo.
     Demo,
     /// Help text.
@@ -96,12 +114,35 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .filter(|a| !a.starts_with("--"))
                 .map(|s| s.to_string()),
         }),
+        "service" => {
+            let action = rest
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .map(|s| s.as_str())
+                .context("service: missing action (run|report)")?;
+            let registry = flag_val("--registry").unwrap_or(DEFAULT_REGISTRY).to_string();
+            match action {
+                "run" => Ok(Command::ServiceRun {
+                    sessions: flag_val("--sessions").unwrap_or("8").parse()?,
+                    concurrency: flag_val("--concurrency").unwrap_or("4").parse()?,
+                    optimizer: flag_val("--optimizer").unwrap_or("mixed").to_string(),
+                    num_opt: flag_val("--num-opt").unwrap_or("4").parse()?,
+                    max_iter: flag_val("--max-iter").unwrap_or("8").parse()?,
+                    ignore: flag_val("--ignore").unwrap_or("0").parse()?,
+                    seed: flag_val("--seed").unwrap_or("42").parse()?,
+                    registry,
+                }),
+                "report" => Ok(Command::ServiceReport { registry }),
+                other => bail!("unknown service action {other:?} (run|report)"),
+            }
+        }
         "demo" => Ok(Command::Demo),
         other => bail!("unknown command {other:?}; try `patsma help`"),
     }
 }
 
-/// Known workload names.
+/// Known workload names: the shared-memory set (see
+/// [`workloads::by_name`]) plus the PJRT variant-selection workloads.
 pub const WORKLOADS: &[&str] = &[
     "rb-gauss-seidel",
     "fdm3d",
@@ -114,19 +155,16 @@ pub const WORKLOADS: &[&str] = &[
 ];
 
 fn make_workload(name: &str) -> Result<Box<dyn Workload>> {
-    Ok(match name {
-        "rb-gauss-seidel" => Box::new(RbGaussSeidel::with_size(384)),
-        "fdm3d" => Box::new(Fdm3d::with_size(56, 56, 64)),
-        "rtm" => Box::new(Rtm::with_size(32, 32, 40, 40)),
-        "matmul" => Box::new(MatMul::with_size(256)),
-        "conv2d" => Box::new(Conv2d::with_size(512, 512, 7)),
-        "spmv" => Box::new(Spmv::with_size(200_000, 50_000, 12)),
-        other => bail!("unknown workload {other:?}; known: {WORKLOADS:?}"),
-    })
+    workloads::by_name(name)
 }
 
-fn make_optimizer(kind: &str, dim: usize, num_opt: usize, max_iter: usize, seed: u64)
-    -> Result<Box<dyn NumericalOptimizer>> {
+fn make_optimizer(
+    kind: &str,
+    dim: usize,
+    num_opt: usize,
+    max_iter: usize,
+    seed: u64,
+) -> Result<Box<dyn NumericalOptimizer>> {
     Ok(match kind {
         "csa" => Box::new(Csa::new(CsaConfig::new(dim, num_opt, max_iter).with_seed(seed))),
         "nm" => Box::new(NelderMead::new(
@@ -163,7 +201,7 @@ pub fn execute(cmd: Command) -> Result<String> {
         Command::Verify { workload } => {
             let names: Vec<&str> = match &workload {
                 Some(w) => vec![w.as_str()],
-                None => vec!["rb-gauss-seidel", "fdm3d", "rtm", "matmul", "conv2d", "spmv"],
+                None => workloads::NAMES.to_vec(),
             };
             let mut s = String::new();
             for name in names {
@@ -227,6 +265,55 @@ pub fn execute(cmd: Command) -> Result<String> {
             }
             Ok(s)
         }
+        Command::ServiceRun {
+            sessions,
+            concurrency,
+            optimizer,
+            num_opt,
+            max_iter,
+            ignore,
+            seed,
+            registry,
+        } => {
+            // Deterministic variety: the landscape optimum cycles so the
+            // batch overlaps enough to exercise the shared cache without
+            // the sessions being clones of each other.
+            const OPTIMA: &[f64] = &[48.0, 24.0, 96.0, 12.0, 64.0, 32.0];
+            const MIXED: &[OptimizerSpec] = &[
+                OptimizerSpec::Csa,
+                OptimizerSpec::NelderMead,
+                OptimizerSpec::Sa,
+                OptimizerSpec::Pso,
+                OptimizerSpec::Random,
+                OptimizerSpec::Grid,
+            ];
+            let mut specs = Vec::with_capacity(sessions);
+            for i in 0..sessions {
+                let opt = if optimizer == "mixed" {
+                    MIXED[i % MIXED.len()]
+                } else {
+                    OptimizerSpec::parse(&optimizer)?
+                };
+                let id = format!("s{i}-{}", opt.name());
+                let mut spec = SessionSpec::synthetic(id, OPTIMA[i % OPTIMA.len()], seed + i as u64)
+                    .with_optimizer(opt)
+                    .with_budget(num_opt, max_iter);
+                spec.ignore = ignore;
+                specs.push(spec);
+            }
+            let service = TuningService::new(concurrency);
+            let report = service.run(&specs)?;
+            report.save(std::path::Path::new(&registry))?;
+            Ok(format!(
+                "service: {sessions} sessions, concurrency {}\n{}\nregistry saved to {registry}\n",
+                service.concurrency(),
+                report.render()
+            ))
+        }
+        Command::ServiceReport { registry } => {
+            let report = service::ServiceReport::load(std::path::Path::new(&registry))?;
+            Ok(report.render())
+        }
         Command::Demo => {
             let mut s = String::from("PATSMA demo — tuning RB Gauss–Seidel's chunk:\n");
             let mut w = RbGaussSeidel::with_size(256);
@@ -253,7 +340,13 @@ pub fn execute(cmd: Command) -> Result<String> {
     }
 }
 
-fn tune_xla(which: &str, num_opt: usize, max_iter: usize, ignore: u32, seed: u64) -> Result<String> {
+fn tune_xla(
+    which: &str,
+    num_opt: usize,
+    max_iter: usize,
+    ignore: u32,
+    seed: u64,
+) -> Result<String> {
     let dir = crate::runtime::default_artifact_dir();
     let engine = crate::runtime::Engine::load(&dir)?;
     let mut w = match which {
@@ -292,11 +385,15 @@ PATSMA — Parameter Auto-tuning for Shared Memory Algorithms
 
 USAGE:
   patsma list                               experiments & workloads
-  patsma experiment <e1..e11|all> [--quick] regenerate a paper table/figure
+  patsma experiment <e1..e12|all> [--quick] regenerate a paper table/figure
   patsma tune <workload> [--optimizer csa|nm|sa|random|pso|grid]
               [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
               [--mode single|entire]
   patsma verify [<workload>]                parallel vs sequential oracle
+  patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
+              [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
+              [--registry PATH]             concurrent multi-session tuning
+  patsma service report [--registry PATH]   render a saved registry
   patsma demo                               30-second tour
 ";
 
@@ -390,5 +487,95 @@ mod tests {
     fn unknown_workload_and_optimizer_rejected() {
         assert!(make_workload("nope").is_err());
         assert!(make_optimizer("nope", 1, 2, 3, 4).is_err());
+    }
+
+    #[test]
+    fn parse_service_run_flags_and_defaults() {
+        let c = parse(&v(&["service", "run"])).unwrap();
+        match c {
+            Command::ServiceRun {
+                sessions,
+                concurrency,
+                optimizer,
+                registry,
+                ..
+            } => {
+                assert_eq!(sessions, 8);
+                assert_eq!(concurrency, 4);
+                assert_eq!(optimizer, "mixed");
+                assert_eq!(registry, DEFAULT_REGISTRY);
+            }
+            other => panic!("{other:?}"),
+        }
+        let c = parse(&v(&[
+            "service",
+            "run",
+            "--sessions",
+            "3",
+            "--concurrency",
+            "2",
+            "--optimizer",
+            "csa",
+            "--registry",
+            "/tmp/r.txt",
+        ]))
+        .unwrap();
+        match c {
+            Command::ServiceRun {
+                sessions,
+                concurrency,
+                optimizer,
+                registry,
+                ..
+            } => {
+                assert_eq!(sessions, 3);
+                assert_eq!(concurrency, 2);
+                assert_eq!(optimizer, "csa");
+                assert_eq!(registry, "/tmp/r.txt");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_service_report_and_errors() {
+        assert_eq!(
+            parse(&v(&["service", "report"])).unwrap(),
+            Command::ServiceReport {
+                registry: DEFAULT_REGISTRY.into()
+            }
+        );
+        assert!(parse(&v(&["service"])).is_err());
+        assert!(parse(&v(&["service", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn service_run_executes_and_report_roundtrips() {
+        let registry = std::env::temp_dir()
+            .join("patsma-cli-service-test.txt")
+            .to_str()
+            .unwrap()
+            .to_string();
+        let out = execute(Command::ServiceRun {
+            sessions: 4,
+            concurrency: 2,
+            optimizer: "mixed".into(),
+            num_opt: 3,
+            max_iter: 4,
+            ignore: 0,
+            seed: 9,
+            registry: registry.clone(),
+        })
+        .unwrap();
+        assert!(out.contains("4 sessions"), "{out}");
+        assert!(out.contains("cache hits"), "{out}");
+
+        let rendered = execute(Command::ServiceReport {
+            registry: registry.clone(),
+        })
+        .unwrap();
+        assert!(rendered.contains("| s0-csa |"), "{rendered}");
+        assert!(rendered.contains("cache hits"), "{rendered}");
+        let _ = std::fs::remove_file(&registry);
     }
 }

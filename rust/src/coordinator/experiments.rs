@@ -17,7 +17,7 @@ use crate::workloads::rb_gauss_seidel::RbGaussSeidel;
 use crate::workloads::rtm::{Phase, Rtm};
 use crate::workloads::synthetic;
 use crate::workloads::Workload;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 fn pool() -> &'static ThreadPool {
     ThreadPool::global()
@@ -602,6 +602,81 @@ pub fn e10_xla_variants(quick: bool) -> Result<String> {
 // ---------------------------------------------------------------------
 // E11 — the `ignore` stabilisation parameter
 // ---------------------------------------------------------------------
+
+/// E12 (beyond the paper): the concurrent multi-session tuning service.
+/// Runs one batch of sessions serially and once concurrently, shows the
+/// per-session results agree exactly (the determinism contract), and
+/// reports what the shared evaluation cache saved.
+pub fn e12_service_concurrent(quick: bool) -> Result<String> {
+    use crate::service::{OptimizerSpec, SessionSpec, TuningService};
+
+    let optima: &[f64] = if quick { &[48.0, 24.0] } else { &[48.0, 24.0, 96.0] };
+    let opts = [OptimizerSpec::Csa, OptimizerSpec::NelderMead, OptimizerSpec::Sa];
+    let (num_opt, max_iter) = if quick { (4, 6) } else { (5, 12) };
+
+    let mut specs = Vec::new();
+    for (wi, &optimum) in optima.iter().enumerate() {
+        for opt in opts {
+            let id = format!("w{wi}-{}", opt.name());
+            specs.push(
+                SessionSpec::synthetic(id, optimum, 500 + wi as u64)
+                    .with_optimizer(opt)
+                    .with_budget(num_opt, max_iter),
+            );
+        }
+    }
+
+    let t0 = std::time::Instant::now();
+    let serial = TuningService::new(1).run(&specs)?;
+    let serial_time = t0.elapsed().as_secs_f64();
+
+    let concurrency = pool().threads().clamp(2, 8);
+    let t0 = std::time::Instant::now();
+    let service = TuningService::new(concurrency);
+    let concurrent = service.run(&specs)?;
+    let concurrent_time = t0.elapsed().as_secs_f64();
+
+    let mut out = String::from(
+        "\n| session | optimizer | evals | best point | best cost | serial == concurrent |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    let mut mismatches = 0u32;
+    for (s, c) in serial.sessions.iter().zip(&concurrent.sessions) {
+        let agree = s.best_point == c.best_point && s.best_cost == c.best_cost;
+        if !agree {
+            mismatches += 1;
+        }
+        out.push_str(&format!(
+            "| {} | {} | {} | {:?} | {:.4} | {} |\n",
+            s.id,
+            s.optimizer,
+            s.evaluations,
+            s.best_point,
+            s.best_cost,
+            if agree { "OK" } else { "MISMATCH" }
+        ));
+    }
+    if mismatches > 0 {
+        bail!("e12: {mismatches} session(s) diverged between serial and concurrent runs\n{out}");
+    }
+    out.push_str(&format!(
+        "\n{} sessions; serial {} vs concurrency-{} {}; shared cache: {} hits / {} misses \
+         ({:.1}% hit rate)\n",
+        specs.len(),
+        benchkit::fmt_time(serial_time),
+        concurrency,
+        benchkit::fmt_time(concurrent_time),
+        concurrent.cache.hits,
+        concurrent.cache.misses,
+        100.0 * concurrent.cache.hit_rate(),
+    ));
+    out.push_str(
+        "\nthe synthetic landscape is deterministic, so cached evaluations are exact and \
+         every session's result is independent of scheduling — the substrate later PRs \
+         scale on.\n",
+    );
+    Ok(out)
+}
 
 /// E11: a cost model with a transient spike on the first iteration after a
 /// parameter change (cache/DVFS stabilisation, paper §2.3). With

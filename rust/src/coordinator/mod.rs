@@ -79,6 +79,11 @@ pub fn registry() -> Vec<ExperimentDef> {
             paper_ref: "§2.3 — the `ignore` stabilisation parameter",
             run: experiments::e11_ignore_parameter,
         },
+        ExperimentDef {
+            id: "e12",
+            paper_ref: "beyond-paper — concurrent multi-session tuning service",
+            run: experiments::e12_service_concurrent,
+        },
     ]
 }
 
@@ -111,11 +116,11 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_covers_e1_to_e11() {
+    fn registry_covers_e1_to_e12() {
         let ids: Vec<&str> = registry().iter().map(|d| d.id).collect();
         assert_eq!(
             ids,
-            vec!["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11"]
+            vec!["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "e10", "e11", "e12"]
         );
     }
 
@@ -130,5 +135,13 @@ mod tests {
         assert!(out.contains("OK"), "{out}");
         let out = run("e4", true).unwrap();
         assert!(out.contains("OK"), "{out}");
+    }
+
+    #[test]
+    fn service_experiment_runs_quickly() {
+        let out = run("e12", true).unwrap();
+        assert!(out.contains("OK"), "{out}");
+        assert!(!out.contains("MISMATCH"), "{out}");
+        assert!(out.contains("hit rate"), "{out}");
     }
 }

@@ -4,6 +4,13 @@
 //! Auto-tuning for Shared Memory Algorithms*, SoftwareX 2024
 //! (10.1016/j.softx.2024.101789).
 //!
+//! Beyond the paper, the [`service`] module scales the staged tuning core
+//! into a **concurrent multi-session runtime**: batches of tuning scenarios
+//! run concurrently on the persistent thread pool, CSA candidate
+//! populations evaluate as batches instead of one point at a time, and a
+//! shared evaluation cache makes repeated candidates free across sessions
+//! (`patsma service run` / `patsma service report` on the CLI).
+//!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
@@ -12,10 +19,11 @@ pub mod cli;
 pub mod coordinator;
 pub mod optimizer;
 pub mod ptr;
-pub mod tuner;
-pub mod workloads;
 pub mod rng;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod stats;
 pub mod testkit;
+pub mod tuner;
+pub mod workloads;

@@ -103,6 +103,15 @@ enum Pending {
     Candidate(usize),
 }
 
+/// Which whole population the last `run_batch` call handed out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BatchPending {
+    /// The initial chain states (iteration 1's energy measurements).
+    Init,
+    /// The candidate population of the current iteration.
+    Candidates,
+}
+
 /// Coupled Simulated Annealing optimizer (see module docs).
 pub struct Csa {
     cfg: CsaConfig,
@@ -120,6 +129,8 @@ pub struct Csa {
     t_gen: f64,
     t_ac: f64,
     pending: Option<Pending>,
+    /// Outstanding population from `run_batch` (batched mode only).
+    batch_pending: Option<BatchPending>,
     evals: u64,
     best_point: Vec<f64>,
     best_cost: f64,
@@ -144,6 +155,7 @@ impl Csa {
             cand_energy: vec![f64::INFINITY; cfg.num_opt],
             iter: 1,
             pending: None,
+            batch_pending: None,
             evals: 0,
             best_point: vec![0.0; cfg.dim],
             best_cost: f64::INFINITY,
@@ -330,6 +342,67 @@ impl NumericalOptimizer for Csa {
         }
     }
 
+    /// Whole-population batching: one batch is either the initial chain
+    /// states or a full candidate population — the `m` independent
+    /// evaluations of one CSA iteration, which the `service` layer runs in
+    /// parallel instead of the staged one-at-a-time loop. Costs are filed
+    /// in chain order, so a batched run is bit-identical to a staged run
+    /// with the same seed.
+    fn run_batch(&mut self, costs: &[f64]) -> Vec<Vec<f64>> {
+        debug_assert!(
+            self.pending.is_none(),
+            "mixing run and run_batch on one Csa is unsupported"
+        );
+        let m = self.cfg.num_opt;
+        // 1. File the costs of the outstanding population, exactly as the
+        //    staged path would, in chain order.
+        match self.batch_pending.take() {
+            None => debug_assert!(costs.is_empty(), "no batch outstanding"),
+            Some(kind) => {
+                assert_eq!(costs.len(), m, "one cost per population member");
+                for (i, &raw) in costs.iter().enumerate() {
+                    let cost = if raw.is_nan() { f64::INFINITY } else { raw };
+                    self.evals += 1;
+                    match kind {
+                        BatchPending::Init => {
+                            self.energy[i] = cost;
+                            let pt = self.x[i].clone();
+                            self.note_best(&pt, cost);
+                        }
+                        BatchPending::Candidates => {
+                            self.cand_energy[i] = cost;
+                            let pt = self.cand[i].clone();
+                            self.note_best(&pt, cost);
+                        }
+                    }
+                }
+                match kind {
+                    BatchPending::Init => self.iter = 2,
+                    BatchPending::Candidates => {
+                        self.acceptance_step();
+                        self.iter += 1;
+                    }
+                }
+                if self.iter > self.cfg.max_iter {
+                    self.done = true;
+                } else {
+                    self.generate_candidates();
+                }
+            }
+        }
+        if self.done {
+            return Vec::new();
+        }
+        // 2. Hand out the next whole population.
+        if self.iter == 1 {
+            self.batch_pending = Some(BatchPending::Init);
+            self.x.clone()
+        } else {
+            self.batch_pending = Some(BatchPending::Candidates);
+            self.cand.clone()
+        }
+    }
+
     fn num_points(&self) -> usize {
         self.cfg.num_opt
     }
@@ -360,6 +433,7 @@ impl NumericalOptimizer for Csa {
                 self.cand_energy.iter_mut().for_each(|e| *e = f64::INFINITY);
                 self.best_cost = f64::INFINITY;
                 self.pending = None;
+                self.batch_pending = None;
                 self.done = self.cfg.max_iter == 0;
             }
             ResetLevel::Hard => {
@@ -371,6 +445,7 @@ impl NumericalOptimizer for Csa {
                 self.t_ac = self.cfg.t_ac0;
                 self.iter = 1;
                 self.pending = None;
+                self.batch_pending = None;
                 self.evals = 0;
                 self.best_cost = f64::INFINITY;
                 self.best_point.iter_mut().for_each(|v| *v = 0.0);
@@ -571,6 +646,82 @@ mod tests {
         let mut csa = Csa::new(CsaConfig::new(1, 1, 50).with_seed(6));
         let (best, cost) = drive(&mut csa, sphere);
         assert!(cost < 0.1, "cost {cost} best {best:?}");
+    }
+
+    #[test]
+    fn batched_run_matches_staged_run_exactly() {
+        // The service's scaling premise: evaluating a whole population at
+        // once must reproduce the staged trajectory bit for bit (same RNG
+        // consumption, same acceptance decisions, same best).
+        use crate::optimizer::drive_batch;
+        for seed in [1u64, 7, 42, 1234] {
+            for &(m, k) in &[(1usize, 5usize), (4, 1), (5, 12), (3, 30)] {
+                let mut staged = Csa::new(CsaConfig::new(2, m, k).with_seed(seed));
+                let (sp, sc) = drive(&mut staged, shifted_sphere);
+
+                let mut batched = Csa::new(CsaConfig::new(2, m, k).with_seed(seed));
+                let mut widths = Vec::new();
+                let (bp, bc) = drive_batch(&mut batched, |batch| {
+                    widths.push(batch.len());
+                    batch.iter().map(|c| shifted_sphere(c)).collect()
+                });
+
+                assert_eq!(sp, bp, "seed={seed} m={m} k={k}: final point diverged");
+                assert_eq!(sc, bc, "seed={seed} m={m} k={k}: best cost diverged");
+                assert_eq!(staged.evaluations(), batched.evaluations());
+                assert!(
+                    widths.iter().all(|&w| w == m),
+                    "every batch must be a full population: {widths:?}"
+                );
+                assert_eq!(widths.len(), k, "one batch per CSA iteration");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_run_counts_eq1_evaluations() {
+        use crate::optimizer::drive_batch;
+        let mut csa = Csa::with_params(1, 4, 6);
+        let _ = drive_batch(&mut csa, |batch| batch.iter().map(|c| sphere(c)).collect());
+        assert_eq!(csa.evaluations(), 24);
+    }
+
+    #[test]
+    fn batched_zero_max_iter_returns_empty() {
+        let mut csa = Csa::with_params(2, 3, 0);
+        assert!(csa.run_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn batched_nan_costs_are_sanitised() {
+        use crate::optimizer::drive_batch;
+        let mut csa = Csa::new(CsaConfig::new(1, 3, 8).with_seed(11));
+        let mut first = true;
+        let (_, cost) = drive_batch(&mut csa, |batch| {
+            batch
+                .iter()
+                .map(|c| {
+                    if first {
+                        first = false;
+                        f64::NAN
+                    } else {
+                        sphere(c)
+                    }
+                })
+                .collect()
+        });
+        assert!(cost.is_finite());
+    }
+
+    #[test]
+    fn soft_reset_clears_outstanding_batch() {
+        let mut csa = Csa::new(CsaConfig::new(1, 3, 8).with_seed(13));
+        let batch = csa.run_batch(&[]);
+        assert_eq!(batch.len(), 3);
+        csa.reset(ResetLevel::Soft);
+        // A fresh batched drive must start from the init population again.
+        let batch = csa.run_batch(&[]);
+        assert_eq!(batch.len(), 3);
     }
 
     #[test]

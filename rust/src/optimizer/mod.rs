@@ -113,6 +113,64 @@ pub trait NumericalOptimizer: Send {
     /// Best point found so far (internal domain) and its cost.
     /// `None` before the first cost has been consumed.
     fn best(&self) -> Option<(&[f64], f64)>;
+
+    /// Batched staged execution — the `service` layer's scaling hook.
+    ///
+    /// `run_batch(costs)` consumes the costs of the *previously returned*
+    /// batch (in order; empty on the first call) and returns the next batch
+    /// of candidates that may be evaluated **independently and in any
+    /// order** — e.g. one whole CSA candidate population. An empty return
+    /// means the optimization has ended and all supplied costs were
+    /// consumed.
+    ///
+    /// The default implementation degenerates to batches of one through
+    /// [`run`](NumericalOptimizer::run), so every optimizer is batch-drivable;
+    /// population optimizers override it to expose their real width.
+    /// Mixing `run` and `run_batch` calls on one instance is unsupported.
+    fn run_batch(&mut self, costs: &[f64]) -> Vec<Vec<f64>> {
+        debug_assert!(
+            costs.len() <= 1,
+            "default batching hands out one candidate at a time"
+        );
+        if self.is_end() {
+            return Vec::new();
+        }
+        let cost = costs.first().copied().unwrap_or(0.0);
+        let cand = self.run(cost).to_vec();
+        if self.is_end() {
+            // `run` consumed the cost and finished; the returned point is
+            // the final solution, not a candidate needing evaluation.
+            return Vec::new();
+        }
+        vec![cand]
+    }
+}
+
+/// Batched counterpart of [`drive`]: evaluate whole candidate batches until
+/// the optimizer ends, then return (best_point, cost). With the default
+/// `run_batch` this is exactly `drive`; with a population optimizer the
+/// evaluator sees the full population at once (the service evaluates it in
+/// parallel and through its cache).
+pub fn drive_batch<F>(opt: &mut dyn NumericalOptimizer, mut eval: F) -> (Vec<f64>, f64)
+where
+    F: FnMut(&[Vec<f64>]) -> Vec<f64>,
+{
+    let mut costs: Vec<f64> = Vec::new();
+    loop {
+        let batch = opt.run_batch(&costs);
+        if batch.is_empty() {
+            break;
+        }
+        costs = eval(&batch);
+        assert_eq!(
+            costs.len(),
+            batch.len(),
+            "evaluator must return one cost per candidate"
+        );
+    }
+    let final_point = opt.run(0.0).to_vec();
+    let best_cost = opt.best().map(|(_, c)| c).unwrap_or(f64::INFINITY);
+    (final_point, best_cost)
 }
 
 /// Convenience driver for plain function minimization (used by tests,
@@ -218,5 +276,33 @@ mod tests {
         assert_eq!(ResetLevel::from_level(0), ResetLevel::Soft);
         assert_eq!(ResetLevel::from_level(1), ResetLevel::Hard);
         assert_eq!(ResetLevel::from_level(9), ResetLevel::Hard);
+    }
+
+    #[test]
+    fn default_run_batch_degenerates_to_run() {
+        // The default batching must visit the same candidates as `drive`,
+        // one per batch, and land on the same best.
+        let points = vec![vec![0.5], vec![-0.5], vec![0.1]];
+        let mut serial = Probe::new(points.clone());
+        let (sp, sc) = drive(&mut serial, |x| x[0].abs());
+
+        let mut batched = Probe::new(points);
+        let mut seen = Vec::new();
+        let (bp, bc) = drive_batch(&mut batched, |batch| {
+            assert_eq!(batch.len(), 1, "default batch width is 1");
+            seen.push(batch[0].clone());
+            batch.iter().map(|x| x[0].abs()).collect()
+        });
+        assert_eq!(seen, vec![vec![0.5], vec![-0.5], vec![0.1]]);
+        assert_eq!((sp, sc), (bp, bc));
+        assert_eq!(batched.evaluations(), serial.evaluations());
+    }
+
+    #[test]
+    fn run_batch_on_finished_optimizer_is_empty() {
+        let mut p = Probe::new(vec![vec![0.2]]);
+        let _ = drive(&mut p, |x| x[0].abs());
+        assert!(p.is_end());
+        assert!(p.run_batch(&[]).is_empty());
     }
 }

@@ -300,7 +300,11 @@ impl NumericalOptimizer for NelderMead {
                     // Contraction. Outside if the reflection improved on the
                     // worst vertex, inside otherwise.
                     let outside = fr < f_worst;
-                    let toward: &[f64] = if outside { &self.xr } else { &self.verts[self.verts.len() - 1] };
+                    let toward: &[f64] = if outside {
+                        &self.xr
+                    } else {
+                        &self.verts[self.verts.len() - 1]
+                    };
                     for d in 0..self.cfg.dim {
                         self.xc[d] = self.centroid[d] + GAMMA * (toward[d] - self.centroid[d]);
                     }

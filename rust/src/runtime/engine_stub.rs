@@ -1,0 +1,129 @@
+//! Stub PJRT engine — compiled when the `xla` cargo feature is off (the
+//! default in the offline build, where the `xla` bindings crate cannot be
+//! vendored).
+//!
+//! The stub keeps the full public surface of the real engine so every
+//! caller — `patsma tune xla-*`, experiment E10, the `xla_variant_tuning`
+//! example — type-checks identically and degrades at *runtime* with a
+//! descriptive error from [`Engine::load`], instead of failing to build.
+//! No other constructor exists, so the remaining methods are unreachable
+//! by construction.
+
+use super::{manifest, RbState, VariantMeta, WaveState};
+use crate::workloads::Workload;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str = "patsma was built without the `xla` feature; the PJRT runtime is \
+     unavailable (rebuild with `--features xla` and a vendored `xla` crate)";
+
+/// A compiled kernel variant (stub: metadata only).
+pub struct Variant {
+    /// Manifest metadata.
+    pub meta: VariantMeta,
+}
+
+/// Stub engine: validates the manifest, then reports that the PJRT runtime
+/// was compiled out.
+pub struct Engine {
+    variants: Vec<Variant>,
+}
+
+impl Engine {
+    /// Always fails: parses the manifest (so path/format errors surface
+    /// first, as with the real engine) and then reports the missing
+    /// feature.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let _ = manifest::parse_manifest(dir)
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        bail!(UNAVAILABLE);
+    }
+
+    /// All variants.
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    /// Indices of variants of the given kind, manifest order.
+    pub fn variants_of(&self, kind: &str) -> Vec<usize> {
+        self.variants
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.meta.kind == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Metadata for variant `idx`.
+    pub fn meta(&self, idx: usize) -> &VariantMeta {
+        &self.variants[idx].meta
+    }
+
+    /// Unavailable without the `xla` feature.
+    pub fn rb_sweep(&self, _idx: usize, _state: &mut RbState) -> Result<f64> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Unavailable without the `xla` feature.
+    pub fn wave_step(&self, _idx: usize, _state: &mut WaveState) -> Result<f64> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stub variant-selection workload; cannot be constructed because
+/// [`Engine::load`] never succeeds.
+pub struct XlaVariantWorkload<'e> {
+    engine: &'e Engine,
+    kind: &'static str,
+}
+
+impl<'e> XlaVariantWorkload<'e> {
+    /// Unavailable without the `xla` feature.
+    pub fn rb(engine: &'e Engine) -> Result<Self> {
+        let _ = engine;
+        bail!(UNAVAILABLE)
+    }
+
+    /// Unavailable without the `xla` feature.
+    pub fn wave(engine: &'e Engine) -> Result<Self> {
+        let _ = engine;
+        bail!(UNAVAILABLE)
+    }
+
+    /// Number of selectable variants.
+    pub fn num_variants(&self) -> usize {
+        self.engine.variants().len()
+    }
+
+    /// Variant metadata by *tuner index*.
+    pub fn variant_meta(&self, _tuner_idx: usize) -> &VariantMeta {
+        unreachable!("stub XlaVariantWorkload cannot be constructed")
+    }
+}
+
+impl Workload for XlaVariantWorkload<'_> {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            "rb_sweep" => "xla-rb-variants",
+            _ => "xla-wave-variants",
+        }
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        (vec![0.0], vec![0.0])
+    }
+
+    fn run_iteration(&mut self, _params: &[i32]) -> f64 {
+        unreachable!("stub XlaVariantWorkload cannot be constructed")
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    fn reset_state(&mut self) {}
+}

@@ -26,7 +26,7 @@ pub mod metrics;
 pub mod pool;
 
 pub use metrics::LoopMetrics;
-pub use pool::ThreadPool;
+pub use pool::{in_region, ThreadPool};
 
 /// Loop-scheduling policy (the OpenMP `schedule` clause).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

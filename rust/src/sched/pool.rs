@@ -25,10 +25,48 @@
 
 use super::metrics::LoopMetrics;
 use super::Schedule;
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+thread_local! {
+    /// True while this thread is executing inside a pool region (as the
+    /// caller or as a worker). Nested `parallel_for` calls — a tuning
+    /// session running as a region member whose workload itself uses a pool
+    /// — would deadlock on the single region slot, so they are executed
+    /// inline instead (OpenMP's nested-parallelism-off default). The flag
+    /// is process-wide on purpose: nesting across *different* pools must
+    /// also serialise, or concurrent sessions oversubscribe the machine.
+    static IN_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+/// RAII guard marking the current thread as inside a region; restores the
+/// previous state on drop so panics unwind cleanly through regions.
+struct RegionMark {
+    prev: bool,
+}
+
+impl RegionMark {
+    fn enter() -> Self {
+        let prev = IN_REGION.with(|f| f.replace(true));
+        Self { prev }
+    }
+}
+
+impl Drop for RegionMark {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_REGION.with(|f| f.set(prev));
+    }
+}
+
+/// True when the calling thread is already inside a pool region (and a
+/// `parallel_for` issued now would therefore run inline).
+pub fn in_region() -> bool {
+    IN_REGION.with(|f| f.get())
+}
 
 // §Perf iteration 1 (tried, REVERTED): spin-before-sleep on dispatch and
 // join. On this testbed (shared/oversubscribed CPUs) every spin budget
@@ -138,7 +176,21 @@ impl ThreadPool {
     /// Run `task(member_id)` on every team member and wait for all of them.
     /// The region's fork/join — everything else builds on this.
     fn run_region(&self, task: &(dyn Fn(usize) + Sync)) {
+        // Nested region: the calling thread is already a team member of an
+        // active region (possibly of another pool). Dispatching would
+        // deadlock on the region slot, so run the whole loop inline on this
+        // thread. Calling `task` once per member id is correct for every
+        // schedule: `Static`/`StaticChunk` partition by member id, while
+        // `Dynamic`/`Guided` drain a shared counter (the first call does
+        // all the work and the rest no-op).
+        if in_region() {
+            for tid in 0..self.threads {
+                task(tid);
+            }
+            return;
+        }
         if self.threads == 1 {
+            let _mark = RegionMark::enter();
             task(0);
             return;
         }
@@ -162,7 +214,10 @@ impl ThreadPool {
             self.shared.work_cv.notify_all();
         }
         // The caller is team member 0.
-        task(0);
+        {
+            let _mark = RegionMark::enter();
+            task(0);
+        }
         let mut st = self.shared.state.lock().unwrap();
         st.active -= 1;
         if st.active == 0 {
@@ -402,7 +457,10 @@ fn worker_loop(shared: Arc<Shared>, tid: usize) {
         };
         // SAFETY: run_region keeps the closure alive until active == 0,
         // which only happens after this call returns.
-        unsafe { (*task.ptr)(tid) };
+        {
+            let _mark = RegionMark::enter();
+            unsafe { (*task.ptr)(tid) };
+        }
         let mut st = shared.state.lock().unwrap();
         st.active -= 1;
         if st.active == 0 {
@@ -604,5 +662,60 @@ mod tests {
         let pool = ThreadPool::global();
         assert!(pool.threads() >= 1);
         coverage_check(pool, 128, Schedule::Guided(2));
+    }
+
+    #[test]
+    fn nested_regions_run_inline_without_deadlock() {
+        // A region member issuing another parallel_for (the service's
+        // session-inside-region shape) must neither deadlock nor lose
+        // iterations, for every schedule of the inner loop.
+        let pool = ThreadPool::new(4);
+        for inner_sched in [
+            Schedule::Static,
+            Schedule::StaticChunk(3),
+            Schedule::Dynamic(2),
+            Schedule::Guided(2),
+        ] {
+            let hits: Vec<AtomicUsize> = (0..8 * 50).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for(0, 8, Schedule::Dynamic(1), |outer| {
+                assert!(in_region(), "member must observe the region flag");
+                pool.parallel_for(0, 50, inner_sched, |inner| {
+                    hits[outer * 50 + inner].fetch_add(1, Ordering::Relaxed);
+                });
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} under {inner_sched}");
+            }
+        }
+        assert!(!in_region(), "flag must clear after the region");
+    }
+
+    #[test]
+    fn nested_regions_across_pools_run_inline() {
+        // Nesting across *different* pools must also run inline (the
+        // workload-on-global-pool-inside-service-region shape).
+        let outer = ThreadPool::new(3);
+        let inner = ThreadPool::new(4);
+        let total = AtomicUsize::new(0);
+        outer.parallel_for(0, 6, Schedule::Dynamic(1), |_| {
+            inner.parallel_for(0, 32, Schedule::Guided(4), |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 6 * 32);
+    }
+
+    #[test]
+    fn doubly_nested_regions_are_safe() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.parallel_for(0, 4, Schedule::Static, |_| {
+            pool.parallel_for(0, 4, Schedule::Dynamic(1), |_| {
+                pool.parallel_for(0, 4, Schedule::Guided(1), |_| {
+                    total.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 4 * 4);
     }
 }

@@ -1,0 +1,262 @@
+//! Results registry — what the service hands the coordinator and CLI.
+//!
+//! Each completed session yields a [`SessionReport`]; a batch run yields a
+//! [`ServiceReport`] (sessions + a cache-counter snapshot). The registry
+//! serialises to a plain whitespace-separated text file (the offline build
+//! has no serde) so `patsma service report` can render results from an
+//! earlier `patsma service run` process.
+
+use super::cache::CacheStats;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Magic first line of a registry file (format version gate).
+const HEADER: &str = "# patsma-service-registry v1";
+
+/// One finished tuning session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionReport {
+    /// Caller-chosen session label (no whitespace).
+    pub id: String,
+    /// Workload descriptor (the fingerprint input; no whitespace).
+    pub workload: String,
+    /// Optimizer name.
+    pub optimizer: String,
+    /// Optimizer evaluations consumed (cache hits included — the optimizer
+    /// cannot tell a cached cost from a fresh one).
+    pub evaluations: u64,
+    /// Target iterations actually executed (cache hits excluded — that is
+    /// the point of the cache).
+    pub target_iterations: u64,
+    /// Batch evaluations answered from the shared cache.
+    pub cache_hits: u64,
+    /// Batch evaluations that ran the target.
+    pub cache_misses: u64,
+    /// Best measured point (user domain, quantised).
+    pub best_point: Vec<i64>,
+    /// Best measured cost.
+    pub best_cost: f64,
+    /// Session wall-clock seconds.
+    pub wall_secs: f64,
+}
+
+/// A batch of session results plus the shared-cache counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceReport {
+    /// Per-session results, spec order.
+    pub sessions: Vec<SessionReport>,
+    /// Cache counters at the end of the batch.
+    pub cache: CacheStats,
+}
+
+impl ServiceReport {
+    /// Total cache hits across the reported sessions.
+    pub fn session_cache_hits(&self) -> u64 {
+        self.sessions.iter().map(|s| s.cache_hits).sum()
+    }
+
+    /// Render as a markdown report (the `patsma service report` output).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "\n| session | workload | optimizer | evals | target iters | cache hits | \
+             best point | best cost | wall |\n|---|---|---|---|---|---|---|---|---|\n",
+        );
+        for s in &self.sessions {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {:?} | {:.6e} | {} |\n",
+                s.id,
+                s.workload,
+                s.optimizer,
+                s.evaluations,
+                s.target_iterations,
+                s.cache_hits,
+                s.best_point,
+                s.best_cost,
+                crate::benchkit::fmt_time(s.wall_secs),
+            ));
+        }
+        let c = &self.cache;
+        out.push_str(&format!(
+            "\nsessions: {}; session cache hits: {}; shared cache: {} hits / {} misses \
+             ({:.1}% hit rate), {} entries\n",
+            self.sessions.len(),
+            self.session_cache_hits(),
+            c.hits,
+            c.misses,
+            100.0 * c.hit_rate(),
+            c.entries,
+        ));
+        out
+    }
+
+    /// Serialise to the plain-text registry format.
+    pub fn to_text(&self) -> String {
+        let mut out = format!("{HEADER}\n");
+        out.push_str(&format!(
+            "cache {} {} {}\n",
+            self.cache.hits, self.cache.misses, self.cache.entries
+        ));
+        for s in &self.sessions {
+            let point = s
+                .best_point
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push_str(&format!(
+                "session {} {} {} {} {} {} {} {} {} {}\n",
+                s.id,
+                s.workload,
+                s.optimizer,
+                s.evaluations,
+                s.target_iterations,
+                s.cache_hits,
+                s.cache_misses,
+                point,
+                s.best_cost,
+                s.wall_secs,
+            ));
+        }
+        out
+    }
+
+    /// Parse the plain-text registry format.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(h) if h.trim() == HEADER => {}
+            other => bail!("not a service registry (header {other:?})"),
+        }
+        let mut cache = CacheStats {
+            hits: 0,
+            misses: 0,
+            entries: 0,
+        };
+        let mut sessions = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            let ctx = |what: &str| format!("registry line {}: bad {what}", lineno + 2);
+            match f[0] {
+                "cache" if f.len() == 4 => {
+                    cache = CacheStats {
+                        hits: f[1].parse().with_context(|| ctx("hits"))?,
+                        misses: f[2].parse().with_context(|| ctx("misses"))?,
+                        entries: f[3].parse().with_context(|| ctx("entries"))?,
+                    };
+                }
+                "session" if f.len() == 11 => {
+                    let best_point = f[8]
+                        .split(',')
+                        .map(|v| v.parse::<i64>())
+                        .collect::<std::result::Result<Vec<_>, _>>()
+                        .with_context(|| ctx("best point"))?;
+                    sessions.push(SessionReport {
+                        id: f[1].to_string(),
+                        workload: f[2].to_string(),
+                        optimizer: f[3].to_string(),
+                        evaluations: f[4].parse().with_context(|| ctx("evaluations"))?,
+                        target_iterations: f[5].parse().with_context(|| ctx("iters"))?,
+                        cache_hits: f[6].parse().with_context(|| ctx("cache hits"))?,
+                        cache_misses: f[7].parse().with_context(|| ctx("cache misses"))?,
+                        best_point,
+                        best_cost: f[9].parse().with_context(|| ctx("best cost"))?,
+                        wall_secs: f[10].parse().with_context(|| ctx("wall seconds"))?,
+                    });
+                }
+                _ => bail!("registry line {}: unrecognised record {line:?}", lineno + 2),
+            }
+        }
+        Ok(Self { sessions, cache })
+    }
+
+    /// Write the registry to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing registry {}", path.display()))
+    }
+
+    /// Read a registry from `path`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading registry {}", path.display()))?;
+        Self::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServiceReport {
+        ServiceReport {
+            sessions: vec![
+                SessionReport {
+                    id: "s0".into(),
+                    workload: "synthetic/best=48/dim=1".into(),
+                    optimizer: "csa".into(),
+                    evaluations: 20,
+                    target_iterations: 17,
+                    cache_hits: 3,
+                    cache_misses: 17,
+                    best_point: vec![47],
+                    best_cost: 1.0104,
+                    wall_secs: 0.002,
+                },
+                SessionReport {
+                    id: "s1".into(),
+                    workload: "synthetic/best=24/dim=2".into(),
+                    optimizer: "nelder-mead".into(),
+                    evaluations: 12,
+                    target_iterations: 12,
+                    cache_hits: 0,
+                    cache_misses: 12,
+                    best_point: vec![25, 23],
+                    best_cost: 2.1,
+                    wall_secs: 0.001,
+                },
+            ],
+            cache: CacheStats {
+                hits: 3,
+                misses: 29,
+                entries: 29,
+            },
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_is_lossless() {
+        let r = sample();
+        let parsed = ServiceReport::from_text(&r.to_text()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let r = sample();
+        let path = std::env::temp_dir().join("patsma-registry-test.txt");
+        r.save(&path).unwrap();
+        let loaded = ServiceReport::load(&path).unwrap();
+        assert_eq!(loaded, r);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn render_reports_cache_hits() {
+        let text = sample().render();
+        assert!(text.contains("cache hits"), "{text}");
+        assert!(text.contains("session cache hits: 3"), "{text}");
+        assert!(text.contains("| s0 |"), "{text}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ServiceReport::from_text("nonsense").is_err());
+        assert!(
+            ServiceReport::from_text("# patsma-service-registry v1\nbogus line here").is_err()
+        );
+    }
+}

@@ -24,9 +24,7 @@ pub fn forall<T: std::fmt::Debug>(
     for case in 0..cases {
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
-            panic!(
-                "property failed (seed {seed:#x}, case {case}): {msg}\n  input: {input:?}"
-            );
+            panic!("property failed (seed {seed:#x}, case {case}): {msg}\n  input: {input:?}");
         }
     }
 }

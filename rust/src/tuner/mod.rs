@@ -31,6 +31,24 @@ pub use point::PointValue;
 use crate::optimizer::{Csa, CsaConfig, NumericalOptimizer, ResetLevel};
 use std::time::Instant;
 
+/// Rescale one internal-domain coordinate (`[-1, 1]`) into the user box
+/// `[lo, hi]`. Shared by [`Autotuning`] and the `service` layer so both
+/// hand applications identical values.
+#[inline]
+pub fn rescale_internal(x: f64, lo: f64, hi: f64) -> f64 {
+    lo + (x + 1.0) * 0.5 * (hi - lo)
+}
+
+/// Quantise a rescaled coordinate onto the integer lattice of the user box
+/// (round half away from zero, then clamp). This is **the** rounding both
+/// `Autotuning::write_point` and the service's evaluation-cache key use —
+/// sharing it guarantees a cache key always names exactly the value the
+/// application would have been handed.
+#[inline]
+pub fn quantize_integer(u: f64, lo: f64, hi: f64) -> f64 {
+    u.round().clamp(lo, hi)
+}
+
 /// One completed cost evaluation, recorded for reports and experiments.
 #[derive(Debug, Clone)]
 pub struct Sample {
@@ -154,7 +172,7 @@ impl Autotuning {
     /// Rescale one internal coordinate to the user domain.
     #[inline]
     fn rescale(&self, d: usize, x: f64) -> f64 {
-        self.min[d] + (x + 1.0) * 0.5 * (self.max[d] - self.min[d])
+        rescale_internal(x, self.min[d], self.max[d])
     }
 
     /// Write the given internal point into the application's buffer,
@@ -166,11 +184,12 @@ impl Autotuning {
             "point buffer/dimension mismatch"
         );
         for d in 0..point.len() {
-            let mut u = self.rescale(d, internal[d]);
-            if P::IS_INTEGER {
-                u = u.round();
-            }
-            u = u.clamp(self.min[d], self.max[d]);
+            let raw = self.rescale(d, internal[d]);
+            let u = if P::IS_INTEGER {
+                quantize_integer(raw, self.min[d], self.max[d])
+            } else {
+                raw.clamp(self.min[d], self.max[d])
+            };
             point[d] = P::from_f64(u);
             self.last_written[d] = point[d].to_f64();
         }
@@ -729,6 +748,18 @@ mod tests {
             0,
             Box::new(GridSearch::new(1, 4)),
         );
+    }
+
+    #[test]
+    fn rescale_and_quantize_helpers() {
+        // Domain endpoints and centre map where write_point puts them.
+        assert_eq!(rescale_internal(-1.0, 1.0, 65.0), 1.0);
+        assert_eq!(rescale_internal(1.0, 1.0, 65.0), 65.0);
+        assert_eq!(rescale_internal(0.0, 1.0, 65.0), 33.0);
+        assert_eq!(quantize_integer(32.4, 1.0, 64.0), 32.0);
+        assert_eq!(quantize_integer(32.5, 1.0, 64.0), 33.0);
+        assert_eq!(quantize_integer(900.0, 1.0, 64.0), 64.0);
+        assert_eq!(quantize_integer(-3.0, 1.0, 64.0), 1.0);
     }
 
     #[test]

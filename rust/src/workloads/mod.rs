@@ -23,6 +23,7 @@ pub mod spmv;
 pub mod synthetic;
 
 use crate::sched::ThreadPool;
+use anyhow::{bail, Result};
 
 /// An iterative target method with tunable integer performance parameters.
 ///
@@ -56,4 +57,23 @@ pub trait Workload {
 /// own pool through the workload constructors instead).
 pub fn default_pool() -> &'static ThreadPool {
     ThreadPool::global()
+}
+
+/// Names accepted by [`by_name`], in display order. (The `xla-*` variant
+/// workloads are constructed separately — they need a loaded PJRT engine.)
+pub const NAMES: &[&str] = &["rb-gauss-seidel", "fdm3d", "rtm", "matmul", "conv2d", "spmv"];
+
+/// Construct a workload at its default benchmark size by CLI name — the
+/// single registry shared by `patsma tune`, `patsma verify` and the
+/// service's named-workload sessions.
+pub fn by_name(name: &str) -> Result<Box<dyn Workload>> {
+    Ok(match name {
+        "rb-gauss-seidel" => Box::new(rb_gauss_seidel::RbGaussSeidel::with_size(384)),
+        "fdm3d" => Box::new(fdm3d::Fdm3d::with_size(56, 56, 64)),
+        "rtm" => Box::new(rtm::Rtm::with_size(32, 32, 40, 40)),
+        "matmul" => Box::new(matmul::MatMul::with_size(256)),
+        "conv2d" => Box::new(conv2d::Conv2d::with_size(512, 512, 7)),
+        "spmv" => Box::new(spmv::Spmv::with_size(200_000, 50_000, 12)),
+        other => bail!("unknown workload {other:?}; known: {NAMES:?}"),
+    })
 }

@@ -1,11 +1,17 @@
 //! Integration: AOT artifacts → PJRT runtime → cross-layer numerics.
 //!
+//! Compiled only with the `xla` cargo feature: the default (offline) build
+//! ships a stub PJRT engine without an execution path, so there is nothing
+//! to integrate against.
+//!
 //! Requires `make artifacts` to have produced `artifacts/` (the Makefile
 //! orders this before `cargo test`). The engine is compiled once and shared
 //! across tests; the heavyweight check is the *cross-layer* one — the XLA
 //! red–black sweep (L2/L1, AOT'd Pallas) must match the Rust shared-memory
 //! substrate (L3) bit-for-bit step after step, proving the three layers
 //! implement the same algorithm.
+
+#![cfg(feature = "xla")]
 
 use patsma::runtime::{default_artifact_dir, Engine, RbState, WaveState, XlaVariantWorkload};
 use patsma::sched::ThreadPool;

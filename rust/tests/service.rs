@@ -1,0 +1,171 @@
+//! Integration: the concurrent multi-session tuning service.
+//!
+//! The headline invariant (ISSUE 1 acceptance): running ≥ 4 sessions
+//! concurrently must produce, per session, exactly the result of its serial
+//! run on the deterministic `synthetic` workload — same seed ⇒ same best
+//! cost, same best point, same evaluation count — with cached evaluations
+//! exact by construction. Cache *hit counts* are the only field allowed to
+//! vary with scheduling (who warms a shared entry first is a race by
+//! design).
+
+use patsma::service::{OptimizerSpec, ServiceReport, SessionSpec, TuningService, WorkloadSpec};
+
+/// A mixed batch: 8 sessions over 2 landscapes × 4 optimizers, seeds fixed.
+fn mixed_specs() -> Vec<SessionSpec> {
+    let mut specs = Vec::new();
+    for (w, optimum) in [(0u32, 48.0f64), (1, 24.0)] {
+        for (o, opt) in [
+            OptimizerSpec::Csa,
+            OptimizerSpec::NelderMead,
+            OptimizerSpec::Sa,
+            OptimizerSpec::Pso,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let id = format!("w{w}-{}", opt.name());
+            specs.push(
+                SessionSpec::synthetic(id, optimum, 1000 + (w as u64) * 10 + o as u64)
+                    .with_optimizer(opt)
+                    .with_budget(4, 6),
+            );
+        }
+    }
+    specs
+}
+
+fn run_with_concurrency(concurrency: usize, specs: &[SessionSpec]) -> ServiceReport {
+    TuningService::new(concurrency).run(specs).unwrap()
+}
+
+#[test]
+fn concurrent_sessions_match_their_serial_runs_exactly() {
+    let specs = mixed_specs();
+    assert!(specs.len() >= 4, "acceptance demands >= 4 concurrent sessions");
+
+    let serial = run_with_concurrency(1, &specs);
+    let concurrent = run_with_concurrency(6, &specs);
+
+    assert_eq!(serial.sessions.len(), specs.len());
+    assert_eq!(concurrent.sessions.len(), specs.len());
+    for (s, c) in serial.sessions.iter().zip(&concurrent.sessions) {
+        assert_eq!(s.id, c.id, "reports must come back in spec order");
+        assert_eq!(s.best_point, c.best_point, "session {}", s.id);
+        assert_eq!(
+            s.best_cost.to_bits(),
+            c.best_cost.to_bits(),
+            "session {}: serial {} vs concurrent {}",
+            s.id,
+            s.best_cost,
+            c.best_cost
+        );
+        assert_eq!(s.evaluations, c.evaluations, "session {}", s.id);
+        // Hits and misses may redistribute across concurrent sessions, but
+        // every evaluation is exactly one of the two.
+        assert_eq!(
+            c.cache_hits + c.cache_misses,
+            c.evaluations,
+            "session {}",
+            s.id
+        );
+    }
+}
+
+#[test]
+fn concurrent_run_is_deterministic_across_repeats() {
+    let specs = mixed_specs();
+    let a = run_with_concurrency(4, &specs);
+    let b = run_with_concurrency(4, &specs);
+    for (x, y) in a.sessions.iter().zip(&b.sessions) {
+        assert_eq!(x.best_point, y.best_point, "session {}", x.id);
+        assert_eq!(x.best_cost.to_bits(), y.best_cost.to_bits(), "session {}", x.id);
+        assert_eq!(x.evaluations, y.evaluations, "session {}", x.id);
+    }
+}
+
+#[test]
+fn identical_sessions_share_the_cache() {
+    // Four clones of one scenario (distinct ids, same landscape/seed): the
+    // union of their evaluations collapses onto one session's worth of
+    // distinct points, so the shared cache must absorb most of the work.
+    let base = SessionSpec::synthetic("clone", 48.0, 77).with_budget(4, 8);
+    let specs: Vec<SessionSpec> = (0..4)
+        .map(|i| {
+            let mut s = base.clone();
+            s.id = format!("clone{i}");
+            s
+        })
+        .collect();
+    let service = TuningService::new(4);
+    let report = service.run(&specs).unwrap();
+
+    let total_evals: u64 = report.sessions.iter().map(|s| s.evaluations).sum();
+    assert_eq!(total_evals, 4 * 32);
+    // All four trajectories are identical, so at most 32 distinct points
+    // exist; everything beyond the first computation of each must hit
+    // (modulo concurrent double-computes, which can only reduce hits, never
+    // correctness — so check the entry count, which is scheduling-proof).
+    assert!(
+        report.cache.entries <= 32,
+        "clone sessions must share entries: {:?}",
+        report.cache
+    );
+    for s in &report.sessions {
+        assert_eq!(s.best_point, report.sessions[0].best_point);
+        assert_eq!(s.best_cost.to_bits(), report.sessions[0].best_cost.to_bits());
+    }
+}
+
+#[test]
+fn multidimensional_synthetic_sessions_work() {
+    let mut spec = SessionSpec::synthetic("dim2", 20.0, 9).with_budget(5, 12);
+    spec.workload = WorkloadSpec::Synthetic {
+        optimum: 20.0,
+        dim: 2,
+        lo: 1.0,
+        hi: 64.0,
+    };
+    let report = TuningService::new(3).run(&[spec]).unwrap();
+    let s = &report.sessions[0];
+    assert_eq!(s.best_point.len(), 2);
+    assert_eq!(s.evaluations, 60);
+    for &p in &s.best_point {
+        assert!((1..=64).contains(&p), "point {p} out of domain");
+    }
+}
+
+#[test]
+fn registry_roundtrips_through_disk() {
+    let specs = mixed_specs();
+    let service = TuningService::new(4);
+    service.run(&specs).unwrap();
+    let report = service.report();
+
+    let path = std::env::temp_dir().join("patsma-service-integration-registry.txt");
+    report.save(&path).unwrap();
+    let loaded = ServiceReport::load(&path).unwrap();
+    assert_eq!(loaded, report);
+    assert!(loaded.render().contains("cache hits"));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn named_workload_session_runs_end_to_end() {
+    // One real shared-memory workload through the service path (kept tiny:
+    // this exercises plumbing, not performance). rb-gauss-seidel at its
+    // default size is the cheapest named workload per iteration.
+    let spec = SessionSpec {
+        id: "named-rbgs".into(),
+        workload: WorkloadSpec::Named("rb-gauss-seidel".into()),
+        optimizer: OptimizerSpec::Csa,
+        ignore: 0,
+        num_opt: 2,
+        max_iter: 2,
+        seed: 11,
+    };
+    let report = TuningService::new(2).run(&[spec]).unwrap();
+    let s = &report.sessions[0];
+    assert_eq!(s.evaluations, 4);
+    assert!(s.best_cost.is_finite() && s.best_cost > 0.0);
+    assert!((1..=384).contains(&s.best_point[0]));
+}
