@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Threshold check for PATSMA bench JSON (the perf-smoke CI gate).
+
+Compares a freshly measured ``patsma bench --json`` report against the
+committed ``BENCH_baseline.json`` and fails (exit 1) when any entry's
+*median* regressed by more than ``--max-regress`` percent.
+
+Rules:
+  * only entries present in BOTH files are compared (a renamed or new
+    entry is reported as info, never a failure — the baseline is refreshed
+    by committing a new file, see README);
+  * the schema tags must match exactly (``patsma-bench-v1``);
+  * sub-microsecond medians are skipped — at that scale timer quantisation,
+    not code, dominates the ratio.
+
+Usage:
+  python ci/check_bench.py --baseline BENCH_baseline.json --candidate out.json \
+      [--max-regress 25]
+  python ci/check_bench.py --self-test
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "patsma-bench-v1"
+
+# Medians below this are timer noise, not signal (seconds).
+MIN_COMPARABLE_SECS = 1e-6
+
+
+def load_report(path: str) -> dict:
+    with open(path, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    return doc
+
+
+def entries_by_id(doc: dict) -> dict:
+    return {e["id"]: e for e in doc.get("entries", [])}
+
+
+def compare(baseline: dict, candidate: dict, max_regress_pct: float):
+    """Return (failures, notes): failures are >threshold median regressions
+    on entries common to both reports; notes are informational lines."""
+    base = entries_by_id(baseline)
+    cand = entries_by_id(candidate)
+    failures, notes = [], []
+    for entry_id in sorted(set(base) - set(cand)):
+        notes.append(f"entry {entry_id!r} missing from candidate (baseline stale?)")
+    for entry_id in sorted(set(cand) - set(base)):
+        notes.append(f"entry {entry_id!r} is new (not in baseline, not checked)")
+    limit = 1.0 + max_regress_pct / 100.0
+    for entry_id in sorted(set(base) & set(cand)):
+        b, c = base[entry_id]["median_secs"], cand[entry_id]["median_secs"]
+        if b < MIN_COMPARABLE_SECS or c < MIN_COMPARABLE_SECS:
+            notes.append(f"entry {entry_id!r} skipped (sub-µs median, timer noise)")
+            continue
+        ratio = c / b
+        line = f"{entry_id}: baseline {b:.6g}s candidate {c:.6g}s ({ratio:.2f}x)"
+        if ratio > limit:
+            failures.append(f"REGRESSION {line} > {limit:.2f}x allowed")
+        else:
+            notes.append(f"ok {line}")
+    return failures, notes
+
+
+def self_test() -> int:
+    baseline = {
+        "schema": SCHEMA,
+        "entries": [
+            {"id": "workload/spmv", "median_secs": 1.0e-3},
+            {"id": "workload/rb-gauss-seidel", "median_secs": 2.0e-3},
+            {"id": "dispatch/parallel-for-empty", "median_secs": 5.0e-7},
+            {"id": "optimizer/gone", "median_secs": 1.0e-3},
+        ],
+    }
+    candidate = {
+        "schema": SCHEMA,
+        "entries": [
+            # 10% slower: within a 25% threshold.
+            {"id": "workload/spmv", "median_secs": 1.1e-3},
+            # 50% slower: must be flagged.
+            {"id": "workload/rb-gauss-seidel", "median_secs": 3.0e-3},
+            # Sub-µs: skipped even though the ratio is huge.
+            {"id": "dispatch/parallel-for-empty", "median_secs": 9.0e-7},
+            # New entry: informational only.
+            {"id": "workload/new-kid", "median_secs": 1.0},
+        ],
+    }
+    failures, notes = compare(baseline, candidate, 25.0)
+    assert len(failures) == 1, failures
+    assert "rb-gauss-seidel" in failures[0], failures
+    assert any("skipped" in n for n in notes), notes
+    assert any("new" in n for n in notes), notes
+    assert any("missing" in n for n in notes), notes
+
+    # Exactly at the threshold: not a regression (strict >).
+    ok, _ = compare(
+        {"schema": SCHEMA, "entries": [{"id": "x", "median_secs": 1.0e-3}]},
+        {"schema": SCHEMA, "entries": [{"id": "x", "median_secs": 1.25e-3}]},
+        25.0,
+    )
+    assert ok == [], ok
+    # A hair past it: flagged.
+    bad, _ = compare(
+        {"schema": SCHEMA, "entries": [{"id": "x", "median_secs": 1.0e-3}]},
+        {"schema": SCHEMA, "entries": [{"id": "x", "median_secs": 1.2501e-3}]},
+        25.0,
+    )
+    assert len(bad) == 1, bad
+
+    # Faster-than-baseline is always fine.
+    fast, _ = compare(
+        {"schema": SCHEMA, "entries": [{"id": "x", "median_secs": 1.0e-3}]},
+        {"schema": SCHEMA, "entries": [{"id": "x", "median_secs": 0.5e-3}]},
+        25.0,
+    )
+    assert fast == [], fast
+
+    print("check_bench self-test: OK")
+    return 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--baseline", help="committed BENCH_baseline.json")
+    parser.add_argument("--candidate", help="freshly measured bench JSON")
+    parser.add_argument(
+        "--max-regress",
+        type=float,
+        default=25.0,
+        metavar="PCT",
+        help="maximum allowed median regression in percent (default 25)",
+    )
+    parser.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the built-in unit test of the threshold logic and exit",
+    )
+    args = parser.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if not args.baseline or not args.candidate:
+        parser.error("--baseline and --candidate are required (or --self-test)")
+
+    baseline = load_report(args.baseline)
+    candidate = load_report(args.candidate)
+    failures, notes = compare(baseline, candidate, args.max_regress)
+    for note in notes:
+        print(note)
+    for failure in failures:
+        print(failure, file=sys.stderr)
+    if failures:
+        print(
+            f"\n{len(failures)} perf regression(s) beyond {args.max_regress:.0f}% "
+            "— investigate, or refresh BENCH_baseline.json if intentional",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench check: no regression beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,7 @@
 //! loop, then `single_exec_runtime` inside it, and prints the speedup table
 //! against the default chunk values (experiments E5/E6).
 
-use patsma::benchkit::{bench, fmt_time, render_table};
+use patsma::bench::{bench, fmt_time, render_table};
 use patsma::sched::ThreadPool;
 use patsma::tuner::Autotuning;
 use patsma::workloads::rb_gauss_seidel::RbGaussSeidel;

@@ -13,7 +13,7 @@
 //! headline numbers (tuned vs untuned wall-clock, amortisation point) are
 //! recorded in EXPERIMENTS.md.
 
-use patsma::benchkit::fmt_time;
+use patsma::bench::fmt_time;
 use patsma::sched::ThreadPool;
 use patsma::stats::Summary;
 use patsma::tuner::Autotuning;

@@ -7,7 +7,7 @@
 //! cargo run --release --example xla_variant_tuning
 //! ```
 
-use patsma::benchkit::fmt_time;
+use patsma::bench::fmt_time;
 use patsma::runtime::{default_artifact_dir, Engine, XlaVariantWorkload};
 use patsma::tuner::Autotuning;
 use patsma::workloads::Workload;

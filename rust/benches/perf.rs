@@ -7,7 +7,7 @@
 //! 3. per-schedule scheduling overhead at fine granularity (counter
 //!    contention) on a real loop body.
 
-use patsma::benchkit::{bench, fmt_time, render_table};
+use patsma::bench::{bench, fmt_time, render_table};
 use patsma::sched::{Schedule, ThreadPool};
 use patsma::tuner::Autotuning;
 use patsma::workloads::rb_gauss_seidel::RbGaussSeidel;

@@ -1,0 +1,41 @@
+//! The perf observatory: deterministic bench harness, renderers and the
+//! stable BENCH JSON schema (criterion is unavailable offline).
+//!
+//! Three layers:
+//! * [`runner`] — the measurement primitive ([`bench`]) used by every
+//!   `rust/benches/*.rs` target and the experiment coordinator, plus the
+//!   named suites behind `patsma bench --suite tier1|full`;
+//! * [`report`] — human-facing renderers (time formatting, markdown tables,
+//!   CSV) shared with `patsma experiment` and `patsma service report`;
+//! * [`json`] — a dependency-free JSON value with order-preserving objects,
+//!   so `BENCH_*.json` files are deterministic in key sequence and CI can
+//!   threshold-check them against the committed `BENCH_baseline.json`
+//!   (`ci/check_bench.py`).
+//!
+//! The BENCH JSON schema (`patsma-bench-v1`):
+//!
+//! ```json
+//! {
+//!   "schema": "patsma-bench-v1",
+//!   "suite": "tier1",
+//!   "threads": 4,
+//!   "quick": false,
+//!   "entries": [
+//!     {"id": "workload/spmv", "samples": 31, "median_secs": 1.5e-4,
+//!      "p95_secs": 2.0e-4, "mean_secs": 1.6e-4, "min_secs": 1.2e-4}
+//!   ],
+//!   "dispatch_overhead_secs": 3.1e-6,
+//!   "cache": {"hits": 10, "misses": 86, "hit_rate": 0.104}
+//! }
+//! ```
+//!
+//! Two consecutive runs of one suite emit identical key sequences and entry
+//! ids (the workload set is a fixed list); only measured values vary.
+
+pub mod json;
+pub mod report;
+pub mod runner;
+
+pub use json::Json;
+pub use report::{fmt_time, render_csv, render_table};
+pub use runner::{bench, run_suite, BenchEntry, BenchReport, Measurement, Suite, SCHEMA};

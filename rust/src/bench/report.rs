@@ -1,50 +1,8 @@
-//! Minimal benchmark harness (criterion is unavailable offline).
-//!
-//! Used by every `rust/benches/*.rs` target (`cargo bench`, `harness =
-//! false`) and by the experiment coordinator. Protocol per measurement:
-//! warm-up runs, then `samples` timed runs, reported as a [`Measurement`]
-//! with median / mean / CI so run-to-run noise is visible in the tables.
+//! Human-facing renderers for bench results: time formatting, markdown
+//! tables and two-column CSV (the formats `patsma experiment` and the
+//! `cargo bench` targets print).
 
-use crate::stats::Summary;
-use std::time::Instant;
-
-/// Result of benchmarking one configuration.
-#[derive(Debug, Clone)]
-pub struct Measurement {
-    /// Configuration label (row name in the report).
-    pub label: String,
-    /// Per-sample wall-clock seconds.
-    pub samples: Vec<f64>,
-}
-
-impl Measurement {
-    /// Batch statistics over the samples.
-    pub fn summary(&self) -> Summary {
-        Summary::from_samples(&self.samples)
-    }
-
-    /// Median seconds (the headline number; robust to scheduler noise).
-    pub fn median(&self) -> f64 {
-        self.summary().median()
-    }
-}
-
-/// Benchmark a closure: `warmup` unrecorded runs, then `samples` timed runs.
-pub fn bench<F: FnMut()>(label: &str, warmup: usize, samples: usize, mut f: F) -> Measurement {
-    for _ in 0..warmup {
-        f();
-    }
-    let mut out = Vec::with_capacity(samples);
-    for _ in 0..samples {
-        let t0 = Instant::now();
-        f();
-        out.push(t0.elapsed().as_secs_f64());
-    }
-    Measurement {
-        label: label.to_string(),
-        samples: out,
-    }
-}
+use super::runner::Measurement;
 
 /// Pretty seconds: ns/µs/ms/s with 3 significant digits.
 pub fn fmt_time(secs: f64) -> String {
@@ -102,15 +60,6 @@ pub fn render_csv(header: (&str, &str), points: &[(f64, f64)]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn bench_collects_requested_samples() {
-        let mut count = 0;
-        let m = bench("x", 2, 5, || count += 1);
-        assert_eq!(count, 7);
-        assert_eq!(m.samples.len(), 5);
-        assert!(m.median() >= 0.0);
-    }
 
     #[test]
     fn fmt_time_ranges() {

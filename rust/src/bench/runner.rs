@@ -1,0 +1,475 @@
+//! The deterministic bench harness: measurement primitive, named suites and
+//! the JSON perf report (`patsma bench`).
+//!
+//! Protocol per measurement: `warmup` unrecorded runs, then `samples` timed
+//! runs, summarised as median / p95 / mean / min. The *workload set* of a
+//! suite is a fixed list — two consecutive runs of the same suite produce
+//! entries with identical ids in identical order, and the JSON serialisation
+//! preserves key order, so only the measured values differ between runs
+//! (pinned by `tests/bench_harness.rs`).
+
+use super::json::Json;
+use crate::optimizer::{drive, Csa, CsaConfig, NelderMead, NelderMeadConfig};
+use crate::sched::{Schedule, ThreadPool};
+use crate::service::{OptimizerSpec, SessionSpec, TuningService};
+use crate::stats::Summary;
+use crate::workloads::{
+    conv2d::Conv2d, fdm3d::Fdm3d, matmul::MatMul, rb_gauss_seidel::RbGaussSeidel, rtm::Rtm,
+    spmv::Spmv, Workload,
+};
+use anyhow::{bail, Context, Result};
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Schema identifier emitted in every BENCH JSON document. Bump only with a
+/// migration note in README — CI diffs candidate files against a committed
+/// baseline by this tag.
+pub const SCHEMA: &str = "patsma-bench-v1";
+
+/// Result of benchmarking one configuration.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Configuration label (row name in the report).
+    pub label: String,
+    /// Per-sample wall-clock seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    /// Batch statistics over the samples.
+    pub fn summary(&self) -> Summary {
+        Summary::from_samples(&self.samples)
+    }
+
+    /// Median seconds (the headline number; robust to scheduler noise).
+    pub fn median(&self) -> f64 {
+        self.summary().median()
+    }
+}
+
+/// Benchmark a closure: `warmup` unrecorded runs, then `samples` timed runs.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, samples: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        label: label.to_string(),
+        samples: out,
+    }
+}
+
+/// Which fixed workload set to measure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    /// The cheap deterministic set CI runs on every PR: dispatch latency,
+    /// both paper optimizers on closed-form landscapes, a synthetic service
+    /// batch, and the two cheapest shared-memory workloads.
+    Tier1,
+    /// Tier-1 plus the remaining shared-memory workloads at reduced sizes.
+    Full,
+}
+
+impl Suite {
+    /// Parse the CLI form (`tier1|full`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "tier1" => Self::Tier1,
+            "full" => Self::Full,
+            other => bail!("unknown suite {other:?} (tier1|full)"),
+        })
+    }
+
+    /// CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Tier1 => "tier1",
+            Self::Full => "full",
+        }
+    }
+}
+
+/// One measured configuration in the perf report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    /// Stable id, `<group>/<config>` (e.g. `workload/spmv`).
+    pub id: String,
+    /// Number of timed samples behind the statistics.
+    pub samples: usize,
+    /// Median seconds — the value the regression check compares.
+    pub median_secs: f64,
+    /// 95th-percentile seconds (tail latency).
+    pub p95_secs: f64,
+    /// Mean seconds.
+    pub mean_secs: f64,
+    /// Fastest sample.
+    pub min_secs: f64,
+}
+
+impl BenchEntry {
+    fn from_measurement(id: &str, m: &Measurement) -> Self {
+        let s = m.summary();
+        Self {
+            id: id.to_string(),
+            samples: s.count(),
+            median_secs: s.median(),
+            p95_secs: s.percentile(95.0),
+            mean_secs: s.mean(),
+            min_secs: s.min(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("id".into(), Json::Str(self.id.clone())),
+            ("samples".into(), Json::num(self.samples as f64)),
+            ("median_secs".into(), Json::num(self.median_secs)),
+            ("p95_secs".into(), Json::num(self.p95_secs)),
+            ("mean_secs".into(), Json::num(self.mean_secs)),
+            ("min_secs".into(), Json::num(self.min_secs)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let f = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("entry missing number {key:?}"))
+        };
+        Ok(Self {
+            id: v
+                .get("id")
+                .and_then(Json::as_str)
+                .context("entry missing id")?
+                .to_string(),
+            samples: f("samples")? as usize,
+            median_secs: f("median_secs")?,
+            p95_secs: f("p95_secs")?,
+            mean_secs: f("mean_secs")?,
+            min_secs: f("min_secs")?,
+        })
+    }
+}
+
+/// The complete perf report a suite run produces (`BENCH_*.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Suite name (`tier1` / `full`).
+    pub suite: String,
+    /// Thread count of the global pool during the run.
+    pub threads: usize,
+    /// Whether the reduced quick protocol was used.
+    pub quick: bool,
+    /// Fixed-order measured entries.
+    pub entries: Vec<BenchEntry>,
+    /// Median fork/join dispatch latency of an empty parallel region — the
+    /// floor below which chunk effects cannot be measured.
+    pub dispatch_overhead_secs: f64,
+    /// Shared-cache hits in the deterministic service batch.
+    pub cache_hits: u64,
+    /// Shared-cache misses in the deterministic service batch.
+    pub cache_misses: u64,
+    /// `hits / (hits + misses)` of the service batch.
+    pub cache_hit_rate: f64,
+}
+
+impl BenchReport {
+    /// Entry lookup by stable id.
+    pub fn entry(&self, id: &str) -> Option<&BenchEntry> {
+        self.entries.iter().find(|e| e.id == id)
+    }
+
+    /// Serialise to the stable BENCH JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema".into(), Json::Str(SCHEMA.into())),
+            ("suite".into(), Json::Str(self.suite.clone())),
+            ("threads".into(), Json::num(self.threads as f64)),
+            ("quick".into(), Json::Bool(self.quick)),
+            (
+                "entries".into(),
+                Json::Arr(self.entries.iter().map(BenchEntry::to_json).collect()),
+            ),
+            (
+                "dispatch_overhead_secs".into(),
+                Json::num(self.dispatch_overhead_secs),
+            ),
+            (
+                "cache".into(),
+                Json::Obj(vec![
+                    ("hits".into(), Json::num(self.cache_hits as f64)),
+                    ("misses".into(), Json::num(self.cache_misses as f64)),
+                    ("hit_rate".into(), Json::num(self.cache_hit_rate)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse a BENCH JSON document (checks the schema tag).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v.get("schema").and_then(Json::as_str) {
+            Some(s) if s == SCHEMA => {}
+            other => bail!("not a {SCHEMA} document (schema {other:?})"),
+        }
+        let cache = v.get("cache").context("missing cache section")?;
+        let cache_num = |key: &str| {
+            cache
+                .get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("cache section missing {key:?}"))
+        };
+        Ok(Self {
+            suite: v
+                .get("suite")
+                .and_then(Json::as_str)
+                .context("missing suite")?
+                .to_string(),
+            threads: v
+                .get("threads")
+                .and_then(Json::as_f64)
+                .context("missing threads")? as usize,
+            quick: matches!(v.get("quick"), Some(Json::Bool(true))),
+            entries: v
+                .get("entries")
+                .and_then(Json::as_arr)
+                .context("missing entries")?
+                .iter()
+                .map(BenchEntry::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            dispatch_overhead_secs: v
+                .get("dispatch_overhead_secs")
+                .and_then(Json::as_f64)
+                .context("missing dispatch_overhead_secs")?,
+            cache_hits: cache_num("hits")? as u64,
+            cache_misses: cache_num("misses")? as u64,
+            cache_hit_rate: cache_num("hit_rate")?,
+        })
+    }
+
+    /// Markdown summary (the `patsma bench` console output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "\n## bench suite `{}` ({} threads{})\n\n\
+             | entry | median | p95 | mean | min | samples |\n|---|---|---|---|---|---|\n",
+            self.suite,
+            self.threads,
+            if self.quick { ", quick" } else { "" },
+        );
+        for e in &self.entries {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} |\n",
+                e.id,
+                super::report::fmt_time(e.median_secs),
+                super::report::fmt_time(e.p95_secs),
+                super::report::fmt_time(e.mean_secs),
+                super::report::fmt_time(e.min_secs),
+                e.samples,
+            ));
+        }
+        out.push_str(&format!(
+            "\ndispatch overhead: {}; service cache: {} hits / {} misses ({:.1}% hit rate)\n",
+            super::report::fmt_time(self.dispatch_overhead_secs),
+            self.cache_hits,
+            self.cache_misses,
+            100.0 * self.cache_hit_rate,
+        ));
+        out
+    }
+}
+
+/// The deterministic synthetic service batch every suite measures: four
+/// optimizers over two landscapes, fixed seeds, concurrency 1 so hit/miss
+/// counters are scheduling-independent.
+fn service_batch_specs() -> Vec<SessionSpec> {
+    let mut specs = Vec::new();
+    for (w, optimum) in [(0u32, 48.0f64), (1, 24.0)] {
+        for opt in [OptimizerSpec::Csa, OptimizerSpec::NelderMead] {
+            let id = format!("bench-w{w}-{}", opt.name());
+            specs.push(
+                SessionSpec::synthetic(id, optimum, 4242 + w as u64)
+                    .with_optimizer(opt)
+                    .with_budget(4, 6),
+            );
+        }
+    }
+    specs
+}
+
+/// The fixed workload list of a suite (constructed at bench sizes, smaller
+/// than the `workloads::by_name` tuning defaults so a suite run stays under
+/// CI budgets).
+fn suite_workloads(suite: Suite, quick: bool) -> Vec<Box<dyn Workload>> {
+    let mut list: Vec<Box<dyn Workload>> = vec![
+        Box::new(RbGaussSeidel::with_size(if quick { 128 } else { 256 })),
+        Box::new(Spmv::with_size(if quick { 20_000 } else { 60_000 }, 10_000, 8)),
+    ];
+    if suite == Suite::Full {
+        list.push(Box::new(MatMul::with_size(if quick { 96 } else { 192 })));
+        list.push(Box::new(Conv2d::with_size(
+            if quick { 128 } else { 256 },
+            if quick { 128 } else { 256 },
+            5,
+        )));
+        list.push(Box::new(Fdm3d::with_size(32, 32, if quick { 32 } else { 48 })));
+        list.push(Box::new(Rtm::with_size(16, 16, 24, if quick { 8 } else { 16 })));
+    }
+    list
+}
+
+/// Mid-domain parameter vector for a workload — a fixed, deterministic
+/// configuration so two runs measure identical work.
+fn mid_params(w: &dyn Workload) -> Vec<i32> {
+    let (lo, hi) = w.bounds();
+    lo.iter()
+        .zip(&hi)
+        .map(|(&l, &h)| ((l + h) * 0.5).round().clamp(l, h) as i32)
+        .collect()
+}
+
+/// Run a suite and produce its perf report. `quick` shrinks sample counts
+/// and workload sizes (CI smoke / tests); the workload *set* is unchanged.
+pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
+    let pool = ThreadPool::global();
+    let (warmup, samples) = if quick { (2, 9) } else { (5, 31) };
+    let mut entries = Vec::new();
+
+    // 1. Fork/join dispatch latency on an empty region — the overhead floor.
+    let dispatch = bench("dispatch", warmup.max(20), samples.max(200), || {
+        pool.parallel_for_blocks(0, pool.threads(), Schedule::Static, |r| {
+            black_box(r.len());
+        });
+    });
+    entries.push(BenchEntry::from_measurement(
+        "dispatch/parallel-for-empty",
+        &dispatch,
+    ));
+    let dispatch_overhead_secs = dispatch.median();
+
+    // 2. Optimizer cores on closed-form landscapes (pure CPU, deterministic
+    // candidate trajectories — measures the staged machinery itself).
+    let shifted_sphere = |x: &[f64]| x.iter().map(|v| (v - 0.3) * (v - 0.3)).sum::<f64>();
+    let csa = bench("csa", warmup, samples, || {
+        let mut opt = Csa::new(CsaConfig::new(2, 5, 20).with_seed(7));
+        black_box(drive(&mut opt, shifted_sphere));
+    });
+    entries.push(BenchEntry::from_measurement("optimizer/csa-sphere", &csa));
+    let nm = bench("nm", warmup, samples, || {
+        let mut opt = NelderMead::new(NelderMeadConfig::new(2, 0.0, 100).with_seed(7));
+        black_box(drive(&mut opt, shifted_sphere));
+    });
+    entries.push(BenchEntry::from_measurement(
+        "optimizer/nelder-mead-sphere",
+        &nm,
+    ));
+
+    // 3. The service path end to end on the synthetic landscape.
+    let specs = service_batch_specs();
+    let svc = bench("service", warmup, samples, || {
+        let service = TuningService::new(1);
+        black_box(service.run(&specs).expect("synthetic batch"));
+    });
+    entries.push(BenchEntry::from_measurement("service/synthetic-batch", &svc));
+
+    // Cache counters from one dedicated run (concurrency 1 ⇒ deterministic).
+    let service = TuningService::new(1);
+    service.run(&specs)?;
+    let cache = service.cache_stats();
+
+    // 4. Shared-memory workloads, one target iteration at mid-domain params.
+    for mut w in suite_workloads(suite, quick) {
+        let params = mid_params(w.as_ref());
+        let id = format!("workload/{}", w.name());
+        let m = bench(&id, warmup, samples, || {
+            black_box(w.run_iteration(&params));
+        });
+        entries.push(BenchEntry::from_measurement(&id, &m));
+    }
+
+    Ok(BenchReport {
+        suite: suite.name().to_string(),
+        threads: pool.threads(),
+        quick,
+        entries,
+        dispatch_overhead_secs,
+        cache_hits: cache.hits,
+        cache_misses: cache.misses,
+        cache_hit_rate: cache.hit_rate(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_requested_samples() {
+        let mut count = 0;
+        let m = bench("x", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.median() >= 0.0);
+    }
+
+    #[test]
+    fn suite_parse_roundtrip() {
+        for s in ["tier1", "full"] {
+            assert_eq!(Suite::parse(s).unwrap().name(), s);
+        }
+        assert!(Suite::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn report_json_roundtrip_is_lossless() {
+        let report = BenchReport {
+            suite: "tier1".into(),
+            threads: 4,
+            quick: true,
+            entries: vec![BenchEntry {
+                id: "workload/spmv".into(),
+                samples: 9,
+                median_secs: 1.5e-4,
+                p95_secs: 2.0e-4,
+                mean_secs: 1.6e-4,
+                min_secs: 1.25e-4,
+            }],
+            dispatch_overhead_secs: 3.0e-6,
+            cache_hits: 10,
+            cache_misses: 86,
+            cache_hit_rate: 10.0 / 96.0,
+        };
+        let text = report.to_json().pretty();
+        let parsed = BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, report);
+        assert!(report.render().contains("workload/spmv"));
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema() {
+        let doc = Json::parse(r#"{"schema": "something-else"}"#).unwrap();
+        assert!(BenchReport::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn mid_params_sit_inside_bounds() {
+        for w in suite_workloads(Suite::Full, true) {
+            let p = mid_params(w.as_ref());
+            let (lo, hi) = w.bounds();
+            assert_eq!(p.len(), w.dim(), "{}", w.name());
+            for d in 0..p.len() {
+                assert!(
+                    (lo[d]..=hi[d]).contains(&(p[d] as f64)),
+                    "{}: param {} out of [{}, {}]",
+                    w.name(),
+                    p[d],
+                    lo[d],
+                    hi[d]
+                );
+            }
+        }
+    }
+}

@@ -7,13 +7,17 @@
 //!                        [--num-opt N] [--max-iter N] [--ignore N]
 //!                        [--seed N] [--mode single|entire]
 //! patsma verify [<workload>]       # parallel-vs-oracle checks
+//! patsma bench [--suite tier1|full] [--json PATH] [--quick]
 //! patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
 //!                    [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
 //!                    [--registry PATH]
 //! patsma service report [--registry PATH]
+//! patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
+//!                       [--force]
 //! patsma demo                      # 30-second guided tour
 //! ```
 
+use crate::bench;
 use crate::coordinator;
 use crate::optimizer::{
     Csa, CsaConfig, GridSearch, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm,
@@ -46,6 +50,12 @@ pub enum Command {
     },
     /// Verify workloads against their sequential oracles.
     Verify { workload: Option<String> },
+    /// Run a perf suite and (optionally) emit the BENCH JSON report.
+    Bench {
+        suite: String,
+        json: Option<String>,
+        quick: bool,
+    },
     /// Run a batch of concurrent tuning sessions through the service.
     ServiceRun {
         sessions: usize,
@@ -59,6 +69,13 @@ pub enum Command {
     },
     /// Render a saved service registry.
     ServiceReport { registry: String },
+    /// Warm-started re-tuning of a saved registry's sessions.
+    ServiceRetune {
+        registry: String,
+        concurrency: usize,
+        budget: u32,
+        force: bool,
+    },
     /// Guided demo.
     Demo,
     /// Help text.
@@ -114,6 +131,11 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .filter(|a| !a.starts_with("--"))
                 .map(|s| s.to_string()),
         }),
+        "bench" => Ok(Command::Bench {
+            suite: flag_val("--suite").unwrap_or("tier1").to_string(),
+            json: flag_val("--json").map(|s| s.to_string()),
+            quick: has_flag("--quick"),
+        }),
         "service" => {
             let action = rest
                 .first()
@@ -133,7 +155,13 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     registry,
                 }),
                 "report" => Ok(Command::ServiceReport { registry }),
-                other => bail!("unknown service action {other:?} (run|report)"),
+                "retune" => Ok(Command::ServiceRetune {
+                    registry,
+                    concurrency: flag_val("--concurrency").unwrap_or("4").parse()?,
+                    budget: flag_val("--budget").unwrap_or("50").parse()?,
+                    force: has_flag("--force"),
+                }),
+                other => bail!("unknown service action {other:?} (run|report|retune)"),
             }
         }
         "demo" => Ok(Command::Demo),
@@ -216,6 +244,18 @@ pub fn execute(cmd: Command) -> Result<String> {
             }
             Ok(s)
         }
+        Command::Bench { suite, json, quick } => {
+            let suite = bench::Suite::parse(&suite)?;
+            let quick = quick || std::env::var("PATSMA_QUICK").is_ok();
+            let report = bench::run_suite(suite, quick)?;
+            let mut s = report.render();
+            if let Some(path) = json {
+                std::fs::write(&path, report.to_json().pretty())
+                    .with_context(|| format!("writing bench JSON {path}"))?;
+                s.push_str(&format!("bench JSON written to {path}\n"));
+            }
+            Ok(s)
+        }
         Command::Tune {
             workload,
             optimizer,
@@ -254,13 +294,13 @@ pub fn execute(cmd: Command) -> Result<String> {
                 point,
                 at.evaluations(),
                 at.target_iterations(),
-                crate::benchkit::fmt_time(elapsed),
+                crate::bench::fmt_time(elapsed),
             );
             if let Some((bp, bc)) = at.best() {
                 s.push_str(&format!(
                     " best measured: {:?} at {}\n",
                     bp,
-                    crate::benchkit::fmt_time(bc)
+                    crate::bench::fmt_time(bc)
                 ));
             }
             Ok(s)
@@ -314,6 +354,60 @@ pub fn execute(cmd: Command) -> Result<String> {
             let report = service::ServiceReport::load(std::path::Path::new(&registry))?;
             Ok(report.render())
         }
+        Command::ServiceRetune {
+            registry,
+            concurrency,
+            budget,
+            force,
+        } => {
+            let path = std::path::Path::new(&registry);
+            // Lenient load: a registry that survived a crash or partial
+            // write should still drive a retune from what is salvageable.
+            let (loaded, recovered) = service::ServiceReport::load_lenient(path)?;
+            let env = service::EnvFingerprint::current();
+            let plan = service::plan_retune(&loaded.states, &env, budget, force)?;
+            let mut s = String::new();
+            for note in &recovered {
+                s.push_str(&format!("registry recovery: skipped {note}\n"));
+            }
+            s.push_str(&format!(
+                "retune: {} persisted session(s), env {}; {} drifted, {} fresh\n",
+                loaded.states.len(),
+                env.descriptor,
+                plan.drifted.len(),
+                plan.fresh.len(),
+            ));
+            if plan.specs.is_empty() {
+                s.push_str(
+                    "environment unchanged — nothing to re-tune (--force re-tunes anyway)\n",
+                );
+                return Ok(s);
+            }
+            s.push_str(&format!(
+                "re-tuning {:?} warm-started at {budget}% budget\n",
+                plan.drifted
+            ));
+            let svc = TuningService::new(concurrency);
+            let mut report = svc.run(&plan.specs)?;
+            // Everything that was not re-tuned keeps its previous results
+            // and states in the updated registry: fresh sessions, and
+            // sessions without persisted state (their optimizer cannot
+            // export one, so the plan never touches them).
+            for prev in &loaded.sessions {
+                if !plan.drifted.contains(&prev.id) {
+                    report.sessions.push(prev.clone());
+                }
+            }
+            for st in &loaded.states {
+                if !plan.drifted.contains(&st.id) {
+                    report.states.push(st.clone());
+                }
+            }
+            report.save(path)?;
+            s.push_str(&report.render());
+            s.push_str(&format!("registry updated at {registry}\n"));
+            Ok(s)
+        }
         Command::Demo => {
             let mut s = String::from("PATSMA demo — tuning RB Gauss–Seidel's chunk:\n");
             let mut w = RbGaussSeidel::with_size(256);
@@ -331,7 +425,7 @@ pub fn execute(cmd: Command) -> Result<String> {
                 s.push_str(&format!(
                     "   tested chunk {:>4} → {}\n",
                     smp.point[0] as i64,
-                    crate::benchkit::fmt_time(smp.cost)
+                    crate::bench::fmt_time(smp.cost)
                 ));
             }
             s.push_str(" (see `patsma experiment all` for the full reproduction)\n");
@@ -390,10 +484,16 @@ USAGE:
               [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
               [--mode single|entire]
   patsma verify [<workload>]                parallel vs sequential oracle
+  patsma bench [--suite tier1|full] [--json PATH] [--quick]
+                                            deterministic perf suite; --json
+                                            emits the BENCH schema CI diffs
   patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
               [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
               [--registry PATH]             concurrent multi-session tuning
   patsma service report [--registry PATH]   render a saved registry
+  patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
+              [--force]                     warm-started re-tuning of drifted
+                                            sessions (reduced budget)
   patsma demo                               30-second tour
 ";
 
@@ -487,6 +587,109 @@ mod tests {
     fn unknown_workload_and_optimizer_rejected() {
         assert!(make_workload("nope").is_err());
         assert!(make_optimizer("nope", 1, 2, 3, 4).is_err());
+    }
+
+    #[test]
+    fn parse_bench_flags_and_defaults() {
+        assert_eq!(
+            parse(&v(&["bench"])).unwrap(),
+            Command::Bench {
+                suite: "tier1".into(),
+                json: None,
+                quick: false
+            }
+        );
+        assert_eq!(
+            parse(&v(&["bench", "--suite", "full", "--json", "out.json", "--quick"])).unwrap(),
+            Command::Bench {
+                suite: "full".into(),
+                json: Some("out.json".into()),
+                quick: true
+            }
+        );
+    }
+
+    #[test]
+    fn parse_service_retune_flags() {
+        let c = parse(&v(&["service", "retune", "--budget", "25", "--force"])).unwrap();
+        match c {
+            Command::ServiceRetune {
+                registry,
+                concurrency,
+                budget,
+                force,
+            } => {
+                assert_eq!(registry, DEFAULT_REGISTRY);
+                assert_eq!(concurrency, 4);
+                assert_eq!(budget, 25);
+                assert!(force);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bench_rejects_unknown_suite() {
+        let err = execute(Command::Bench {
+            suite: "warp".into(),
+            json: None,
+            quick: true,
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn retune_roundtrips_through_registry() {
+        let registry = std::env::temp_dir()
+            .join("patsma-cli-retune-test.txt")
+            .to_str()
+            .unwrap()
+            .to_string();
+        let out = execute(Command::ServiceRun {
+            sessions: 4,
+            concurrency: 2,
+            optimizer: "mixed".into(),
+            num_opt: 3,
+            max_iter: 6,
+            ignore: 0,
+            seed: 13,
+            registry: registry.clone(),
+        })
+        .unwrap();
+        assert!(out.contains("4 sessions"), "{out}");
+
+        // Same environment, no --force: nothing to do.
+        let idle = execute(Command::ServiceRetune {
+            registry: registry.clone(),
+            concurrency: 2,
+            budget: 50,
+            force: false,
+        })
+        .unwrap();
+        assert!(idle.contains("nothing to re-tune"), "{idle}");
+
+        // Forced: warm-started re-run at half budget, registry updated.
+        let forced = execute(Command::ServiceRetune {
+            registry: registry.clone(),
+            concurrency: 2,
+            budget: 50,
+            force: true,
+        })
+        .unwrap();
+        assert!(forced.contains("re-tuning"), "{forced}");
+        assert!(forced.contains("| yes |"), "warm column: {forced}");
+
+        // The mixed batch had sa/pso sessions with no persistable state;
+        // retune must carry their results over, not drop them.
+        let rendered = execute(Command::ServiceReport {
+            registry: registry.clone(),
+        })
+        .unwrap();
+        assert!(rendered.contains("persisted states"), "{rendered}");
+        assert!(rendered.contains("| s0-csa |"), "{rendered}");
+        assert!(rendered.contains("| s2-sa |"), "stateless session dropped: {rendered}");
+        assert!(rendered.contains("| s3-pso |"), "stateless session dropped: {rendered}");
+        let _ = std::fs::remove_file(&registry);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! returns self-contained markdown; the EXPERIMENTS.md records are captured
 //! from these outputs.
 
-use crate::benchkit::{self, bench, Measurement};
+use crate::bench::{self, bench, Measurement};
 use crate::optimizer::{
     Csa, CsaConfig, GridSearch, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm,
     PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
@@ -79,7 +79,7 @@ pub fn e1_single_iteration_mode(quick: bool) -> Result<String> {
         },
     ));
 
-    out.push_str(&benchkit::render_table(
+    out.push_str(&bench::render_table(
         &format!("E1: RB-GS n={n}, {app_iters}-iteration application loop"),
         &rows,
         Some(0),
@@ -107,7 +107,7 @@ pub fn e1_single_iteration_mode(quick: bool) -> Result<String> {
         .step_by((app_iters / 40).max(1))
         .copied()
         .collect();
-    out.push_str(&benchkit::render_csv(("app_iter", "chunk"), &tail));
+    out.push_str(&bench::render_csv(("app_iter", "chunk"), &tail));
     out.push_str("```\n");
     Ok(out)
 }
@@ -152,7 +152,7 @@ pub fn e2_entire_execution_mode(quick: bool) -> Result<String> {
         },
     ));
 
-    let mut out = benchkit::render_table(
+    let mut out = bench::render_table(
         &format!("E2: RB-GS n={n}, {app_iters}-iteration main loop (tuning replica included)"),
         &rows,
         Some(0),
@@ -264,7 +264,7 @@ pub fn e5_rbgs_entire(quick: bool) -> Result<String> {
         let _ = wt.sweep(tuned);
     }));
 
-    let mut out = benchkit::render_table(
+    let mut out = bench::render_table(
         &format!(
             "E5: RB-GS n={n}, {} threads — per-sweep time by chunk",
             pool().threads()
@@ -306,7 +306,7 @@ pub fn e6_rbgs_single(quick: bool) -> Result<String> {
     );
     out.push_str("\n```csv\n");
     let pts: Vec<(f64, f64)> = curve.iter().step_by((iters / 40).max(1)).copied().collect();
-    out.push_str(&benchkit::render_csv(("app_iter", "sweep_ms"), &pts));
+    out.push_str(&bench::render_csv(("app_iter", "sweep_ms"), &pts));
     out.push_str("```\n");
     // Post-convergence iterations must be at least as fast on median as the
     // tuning phase (the tuner tested bad chunks along the way).
@@ -458,7 +458,7 @@ pub fn e8_fdm3d(quick: bool) -> Result<String> {
     rows.push(bench(&format!("PATSMA-tuned chunk={tuned}"), 2, samples, || {
         let _ = wt.step_chunk(tuned);
     }));
-    Ok(benchkit::render_table(
+    Ok(bench::render_table(
         &format!("E8: FDM3D {nx}×{ny}×{nz} — per-time-step cost by z-plane chunk"),
         &rows,
         Some(0),
@@ -497,8 +497,8 @@ pub fn e9_rtm_phases(quick: bool) -> Result<String> {
         "\n| phase | tuned chunk | wall-clock | optimizer evals |\n|---|---|---|---|\n\
          | forward | {fwd_chunk} | {} | {fwd_evals} |\n\
          | backward (after reset) | {bwd_chunk} | {} | {} |\n",
-        benchkit::fmt_time(fwd_time),
-        benchkit::fmt_time(bwd_time),
+        bench::fmt_time(fwd_time),
+        bench::fmt_time(bwd_time),
         at.evaluations(),
     );
     out.push_str(&format!(
@@ -567,7 +567,7 @@ pub fn e10_xla_variants(quick: bool) -> Result<String> {
             .min_by(|a, b| a.1.median().partial_cmp(&b.1.median()).unwrap())
             .map(|(i, _)| i)
             .unwrap();
-        out.push_str(&benchkit::render_table(
+        out.push_str(&bench::render_table(
             &format!("E10: {kind} variant latency (interpret-mode HLO on CPU PJRT)"),
             &rows,
             Some(0),
@@ -663,9 +663,9 @@ pub fn e12_service_concurrent(quick: bool) -> Result<String> {
         "\n{} sessions; serial {} vs concurrency-{} {}; shared cache: {} hits / {} misses \
          ({:.1}% hit rate)\n",
         specs.len(),
-        benchkit::fmt_time(serial_time),
+        bench::fmt_time(serial_time),
         concurrency,
-        benchkit::fmt_time(concurrent_time),
+        bench::fmt_time(concurrent_time),
         concurrent.cache.hits,
         concurrent.cache.misses,
         100.0 * concurrent.cache.hit_rate(),

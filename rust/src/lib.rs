@@ -9,12 +9,17 @@
 //! run concurrently on the persistent thread pool, CSA candidate
 //! populations evaluate as batches instead of one point at a time, and a
 //! shared evaluation cache makes repeated candidates free across sessions
-//! (`patsma service run` / `patsma service report` on the CLI).
+//! (`patsma service run` / `patsma service report` on the CLI). Finished
+//! sessions persist their optimizer state into a versioned registry, and
+//! `patsma service retune` warm-starts drifted sessions from it at a
+//! reduced budget. The [`bench`] module is the perf observatory: named
+//! deterministic suites behind `patsma bench`, reported in a stable JSON
+//! schema that CI regression-checks against a committed baseline.
 //!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
-pub mod benchkit;
+pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod optimizer;

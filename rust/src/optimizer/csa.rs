@@ -41,8 +41,13 @@
 //! evaluation — reproduced as experiment E3.
 
 use super::domain;
-use super::{NumericalOptimizer, ResetLevel};
+use super::{NumericalOptimizer, OptimizerState, ResetLevel};
 use crate::rng::Xoshiro256pp;
+
+/// Floor for a warm-started generation temperature: a fully annealed
+/// snapshot would otherwise restart with near-zero jumps and the re-tuning
+/// could not react to a changed landscape at all.
+const WARM_T_GEN_FLOOR: f64 = 1e-3;
 
 /// CSA hyper-parameters. Defaults follow the original PATSMA/CSA settings;
 /// only `dim`, `num_opt` and `max_iter` are part of the paper-facing
@@ -454,6 +459,64 @@ impl NumericalOptimizer for Csa {
         }
     }
 
+    fn export_state(&self) -> Option<OptimizerState> {
+        if !self.best_cost.is_finite() {
+            return None;
+        }
+        Some(OptimizerState {
+            optimizer: self.name().to_string(),
+            best_internal: self.best_point.clone(),
+            best_cost: self.best_cost,
+            temperatures: Some((self.t_gen, self.t_ac)),
+            points: self.x.clone(),
+        })
+    }
+
+    /// Warm start = [`ResetLevel::Soft`] seeded from the snapshot: the
+    /// persisted best point becomes chain 0's start (re-measured first, so
+    /// a warm session's best can never be worse than the persisted solution
+    /// on an unchanged landscape), the remaining chains resume from the
+    /// persisted population, and the generation schedule continues from the
+    /// persisted temperature instead of `t_gen0` — smaller jumps, i.e.
+    /// refinement rather than re-exploration.
+    fn warm_start(&mut self, state: &OptimizerState) -> bool {
+        if state.optimizer != self.name()
+            || state.best_internal.len() != self.cfg.dim
+            || !state.best_internal.iter().all(|v| v.is_finite())
+        {
+            return false;
+        }
+        self.best_point.copy_from_slice(&state.best_internal);
+        // A finite cost marker lets the Soft reset retain the solution (its
+        // value is discarded by the reset — costs are stale by definition).
+        self.best_cost = if state.best_cost.is_finite() {
+            state.best_cost
+        } else {
+            0.0
+        };
+        self.reset(ResetLevel::Soft);
+        for i in 1..self.cfg.num_opt {
+            if let Some(p) = state.points.get(i) {
+                if p.len() == self.cfg.dim && p.iter().all(|v| v.is_finite()) {
+                    self.x[i].copy_from_slice(p);
+                    domain::reflect(&mut self.x[i]);
+                }
+            }
+        }
+        if let Some((t_gen, t_ac)) = state.temperatures {
+            if t_gen.is_finite() && t_gen > 0.0 {
+                // Resume the annealing schedule from where it stopped:
+                // t_gen(k) = t_gen_persisted / k for the restarted run.
+                self.t_gen = t_gen.max(WARM_T_GEN_FLOOR);
+                self.cfg.t_gen0 = self.t_gen;
+            }
+            if t_ac.is_finite() && t_ac > 0.0 {
+                self.t_ac = t_ac;
+            }
+        }
+        true
+    }
+
     fn print(&self) {
         eprintln!(
             "[CSA] iter={}/{} T_gen={:.4e} T_ac={:.4e} best={:.6e} evals={}",
@@ -722,6 +785,92 @@ mod tests {
         // A fresh batched drive must start from the init population again.
         let batch = csa.run_batch(&[]);
         assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn export_state_captures_best_and_temperatures() {
+        let mut csa = Csa::new(CsaConfig::new(2, 4, 20).with_seed(21));
+        assert!(
+            csa.export_state().is_none(),
+            "no state before any measurement"
+        );
+        let (best, cost) = drive(&mut csa, shifted_sphere);
+        let state = csa.export_state().unwrap();
+        assert_eq!(state.optimizer, "csa");
+        assert_eq!(state.best_internal, best);
+        assert_eq!(state.best_cost, cost);
+        assert_eq!(state.points.len(), 4);
+        let (t_gen, t_ac) = state.temperatures.unwrap();
+        assert!(t_gen > 0.0 && t_ac > 0.0);
+    }
+
+    #[test]
+    fn warm_start_first_candidate_is_persisted_best() {
+        let mut cold = Csa::new(CsaConfig::new(2, 4, 25).with_seed(22));
+        let _ = drive(&mut cold, shifted_sphere);
+        let state = cold.export_state().unwrap();
+
+        let mut warm = Csa::new(CsaConfig::new(2, 4, 8).with_seed(23));
+        assert!(warm.warm_start(&state));
+        // Costs are stale: nothing is "best" until re-measured...
+        assert!(warm.best().is_none());
+        // ...and the first candidate re-measured is the persisted solution.
+        let first = warm.run(0.0).to_vec();
+        assert_eq!(first, state.best_internal);
+    }
+
+    #[test]
+    fn warm_start_on_unchanged_landscape_never_regresses() {
+        // The persisted best point is re-measured first, so on a
+        // deterministic landscape the warm run's best cost is <= the
+        // snapshot's — with a fraction of the evaluation budget.
+        let mut cold = Csa::new(CsaConfig::new(1, 5, 30).with_seed(24));
+        let (_, cold_cost) = drive(&mut cold, multimodal);
+        let state = cold.export_state().unwrap();
+
+        let mut warm = Csa::new(CsaConfig::new(1, 5, 6).with_seed(25));
+        assert!(warm.warm_start(&state));
+        let (_, warm_cost) = drive(&mut warm, multimodal);
+        assert!(
+            warm_cost <= cold_cost,
+            "warm {warm_cost} regressed past cold {cold_cost}"
+        );
+        assert!(warm.evaluations() < cold.evaluations());
+    }
+
+    #[test]
+    fn warm_start_rejects_unfit_snapshots() {
+        let mut donor = Csa::new(CsaConfig::new(2, 3, 10).with_seed(26));
+        let _ = drive(&mut donor, shifted_sphere);
+        let state = donor.export_state().unwrap();
+
+        // Wrong dimension.
+        let mut wrong_dim = Csa::new(CsaConfig::new(3, 3, 10).with_seed(27));
+        assert!(!wrong_dim.warm_start(&state));
+
+        // Wrong optimizer kind.
+        let mut renamed = state.clone();
+        renamed.optimizer = "nelder-mead".into();
+        let mut csa = Csa::new(CsaConfig::new(2, 3, 10).with_seed(28));
+        assert!(!csa.warm_start(&renamed));
+    }
+
+    #[test]
+    fn warm_start_resumes_annealing_schedule() {
+        let mut donor = Csa::new(CsaConfig::new(1, 4, 40).with_seed(29));
+        let _ = drive(&mut donor, shifted_sphere);
+        let state = donor.export_state().unwrap();
+        let (snap_t_gen, _) = state.temperatures.unwrap();
+        assert!(snap_t_gen < 1.0, "schedule should have annealed");
+
+        let mut warm = Csa::new(CsaConfig::new(1, 4, 10).with_seed(30));
+        warm.warm_start(&state);
+        assert!(
+            warm.t_gen() <= snap_t_gen.max(1e-3) + 1e-12,
+            "warm t_gen {} must resume at the persisted temperature {}",
+            warm.t_gen(),
+            snap_t_gen
+        );
     }
 
     #[test]

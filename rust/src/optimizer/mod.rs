@@ -70,6 +70,33 @@ impl ResetLevel {
     }
 }
 
+/// A serialisable snapshot of an optimizer's search state, taken at the end
+/// of a tuning session so a later session can **warm-start** instead of
+/// cold-starting (the service registry persists these across processes).
+///
+/// All coordinates are in the internal domain `[-1, 1]^d`. Costs in a
+/// snapshot are informational only: a warm start re-measures everything,
+/// because the snapshot is loaded precisely when the execution context may
+/// have changed and old costs are stale by definition (same reasoning as
+/// [`ResetLevel::Soft`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimizerState {
+    /// Name of the optimizer that produced the snapshot (a snapshot only
+    /// seeds the same optimizer kind).
+    pub optimizer: String,
+    /// Best point found (internal domain).
+    pub best_internal: Vec<f64>,
+    /// Cost of the best point when snapshotted (stale after any context
+    /// change; never fed back into the optimizer).
+    pub best_cost: f64,
+    /// Annealing temperatures `(t_gen, t_ac)` for CSA/SA-family optimizers;
+    /// `None` for optimizers without a temperature schedule.
+    pub temperatures: Option<(f64, f64)>,
+    /// Population / simplex points (internal domain) at snapshot time,
+    /// starting material for the restart.
+    pub points: Vec<Vec<f64>>,
+}
+
 /// The staged-optimizer interface (paper Algorithm 1).
 ///
 /// Contract, mirroring §2.2 of the paper:
@@ -100,6 +127,23 @@ pub trait NumericalOptimizer: Send {
 
     /// Reset the optimization (optional; default is a no-op as in Alg. 1).
     fn reset(&mut self, _level: ResetLevel) {}
+
+    /// Snapshot the search state for later warm-started re-tuning.
+    /// `None` (the default) means the optimizer does not support
+    /// persistence; the service then skips state capture for it.
+    fn export_state(&self) -> Option<OptimizerState> {
+        None
+    }
+
+    /// Seed this (freshly constructed) optimizer from a persisted snapshot,
+    /// then restart the search with [`ResetLevel::Soft`] semantics: the
+    /// snapshot's *solutions* become starting material, all *costs* are
+    /// discarded and re-measured. Returns `false` (the default) when the
+    /// optimizer does not support warm starts or the snapshot does not fit
+    /// (wrong dimension/kind) — the caller then proceeds with a cold start.
+    fn warm_start(&mut self, _state: &OptimizerState) -> bool {
+        false
+    }
 
     /// Print debug/verbose state (optional).
     fn print(&self) {}
@@ -296,6 +340,22 @@ mod tests {
         assert_eq!(seen, vec![vec![0.5], vec![-0.5], vec![0.1]]);
         assert_eq!((sp, sc), (bp, bc));
         assert_eq!(batched.evaluations(), serial.evaluations());
+    }
+
+    #[test]
+    fn default_state_hooks_are_inert() {
+        // Optimizers that don't opt into persistence export nothing and
+        // refuse warm starts, so the service falls back to a cold start.
+        let mut p = Probe::new(vec![vec![0.2]]);
+        assert!(p.export_state().is_none());
+        let state = OptimizerState {
+            optimizer: "probe".into(),
+            best_internal: vec![0.1],
+            best_cost: 0.5,
+            temperatures: None,
+            points: vec![vec![0.1]],
+        };
+        assert!(!p.warm_start(&state));
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! enforces (experiment E4). `max_iter = 0` means "until convergence".
 
 use super::domain;
-use super::{NumericalOptimizer, ResetLevel};
+use super::{NumericalOptimizer, OptimizerState, ResetLevel};
 use crate::rng::Xoshiro256pp;
 
 /// Standard NM coefficients (reflection / expansion / contraction / shrink).
@@ -412,6 +412,41 @@ impl NumericalOptimizer for NelderMead {
         }
     }
 
+    fn export_state(&self) -> Option<OptimizerState> {
+        if !self.best_cost.is_finite() {
+            return None;
+        }
+        Some(OptimizerState {
+            optimizer: self.name().to_string(),
+            best_internal: self.best_point.clone(),
+            best_cost: self.best_cost,
+            temperatures: None,
+            points: self.verts.clone(),
+        })
+    }
+
+    /// Warm start = [`ResetLevel::Soft`] anchored at the snapshot's best
+    /// point: the restarted simplex is the default-step axis simplex around
+    /// the persisted solution (not the persisted simplex itself, which has
+    /// typically collapsed to sub-lattice size and could not react to a
+    /// changed landscape), and all costs are re-measured.
+    fn warm_start(&mut self, state: &OptimizerState) -> bool {
+        if state.optimizer != self.name()
+            || state.best_internal.len() != self.cfg.dim
+            || !state.best_internal.iter().all(|v| v.is_finite())
+        {
+            return false;
+        }
+        self.best_point.copy_from_slice(&state.best_internal);
+        self.best_cost = if state.best_cost.is_finite() {
+            state.best_cost
+        } else {
+            0.0
+        };
+        self.reset(ResetLevel::Soft);
+        true
+    }
+
     fn print(&self) {
         eprintln!(
             "[NM] evals={}/{} spread={:.3e} best={:.6e}",
@@ -559,6 +594,53 @@ mod tests {
         let nm = NelderMead::with_params(4, 1e-6, 10);
         assert_eq!(nm.num_points(), 1);
         assert_eq!(nm.dimension(), 4);
+    }
+
+    #[test]
+    fn export_and_warm_start_roundtrip() {
+        // error = 0 so the evaluation budget is the only stopping rule
+        // (barring an exactly collapsed simplex).
+        let mut cold = NelderMead::with_params(2, 0.0, 200);
+        let (best, cost) = drive(&mut cold, shifted_quadratic);
+        let state = cold.export_state().unwrap();
+        assert_eq!(state.optimizer, "nelder-mead");
+        assert_eq!(state.best_internal, best);
+        assert_eq!(state.best_cost, cost);
+        assert!(state.temperatures.is_none());
+        assert_eq!(state.points.len(), 3, "dim+1 simplex vertices");
+
+        // Warm start: the rebuilt simplex is anchored at the snapshot best,
+        // so the first vertex measured is the persisted solution.
+        let mut peek = NelderMead::with_params(2, 0.0, 60);
+        assert!(peek.warm_start(&state));
+        assert!(peek.best().is_none(), "costs are stale after warm start");
+        let first = peek.run(0.0).to_vec();
+        assert_eq!(first, state.best_internal);
+
+        // A fresh warm instance for the full drive (the peek above already
+        // consumed one staged step, which would skew its first cost).
+        let mut warm = NelderMead::with_params(2, 0.0, 60);
+        assert!(warm.warm_start(&state));
+        // On the unchanged landscape the warm run can only refine. (The
+        // service-level warm-vs-cold evaluation comparison lives in
+        // tests/service.rs, where budgets make the counts structural; NM
+        // alone may early-stop on an exactly collapsed simplex.)
+        let (_, warm_cost) = drive(&mut warm, shifted_quadratic);
+        assert!(warm_cost <= cost, "warm {warm_cost} vs cold {cost}");
+        assert!(warm.evaluations() <= 60, "warm budget is 60 evaluations");
+    }
+
+    #[test]
+    fn warm_start_rejects_unfit_snapshots() {
+        let mut donor = NelderMead::with_params(2, 0.0, 30);
+        let _ = drive(&mut donor, sphere);
+        let state = donor.export_state().unwrap();
+        let mut wrong_dim = NelderMead::with_params(3, 0.0, 30);
+        assert!(!wrong_dim.warm_start(&state));
+        let mut renamed = state.clone();
+        renamed.optimizer = "csa".into();
+        let mut nm = NelderMead::with_params(2, 0.0, 30);
+        assert!(!nm.warm_start(&renamed));
     }
 
     #[test]

@@ -7,10 +7,14 @@
 //! **(workload fingerprint, quantised user-domain point)** so a repeated
 //! candidate — within one session or across concurrent sessions — is free.
 //!
-//! Keys use the *exact* integer quantisation of
-//! [`crate::tuner::quantize_integer`], so a key names precisely the value
-//! the application would have been handed; two internal candidates that
-//! round to the same lattice point intentionally collide (that is the hit).
+//! Keys are the *exact* user-domain values the application is handed, one
+//! `f64` per dimension, compared **bit for bit** (after normalising `-0.0`
+//! to `0.0`). For integer domains those values come out of
+//! [`crate::tuner::quantize_integer`], so two internal candidates that
+//! round to the same lattice point intentionally collide (that is the hit);
+//! for float domains every distinct value is a distinct key — quantising
+//! floats onto an integer lattice here would merge genuinely different
+//! candidates into one entry and hand the optimizer a stale cost.
 //!
 //! Sharded `Mutex<HashMap>` keeps contention off the hot path without any
 //! external crate. Two threads that miss on the same key concurrently may
@@ -42,10 +46,26 @@ pub fn fingerprint_str(s: &str) -> u64 {
     fnv1a(s.bytes())
 }
 
-fn key_hash(fingerprint: u64, point: &[i64]) -> u64 {
+/// Bit pattern of one key coordinate. `-0.0` is folded into `0.0` so the
+/// two representations of zero share an entry; NaNs are rejected upstream
+/// (a NaN candidate never reaches the cache).
+#[inline]
+fn coord_bits(v: f64) -> u64 {
+    if v == 0.0 {
+        0.0f64.to_bits()
+    } else {
+        v.to_bits()
+    }
+}
+
+fn point_bits(point: &[f64]) -> Vec<u64> {
+    point.iter().map(|&v| coord_bits(v)).collect()
+}
+
+fn key_hash(fingerprint: u64, point: &[f64]) -> u64 {
     let mut h = fnv1a(fingerprint.to_le_bytes());
-    for v in point {
-        for b in v.to_le_bytes() {
+    for &v in point {
+        for b in coord_bits(v).to_le_bytes() {
             h ^= b as u64;
             h = h.wrapping_mul(0x0000_0100_0000_01b3);
         }
@@ -78,7 +98,7 @@ impl CacheStats {
 
 /// Concurrent point-evaluation cache (see module docs).
 pub struct PointCache {
-    shards: Vec<Mutex<HashMap<(u64, Vec<i64>), f64>>>,
+    shards: Vec<Mutex<HashMap<(u64, Vec<u64>), f64>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -99,22 +119,22 @@ impl PointCache {
         }
     }
 
-    fn shard(&self, fingerprint: u64, point: &[i64]) -> &Mutex<HashMap<(u64, Vec<i64>), f64>> {
+    fn shard(&self, fingerprint: u64, point: &[f64]) -> &Mutex<HashMap<(u64, Vec<u64>), f64>> {
         &self.shards[(key_hash(fingerprint, point) as usize) % SHARDS]
     }
 
     /// Cached cost for the point, if any. Does **not** touch the hit/miss
     /// counters (use [`get_or_compute`](Self::get_or_compute) for counted
     /// access).
-    pub fn peek(&self, fingerprint: u64, point: &[i64]) -> Option<f64> {
+    pub fn peek(&self, fingerprint: u64, point: &[f64]) -> Option<f64> {
         let shard = self.shard(fingerprint, point).lock().unwrap();
-        shard.get(&(fingerprint, point.to_vec())).copied()
+        shard.get(&(fingerprint, point_bits(point))).copied()
     }
 
     /// Insert (or overwrite) a point's cost.
-    pub fn insert(&self, fingerprint: u64, point: Vec<i64>, cost: f64) {
-        let mut shard = self.shard(fingerprint, &point).lock().unwrap();
-        shard.insert((fingerprint, point), cost);
+    pub fn insert(&self, fingerprint: u64, point: &[f64], cost: f64) {
+        let mut shard = self.shard(fingerprint, point).lock().unwrap();
+        shard.insert((fingerprint, point_bits(point)), cost);
     }
 
     /// Counted lookup: returns `(cost, was_hit)`, evaluating and inserting
@@ -124,7 +144,7 @@ impl PointCache {
     pub fn get_or_compute(
         &self,
         fingerprint: u64,
-        point: &[i64],
+        point: &[f64],
         eval: impl FnOnce() -> f64,
     ) -> (f64, bool) {
         if let Some(cost) = self.peek(fingerprint, point) {
@@ -133,7 +153,7 @@ impl PointCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let cost = eval();
-        self.insert(fingerprint, point.to_vec(), cost);
+        self.insert(fingerprint, point, cost);
         (cost, false)
     }
 
@@ -166,13 +186,13 @@ mod tests {
         let cache = PointCache::new();
         let fp = fingerprint_str("synthetic/best=48/dim=1");
         let mut evals = 0;
-        let (c1, hit1) = cache.get_or_compute(fp, &[32], || {
+        let (c1, hit1) = cache.get_or_compute(fp, &[32.0], || {
             evals += 1;
             1.25
         });
         assert!(!hit1);
         assert_eq!(c1, 1.25);
-        let (c2, hit2) = cache.get_or_compute(fp, &[32], || {
+        let (c2, hit2) = cache.get_or_compute(fp, &[32.0], || {
             evals += 1;
             f64::NAN // must never be called
         });
@@ -193,8 +213,8 @@ mod tests {
         let fp = fingerprint_str("synthetic/best=24/dim=1");
         let (lo, hi) = (1.0, 64.0);
         // Both internal points land on user value 33 after rounding.
-        let a = quantize_integer(rescale_internal(0.004, lo, hi), lo, hi) as i64;
-        let b = quantize_integer(rescale_internal(-0.004, lo, hi), lo, hi) as i64;
+        let a = quantize_integer(rescale_internal(0.004, lo, hi), lo, hi);
+        let b = quantize_integer(rescale_internal(-0.004, lo, hi), lo, hi);
         assert_eq!(a, b, "test premise: both candidates round to one point");
         let (_, h1) = cache.get_or_compute(fp, &[a], || 2.0);
         let (c, h2) = cache.get_or_compute(fp, &[b], || 99.0);
@@ -205,15 +225,43 @@ mod tests {
     }
 
     #[test]
+    fn float_candidates_do_not_collapse() {
+        // The float-domain fix: sub-integer differences are distinct keys.
+        // Quantising these to an integer lattice would merge them and hand
+        // the second candidate the first one's cost.
+        let cache = PointCache::new();
+        let fp = fingerprint_str("synthetic-float");
+        let (_, h1) = cache.get_or_compute(fp, &[32.25], || 1.0);
+        let (c2, h2) = cache.get_or_compute(fp, &[32.75], || 2.0);
+        assert!(!h1);
+        assert!(!h2, "distinct float candidates must be distinct entries");
+        assert_eq!(c2, 2.0);
+        assert_eq!(cache.len(), 2);
+        // Bit-exact repeat is still a hit.
+        let (c3, h3) = cache.get_or_compute(fp, &[32.25], || 99.0);
+        assert!(h3);
+        assert_eq!(c3, 1.0);
+    }
+
+    #[test]
+    fn negative_zero_shares_the_zero_entry() {
+        let cache = PointCache::new();
+        let fp = fingerprint_str("zeros");
+        cache.insert(fp, &[0.0], 7.0);
+        assert_eq!(cache.peek(fp, &[-0.0]), Some(7.0));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
     fn distinct_fingerprints_do_not_collide() {
         let cache = PointCache::new();
         let fa = fingerprint_str("workload-a");
         let fb = fingerprint_str("workload-b");
         assert_ne!(fa, fb);
-        cache.insert(fa, vec![5], 1.0);
-        cache.insert(fb, vec![5], 2.0);
-        assert_eq!(cache.peek(fa, &[5]), Some(1.0));
-        assert_eq!(cache.peek(fb, &[5]), Some(2.0));
+        cache.insert(fa, &[5.0], 1.0);
+        cache.insert(fb, &[5.0], 2.0);
+        assert_eq!(cache.peek(fa, &[5.0]), Some(1.0));
+        assert_eq!(cache.peek(fb, &[5.0]), Some(2.0));
         assert_eq!(cache.len(), 2);
     }
 
@@ -221,12 +269,12 @@ mod tests {
     fn distinct_points_and_dims_do_not_collide() {
         let cache = PointCache::new();
         let fp = fingerprint_str("w");
-        cache.insert(fp, vec![1, 2], 1.0);
-        cache.insert(fp, vec![2, 1], 2.0);
-        cache.insert(fp, vec![1], 3.0);
-        assert_eq!(cache.peek(fp, &[1, 2]), Some(1.0));
-        assert_eq!(cache.peek(fp, &[2, 1]), Some(2.0));
-        assert_eq!(cache.peek(fp, &[1]), Some(3.0));
+        cache.insert(fp, &[1.0, 2.0], 1.0);
+        cache.insert(fp, &[2.0, 1.0], 2.0);
+        cache.insert(fp, &[1.0], 3.0);
+        assert_eq!(cache.peek(fp, &[1.0, 2.0]), Some(1.0));
+        assert_eq!(cache.peek(fp, &[2.0, 1.0]), Some(2.0));
+        assert_eq!(cache.peek(fp, &[1.0]), Some(3.0));
         assert_eq!(cache.len(), 3);
     }
 
@@ -238,8 +286,9 @@ mod tests {
             for _ in 0..4 {
                 let cache = &cache;
                 s.spawn(move || {
-                    for p in 0..64i64 {
-                        let (c, _) = cache.get_or_compute(fp, &[p], || p as f64 * 2.0);
+                    for p in 0..64 {
+                        let point = [p as f64];
+                        let (c, _) = cache.get_or_compute(fp, &point, || p as f64 * 2.0);
                         assert_eq!(c, p as f64 * 2.0);
                     }
                 });

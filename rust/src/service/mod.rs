@@ -18,24 +18,41 @@
 //!    degrades to batches of one). Pure targets evaluate their batch in
 //!    parallel when the session is not itself inside a pool region.
 //! 3. **Cross-session caching** — evaluations are memoised in a shared
-//!    [`PointCache`] keyed by (workload fingerprint, quantised point), so a
-//!    candidate repeated anywhere — within a session or across sessions —
-//!    is free.
+//!    [`PointCache`] keyed by (workload fingerprint, exact user-domain
+//!    point), so a candidate repeated anywhere — within a session or across
+//!    sessions — is free.
 //!
-//! Determinism: a session's optimizer trajectory depends only on its seed
-//! and the evaluated costs. For deterministic targets (the `synthetic`
-//! landscape) cached costs equal fresh ones exactly, so a session's result
-//! is bit-identical whether it runs alone, serially, or among concurrent
-//! sessions — `tests/service.rs` pins this.
+//! ## Warm-started re-tuning
 //!
-//! Results land in a [`registry`] the CLI (`patsma service run|report`) and
-//! the coordinator (experiment E12) consume.
+//! Sessions no longer have to cold-start. A finished session exports its
+//! optimizer snapshot ([`crate::optimizer::OptimizerState`]) into a
+//! [`SessionState`] that the registry persists alongside the results, keyed
+//! by workload fingerprint and [`EnvFingerprint`]. A later run can seed a
+//! session from that state with [`SessionSpec::warm_start`]: the optimizer
+//! restarts with `ResetLevel::Soft` semantics from the persisted solutions
+//! and (for CSA) the persisted annealing temperature, re-measures the old
+//! best point first and refines from there — reaching the optimum region
+//! with strictly fewer evaluations than a cold start (pinned by
+//! `tests/service.rs`). `patsma service retune` automates the loop: load
+//! the registry, compare each state's environment fingerprint with the
+//! current one, and re-tune drifted sessions at a reduced budget.
+//!
+//! Determinism: a session's optimizer trajectory depends only on its seed,
+//! its warm-start state and the evaluated costs. For deterministic targets
+//! (the `synthetic` landscape) cached costs equal fresh ones exactly, so a
+//! session's result is bit-identical whether it runs alone, serially, or
+//! among concurrent sessions — `tests/service.rs` pins this.
+//!
+//! Results land in a [`registry`] the CLI (`patsma service
+//! run|report|retune`) and the coordinator (experiment E12) consume.
 
 pub mod cache;
 pub mod registry;
+pub mod state;
 
 pub use cache::{fingerprint_str, CacheStats, PointCache};
 pub use registry::{ServiceReport, SessionReport};
+pub use state::{EnvFingerprint, SessionState};
 
 use crate::optimizer::{
     Csa, CsaConfig, GridSearch, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm,
@@ -44,7 +61,7 @@ use crate::optimizer::{
 use crate::sched::{Schedule, ThreadPool};
 use crate::tuner::{quantize_integer, rescale_internal};
 use crate::workloads::{self, synthetic, Workload};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -121,6 +138,41 @@ impl OptimizerSpec {
     }
 }
 
+/// Whether a domain's points live on the integer lattice or are handed to
+/// the application as exact floating-point values. This is part of the cost
+/// landscape's identity: it decides both what the application receives and
+/// what the evaluation-cache key is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PointKind {
+    /// Candidates are rounded onto the integer lattice
+    /// ([`quantize_integer`]) — chunk sizes, block sizes, thread counts.
+    Integer,
+    /// Candidates keep their exact (clamped) floating-point value —
+    /// relaxation factors, thresholds. Distinct float candidates are
+    /// distinct cache keys; quantising them would merge genuinely different
+    /// configurations into one entry.
+    Float,
+}
+
+impl PointKind {
+    /// Descriptor token (`int` / `float`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Integer => "int",
+            Self::Float => "float",
+        }
+    }
+
+    /// Parse a descriptor token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "int" => Self::Integer,
+            "float" => Self::Float,
+            other => bail!("unknown point kind {other:?} (int|float)"),
+        })
+    }
+}
+
 /// What a session evaluates.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WorkloadSpec {
@@ -137,11 +189,13 @@ pub enum WorkloadSpec {
         lo: f64,
         /// Scalar upper bound, broadcast to all dimensions.
         hi: f64,
+        /// Integer-lattice or exact-float candidates.
+        kind: PointKind,
     },
     /// A real shared-memory workload from [`workloads::by_name`]; the cost
     /// is the measured wall-clock of one target iteration (after `ignore`
     /// stabilisation iterations), so cached costs are the *measured* value
-    /// of the point's first run.
+    /// of the point's first run. Parameters are integer by construction.
     Named(String),
 }
 
@@ -156,9 +210,51 @@ impl WorkloadSpec {
                 dim,
                 lo,
                 hi,
-            } => format!("synthetic/opt={optimum}/dim={dim}/lo={lo}/hi={hi}"),
+                kind,
+            } => format!(
+                "synthetic/opt={optimum}/dim={dim}/lo={lo}/hi={hi}/kind={}",
+                kind.name()
+            ),
             Self::Named(name) => format!("named/{name}"),
         }
+    }
+
+    /// Parse a [`descriptor`](Self::descriptor) back into a spec — how
+    /// `patsma service retune` rebuilds sessions from persisted state.
+    /// Unknown descriptor segments are ignored (forward compatibility);
+    /// the round trip `parse_descriptor(d).descriptor() == d` holds for
+    /// every descriptor this version emits.
+    pub fn parse_descriptor(text: &str) -> Result<Self> {
+        if let Some(name) = text.strip_prefix("named/") {
+            if name.is_empty() {
+                bail!("empty workload name in descriptor {text:?}");
+            }
+            return Ok(Self::Named(name.to_string()));
+        }
+        let rest = text
+            .strip_prefix("synthetic/")
+            .with_context(|| format!("unrecognised workload descriptor {text:?}"))?;
+        let (mut optimum, mut dim, mut lo, mut hi, mut kind) = (None, None, None, None, None);
+        for seg in rest.split('/') {
+            let (k, v) = seg
+                .split_once('=')
+                .with_context(|| format!("bad descriptor segment {seg:?}"))?;
+            match k {
+                "opt" => optimum = Some(v.parse::<f64>().context("bad opt")?),
+                "dim" => dim = Some(v.parse::<usize>().context("bad dim")?),
+                "lo" => lo = Some(v.parse::<f64>().context("bad lo")?),
+                "hi" => hi = Some(v.parse::<f64>().context("bad hi")?),
+                "kind" => kind = Some(PointKind::parse(v)?),
+                _ => {} // forward compatibility
+            }
+        }
+        Ok(Self::Synthetic {
+            optimum: optimum.context("descriptor missing opt")?,
+            dim: dim.context("descriptor missing dim")?,
+            lo: lo.context("descriptor missing lo")?,
+            hi: hi.context("descriptor missing hi")?,
+            kind: kind.context("descriptor missing kind")?,
+        })
     }
 
     /// Stable cache fingerprint.
@@ -167,7 +263,8 @@ impl WorkloadSpec {
     }
 }
 
-/// One tuning scenario: workload × optimizer × domain × budget.
+/// One tuning scenario: workload × optimizer × domain × budget, optionally
+/// seeded from a persisted [`SessionState`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct SessionSpec {
     /// Report label (no whitespace).
@@ -183,12 +280,18 @@ pub struct SessionSpec {
     pub num_opt: usize,
     /// Optimizer iteration budget (`max_iter`).
     pub max_iter: usize,
-    /// RNG seed (sessions are exactly reproducible given their seed).
+    /// RNG seed (sessions are exactly reproducible given their seed and
+    /// warm-start state).
     pub seed: u64,
+    /// Persisted state to warm-start from (`None` = cold start). Must
+    /// belong to the same workload fingerprint; optimizers that cannot
+    /// consume the snapshot fall back to a cold start.
+    pub warm: Option<SessionState>,
 }
 
 impl SessionSpec {
-    /// A synthetic-landscape session with the default `[1, 128]` domain.
+    /// A synthetic-landscape session with the default `[1, 128]` integer
+    /// domain.
     pub fn synthetic(id: impl Into<String>, optimum: f64, seed: u64) -> Self {
         Self {
             id: id.into(),
@@ -197,13 +300,25 @@ impl SessionSpec {
                 dim: 1,
                 lo: 1.0,
                 hi: 128.0,
+                kind: PointKind::Integer,
             },
             optimizer: OptimizerSpec::Csa,
             ignore: 0,
             num_opt: 4,
             max_iter: 8,
             seed,
+            warm: None,
         }
+    }
+
+    /// A synthetic-landscape session over the same `[1, 128]` box with
+    /// exact floating-point candidates (no lattice quantisation).
+    pub fn synthetic_float(id: impl Into<String>, optimum: f64, seed: u64) -> Self {
+        let mut spec = Self::synthetic(id, optimum, seed);
+        if let WorkloadSpec::Synthetic { kind, .. } = &mut spec.workload {
+            *kind = PointKind::Float;
+        }
+        spec
     }
 
     /// Builder-style optimizer override.
@@ -216,6 +331,16 @@ impl SessionSpec {
     pub fn with_budget(mut self, num_opt: usize, max_iter: usize) -> Self {
         self.num_opt = num_opt;
         self.max_iter = max_iter;
+        self
+    }
+
+    /// Builder-style warm start: seed the session's optimizer from a
+    /// persisted state (see module docs). The state must carry the same
+    /// workload fingerprint — [`validate`](Self::validate) rejects the spec
+    /// otherwise, because costs from a different landscape would be
+    /// meaningless starting material.
+    pub fn warm_start(mut self, state: SessionState) -> Self {
+        self.warm = Some(state);
         self
     }
 
@@ -262,6 +387,17 @@ impl SessionSpec {
                 }
             }
         }
+        if let Some(ws) = &self.warm {
+            if ws.fingerprint != self.fingerprint() {
+                bail!(
+                    "session {}: warm-start state belongs to a different landscape \
+                     (state fingerprint {}, session fingerprint {})",
+                    self.id,
+                    ws.fingerprint,
+                    self.fingerprint()
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -274,11 +410,68 @@ enum Target {
     Measured(Box<dyn Workload>),
 }
 
+/// What the retune planner decided for a registry's persisted states.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetunePlan {
+    /// Sessions to re-run (warm-started, reduced budget), state order.
+    pub specs: Vec<SessionSpec>,
+    /// Ids being re-tuned (environment drifted, or `force`).
+    pub drifted: Vec<String>,
+    /// Ids left untouched (same environment, results still valid).
+    pub fresh: Vec<String>,
+}
+
+/// Decide which persisted sessions need re-tuning under the `env`
+/// environment. A session whose state was captured under a different
+/// environment fingerprint (thread-count change, OS change) gets a
+/// warm-started spec with `budget_pct` percent of its original `max_iter`
+/// (min 2 — a warm start needs at least the re-measure + one refinement
+/// iteration); sessions whose environment is unchanged are reported as
+/// fresh and skipped. `force` re-tunes everything regardless of drift.
+pub fn plan_retune(
+    states: &[SessionState],
+    env: &EnvFingerprint,
+    budget_pct: u32,
+    force: bool,
+) -> Result<RetunePlan> {
+    let mut plan = RetunePlan {
+        specs: Vec::new(),
+        drifted: Vec::new(),
+        fresh: Vec::new(),
+    };
+    for st in states {
+        if !force && !env.drifted_from(&st.env) {
+            plan.fresh.push(st.id.clone());
+            continue;
+        }
+        let workload = WorkloadSpec::parse_descriptor(&st.workload)
+            .with_context(|| format!("state {}", st.id))?;
+        let optimizer = OptimizerSpec::parse(&st.optimizer)
+            .with_context(|| format!("state {}", st.id))?;
+        let max_iter = (st.max_iter.saturating_mul(budget_pct as usize) / 100).max(2);
+        let spec = SessionSpec {
+            id: st.id.clone(),
+            workload,
+            optimizer,
+            ignore: st.ignore,
+            num_opt: st.num_opt,
+            max_iter,
+            seed: st.seed,
+            warm: Some(st.clone()),
+        };
+        spec.validate().with_context(|| format!("state {}", st.id))?;
+        plan.drifted.push(st.id.clone());
+        plan.specs.push(spec);
+    }
+    Ok(plan)
+}
+
 /// The concurrent tuning runtime (see module docs).
 pub struct TuningService {
     pool: ThreadPool,
     cache: PointCache,
     history: Mutex<Vec<SessionReport>>,
+    states: Mutex<Vec<SessionState>>,
 }
 
 impl TuningService {
@@ -289,6 +482,7 @@ impl TuningService {
             pool: ThreadPool::new(concurrency),
             cache: PointCache::new(),
             history: Mutex::new(Vec::new()),
+            states: Mutex::new(Vec::new()),
         }
     }
 
@@ -303,14 +497,15 @@ impl TuningService {
     }
 
     /// Run a batch of sessions concurrently (bounded by
-    /// [`concurrency`](Self::concurrency)) and return their reports in spec
-    /// order. Results also accumulate into the service's registry for
-    /// [`report`](Self::report).
+    /// [`concurrency`](Self::concurrency)) and return their reports and
+    /// persisted states in spec order. Results also accumulate into the
+    /// service's registry for [`report`](Self::report) (per session id,
+    /// the latest state wins).
     pub fn run(&self, specs: &[SessionSpec]) -> Result<ServiceReport> {
         for spec in specs {
             spec.validate()?;
         }
-        let sessions: Vec<SessionReport> = if specs.len() <= 1 {
+        let outcomes: Vec<SessionOutcome> = if specs.len() <= 1 {
             // A lone session keeps the caller thread out of a pool region,
             // so its pure batch evaluations can parallelise on the pool.
             specs
@@ -318,20 +513,31 @@ impl TuningService {
                 .map(|s| run_session(s, &self.cache, &self.pool))
                 .collect()
         } else {
-            let slots: Vec<Mutex<Option<SessionReport>>> =
+            let slots: Vec<Mutex<Option<SessionOutcome>>> =
                 specs.iter().map(|_| Mutex::new(None)).collect();
             self.pool.parallel_for(0, specs.len(), Schedule::Dynamic(1), |i| {
-                let report = run_session(&specs[i], &self.cache, &self.pool);
-                *slots[i].lock().unwrap() = Some(report);
+                let outcome = run_session(&specs[i], &self.cache, &self.pool);
+                *slots[i].lock().unwrap() = Some(outcome);
             });
             slots
                 .into_iter()
                 .map(|slot| slot.into_inner().unwrap().expect("session completed"))
                 .collect()
         };
+        let sessions: Vec<SessionReport> = outcomes.iter().map(|o| o.report.clone()).collect();
+        let batch_states: Vec<SessionState> =
+            outcomes.into_iter().filter_map(|o| o.state).collect();
         self.history.lock().unwrap().extend(sessions.iter().cloned());
+        {
+            let mut all = self.states.lock().unwrap();
+            for st in &batch_states {
+                all.retain(|old| old.id != st.id);
+                all.push(st.clone());
+            }
+        }
         Ok(ServiceReport {
             sessions,
+            states: batch_states,
             cache: self.cache.stats(),
         })
     }
@@ -341,51 +547,75 @@ impl TuningService {
     pub fn report(&self) -> ServiceReport {
         ServiceReport {
             sessions: self.history.lock().unwrap().clone(),
+            states: self.states.lock().unwrap().clone(),
             cache: self.cache.stats(),
         }
     }
 }
 
-/// Quantise one internal-domain candidate onto the session's integer
-/// lattice — the exact value the application is handed *and* the cache key.
-fn quantize_candidate(internal: &[f64], lo: &[f64], hi: &[f64]) -> Vec<i64> {
+/// Map one internal-domain candidate onto the exact user-domain values the
+/// application is handed — integer-lattice quantised or clamped float,
+/// per the domain's [`PointKind`]. This vector *is* the cache key.
+fn quantize_candidate(internal: &[f64], lo: &[f64], hi: &[f64], kind: PointKind) -> Vec<f64> {
     internal
         .iter()
         .enumerate()
-        .map(|(d, &x)| quantize_integer(rescale_internal(x, lo[d], hi[d]), lo[d], hi[d]) as i64)
+        .map(|(d, &x)| {
+            let raw = rescale_internal(x, lo[d], hi[d]);
+            match kind {
+                PointKind::Integer => quantize_integer(raw, lo[d], hi[d]),
+                PointKind::Float => raw.clamp(lo[d], hi[d]),
+            }
+        })
         .collect()
+}
+
+/// One completed session: its report plus (if the optimizer supports
+/// persistence) the state a later run can warm-start from.
+struct SessionOutcome {
+    report: SessionReport,
+    state: Option<SessionState>,
 }
 
 /// Drive one session to completion: pull candidate batches from the
 /// optimizer, evaluate them (cache-aware; in parallel for pure targets when
 /// not already inside a pool region), feed the costs back.
-fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> SessionReport {
+fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> SessionOutcome {
     let t0 = Instant::now();
-    let (mut target, dim, lo, hi) = match &spec.workload {
+    let (mut target, dim, lo, hi, kind) = match &spec.workload {
         WorkloadSpec::Synthetic {
             optimum,
             dim,
             lo,
             hi,
+            kind,
         } => (
             Target::Pure { optimum: *optimum },
             *dim,
             vec![*lo; *dim],
             vec![*hi; *dim],
+            *kind,
         ),
         WorkloadSpec::Named(name) => {
             let w = workloads::by_name(name).expect("validated workload name");
             let (lo, hi) = w.bounds();
             let dim = w.dim();
-            (Target::Measured(w), dim, lo, hi)
+            (Target::Measured(w), dim, lo, hi, PointKind::Integer)
         }
     };
     let fingerprint = spec.fingerprint();
     let mut opt = spec
         .optimizer
         .build(dim, spec.num_opt, spec.max_iter, spec.seed);
+    // Seed from persisted state when present; optimizers that cannot
+    // consume the snapshot leave `warm_started` false and run cold.
+    let warm_started = spec
+        .warm
+        .as_ref()
+        .map(|ws| opt.warm_start(&ws.opt_state))
+        .unwrap_or(false);
 
-    let mut best: Option<(Vec<i64>, f64)> = None;
+    let mut best: Option<(Vec<f64>, f64)> = None;
     let mut cache_hits = 0u64;
     let mut cache_misses = 0u64;
     let mut target_iterations = 0u64;
@@ -396,9 +626,9 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
         if batch.is_empty() {
             break;
         }
-        let points: Vec<Vec<i64>> = batch
+        let points: Vec<Vec<f64>> = batch
             .iter()
-            .map(|cand| quantize_candidate(cand, &lo, &hi))
+            .map(|cand| quantize_candidate(cand, &lo, &hi, kind))
             .collect();
         let mut hit_flags = vec![false; points.len()];
         costs = match &mut target {
@@ -427,7 +657,7 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
                 .enumerate()
                 .map(|(i, point)| {
                     let (cost, hit) = cache.get_or_compute(fingerprint, point, || {
-                        let params: Vec<i32> = point.iter().map(|&v| v as i32).collect();
+                        let params: Vec<i32> = point.iter().map(|&v| v.round() as i32).collect();
                         // The ignore protocol (§2.3): run `ignore`
                         // stabilisation iterations, measure the last one.
                         let mut measured = 0.0;
@@ -464,27 +694,54 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
         }
     }
 
-    let (best_point, best_cost) = best.unwrap_or((vec![0; dim], f64::INFINITY));
-    SessionReport {
+    let (best_point, best_cost) = best.unwrap_or((vec![0.0; dim], f64::INFINITY));
+    // A warm-started (retuned) session ran at a *reduced* budget; the state
+    // it persists must carry the scenario's original budget forward, or
+    // each successive retune would re-apply its percentage to an already
+    // reduced value and grind every budget down to the floor of 2.
+    let full_max_iter = spec
+        .warm
+        .as_ref()
+        .map(|ws| ws.max_iter.max(spec.max_iter))
+        .unwrap_or(spec.max_iter);
+    let state = opt.export_state().map(|opt_state| SessionState {
         id: spec.id.clone(),
         workload: spec.workload.descriptor(),
-        optimizer: opt.name().to_string(),
-        evaluations: opt.evaluations(),
-        target_iterations,
-        cache_hits,
-        cache_misses,
-        best_point,
+        fingerprint,
+        env: EnvFingerprint::current(),
+        optimizer: spec.optimizer.name().to_string(),
+        num_opt: spec.num_opt,
+        max_iter: full_max_iter,
+        seed: spec.seed,
+        ignore: spec.ignore,
+        best_point: best_point.clone(),
         best_cost,
-        wall_secs: t0.elapsed().as_secs_f64(),
+        opt_state,
+    });
+    SessionOutcome {
+        report: SessionReport {
+            id: spec.id.clone(),
+            workload: spec.workload.descriptor(),
+            optimizer: opt.name().to_string(),
+            evaluations: opt.evaluations(),
+            target_iterations,
+            cache_hits,
+            cache_misses,
+            best_point,
+            best_cost,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            warm_started,
+        },
+        state,
     }
 }
 
 /// The deterministic session landscape: the chunk-cost model summed over
 /// dimensions (minimum at `optimum` per coordinate).
-fn pure_cost(point: &[i64], optimum: f64) -> f64 {
+fn pure_cost(point: &[f64], optimum: f64) -> f64 {
     point
         .iter()
-        .map(|&p| synthetic::chunk_cost_model(p as f64, optimum))
+        .map(|&p| synthetic::chunk_cost_model(p, optimum))
         .sum()
 }
 
@@ -508,19 +765,66 @@ mod tests {
             dim: 1,
             lo: 1.0,
             hi: 128.0,
+            kind: PointKind::Integer,
         };
         let b = WorkloadSpec::Synthetic {
             optimum: 24.0,
             dim: 1,
             lo: 1.0,
             hi: 128.0,
+            kind: PointKind::Integer,
         };
         let c = WorkloadSpec::Named("spmv".into());
+        let mut d = a.clone();
+        if let WorkloadSpec::Synthetic { kind, .. } = &mut d {
+            *kind = PointKind::Float;
+        }
         assert_ne!(a.fingerprint(), b.fingerprint());
         assert_ne!(a.fingerprint(), c.fingerprint());
-        for w in [a, b, c] {
+        // Point kind is part of the landscape identity: an integer-lattice
+        // session and a float session must not share cache entries.
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        for w in [a, b, c, d] {
             assert!(!w.descriptor().contains(char::is_whitespace));
         }
+    }
+
+    #[test]
+    fn descriptor_parse_roundtrip() {
+        let specs = [
+            WorkloadSpec::Synthetic {
+                optimum: 48.5,
+                dim: 2,
+                lo: 1.0,
+                hi: 128.0,
+                kind: PointKind::Float,
+            },
+            WorkloadSpec::Synthetic {
+                optimum: 24.0,
+                dim: 1,
+                lo: 1.0,
+                hi: 64.0,
+                kind: PointKind::Integer,
+            },
+            WorkloadSpec::Named("spmv".into()),
+        ];
+        for w in specs {
+            let d = w.descriptor();
+            let parsed = WorkloadSpec::parse_descriptor(&d).unwrap();
+            assert_eq!(parsed, w, "{d}");
+            assert_eq!(parsed.descriptor(), d, "round trip must be exact");
+        }
+        // Unknown segments are ignored (forward compatibility).
+        let fwd = WorkloadSpec::parse_descriptor(
+            "synthetic/opt=48/dim=1/lo=1/hi=128/kind=int/future=stuff",
+        )
+        .unwrap();
+        assert_eq!(
+            fwd.descriptor(),
+            "synthetic/opt=48/dim=1/lo=1/hi=128/kind=int"
+        );
+        assert!(WorkloadSpec::parse_descriptor("garbage").is_err());
+        assert!(WorkloadSpec::parse_descriptor("synthetic/opt=48").is_err());
     }
 
     #[test]
@@ -558,6 +862,7 @@ mod tests {
             dim: 0,
             lo: 1.0,
             hi: 2.0,
+            kind: PointKind::Integer,
         };
         assert!(s.validate().is_err());
         s.workload = WorkloadSpec::Synthetic {
@@ -565,8 +870,65 @@ mod tests {
             dim: 1,
             lo: 5.0,
             hi: 2.0,
+            kind: PointKind::Integer,
         };
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_cross_landscape_warm_start() {
+        let service = TuningService::new(1);
+        let donor = SessionSpec::synthetic("donor", 48.0, 7).with_budget(4, 6);
+        let report = service.run(std::slice::from_ref(&donor)).unwrap();
+        let state = report.states[0].clone();
+
+        // Same landscape: accepted.
+        SessionSpec::synthetic("same", 48.0, 8)
+            .warm_start(state.clone())
+            .validate()
+            .unwrap();
+        // Different optimum ⇒ different fingerprint ⇒ rejected.
+        assert!(SessionSpec::synthetic("other", 24.0, 8)
+            .warm_start(state)
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn quantize_candidate_respects_point_kind() {
+        let (lo, hi) = (vec![1.0], vec![64.0]);
+        // An internal coordinate that rescales to 32.75.
+        let internal = [(32.75 - 1.0) / (64.0 - 1.0) * 2.0 - 1.0];
+        let int_point = quantize_candidate(&internal, &lo, &hi, PointKind::Integer);
+        let float_point = quantize_candidate(&internal, &lo, &hi, PointKind::Float);
+        assert_eq!(int_point, vec![33.0], "integer domains round to lattice");
+        assert!(
+            (float_point[0] - 32.75).abs() < 1e-12,
+            "float domains keep the exact value: {float_point:?}"
+        );
+    }
+
+    #[test]
+    fn float_sessions_cache_distinct_candidates_separately() {
+        // The fix for the float-domain collapse: distinct float candidates
+        // must evaluate independently. A float CSA session proposes many
+        // sub-integer candidates; if they collapsed onto the integer
+        // lattice the cache would claim ~1 entry per lattice point.
+        let service = TuningService::new(1);
+        let spec = SessionSpec::synthetic_float("float", 48.5, 5).with_budget(4, 10);
+        let report = service.run(&[spec]).unwrap();
+        let s = &report.sessions[0];
+        assert_eq!(s.evaluations, 40);
+        // Float candidates essentially never repeat bit-for-bit, so misses
+        // dominate: far more distinct entries than the 1–2 lattice cells
+        // the old i64 key would have produced around the optimum.
+        assert!(
+            report.cache.entries > 20,
+            "float candidates collapsed: {:?}",
+            report.cache
+        );
+        assert!(s.best_cost.is_finite());
+        assert!((1.0..=128.0).contains(&s.best_point[0]));
     }
 
     #[test]
@@ -577,6 +939,7 @@ mod tests {
         let s = &report.sessions[0];
         assert_eq!(s.id, "solo");
         assert_eq!(s.optimizer, "csa");
+        assert!(!s.warm_started);
         assert_eq!(s.evaluations, 100, "Eq. (1): num_opt * max_iter");
         assert_eq!(
             s.cache_hits + s.cache_misses,
@@ -585,10 +948,39 @@ mod tests {
         );
         assert!(s.best_cost.is_finite());
         assert!(
-            (s.best_point[0] - 48).abs() <= 16,
+            (s.best_point[0] - 48.0).abs() <= 16.0,
             "best {:?} too far from optimum 48",
             s.best_point
         );
+    }
+
+    #[test]
+    fn sessions_export_persistable_state() {
+        let service = TuningService::new(2);
+        let spec = SessionSpec::synthetic("exp", 48.0, 7).with_budget(4, 6);
+        let report = service.run(&[spec.clone()]).unwrap();
+        assert_eq!(report.states.len(), 1);
+        let st = &report.states[0];
+        assert_eq!(st.id, "exp");
+        assert_eq!(st.fingerprint, spec.fingerprint());
+        assert_eq!(st.optimizer, "csa");
+        assert_eq!(st.best_point, report.sessions[0].best_point);
+        assert_eq!(st.opt_state.points.len(), 4, "one point per CSA chain");
+        assert_eq!(st.env.hash, EnvFingerprint::current().hash);
+    }
+
+    #[test]
+    fn latest_state_wins_per_session_id() {
+        let service = TuningService::new(1);
+        let spec = SessionSpec::synthetic("dup", 48.0, 7).with_budget(4, 6);
+        service.run(&[spec.clone()]).unwrap();
+        let mut again = spec;
+        again.seed = 8;
+        service.run(&[again]).unwrap();
+        let report = service.report();
+        assert_eq!(report.sessions.len(), 2, "history keeps both runs");
+        assert_eq!(report.states.len(), 1, "states dedupe by id");
+        assert_eq!(report.states[0].seed, 8, "latest run's state wins");
     }
 
     #[test]
@@ -617,6 +1009,7 @@ mod tests {
         let report = service.report();
         let ids: Vec<&str> = report.sessions.iter().map(|s| s.id.as_str()).collect();
         assert_eq!(ids, vec!["a", "b"]);
+        assert_eq!(report.states.len(), 2);
         assert!(report.cache.hits + report.cache.misses > 0);
     }
 
@@ -632,6 +1025,7 @@ mod tests {
             dim: 1,
             lo: 1.0,
             hi: 32.0,
+            kind: PointKind::Integer,
         };
         let report = service.run(&[spec]).unwrap();
         let s = &report.sessions[0];
@@ -639,7 +1033,8 @@ mod tests {
         // the session must land exactly on the model's integer argmin
         // (which sits slightly above `optimum` — imbalance is cheaper than
         // contention near the minimum).
-        let argmin = (1..=32i64)
+        let argmin = (1..=32)
+            .map(|v| v as f64)
             .min_by(|&a, &b| {
                 pure_cost(&[a], 24.0)
                     .partial_cmp(&pure_cost(&[b], 24.0))
@@ -648,5 +1043,71 @@ mod tests {
             .unwrap();
         assert_eq!(s.best_point, vec![argmin], "exhaustive scan finds the argmin");
         assert_eq!(s.evaluations, 32);
+    }
+
+    #[test]
+    fn plan_retune_skips_fresh_and_rebuilds_drifted() {
+        let service = TuningService::new(1);
+        let specs = vec![
+            SessionSpec::synthetic("s0", 48.0, 1).with_budget(4, 10),
+            SessionSpec::synthetic("s1", 24.0, 2)
+                .with_optimizer(OptimizerSpec::NelderMead)
+                .with_budget(4, 10),
+        ];
+        let report = service.run(&specs).unwrap();
+        assert_eq!(report.states.len(), 2);
+
+        // Same environment: everything is fresh, nothing to do.
+        let here = EnvFingerprint::current();
+        let plan = plan_retune(&report.states, &here, 50, false).unwrap();
+        assert!(plan.specs.is_empty());
+        assert_eq!(plan.fresh, vec!["s0", "s1"]);
+
+        // Drifted environment: both sessions come back warm-started with
+        // half the budget.
+        let elsewhere = EnvFingerprint::new("threads=1024/os=plan9");
+        assert!(elsewhere.drifted_from(&here));
+        let plan = plan_retune(&report.states, &elsewhere, 50, false).unwrap();
+        assert_eq!(plan.drifted, vec!["s0", "s1"]);
+        assert_eq!(plan.specs.len(), 2);
+        for (spec, st) in plan.specs.iter().zip(&report.states) {
+            assert_eq!(spec.max_iter, 5, "half of the original 10");
+            assert_eq!(spec.num_opt, st.num_opt);
+            assert_eq!(spec.fingerprint(), st.fingerprint);
+            assert!(spec.warm.is_some());
+            spec.validate().unwrap();
+        }
+
+        // Force re-tunes even without drift.
+        let plan = plan_retune(&report.states, &here, 30, true).unwrap();
+        assert_eq!(plan.drifted.len(), 2);
+        assert_eq!(plan.specs[0].max_iter, 3);
+    }
+
+    #[test]
+    fn retuned_sessions_run_and_mark_warm() {
+        let service = TuningService::new(2);
+        let specs = vec![SessionSpec::synthetic("rt", 48.0, 7).with_budget(5, 20)];
+        let report = service.run(&specs).unwrap();
+
+        let elsewhere = EnvFingerprint::new("threads=1024/os=plan9");
+        let plan = plan_retune(&report.states, &elsewhere, 40, false).unwrap();
+        let rerun = TuningService::new(2);
+        let second = rerun.run(&plan.specs).unwrap();
+        let s = &second.sessions[0];
+        assert!(s.warm_started, "retuned session must be warm-started");
+        assert_eq!(s.evaluations, 5 * 8, "40% of max_iter 20 = 8 iterations");
+        assert!(
+            s.best_cost <= report.sessions[0].best_cost,
+            "unchanged landscape: warm rerun cannot regress ({} vs {})",
+            s.best_cost,
+            report.sessions[0].best_cost
+        );
+        // The re-tuned session's persisted state must carry the *original*
+        // budget, so a second retune reduces from 20 again — percentages
+        // must not compound across successive drifts.
+        assert_eq!(second.states[0].max_iter, 20, "budget must not compound");
+        let plan2 = plan_retune(&second.states, &elsewhere, 40, true).unwrap();
+        assert_eq!(plan2.specs[0].max_iter, 8, "still 40% of the original 20");
     }
 }

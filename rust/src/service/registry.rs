@@ -1,17 +1,43 @@
-//! Results registry — what the service hands the coordinator and CLI.
+//! Results registry — what the service hands the coordinator and CLI, and
+//! what `patsma service retune` warm-starts from.
 //!
 //! Each completed session yields a [`SessionReport`]; a batch run yields a
-//! [`ServiceReport`] (sessions + a cache-counter snapshot). The registry
-//! serialises to a plain whitespace-separated text file (the offline build
-//! has no serde) so `patsma service report` can render results from an
-//! earlier `patsma service run` process.
+//! [`ServiceReport`] (sessions + persisted [`SessionState`]s + a
+//! cache-counter snapshot). The registry serialises to a plain text file
+//! (the offline build has no serde) so a later `patsma service
+//! report|retune` process can consume results from an earlier `patsma
+//! service run`.
+//!
+//! ## Format v2
+//!
+//! Line-oriented: a magic header, then one whitespace-separated record per
+//! line. Every record is `<type> key=value key=value ...`:
+//!
+//! ```text
+//! # patsma-service-registry v2
+//! cache hits=3 misses=29 entries=29
+//! session id=s0 workload=synthetic/... optimizer=csa evals=20 ... warm=0
+//! state id=s0 workload=synthetic/... fingerprint=... env=threads=8/os=linux ...
+//! ```
+//!
+//! Compatibility rules:
+//! * **unknown keys are ignored** on load — newer writers can add fields
+//!   without breaking older readers (pinned by tests);
+//! * **v1 files still load** (the positional format of the first release);
+//! * [`ServiceReport::from_text`] is strict about malformed records, while
+//!   [`ServiceReport::from_text_lenient`] skips them and reports what it
+//!   skipped — corrupt-file recovery for long-lived registries.
 
 use super::cache::CacheStats;
+use super::state::SessionState;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
-/// Magic first line of a registry file (format version gate).
-const HEADER: &str = "# patsma-service-registry v1";
+/// Magic first line of a v2 registry file.
+const HEADER_V2: &str = "# patsma-service-registry v2";
+
+/// Magic first line of the original positional format (still loadable).
+const HEADER_V1: &str = "# patsma-service-registry v1";
 
 /// One finished tuning session.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,21 +58,51 @@ pub struct SessionReport {
     pub cache_hits: u64,
     /// Batch evaluations that ran the target.
     pub cache_misses: u64,
-    /// Best measured point (user domain, quantised).
-    pub best_point: Vec<i64>,
+    /// Best measured point (user domain; quantised for integer domains,
+    /// exact for float domains).
+    pub best_point: Vec<f64>,
     /// Best measured cost.
     pub best_cost: f64,
     /// Session wall-clock seconds.
     pub wall_secs: f64,
+    /// Whether the session was seeded from persisted state.
+    pub warm_started: bool,
 }
 
-/// A batch of session results plus the shared-cache counters.
+/// A batch of session results plus persisted states and cache counters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServiceReport {
     /// Per-session results, spec order.
     pub sessions: Vec<SessionReport>,
+    /// Persisted optimizer states (one per session whose optimizer supports
+    /// export; latest run wins per session id).
+    pub states: Vec<SessionState>,
     /// Cache counters at the end of the batch.
     pub cache: CacheStats,
+}
+
+fn fmt_point(point: &[f64]) -> String {
+    if point.is_empty() {
+        "-".to_string()
+    } else {
+        point
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+fn parse_point(text: &str) -> Result<Vec<f64>> {
+    if text == "-" {
+        return Ok(Vec::new());
+    }
+    text.split(',')
+        .map(|v| {
+            v.parse::<f64>()
+                .with_context(|| format!("bad point coord {v:?}"))
+        })
+        .collect()
 }
 
 impl ServiceReport {
@@ -55,56 +111,58 @@ impl ServiceReport {
         self.sessions.iter().map(|s| s.cache_hits).sum()
     }
 
+    /// Persisted state for a session id, if any.
+    pub fn state_for(&self, id: &str) -> Option<&SessionState> {
+        self.states.iter().find(|s| s.id == id)
+    }
+
     /// Render as a markdown report (the `patsma service report` output).
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "\n| session | workload | optimizer | evals | target iters | cache hits | \
-             best point | best cost | wall |\n|---|---|---|---|---|---|---|---|---|\n",
+            "\n| session | workload | optimizer | warm | evals | target iters | cache hits | \
+             best point | best cost | wall |\n|---|---|---|---|---|---|---|---|---|---|\n",
         );
         for s in &self.sessions {
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {} | {:?} | {:.6e} | {} |\n",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {:.6e} | {} |\n",
                 s.id,
                 s.workload,
                 s.optimizer,
+                if s.warm_started { "yes" } else { "no" },
                 s.evaluations,
                 s.target_iterations,
                 s.cache_hits,
-                s.best_point,
+                fmt_point(&s.best_point),
                 s.best_cost,
-                crate::benchkit::fmt_time(s.wall_secs),
+                crate::bench::fmt_time(s.wall_secs),
             ));
         }
         let c = &self.cache;
         out.push_str(&format!(
             "\nsessions: {}; session cache hits: {}; shared cache: {} hits / {} misses \
-             ({:.1}% hit rate), {} entries\n",
+             ({:.1}% hit rate), {} entries; persisted states: {}\n",
             self.sessions.len(),
             self.session_cache_hits(),
             c.hits,
             c.misses,
             100.0 * c.hit_rate(),
             c.entries,
+            self.states.len(),
         ));
         out
     }
 
-    /// Serialise to the plain-text registry format.
+    /// Serialise to the v2 registry format.
     pub fn to_text(&self) -> String {
-        let mut out = format!("{HEADER}\n");
+        let mut out = format!("{HEADER_V2}\n");
         out.push_str(&format!(
-            "cache {} {} {}\n",
+            "cache hits={} misses={} entries={}\n",
             self.cache.hits, self.cache.misses, self.cache.entries
         ));
         for s in &self.sessions {
-            let point = s
-                .best_point
-                .iter()
-                .map(|v| v.to_string())
-                .collect::<Vec<_>>()
-                .join(",");
             out.push_str(&format!(
-                "session {} {} {} {} {} {} {} {} {} {}\n",
+                "session id={} workload={} optimizer={} evals={} iters={} hits={} misses={} \
+                 best={} cost={} wall={} warm={}\n",
                 s.id,
                 s.workload,
                 s.optimizer,
@@ -112,65 +170,83 @@ impl ServiceReport {
                 s.target_iterations,
                 s.cache_hits,
                 s.cache_misses,
-                point,
+                fmt_point(&s.best_point),
                 s.best_cost,
                 s.wall_secs,
+                if s.warm_started { 1 } else { 0 },
             ));
+        }
+        for st in &self.states {
+            let body = st
+                .to_kv()
+                .into_iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            out.push_str(&format!("state {body}\n"));
         }
         out
     }
 
-    /// Parse the plain-text registry format.
+    /// Parse a registry (v2 `key=value` or legacy v1 positional). Strict:
+    /// malformed records are an error (use
+    /// [`from_text_lenient`](Self::from_text_lenient) to recover instead);
+    /// unknown *keys* inside a known record are ignored.
     pub fn from_text(text: &str) -> Result<Self> {
+        let (report, skipped) = Self::parse(text, false)?;
+        debug_assert!(skipped.is_empty(), "strict parse cannot skip");
+        Ok(report)
+    }
+
+    /// Parse, skipping malformed records instead of failing. Returns the
+    /// recovered report and one human-readable note per skipped line. The
+    /// header must still match — without it the file is not a registry and
+    /// "recovering" it would fabricate an empty report from garbage.
+    pub fn from_text_lenient(text: &str) -> Result<(Self, Vec<String>)> {
+        Self::parse(text, true)
+    }
+
+    fn parse(text: &str, lenient: bool) -> Result<(Self, Vec<String>)> {
         let mut lines = text.lines();
-        match lines.next() {
-            Some(h) if h.trim() == HEADER => {}
+        let version = match lines.next().map(str::trim) {
+            Some(h) if h == HEADER_V2 => 2,
+            Some(h) if h == HEADER_V1 => 1,
             other => bail!("not a service registry (header {other:?})"),
-        }
+        };
         let mut cache = CacheStats {
             hits: 0,
             misses: 0,
             entries: 0,
         };
         let mut sessions = Vec::new();
+        let mut states = Vec::new();
+        let mut skipped = Vec::new();
         for (lineno, line) in lines.enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
-            let f: Vec<&str> = line.split_whitespace().collect();
-            let ctx = |what: &str| format!("registry line {}: bad {what}", lineno + 2);
-            match f[0] {
-                "cache" if f.len() == 4 => {
-                    cache = CacheStats {
-                        hits: f[1].parse().with_context(|| ctx("hits"))?,
-                        misses: f[2].parse().with_context(|| ctx("misses"))?,
-                        entries: f[3].parse().with_context(|| ctx("entries"))?,
-                    };
+            let parsed = if version == 1 {
+                parse_v1_record(line, &mut cache, &mut sessions)
+            } else {
+                parse_v2_record(line, &mut cache, &mut sessions, &mut states)
+            };
+            if let Err(e) = parsed {
+                if lenient {
+                    skipped.push(format!("line {}: {e:#}", lineno + 2));
+                } else {
+                    return Err(e.context(format!("registry line {}", lineno + 2)));
                 }
-                "session" if f.len() == 11 => {
-                    let best_point = f[8]
-                        .split(',')
-                        .map(|v| v.parse::<i64>())
-                        .collect::<std::result::Result<Vec<_>, _>>()
-                        .with_context(|| ctx("best point"))?;
-                    sessions.push(SessionReport {
-                        id: f[1].to_string(),
-                        workload: f[2].to_string(),
-                        optimizer: f[3].to_string(),
-                        evaluations: f[4].parse().with_context(|| ctx("evaluations"))?,
-                        target_iterations: f[5].parse().with_context(|| ctx("iters"))?,
-                        cache_hits: f[6].parse().with_context(|| ctx("cache hits"))?,
-                        cache_misses: f[7].parse().with_context(|| ctx("cache misses"))?,
-                        best_point,
-                        best_cost: f[9].parse().with_context(|| ctx("best cost"))?,
-                        wall_secs: f[10].parse().with_context(|| ctx("wall seconds"))?,
-                    });
-                }
-                _ => bail!("registry line {}: unrecognised record {line:?}", lineno + 2),
             }
         }
-        Ok(Self { sessions, cache })
+        Ok((
+            Self {
+                sessions,
+                states,
+                cache,
+            },
+            skipped,
+        ))
     }
 
     /// Write the registry to `path`.
@@ -179,17 +255,150 @@ impl ServiceReport {
             .with_context(|| format!("writing registry {}", path.display()))
     }
 
-    /// Read a registry from `path`.
+    /// Read a registry from `path` (strict).
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading registry {}", path.display()))?;
         Self::from_text(&text)
     }
+
+    /// Read a registry from `path`, recovering what a corrupted file still
+    /// holds; returns the skipped-line notes alongside.
+    pub fn load_lenient(path: &Path) -> Result<(Self, Vec<String>)> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading registry {}", path.display()))?;
+        Self::from_text_lenient(&text)
+    }
+}
+
+/// Split a v2 record body into `(key, value)` pairs; values may themselves
+/// contain `=` (descriptors), so only the first `=` per token splits.
+fn split_kv(tokens: &[&str]) -> Result<Vec<(String, String)>> {
+    tokens
+        .iter()
+        .map(|t| {
+            t.split_once('=')
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .with_context(|| format!("token {t:?} is not key=value"))
+        })
+        .collect()
+}
+
+fn kv_get<'a>(pairs: &'a [(String, String)], key: &str) -> Result<&'a str> {
+    pairs
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+        .with_context(|| format!("missing {key:?}"))
+}
+
+fn parse_v2_record(
+    line: &str,
+    cache: &mut CacheStats,
+    sessions: &mut Vec<SessionReport>,
+    states: &mut Vec<SessionState>,
+) -> Result<()> {
+    let tokens: Vec<&str> = line.split_whitespace().collect();
+    let pairs = split_kv(&tokens[1..])?;
+    match tokens[0] {
+        "cache" => {
+            *cache = CacheStats {
+                hits: kv_get(&pairs, "hits")?.parse().context("bad hits")?,
+                misses: kv_get(&pairs, "misses")?.parse().context("bad misses")?,
+                entries: kv_get(&pairs, "entries")?.parse().context("bad entries")?,
+            };
+        }
+        "session" => {
+            sessions.push(SessionReport {
+                id: kv_get(&pairs, "id")?.to_string(),
+                workload: kv_get(&pairs, "workload")?.to_string(),
+                optimizer: kv_get(&pairs, "optimizer")?.to_string(),
+                evaluations: kv_get(&pairs, "evals")?.parse().context("bad evals")?,
+                target_iterations: kv_get(&pairs, "iters")?.parse().context("bad iters")?,
+                cache_hits: kv_get(&pairs, "hits")?.parse().context("bad hits")?,
+                cache_misses: kv_get(&pairs, "misses")?.parse().context("bad misses")?,
+                best_point: parse_point(kv_get(&pairs, "best")?)?,
+                best_cost: kv_get(&pairs, "cost")?.parse().context("bad cost")?,
+                wall_secs: kv_get(&pairs, "wall")?.parse().context("bad wall")?,
+                warm_started: kv_get(&pairs, "warm").map(|v| v == "1").unwrap_or(false),
+            });
+        }
+        "state" => {
+            let borrowed: Vec<(&str, &str)> = pairs
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.as_str()))
+                .collect();
+            states.push(SessionState::from_kv(&borrowed)?);
+        }
+        other => bail!("unrecognised record {other:?}"),
+    }
+    Ok(())
+}
+
+/// The original positional format: `cache H M E` and 11-field `session`
+/// lines. Loaded for back-compat; saving always writes v2.
+fn parse_v1_record(
+    line: &str,
+    cache: &mut CacheStats,
+    sessions: &mut Vec<SessionReport>,
+) -> Result<()> {
+    let f: Vec<&str> = line.split_whitespace().collect();
+    match f[0] {
+        "cache" if f.len() == 4 => {
+            *cache = CacheStats {
+                hits: f[1].parse().context("bad hits")?,
+                misses: f[2].parse().context("bad misses")?,
+                entries: f[3].parse().context("bad entries")?,
+            };
+        }
+        "session" if f.len() == 11 => {
+            sessions.push(SessionReport {
+                id: f[1].to_string(),
+                workload: f[2].to_string(),
+                optimizer: f[3].to_string(),
+                evaluations: f[4].parse().context("bad evaluations")?,
+                target_iterations: f[5].parse().context("bad iters")?,
+                cache_hits: f[6].parse().context("bad cache hits")?,
+                cache_misses: f[7].parse().context("bad cache misses")?,
+                best_point: parse_point(f[8])?,
+                best_cost: f[9].parse().context("bad best cost")?,
+                wall_secs: f[10].parse().context("bad wall seconds")?,
+                warm_started: false,
+            });
+        }
+        _ => bail!("unrecognised record {line:?}"),
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optimizer::OptimizerState;
+    use crate::service::state::EnvFingerprint;
+
+    fn sample_state(id: &str) -> SessionState {
+        SessionState {
+            id: id.into(),
+            workload: "synthetic/opt=48/dim=1/lo=1/hi=128/kind=int".into(),
+            fingerprint: 123_456,
+            env: EnvFingerprint::with_threads(8),
+            optimizer: "csa".into(),
+            num_opt: 4,
+            max_iter: 8,
+            seed: 42,
+            ignore: 0,
+            best_point: vec![47.0],
+            best_cost: 1.0104,
+            opt_state: OptimizerState {
+                optimizer: "csa".into(),
+                best_internal: vec![-0.28],
+                best_cost: 1.0104,
+                temperatures: Some((0.125, 1.75)),
+                points: vec![vec![-0.28], vec![0.5]],
+            },
+        }
+    }
 
     fn sample() -> ServiceReport {
         ServiceReport {
@@ -202,9 +411,10 @@ mod tests {
                     target_iterations: 17,
                     cache_hits: 3,
                     cache_misses: 17,
-                    best_point: vec![47],
+                    best_point: vec![47.0],
                     best_cost: 1.0104,
                     wall_secs: 0.002,
+                    warm_started: false,
                 },
                 SessionReport {
                     id: "s1".into(),
@@ -214,11 +424,13 @@ mod tests {
                     target_iterations: 12,
                     cache_hits: 0,
                     cache_misses: 12,
-                    best_point: vec![25, 23],
+                    best_point: vec![25.5, 23.0],
                     best_cost: 2.1,
                     wall_secs: 0.001,
+                    warm_started: true,
                 },
             ],
+            states: vec![sample_state("s0")],
             cache: CacheStats {
                 hits: 3,
                 misses: 29,
@@ -245,18 +457,93 @@ mod tests {
     }
 
     #[test]
-    fn render_reports_cache_hits() {
+    fn unknown_keys_are_ignored_forward_compat() {
+        // A future writer adds fields; this reader must not choke on them.
+        let mut text = String::from(
+            "# patsma-service-registry v2\n\
+             cache hits=1 misses=2 entries=2 compression=zstd\n",
+        );
+        text.push_str(
+            "session id=s9 workload=w optimizer=csa evals=4 iters=4 hits=0 misses=4 \
+             best=3 cost=0.5 wall=0.01 warm=0 gpu_time=0.3 battery=full\n",
+        );
+        let r = ServiceReport::from_text(&text).unwrap();
+        assert_eq!(r.sessions.len(), 1);
+        assert_eq!(r.sessions[0].id, "s9");
+        assert_eq!(r.cache.misses, 2);
+    }
+
+    #[test]
+    fn missing_warm_key_defaults_to_cold() {
+        let text = "# patsma-service-registry v2\n\
+                    session id=s0 workload=w optimizer=csa evals=1 iters=1 hits=0 misses=1 \
+                    best=2 cost=0.1 wall=0.01\n";
+        let r = ServiceReport::from_text(text).unwrap();
+        assert!(!r.sessions[0].warm_started);
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let text = "# patsma-service-registry v1\n\
+                    cache 3 29 29\n\
+                    session s0 synthetic/best=48/dim=1 csa 20 17 3 17 47 1.0104 0.002\n";
+        let r = ServiceReport::from_text(text).unwrap();
+        assert_eq!(r.sessions.len(), 1);
+        assert_eq!(r.sessions[0].best_point, vec![47.0]);
+        assert_eq!(r.cache.hits, 3);
+        assert!(r.states.is_empty());
+        assert!(!r.sessions[0].warm_started);
+    }
+
+    #[test]
+    fn lenient_parse_recovers_around_corruption() {
+        let good = sample();
+        let mut text = good.to_text();
+        // Corrupt the middle: a truncated record and binary junk.
+        text.push_str("session id=broken workload=w optimizer=csa evals=NOTANUMBER\n");
+        text.push_str("\u{0}\u{1}garbage record here\n");
+        text.push_str(
+            "session id=tail workload=w optimizer=sa evals=2 iters=2 hits=0 misses=2 \
+             best=5 cost=0.25 wall=0.001 warm=0\n",
+        );
+        // Strict parse refuses...
+        assert!(ServiceReport::from_text(&text).is_err());
+        // ...lenient parse keeps everything salvageable.
+        let (r, skipped) = ServiceReport::from_text_lenient(&text).unwrap();
+        assert_eq!(skipped.len(), 2, "{skipped:?}");
+        assert_eq!(r.sessions.len(), good.sessions.len() + 1);
+        assert_eq!(r.sessions.last().unwrap().id, "tail");
+        assert_eq!(r.states.len(), 1);
+    }
+
+    #[test]
+    fn lenient_parse_still_requires_the_header() {
+        assert!(ServiceReport::from_text_lenient("random junk\nmore junk\n").is_err());
+    }
+
+    #[test]
+    fn render_reports_cache_hits_and_states() {
         let text = sample().render();
         assert!(text.contains("cache hits"), "{text}");
         assert!(text.contains("session cache hits: 3"), "{text}");
         assert!(text.contains("| s0 |"), "{text}");
+        assert!(text.contains("persisted states: 1"), "{text}");
+        assert!(text.contains("| yes |"), "{text}");
     }
 
     #[test]
     fn rejects_garbage() {
         assert!(ServiceReport::from_text("nonsense").is_err());
         assert!(
-            ServiceReport::from_text("# patsma-service-registry v1\nbogus line here").is_err()
+            ServiceReport::from_text("# patsma-service-registry v2\nbogus line here").is_err()
         );
+    }
+
+    #[test]
+    fn float_best_points_roundtrip_exactly() {
+        let mut r = sample();
+        r.sessions[0].best_point = vec![32.248_737_510_186_3, 0.125];
+        let parsed = ServiceReport::from_text(&r.to_text()).unwrap();
+        assert_eq!(parsed.sessions[0].best_point, r.sessions[0].best_point);
     }
 }

@@ -1,0 +1,314 @@
+//! Persistent session state — what `patsma service retune` resumes from.
+//!
+//! A completed tuning session leaves more behind than its best point: the
+//! optimizer's population and annealing temperatures encode *where the
+//! search was* when it stopped. [`SessionState`] captures all of it,
+//! together with two fingerprints:
+//!
+//! * the **workload fingerprint** ([`super::SessionSpec::fingerprint`]) —
+//!   which cost landscape the state belongs to; a state never seeds a
+//!   session over a different landscape;
+//! * the **environment fingerprint** ([`EnvFingerprint`]) — the execution
+//!   context (thread count, OS) the costs were measured under. When it
+//!   drifts, old costs are stale but old *solutions* are still excellent
+//!   starting material (Karcher & Pankratius's online re-tuning premise),
+//!   so the retune path warm-starts from the state with a reduced budget
+//!   instead of cold-starting a full run.
+//!
+//! States serialise into the v2 service registry as whitespace-separated
+//! `key=value` records; unknown keys are ignored on load so newer writers
+//! stay readable by older readers (forward compatibility).
+
+use super::cache::fingerprint_str;
+use crate::optimizer::OptimizerState;
+use crate::sched::ThreadPool;
+use anyhow::{bail, Context, Result};
+
+/// Fingerprint of the execution environment costs were measured under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnvFingerprint {
+    /// Human-readable, whitespace-free descriptor (e.g.
+    /// `threads=8/os=linux`). Everything that should invalidate measured
+    /// costs on change belongs here.
+    pub descriptor: String,
+    /// Stable hash of the descriptor (what drift detection compares).
+    pub hash: u64,
+}
+
+impl EnvFingerprint {
+    /// Fingerprint from an explicit descriptor.
+    pub fn new(descriptor: impl Into<String>) -> Self {
+        let descriptor = descriptor.into();
+        let hash = fingerprint_str(&descriptor);
+        Self { descriptor, hash }
+    }
+
+    /// The current process environment: global-pool thread count + OS.
+    pub fn current() -> Self {
+        Self::with_threads(ThreadPool::global().threads())
+    }
+
+    /// Environment descriptor for an explicit thread count (tests use this
+    /// to fabricate drift without re-spawning pools).
+    pub fn with_threads(threads: usize) -> Self {
+        Self::new(format!("threads={threads}/os={}", std::env::consts::OS))
+    }
+
+    /// True when `other` was captured under a different environment.
+    pub fn drifted_from(&self, other: &EnvFingerprint) -> bool {
+        self.hash != other.hash
+    }
+}
+
+/// Everything needed to warm-start a session in a later process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionState {
+    /// Session label the state came from.
+    pub id: String,
+    /// Workload descriptor (re-parseable via
+    /// [`super::WorkloadSpec::parse_descriptor`]).
+    pub workload: String,
+    /// The session's evaluation fingerprint (landscape identity).
+    pub fingerprint: u64,
+    /// Environment the costs were measured under.
+    pub env: EnvFingerprint,
+    /// Optimizer name (`csa`, `nm`, ...; the CLI form).
+    pub optimizer: String,
+    /// Population size of the original session.
+    pub num_opt: usize,
+    /// Iteration budget of the original session.
+    pub max_iter: usize,
+    /// Seed of the original session.
+    pub seed: u64,
+    /// Stabilisation iterations of the original session.
+    pub ignore: u32,
+    /// Best measured point (user domain — what the application was handed).
+    pub best_point: Vec<f64>,
+    /// Best measured cost (stale once the environment drifts).
+    pub best_cost: f64,
+    /// The optimizer's internal-domain snapshot.
+    pub opt_state: OptimizerState,
+}
+
+/// Join floats with `sep`; empty slices become the `-` sentinel so every
+/// value stays non-empty (the registry format splits on whitespace).
+fn join_f64(values: &[f64], sep: char) -> String {
+    if values.is_empty() {
+        "-".to_string()
+    } else {
+        values
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(&sep.to_string())
+    }
+}
+
+/// Inverse of [`join_f64`].
+fn split_f64(text: &str, sep: char) -> Result<Vec<f64>> {
+    if text == "-" {
+        return Ok(Vec::new());
+    }
+    text.split(sep)
+        .map(|v| v.parse::<f64>().with_context(|| format!("bad float {v:?}")))
+        .collect()
+}
+
+impl SessionState {
+    /// Serialise as ordered `key=value` pairs (the v2 registry record body).
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let points = if self.opt_state.points.is_empty() {
+            "-".to_string()
+        } else {
+            self.opt_state
+                .points
+                .iter()
+                .map(|p| join_f64(p, ','))
+                .collect::<Vec<_>>()
+                .join(";")
+        };
+        let mut kv = vec![
+            ("id".to_string(), self.id.clone()),
+            ("workload".to_string(), self.workload.clone()),
+            ("fingerprint".to_string(), self.fingerprint.to_string()),
+            ("env".to_string(), self.env.descriptor.clone()),
+            ("optimizer".to_string(), self.optimizer.clone()),
+            // The trait-level name the snapshot checks on warm start (the
+            // CLI form above can differ, e.g. `nm` vs `nelder-mead`).
+            ("impl".to_string(), self.opt_state.optimizer.clone()),
+            ("num_opt".to_string(), self.num_opt.to_string()),
+            ("max_iter".to_string(), self.max_iter.to_string()),
+            ("seed".to_string(), self.seed.to_string()),
+            ("ignore".to_string(), self.ignore.to_string()),
+            ("best".to_string(), join_f64(&self.best_point, ',')),
+            ("best_cost".to_string(), format!("{}", self.best_cost)),
+            (
+                "sbest".to_string(),
+                join_f64(&self.opt_state.best_internal, ','),
+            ),
+            (
+                "sbest_cost".to_string(),
+                format!("{}", self.opt_state.best_cost),
+            ),
+            ("points".to_string(), points),
+        ];
+        if let Some((t_gen, t_ac)) = self.opt_state.temperatures {
+            kv.push(("tgen".to_string(), format!("{t_gen}")));
+            kv.push(("tac".to_string(), format!("{t_ac}")));
+        }
+        kv
+    }
+
+    /// Parse from `key=value` pairs. Unknown keys are ignored (forward
+    /// compatibility); missing required keys are an error.
+    pub fn from_kv(pairs: &[(&str, &str)]) -> Result<SessionState> {
+        let get = |key: &str| -> Result<&str> {
+            pairs
+                .iter()
+                .find(|(k, _)| *k == key)
+                .map(|(_, v)| *v)
+                .with_context(|| format!("state record missing {key:?}"))
+        };
+        let opt_get = |key: &str| pairs.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+        let parse_num = |key: &str, v: &str| -> Result<f64> {
+            v.parse::<f64>()
+                .with_context(|| format!("state record: bad {key} {v:?}"))
+        };
+        let optimizer = get("optimizer")?.to_string();
+        let impl_name = opt_get("impl").unwrap_or(&optimizer).to_string();
+        let points_text = get("points")?;
+        let points = if points_text == "-" {
+            Vec::new()
+        } else {
+            points_text
+                .split(';')
+                .map(|p| split_f64(p, ','))
+                .collect::<Result<Vec<_>>>()
+                .context("state record: bad points")?
+        };
+        let temperatures = match (opt_get("tgen"), opt_get("tac")) {
+            (Some(tg), Some(ta)) => Some((parse_num("tgen", tg)?, parse_num("tac", ta)?)),
+            _ => None,
+        };
+        let best_internal = split_f64(get("sbest")?, ',').context("state record: bad sbest")?;
+        if best_internal.is_empty() {
+            bail!("state record: empty sbest");
+        }
+        Ok(SessionState {
+            id: get("id")?.to_string(),
+            workload: get("workload")?.to_string(),
+            fingerprint: get("fingerprint")?
+                .parse()
+                .context("state record: bad fingerprint")?,
+            env: EnvFingerprint::new(get("env")?),
+            optimizer: optimizer.clone(),
+            num_opt: get("num_opt")?.parse().context("state record: bad num_opt")?,
+            max_iter: get("max_iter")?
+                .parse()
+                .context("state record: bad max_iter")?,
+            seed: get("seed")?.parse().context("state record: bad seed")?,
+            ignore: get("ignore")?.parse().context("state record: bad ignore")?,
+            best_point: split_f64(get("best")?, ',').context("state record: bad best")?,
+            best_cost: parse_num("best_cost", get("best_cost")?)?,
+            opt_state: OptimizerState {
+                optimizer: impl_name,
+                best_internal,
+                best_cost: parse_num("sbest_cost", get("sbest_cost")?)?,
+                temperatures,
+                points,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> SessionState {
+        SessionState {
+            id: "s0".into(),
+            workload: "synthetic/opt=48/dim=1/lo=1/hi=128/kind=int".into(),
+            fingerprint: 0xDEAD_BEEF,
+            env: EnvFingerprint::with_threads(8),
+            optimizer: "csa".into(),
+            num_opt: 4,
+            max_iter: 8,
+            seed: 42,
+            ignore: 0,
+            best_point: vec![47.0],
+            best_cost: 1.25e-3,
+            opt_state: OptimizerState {
+                optimizer: "csa".into(),
+                best_internal: vec![-0.28],
+                best_cost: 1.25e-3,
+                temperatures: Some((0.125, 1.75)),
+                points: vec![vec![-0.28], vec![0.5], vec![-0.9], vec![0.1]],
+            },
+        }
+    }
+
+    #[test]
+    fn kv_roundtrip_is_lossless() {
+        let state = sample_state();
+        let kv = state.to_kv();
+        let borrowed: Vec<(&str, &str)> =
+            kv.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        let parsed = SessionState::from_kv(&borrowed).unwrap();
+        assert_eq!(parsed, state);
+    }
+
+    #[test]
+    fn kv_values_are_whitespace_free() {
+        for (k, v) in sample_state().to_kv() {
+            assert!(!v.is_empty(), "{k} empty");
+            assert!(
+                !v.contains(char::is_whitespace),
+                "{k}={v:?} contains whitespace"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_keys_are_ignored() {
+        let kv = sample_state().to_kv();
+        let mut borrowed: Vec<(&str, &str)> =
+            kv.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        borrowed.push(("from_the_future", "whatever"));
+        let parsed = SessionState::from_kv(&borrowed).unwrap();
+        assert_eq!(parsed, sample_state());
+    }
+
+    #[test]
+    fn missing_required_key_is_an_error() {
+        let kv = sample_state().to_kv();
+        let borrowed: Vec<(&str, &str)> = kv
+            .iter()
+            .filter(|(k, _)| k != "fingerprint")
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect();
+        assert!(SessionState::from_kv(&borrowed).is_err());
+    }
+
+    #[test]
+    fn temperatures_are_optional() {
+        let mut state = sample_state();
+        state.optimizer = "nm".into();
+        state.opt_state.optimizer = "nm".into();
+        state.opt_state.temperatures = None;
+        let kv = state.to_kv();
+        assert!(!kv.iter().any(|(k, _)| k == "tgen"));
+        let borrowed: Vec<(&str, &str)> =
+            kv.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        assert_eq!(SessionState::from_kv(&borrowed).unwrap(), state);
+    }
+
+    #[test]
+    fn env_drift_detection() {
+        let a = EnvFingerprint::with_threads(4);
+        let b = EnvFingerprint::with_threads(8);
+        assert!(a.drifted_from(&b));
+        assert!(!a.drifted_from(&EnvFingerprint::with_threads(4)));
+        assert!(!a.descriptor.contains(char::is_whitespace));
+    }
+}

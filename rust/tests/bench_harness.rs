@@ -1,0 +1,91 @@
+//! Integration: the `patsma bench` perf harness (ISSUE 2 acceptance).
+//!
+//! Two consecutive runs of one suite must be **schema-stable**: identical
+//! entry ids in identical order and identical JSON key sequences — only the
+//! measured values may differ. CI relies on this to diff a fresh
+//! `BENCH_*.json` against the committed baseline.
+
+use patsma::bench::{run_suite, BenchReport, Json, Suite, SCHEMA};
+
+fn key_shape(v: &Json) -> String {
+    // Flatten the ordered key structure (not the values) into a signature.
+    match v {
+        Json::Obj(pairs) => {
+            let inner: Vec<String> = pairs
+                .iter()
+                .map(|(k, val)| format!("{k}:{}", key_shape(val)))
+                .collect();
+            format!("{{{}}}", inner.join(","))
+        }
+        Json::Arr(items) => {
+            let inner: Vec<String> = items.iter().map(key_shape).collect();
+            format!("[{}]", inner.join(","))
+        }
+        Json::Str(_) => "s".into(),
+        Json::Num(_) => "n".into(),
+        Json::Bool(_) => "b".into(),
+        Json::Null => "0".into(),
+    }
+}
+
+#[test]
+fn tier1_suite_is_schema_stable_across_runs() {
+    let a = run_suite(Suite::Tier1, true).unwrap();
+    let b = run_suite(Suite::Tier1, true).unwrap();
+
+    let ids_a: Vec<&str> = a.entries.iter().map(|e| e.id.as_str()).collect();
+    let ids_b: Vec<&str> = b.entries.iter().map(|e| e.id.as_str()).collect();
+    assert_eq!(ids_a, ids_b, "workload set must be deterministic");
+    assert!(!ids_a.is_empty());
+
+    // Entry ids include the regression-checked groups.
+    assert!(ids_a.contains(&"dispatch/parallel-for-empty"), "{ids_a:?}");
+    assert!(ids_a.contains(&"optimizer/csa-sphere"), "{ids_a:?}");
+    assert!(ids_a.contains(&"service/synthetic-batch"), "{ids_a:?}");
+    assert!(ids_a.contains(&"workload/rb-gauss-seidel"), "{ids_a:?}");
+    assert!(ids_a.contains(&"workload/spmv"), "{ids_a:?}");
+
+    // Identical JSON key structure (schema), values free to vary.
+    let ja = a.to_json();
+    let jb = b.to_json();
+    assert_eq!(key_shape(&ja), key_shape(&jb));
+    assert_eq!(ja.get("schema").and_then(Json::as_str), Some(SCHEMA));
+
+    // The serialised document round-trips losslessly.
+    let text = ja.pretty();
+    let parsed = BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed, a);
+}
+
+#[test]
+fn tier1_measurements_are_sane() {
+    let report = run_suite(Suite::Tier1, true).unwrap();
+    for e in &report.entries {
+        assert!(e.samples > 0, "{}", e.id);
+        assert!(
+            e.median_secs.is_finite() && e.median_secs >= 0.0,
+            "{}: median {}",
+            e.id,
+            e.median_secs
+        );
+        assert!(e.min_secs <= e.median_secs + 1e-12, "{}", e.id);
+        assert!(e.median_secs <= e.p95_secs + 1e-12, "{}", e.id);
+    }
+    assert!(report.dispatch_overhead_secs >= 0.0);
+    // The deterministic service batch repeats points across its sessions,
+    // so the cache must see traffic.
+    assert!(report.cache_hits + report.cache_misses > 0);
+    assert!((0.0..=1.0).contains(&report.cache_hit_rate));
+    assert_eq!(report.suite, "tier1");
+    assert!(report.quick);
+}
+
+#[test]
+fn full_suite_extends_tier1() {
+    // Only the workload list differs between suites — pinned here without
+    // running the (slower) full measurements: tier1 ids must be a prefix
+    // subset of full ids. Construction is cheap in quick mode.
+    let t1 = run_suite(Suite::Tier1, true).unwrap();
+    let ids: Vec<&str> = t1.entries.iter().map(|e| e.id.as_str()).collect();
+    assert!(!ids.contains(&"workload/conv2d"), "conv2d is full-only");
+}
