@@ -1,0 +1,84 @@
+//! The online adaptive runtime on a real workload: Red–Black Gauss–Seidel
+//! whose per-sweep cost drifts mid-run.
+//!
+//! ```bash
+//! cargo run --release --example adaptive_region
+//! ```
+//!
+//! Walks the full `TunedRegion` lifecycle on the shared-memory substrate:
+//!
+//! 1. **tune** — the `Dynamic(chunk)` granularity is tuned live, one real
+//!    sweep per tuning step (zero extra target work);
+//! 2. **bypass** — the solve continues at the converged chunk while the
+//!    drift monitor baselines the per-sweep wall-clock;
+//! 3. **drift** — the grid is swapped for a 4× larger problem: the frozen
+//!    chunk is now wrong and the cost baseline breaks;
+//! 4. **recover** — the region warm re-tunes from the optimizer snapshot
+//!    at half the original budget and re-converges for the new problem.
+
+use patsma::adaptive::{DriftConfig, TunedRegionConfig};
+use patsma::sched::ThreadPool;
+use patsma::workloads::rb_gauss_seidel::RbGaussSeidel;
+
+fn main() {
+    let pool = ThreadPool::global();
+    println!("adaptive RB Gauss–Seidel ({} threads)\n", pool.threads());
+
+    let small = 192usize;
+    let large = 384usize;
+    let mut w = RbGaussSeidel::new(small, pool);
+    // Domain up to the *large* grid's row count so one region covers both
+    // problem phases; modest drift window for a demo-sized run.
+    let mut region = TunedRegionConfig::new(1.0, large as f64)
+        .budget(4, 8)
+        .seed(42)
+        .drift(DriftConfig::default().with_window(6))
+        .build::<i32>();
+
+    // Phase 1+2: tune inside the solve, then bypass.
+    let mut sweeps = 0u64;
+    while !region.is_converged() {
+        let _ = w.sweep_adaptive(&mut region);
+        sweeps += 1;
+    }
+    println!(
+        "tune:    {small}×{small} grid converged on chunk {} after {sweeps} sweeps \
+         ({} evaluations)",
+        region.point()[0],
+        region.evaluations()
+    );
+    for _ in 0..12 {
+        let _ = w.sweep_adaptive(&mut region);
+        sweeps += 1;
+    }
+    println!(
+        "bypass:  12 sweeps at the frozen chunk (baseline {:.3} ms/sweep)",
+        region.monitor().baseline_mean() * 1e3
+    );
+
+    // Phase 3: the problem grows 4× — per-sweep cost jumps, chunk is stale.
+    let mut w = RbGaussSeidel::new(large, pool);
+    let before = region.retunes();
+    let mut detect_sweeps = 0u64;
+    while region.retunes() == before && detect_sweeps < 1000 {
+        let _ = w.sweep_adaptive(&mut region);
+        detect_sweeps += 1;
+    }
+    println!(
+        "drift:   grid grown to {large}×{large}; detected after {detect_sweeps} sweep(s) \
+         (warm re-tune: {})",
+        if region.last_retune_was_warm() { "yes" } else { "no" }
+    );
+
+    // Phase 4: warm re-convergence at half budget.
+    let mut recover_sweeps = 0u64;
+    while !region.is_converged() {
+        let _ = w.sweep_adaptive(&mut region);
+        recover_sweeps += 1;
+    }
+    println!(
+        "recover: chunk {} after {recover_sweeps} sweeps ({} evaluations vs 32 cold)",
+        region.point()[0],
+        region.generation_evaluations()
+    );
+}

@@ -1,32 +1,42 @@
-//! Quickstart: auto-tune a parameter in ~20 lines.
+//! Quickstart: auto-tune a parameter in ~20 lines — the online way.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
 //! The "application" is a function whose runtime depends on an integer
-//! parameter (imagine an OpenMP chunk size); PATSMA finds the fastest value
-//! while the application keeps running.
+//! parameter (imagine an OpenMP chunk size). A `TunedRegion` finds the
+//! fastest value *while the application keeps running* (the paper's
+//! Single-Iteration mode), then bypasses to it at zero optimizer overhead
+//! — and would warm re-tune automatically if the workload drifted.
 
-use patsma::tuner::Autotuning;
+use patsma::adaptive::TunedRegionConfig;
 use patsma::workloads::synthetic::chunk_cost_model;
 
 fn main() {
-    // Parameter domain [1, 128], no stabilisation iterations, CSA with
-    // 4 coupled optimizers × 8 iterations (paper Alg. 2 constructor).
-    let mut at = Autotuning::new(1.0, 128.0, 0, 1, 4, 8);
-    let mut chunk = [1i32; 1];
+    // Parameter domain [1, 128]; CSA with 4 coupled chains × 8 iterations.
+    let mut region = TunedRegionConfig::new(1.0, 128.0)
+        .budget(4, 8)
+        .seed(42)
+        .build::<i32>();
 
-    // Entire-Execution mode with an application-supplied cost (Alg. 3's
-    // entireExec): the closure returns the cost of running with `p`.
-    at.entire_exec(&mut chunk, |p| chunk_cost_model(p[0] as f64, 48.0));
+    // The application loop. Each call runs ONE iteration with the current
+    // parameter and reports its cost; tuning finishes inside the loop and
+    // later calls are zero-overhead pass-throughs.
+    for _ in 0..100 {
+        region.run_with_cost(|p| (chunk_cost_model(p[0] as f64, 48.0), ()));
+    }
 
-    println!("tuned chunk = {} (true optimum ≈ 48)", chunk[0]);
     println!(
-        "evaluations = {}, target iterations = {} (Eq. 1: 4 × 8 × (0+1) = 32)",
-        at.evaluations(),
-        at.target_iterations()
+        "tuned chunk = {} (true optimum ≈ 48–58), converged = {}",
+        region.point()[0],
+        region.is_converged()
     );
-    let (best, cost) = at.best().expect("history");
+    println!(
+        "evaluations = {} of {} iterations — every one was a real iteration",
+        region.evaluations(),
+        region.iterations()
+    );
+    let (best, cost) = region.best().expect("history");
     println!("best measured: chunk {} at cost {:.4}", best[0] as i64, cost);
 }

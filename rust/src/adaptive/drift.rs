@@ -1,0 +1,343 @@
+//! Workload-drift detection over a rolling cost window.
+//!
+//! After a [`super::TunedRegion`] converges it keeps running the final
+//! solution at zero optimizer overhead (the paper's Fig. 1 "bypass"). But
+//! the bypass is only as good as the context it was tuned under: if the
+//! workload shifts — problem size grows, a co-tenant steals cores, the
+//! matrix gets denser — the frozen parameter silently decays from optimal
+//! to arbitrary. [`DriftMonitor`] watches the bypass costs and says *when*
+//! that has happened, so the region can trigger a warm re-tune (cf. HPX
+//! Smart Executors' runtime chunk re-selection and Karcher & Guckes'
+//! self-adaptive concurrency libraries).
+//!
+//! ## Detection rule
+//!
+//! The monitor first accumulates `window` finite samples into a baseline
+//! (streaming mean/variance via [`crate::stats::Welford`]), then tracks an
+//! EWMA of subsequent costs and flags drift when the EWMA leaves the band
+//!
+//! ```text
+//! |ewma − baseline_mean| > threshold_sigma · baseline_stddev
+//!                          + rel_margin · |baseline_mean|
+//! ```
+//!
+//! The two band terms cover the two failure modes of a pure z-score test:
+//! * `threshold_sigma · stddev` adapts to noisy workloads — a jittery cost
+//!   stream needs a wide band or every scheduler hiccup would retrigger
+//!   tuning;
+//! * `rel_margin · |mean|` keeps a *constant* (zero-variance) stream from
+//!   producing false positives: with `stddev == 0` any epsilon deviation
+//!   would otherwise be an infinite z-score.
+//!
+//! Non-finite costs (NaN/Inf — a timer glitch, a cost overflow) are
+//! rejected outright: they never enter the baseline, never move the EWMA
+//! and never signal drift; they are only counted in
+//! [`rejected`](DriftMonitor::rejected).
+//!
+//! # Examples
+//!
+//! ```
+//! use patsma::adaptive::{DriftConfig, DriftMonitor};
+//!
+//! let mut m = DriftMonitor::new(DriftConfig::default());
+//! // Stable phase: prime the baseline, no drift.
+//! for _ in 0..20 {
+//!     assert!(!m.observe(1.0));
+//! }
+//! // The workload shifts: costs triple — drift within a few samples.
+//! let fired = (0..10).any(|_| m.observe(3.0));
+//! assert!(fired);
+//! ```
+
+use crate::stats::Welford;
+
+/// Tuning knobs of a [`DriftMonitor`].
+///
+/// # Examples
+///
+/// ```
+/// let cfg = patsma::adaptive::DriftConfig::default();
+/// assert!(cfg.window >= 1 && cfg.alpha > 0.0 && cfg.alpha <= 1.0);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftConfig {
+    /// Finite samples that establish the baseline before detection starts
+    /// (values `< 1` are treated as `1`).
+    pub window: usize,
+    /// EWMA smoothing factor in `(0, 1]`: higher reacts faster but is more
+    /// sensitive to single-sample noise.
+    pub alpha: f64,
+    /// Band half-width in baseline standard deviations.
+    pub threshold_sigma: f64,
+    /// Band floor as a fraction of `|baseline mean|` — the constant-stream
+    /// guard (see module docs).
+    pub rel_margin: f64,
+}
+
+impl Default for DriftConfig {
+    /// `window = 8`, `alpha = 0.3`, `threshold_sigma = 4`, `rel_margin =
+    /// 0.2`: detects a sustained ≳20% cost shift within a handful of
+    /// iterations while riding out one-off scheduler spikes.
+    fn default() -> Self {
+        Self {
+            window: 8,
+            alpha: 0.3,
+            threshold_sigma: 4.0,
+            rel_margin: 0.2,
+        }
+    }
+}
+
+impl DriftConfig {
+    /// Builder-style baseline window override.
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Builder-style band override (`threshold_sigma`, `rel_margin`).
+    pub fn with_band(mut self, threshold_sigma: f64, rel_margin: f64) -> Self {
+        self.threshold_sigma = threshold_sigma;
+        self.rel_margin = rel_margin;
+        self
+    }
+}
+
+/// EWMA-vs-baseline drift detector (see module docs).
+///
+/// `observe` keeps returning `true` while the EWMA sits outside the band;
+/// callers that act on drift (e.g. [`super::TunedRegion`]) should
+/// [`reset`](DriftMonitor::reset) the monitor when they do, so a fresh
+/// baseline forms under the new conditions.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::adaptive::{DriftConfig, DriftMonitor};
+///
+/// let mut m = DriftMonitor::new(DriftConfig::default().with_window(4));
+/// for _ in 0..4 {
+///     m.observe(2.0);
+/// }
+/// assert!(m.is_primed());
+/// assert_eq!(m.baseline_mean(), 2.0);
+/// ```
+#[derive(Debug, Clone)]
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    baseline: Welford,
+    ewma: Option<f64>,
+    observed: u64,
+    rejected: u64,
+}
+
+impl DriftMonitor {
+    /// A monitor with an empty baseline.
+    pub fn new(cfg: DriftConfig) -> Self {
+        Self {
+            cfg,
+            baseline: Welford::new(),
+            ewma: None,
+            observed: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Feed one cost sample; `true` means the stream has drifted from the
+    /// baseline. Non-finite samples are rejected (never drift, never enter
+    /// any statistic except [`rejected`](Self::rejected)).
+    pub fn observe(&mut self, cost: f64) -> bool {
+        if !cost.is_finite() {
+            self.rejected += 1;
+            return false;
+        }
+        self.observed += 1;
+        if (self.baseline.count() as usize) < self.cfg.window.max(1) {
+            self.baseline.push(cost);
+            return false;
+        }
+        let prev = self.ewma.unwrap_or_else(|| self.baseline.mean());
+        let e = self.cfg.alpha * cost + (1.0 - self.cfg.alpha) * prev;
+        self.ewma = Some(e);
+        let band = self.cfg.threshold_sigma * self.baseline.stddev()
+            + self.cfg.rel_margin * self.baseline.mean().abs();
+        (e - self.baseline.mean()).abs() > band
+    }
+
+    /// Discard the baseline and EWMA so a new baseline forms from the next
+    /// samples (call after acting on a drift signal). Sample counters are
+    /// retained as a lifetime record.
+    pub fn reset(&mut self) {
+        self.baseline = Welford::new();
+        self.ewma = None;
+    }
+
+    /// True once the baseline window is full and detection is active.
+    pub fn is_primed(&self) -> bool {
+        (self.baseline.count() as usize) >= self.cfg.window.max(1)
+    }
+
+    /// Baseline mean (0 while the baseline is empty).
+    pub fn baseline_mean(&self) -> f64 {
+        self.baseline.mean()
+    }
+
+    /// Baseline sample standard deviation.
+    pub fn baseline_stddev(&self) -> f64 {
+        self.baseline.stddev()
+    }
+
+    /// Current EWMA (`None` until the first post-baseline sample).
+    pub fn ewma(&self) -> Option<f64> {
+        self.ewma
+    }
+
+    /// Finite samples seen over the monitor's lifetime (survives `reset`).
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Non-finite samples rejected over the monitor's lifetime.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(window: usize) -> DriftMonitor {
+        DriftMonitor::new(DriftConfig::default().with_window(window))
+    }
+
+    #[test]
+    fn constant_stream_never_false_positives() {
+        let mut m = monitor(8);
+        for i in 0..10_000 {
+            assert!(!m.observe(3.25), "false positive at sample {i}");
+        }
+        assert_eq!(m.observed(), 10_000);
+    }
+
+    #[test]
+    fn constant_zero_stream_never_false_positives() {
+        // mean == 0 makes the rel_margin term vanish too; the band is then
+        // exactly 0 and the EWMA sits exactly on the mean.
+        let mut m = monitor(4);
+        for _ in 0..1000 {
+            assert!(!m.observe(0.0));
+        }
+    }
+
+    #[test]
+    fn single_sample_window_works() {
+        let mut m = monitor(1);
+        assert!(!m.observe(10.0)); // the whole baseline
+        assert!(m.is_primed());
+        // Small wobble within the 20% margin: quiet.
+        assert!(!m.observe(10.5));
+        // Sustained 3x shift: fires.
+        let fired = (0..20).any(|_| m.observe(30.0));
+        assert!(fired);
+    }
+
+    #[test]
+    fn zero_window_is_promoted_to_one() {
+        let mut m = monitor(0);
+        assert!(!m.observe(5.0));
+        assert!(m.is_primed());
+    }
+
+    #[test]
+    fn nan_and_inf_are_rejected_everywhere() {
+        let mut m = monitor(3);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert!(!m.observe(bad));
+        }
+        assert_eq!(m.rejected(), 3);
+        assert_eq!(m.observed(), 0);
+        assert!(!m.is_primed(), "rejected samples must not fill the window");
+        // Baseline then forms from finite samples only.
+        for _ in 0..3 {
+            assert!(!m.observe(2.0));
+        }
+        assert!(m.is_primed());
+        assert_eq!(m.baseline_mean(), 2.0);
+        // NaN after priming: still rejected, EWMA untouched.
+        assert!(!m.observe(f64::NAN));
+        assert_eq!(m.ewma(), None);
+        assert!(!m.observe(2.0));
+        assert_eq!(m.rejected(), 4);
+    }
+
+    #[test]
+    fn sustained_shift_is_detected_spike_is_not() {
+        let mut m = DriftMonitor::new(DriftConfig {
+            window: 8,
+            alpha: 0.3,
+            threshold_sigma: 4.0,
+            rel_margin: 0.2,
+        });
+        for _ in 0..8 {
+            assert!(!m.observe(1.0));
+        }
+        // One 2x spike: EWMA moves to 1.3, band is 0.2 — briefly out, but a
+        // single spike decays back. Use a wider margin to show the intent:
+        // the spike is *absorbed* within a couple of quiet samples.
+        let spike = m.observe(2.0);
+        let mut recovered = true;
+        for _ in 0..10 {
+            recovered = !m.observe(1.0);
+        }
+        assert!(recovered, "EWMA must decay back after a lone spike");
+        let _ = spike;
+        // A sustained doubling keeps the EWMA out of the band.
+        let mut fired = false;
+        for _ in 0..10 {
+            fired |= m.observe(2.0);
+        }
+        assert!(fired);
+    }
+
+    #[test]
+    fn reset_forms_a_new_baseline() {
+        let mut m = monitor(4);
+        for _ in 0..4 {
+            m.observe(1.0);
+        }
+        assert!((0..10).any(|_| m.observe(5.0)));
+        m.reset();
+        assert!(!m.is_primed());
+        // The new level becomes the new normal.
+        for _ in 0..4 {
+            assert!(!m.observe(5.0));
+        }
+        for i in 0..100 {
+            assert!(!m.observe(5.0), "false positive after reset at {i}");
+        }
+        assert!(m.observed() > 100, "lifetime counter survives reset");
+    }
+
+    #[test]
+    fn noisy_stream_widens_the_band() {
+        // Alternating 1.0 / 2.0 baseline: stddev ≈ 0.52, band ≈ 2.1 + 0.3.
+        // The same absolute shift that fires on a constant stream stays
+        // quiet here.
+        let mut m = monitor(8);
+        for i in 0..8 {
+            m.observe(if i % 2 == 0 { 1.0 } else { 2.0 });
+        }
+        for i in 0..50 {
+            assert!(
+                !m.observe(if i % 2 == 0 { 1.2 } else { 2.2 }),
+                "noise-level wobble must not fire (sample {i})"
+            );
+        }
+    }
+}

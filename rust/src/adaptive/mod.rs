@@ -1,0 +1,60 @@
+//! The online adaptive tuning runtime — auto-tuning embedded **inside** the
+//! application's hot loop.
+//!
+//! The paper's headline promise (§1, Fig. 1 "Single Iteration" mode) is
+//! *real-time* optimization: the tuner rides along with the application,
+//! spends its evaluation budget on real iterations, then gets out of the
+//! way. The [`crate::service`] module industrialised the *offline* side of
+//! that story (concurrent sessions, persisted state, warm re-tuning between
+//! processes); this module is the *online* side — a handle an application
+//! embeds directly:
+//!
+//! * [`TunedRegion`] wraps one hot parallel region. Each
+//!   [`run`](TunedRegion::run) call executes exactly one application
+//!   iteration: during tuning the iteration doubles as a candidate
+//!   evaluation (the Single-Iteration protocol), after convergence the
+//!   calls bypass straight to the tuned parameters at zero optimizer
+//!   overhead.
+//! * [`DriftMonitor`] watches the bypass costs (EWMA against a baseline
+//!   band built on [`crate::stats::Welford`]) and detects workload drift —
+//!   the moment the frozen parameters stopped being the right ones.
+//! * On drift the region **warm re-tunes**: it snapshots the optimizer
+//!   ([`crate::optimizer::OptimizerState`]), rebuilds it at a reduced
+//!   budget and resumes from the snapshot with
+//!   [`crate::optimizer::ResetLevel::Soft`] semantics — re-converging with
+//!   strictly fewer evaluations than a cold restart (pinned by
+//!   `rust/tests/adaptive.rs`).
+//!
+//! The substrate hook is [`crate::sched::ThreadPool::parallel_for_auto`]:
+//! an auto-chunked `parallel_for` whose `Dynamic(chunk)` granularity is
+//! chosen live by a `TunedRegion` — the paper's tuned OpenMP clause as a
+//! drop-in loop primitive. `patsma adaptive demo` shows the full
+//! converge → drift → recover cycle on the CLI.
+//!
+//! # Examples
+//!
+//! Tune a chunk parameter online, then keep running at zero overhead:
+//!
+//! ```
+//! use patsma::adaptive::TunedRegionConfig;
+//! use patsma::workloads::synthetic::chunk_cost_model;
+//!
+//! let mut region = TunedRegionConfig::new(1.0, 128.0)
+//!     .budget(4, 8)
+//!     .seed(42)
+//!     .build::<i32>();
+//!
+//! // The application loop: `run_with_cost` hands back the current chunk
+//! // and consumes this iteration's cost. Tuning finishes inside the loop.
+//! for _ in 0..64 {
+//!     region.run_with_cost(|p| (chunk_cost_model(p[0] as f64, 48.0), ()));
+//! }
+//! assert!(region.is_converged());
+//! assert_eq!(region.evaluations(), 32); // 4 chains × 8 iterations
+//! ```
+
+pub mod drift;
+pub mod region;
+
+pub use drift::{DriftConfig, DriftMonitor};
+pub use region::{TunedRegion, TunedRegionConfig};

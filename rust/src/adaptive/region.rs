@@ -1,0 +1,487 @@
+//! [`TunedRegion`] — the online adaptive tuning handle for one hot
+//! parallel region.
+//!
+//! The lifecycle (one `run` call = one application iteration):
+//!
+//! 1. **Tuning** — candidates flow through the paper's Single-Iteration
+//!    protocol ([`crate::tuner::Autotuning::single_exec`]): every call runs
+//!    exactly one real application iteration, so tuning adds zero extra
+//!    target work.
+//! 2. **Bypass** — once the optimizer ends, `run` keeps executing the
+//!    converged parameters at zero optimizer overhead, while a
+//!    [`DriftMonitor`] baselines the converged cost and watches for a
+//!    workload shift.
+//! 3. **Warm re-tune** — on drift the region snapshots the optimizer
+//!    ([`crate::optimizer::OptimizerState`]), rebuilds it at a *reduced*
+//!    budget (the [`TunedRegionConfig`] `retune_budget_pct`) and warm-starts
+//!    it from the snapshot with [`crate::optimizer::ResetLevel::Soft`]
+//!    semantics: persisted solutions are kept as starting material, stale
+//!    costs are re-measured. The region is back in state 1 — with strictly
+//!    fewer evaluations to spend than a cold restart.
+
+use super::drift::{DriftConfig, DriftMonitor};
+use crate::optimizer::OptimizerState;
+use crate::service::OptimizerSpec;
+use crate::tuner::{Autotuning, PointValue, Sample};
+use std::time::Instant;
+
+/// Everything needed to build (and, on drift, rebuild) a region's
+/// optimizer: domain, budget, seed, drift policy.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::adaptive::TunedRegionConfig;
+///
+/// let region = TunedRegionConfig::new(1.0, 128.0)
+///     .budget(4, 8)
+///     .seed(7)
+///     .build::<i32>();
+/// assert!(!region.is_converged());
+/// ```
+#[derive(Debug, Clone)]
+pub struct TunedRegionConfig {
+    /// Per-parameter lower bounds (user domain).
+    pub lo: Vec<f64>,
+    /// Per-parameter upper bounds (user domain).
+    pub hi: Vec<f64>,
+    /// Stabilisation iterations per measured candidate (paper §2.3).
+    pub ignore: u32,
+    /// Which optimizer drives the search.
+    pub optimizer: OptimizerSpec,
+    /// Optimizer population size (`num_opt`).
+    pub num_opt: usize,
+    /// Optimizer iteration budget (`max_iter`) of a cold start.
+    pub max_iter: usize,
+    /// RNG seed (re-tunes derive their own seeds from it).
+    pub seed: u64,
+    /// Drift-detection policy for the bypass phase.
+    pub drift: DriftConfig,
+    /// Percent of `max_iter` a warm re-tune gets (min 2 iterations: the
+    /// re-measure of the persisted best plus at least one refinement).
+    pub retune_budget_pct: u32,
+}
+
+impl TunedRegionConfig {
+    /// One tuned parameter over `[lo, hi]` with the defaults: CSA, 4 × 8
+    /// budget, `ignore = 0`, default drift policy, 50% re-tune budget.
+    pub fn new(lo: f64, hi: f64) -> Self {
+        Self::with_bounds(vec![lo], vec![hi])
+    }
+
+    /// Multi-parameter constructor (per-dimension bounds) — e.g. chunk size
+    /// × tile size, or the paper's two-colour chunk pair.
+    pub fn with_bounds(lo: Vec<f64>, hi: Vec<f64>) -> Self {
+        assert_eq!(lo.len(), hi.len(), "bounds length mismatch");
+        assert!(!lo.is_empty(), "at least one tuned parameter");
+        Self {
+            lo,
+            hi,
+            ignore: 0,
+            optimizer: OptimizerSpec::Csa,
+            num_opt: 4,
+            max_iter: 8,
+            seed: 42,
+            drift: DriftConfig::default(),
+            retune_budget_pct: 50,
+        }
+    }
+
+    /// Builder-style optimizer override.
+    pub fn optimizer(mut self, opt: OptimizerSpec) -> Self {
+        self.optimizer = opt;
+        self
+    }
+
+    /// Builder-style budget override.
+    pub fn budget(mut self, num_opt: usize, max_iter: usize) -> Self {
+        self.num_opt = num_opt.max(1);
+        self.max_iter = max_iter;
+        self
+    }
+
+    /// Builder-style stabilisation-iteration override.
+    pub fn ignore(mut self, ignore: u32) -> Self {
+        self.ignore = ignore;
+        self
+    }
+
+    /// Builder-style seed override.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Builder-style drift-policy override.
+    pub fn drift(mut self, drift: DriftConfig) -> Self {
+        self.drift = drift;
+        self
+    }
+
+    /// Builder-style re-tune budget override (percent of `max_iter`).
+    pub fn retune_budget_pct(mut self, pct: u32) -> Self {
+        self.retune_budget_pct = pct;
+        self
+    }
+
+    /// Number of tuned parameters.
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Materialise the region (generation 0 = cold start at full budget).
+    pub fn build<P: PointValue>(self) -> TunedRegion<P> {
+        let dim = self.dim();
+        let opt = self
+            .optimizer
+            .build(dim, self.num_opt, self.max_iter, self.seed);
+        let at = Autotuning::with_optimizer(self.lo.clone(), self.hi.clone(), self.ignore, opt);
+        let monitor = DriftMonitor::new(self.drift);
+        TunedRegion {
+            point: self.lo.iter().map(|&l| P::from_f64(l)).collect(),
+            cfg: self,
+            at,
+            monitor,
+            generation: 0,
+            evals_prior: 0,
+            iterations: 0,
+            last_retune_warm: false,
+        }
+    }
+}
+
+/// Online adaptive tuning handle for a hot parallel region (see module
+/// docs): tune live, bypass when converged, warm re-tune on drift.
+///
+/// # Examples
+///
+/// Tuning a deterministic cost model in the application loop — after
+/// convergence the calls become pass-throughs at the tuned point:
+///
+/// ```
+/// use patsma::adaptive::TunedRegionConfig;
+/// use patsma::workloads::synthetic::chunk_cost_model;
+///
+/// let mut region = TunedRegionConfig::new(1.0, 128.0).seed(7).build::<i32>();
+/// while !region.is_converged() {
+///     region.run_with_cost(|p| (chunk_cost_model(p[0] as f64, 48.0), ()));
+/// }
+/// let tuned = region.point()[0];
+/// assert!((1..=128).contains(&tuned));
+/// ```
+pub struct TunedRegion<P: PointValue> {
+    cfg: TunedRegionConfig,
+    at: Autotuning,
+    monitor: DriftMonitor,
+    /// The parameter buffer handed to the application every iteration.
+    point: Vec<P>,
+    /// Completed re-tunes (generation 0 is the initial cold start).
+    generation: u64,
+    /// Evaluations consumed by earlier generations.
+    evals_prior: u64,
+    /// Total `run*` calls.
+    iterations: u64,
+    /// Whether the latest re-tune actually warm-started (false when the
+    /// optimizer cannot export/consume a snapshot and restarted cold).
+    last_retune_warm: bool,
+}
+
+impl<P: PointValue> TunedRegion<P> {
+    /// Run one application iteration, measuring its wall-clock as the cost
+    /// (the paper's `singleExecRuntime` boundary). `target` receives the
+    /// current parameters; its return value is passed through.
+    pub fn run<R>(&mut self, target: impl FnOnce(&[P]) -> R) -> R {
+        self.run_with_cost(|p| {
+            let t0 = Instant::now();
+            let out = target(p);
+            (t0.elapsed().as_secs_f64(), out)
+        })
+    }
+
+    /// Run one application iteration with an application-defined cost
+    /// (energy, residual, items/sec inverted — anything to minimise):
+    /// `target` returns `(cost, value)`.
+    pub fn run_with_cost<R>(&mut self, target: impl FnOnce(&[P]) -> (f64, R)) -> R {
+        self.iterations += 1;
+        let bypass = self.at.is_finished();
+        let mut measured = f64::NAN;
+        let out = self.at.single_exec(&mut self.point, |p| {
+            let (cost, value) = target(p);
+            measured = cost;
+            (cost, value)
+        });
+        // Only true bypass iterations feed the monitor: they ran the
+        // converged point, so they are the baseline — and the signal.
+        if bypass && self.monitor.observe(measured) {
+            self.retune();
+        }
+        out
+    }
+
+    /// Force a warm re-tune now (drift known out-of-band — e.g. the caller
+    /// changed the problem size). Also the path the drift monitor triggers.
+    pub fn retune(&mut self) {
+        let snapshot: Option<OptimizerState> = self.at.export_state();
+        self.evals_prior += self.at.evaluations();
+        self.generation += 1;
+        let dim = self.cfg.dim();
+        // Per-generation seed: deterministic, but a re-tune explores a
+        // different trajectory than the generation it replaces.
+        let seed = self.cfg.seed.wrapping_add(self.generation);
+        let reduced = ((self.cfg.max_iter * self.cfg.retune_budget_pct as usize) / 100).max(2);
+        let mut opt = self
+            .cfg
+            .optimizer
+            .build(dim, self.cfg.num_opt, reduced, seed);
+        self.last_retune_warm = snapshot
+            .as_ref()
+            .map(|s| opt.warm_start(s))
+            .unwrap_or(false);
+        if !self.last_retune_warm {
+            // No snapshot to resume from: a reduced budget would just be a
+            // worse cold start, so restart cold at the full budget.
+            opt = self
+                .cfg
+                .optimizer
+                .build(dim, self.cfg.num_opt, self.cfg.max_iter, seed);
+        }
+        self.at = Autotuning::with_optimizer(
+            self.cfg.lo.clone(),
+            self.cfg.hi.clone(),
+            self.cfg.ignore,
+            opt,
+        );
+        self.monitor.reset();
+    }
+
+    /// True while the optimizer has converged and `run` bypasses straight
+    /// to the tuned parameters (a drift signal flips this back to false).
+    pub fn is_converged(&self) -> bool {
+        self.at.is_finished()
+    }
+
+    /// The parameters as last handed to the application.
+    pub fn point(&self) -> &[P] {
+        &self.point
+    }
+
+    /// Number of tuned parameters.
+    pub fn dim(&self) -> usize {
+        self.cfg.dim()
+    }
+
+    /// Completed optimizer evaluations across all generations.
+    pub fn evaluations(&self) -> u64 {
+        self.evals_prior + self.at.evaluations()
+    }
+
+    /// Evaluations consumed by the current generation only (what a re-tune
+    /// cost — compare against a cold start's `num_opt * max_iter`).
+    pub fn generation_evaluations(&self) -> u64 {
+        self.at.evaluations()
+    }
+
+    /// Completed re-tunes (0 until the first drift) — warm-started when
+    /// the optimizer supplied a snapshot, cold restarts otherwise (see
+    /// [`last_retune_was_warm`](Self::last_retune_was_warm)).
+    pub fn retunes(&self) -> u64 {
+        self.generation
+    }
+
+    /// Whether the latest re-tune warm-started from a snapshot (`false`
+    /// before any re-tune, or when the optimizer restarted cold).
+    pub fn last_retune_was_warm(&self) -> bool {
+        self.last_retune_warm
+    }
+
+    /// Total `run*` calls over the region's lifetime.
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    /// Best (user-domain point, cost) measured by the current generation.
+    pub fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.at.best()
+    }
+
+    /// Evaluation log of the current generation.
+    pub fn history(&self) -> &[Sample] {
+        self.at.history()
+    }
+
+    /// The drift monitor (inspect baseline/EWMA in reports).
+    pub fn monitor(&self) -> &DriftMonitor {
+        &self.monitor
+    }
+
+    /// The region's configuration.
+    pub fn config(&self) -> &TunedRegionConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::synthetic::chunk_cost_model;
+
+    fn converge(region: &mut TunedRegion<i32>, best: f64) {
+        let mut guard = 0;
+        while !region.is_converged() {
+            region.run_with_cost(|p| (chunk_cost_model(p[0] as f64, best), ()));
+            guard += 1;
+            assert!(guard < 10_000, "tuning never converged");
+        }
+    }
+
+    #[test]
+    fn converges_then_bypasses_at_fixed_point() {
+        let mut region = TunedRegionConfig::new(1.0, 128.0)
+            .budget(4, 10)
+            .seed(11)
+            .build::<i32>();
+        converge(&mut region, 48.0);
+        let tuned = region.point()[0];
+        // Bypass: the point stays frozen while costs stay stable.
+        for _ in 0..50 {
+            region.run_with_cost(|p| (chunk_cost_model(p[0] as f64, 48.0), ()));
+            assert_eq!(region.point()[0], tuned);
+        }
+        assert_eq!(region.retunes(), 0);
+        assert_eq!(region.evaluations(), 40); // 4 × 10
+    }
+
+    #[test]
+    fn every_call_runs_the_target_exactly_once() {
+        let mut region = TunedRegionConfig::new(1.0, 64.0)
+            .budget(3, 4)
+            .seed(3)
+            .build::<i32>();
+        let mut calls = 0u64;
+        for _ in 0..100 {
+            region.run_with_cost(|p| {
+                calls += 1;
+                (chunk_cost_model(p[0] as f64, 20.0), ())
+            });
+        }
+        assert_eq!(calls, 100, "single-iteration protocol: no extra work");
+        assert_eq!(region.iterations(), 100);
+    }
+
+    #[test]
+    fn drift_triggers_warm_retune_and_recovers() {
+        let mut region = TunedRegionConfig::new(1.0, 128.0)
+            .budget(4, 10)
+            .seed(5)
+            .build::<i32>();
+        converge(&mut region, 24.0);
+        // Prime the drift baseline under the original landscape.
+        for _ in 0..10 {
+            region.run_with_cost(|p| (chunk_cost_model(p[0] as f64, 24.0), ()));
+        }
+        assert_eq!(region.retunes(), 0, "stable bypass must not re-tune");
+        // The workload shifts: the optimum moves to 96 *and* every
+        // iteration slows 2× (the problem grew, the machine got busier) —
+        // the frozen point's cost leaves the band wherever tuning
+        // converged.
+        let shifted = |c: f64| 2.0 * chunk_cost_model(c, 96.0);
+        let mut drift_seen_at = None;
+        for i in 0..200 {
+            region.run_with_cost(|p| (shifted(p[0] as f64), ()));
+            if region.retunes() > 0 {
+                drift_seen_at = Some(i);
+                break;
+            }
+        }
+        let detected = drift_seen_at.expect("drift never detected");
+        assert!(detected < 50, "detection too slow: {detected} iterations");
+        assert!(region.last_retune_was_warm());
+        // Re-converge on the shifted landscape.
+        let mut guard = 0;
+        while !region.is_converged() {
+            region.run_with_cost(|p| (shifted(p[0] as f64), ()));
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        // Warm re-tune budget: 50% of 10 iterations × 4 chains.
+        assert_eq!(region.generation_evaluations(), 20);
+        assert!(region.generation_evaluations() < 40, "must beat a cold start");
+        // Recovered: the warm re-tune re-measures the persisted best first,
+        // so on the new landscape the final point can never be *worse* than
+        // the stale one.
+        let stale = region.history().first().expect("re-measured stale best");
+        let tuned_cost = shifted(region.point()[0] as f64);
+        assert!(
+            tuned_cost <= stale.cost + 1e-12,
+            "retune regressed: {tuned_cost} vs stale {}",
+            stale.cost
+        );
+    }
+
+    #[test]
+    fn manual_retune_without_snapshot_restarts_cold_at_full_budget() {
+        // Grid search exports no state; a forced re-tune must fall back to
+        // a cold start with the full budget.
+        let mut region = TunedRegionConfig::new(1.0, 16.0)
+            .optimizer(OptimizerSpec::Grid)
+            .budget(1, 16)
+            .build::<i32>();
+        converge(&mut region, 6.0);
+        let evals_before = region.evaluations();
+        region.retune();
+        assert!(!region.last_retune_was_warm());
+        assert!(!region.is_converged());
+        converge(&mut region, 6.0);
+        assert_eq!(region.point()[0], 6, "exhaustive rescan finds the optimum");
+        assert!(region.evaluations() > evals_before);
+    }
+
+    #[test]
+    fn runtime_cost_variant_tunes_wall_clock() {
+        let mut region = TunedRegionConfig::new(1.0, 8.0)
+            .budget(2, 3)
+            .seed(9)
+            .build::<i32>();
+        let mut guard = 0;
+        while !region.is_converged() {
+            region.run(|p| {
+                // Busy-wait proportional to |p - 5|.
+                let work = 50 * (1 + (p[0] - 5).unsigned_abs() as u64);
+                let mut acc = 0u64;
+                while acc < work {
+                    acc += 1;
+                    std::hint::black_box(acc);
+                }
+            });
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        assert!(!region.history().is_empty());
+        assert!((1..=8).contains(&region.point()[0]));
+    }
+
+    #[test]
+    fn multi_parameter_region() {
+        let mut region = TunedRegionConfig::with_bounds(vec![1.0, 1.0], vec![64.0, 64.0])
+            .budget(5, 20)
+            .seed(17)
+            .build::<i32>();
+        let mut guard = 0;
+        while !region.is_converged() {
+            region.run_with_cost(|p| {
+                let c = chunk_cost_model(p[0] as f64, 12.0) + chunk_cost_model(p[1] as f64, 40.0);
+                (c, ())
+            });
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert_eq!(region.dim(), 2);
+        assert_eq!(region.point().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "bounds length mismatch")]
+    fn mismatched_bounds_panic() {
+        let _ = TunedRegionConfig::with_bounds(vec![1.0], vec![2.0, 3.0]);
+    }
+}

@@ -14,6 +14,16 @@ use anyhow::{bail, Result};
 use std::fmt;
 
 /// A JSON value. Objects keep insertion order for deterministic output.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::bench::Json;
+///
+/// let doc = Json::parse(r#"{"suite": "tier1", "threads": 4}"#).unwrap();
+/// assert_eq!(doc.get("suite").and_then(Json::as_str), Some("tier1"));
+/// assert_eq!(doc.get("threads").and_then(Json::as_f64), Some(4.0));
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     /// `null`.

@@ -31,6 +31,23 @@
 //!
 //! Two consecutive runs of one suite emit identical key sequences and entry
 //! ids (the workload set is a fixed list); only measured values vary.
+//!
+//! # Examples
+//!
+//! The measurement primitive every bench target uses — `warmup` unrecorded
+//! runs, then `samples` timed ones:
+//!
+//! ```
+//! use patsma::bench::bench;
+//!
+//! let mut n = 0u64;
+//! let m = bench("count", 2, 5, || {
+//!     n += 1;
+//! });
+//! assert_eq!(n, 7); // 2 warmup + 5 timed
+//! assert_eq!(m.samples.len(), 5);
+//! assert!(m.median() >= 0.0);
+//! ```
 
 pub mod json;
 pub mod report;

@@ -9,6 +9,7 @@
 //! (pinned by `tests/bench_harness.rs`).
 
 use super::json::Json;
+use crate::adaptive::{DriftConfig, TunedRegionConfig};
 use crate::optimizer::{drive, Csa, CsaConfig, NelderMead, NelderMeadConfig};
 use crate::sched::{Schedule, ThreadPool};
 use crate::service::{OptimizerSpec, SessionSpec, TuningService};
@@ -27,6 +28,16 @@ use std::time::Instant;
 pub const SCHEMA: &str = "patsma-bench-v1";
 
 /// Result of benchmarking one configuration.
+///
+/// # Examples
+///
+/// ```
+/// let m = patsma::bench::Measurement {
+///     label: "demo".into(),
+///     samples: vec![3.0, 1.0, 2.0],
+/// };
+/// assert_eq!(m.median(), 2.0);
+/// ```
 #[derive(Debug, Clone)]
 pub struct Measurement {
     /// Configuration label (row name in the report).
@@ -65,6 +76,15 @@ pub fn bench<F: FnMut()>(label: &str, warmup: usize, samples: usize, mut f: F) -
 }
 
 /// Which fixed workload set to measure.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::bench::Suite;
+///
+/// assert_eq!(Suite::parse("tier1").unwrap(), Suite::Tier1);
+/// assert_eq!(Suite::Full.name(), "full");
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Suite {
     /// The cheap deterministic set CI runs on every PR: dispatch latency,
@@ -380,7 +400,36 @@ pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
     service.run(&specs)?;
     let cache = service.cache_stats();
 
-    // 4. Shared-memory workloads, one target iteration at mid-domain params.
+    // 4. The adaptive runtime end to end on the synthetic landscape: one
+    // full converge → drift → warm-recover cycle per sample. Measures the
+    // per-iteration overhead of the TunedRegion machinery (single-exec
+    // staging, drift monitoring, snapshot/warm restart), not the workload.
+    let adaptive = bench("adaptive", warmup, samples, || {
+        let mut region = TunedRegionConfig::new(1.0, 128.0)
+            .budget(4, 6)
+            .seed(4242)
+            .drift(DriftConfig::default().with_window(4))
+            .build::<i32>();
+        let mut scale = 1.0;
+        let mut iters = 0u32;
+        while !(region.is_converged() && region.retunes() == 1) && iters < 10_000 {
+            if region.is_converged() && region.retunes() == 0 && region.monitor().is_primed() {
+                scale = 3.0; // inject the drift once the baseline is set
+            }
+            region.run_with_cost(|p| {
+                let c = crate::workloads::synthetic::chunk_cost_model(p[0] as f64, 32.0);
+                (scale * c, ())
+            });
+            iters += 1;
+        }
+        black_box(region.point()[0]);
+    });
+    entries.push(BenchEntry::from_measurement(
+        "adaptive/region-drift-cycle",
+        &adaptive,
+    ));
+
+    // 5. Shared-memory workloads, one target iteration at mid-domain params.
     for mut w in suite_workloads(suite, quick) {
         let params = mid_params(w.as_ref());
         let id = format!("workload/{}", w.name());

@@ -14,6 +14,7 @@
 //! patsma service report [--registry PATH]
 //! patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
 //!                       [--force]
+//! patsma adaptive demo [--seed N]  # online tuning: converge → drift → recover
 //! patsma demo                      # 30-second guided tour
 //! ```
 
@@ -76,6 +77,8 @@ pub enum Command {
         budget: u32,
         force: bool,
     },
+    /// Online adaptive-tuning walkthrough (converge → drift → recover).
+    AdaptiveDemo { seed: u64 },
     /// Guided demo.
     Demo,
     /// Help text.
@@ -162,6 +165,19 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     force: has_flag("--force"),
                 }),
                 other => bail!("unknown service action {other:?} (run|report|retune)"),
+            }
+        }
+        "adaptive" => {
+            let action = rest
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .map(|s| s.as_str())
+                .context("adaptive: missing action (demo)")?;
+            match action {
+                "demo" => Ok(Command::AdaptiveDemo {
+                    seed: flag_val("--seed").unwrap_or("42").parse()?,
+                }),
+                other => bail!("unknown adaptive action {other:?} (demo)"),
             }
         }
         "demo" => Ok(Command::Demo),
@@ -408,6 +424,67 @@ pub fn execute(cmd: Command) -> Result<String> {
             s.push_str(&format!("registry updated at {registry}\n"));
             Ok(s)
         }
+        Command::AdaptiveDemo { seed } => {
+            use crate::adaptive::{DriftConfig, TunedRegionConfig};
+            use crate::workloads::synthetic::chunk_cost_model;
+            // A deterministic "application": the synthetic chunk-cost curve.
+            let cold_evals = 4 * 8;
+            let mut region = TunedRegionConfig::new(1.0, 128.0)
+                .budget(4, 8)
+                .seed(seed)
+                .drift(DriftConfig::default().with_window(4))
+                .build::<i32>();
+            // Drift = the optimum moves *and* every iteration slows 3×
+            // (the problem grew while a co-tenant took cores).
+            let mut optimum = 32.0;
+            let mut scale = 1.0;
+            let mut iter = 0u64;
+            let mut s = String::from(
+                "adaptive demo — online tuning inside the application loop\n",
+            );
+            while !region.is_converged() && iter < 10_000 {
+                region.run_with_cost(|p| (scale * chunk_cost_model(p[0] as f64, optimum), ()));
+                iter += 1;
+            }
+            s.push_str(&format!(
+                " converge: chunk {} after {} iterations ({} evaluations; optimum 32)\n",
+                region.point()[0],
+                iter,
+                region.evaluations()
+            ));
+            for _ in 0..8 {
+                region.run_with_cost(|p| (scale * chunk_cost_model(p[0] as f64, optimum), ()));
+                iter += 1;
+            }
+            s.push_str(" bypass:   8 iterations at the frozen chunk, zero optimizer overhead\n");
+            optimum = 96.0;
+            scale = 3.0;
+            let shift_at = iter;
+            while region.retunes() == 0 && iter < shift_at + 10_000 {
+                region.run_with_cost(|p| (scale * chunk_cost_model(p[0] as f64, optimum), ()));
+                iter += 1;
+            }
+            s.push_str(&format!(
+                " drift:    workload shifted (optimum 96, 3× slower) at iteration {shift_at}; \
+                 detected {} iteration(s) later (warm re-tune: {})\n",
+                iter - shift_at,
+                if region.last_retune_was_warm() { "yes" } else { "no" },
+            ));
+            while !region.is_converged() && iter < 100_000 {
+                region.run_with_cost(|p| (scale * chunk_cost_model(p[0] as f64, optimum), ()));
+                iter += 1;
+            }
+            s.push_str(&format!(
+                " recover:  chunk {} using {} evaluations — a cold restart would spend {}\n",
+                region.point()[0],
+                region.generation_evaluations(),
+                cold_evals,
+            ));
+            s.push_str(
+                " (see `ThreadPool::parallel_for_auto` to drop this into any parallel loop)\n",
+            );
+            Ok(s)
+        }
         Command::Demo => {
             let mut s = String::from("PATSMA demo — tuning RB Gauss–Seidel's chunk:\n");
             let mut w = RbGaussSeidel::with_size(256);
@@ -494,6 +571,8 @@ USAGE:
   patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
               [--force]                     warm-started re-tuning of drifted
                                             sessions (reduced budget)
+  patsma adaptive demo [--seed N]           online tuning walkthrough:
+                                            converge, drift, warm recovery
   patsma demo                               30-second tour
 ";
 
@@ -690,6 +769,31 @@ mod tests {
         assert!(rendered.contains("| s2-sa |"), "stateless session dropped: {rendered}");
         assert!(rendered.contains("| s3-pso |"), "stateless session dropped: {rendered}");
         let _ = std::fs::remove_file(&registry);
+    }
+
+    #[test]
+    fn parse_adaptive_demo() {
+        assert_eq!(
+            parse(&v(&["adaptive", "demo"])).unwrap(),
+            Command::AdaptiveDemo { seed: 42 }
+        );
+        assert_eq!(
+            parse(&v(&["adaptive", "demo", "--seed", "7"])).unwrap(),
+            Command::AdaptiveDemo { seed: 7 }
+        );
+        assert!(parse(&v(&["adaptive"])).is_err());
+        assert!(parse(&v(&["adaptive", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn adaptive_demo_walks_the_full_cycle() {
+        let out = execute(Command::AdaptiveDemo { seed: 42 }).unwrap();
+        assert!(out.contains("converge:"), "{out}");
+        assert!(out.contains("drift:"), "{out}");
+        assert!(out.contains("warm re-tune: yes"), "{out}");
+        assert!(out.contains("recover:"), "{out}");
+        // The recovery line reports the reduced warm budget vs the cold 32.
+        assert!(out.contains("cold restart would spend 32"), "{out}");
     }
 
     #[test]

@@ -14,11 +14,16 @@
 //! `patsma service retune` warm-starts drifted sessions from it at a
 //! reduced budget. The [`bench`] module is the perf observatory: named
 //! deterministic suites behind `patsma bench`, reported in a stable JSON
-//! schema that CI regression-checks against a committed baseline.
+//! schema that CI regression-checks against a committed baseline. The
+//! [`adaptive`] module closes the loop *inside* the application: an
+//! [`adaptive::TunedRegion`] tunes a hot parallel region live via the
+//! Single-Iteration protocol, bypasses to the converged parameters, and
+//! warm re-tunes from an optimizer snapshot when its [`adaptive::DriftMonitor`]
+//! sees the workload shift (`patsma adaptive demo`).
 //!
-//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `docs/ARCHITECTURE.md` for the layer map and data flow.
 
+pub mod adaptive;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

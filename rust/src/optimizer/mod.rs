@@ -25,6 +25,28 @@
 //! * [`pso::ParticleSwarm`] — a third-party-style extension, included to
 //!   demonstrate the paper's §2.2 claim that new optimizers drop in by
 //!   implementing this one trait.
+//!
+//! # Examples
+//!
+//! Driving a staged optimizer by hand — feed the previous candidate's
+//! cost, receive the next candidate:
+//!
+//! ```
+//! use patsma::optimizer::{Csa, CsaConfig, NumericalOptimizer};
+//!
+//! let mut opt = Csa::new(CsaConfig::new(1, 4, 6).with_seed(7));
+//! let mut cost = 0.0; // first call: ignored by contract
+//! while !opt.is_end() {
+//!     let candidate = opt.run(cost).to_vec();
+//!     if opt.is_end() {
+//!         break;
+//!     }
+//!     cost = (candidate[0] - 0.35).powi(2); // evaluate: shifted bowl
+//! }
+//! let (best, best_cost) = opt.best().expect("costs were consumed");
+//! assert!(best_cost <= (best[0] - 0.35).powi(2) + 1e-12);
+//! assert_eq!(opt.evaluations(), 24); // 4 chains × 6 iterations
+//! ```
 
 pub mod csa;
 pub mod domain;
@@ -44,6 +66,15 @@ pub use sa::{SaConfig, SimulatedAnnealing};
 /// How much optimizer state a `reset` discards (paper §2.2: "a zero level
 /// corresponds to a lighter reset ... higher levels result in a complete
 /// reset").
+///
+/// # Examples
+///
+/// ```
+/// use patsma::optimizer::ResetLevel;
+///
+/// assert_eq!(ResetLevel::from_level(0), ResetLevel::Soft);
+/// assert_eq!(ResetLevel::from_level(3), ResetLevel::Hard);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ResetLevel {
     /// Keep the *solutions* found so far (points) as starting material, but
@@ -79,6 +110,22 @@ impl ResetLevel {
 /// because the snapshot is loaded precisely when the execution context may
 /// have changed and old costs are stale by definition (same reasoning as
 /// [`ResetLevel::Soft`]).
+///
+/// # Examples
+///
+/// Round-tripping a search through a snapshot:
+///
+/// ```
+/// use patsma::optimizer::{drive, Csa, CsaConfig, NumericalOptimizer};
+///
+/// let mut cold = Csa::new(CsaConfig::new(1, 3, 5).with_seed(1));
+/// drive(&mut cold, |x| (x[0] - 0.2).abs());
+/// let snapshot = cold.export_state().expect("CSA supports persistence");
+/// assert_eq!(snapshot.optimizer, "csa");
+///
+/// let mut warm = Csa::new(CsaConfig::new(1, 3, 5).with_seed(2));
+/// assert!(warm.warm_start(&snapshot)); // resumes from the snapshot
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct OptimizerState {
     /// Name of the optimizer that produced the snapshot (a snapshot only
@@ -223,6 +270,17 @@ where
 ///
 /// This is exactly the loop an application runs by hand when it owns the
 /// cost; having it in one place keeps the staged contract testable.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::optimizer::{drive, NelderMead, NelderMeadConfig};
+///
+/// let mut opt = NelderMead::new(NelderMeadConfig::new(1, 0.0, 60).with_seed(3));
+/// let (point, cost) = drive(&mut opt, |x| (x[0] - 0.35) * (x[0] - 0.35));
+/// assert!((point[0] - 0.35).abs() < 0.2, "point {point:?}");
+/// assert!(cost < 0.05, "cost {cost}");
+/// ```
 pub fn drive<F>(opt: &mut dyn NumericalOptimizer, mut f: F) -> (Vec<f64>, f64)
 where
     F: FnMut(&[f64]) -> f64,

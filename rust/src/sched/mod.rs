@@ -15,6 +15,11 @@
 //! * [`metrics`] — per-thread busy-time instrumentation used by the
 //!   experiments to show *why* a chunk value wins (imbalance vs. contention).
 //!
+//! The chunk does not have to be chosen by hand:
+//! [`ThreadPool::parallel_for_auto`] delegates it to an online
+//! [`crate::adaptive::TunedRegion`], which tunes it live across loop
+//! executions and re-tunes when the workload drifts.
+//!
 //! The trade-off that makes `chunk` worth tuning is reproduced mechanically:
 //! small chunks → more atomic operations and cache-line ping-pong on the
 //! shared counter (contention overhead); large chunks → fewer scheduling

@@ -327,6 +327,53 @@ impl ThreadPool {
         });
     }
 
+    /// Auto-chunked parallel loop: like
+    /// [`parallel_for_blocks`](Self::parallel_for_blocks) under
+    /// `Schedule::Dynamic(chunk)`, but `chunk` is chosen **live** by the
+    /// given [`crate::adaptive::TunedRegion`] — the paper's tuned
+    /// `schedule(dynamic, chunk)` clause as a drop-in loop primitive.
+    ///
+    /// One call executes the whole loop exactly once (the region's
+    /// Single-Iteration protocol: each call is one tuning step or, after
+    /// convergence, a zero-overhead bypass). The region must tune exactly
+    /// one parameter whose domain is the chunk size.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::adaptive::TunedRegionConfig;
+    /// use patsma::sched::ThreadPool;
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    ///
+    /// let pool = ThreadPool::new(2);
+    /// let mut chunker = TunedRegionConfig::new(1.0, 64.0).budget(2, 3).build::<i32>();
+    /// let hits = AtomicUsize::new(0);
+    /// for _ in 0..10 {
+    ///     pool.parallel_for_auto(0, 100, &mut chunker, |r| {
+    ///         hits.fetch_add(r.len(), Ordering::Relaxed);
+    ///     });
+    /// }
+    /// assert_eq!(hits.load(Ordering::Relaxed), 10 * 100);
+    /// ```
+    pub fn parallel_for_auto<F>(
+        &self,
+        start: usize,
+        end: usize,
+        region: &mut crate::adaptive::TunedRegion<i32>,
+        body: F,
+    ) where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        assert_eq!(
+            region.dim(),
+            1,
+            "parallel_for_auto tunes exactly one parameter (the chunk)"
+        );
+        region.run(|p| {
+            self.parallel_for_blocks(start, end, Schedule::Dynamic(p[0].max(1) as usize), &body);
+        });
+    }
+
     /// Instrumented variant: returns per-thread busy time and block counts,
     /// used by the experiments to attribute cost to imbalance vs.
     /// scheduling overhead.
@@ -648,6 +695,29 @@ mod tests {
             }
         });
         assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 32);
+    }
+
+    #[test]
+    fn parallel_for_auto_covers_all_indices_and_converges() {
+        let pool = ThreadPool::new(4);
+        let mut chunker = crate::adaptive::TunedRegionConfig::new(1.0, 64.0)
+            .budget(2, 4)
+            .seed(3)
+            .build::<i32>();
+        for round in 0..40 {
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for_auto(0, 97, &mut chunker, |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "round {round} index {i}");
+            }
+        }
+        // Budget exhausted well within 40 rounds: the loop is in bypass.
+        assert!(chunker.is_converged());
+        assert!((1..=64).contains(&chunker.point()[0]));
     }
 
     #[test]

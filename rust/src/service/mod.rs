@@ -45,6 +45,25 @@
 //!
 //! Results land in a [`registry`] the CLI (`patsma service
 //! run|report|retune`) and the coordinator (experiment E12) consume.
+//!
+//! # Examples
+//!
+//! Run a batch of synthetic sessions and inspect the report (concurrency 1
+//! keeps the cache counters deterministic; higher values overlap sessions):
+//!
+//! ```
+//! use patsma::service::{SessionSpec, TuningService};
+//!
+//! let service = TuningService::new(1);
+//! let specs = vec![
+//!     SessionSpec::synthetic("a", 48.0, 1),
+//!     SessionSpec::synthetic("b", 48.0, 1),
+//! ];
+//! let report = service.run(&specs).unwrap();
+//! assert_eq!(report.sessions.len(), 2);
+//! // Identical sessions repeat candidates, so the shared cache sees hits.
+//! assert!(report.cache.hits > 0);
+//! ```
 
 pub mod cache;
 pub mod registry;
@@ -66,6 +85,16 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 /// Which optimizer a session drives (the string forms match the CLI).
+///
+/// # Examples
+///
+/// ```
+/// use patsma::service::OptimizerSpec;
+///
+/// assert_eq!(OptimizerSpec::parse("csa").unwrap(), OptimizerSpec::Csa);
+/// assert_eq!(OptimizerSpec::Csa.name(), "csa");
+/// assert!(OptimizerSpec::parse("bogus").is_err());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OptimizerSpec {
     /// Coupled Simulated Annealing (the paper's primary method).
@@ -142,6 +171,15 @@ impl OptimizerSpec {
 /// the application as exact floating-point values. This is part of the cost
 /// landscape's identity: it decides both what the application receives and
 /// what the evaluation-cache key is.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::service::PointKind;
+///
+/// assert_eq!(PointKind::parse("int").unwrap(), PointKind::Integer);
+/// assert_eq!(PointKind::Float.name(), "float");
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PointKind {
     /// Candidates are rounded onto the integer lattice
@@ -174,6 +212,18 @@ impl PointKind {
 }
 
 /// What a session evaluates.
+///
+/// # Examples
+///
+/// The descriptor round-trip `retune` relies on:
+///
+/// ```
+/// use patsma::service::WorkloadSpec;
+///
+/// let spec = WorkloadSpec::Named("spmv".into());
+/// assert_eq!(spec.descriptor(), "named/spmv");
+/// assert_eq!(WorkloadSpec::parse_descriptor("named/spmv").unwrap(), spec);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub enum WorkloadSpec {
     /// The deterministic closed-form chunk-cost landscape
@@ -265,6 +315,17 @@ impl WorkloadSpec {
 
 /// One tuning scenario: workload × optimizer × domain × budget, optionally
 /// seeded from a persisted [`SessionState`].
+///
+/// # Examples
+///
+/// ```
+/// use patsma::service::{OptimizerSpec, SessionSpec};
+///
+/// let spec = SessionSpec::synthetic("s0", 48.0, 42)
+///     .with_optimizer(OptimizerSpec::NelderMead)
+///     .with_budget(1, 12);
+/// assert!(spec.validate().is_ok());
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct SessionSpec {
     /// Report label (no whitespace).
@@ -428,6 +489,15 @@ pub struct RetunePlan {
 /// (min 2 — a warm start needs at least the re-measure + one refinement
 /// iteration); sessions whose environment is unchanged are reported as
 /// fresh and skipped. `force` re-tunes everything regardless of drift.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::service::{plan_retune, EnvFingerprint};
+///
+/// let plan = plan_retune(&[], &EnvFingerprint::current(), 50, false).unwrap();
+/// assert!(plan.specs.is_empty() && plan.drifted.is_empty());
+/// ```
 pub fn plan_retune(
     states: &[SessionState],
     env: &EnvFingerprint,
@@ -467,6 +537,16 @@ pub fn plan_retune(
 }
 
 /// The concurrent tuning runtime (see module docs).
+///
+/// # Examples
+///
+/// ```
+/// use patsma::service::{SessionSpec, TuningService};
+///
+/// let service = TuningService::new(2);
+/// let report = service.run(&[SessionSpec::synthetic("s", 24.0, 9)]).unwrap();
+/// assert_eq!(report.sessions[0].id, "s");
+/// ```
 pub struct TuningService {
     pool: ThreadPool,
     cache: PointCache,

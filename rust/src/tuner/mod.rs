@@ -32,8 +32,18 @@ use crate::optimizer::{Csa, CsaConfig, NumericalOptimizer, ResetLevel};
 use std::time::Instant;
 
 /// Rescale one internal-domain coordinate (`[-1, 1]`) into the user box
-/// `[lo, hi]`. Shared by [`Autotuning`] and the `service` layer so both
-/// hand applications identical values.
+/// `[lo, hi]`. Shared by [`Autotuning`] and the [`crate::service`] layer
+/// (its cache-key quantisation) so both hand applications identical values.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::tuner::rescale_internal;
+///
+/// assert_eq!(rescale_internal(-1.0, 1.0, 65.0), 1.0);  // domain floor
+/// assert_eq!(rescale_internal(0.0, 1.0, 65.0), 33.0);  // centre
+/// assert_eq!(rescale_internal(1.0, 1.0, 65.0), 65.0);  // domain ceiling
+/// ```
 #[inline]
 pub fn rescale_internal(x: f64, lo: f64, hi: f64) -> f64 {
     lo + (x + 1.0) * 0.5 * (hi - lo)
@@ -44,6 +54,22 @@ pub fn rescale_internal(x: f64, lo: f64, hi: f64) -> f64 {
 /// `Autotuning::write_point` and the service's evaluation-cache key use —
 /// sharing it guarantees a cache key always names exactly the value the
 /// application would have been handed.
+///
+/// # Examples
+///
+/// The documented contract at the boundaries — half-up for positive
+/// coordinates (`.5` rounds away from zero) and saturating at the domain
+/// edges:
+///
+/// ```
+/// use patsma::tuner::quantize_integer;
+///
+/// assert_eq!(quantize_integer(32.4, 1.0, 64.0), 32.0);
+/// assert_eq!(quantize_integer(32.5, 1.0, 64.0), 33.0);   // half-up
+/// assert_eq!(quantize_integer(-0.5, -64.0, 64.0), -1.0); // away from zero
+/// assert_eq!(quantize_integer(900.0, 1.0, 64.0), 64.0);  // saturates high
+/// assert_eq!(quantize_integer(-3.0, 1.0, 64.0), 1.0);    // saturates low
+/// ```
 #[inline]
 pub fn quantize_integer(u: f64, lo: f64, hi: f64) -> f64 {
     u.round().clamp(lo, hi)
@@ -447,6 +473,15 @@ impl Autotuning {
     /// Optimizer name (for reports).
     pub fn optimizer_name(&self) -> &'static str {
         self.opt.name()
+    }
+
+    /// Snapshot the optimizer's search state
+    /// ([`crate::optimizer::OptimizerState`]) for warm-started re-tuning —
+    /// `None` when the optimizer does not support persistence or has not
+    /// consumed a cost yet. The [`crate::adaptive`] runtime uses this to
+    /// resume a drifted region at a reduced budget.
+    pub fn export_state(&self) -> Option<crate::optimizer::OptimizerState> {
+        self.opt.export_state()
     }
 
     /// Print optimizer debug state (paper's optional `print`).

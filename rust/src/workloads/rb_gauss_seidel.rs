@@ -137,6 +137,19 @@ impl RbGaussSeidel {
         d1 + d2
     }
 
+    /// One **adaptively tuned** red–black sweep: the `Dynamic(chunk)`
+    /// granularity is chosen live by `region` ([`crate::adaptive`]) — tuning
+    /// during the first sweeps of the solve, zero-overhead bypass once
+    /// converged, warm re-tune if the per-sweep cost drifts. Returns the
+    /// residual like [`sweep`](Self::sweep).
+    ///
+    /// The numerics are schedule-invariant (pinned by
+    /// [`verify`](Workload::verify)), so letting the chunk change between
+    /// sweeps never changes the solution — only the speed.
+    pub fn sweep_adaptive(&mut self, region: &mut crate::adaptive::TunedRegion<i32>) -> f64 {
+        region.run(|p| self.sweep(p[0].max(1) as usize))
+    }
+
     /// Sequential reference sweep (the oracle).
     pub fn sweep_sequential(&mut self) -> f64 {
         let side = self.side();
@@ -324,6 +337,31 @@ mod tests {
         let mut w = RbGaussSeidel::new(1, pool());
         let d = w.sweep(1);
         assert!(d.is_finite());
+    }
+
+    #[test]
+    fn adaptive_sweep_matches_oracle_and_converges() {
+        use crate::adaptive::TunedRegionConfig;
+        let n = 24;
+        let mut w = RbGaussSeidel::new(n, pool());
+        let mut seq = RbGaussSeidel::new(n, pool());
+        let mut region = TunedRegionConfig::new(1.0, n as f64)
+            .budget(2, 4)
+            .seed(19)
+            .build::<i32>();
+        // Chunk choices change per sweep while tuning; the numerics must
+        // track the sequential oracle bitwise throughout.
+        for sweep in 0..20 {
+            let da = w.sweep_adaptive(&mut region);
+            let ds = seq.sweep_sequential();
+            assert!(
+                (da - ds).abs() < 1e-12,
+                "sweep {sweep}: adaptive residual {da} vs oracle {ds}"
+            );
+        }
+        assert_eq!(w.grid(), seq.grid());
+        assert!(region.is_converged(), "2×4 budget spent within 20 sweeps");
+        assert_eq!(region.iterations(), 20, "one real sweep per call");
     }
 
     #[test]

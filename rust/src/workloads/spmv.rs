@@ -127,6 +127,15 @@ impl Spmv {
         self.checksum()
     }
 
+    /// **Adaptively tuned** `y = A x`: the `Dynamic(chunk)` row-claim
+    /// granularity is chosen live by `region` ([`crate::adaptive`]) — the
+    /// skewed row lengths make this the workload where the right chunk
+    /// matters most (imbalance vs. counter contention). Returns the
+    /// checksum like [`multiply`](Self::multiply).
+    pub fn multiply_adaptive(&mut self, region: &mut crate::adaptive::TunedRegion<i32>) -> f64 {
+        region.run(|p| self.multiply(p[0].max(1) as usize))
+    }
+
     /// Sequential oracle.
     pub fn multiply_sequential(&mut self) -> f64 {
         for r in 0..self.rows {
@@ -209,6 +218,24 @@ mod tests {
         let mut b = Spmv::new(200, 100, 6, 7, pool());
         assert_eq!(a.multiply(1), b.multiply(32));
         assert_eq!(a.output(), b.output());
+    }
+
+    #[test]
+    fn adaptive_multiply_matches_fixed_chunk_results() {
+        use crate::adaptive::TunedRegionConfig;
+        let mut w = Spmv::new(400, 200, 6, 21, pool());
+        let mut fixed = Spmv::new(400, 200, 6, 21, pool());
+        let reference = fixed.multiply(8);
+        let mut region = TunedRegionConfig::new(1.0, 200.0)
+            .budget(2, 3)
+            .seed(23)
+            .build::<i32>();
+        for _ in 0..12 {
+            let cs = w.multiply_adaptive(&mut region);
+            assert_eq!(cs, reference, "checksum must be chunk-invariant");
+        }
+        assert_eq!(w.output(), fixed.output());
+        assert!(region.is_converged());
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Integration: the online adaptive tuning runtime (ISSUE 3 acceptance).
+//!
+//! Pins the two headline claims of `patsma::adaptive`:
+//!
+//! 1. a converged [`TunedRegion`] is as good as Entire-Execution tuning
+//!    (within 10%) while spending its evaluations on *real* application
+//!    iterations;
+//! 2. an injected mid-run drift is detected and recovered from with
+//!    **strictly fewer** evaluations than a cold restart, via the
+//!    snapshot/warm-start path.
+
+use patsma::adaptive::{DriftConfig, TunedRegion, TunedRegionConfig};
+use patsma::sched::ThreadPool;
+use patsma::tuner::Autotuning;
+use patsma::workloads::rb_gauss_seidel::RbGaussSeidel;
+use patsma::workloads::synthetic::chunk_cost_model;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Shared 4-thread pool (workload constructors need `&'static`).
+fn pool() -> &'static ThreadPool {
+    static P: OnceLock<ThreadPool> = OnceLock::new();
+    P.get_or_init(|| ThreadPool::new(4))
+}
+
+/// Drive a region on the synthetic landscape until the current generation
+/// converges; panics if the budget is never exhausted.
+fn converge(region: &mut TunedRegion<i32>, landscape: impl Fn(f64) -> f64) {
+    let mut guard = 0;
+    while !region.is_converged() {
+        region.run_with_cost(|p| (landscape(p[0] as f64), ()));
+        guard += 1;
+        assert!(guard < 10_000, "tuning never converged");
+    }
+}
+
+#[test]
+fn converged_region_matches_entire_exec_within_tolerance() {
+    let landscape = |c: f64| chunk_cost_model(c, 48.0);
+
+    // Entire-Execution mode (Fig. 1b): the full optimization up front on a
+    // replica of the target.
+    let mut at = Autotuning::with_seed(1.0, 128.0, 0, 1, 4, 10, 7);
+    let mut chunk = [0i32; 1];
+    at.entire_exec(&mut chunk, |p| landscape(p[0] as f64));
+    let entire_cost = landscape(chunk[0] as f64);
+
+    // Single-Iteration mode through a TunedRegion: same optimizer, budget
+    // and seed, but the evaluations ride on application iterations.
+    let mut region = TunedRegionConfig::new(1.0, 128.0)
+        .budget(4, 10)
+        .seed(7)
+        .build::<i32>();
+    converge(&mut region, landscape);
+    let adaptive_cost = landscape(region.point()[0] as f64);
+
+    // ISSUE 3 acceptance: within 10% of entire-exec tuning (two-sided —
+    // neither mode may be meaningfully worse than the other).
+    assert!(
+        adaptive_cost <= entire_cost * 1.10,
+        "adaptive {adaptive_cost} vs entire {entire_cost}"
+    );
+    assert!(
+        entire_cost <= adaptive_cost * 1.10,
+        "entire {entire_cost} vs adaptive {adaptive_cost}"
+    );
+    // Zero extra target work: every evaluation *was* an application
+    // iteration (the Single-Iteration promise, Eq. 1 with ignore = 0).
+    assert_eq!(region.evaluations(), 40);
+    assert_eq!(region.iterations(), region.evaluations());
+}
+
+#[test]
+fn injected_drift_is_detected_and_recovered_cheaper_than_cold_start() {
+    let (num_opt, max_iter) = (4usize, 12usize);
+    let cold_evals = (num_opt * max_iter) as u64;
+    let mut region = TunedRegionConfig::new(1.0, 128.0)
+        .budget(num_opt, max_iter)
+        .seed(5)
+        .drift(DriftConfig::default().with_window(6).with_band(4.0, 0.1))
+        .retune_budget_pct(50)
+        .build::<i32>();
+
+    // Phase 1: converge on landscape A (optimum parameter ≈ 24–29).
+    converge(&mut region, |c| chunk_cost_model(c, 24.0));
+    assert_eq!(region.evaluations(), cold_evals);
+    let tuned_a = region.point()[0];
+    assert!(
+        (12..=44).contains(&tuned_a),
+        "generation 0 missed landscape A's optimum region: {tuned_a}"
+    );
+
+    // Phase 2: stable bypass primes the drift baseline; no re-tunes.
+    for _ in 0..12 {
+        region.run_with_cost(|p| (chunk_cost_model(p[0] as f64, 24.0), ()));
+    }
+    assert_eq!(region.retunes(), 0, "stable phase must not re-tune");
+    assert_eq!(region.point()[0], tuned_a, "bypass point is frozen");
+
+    // Phase 3: the workload shifts — the optimum moves to 96 and every
+    // iteration slows 1.8× (problem grew, machine got busier). The frozen
+    // point's cost leaves the baseline band wherever tuning converged.
+    let landscape_b = |c: f64| 1.8 * chunk_cost_model(c, 96.0);
+    let mut detect_iters = 0u64;
+    while region.retunes() == 0 {
+        region.run_with_cost(|p| (landscape_b(p[0] as f64), ()));
+        detect_iters += 1;
+        assert!(detect_iters < 100, "drift never detected");
+    }
+    assert!(region.last_retune_was_warm(), "CSA must warm-start");
+    assert!(!region.is_converged(), "re-tuning phase must be live");
+
+    // Phase 4: recovery. ISSUE 3 acceptance: strictly fewer evaluations
+    // than a cold restart (the 50% warm budget).
+    converge(&mut region, landscape_b);
+    assert!(
+        region.generation_evaluations() < cold_evals,
+        "warm recovery used {} evaluations, cold start uses {cold_evals}",
+        region.generation_evaluations()
+    );
+    assert_eq!(region.generation_evaluations(), cold_evals / 2);
+    // The warm generation re-measures the persisted best first, so the
+    // recovered point can never be worse than the stale one on the new
+    // landscape.
+    let stale = region
+        .history()
+        .first()
+        .expect("warm generation re-measures the stale best first");
+    let recovered_cost = landscape_b(region.point()[0] as f64);
+    assert!(
+        recovered_cost <= stale.cost + 1e-12,
+        "recovery regressed: {recovered_cost} vs stale {}",
+        stale.cost
+    );
+}
+
+#[test]
+fn multiplicative_drift_is_detected_wherever_tuning_converged() {
+    // A co-tenant steals cycles: every cost scales ×3. Unlike an
+    // optimum shift this is detectable regardless of where generation 0
+    // landed, so it pins the detector itself end to end.
+    let mut region = TunedRegionConfig::new(1.0, 128.0)
+        .budget(4, 8)
+        .seed(31)
+        .drift(DriftConfig::default().with_window(4))
+        .build::<i32>();
+    converge(&mut region, |c| chunk_cost_model(c, 32.0));
+    let mut scale = 1.0;
+    let mut iters = 0u64;
+    while region.retunes() == 0 {
+        if region.monitor().is_primed() {
+            scale = 3.0;
+        }
+        region.run_with_cost(|p| (scale * chunk_cost_model(p[0] as f64, 32.0), ()));
+        iters += 1;
+        assert!(iters < 100, "scaled drift never detected");
+    }
+    converge(&mut region, |c| 3.0 * chunk_cost_model(c, 32.0));
+    assert_eq!(region.retunes(), 1);
+    assert!(region.generation_evaluations() < region.evaluations());
+}
+
+#[test]
+fn non_finite_bypass_costs_never_trigger_retuning() {
+    // DriftMonitor edge case at the region level: NaN/Inf costs (timer
+    // glitches) are rejected — no baseline pollution, no spurious re-tune.
+    let mut region = TunedRegionConfig::new(1.0, 64.0)
+        .budget(2, 4)
+        .seed(13)
+        .build::<i32>();
+    converge(&mut region, |c| chunk_cost_model(c, 16.0));
+    for i in 0..100 {
+        let cost = match i % 4 {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            _ => chunk_cost_model(region.point()[0] as f64, 16.0),
+        };
+        region.run_with_cost(|_| (cost, ()));
+    }
+    assert_eq!(region.retunes(), 0);
+    assert_eq!(region.monitor().rejected(), 50);
+}
+
+#[test]
+fn auto_chunked_parallel_for_runs_real_loops_to_convergence() {
+    // The sched::pool entry point end to end: a real parallel loop whose
+    // chunk is tuned by wall-clock, with full index coverage every call.
+    let pool = pool();
+    let mut chunker = TunedRegionConfig::new(1.0, 256.0)
+        .budget(2, 5)
+        .seed(3)
+        .build::<i32>();
+    let n = 4096usize;
+    for round in 0..30 {
+        let count = AtomicUsize::new(0);
+        pool.parallel_for_auto(0, n, &mut chunker, |r| {
+            count.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), n, "round {round}");
+        if chunker.is_converged() {
+            break;
+        }
+    }
+    assert!(chunker.is_converged(), "2×5 budget spent within 30 loops");
+    assert!((1..=256).contains(&chunker.point()[0]));
+}
+
+#[test]
+fn adaptive_rbgs_solve_tracks_the_sequential_oracle() {
+    // A real workload under the adaptive runtime: tuning happens inside the
+    // solve and never perturbs the numerics.
+    let pool = pool();
+    let mut w = RbGaussSeidel::new(32, pool);
+    let mut oracle = RbGaussSeidel::new(32, pool);
+    let mut region = TunedRegionConfig::new(1.0, 32.0)
+        .budget(2, 5)
+        .seed(29)
+        .build::<i32>();
+    for sweep in 0..25 {
+        let da = w.sweep_adaptive(&mut region);
+        let ds = oracle.sweep_sequential();
+        assert!(
+            (da - ds).abs() < 1e-9 * ds.abs().max(1.0),
+            "sweep {sweep}: {da} vs {ds}"
+        );
+    }
+    assert_eq!(w.grid(), oracle.grid(), "grids must match bitwise");
+    assert!(region.is_converged());
+}

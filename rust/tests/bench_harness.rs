@@ -42,6 +42,7 @@ fn tier1_suite_is_schema_stable_across_runs() {
     assert!(ids_a.contains(&"dispatch/parallel-for-empty"), "{ids_a:?}");
     assert!(ids_a.contains(&"optimizer/csa-sphere"), "{ids_a:?}");
     assert!(ids_a.contains(&"service/synthetic-batch"), "{ids_a:?}");
+    assert!(ids_a.contains(&"adaptive/region-drift-cycle"), "{ids_a:?}");
     assert!(ids_a.contains(&"workload/rb-gauss-seidel"), "{ids_a:?}");
     assert!(ids_a.contains(&"workload/spmv"), "{ids_a:?}");
 
