@@ -28,7 +28,11 @@
 //! The substrate hook is [`crate::sched::ThreadPool::parallel_for_auto`]:
 //! an auto-chunked `parallel_for` whose `Dynamic(chunk)` granularity is
 //! chosen live by a `TunedRegion` — the paper's tuned OpenMP clause as a
-//! drop-in loop primitive. `patsma adaptive demo` shows the full
+//! drop-in loop primitive. Its joint sibling
+//! [`crate::sched::ThreadPool::parallel_for_auto_joint`] hands a
+//! [`TunedSpace`] the whole `(schedule kind, chunk)` pair — the typed
+//! [`crate::space::SearchSpace`] machinery tunes the categorical policy
+//! *together with* its granularity. `patsma adaptive demo` shows the full
 //! converge → drift → recover cycle on the CLI.
 //!
 //! # Examples
@@ -57,4 +61,4 @@ pub mod drift;
 pub mod region;
 
 pub use drift::{DriftConfig, DriftMonitor};
-pub use region::{TunedRegion, TunedRegionConfig};
+pub use region::{TunedRegion, TunedRegionConfig, TunedSpace};

@@ -22,11 +22,19 @@
 use super::drift::{DriftConfig, DriftMonitor};
 use crate::optimizer::OptimizerState;
 use crate::service::OptimizerSpec;
+use crate::space::{Dim, Point, SearchSpace};
 use crate::tuner::{Autotuning, PointValue, Sample};
 use std::time::Instant;
 
 /// Everything needed to build (and, on drift, rebuild) a region's
 /// optimizer: domain, budget, seed, drift policy.
+///
+/// The domain is a typed [`SearchSpace`]. The paper's single-int chunk API
+/// is a thin constructor over it ([`new`](Self::new) /
+/// [`with_bounds`](Self::with_bounds) build plain float-box dimensions and
+/// [`build`](Self::build) hands the box to the numeric [`TunedRegion`]);
+/// mixed spaces — categorical schedule kinds, power-of-two chunks — go
+/// through [`with_space`](Self::with_space) + [`build_typed`](Self::build_typed).
 ///
 /// # Examples
 ///
@@ -41,10 +49,8 @@ use std::time::Instant;
 /// ```
 #[derive(Debug, Clone)]
 pub struct TunedRegionConfig {
-    /// Per-parameter lower bounds (user domain).
-    pub lo: Vec<f64>,
-    /// Per-parameter upper bounds (user domain).
-    pub hi: Vec<f64>,
+    /// The typed parameter domain.
+    pub space: SearchSpace,
     /// Stabilisation iterations per measured candidate (paper §2.3).
     pub ignore: u32,
     /// Which optimizer drives the search.
@@ -74,9 +80,20 @@ impl TunedRegionConfig {
     pub fn with_bounds(lo: Vec<f64>, hi: Vec<f64>) -> Self {
         assert_eq!(lo.len(), hi.len(), "bounds length mismatch");
         assert!(!lo.is_empty(), "at least one tuned parameter");
+        Self::with_space(SearchSpace::new(
+            lo.into_iter()
+                .zip(hi)
+                .map(|(l, h)| Dim::Float { lo: l, hi: h })
+                .collect(),
+        ))
+    }
+
+    /// Typed-domain constructor: tune over any [`SearchSpace`] (integer,
+    /// power-of-two, float, log-float and categorical dimensions). Build
+    /// with [`build_typed`](Self::build_typed).
+    pub fn with_space(space: SearchSpace) -> Self {
         Self {
-            lo,
-            hi,
+            space,
             ignore: 0,
             optimizer: OptimizerSpec::Csa,
             num_opt: 4,
@@ -126,19 +143,31 @@ impl TunedRegionConfig {
 
     /// Number of tuned parameters.
     pub fn dim(&self) -> usize {
-        self.lo.len()
+        self.space.dim()
+    }
+
+    /// The numeric box `(lo, hi)` of the space; panics for mixed spaces
+    /// (those go through [`build_typed`](Self::build_typed)).
+    fn numeric_bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        self.space.numeric_bounds().expect(
+            "this space has pow2/log/categorical dimensions; \
+             build it with build_typed instead of build",
+        )
     }
 
     /// Materialise the region (generation 0 = cold start at full budget).
+    /// Requires a numeric box space (the `new`/`with_bounds` constructors);
+    /// use [`build_typed`](Self::build_typed) for mixed spaces.
     pub fn build<P: PointValue>(self) -> TunedRegion<P> {
         let dim = self.dim();
+        let (lo, hi) = self.numeric_bounds();
         let opt = self
             .optimizer
             .build(dim, self.num_opt, self.max_iter, self.seed);
-        let at = Autotuning::with_optimizer(self.lo.clone(), self.hi.clone(), self.ignore, opt);
+        let at = Autotuning::with_optimizer(lo.clone(), hi, self.ignore, opt);
         let monitor = DriftMonitor::new(self.drift);
         TunedRegion {
-            point: self.lo.iter().map(|&l| P::from_f64(l)).collect(),
+            point: lo.iter().map(|&l| P::from_f64(l)).collect(),
             cfg: self,
             at,
             monitor,
@@ -146,6 +175,28 @@ impl TunedRegionConfig {
             evals_prior: 0,
             iterations: 0,
             last_retune_warm: false,
+        }
+    }
+
+    /// Materialise a **typed** region over the full space: the application
+    /// receives decoded [`Point`]s (categorical kinds by bin, pow2/log
+    /// dimensions quantized in exponent space). Same lifecycle as
+    /// [`TunedRegion`] — tune live, bypass when converged, warm re-tune on
+    /// drift.
+    pub fn build_typed(self) -> TunedSpace {
+        let space = self.space.clone();
+        let dim = space.dim();
+        // The inner numeric region stages the optimizer over the unit
+        // hypercube; every candidate decodes through the typed space.
+        let unit_cfg = Self {
+            space: SearchSpace::unit(dim),
+            ..self
+        };
+        let point = space.decode_unit(&vec![0.0; dim]);
+        TunedSpace {
+            space,
+            inner: unit_cfg.build::<f64>(),
+            point,
         }
     }
 }
@@ -245,12 +296,8 @@ impl<P: PointValue> TunedRegion<P> {
                 .optimizer
                 .build(dim, self.cfg.num_opt, self.cfg.max_iter, seed);
         }
-        self.at = Autotuning::with_optimizer(
-            self.cfg.lo.clone(),
-            self.cfg.hi.clone(),
-            self.cfg.ignore,
-            opt,
-        );
+        let (lo, hi) = self.cfg.numeric_bounds();
+        self.at = Autotuning::with_optimizer(lo, hi, self.cfg.ignore, opt);
         self.monitor.reset();
     }
 
@@ -317,6 +364,141 @@ impl<P: PointValue> TunedRegion<P> {
     /// The region's configuration.
     pub fn config(&self) -> &TunedRegionConfig {
         &self.cfg
+    }
+}
+
+/// Typed adaptive region over a mixed [`SearchSpace`] (built by
+/// [`TunedRegionConfig::build_typed`]): the same converge → bypass → warm
+/// re-tune lifecycle as [`TunedRegion`], but the application receives
+/// decoded typed [`Point`]s — categorical kinds, exponent-quantized pow2
+/// chunks, log-scaled floats. The optimizer underneath stages over the
+/// unit hypercube and never sees the types (see [`crate::space`]).
+///
+/// The canonical use is joint `(schedule kind, chunk)` loop tuning via
+/// [`crate::sched::ThreadPool::parallel_for_auto_joint`].
+///
+/// # Examples
+///
+/// ```
+/// use patsma::adaptive::TunedRegionConfig;
+/// use patsma::sched::Schedule;
+/// use patsma::workloads::synthetic::joint_cost_model;
+///
+/// let mut region = TunedRegionConfig::with_space(Schedule::joint_space(64))
+///     .budget(3, 6)
+///     .seed(9)
+///     .build_typed();
+/// while !region.is_converged() {
+///     region.run_with_cost(|p| {
+///         (joint_cost_model(p[0].index(), p[1].as_f64(), 24.0), ())
+///     });
+/// }
+/// let tuned = Schedule::from_joint(region.point());
+/// assert!(!tuned.label().is_empty());
+/// ```
+pub struct TunedSpace {
+    /// The typed domain candidates decode through.
+    space: SearchSpace,
+    /// Numeric region staging the optimizer over the unit hypercube.
+    inner: TunedRegion<f64>,
+    /// Last decoded point handed to the application.
+    point: Point,
+}
+
+impl TunedSpace {
+    /// Run one application iteration, measuring its wall-clock as the cost.
+    /// `target` receives the current decoded point; its return value is
+    /// passed through.
+    pub fn run<R>(&mut self, target: impl FnOnce(&Point) -> R) -> R {
+        self.run_with_cost(|p| {
+            let t0 = Instant::now();
+            let out = target(p);
+            (t0.elapsed().as_secs_f64(), out)
+        })
+    }
+
+    /// Run one application iteration with an application-defined cost:
+    /// `target` returns `(cost, value)`.
+    pub fn run_with_cost<R>(&mut self, target: impl FnOnce(&Point) -> (f64, R)) -> R {
+        let space = &self.space;
+        let mut decoded: Option<Point> = None;
+        let out = self.inner.run_with_cost(|u| {
+            let p = space.decode_unit(u);
+            let (cost, value) = target(&p);
+            decoded = Some(p);
+            (cost, value)
+        });
+        if let Some(p) = decoded {
+            self.point = p;
+        }
+        out
+    }
+
+    /// Force a warm re-tune now (drift known out-of-band).
+    pub fn retune(&mut self) {
+        self.inner.retune();
+    }
+
+    /// The typed point as last handed to the application.
+    pub fn point(&self) -> &Point {
+        &self.point
+    }
+
+    /// The typed point rendered through the space (categories by name).
+    pub fn label(&self) -> String {
+        self.space.label(&self.point)
+    }
+
+    /// The typed domain.
+    pub fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    /// Number of tuned dimensions.
+    pub fn dim(&self) -> usize {
+        self.space.dim()
+    }
+
+    /// True while converged and bypassing (see [`TunedRegion::is_converged`]).
+    pub fn is_converged(&self) -> bool {
+        self.inner.is_converged()
+    }
+
+    /// Completed optimizer evaluations across all generations.
+    pub fn evaluations(&self) -> u64 {
+        self.inner.evaluations()
+    }
+
+    /// Evaluations consumed by the current generation only.
+    pub fn generation_evaluations(&self) -> u64 {
+        self.inner.generation_evaluations()
+    }
+
+    /// Completed re-tunes (0 until the first drift).
+    pub fn retunes(&self) -> u64 {
+        self.inner.retunes()
+    }
+
+    /// Whether the latest re-tune warm-started from a snapshot.
+    pub fn last_retune_was_warm(&self) -> bool {
+        self.inner.last_retune_was_warm()
+    }
+
+    /// Total `run*` calls over the region's lifetime.
+    pub fn iterations(&self) -> u64 {
+        self.inner.iterations()
+    }
+
+    /// Best (typed point, cost) measured by the current generation.
+    pub fn best(&self) -> Option<(Point, f64)> {
+        self.inner
+            .best()
+            .map(|(unit, cost)| (self.space.decode_unit(&unit), cost))
+    }
+
+    /// The drift monitor (inspect baseline/EWMA in reports).
+    pub fn monitor(&self) -> &DriftMonitor {
+        self.inner.monitor()
     }
 }
 
@@ -483,5 +665,106 @@ mod tests {
     #[should_panic(expected = "bounds length mismatch")]
     fn mismatched_bounds_panic() {
         let _ = TunedRegionConfig::with_bounds(vec![1.0], vec![2.0, 3.0]);
+    }
+
+    mod typed {
+        use super::*;
+        use crate::sched::Schedule;
+        use crate::space::Value;
+        use crate::workloads::synthetic::joint_cost_model;
+
+        fn joint_cost(p: &crate::space::Point, best: f64) -> f64 {
+            joint_cost_model(p[0].index(), p[1].as_f64(), best)
+        }
+
+        fn converge_joint(region: &mut TunedSpace, best: f64) {
+            let mut guard = 0;
+            while !region.is_converged() {
+                region.run_with_cost(|p| (joint_cost(p, best), ()));
+                guard += 1;
+                assert!(guard < 10_000, "typed tuning never converged");
+            }
+        }
+
+        #[test]
+        fn typed_region_converges_and_bypasses_on_a_fixed_cell() {
+            let mut region = TunedRegionConfig::with_space(Schedule::joint_space(128))
+                .budget(4, 10)
+                .seed(11)
+                .build_typed();
+            converge_joint(&mut region, 48.0);
+            assert_eq!(region.evaluations(), 40);
+            let frozen = region.point().clone();
+            assert!(region.space().contains(&frozen));
+            assert!(matches!(frozen[0], Value::Cat(_)));
+            for _ in 0..30 {
+                region.run_with_cost(|p| (joint_cost(p, 48.0), ()));
+                assert_eq!(region.point(), &frozen, "bypass must freeze the cell");
+            }
+            assert_eq!(region.retunes(), 0);
+            // The label decodes through the space (kind by name).
+            let label = region.label();
+            assert!(
+                Schedule::KINDS.iter().any(|k| label.starts_with(k)),
+                "label {label:?}"
+            );
+        }
+
+        #[test]
+        fn typed_region_detects_drift_and_warm_retunes() {
+            let mut region = TunedRegionConfig::with_space(Schedule::joint_space(128))
+                .budget(4, 10)
+                .seed(5)
+                .build_typed();
+            converge_joint(&mut region, 24.0);
+            for _ in 0..10 {
+                region.run_with_cost(|p| (joint_cost(p, 24.0), ()));
+            }
+            assert_eq!(region.retunes(), 0, "stable bypass must not re-tune");
+            // The landscape shifts and slows; the frozen cell leaves the band.
+            let shifted = |p: &crate::space::Point| 2.0 * joint_cost(p, 96.0);
+            let mut detected = false;
+            for _ in 0..200 {
+                region.run_with_cost(|p| (shifted(p), ()));
+                if region.retunes() > 0 {
+                    detected = true;
+                    break;
+                }
+            }
+            assert!(detected, "drift never detected");
+            assert!(region.last_retune_was_warm());
+            let mut guard = 0;
+            while !region.is_converged() {
+                region.run_with_cost(|p| (shifted(p), ()));
+                guard += 1;
+                assert!(guard < 10_000);
+            }
+            // Warm budget: 50% of 10 iterations × 4 chains.
+            assert_eq!(region.generation_evaluations(), 20);
+        }
+
+        #[test]
+        fn every_typed_call_runs_the_target_exactly_once() {
+            let mut region = TunedRegionConfig::with_space(Schedule::joint_space(64))
+                .budget(2, 4)
+                .seed(3)
+                .build_typed();
+            let mut calls = 0u64;
+            for _ in 0..50 {
+                region.run_with_cost(|p| {
+                    calls += 1;
+                    (joint_cost(p, 16.0), ())
+                });
+            }
+            assert_eq!(calls, 50, "single-iteration protocol");
+            assert_eq!(region.iterations(), 50);
+            assert_eq!(region.dim(), 2);
+        }
+
+        #[test]
+        #[should_panic(expected = "pow2/log/categorical")]
+        fn numeric_build_rejects_mixed_spaces() {
+            let _ = TunedRegionConfig::with_space(Schedule::joint_space(8)).build::<i32>();
+        }
     }
 }

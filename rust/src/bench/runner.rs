@@ -439,6 +439,51 @@ pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
         entries.push(BenchEntry::from_measurement(&id, &m));
     }
 
+    // 6. Joint (schedule kind, chunk) tuning vs chunk-only on the skewed
+    // SpMV: tune both configurations live (wall-clock costs, equal seed and
+    // budget), then measure one multiply under each tuned configuration.
+    // The joint entry's median sitting at or below the chunk-only baseline
+    // is the report-level demonstration that searching the kind *with* the
+    // chunk never loses to tuning the chunk under a pinned kind.
+    {
+        let mut spmv = Spmv::with_size(if quick { 10_000 } else { 30_000 }, 8_000, 8);
+        let max_chunk = 512usize;
+        let mut joint = TunedRegionConfig::with_space(Schedule::joint_space(max_chunk))
+            .budget(3, 4)
+            .seed(4242)
+            .build_typed();
+        let mut guard = 0;
+        while !joint.is_converged() && guard < 200 {
+            black_box(spmv.multiply_joint(&mut joint));
+            guard += 1;
+        }
+        let joint_sched = Schedule::from_joint(joint.point());
+        let mut chunk_only = TunedRegionConfig::new(1.0, max_chunk as f64)
+            .budget(3, 4)
+            .seed(4242)
+            .build::<i32>();
+        let mut guard = 0;
+        while !chunk_only.is_converged() && guard < 200 {
+            black_box(spmv.multiply_adaptive(&mut chunk_only));
+            guard += 1;
+        }
+        let chunk_sched = Schedule::Dynamic(chunk_only.point()[0].max(1) as usize);
+        let m_joint = bench("sched/joint", warmup, samples, || {
+            black_box(spmv.multiply_sched(joint_sched));
+        });
+        entries.push(BenchEntry::from_measurement(
+            "sched/joint-vs-chunk-only",
+            &m_joint,
+        ));
+        let m_chunk = bench("sched/chunk-only", warmup, samples, || {
+            black_box(spmv.multiply_sched(chunk_sched));
+        });
+        entries.push(BenchEntry::from_measurement(
+            "sched/chunk-only-baseline",
+            &m_chunk,
+        ));
+    }
+
     Ok(BenchReport {
         suite: suite.name().to_string(),
         threads: pool.threads(),

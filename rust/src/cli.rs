@@ -10,7 +10,7 @@
 //! patsma bench [--suite tier1|full] [--json PATH] [--quick]
 //! patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
 //!                    [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
-//!                    [--registry PATH]
+//!                    [--registry PATH] [--joint]
 //! patsma service report [--registry PATH]
 //! patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
 //!                       [--force]
@@ -67,6 +67,9 @@ pub enum Command {
         ignore: u32,
         seed: u64,
         registry: String,
+        /// Tune the joint (schedule kind, chunk) typed space instead of the
+        /// plain chunk landscape.
+        joint: bool,
     },
     /// Render a saved service registry.
     ServiceReport { registry: String },
@@ -156,6 +159,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     ignore: flag_val("--ignore").unwrap_or("0").parse()?,
                     seed: flag_val("--seed").unwrap_or("42").parse()?,
                     registry,
+                    joint: has_flag("--joint"),
                 }),
                 "report" => Ok(Command::ServiceReport { registry }),
                 "retune" => Ok(Command::ServiceRetune {
@@ -330,6 +334,7 @@ pub fn execute(cmd: Command) -> Result<String> {
             ignore,
             seed,
             registry,
+            joint,
         } => {
             // Deterministic variety: the landscape optimum cycles so the
             // batch overlaps enough to exercise the shared cache without
@@ -351,9 +356,16 @@ pub fn execute(cmd: Command) -> Result<String> {
                     OptimizerSpec::parse(&optimizer)?
                 };
                 let id = format!("s{i}-{}", opt.name());
-                let mut spec = SessionSpec::synthetic(id, OPTIMA[i % OPTIMA.len()], seed + i as u64)
-                    .with_optimizer(opt)
-                    .with_budget(num_opt, max_iter);
+                let optimum = OPTIMA[i % OPTIMA.len()];
+                // --joint tunes the typed (schedule kind, chunk) space; the
+                // registry then carries the decoded cell (label=dynamic,48).
+                let mut spec = if joint {
+                    SessionSpec::synthetic_joint(id, optimum, seed + i as u64)
+                } else {
+                    SessionSpec::synthetic(id, optimum, seed + i as u64)
+                }
+                .with_optimizer(opt)
+                .with_budget(num_opt, max_iter);
                 spec.ignore = ignore;
                 specs.push(spec);
             }
@@ -566,7 +578,9 @@ USAGE:
                                             emits the BENCH schema CI diffs
   patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
               [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
-              [--registry PATH]             concurrent multi-session tuning
+              [--registry PATH] [--joint]   concurrent multi-session tuning;
+                                            --joint tunes (schedule kind,
+                                            chunk) as one typed space
   patsma service report [--registry PATH]   render a saved registry
   patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
               [--force]                     warm-started re-tuning of drifted
@@ -733,6 +747,7 @@ mod tests {
             ignore: 0,
             seed: 13,
             registry: registry.clone(),
+            joint: false,
         })
         .unwrap();
         assert!(out.contains("4 sessions"), "{out}");
@@ -758,16 +773,17 @@ mod tests {
         assert!(forced.contains("re-tuning"), "{forced}");
         assert!(forced.contains("| yes |"), "warm column: {forced}");
 
-        // The mixed batch had sa/pso sessions with no persistable state;
-        // retune must carry their results over, not drop them.
+        // Every session of the mixed batch must survive the retune in the
+        // updated registry — rerun warm (all four stateful optimizers now
+        // persist snapshots) or carried over (grid/random export nothing).
         let rendered = execute(Command::ServiceReport {
             registry: registry.clone(),
         })
         .unwrap();
         assert!(rendered.contains("persisted states"), "{rendered}");
         assert!(rendered.contains("| s0-csa |"), "{rendered}");
-        assert!(rendered.contains("| s2-sa |"), "stateless session dropped: {rendered}");
-        assert!(rendered.contains("| s3-pso |"), "stateless session dropped: {rendered}");
+        assert!(rendered.contains("| s2-sa |"), "session dropped: {rendered}");
+        assert!(rendered.contains("| s3-pso |"), "session dropped: {rendered}");
         let _ = std::fs::remove_file(&registry);
     }
 
@@ -845,6 +861,44 @@ mod tests {
     }
 
     #[test]
+    fn joint_service_run_labels_cells_in_the_registry() {
+        let registry = std::env::temp_dir()
+            .join("patsma-cli-joint-service-test.txt")
+            .to_str()
+            .unwrap()
+            .to_string();
+        let c = parse(&v(&["service", "run", "--joint", "--sessions", "2"])).unwrap();
+        match &c {
+            Command::ServiceRun { joint, sessions, .. } => {
+                assert!(*joint);
+                assert_eq!(*sessions, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        let out = execute(Command::ServiceRun {
+            sessions: 2,
+            concurrency: 2,
+            optimizer: "csa".into(),
+            num_opt: 4,
+            max_iter: 6,
+            ignore: 0,
+            seed: 11,
+            registry: registry.clone(),
+            joint: true,
+        })
+        .unwrap();
+        assert!(out.contains("synthetic-joint"), "{out}");
+        // The registry carries the typed decoded cells; reload and check.
+        let report =
+            service::ServiceReport::load(std::path::Path::new(&registry)).unwrap();
+        for s in &report.sessions {
+            let label = s.best_label.as_deref().expect("joint sessions are labelled");
+            assert!(!label.is_empty());
+        }
+        let _ = std::fs::remove_file(&registry);
+    }
+
+    #[test]
     fn parse_service_report_and_errors() {
         assert_eq!(
             parse(&v(&["service", "report"])).unwrap(),
@@ -872,6 +926,7 @@ mod tests {
             ignore: 0,
             seed: 9,
             registry: registry.clone(),
+            joint: false,
         })
         .unwrap();
         assert!(out.contains("4 sessions"), "{out}");

@@ -19,7 +19,13 @@
 //! [`adaptive::TunedRegion`] tunes a hot parallel region live via the
 //! Single-Iteration protocol, bypasses to the converged parameters, and
 //! warm re-tunes from an optimizer snapshot when its [`adaptive::DriftMonitor`]
-//! sees the workload shift (`patsma adaptive demo`).
+//! sees the workload shift (`patsma adaptive demo`). The [`space`] module
+//! generalises every domain above from bare numeric boxes to **typed,
+//! mixed-kind search spaces** (integer, power-of-two, float, log-float,
+//! categorical): optimizers keep searching their fixed internal box while
+//! [`space::SearchSpace`] encodes/decodes candidates with deterministic
+//! quantization — enabling joint `(schedule kind, chunk)` tuning through
+//! [`sched::Schedule::joint_space`] and [`adaptive::TunedSpace`].
 //!
 //! See `docs/ARCHITECTURE.md` for the layer map and data flow.
 
@@ -33,6 +39,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sched;
 pub mod service;
+pub mod space;
 pub mod stats;
 pub mod testkit;
 pub mod tuner;

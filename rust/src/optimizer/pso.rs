@@ -8,7 +8,7 @@
 //! usable everywhere CSA is (tuner, coordinator, benches).
 
 use super::domain;
-use super::{NumericalOptimizer, ResetLevel};
+use super::{NumericalOptimizer, OptimizerState, ResetLevel};
 use crate::rng::Xoshiro256pp;
 
 /// PSO hyper-parameters (standard constriction-coefficient settings).
@@ -214,6 +214,58 @@ impl NumericalOptimizer for ParticleSwarm {
         }
     }
 
+    fn export_state(&self) -> Option<OptimizerState> {
+        if !self.best_cost.is_finite() {
+            return None;
+        }
+        Some(OptimizerState {
+            optimizer: self.name().to_string(),
+            best_internal: self.best_point.clone(),
+            best_cost: self.best_cost,
+            temperatures: None,
+            points: self.pos.clone(),
+        })
+    }
+
+    /// Warm start = [`ResetLevel::Soft`] seeded from the snapshot: particle
+    /// 0 restarts on the persisted best (measured first, so an unchanged
+    /// landscape can never end worse than the persisted solution), the
+    /// remaining particles resume from the persisted swarm positions, and
+    /// all personal/global best *costs* are discarded and re-measured.
+    fn warm_start(&mut self, state: &OptimizerState) -> bool {
+        if state.optimizer != self.name()
+            || state.best_internal.len() != self.cfg.dim
+            || !state.best_internal.iter().all(|v| v.is_finite())
+        {
+            return false;
+        }
+        self.best_point.copy_from_slice(&state.best_internal);
+        // Finite marker so the Soft reset keeps the solution as particle
+        // 0's start (the value itself is discarded — costs are stale).
+        self.best_cost = if state.best_cost.is_finite() {
+            state.best_cost
+        } else {
+            0.0
+        };
+        self.reset(ResetLevel::Soft);
+        for i in 1..self.cfg.swarm {
+            if let Some(p) = state.points.get(i) {
+                if p.len() == self.cfg.dim && p.iter().all(|v| v.is_finite()) {
+                    self.pos[i].copy_from_slice(p);
+                    domain::reflect(&mut self.pos[i]);
+                }
+            }
+        }
+        // Personal bests follow the restart positions; their stale costs
+        // were already cleared by the reset, so the first measurement of
+        // each particle re-establishes them.
+        for i in 0..self.cfg.swarm {
+            let p = self.pos[i].clone();
+            self.pbest[i].copy_from_slice(&p);
+        }
+        true
+    }
+
     fn print(&self) {
         eprintln!(
             "[PSO] iter={}/{} best={:.6e} evals={}",
@@ -295,5 +347,55 @@ mod tests {
         pso.reset(ResetLevel::Hard);
         assert!(pso.best().is_none());
         assert_eq!(pso.evaluations(), 0);
+    }
+
+    #[test]
+    fn export_state_captures_swarm_positions() {
+        let mut pso = ParticleSwarm::new(PsoConfig::new(2, 5, 10).with_seed(4));
+        assert!(
+            pso.export_state().is_none(),
+            "no state before any cost was consumed"
+        );
+        let _ = drive(&mut pso, sphere);
+        let state = pso.export_state().unwrap();
+        assert_eq!(state.optimizer, "pso");
+        assert_eq!(state.points.len(), 5, "one point per particle");
+        assert!(state.temperatures.is_none());
+        assert!(state.best_internal.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn warm_start_re_measures_the_persisted_best_first() {
+        let mut cold = ParticleSwarm::new(PsoConfig::new(1, 4, 20).with_seed(9));
+        let (_, cold_cost) = drive(&mut cold, |x| (x[0] - 0.25).powi(2));
+        let state = cold.export_state().unwrap();
+
+        // Particle 0's restart position is the persisted best.
+        let mut peek = ParticleSwarm::new(PsoConfig::new(1, 4, 8).with_seed(10));
+        assert!(peek.warm_start(&state));
+        assert_eq!(peek.run(0.0).to_vec(), state.best_internal);
+
+        let mut warm = ParticleSwarm::new(PsoConfig::new(1, 4, 8).with_seed(10));
+        assert!(warm.warm_start(&state));
+        let (_, warm_cost) = drive(&mut warm, |x| (x[0] - 0.25).powi(2));
+        assert!(
+            warm_cost <= cold_cost + 1e-12,
+            "warm {warm_cost} regressed past cold {cold_cost}"
+        );
+    }
+
+    #[test]
+    fn warm_start_rejects_unfit_snapshots() {
+        let mut donor = ParticleSwarm::new(PsoConfig::new(2, 3, 8).with_seed(1));
+        let _ = drive(&mut donor, sphere);
+        let state = donor.export_state().unwrap();
+
+        let mut wrong_dim = ParticleSwarm::new(PsoConfig::new(3, 3, 8).with_seed(2));
+        assert!(!wrong_dim.warm_start(&state));
+
+        let mut renamed = state.clone();
+        renamed.optimizer = "sa".into();
+        let mut pso = ParticleSwarm::new(PsoConfig::new(2, 3, 8).with_seed(3));
+        assert!(!pso.warm_start(&renamed));
     }
 }

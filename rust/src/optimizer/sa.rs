@@ -8,8 +8,12 @@
 //! coupling buys.
 
 use super::domain;
-use super::{NumericalOptimizer, ResetLevel};
+use super::{NumericalOptimizer, OptimizerState, ResetLevel};
 use crate::rng::Xoshiro256pp;
+
+/// Floor for a warm-started generation temperature: a chain resumed at a
+/// collapsed `t_gen` could no longer move off its start point at all.
+const WARM_T_GEN_FLOOR: f64 = 1e-3;
 
 /// Plain-SA hyper-parameters.
 #[derive(Debug, Clone)]
@@ -215,6 +219,53 @@ impl NumericalOptimizer for SimulatedAnnealing {
         }
     }
 
+    fn export_state(&self) -> Option<OptimizerState> {
+        if !self.best_cost.is_finite() {
+            return None;
+        }
+        Some(OptimizerState {
+            optimizer: self.name().to_string(),
+            best_internal: self.best_point.clone(),
+            best_cost: self.best_cost,
+            temperatures: Some((self.t_gen, self.t_ac)),
+            points: vec![self.x.clone()],
+        })
+    }
+
+    /// Warm start = [`ResetLevel::Soft`] seeded from the snapshot: the
+    /// persisted best point becomes the chain's start (re-measured first —
+    /// the init evaluation — so on an unchanged landscape a warm run can
+    /// never end worse than the persisted solution), and the annealing
+    /// schedules resume from the persisted temperatures instead of their
+    /// initial values: refinement rather than re-exploration.
+    fn warm_start(&mut self, state: &OptimizerState) -> bool {
+        if state.optimizer != self.name()
+            || state.best_internal.len() != self.cfg.dim
+            || !state.best_internal.iter().all(|v| v.is_finite())
+        {
+            return false;
+        }
+        self.best_point.copy_from_slice(&state.best_internal);
+        // A finite cost marker lets the Soft reset retain the solution (its
+        // value is discarded by the reset — costs are stale by definition).
+        self.best_cost = if state.best_cost.is_finite() {
+            state.best_cost
+        } else {
+            0.0
+        };
+        self.reset(ResetLevel::Soft);
+        if let Some((t_gen, t_ac)) = state.temperatures {
+            if t_gen.is_finite() && t_gen > 0.0 {
+                self.t_gen = t_gen.max(WARM_T_GEN_FLOOR);
+                self.cfg.t_gen0 = self.t_gen;
+            }
+            if t_ac.is_finite() && t_ac > 0.0 {
+                self.t_ac = t_ac;
+            }
+        }
+        true
+    }
+
     fn print(&self) {
         eprintln!(
             "[SA] iter={}/{} T_gen={:.4e} T_ac={:.4e} best={:.6e}",
@@ -295,5 +346,56 @@ mod tests {
             drive(&mut sa, sphere)
         };
         assert_eq!(go(5), go(5));
+    }
+
+    #[test]
+    fn export_state_captures_chain_and_temperatures() {
+        let mut sa = SimulatedAnnealing::new(SaConfig::new(1, 20).with_seed(3));
+        assert!(
+            sa.export_state().is_none(),
+            "no state before any cost was consumed"
+        );
+        let _ = drive(&mut sa, |x| (x[0] - 0.3).abs());
+        let state = sa.export_state().unwrap();
+        assert_eq!(state.optimizer, "sa");
+        assert_eq!(state.best_internal.len(), 1);
+        assert_eq!(state.points.len(), 1, "one SA chain");
+        assert!(state.temperatures.is_some());
+    }
+
+    #[test]
+    fn warm_start_re_measures_the_persisted_best_first() {
+        let mut cold = SimulatedAnnealing::new(SaConfig::new(1, 30).with_seed(7));
+        let (_, cold_cost) = drive(&mut cold, |x| (x[0] - 0.4).powi(2));
+        let state = cold.export_state().unwrap();
+
+        // The first candidate after a warm start is the persisted best (the
+        // init measurement) — peek on a throwaway instance.
+        let mut peek = SimulatedAnnealing::new(SaConfig::new(1, 10).with_seed(8));
+        assert!(peek.warm_start(&state));
+        assert_eq!(peek.run(0.0).to_vec(), state.best_internal);
+
+        let mut warm = SimulatedAnnealing::new(SaConfig::new(1, 10).with_seed(8));
+        assert!(warm.warm_start(&state));
+        let (_, warm_cost) = drive(&mut warm, |x| (x[0] - 0.4).powi(2));
+        assert!(
+            warm_cost <= cold_cost + 1e-12,
+            "warm {warm_cost} regressed past cold {cold_cost}"
+        );
+    }
+
+    #[test]
+    fn warm_start_rejects_unfit_snapshots() {
+        let mut donor = SimulatedAnnealing::new(SaConfig::new(2, 10).with_seed(1));
+        let _ = drive(&mut donor, sphere);
+        let state = donor.export_state().unwrap();
+
+        let mut wrong_dim = SimulatedAnnealing::new(SaConfig::new(3, 10).with_seed(2));
+        assert!(!wrong_dim.warm_start(&state));
+
+        let mut renamed = state.clone();
+        renamed.optimizer = "csa".into();
+        let mut sa = SimulatedAnnealing::new(SaConfig::new(2, 10).with_seed(3));
+        assert!(!sa.warm_start(&renamed));
     }
 }

@@ -33,6 +33,9 @@ pub mod pool;
 pub use metrics::LoopMetrics;
 pub use pool::{in_region, ThreadPool};
 
+use crate::space::{Dim, Point, SearchSpace, Value};
+use anyhow::{bail, Context, Result};
+
 /// Loop-scheduling policy (the OpenMP `schedule` clause).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Schedule {
@@ -50,21 +53,78 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Schedule-kind names of the joint `(kind, chunk)` search space, in
+    /// categorical-bin order (see [`joint_space`](Self::joint_space)).
+    pub const KINDS: [&'static str; 4] = ["static", "static-chunk", "dynamic", "guided"];
+
     /// Parse the CLI form: `static`, `static,8`, `dynamic,4`, `guided,2`.
-    pub fn parse(s: &str) -> Option<Schedule> {
+    ///
+    /// A `chunk` of `0` is an explicit error, not a silent rewrite: every
+    /// schedule implementation treats the chunk as "at least 1", so a user
+    /// who typed `dynamic,0` would otherwise run `dynamic,1` without being
+    /// told (pinned by the tests below).
+    pub fn parse(s: &str) -> Result<Schedule> {
         let (kind, chunk) = match s.split_once(',') {
-            Some((k, c)) => (k.trim(), Some(c.trim().parse::<usize>().ok()?)),
+            Some((k, c)) => {
+                let c = c
+                    .trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("bad chunk {:?} in schedule {s:?}", c.trim()))?;
+                (k.trim(), Some(c))
+            }
             None => (s.trim(), None),
         };
-        Some(match (kind, chunk) {
+        if chunk == Some(0) {
+            bail!("schedule {s:?}: chunk must be >= 1 (a chunk of 0 claims nothing)");
+        }
+        Ok(match (kind, chunk) {
             ("static", None) => Schedule::Static,
-            ("static", Some(c)) => Schedule::StaticChunk(c.max(1)),
-            ("dynamic", Some(c)) => Schedule::Dynamic(c.max(1)),
+            ("static", Some(c)) => Schedule::StaticChunk(c),
+            ("dynamic", Some(c)) => Schedule::Dynamic(c),
             ("dynamic", None) => Schedule::Dynamic(1), // OpenMP default
-            ("guided", Some(c)) => Schedule::Guided(c.max(1)),
+            ("guided", Some(c)) => Schedule::Guided(c),
             ("guided", None) => Schedule::Guided(1),
-            _ => return None,
+            (other, _) => bail!("unknown schedule kind {other:?} (static|dynamic|guided)"),
         })
+    }
+
+    /// The joint `(schedule kind, chunk)` typed search space: a categorical
+    /// dimension over [`KINDS`](Self::KINDS) and an integer chunk in
+    /// `[1, max_chunk]`. Tuning both together is where the real wins are —
+    /// the best `(kind, chunk)` pair beats the best chunk under a fixed
+    /// kind (HPX Smart Executors) — and the typed cells keep
+    /// `dynamic,chunk=32` and `guided,chunk=32` from ever sharing a cache
+    /// entry.
+    pub fn joint_space(max_chunk: usize) -> SearchSpace {
+        SearchSpace::new(vec![
+            Dim::categorical(&Self::KINDS),
+            Dim::Int {
+                lo: 1,
+                hi: max_chunk.max(1) as i64,
+            },
+        ])
+    }
+
+    /// Decode a [`joint_space`](Self::joint_space) point into a schedule.
+    /// Panics on points of a different shape — the joint loop surfaces
+    /// ([`ThreadPool::parallel_for_auto_joint`]) only hand out points of
+    /// their own space.
+    pub fn from_joint(point: &Point) -> Schedule {
+        assert_eq!(point.len(), 2, "joint point is (kind, chunk)");
+        let kind = match &point[0] {
+            Value::Cat(i) => *i,
+            other => panic!("joint dim 0 must be categorical, got {other:?}"),
+        };
+        let chunk = match &point[1] {
+            Value::Int(c) => (*c).max(1) as usize,
+            other => panic!("joint dim 1 must be an integer chunk, got {other:?}"),
+        };
+        match kind {
+            0 => Schedule::Static,
+            1 => Schedule::StaticChunk(chunk),
+            2 => Schedule::Dynamic(chunk),
+            _ => Schedule::Guided(chunk),
+        }
     }
 
     /// Human-readable form for reports.
@@ -98,10 +158,56 @@ mod tests {
 
     #[test]
     fn parse_defaults_and_errors() {
-        assert_eq!(Schedule::parse("dynamic"), Some(Schedule::Dynamic(1)));
-        assert_eq!(Schedule::parse("guided"), Some(Schedule::Guided(1)));
-        assert_eq!(Schedule::parse("dynamic,0"), Some(Schedule::Dynamic(1)));
-        assert_eq!(Schedule::parse("bogus"), None);
-        assert_eq!(Schedule::parse("dynamic,x"), None);
+        assert_eq!(Schedule::parse("dynamic").unwrap(), Schedule::Dynamic(1));
+        assert_eq!(Schedule::parse("guided").unwrap(), Schedule::Guided(1));
+        assert!(Schedule::parse("bogus").is_err());
+        assert!(Schedule::parse("dynamic,x").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_zero_chunk_explicitly() {
+        // The old behaviour silently rewrote chunk 0 to 1; the CLI boundary
+        // must name the mistake instead.
+        for s in ["dynamic,0", "guided,0", "static,0"] {
+            let err = Schedule::parse(s).unwrap_err();
+            assert!(
+                err.to_string().contains("chunk must be >= 1"),
+                "{s}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn joint_space_decodes_every_kind() {
+        use crate::space::Value;
+        let space = Schedule::joint_space(64);
+        assert_eq!(space.dim(), 2);
+        // Bin centres of the 4 kinds, chunk mid-domain.
+        for (i, expect) in [
+            Schedule::Static,
+            Schedule::StaticChunk(33),
+            Schedule::Dynamic(33),
+            Schedule::Guided(33),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let u = (i as f64 + 0.5) / 4.0;
+            let p = space.decode_unit(&[u, 0.5]);
+            assert_eq!(p[0], Value::Cat(i));
+            assert_eq!(Schedule::from_joint(&p), *expect, "kind bin {i}");
+        }
+        // The kind names in the space match the canonical list.
+        let p = space.decode_unit(&[0.6, 0.0]);
+        assert_eq!(space.label(&p), "dynamic,1");
+    }
+
+    #[test]
+    fn joint_space_chunk_saturates_like_quantize_integer() {
+        let space = Schedule::joint_space(16);
+        let lo = Schedule::from_joint(&space.decode_unit(&[0.6, -5.0]));
+        let hi = Schedule::from_joint(&space.decode_unit(&[0.6, 42.0]));
+        assert_eq!(lo, Schedule::Dynamic(1));
+        assert_eq!(hi, Schedule::Dynamic(16));
     }
 }

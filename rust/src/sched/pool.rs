@@ -374,6 +374,57 @@ impl ThreadPool {
         });
     }
 
+    /// Joint-mode auto loop: like [`parallel_for_auto`](Self::parallel_for_auto),
+    /// but the region tunes the **schedule kind and the chunk together**
+    /// over [`Schedule::joint_space`] — static vs. static-chunk vs. dynamic
+    /// vs. guided is searched as a categorical dimension alongside the
+    /// integer chunk, so a loop whose best policy is not `Dynamic` is not
+    /// stuck with it.
+    ///
+    /// One call executes the whole loop exactly once (Single-Iteration
+    /// protocol; zero-overhead bypass after convergence). The region must
+    /// have been built from a 2-dimensional joint space
+    /// ([`crate::adaptive::TunedRegionConfig::with_space`] +
+    /// `build_typed`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::adaptive::TunedRegionConfig;
+    /// use patsma::sched::{Schedule, ThreadPool};
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    ///
+    /// let pool = ThreadPool::new(2);
+    /// let mut region = TunedRegionConfig::with_space(Schedule::joint_space(32))
+    ///     .budget(2, 3)
+    ///     .build_typed();
+    /// let hits = AtomicUsize::new(0);
+    /// for _ in 0..10 {
+    ///     pool.parallel_for_auto_joint(0, 100, &mut region, |r| {
+    ///         hits.fetch_add(r.len(), Ordering::Relaxed);
+    ///     });
+    /// }
+    /// assert_eq!(hits.load(Ordering::Relaxed), 10 * 100);
+    /// ```
+    pub fn parallel_for_auto_joint<F>(
+        &self,
+        start: usize,
+        end: usize,
+        region: &mut crate::adaptive::TunedSpace,
+        body: F,
+    ) where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        assert_eq!(
+            region.dim(),
+            2,
+            "parallel_for_auto_joint tunes exactly (schedule kind, chunk)"
+        );
+        region.run(|p| {
+            self.parallel_for_blocks(start, end, Schedule::from_joint(p), &body);
+        });
+    }
+
     /// Instrumented variant: returns per-thread busy time and block counts,
     /// used by the experiments to attribute cost to imbalance vs.
     /// scheduling overhead.
@@ -718,6 +769,36 @@ mod tests {
         // Budget exhausted well within 40 rounds: the loop is in bypass.
         assert!(chunker.is_converged());
         assert!((1..=64).contains(&chunker.point()[0]));
+    }
+
+    #[test]
+    fn parallel_for_auto_joint_covers_all_indices_and_converges() {
+        let pool = ThreadPool::new(4);
+        let mut region = crate::adaptive::TunedRegionConfig::with_space(
+            Schedule::joint_space(64),
+        )
+        .budget(2, 4)
+        .seed(7)
+        .build_typed();
+        for round in 0..40 {
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for_auto_joint(0, 97, &mut region, |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "round {round} index {i}");
+            }
+        }
+        assert!(region.is_converged());
+        // The converged cell decodes to a valid schedule.
+        let sched = Schedule::from_joint(region.point());
+        let total = AtomicUsize::new(0);
+        pool.parallel_for(0, 50, sched, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 50);
     }
 
     #[test]

@@ -78,6 +78,7 @@ use crate::optimizer::{
     PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
 };
 use crate::sched::{Schedule, ThreadPool};
+use crate::space::{Dim, SearchSpace};
 use crate::tuner::{quantize_integer, rescale_internal};
 use crate::workloads::{self, synthetic, Workload};
 use anyhow::{bail, Context, Result};
@@ -242,6 +243,20 @@ pub enum WorkloadSpec {
         /// Integer-lattice or exact-float candidates.
         kind: PointKind,
     },
+    /// The deterministic **joint** `(schedule kind, chunk)` landscape
+    /// ([`synthetic::joint_cost_model`]) over the typed space
+    /// [`Schedule::joint_space`]: a categorical kind dimension and an
+    /// integer chunk in `[lo, hi]`. Pure, like `Synthetic` — and typed, so
+    /// the evaluation-cache key is the decoded cell: `dynamic,chunk=32`
+    /// and `guided,chunk=32` never collide.
+    SyntheticJoint {
+        /// Chunk location of the dynamic-kind cost minimum (user domain).
+        optimum: f64,
+        /// Inclusive chunk lower bound (≥ 1).
+        lo: i64,
+        /// Inclusive chunk upper bound.
+        hi: i64,
+    },
     /// A real shared-memory workload from [`workloads::by_name`]; the cost
     /// is the measured wall-clock of one target iteration (after `ignore`
     /// stabilisation iterations), so cached costs are the *measured* value
@@ -265,7 +280,22 @@ impl WorkloadSpec {
                 "synthetic/opt={optimum}/dim={dim}/lo={lo}/hi={hi}/kind={}",
                 kind.name()
             ),
+            Self::SyntheticJoint { optimum, lo, hi } => {
+                format!("synthetic-joint/opt={optimum}/lo={lo}/hi={hi}")
+            }
             Self::Named(name) => format!("named/{name}"),
+        }
+    }
+
+    /// The typed search space of a joint workload; `None` for the plain
+    /// numeric-box domains.
+    pub fn space(&self) -> Option<SearchSpace> {
+        match self {
+            Self::SyntheticJoint { lo, hi, .. } => Some(SearchSpace::new(vec![
+                Dim::categorical(&Schedule::KINDS),
+                Dim::Int { lo: *lo, hi: *hi },
+            ])),
+            _ => None,
         }
     }
 
@@ -280,6 +310,25 @@ impl WorkloadSpec {
                 bail!("empty workload name in descriptor {text:?}");
             }
             return Ok(Self::Named(name.to_string()));
+        }
+        if let Some(rest) = text.strip_prefix("synthetic-joint/") {
+            let (mut optimum, mut lo, mut hi) = (None, None, None);
+            for seg in rest.split('/') {
+                let (k, v) = seg
+                    .split_once('=')
+                    .with_context(|| format!("bad descriptor segment {seg:?}"))?;
+                match k {
+                    "opt" => optimum = Some(v.parse::<f64>().context("bad opt")?),
+                    "lo" => lo = Some(v.parse::<i64>().context("bad lo")?),
+                    "hi" => hi = Some(v.parse::<i64>().context("bad hi")?),
+                    _ => {} // forward compatibility
+                }
+            }
+            return Ok(Self::SyntheticJoint {
+                optimum: optimum.context("descriptor missing opt")?,
+                lo: lo.context("descriptor missing lo")?,
+                hi: hi.context("descriptor missing hi")?,
+            });
         }
         let rest = text
             .strip_prefix("synthetic/")
@@ -382,6 +431,18 @@ impl SessionSpec {
         spec
     }
 
+    /// A joint `(schedule kind, chunk)` session over the deterministic
+    /// [`synthetic::joint_cost_model`] landscape, chunk domain `[1, 128]`.
+    pub fn synthetic_joint(id: impl Into<String>, optimum: f64, seed: u64) -> Self {
+        let mut spec = Self::synthetic(id, optimum, seed);
+        spec.workload = WorkloadSpec::SyntheticJoint {
+            optimum,
+            lo: 1,
+            hi: 128,
+        };
+        spec
+    }
+
     /// Builder-style optimizer override.
     pub fn with_optimizer(mut self, opt: OptimizerSpec) -> Self {
         self.optimizer = opt;
@@ -412,12 +473,13 @@ impl SessionSpec {
     /// sessions may share entries regardless of it.
     pub fn fingerprint(&self) -> u64 {
         match &self.workload {
-            WorkloadSpec::Synthetic { .. } => self.workload.fingerprint(),
             WorkloadSpec::Named(_) => fingerprint_str(&format!(
                 "{}/ignore={}",
                 self.workload.descriptor(),
                 self.ignore
             )),
+            // Pure landscapes (plain and joint): ignore is a no-op.
+            _ => self.workload.fingerprint(),
         }
     }
 
@@ -437,6 +499,19 @@ impl SessionSpec {
                 if !(lo.is_finite() && hi.is_finite() && lo <= hi) {
                     bail!("session {}: bad domain [{lo}, {hi}]", self.id);
                 }
+            }
+            WorkloadSpec::SyntheticJoint { lo, hi, .. } => {
+                if *lo < 1 || lo > hi {
+                    bail!("session {}: bad joint chunk domain [{lo}, {hi}]", self.id);
+                }
+                // Surface space-level bound violations (width/magnitude
+                // caps) here, before any session work starts, instead of
+                // panicking inside run_session's space construction.
+                SearchSpace::try_new(vec![
+                    Dim::categorical(&Schedule::KINDS),
+                    Dim::Int { lo: *lo, hi: *hi },
+                ])
+                .with_context(|| format!("session {}: joint chunk domain", self.id))?;
             }
             WorkloadSpec::Named(name) => {
                 if !workloads::NAMES.contains(&name.as_str()) {
@@ -466,9 +541,73 @@ impl SessionSpec {
 /// Instantiated evaluation target.
 enum Target {
     /// Deterministic closed-form landscape.
-    Pure { optimum: f64 },
+    Pure(PureCost),
     /// Stateful workload measured by wall-clock.
     Measured(Box<dyn Workload>),
+}
+
+/// Which closed-form landscape a pure target evaluates (cheap to copy into
+/// parallel batch evaluations).
+#[derive(Clone, Copy)]
+enum PureCost {
+    /// [`pure_cost`]: the chunk-cost model summed over dimensions.
+    Sum {
+        /// Per-coordinate cost minimum.
+        optimum: f64,
+    },
+    /// [`synthetic::joint_cost_model`] over a decoded `(kind, chunk)` cell.
+    Joint {
+        /// Chunk location of the dynamic-kind minimum.
+        optimum: f64,
+    },
+}
+
+impl PureCost {
+    /// Evaluate the landscape on a cache-key point.
+    fn eval(self, point: &[f64]) -> f64 {
+        match self {
+            PureCost::Sum { optimum } => pure_cost(point, optimum),
+            PureCost::Joint { optimum } => {
+                synthetic::joint_cost_model(point[0] as usize, point[1], optimum)
+            }
+        }
+    }
+}
+
+/// How a session's internal candidates map onto user-domain cache keys.
+enum Domain {
+    /// Per-dimension numeric box with a single [`PointKind`].
+    Box {
+        /// Lower bounds.
+        lo: Vec<f64>,
+        /// Upper bounds.
+        hi: Vec<f64>,
+        /// Lattice-quantised or exact-float candidates.
+        kind: PointKind,
+    },
+    /// Typed search space: the cache key is the decoded cell's
+    /// [`crate::space::Point::key`], so two cells that differ only in a
+    /// categorical coordinate never collide.
+    Typed(SearchSpace),
+}
+
+impl Domain {
+    /// Map one internal-domain candidate onto the exact user-domain values
+    /// the application is handed — this vector *is* the cache key.
+    fn key(&self, internal: &[f64]) -> Vec<f64> {
+        match self {
+            Domain::Box { lo, hi, kind } => quantize_candidate(internal, lo, hi, *kind),
+            Domain::Typed(space) => space.decode_internal(internal).key(),
+        }
+    }
+
+    /// Typed rendering of a best point (`None` for box domains).
+    fn label(&self, key: &[f64]) -> Option<String> {
+        match self {
+            Domain::Box { .. } => None,
+            Domain::Typed(space) => Some(space.label(&space.point_from_key(key))),
+        }
+    }
 }
 
 /// What the retune planner decided for a registry's persisted states.
@@ -662,7 +801,7 @@ struct SessionOutcome {
 /// not already inside a pool region), feed the costs back.
 fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> SessionOutcome {
     let t0 = Instant::now();
-    let (mut target, dim, lo, hi, kind) = match &spec.workload {
+    let (mut target, dim, domain) = match &spec.workload {
         WorkloadSpec::Synthetic {
             optimum,
             dim,
@@ -670,17 +809,32 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
             hi,
             kind,
         } => (
-            Target::Pure { optimum: *optimum },
+            Target::Pure(PureCost::Sum { optimum: *optimum }),
             *dim,
-            vec![*lo; *dim],
-            vec![*hi; *dim],
-            *kind,
+            Domain::Box {
+                lo: vec![*lo; *dim],
+                hi: vec![*hi; *dim],
+                kind: *kind,
+            },
+        ),
+        WorkloadSpec::SyntheticJoint { optimum, .. } => (
+            Target::Pure(PureCost::Joint { optimum: *optimum }),
+            2,
+            Domain::Typed(spec.workload.space().expect("joint workload has a space")),
         ),
         WorkloadSpec::Named(name) => {
             let w = workloads::by_name(name).expect("validated workload name");
             let (lo, hi) = w.bounds();
             let dim = w.dim();
-            (Target::Measured(w), dim, lo, hi, PointKind::Integer)
+            (
+                Target::Measured(w),
+                dim,
+                Domain::Box {
+                    lo,
+                    hi,
+                    kind: PointKind::Integer,
+                },
+            )
         }
     };
     let fingerprint = spec.fingerprint();
@@ -706,19 +860,16 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
         if batch.is_empty() {
             break;
         }
-        let points: Vec<Vec<f64>> = batch
-            .iter()
-            .map(|cand| quantize_candidate(cand, &lo, &hi, kind))
-            .collect();
+        let points: Vec<Vec<f64>> = batch.iter().map(|cand| domain.key(cand)).collect();
         let mut hit_flags = vec![false; points.len()];
         costs = match &mut target {
-            Target::Pure { optimum } => {
-                let optimum = *optimum;
+            Target::Pure(pure) => {
+                let pure = *pure;
                 let slots: Vec<Mutex<(f64, bool)>> =
                     points.iter().map(|_| Mutex::new((0.0, false))).collect();
                 pool.parallel_for(0, points.len(), Schedule::Dynamic(1), |i| {
                     let (cost, hit) = cache.get_or_compute(fingerprint, &points[i], || {
-                        pure_cost(&points[i], optimum)
+                        pure.eval(&points[i])
                     });
                     *slots[i].lock().unwrap() = (cost, hit);
                 });
@@ -763,7 +914,7 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
                 target_iterations += match &target {
                     // Pure targets evaluate once; there is nothing to
                     // stabilise, so `ignore` adds no iterations.
-                    Target::Pure { .. } => 1,
+                    Target::Pure(_) => 1,
                     Target::Measured(_) => (spec.ignore as u64) + 1,
                 };
             }
@@ -775,6 +926,9 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
     }
 
     let (best_point, best_cost) = best.unwrap_or((vec![0.0; dim], f64::INFINITY));
+    // Typed domains carry their decoded cell into the registry (categorical
+    // values by name), e.g. `dynamic,32`.
+    let best_label = domain.label(&best_point);
     // A warm-started (retuned) session ran at a *reduced* budget; the state
     // it persists must carry the scenario's original budget forward, or
     // each successive retune would re-apply its percentage to an already
@@ -808,6 +962,7 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
             cache_hits,
             cache_misses,
             best_point,
+            best_label,
             best_cost,
             wall_secs: t0.elapsed().as_secs_f64(),
             warm_started,
@@ -953,6 +1108,20 @@ mod tests {
             kind: PointKind::Integer,
         };
         assert!(s.validate().is_err());
+        // Joint domains: ordering and the space-level width cap are both
+        // rejected at validate time, not at session start.
+        s.workload = WorkloadSpec::SyntheticJoint {
+            optimum: 1.0,
+            lo: 9,
+            hi: 2,
+        };
+        assert!(s.validate().is_err());
+        s.workload = WorkloadSpec::SyntheticJoint {
+            optimum: 1.0,
+            lo: 1,
+            hi: 1 << 40,
+        };
+        assert!(s.validate().is_err());
     }
 
     #[test]
@@ -1009,6 +1178,70 @@ mod tests {
         );
         assert!(s.best_cost.is_finite());
         assert!((1.0..=128.0).contains(&s.best_point[0]));
+    }
+
+    #[test]
+    fn joint_descriptor_roundtrip_and_distinct_fingerprints() {
+        let joint = WorkloadSpec::SyntheticJoint {
+            optimum: 48.0,
+            lo: 1,
+            hi: 128,
+        };
+        let d = joint.descriptor();
+        assert_eq!(d, "synthetic-joint/opt=48/lo=1/hi=128");
+        assert_eq!(WorkloadSpec::parse_descriptor(&d).unwrap(), joint);
+        // A joint landscape never shares cache entries with the plain
+        // synthetic one over the same numbers.
+        let plain = WorkloadSpec::Synthetic {
+            optimum: 48.0,
+            dim: 1,
+            lo: 1.0,
+            hi: 128.0,
+            kind: PointKind::Integer,
+        };
+        assert_ne!(joint.fingerprint(), plain.fingerprint());
+        assert!(joint.space().is_some());
+        assert!(plain.space().is_none());
+    }
+
+    #[test]
+    fn joint_session_runs_and_labels_its_best_cell() {
+        let service = TuningService::new(1);
+        let spec = SessionSpec::synthetic_joint("joint", 48.0, 7).with_budget(5, 16);
+        let report = service.run(&[spec]).unwrap();
+        let s = &report.sessions[0];
+        assert_eq!(s.evaluations, 80);
+        assert_eq!(s.best_point.len(), 2, "(kind, chunk)");
+        let label = s.best_label.as_deref().expect("typed session has a label");
+        let kind = label.split(',').next().unwrap();
+        assert!(
+            Schedule::KINDS.iter().any(|k| *k == kind),
+            "label {label:?} must start with a schedule kind"
+        );
+        // The kind coordinate is a valid bin, the chunk is in-domain.
+        assert!((0.0..4.0).contains(&s.best_point[0]));
+        assert!((1.0..=128.0).contains(&s.best_point[1]));
+        // CSA probes the centre cell (dynamic, mid-chunk) first, whose
+        // joint cost is strictly below the flat static penalty — so the
+        // best cell can never be the static kind's ceiling.
+        assert!(s.best_cost < 1.9, "best {label:?} at {}", s.best_cost);
+    }
+
+    #[test]
+    fn joint_cells_differing_only_in_kind_do_not_collide() {
+        // dynamic,chunk=32 vs guided,chunk=32: same chunk, different cell.
+        let cache = PointCache::new();
+        let spec = SessionSpec::synthetic_joint("k", 32.0, 1);
+        let space = spec.workload.space().unwrap();
+        let fp = spec.fingerprint();
+        let dynamic = space.point_from_key(&[2.0, 32.0]);
+        let guided = space.point_from_key(&[3.0, 32.0]);
+        let (_, h1) = cache.get_or_compute(fp, &dynamic.key(), || 1.0);
+        let (c2, h2) = cache.get_or_compute(fp, &guided.key(), || 2.0);
+        assert!(!h1);
+        assert!(!h2, "kind must be part of the cache key");
+        assert_eq!(c2, 2.0);
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

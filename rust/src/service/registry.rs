@@ -59,8 +59,13 @@ pub struct SessionReport {
     /// Batch evaluations that ran the target.
     pub cache_misses: u64,
     /// Best measured point (user domain; quantised for integer domains,
-    /// exact for float domains).
+    /// exact for float domains; cache-key coordinates for typed domains).
     pub best_point: Vec<f64>,
+    /// The typed decoded cell for search-space sessions (categorical
+    /// values by name, e.g. `dynamic,32`); `None` for plain numeric
+    /// domains — and for records written before format v2 grew the `label`
+    /// key, which still load (back-compat: unknown/missing keys).
+    pub best_label: Option<String>,
     /// Best measured cost.
     pub best_cost: f64,
     /// Session wall-clock seconds.
@@ -132,7 +137,11 @@ impl ServiceReport {
                 s.evaluations,
                 s.target_iterations,
                 s.cache_hits,
-                fmt_point(&s.best_point),
+                // Typed sessions show the decoded cell (categories by
+                // name); numeric sessions the raw point.
+                s.best_label
+                    .clone()
+                    .unwrap_or_else(|| fmt_point(&s.best_point)),
                 s.best_cost,
                 crate::bench::fmt_time(s.wall_secs),
             ));
@@ -162,7 +171,7 @@ impl ServiceReport {
         for s in &self.sessions {
             out.push_str(&format!(
                 "session id={} workload={} optimizer={} evals={} iters={} hits={} misses={} \
-                 best={} cost={} wall={} warm={}\n",
+                 best={} cost={} wall={} warm={}",
                 s.id,
                 s.workload,
                 s.optimizer,
@@ -175,6 +184,10 @@ impl ServiceReport {
                 s.wall_secs,
                 if s.warm_started { 1 } else { 0 },
             ));
+            if let Some(label) = &s.best_label {
+                out.push_str(&format!(" label={label}"));
+            }
+            out.push('\n');
         }
         for st in &self.states {
             let body = st
@@ -285,11 +298,14 @@ fn split_kv(tokens: &[&str]) -> Result<Vec<(String, String)>> {
 }
 
 fn kv_get<'a>(pairs: &'a [(String, String)], key: &str) -> Result<&'a str> {
+    kv_opt(pairs, key).with_context(|| format!("missing {key:?}"))
+}
+
+fn kv_opt<'a>(pairs: &'a [(String, String)], key: &str) -> Option<&'a str> {
     pairs
         .iter()
         .find(|(k, _)| k == key)
         .map(|(_, v)| v.as_str())
-        .with_context(|| format!("missing {key:?}"))
 }
 
 fn parse_v2_record(
@@ -318,6 +334,7 @@ fn parse_v2_record(
                 cache_hits: kv_get(&pairs, "hits")?.parse().context("bad hits")?,
                 cache_misses: kv_get(&pairs, "misses")?.parse().context("bad misses")?,
                 best_point: parse_point(kv_get(&pairs, "best")?)?,
+                best_label: kv_opt(&pairs, "label").map(str::to_string),
                 best_cost: kv_get(&pairs, "cost")?.parse().context("bad cost")?,
                 wall_secs: kv_get(&pairs, "wall")?.parse().context("bad wall")?,
                 warm_started: kv_get(&pairs, "warm").map(|v| v == "1").unwrap_or(false),
@@ -361,6 +378,7 @@ fn parse_v1_record(
                 cache_hits: f[6].parse().context("bad cache hits")?,
                 cache_misses: f[7].parse().context("bad cache misses")?,
                 best_point: parse_point(f[8])?,
+                best_label: None,
                 best_cost: f[9].parse().context("bad best cost")?,
                 wall_secs: f[10].parse().context("bad wall seconds")?,
                 warm_started: false,
@@ -412,6 +430,7 @@ mod tests {
                     cache_hits: 3,
                     cache_misses: 17,
                     best_point: vec![47.0],
+                    best_label: None,
                     best_cost: 1.0104,
                     wall_secs: 0.002,
                     warm_started: false,
@@ -425,6 +444,7 @@ mod tests {
                     cache_hits: 0,
                     cache_misses: 12,
                     best_point: vec![25.5, 23.0],
+                    best_label: Some("dynamic,23".into()),
                     best_cost: 2.1,
                     wall_secs: 0.001,
                     warm_started: true,
@@ -493,6 +513,28 @@ mod tests {
         assert_eq!(r.cache.hits, 3);
         assert!(r.states.is_empty());
         assert!(!r.sessions[0].warm_started);
+        assert_eq!(
+            r.sessions[0].best_label, None,
+            "old numeric records have no typed label"
+        );
+    }
+
+    #[test]
+    fn typed_labels_roundtrip_and_render() {
+        // The text roundtrip already covers Some/None (sample has both);
+        // check the rendered table prefers the typed cell.
+        let r = sample();
+        let parsed = ServiceReport::from_text(&r.to_text()).unwrap();
+        assert_eq!(parsed.sessions[0].best_label, None);
+        assert_eq!(parsed.sessions[1].best_label, Some("dynamic,23".into()));
+        let table = r.render();
+        assert!(table.contains("| dynamic,23 |"), "{table}");
+        // Records without the label key (pre-joint writers) still load.
+        let text = "# patsma-service-registry v2\n\
+                    session id=old workload=w optimizer=csa evals=1 iters=1 hits=0 misses=1 \
+                    best=2 cost=0.1 wall=0.01 warm=0\n";
+        let old = ServiceReport::from_text(text).unwrap();
+        assert_eq!(old.sessions[0].best_label, None);
     }
 
     #[test]

@@ -1,0 +1,726 @@
+//! Typed search spaces — heterogeneous parameter domains behind the
+//! numeric optimizers.
+//!
+//! The paper tunes bare numeric vectors with per-coordinate `min`/`max`.
+//! Real tuning scenarios mix *kinds* of parameters: a chunk size (integer,
+//! often best searched in powers of two), a schedule policy (categorical),
+//! a relaxation factor (float, sometimes log-scaled). [`SearchSpace`] is
+//! the bridge: a vector of typed [`Dim`]s that
+//!
+//! * **encodes** typed values into the unit hypercube `[0, 1]^d`
+//!   ([`SearchSpace::encode`]), so CSA/NM/SA/PSO keep operating on their
+//!   fixed internal box and stay untouched algorithmically, and
+//! * **decodes** optimizer candidates back into a typed [`Point`]
+//!   ([`SearchSpace::decode_unit`] / [`SearchSpace::decode_internal`])
+//!   with *deterministic quantization*: integers round half away from zero
+//!   and saturate at the domain edges (the
+//!   [`crate::tuner::quantize_integer`] contract), `Pow2` and `LogFloat`
+//!   dimensions round in exponent/log space, and categorical dimensions map
+//!   through equal-width bins that are exhaustive and non-overlapping.
+//!
+//! Decoding snaps the unit coordinate onto a fixed `2^-32` lattice first,
+//! so `decode(encode(p)) == p` holds **bit-exactly** for every decoded
+//! point `p` (pinned by `rust/tests/properties.rs`); float dimensions keep
+//! ~`4e9` distinct values per domain, far below any real measurement
+//! resolution. Integer domains are validated to stay within the lattice's
+//! reach (width `< 2^32`, magnitude `<= 2^43`), so every integer cell is a
+//! distinct lattice cell. (For float dimensions the guarantee assumes sane
+//! domains — a box whose offset-to-width ratio exceeds ~`5e5` aliases
+//! neighbouring lattice cells through `f64` cancellation.)
+//!
+//! The stack above builds on this one authority: the tuner's typed mode
+//! ([`crate::tuner::Autotuning::with_space`]), the adaptive runtime
+//! ([`crate::adaptive::TunedSpace`]), the service's evaluation-cache keys
+//! ([`Point::key`]) and the joint `(schedule kind, chunk)` loop surface
+//! ([`crate::sched::Schedule::joint_space`]).
+//!
+//! # Examples
+//!
+//! Joint `(schedule kind, chunk)` tuning — the categorical and the integer
+//! dimension are searched *together*, so `dynamic,32` and `guided,32` are
+//! different cells:
+//!
+//! ```
+//! use patsma::adaptive::TunedRegionConfig;
+//! use patsma::sched::Schedule;
+//! use patsma::workloads::synthetic::joint_cost_model;
+//!
+//! let mut region = TunedRegionConfig::with_space(Schedule::joint_space(128))
+//!     .budget(4, 8)
+//!     .seed(7)
+//!     .build_typed();
+//! while !region.is_converged() {
+//!     region.run_with_cost(|p| {
+//!         // p[0] = schedule kind (categorical), p[1] = chunk (integer).
+//!         (joint_cost_model(p[0].index(), p[1].as_f64(), 48.0), ())
+//!     });
+//! }
+//! let tuned = Schedule::from_joint(region.point());
+//! let kind = tuned.label();
+//! assert!(Schedule::KINDS.iter().any(|k| kind.starts_with(k)));
+//! ```
+//!
+//! Building a mixed space by hand and round-tripping a candidate:
+//!
+//! ```
+//! use patsma::space::{Dim, SearchSpace, Value};
+//!
+//! let space = SearchSpace::new(vec![
+//!     Dim::categorical(&["jacobi", "gauss-seidel"]),
+//!     Dim::Pow2 { lo: 1, hi: 1024 },
+//!     Dim::LogFloat { lo: 1e-3, hi: 10.0 },
+//! ]);
+//! let p = space.decode_unit(&[0.9, 0.5, 0.0]);
+//! assert_eq!(p[0], Value::Cat(1));   // second bin
+//! assert_eq!(p[1], Value::Int(32));  // 2^5: exponent-space rounding
+//! assert_eq!(p[2], Value::Float(1e-3));
+//! assert_eq!(space.decode_unit(&space.encode(&p)), p); // idempotent
+//! ```
+
+pub mod point;
+
+pub use point::{Point, Value};
+
+use crate::tuner::{quantize_integer, rescale_internal};
+use anyhow::{bail, Context, Result};
+
+/// The unit-interval lattice decoding snaps to (`2^32` cells): fine enough
+/// that no real parameter resolution is lost, coarse enough that
+/// `decode(encode(p))` is a bit-exact fixed point for decoded `p`.
+const UNIT_GRID: f64 = 4_294_967_296.0;
+
+/// Largest integer-bound magnitude (`2^43`): keeps `lo + u*(hi-lo)` exact
+/// to far below the half-up rounding step (`ulp(2^43) = 2^-9`).
+const MAX_INT_MAG: i64 = 1 << 43;
+
+/// Largest integer-domain width (`< 2^32`): one decode-lattice cell per
+/// integer, so `decode(encode(p)) == p` stays bit-exact (see module docs).
+const MAX_INT_WIDTH: i64 = 1 << 32;
+
+/// Clamp-and-snap a raw unit coordinate onto the decode lattice. NaN is
+/// treated as the domain floor (optimizers never emit NaN candidates; a
+/// corrupted registry must still decode deterministically).
+#[inline]
+fn snap_unit(u: f64) -> f64 {
+    let c = if u.is_nan() { 0.0 } else { u.clamp(0.0, 1.0) };
+    (c * UNIT_GRID).round() / UNIT_GRID
+}
+
+/// One typed dimension of a [`SearchSpace`]. All bounds are inclusive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dim {
+    /// Integer lattice `lo..=hi` (chunk sizes, block sizes, thread counts).
+    Int {
+        /// Inclusive lower bound.
+        lo: i64,
+        /// Inclusive upper bound.
+        hi: i64,
+    },
+    /// Powers of two `lo..=hi` (`lo`, `hi` must themselves be powers of
+    /// two); candidates round in *exponent* space, so the search treats
+    /// 64→128 and 1→2 as equal steps.
+    Pow2 {
+        /// Inclusive lower bound (a power of two).
+        lo: u64,
+        /// Inclusive upper bound (a power of two).
+        hi: u64,
+    },
+    /// Real interval `[lo, hi]`, linear scale.
+    Float {
+        /// Inclusive lower bound.
+        lo: f64,
+        /// Inclusive upper bound.
+        hi: f64,
+    },
+    /// Real interval `[lo, hi]` searched in log space (`lo > 0`) —
+    /// tolerances, learning-rate-like factors spanning decades.
+    LogFloat {
+        /// Inclusive lower bound (strictly positive).
+        lo: f64,
+        /// Inclusive upper bound.
+        hi: f64,
+    },
+    /// A finite unordered set, decoded through equal-width unit bins:
+    /// bin `i` covers `[i/n, (i+1)/n)` (the last bin also owns `1.0`), so
+    /// the bins are exhaustive and non-overlapping.
+    Categorical(Vec<String>),
+}
+
+impl Dim {
+    /// Categorical dimension from a name slice (the names become the bin
+    /// order and the [`SearchSpace::label`] rendering).
+    pub fn categorical<S: AsRef<str>>(names: &[S]) -> Dim {
+        Dim::Categorical(names.iter().map(|s| s.as_ref().to_string()).collect())
+    }
+
+    /// Validate the dimension's bounds (see [`SearchSpace::try_new`]).
+    fn check(&self) -> Result<()> {
+        match self {
+            Dim::Int { lo, hi } => {
+                if lo > hi {
+                    bail!("int dim: lo {lo} > hi {hi}");
+                }
+                // Direct comparisons — `abs()` would overflow on i64::MIN.
+                if *lo < -MAX_INT_MAG || *hi > MAX_INT_MAG {
+                    bail!("int dim [{lo}, {hi}] exceeds the exact-decode magnitude 2^43");
+                }
+                if hi - lo >= MAX_INT_WIDTH {
+                    bail!(
+                        "int dim [{lo}, {hi}] wider than 2^32: the decode lattice \
+                         could no longer resolve adjacent integers"
+                    );
+                }
+            }
+            Dim::Pow2 { lo, hi } => {
+                if !lo.is_power_of_two() || !hi.is_power_of_two() {
+                    bail!("pow2 dim bounds must be powers of two, got [{lo}, {hi}]");
+                }
+                if lo > hi {
+                    bail!("pow2 dim: lo {lo} > hi {hi}");
+                }
+                if *hi > (1u64 << 62) {
+                    bail!("pow2 dim hi {hi} exceeds the i64 value range");
+                }
+            }
+            Dim::Float { lo, hi } => {
+                if !(lo.is_finite() && hi.is_finite() && lo <= hi) {
+                    bail!("float dim: bad bounds [{lo}, {hi}]");
+                }
+            }
+            Dim::LogFloat { lo, hi } => {
+                if !(lo.is_finite() && hi.is_finite() && *lo > 0.0 && lo <= hi) {
+                    bail!("log dim: bounds must satisfy 0 < lo <= hi, got [{lo}, {hi}]");
+                }
+            }
+            Dim::Categorical(names) => {
+                if names.is_empty() {
+                    bail!("categorical dim with no categories");
+                }
+                for n in names {
+                    let clean = !n.is_empty()
+                        && n.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_');
+                    if !clean {
+                        bail!(
+                            "category name {n:?} must be non-empty [A-Za-z0-9_-] \
+                             (it appears in descriptors and registry records)"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode one unit coordinate into this dimension's typed value
+    /// (clamp → snap to the `2^-32` lattice → per-kind quantization).
+    pub fn decode(&self, u: f64) -> Value {
+        let u = snap_unit(u);
+        match self {
+            Dim::Int { lo, hi } => {
+                let (lof, hif) = (*lo as f64, *hi as f64);
+                Value::Int(quantize_integer(lof + u * (hif - lof), lof, hif) as i64)
+            }
+            Dim::Pow2 { lo, hi } => {
+                let (el, eh) = (lo.trailing_zeros() as f64, hi.trailing_zeros() as f64);
+                let e = quantize_integer(el + u * (eh - el), el, eh) as u32;
+                Value::Int((1u64 << e) as i64)
+            }
+            Dim::Float { lo, hi } => Value::Float((lo + u * (hi - lo)).clamp(*lo, *hi)),
+            Dim::LogFloat { lo, hi } => {
+                // Endpoints map exactly: exp(ln(x)) can be off by an ulp.
+                if u == 0.0 {
+                    Value::Float(*lo)
+                } else if u == 1.0 {
+                    Value::Float(*hi)
+                } else {
+                    let (a, b) = (lo.ln(), hi.ln());
+                    Value::Float((a + u * (b - a)).exp().clamp(*lo, *hi))
+                }
+            }
+            Dim::Categorical(names) => {
+                let n = names.len();
+                Value::Cat(((u * n as f64).floor() as usize).min(n - 1))
+            }
+        }
+    }
+
+    /// Encode a value into its unit coordinate. Total and saturating: any
+    /// [`Value`] kind is read numerically ([`Value::as_f64`]), out-of-range
+    /// values clamp to the nearest bound, and degenerate (single-point)
+    /// dimensions encode to the bin centre `0.5`.
+    pub fn encode(&self, v: &Value) -> f64 {
+        let x = v.as_f64();
+        match self {
+            Dim::Int { lo, hi } => {
+                let (lof, hif) = (*lo as f64, *hi as f64);
+                if lof == hif {
+                    0.5
+                } else {
+                    (x.clamp(lof, hif) - lof) / (hif - lof)
+                }
+            }
+            Dim::Pow2 { lo, hi } => {
+                let (el, eh) = (lo.trailing_zeros() as f64, hi.trailing_zeros() as f64);
+                if el == eh {
+                    0.5
+                } else {
+                    let e = x.clamp(*lo as f64, *hi as f64).log2();
+                    ((e - el) / (eh - el)).clamp(0.0, 1.0)
+                }
+            }
+            Dim::Float { lo, hi } => {
+                if lo == hi {
+                    0.5
+                } else {
+                    (x.clamp(*lo, *hi) - lo) / (hi - lo)
+                }
+            }
+            Dim::LogFloat { lo, hi } => {
+                let (a, b) = (lo.ln(), hi.ln());
+                if a == b {
+                    0.5
+                } else {
+                    ((x.clamp(*lo, *hi).ln() - a) / (b - a)).clamp(0.0, 1.0)
+                }
+            }
+            Dim::Categorical(names) => {
+                let n = names.len();
+                let idx = x.clamp(0.0, (n - 1) as f64).round();
+                (idx + 0.5) / n as f64
+            }
+        }
+    }
+
+    /// True when the value lies inside this dimension's domain (and is of a
+    /// matching kind).
+    pub fn contains(&self, v: &Value) -> bool {
+        match (self, v) {
+            (Dim::Int { lo, hi }, Value::Int(x)) => lo <= x && x <= hi,
+            (Dim::Pow2 { lo, hi }, Value::Int(x)) => {
+                *x >= 0 && (*x as u64).is_power_of_two() && *lo <= *x as u64 && *x as u64 <= *hi
+            }
+            (Dim::Float { lo, hi }, Value::Float(x))
+            | (Dim::LogFloat { lo, hi }, Value::Float(x)) => lo <= x && x <= hi,
+            (Dim::Categorical(names), Value::Cat(i)) => *i < names.len(),
+            _ => false,
+        }
+    }
+
+    /// Descriptor fragment (see [`SearchSpace::descriptor`]).
+    fn descriptor(&self) -> String {
+        match self {
+            Dim::Int { lo, hi } => format!("int:{lo}:{hi}"),
+            Dim::Pow2 { lo, hi } => format!("pow2:{lo}:{hi}"),
+            Dim::Float { lo, hi } => format!("float:{lo}:{hi}"),
+            Dim::LogFloat { lo, hi } => format!("log:{lo}:{hi}"),
+            Dim::Categorical(names) => format!("cat:{}", names.join(",")),
+        }
+    }
+
+    /// Parse a descriptor fragment.
+    fn parse_descriptor(text: &str) -> Result<Dim> {
+        let (kind, rest) = text
+            .split_once(':')
+            .with_context(|| format!("bad dim descriptor {text:?}"))?;
+        if kind == "cat" {
+            return Ok(Dim::Categorical(rest.split(',').map(str::to_string).collect()));
+        }
+        let (lo, hi) = rest
+            .split_once(':')
+            .with_context(|| format!("dim descriptor {text:?} missing hi bound"))?;
+        Ok(match kind {
+            "int" => Dim::Int {
+                lo: lo.parse().with_context(|| format!("bad int lo {lo:?}"))?,
+                hi: hi.parse().with_context(|| format!("bad int hi {hi:?}"))?,
+            },
+            "pow2" => Dim::Pow2 {
+                lo: lo.parse().with_context(|| format!("bad pow2 lo {lo:?}"))?,
+                hi: hi.parse().with_context(|| format!("bad pow2 hi {hi:?}"))?,
+            },
+            "float" => Dim::Float {
+                lo: lo.parse().with_context(|| format!("bad float lo {lo:?}"))?,
+                hi: hi.parse().with_context(|| format!("bad float hi {hi:?}"))?,
+            },
+            "log" => Dim::LogFloat {
+                lo: lo.parse().with_context(|| format!("bad log lo {lo:?}"))?,
+                hi: hi.parse().with_context(|| format!("bad log hi {hi:?}"))?,
+            },
+            other => bail!("unknown dim kind {other:?} (int|pow2|float|log|cat)"),
+        })
+    }
+}
+
+/// A typed, mixed-kind parameter domain (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpace {
+    dims: Vec<Dim>,
+}
+
+impl SearchSpace {
+    /// A space from its dimensions. Panics on invalid bounds — use
+    /// [`try_new`](Self::try_new) for data-driven construction.
+    pub fn new(dims: Vec<Dim>) -> Self {
+        Self::try_new(dims).expect("invalid search space")
+    }
+
+    /// Fallible constructor: validates every dimension's bounds.
+    pub fn try_new(dims: Vec<Dim>) -> Result<Self> {
+        if dims.is_empty() {
+            bail!("search space needs at least one dimension");
+        }
+        for (d, dim) in dims.iter().enumerate() {
+            dim.check().with_context(|| format!("dimension {d}"))?;
+        }
+        Ok(Self { dims })
+    }
+
+    /// The unit hypercube `[0, 1]^dim` as a space of float dimensions (the
+    /// internal domain typed runtimes stage optimizers on).
+    pub fn unit(dim: usize) -> Self {
+        Self::new(vec![Dim::Float { lo: 0.0, hi: 1.0 }; dim])
+    }
+
+    /// The dimensions, in coordinate order.
+    pub fn dims(&self) -> &[Dim] {
+        &self.dims
+    }
+
+    /// Number of dimensions.
+    pub fn dim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Decode a unit-hypercube candidate into a typed point. Out-of-range
+    /// coordinates saturate (clamp to `[0, 1]` before snapping), so any
+    /// `f64` vector decodes to an in-domain point.
+    pub fn decode_unit(&self, unit: &[f64]) -> Point {
+        assert_eq!(unit.len(), self.dims.len(), "unit point/dimension mismatch");
+        Point::new(
+            self.dims
+                .iter()
+                .zip(unit)
+                .map(|(d, &u)| d.decode(u))
+                .collect(),
+        )
+    }
+
+    /// Decode a candidate from the optimizers' internal `[-1, 1]^d` box
+    /// (mapped onto the unit cube, then decoded).
+    pub fn decode_internal(&self, internal: &[f64]) -> Point {
+        assert_eq!(
+            internal.len(),
+            self.dims.len(),
+            "internal point/dimension mismatch"
+        );
+        Point::new(
+            self.dims
+                .iter()
+                .zip(internal)
+                .map(|(d, &x)| d.decode(rescale_internal(x, 0.0, 1.0)))
+                .collect(),
+        )
+    }
+
+    /// Encode a typed point into the unit hypercube (saturating; see
+    /// [`Dim::encode`]). `decode_unit(encode(p)) == p` bit-exactly for every
+    /// decoded point `p`.
+    pub fn encode(&self, p: &Point) -> Vec<f64> {
+        assert_eq!(p.len(), self.dims.len(), "point/dimension mismatch");
+        self.dims
+            .iter()
+            .zip(p.values())
+            .map(|(d, v)| d.encode(v))
+            .collect()
+    }
+
+    /// True when every coordinate lies inside its dimension's domain.
+    pub fn contains(&self, p: &Point) -> bool {
+        p.len() == self.dims.len()
+            && self.dims.iter().zip(p.values()).all(|(d, v)| d.contains(v))
+    }
+
+    /// Rebuild a typed point from its cache-key coordinates
+    /// ([`Point::key`]), saturating anything out of domain. For keys
+    /// produced by decoding this is the exact inverse; for foreign keys
+    /// (old registries) it lands on the nearest cell.
+    pub fn point_from_key(&self, key: &[f64]) -> Point {
+        assert_eq!(key.len(), self.dims.len(), "key/dimension mismatch");
+        Point::new(
+            self.dims
+                .iter()
+                .zip(key)
+                .map(|(d, &k)| d.decode(d.encode(&Value::Float(k))))
+                .collect(),
+        )
+    }
+
+    /// Whitespace-free human-readable rendering, categorical values by
+    /// name: e.g. `dynamic,32`. This is what registry records carry as the
+    /// typed decoded point.
+    pub fn label(&self, p: &Point) -> String {
+        assert_eq!(p.len(), self.dims.len(), "point/dimension mismatch");
+        self.dims
+            .iter()
+            .zip(p.values())
+            .map(|(d, v)| match (d, v) {
+                (Dim::Categorical(names), Value::Cat(i)) => {
+                    names[(*i).min(names.len() - 1)].clone()
+                }
+                (_, v) => format!("{v}"),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Whitespace-free descriptor identifying the space exactly — part of
+    /// the cost-landscape identity (cache fingerprints, registry records).
+    /// Round-trips through [`parse_descriptor`](Self::parse_descriptor).
+    pub fn descriptor(&self) -> String {
+        self.dims
+            .iter()
+            .map(Dim::descriptor)
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Parse a [`descriptor`](Self::descriptor) back into a space.
+    pub fn parse_descriptor(text: &str) -> Result<SearchSpace> {
+        let dims = text
+            .split('+')
+            .map(Dim::parse_descriptor)
+            .collect::<Result<Vec<_>>>()?;
+        Self::try_new(dims)
+    }
+
+    /// The plain numeric box `(lo, hi)` when *every* dimension is `Int` or
+    /// `Float` — the subset the untyped [`crate::tuner::Autotuning`] and
+    /// [`crate::adaptive::TunedRegion`] front-ends can represent. `None`
+    /// for spaces with `Pow2`/`LogFloat`/`Categorical` dimensions (use the
+    /// typed front-ends for those).
+    pub fn numeric_bounds(&self) -> Option<(Vec<f64>, Vec<f64>)> {
+        let mut lo = Vec::with_capacity(self.dims.len());
+        let mut hi = Vec::with_capacity(self.dims.len());
+        for d in &self.dims {
+            match d {
+                Dim::Int { lo: l, hi: h } => {
+                    lo.push(*l as f64);
+                    hi.push(*h as f64);
+                }
+                Dim::Float { lo: l, hi: h } => {
+                    lo.push(*l);
+                    hi.push(*h);
+                }
+                _ => return None,
+            }
+        }
+        Some((lo, hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn joint() -> SearchSpace {
+        SearchSpace::new(vec![
+            Dim::categorical(&["static", "dynamic", "guided"]),
+            Dim::Int { lo: 1, hi: 64 },
+        ])
+    }
+
+    #[test]
+    fn int_decode_reuses_the_quantize_contract() {
+        let d = Dim::Int { lo: 1, hi: 64 };
+        // Half-up and saturating, exactly like quantize_integer.
+        assert_eq!(d.decode(0.5), Value::Int(33)); // 1 + 0.5*63 = 32.5 → 33
+        assert_eq!(d.decode(0.0), Value::Int(1));
+        assert_eq!(d.decode(1.0), Value::Int(64));
+        assert_eq!(d.decode(-3.0), Value::Int(1)); // saturates low
+        assert_eq!(d.decode(9.0), Value::Int(64)); // saturates high
+    }
+
+    #[test]
+    fn pow2_rounds_in_exponent_space() {
+        let d = Dim::Pow2 { lo: 1, hi: 1024 }; // exponents 0..=10
+        assert_eq!(d.decode(0.0), Value::Int(1));
+        assert_eq!(d.decode(1.0), Value::Int(1024));
+        assert_eq!(d.decode(0.5), Value::Int(32)); // exponent 5
+        // 0.24 * 10 = 2.4 → exponent 2; 0.26 * 10 = 2.6 → exponent 3.
+        assert_eq!(d.decode(0.24), Value::Int(4));
+        assert_eq!(d.decode(0.26), Value::Int(8));
+        // Encoding a non-power value snaps through exponent space.
+        assert_eq!(d.decode(d.encode(&Value::Int(48))), Value::Int(64));
+        assert_eq!(d.decode(d.encode(&Value::Int(1 << 20))), Value::Int(1024));
+    }
+
+    #[test]
+    fn categorical_bins_are_exhaustive_and_non_overlapping() {
+        for n in 1..=6usize {
+            let names: Vec<String> = (0..n).map(|i| format!("c{i}")).collect();
+            let d = Dim::Categorical(names);
+            // Scan on the dyadic k/1024 grid: those coordinates are exact
+            // snap-lattice points, so the decode matches the bin formula
+            // with no boundary aliasing.
+            for k in 0..=1024u32 {
+                let u = k as f64 / 1024.0;
+                let expect = ((u * n as f64).floor() as usize).min(n - 1);
+                assert_eq!(d.decode(u), Value::Cat(expect), "n={n} u={u}");
+            }
+            // Every bin is reachable, and encode lands in its own bin.
+            for i in 0..n {
+                assert_eq!(d.decode(d.encode(&Value::Cat(i))), Value::Cat(i));
+            }
+        }
+    }
+
+    #[test]
+    fn log_float_decodes_in_log_space() {
+        let d = Dim::LogFloat { lo: 1e-3, hi: 10.0 };
+        assert_eq!(d.decode(0.0), Value::Float(1e-3));
+        assert_eq!(d.decode(1.0), Value::Float(10.0));
+        // Midpoint is the geometric mean, not the arithmetic one.
+        if let Value::Float(v) = d.decode(0.5) {
+            assert!((v - 0.1).abs() < 1e-3, "geometric midpoint, got {v}");
+        } else {
+            panic!("log dim must decode to Float");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_pin_their_value() {
+        let dims = vec![
+            Dim::Int { lo: 7, hi: 7 },
+            Dim::Float { lo: 2.5, hi: 2.5 },
+            Dim::Pow2 { lo: 16, hi: 16 },
+            Dim::categorical(&["only"]),
+        ];
+        let s = SearchSpace::new(dims);
+        for u in [0.0, 0.3, 1.0] {
+            let p = s.decode_unit(&[u; 4]);
+            assert_eq!(p[0], Value::Int(7));
+            assert_eq!(p[1], Value::Float(2.5));
+            assert_eq!(p[2], Value::Int(16));
+            assert_eq!(p[3], Value::Cat(0));
+            assert_eq!(s.decode_unit(&s.encode(&p)), p);
+        }
+    }
+
+    #[test]
+    fn decode_internal_matches_unit_decode() {
+        let s = joint();
+        let internal = [-0.2, 0.6];
+        let unit: Vec<f64> = internal.iter().map(|&x| (x + 1.0) * 0.5).collect();
+        assert_eq!(s.decode_internal(&internal), s.decode_unit(&unit));
+    }
+
+    #[test]
+    fn labels_render_categories_by_name() {
+        let s = joint();
+        let p = s.decode_unit(&[0.5, 0.5]);
+        assert_eq!(p[0], Value::Cat(1));
+        assert_eq!(s.label(&p), "dynamic,33");
+        assert!(!s.label(&p).contains(char::is_whitespace));
+    }
+
+    #[test]
+    fn key_and_point_from_key_are_inverse() {
+        let s = SearchSpace::new(vec![
+            Dim::categorical(&["a", "b", "c"]),
+            Dim::Int { lo: -5, hi: 90 },
+            Dim::Float { lo: 0.0, hi: 1.0 },
+            Dim::Pow2 { lo: 2, hi: 256 },
+        ]);
+        let p = s.decode_unit(&[0.7, 0.42, 0.31, 0.8]);
+        let key = p.key();
+        assert_eq!(s.point_from_key(&key), p);
+    }
+
+    #[test]
+    fn distinct_categories_never_share_a_key() {
+        // The collision the joint redesign exists to prevent:
+        // dynamic,chunk=32 and guided,chunk=32 are different cells.
+        let s = joint();
+        let dynamic = Point::new(vec![Value::Cat(1), Value::Int(32)]);
+        let guided = Point::new(vec![Value::Cat(2), Value::Int(32)]);
+        assert_ne!(dynamic.key(), guided.key());
+    }
+
+    #[test]
+    fn descriptor_roundtrip_is_exact() {
+        let spaces = [
+            joint(),
+            SearchSpace::new(vec![
+                Dim::Pow2 { lo: 1, hi: 4096 },
+                Dim::LogFloat { lo: 0.001, hi: 10.0 },
+                Dim::Float { lo: -1.5, hi: 2.25 },
+            ]),
+        ];
+        for s in spaces {
+            let d = s.descriptor();
+            assert!(!d.contains(char::is_whitespace), "{d}");
+            let parsed = SearchSpace::parse_descriptor(&d).unwrap();
+            assert_eq!(parsed, s, "{d}");
+            assert_eq!(parsed.descriptor(), d);
+        }
+        assert!(SearchSpace::parse_descriptor("garbage").is_err());
+        assert!(SearchSpace::parse_descriptor("int:9:1").is_err());
+        assert!(SearchSpace::parse_descriptor("pow2:3:8").is_err());
+        assert!(SearchSpace::parse_descriptor("cat:").is_err());
+    }
+
+    #[test]
+    fn numeric_bounds_only_for_box_spaces() {
+        let boxy = SearchSpace::new(vec![
+            Dim::Int { lo: 1, hi: 64 },
+            Dim::Float { lo: 0.0, hi: 1.0 },
+        ]);
+        assert_eq!(
+            boxy.numeric_bounds(),
+            Some((vec![1.0, 0.0], vec![64.0, 1.0]))
+        );
+        assert_eq!(joint().numeric_bounds(), None);
+    }
+
+    #[test]
+    fn invalid_spaces_are_rejected() {
+        assert!(SearchSpace::try_new(vec![]).is_err());
+        assert!(SearchSpace::try_new(vec![Dim::Int { lo: 5, hi: 1 }]).is_err());
+        // Width and magnitude must stay within the decode lattice's reach
+        // (i64::MIN must error, not overflow `abs()`).
+        assert!(SearchSpace::try_new(vec![Dim::Int {
+            lo: 0,
+            hi: 1 << 40
+        }])
+        .is_err());
+        assert!(SearchSpace::try_new(vec![Dim::Int {
+            lo: i64::MIN,
+            hi: 0
+        }])
+        .is_err());
+        assert!(SearchSpace::try_new(vec![Dim::Int {
+            lo: 1 << 50,
+            hi: 1 << 51
+        }])
+        .is_err());
+        assert!(SearchSpace::try_new(vec![Dim::Pow2 { lo: 3, hi: 8 }]).is_err());
+        assert!(SearchSpace::try_new(vec![Dim::LogFloat { lo: 0.0, hi: 1.0 }]).is_err());
+        assert!(SearchSpace::try_new(vec![Dim::Categorical(vec![])]).is_err());
+        assert!(
+            SearchSpace::try_new(vec![Dim::categorical(&["has space"])]).is_err(),
+            "names land in whitespace-separated registry records"
+        );
+        assert!(SearchSpace::try_new(vec![Dim::Float {
+            lo: f64::NAN,
+            hi: 1.0
+        }])
+        .is_err());
+    }
+
+    #[test]
+    fn unit_space_is_the_identity_box() {
+        let s = SearchSpace::unit(3);
+        assert_eq!(s.dim(), 3);
+        let p = s.decode_unit(&[0.25, 0.5, 1.0]);
+        assert_eq!(p.key(), vec![0.25, 0.5, 1.0]);
+    }
+}

@@ -1,0 +1,143 @@
+//! Typed decoded points — what a [`super::SearchSpace`] hands the
+//! application.
+//!
+//! A [`Point`] is one decoded candidate: one [`Value`] per dimension, in
+//! dimension order. Values are *typed* (integer, float or categorical
+//! index), unlike the bare `f64` vectors the numeric tuner writes; the
+//! categorical names live in the space's [`super::Dim::Categorical`]
+//! dimension, so rendering a point needs the space
+//! ([`super::SearchSpace::label`]).
+
+/// One decoded coordinate of a typed point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Integer-valued dimensions ([`super::Dim::Int`],
+    /// [`super::Dim::Pow2`]).
+    Int(i64),
+    /// Real-valued dimensions ([`super::Dim::Float`],
+    /// [`super::Dim::LogFloat`]).
+    Float(f64),
+    /// Categorical dimensions: the category *index* (bin order of the
+    /// dimension's name list).
+    Cat(usize),
+}
+
+impl Value {
+    /// The value as its cache-key coordinate: integers and floats as
+    /// themselves, categorical values as their index. One `f64` per
+    /// dimension is exactly what [`crate::service`] keys evaluations by.
+    #[inline]
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::Int(v) => *v as f64,
+            Value::Float(v) => *v,
+            Value::Cat(i) => *i as f64,
+        }
+    }
+
+    /// The value rounded onto the integer lattice (half away from zero,
+    /// like [`crate::tuner::quantize_integer`]); categorical values yield
+    /// their index.
+    #[inline]
+    pub fn as_i64(&self) -> i64 {
+        match self {
+            Value::Int(v) => *v,
+            Value::Float(v) => v.round() as i64,
+            Value::Cat(i) => *i as i64,
+        }
+    }
+
+    /// The categorical index. Panics for numeric values — decoding a
+    /// numeric dimension as categorical is a caller bug, not data.
+    #[inline]
+    pub fn index(&self) -> usize {
+        match self {
+            Value::Cat(i) => *i,
+            other => panic!("not a categorical value: {other:?}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Cat(i) => write!(f, "#{i}"),
+        }
+    }
+}
+
+/// A decoded candidate: one typed [`Value`] per search-space dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point {
+    values: Vec<Value>,
+}
+
+impl Point {
+    /// A point from its per-dimension values.
+    pub fn new(values: Vec<Value>) -> Self {
+        Self { values }
+    }
+
+    /// Per-dimension values, in dimension order.
+    pub fn values(&self) -> &[Value] {
+        &self.values
+    }
+
+    /// Number of dimensions.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True for the zero-dimensional point.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// The cache-key coordinates ([`Value::as_f64`] per dimension). Two
+    /// points are the same evaluation cell iff their keys are bit-equal —
+    /// the contract [`crate::service`]'s point cache relies on.
+    pub fn key(&self) -> Vec<f64> {
+        self.values.iter().map(Value::as_f64).collect()
+    }
+}
+
+impl std::ops::Index<usize> for Point {
+    type Output = Value;
+
+    fn index(&self, d: usize) -> &Value {
+        &self.values[d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_coordinates_match_value_kinds() {
+        let p = Point::new(vec![Value::Cat(2), Value::Int(32), Value::Float(0.25)]);
+        assert_eq!(p.key(), vec![2.0, 32.0, 0.25]);
+        assert_eq!(p.len(), 3);
+        assert!(!p.is_empty());
+        assert_eq!(p[1], Value::Int(32));
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Int(7).as_i64(), 7);
+        assert_eq!(Value::Float(6.5).as_i64(), 7); // half away from zero
+        assert_eq!(Value::Float(-6.5).as_i64(), -7);
+        assert_eq!(Value::Cat(3).as_i64(), 3);
+        assert_eq!(Value::Cat(3).index(), 3);
+        assert_eq!(format!("{}", Value::Cat(1)), "#1");
+        assert_eq!(format!("{}", Value::Int(4)), "4");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a categorical value")]
+    fn index_on_numeric_value_panics() {
+        let _ = Value::Int(1).index();
+    }
+}

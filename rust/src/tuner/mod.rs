@@ -29,6 +29,7 @@ pub mod point;
 pub use point::PointValue;
 
 use crate::optimizer::{Csa, CsaConfig, NumericalOptimizer, ResetLevel};
+use crate::space::{Point, SearchSpace};
 use std::time::Instant;
 
 /// Rescale one internal-domain coordinate (`[-1, 1]`) into the user box
@@ -120,6 +121,9 @@ pub struct Autotuning {
     history: Vec<Sample>,
     /// Total target iterations executed under tuning control.
     target_iterations: u64,
+    /// Typed search space behind the `*_typed` methods (`None` for the
+    /// paper's plain numeric-box constructors).
+    space: Option<SearchSpace>,
 }
 
 impl Autotuning {
@@ -170,7 +174,52 @@ impl Autotuning {
             last_written: vec![0.0; dim],
             history: Vec::new(),
             target_iterations: 0,
+            space: None,
         }
+    }
+
+    /// Typed-domain constructor: tune over a [`SearchSpace`] instead of a
+    /// numeric box. The optimizer still searches its internal `[-1, 1]^d`
+    /// domain; candidates reach the application through the `*_typed`
+    /// methods as decoded [`Point`]s (deterministic quantization — see
+    /// [`crate::space`]). The history log records each candidate's
+    /// cache-key coordinates ([`Point::key`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::optimizer::{Csa, CsaConfig};
+    /// use patsma::space::{Dim, SearchSpace};
+    /// use patsma::tuner::Autotuning;
+    ///
+    /// let space = SearchSpace::new(vec![
+    ///     Dim::categorical(&["rowwise", "blocked"]),
+    ///     Dim::Pow2 { lo: 1, hi: 256 },
+    /// ]);
+    /// let opt = Box::new(Csa::new(CsaConfig::new(2, 3, 6).with_seed(5)));
+    /// let mut at = Autotuning::with_space(space, 0, opt);
+    /// let tuned = at.entire_exec_typed(|p| {
+    ///     // kind index 1 with a mid-size block is cheapest.
+    ///     (p[0].index() as f64 - 1.0).abs() + (p[1].as_f64().log2() - 4.0).abs()
+    /// });
+    /// assert_eq!(tuned.len(), 2);
+    /// ```
+    pub fn with_space(space: SearchSpace, ignore: u32, opt: Box<dyn NumericalOptimizer>) -> Self {
+        let dim = space.dim();
+        assert_eq!(
+            opt.dimension(),
+            dim,
+            "optimizer dimension must match the search space"
+        );
+        let mut at = Self::with_optimizer(vec![0.0; dim], vec![1.0; dim], ignore, opt);
+        at.space = Some(space);
+        at
+    }
+
+    /// The typed search space, when constructed with
+    /// [`with_space`](Self::with_space).
+    pub fn space(&self) -> Option<&SearchSpace> {
+        self.space.as_ref()
     }
 
     /// Convenience: CSA with an explicit seed (experiments pin seeds).
@@ -396,6 +445,76 @@ impl Autotuning {
             self.submit_cost(cost);
         }
         out
+    }
+
+    // ------------------------------------------------------------------
+    // Typed (SearchSpace) methods — require `with_space`
+    // ------------------------------------------------------------------
+
+    /// The current internal candidate (or final solution) to decode.
+    fn typed_internal(&mut self) -> Vec<f64> {
+        self.ensure_candidate();
+        match self.phase {
+            Phase::Finished => self.final_internal.clone(),
+            Phase::Tuning => self.candidate.clone().expect("candidate in flight"),
+        }
+    }
+
+    /// Single-Iteration mode over the typed space: one target iteration per
+    /// call; `target` receives the decoded [`Point`] and returns
+    /// `(cost, value)`. The typed sibling of [`single_exec`](Self::single_exec).
+    pub fn single_exec_typed<R>(&mut self, target: impl FnOnce(&Point) -> (f64, R)) -> R {
+        let internal = self.typed_internal();
+        let p = self
+            .space
+            .as_ref()
+            .expect("single_exec_typed requires with_space")
+            .decode_internal(&internal);
+        self.last_written = p.key();
+        let (cost, out) = target(&p);
+        if self.phase == Phase::Tuning {
+            self.submit_cost(cost);
+        }
+        out
+    }
+
+    /// Entire-Execution mode over the typed space: drive the complete
+    /// optimization against `target` (cost per decoded candidate) and
+    /// return the final typed solution.
+    pub fn entire_exec_typed(&mut self, mut target: impl FnMut(&Point) -> f64) -> Point {
+        while !self.is_finished() {
+            self.ensure_candidate();
+            if self.is_finished() {
+                break;
+            }
+            let internal = self.candidate.clone().expect("candidate in flight");
+            let p = self
+                .space
+                .as_ref()
+                .expect("entire_exec_typed requires with_space")
+                .decode_internal(&internal);
+            self.last_written = p.key();
+            let cost = target(&p);
+            self.submit_cost(cost);
+        }
+        self.final_typed().expect("optimization finished")
+    }
+
+    /// Final typed solution (`None` until finished or without a space).
+    pub fn final_typed(&self) -> Option<Point> {
+        let space = self.space.as_ref()?;
+        if self.is_finished() {
+            Some(space.decode_internal(&self.final_internal))
+        } else {
+            None
+        }
+    }
+
+    /// Best measured (typed point, cost) so far (`None` without a space or
+    /// before the first measurement).
+    pub fn best_typed(&self) -> Option<(Point, f64)> {
+        let space = self.space.as_ref()?;
+        self.best().map(|(key, cost)| (space.point_from_key(&key), cost))
     }
 
     // ------------------------------------------------------------------
@@ -803,5 +922,103 @@ mod tests {
         let mut chunk = [0i32; 1];
         at.entire_exec(&mut chunk, |p| p[0] as f64);
         assert_eq!(chunk[0], 7);
+    }
+
+    mod typed {
+        use super::*;
+        use crate::optimizer::Csa;
+        use crate::optimizer::CsaConfig;
+        use crate::space::{Dim, SearchSpace, Value};
+
+        fn joint_space() -> SearchSpace {
+            SearchSpace::new(vec![
+                Dim::categorical(&["static", "dynamic", "guided"]),
+                Dim::Int { lo: 1, hi: 64 },
+            ])
+        }
+
+        fn csa(dim: usize, num_opt: usize, max_iter: usize, seed: u64) -> Box<Csa> {
+            Box::new(Csa::new(CsaConfig::new(dim, num_opt, max_iter).with_seed(seed)))
+        }
+
+        #[test]
+        fn typed_candidates_stay_in_domain_and_history_records_keys() {
+            let space = joint_space();
+            let mut at = Autotuning::with_space(space.clone(), 0, csa(2, 4, 10, 7));
+            let tuned = at.entire_exec_typed(|p| {
+                assert!(space.contains(p), "decoded candidate out of domain: {p:?}");
+                // Prefer dynamic around chunk 24.
+                let kind_pen = (p[0].index() as f64 - 1.0).abs();
+                kind_pen + (p[1].as_f64() - 24.0).powi(2) / 64.0
+            });
+            assert!(at.is_finished());
+            assert!(space.contains(&tuned));
+            assert_eq!(at.evaluations(), 40);
+            for s in at.history() {
+                assert_eq!(s.point.len(), 2);
+                let p = space.point_from_key(&s.point);
+                assert!(space.contains(&p), "history key out of domain: {:?}", s.point);
+            }
+            let (bp, _) = at.best_typed().expect("costs were measured");
+            assert!(space.contains(&bp));
+        }
+
+        #[test]
+        fn single_exec_typed_converges_then_bypasses() {
+            let space = joint_space();
+            let mut at = Autotuning::with_space(space, 0, csa(2, 3, 6, 11));
+            let mut calls = 0u32;
+            let mut last = None;
+            for _ in 0..60 {
+                let p = at.single_exec_typed(|p| {
+                    calls += 1;
+                    let cost = (p[0].index() as f64) + (p[1].as_f64() - 8.0).abs();
+                    (cost, p.clone())
+                });
+                last = Some(p);
+            }
+            assert!(at.is_finished());
+            assert_eq!(calls, 60, "one target iteration per call");
+            assert_eq!(at.evaluations(), 18);
+            // After convergence the decoded point is frozen.
+            let frozen = last.clone().unwrap();
+            let again = at.single_exec_typed(|p| (0.0, p.clone()));
+            assert_eq!(again, frozen);
+        }
+
+        #[test]
+        fn ignore_protocol_applies_to_typed_mode() {
+            let space = SearchSpace::new(vec![Dim::Int { lo: 1, hi: 32 }]);
+            let mut at = Autotuning::with_space(space, 2, csa(1, 2, 4, 13));
+            let mut calls = 0u64;
+            while !at.is_finished() {
+                at.single_exec_typed(|p| {
+                    calls += 1;
+                    ((p[0].as_f64() - 10.0).abs(), ())
+                });
+            }
+            // Every evaluation consumed ignore + 1 = 3 target iterations.
+            assert_eq!(at.target_iterations(), at.evaluations() * 3);
+            assert_eq!(calls, at.target_iterations());
+        }
+
+        #[test]
+        fn typed_final_point_is_a_valid_cell() {
+            let space = joint_space();
+            let mut at = Autotuning::with_space(space.clone(), 0, csa(2, 3, 8, 17));
+            assert!(at.final_typed().is_none(), "not finished yet");
+            let tuned = at.entire_exec_typed(|p| p[1].as_f64());
+            // The cheapest chunk is the domain floor; the final cell must
+            // decode to valid typed values.
+            assert!(space.contains(&tuned));
+            assert!(matches!(tuned[0], Value::Cat(_)));
+            assert!(matches!(tuned[1], Value::Int(_)));
+        }
+
+        #[test]
+        #[should_panic(expected = "optimizer dimension must match")]
+        fn space_dimension_mismatch_panics() {
+            let _ = Autotuning::with_space(joint_space(), 0, csa(1, 2, 2, 1));
+        }
     }
 }

@@ -150,6 +150,19 @@ impl RbGaussSeidel {
         region.run(|p| self.sweep(p[0].max(1) as usize))
     }
 
+    /// One **joint-space** adaptive red–black sweep: the schedule kind and
+    /// the chunk are tuned together by `region` (built over
+    /// [`Schedule::joint_space`]) and applied to both colours. The numerics
+    /// stay bitwise identical to the sequential oracle under every
+    /// schedule, so only the speed changes. Returns the residual like
+    /// [`sweep`](Self::sweep).
+    pub fn sweep_joint(&mut self, region: &mut crate::adaptive::TunedSpace) -> f64 {
+        region.run(|p| {
+            let sched = Schedule::from_joint(p);
+            self.sweep_schedules(sched, sched)
+        })
+    }
+
     /// Sequential reference sweep (the oracle).
     pub fn sweep_sequential(&mut self) -> f64 {
         let side = self.side();
@@ -363,6 +376,10 @@ mod tests {
         assert!(region.is_converged(), "2×4 budget spent within 20 sweeps");
         assert_eq!(region.iterations(), 20, "one real sweep per call");
     }
+
+    // The joint (schedule kind, chunk) adaptive sweep is covered end to end
+    // by rust/tests/joint.rs (the ISSUE 4 acceptance pins), which tracks
+    // sweep_joint against the sequential oracle bitwise.
 
     #[test]
     fn two_schedule_variant_matches_single() {

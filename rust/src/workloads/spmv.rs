@@ -99,13 +99,20 @@ impl Spmv {
     /// `y = A x` with the row loop under `Dynamic(chunk)`; returns a
     /// checksum of `y`.
     pub fn multiply(&mut self, chunk: usize) -> f64 {
+        self.multiply_sched(Schedule::Dynamic(chunk.max(1)))
+    }
+
+    /// `y = A x` with the row loop under an arbitrary [`Schedule`]; returns
+    /// a checksum of `y`. The numerics are schedule-invariant (each row is
+    /// written by exactly one claim), so the schedule changes only speed.
+    pub fn multiply_sched(&mut self, sched: Schedule) -> f64 {
         let rp = crate::ptr::SharedConst::new(self.row_ptr.as_ptr());
         let ci = crate::ptr::SharedConst::new(self.col_idx.as_ptr());
         let va = crate::ptr::SharedConst::new(self.vals.as_ptr());
         let xv = crate::ptr::SharedConst::new(self.x.as_ptr());
         let y = crate::ptr::SharedMut::new(self.y.as_mut_ptr());
         self.pool
-            .parallel_for_blocks(0, self.rows, Schedule::Dynamic(chunk.max(1)), |rows| {
+            .parallel_for_blocks(0, self.rows, sched, |rows| {
                 let rp = rp.at(0);
                 let ci = ci.at(0);
                 let va = va.at(0);
@@ -134,6 +141,16 @@ impl Spmv {
     /// checksum like [`multiply`](Self::multiply).
     pub fn multiply_adaptive(&mut self, region: &mut crate::adaptive::TunedRegion<i32>) -> f64 {
         region.run(|p| self.multiply(p[0].max(1) as usize))
+    }
+
+    /// **Joint-space** adaptive `y = A x`: the schedule kind *and* the
+    /// chunk are chosen together, live, by `region` (built over
+    /// [`Schedule::joint_space`]) — the skewed row lengths are exactly the
+    /// landscape where the best `(kind, chunk)` pair beats the best chunk
+    /// under a fixed kind. Returns the checksum like
+    /// [`multiply`](Self::multiply).
+    pub fn multiply_joint(&mut self, region: &mut crate::adaptive::TunedSpace) -> f64 {
+        region.run(|p| self.multiply_sched(Schedule::from_joint(p)))
     }
 
     /// Sequential oracle.
@@ -237,6 +254,26 @@ mod tests {
         assert_eq!(w.output(), fixed.output());
         assert!(region.is_converged());
     }
+
+    #[test]
+    fn multiply_sched_is_schedule_invariant() {
+        let mut a = Spmv::new(300, 150, 6, 13, pool());
+        let mut b = Spmv::new(300, 150, 6, 13, pool());
+        let reference = a.multiply(4);
+        for sched in [
+            Schedule::Static,
+            Schedule::StaticChunk(7),
+            Schedule::Dynamic(16),
+            Schedule::Guided(2),
+        ] {
+            assert_eq!(b.multiply_sched(sched), reference, "{sched}");
+            assert_eq!(a.output(), b.output(), "{sched}");
+        }
+    }
+
+    // The joint (schedule kind, chunk) adaptive path is covered end to end
+    // by rust/tests/joint.rs (the ISSUE 4 acceptance pins), which exercises
+    // multiply_joint against the same fixed-chunk reference.
 
     #[test]
     fn row_lengths_are_skewed() {

@@ -144,6 +144,33 @@ pub fn chunk_cost_model(chunk: f64, best: f64) -> f64 {
     1.0 + 0.5 * contention + 0.8 * imbalance
 }
 
+/// A synthetic *joint* runtime model over `(schedule kind, chunk)` — the
+/// typed-space analogue of [`chunk_cost_model`], shaped like the real
+/// trade-offs on an imbalance-dominated loop. `kind` indexes
+/// [`crate::sched::Schedule::KINDS`] (`static`, `static-chunk`, `dynamic`,
+/// `guided`):
+///
+/// * `static` ignores the chunk entirely and pays a flat imbalance penalty
+///   (one expensive contiguous block dominates);
+/// * `static-chunk` round-robins, so it needs roughly double the chunk to
+///   amortise its fixed stride pattern and still carries a base penalty;
+/// * `dynamic` is the sweet spot: [`chunk_cost_model`] with its optimum at
+///   `best`;
+/// * `guided` is close behind — its shrinking blocks self-balance, but the
+///   minimum-chunk parameter still matters (optimum at `1.5 * best`).
+///
+/// The global minimum is therefore `(dynamic, ≈best)`: a joint tuner must
+/// pick the kind *and* the chunk together to find it, and a chunk-only
+/// tuner pinned to `dynamic` can tie but never beat it.
+pub fn joint_cost_model(kind: usize, chunk: f64, best: f64) -> f64 {
+    match kind {
+        0 => 1.9,
+        1 => 0.25 + chunk_cost_model(chunk, (2.0 * best).max(1.0)),
+        2 => chunk_cost_model(chunk, best),
+        _ => 0.1 + chunk_cost_model(chunk, (1.5 * best).max(1.0)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +234,49 @@ mod tests {
                 b.name
             );
         }
+    }
+
+    #[test]
+    fn joint_model_global_minimum_is_dynamic_near_best() {
+        let best = 24.0;
+        // Scan every (kind, chunk) cell; the argmin must be dynamic (2)
+        // with a chunk near `best`, and every other kind's own minimum must
+        // sit strictly above dynamic's.
+        let mut argmin = (0usize, 0usize);
+        let mut min_cost = f64::INFINITY;
+        let mut per_kind_min = [f64::INFINITY; 4];
+        for kind in 0..4usize {
+            for chunk in 1..=256usize {
+                let c = joint_cost_model(kind, chunk as f64, best);
+                per_kind_min[kind] = per_kind_min[kind].min(c);
+                if c < min_cost {
+                    min_cost = c;
+                    argmin = (kind, chunk);
+                }
+            }
+        }
+        assert_eq!(argmin.0, 2, "global argmin must be dynamic");
+        assert!(
+            (argmin.1 as f64 - best).abs() <= 8.0,
+            "argmin chunk {}",
+            argmin.1
+        );
+        for kind in [0usize, 1, 3] {
+            assert!(
+                per_kind_min[kind] > per_kind_min[2] + 1e-9,
+                "kind {kind} minimum {} does not trail dynamic {}",
+                per_kind_min[kind],
+                per_kind_min[2]
+            );
+        }
+    }
+
+    #[test]
+    fn joint_model_static_ignores_chunk() {
+        assert_eq!(
+            joint_cost_model(0, 1.0, 48.0),
+            joint_cost_model(0, 500.0, 48.0)
+        );
     }
 
     #[test]

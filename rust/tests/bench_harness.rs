@@ -45,6 +45,8 @@ fn tier1_suite_is_schema_stable_across_runs() {
     assert!(ids_a.contains(&"adaptive/region-drift-cycle"), "{ids_a:?}");
     assert!(ids_a.contains(&"workload/rb-gauss-seidel"), "{ids_a:?}");
     assert!(ids_a.contains(&"workload/spmv"), "{ids_a:?}");
+    assert!(ids_a.contains(&"sched/joint-vs-chunk-only"), "{ids_a:?}");
+    assert!(ids_a.contains(&"sched/chunk-only-baseline"), "{ids_a:?}");
 
     // Identical JSON key structure (schema), values free to vary.
     let ja = a.to_json();

@@ -17,7 +17,9 @@ use patsma::optimizer::{
     Csa, CsaConfig, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm, PsoConfig,
     RandomSearch, SaConfig, SimulatedAnnealing,
 };
+use patsma::rng::Xoshiro256pp;
 use patsma::sched::{Schedule, ThreadPool};
+use patsma::space::{Dim, SearchSpace, Value};
 use patsma::testkit::{forall, Draw};
 use patsma::tuner::Autotuning;
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -202,6 +204,179 @@ fn prop_same_seed_same_trajectory() {
             Ok(())
         },
     );
+}
+
+/// One random dimension of any kind, with domains kept inside the range
+/// where the decode lattice's bit-exactness argument holds (offset-to-width
+/// ratio far below `2^19` — see `space` module docs).
+fn random_dim(r: &mut Xoshiro256pp) -> Dim {
+    match Draw::usize_in(r, 0, 4) {
+        0 => {
+            let lo = r.range_i64(-1000, 1000);
+            let hi = lo + r.range_i64(0, 2000);
+            Dim::Int { lo, hi }
+        }
+        1 => {
+            let el = Draw::usize_in(r, 0, 10) as u32;
+            let eh = el + Draw::usize_in(r, 0, 10) as u32;
+            Dim::Pow2 {
+                lo: 1u64 << el,
+                hi: 1u64 << eh,
+            }
+        }
+        2 => {
+            let lo = Draw::f64_in(r, -100.0, 100.0);
+            let hi = lo + Draw::f64_in(r, 0.1, 1000.0);
+            Dim::Float { lo, hi }
+        }
+        3 => {
+            let lo = Draw::f64_in(r, 1e-3, 10.0);
+            let hi = lo * Draw::f64_in(r, 1.5, 100.0);
+            Dim::LogFloat { lo, hi }
+        }
+        _ => {
+            let n = Draw::usize_in(r, 1, 6);
+            Dim::Categorical((0..n).map(|i| format!("c{i}")).collect())
+        }
+    }
+}
+
+/// SearchSpace invariant 1 (ISSUE 4): for every `Dim` kind,
+/// `decode(encode(x))` is idempotent (bit-exact fixed point), always
+/// in-domain, and out-of-range unit coordinates saturate. Swept under
+/// three fixed seeds.
+#[test]
+fn prop_space_decode_encode_idempotent_in_domain_saturating() {
+    for seed in [0x5AC3_0001u64, 0x5AC3_0002, 0x5AC3_0003] {
+        forall(
+            seed,
+            40,
+            |r| {
+                let dims: Vec<Dim> = (0..Draw::usize_in(r, 1, 4)).map(|_| random_dim(r)).collect();
+                // Raw coordinates deliberately overshoot [0, 1] to probe
+                // saturation.
+                let raw: Vec<f64> = (0..dims.len()).map(|_| Draw::f64_in(r, -0.8, 1.8)).collect();
+                (dims, raw)
+            },
+            |(dims, raw)| {
+                let space = SearchSpace::try_new(dims.clone())
+                    .map_err(|e| format!("generated space invalid: {e:#}"))?;
+                let p1 = space.decode_unit(raw);
+                if !space.contains(&p1) {
+                    return Err(format!("decoded point out of domain: {p1:?}"));
+                }
+                // Saturation: decoding the raw vector equals decoding its
+                // clamp onto the unit cube.
+                let clamped: Vec<f64> = raw.iter().map(|u| u.clamp(0.0, 1.0)).collect();
+                if space.decode_unit(&clamped) != p1 {
+                    return Err(format!("saturation mismatch for {raw:?}"));
+                }
+                // Encode lands in the unit cube...
+                let enc = space.encode(&p1);
+                if !enc.iter().all(|u| (0.0..=1.0).contains(u)) {
+                    return Err(format!("encode left the unit cube: {enc:?}"));
+                }
+                // ...and the round trip is a bit-exact fixed point.
+                let p2 = space.decode_unit(&enc);
+                if p2 != p1 {
+                    return Err(format!("roundtrip moved the point: {p1:?} -> {p2:?}"));
+                }
+                let p3 = space.decode_unit(&space.encode(&p2));
+                if p3 != p2 {
+                    return Err(format!("second roundtrip moved: {p2:?} -> {p3:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// SearchSpace invariant 2: encoding *raw typed values* — including
+/// out-of-domain ones — saturates onto valid cells: integers clamp to the
+/// nearest bound, pow2 values snap in exponent space, categorical indices
+/// clamp to the last bin.
+#[test]
+fn prop_space_raw_values_saturate_onto_valid_cells() {
+    for seed in [0xFACE_0001u64, 0xFACE_0002, 0xFACE_0003] {
+        forall(
+            seed,
+            40,
+            |r| {
+                let dim = random_dim(r);
+                let raw = Draw::f64_in(r, -5000.0, 5000.0);
+                (dim, raw)
+            },
+            |(dim, raw)| {
+                SearchSpace::try_new(vec![dim.clone()])
+                    .map_err(|e| format!("generated dim invalid: {e:#}"))?;
+                let v = match dim {
+                    Dim::Categorical(_) => Value::Cat(raw.abs() as usize),
+                    Dim::Int { .. } | Dim::Pow2 { .. } => Value::Int(*raw as i64),
+                    _ => Value::Float(*raw),
+                };
+                let u = dim.encode(&v);
+                if !(0.0..=1.0).contains(&u) {
+                    return Err(format!("encode({v:?}) = {u} outside the unit interval"));
+                }
+                let decoded = dim.decode(u);
+                if !dim.contains(&decoded) {
+                    return Err(format!("{v:?} decoded out of domain: {decoded:?}"));
+                }
+                // In-domain values of the dimension's own kind round-trip
+                // onto themselves (exactly for the discrete kinds).
+                if dim.contains(&v) {
+                    match (&v, &decoded) {
+                        (Value::Int(a), Value::Int(b)) if a != b => {
+                            return Err(format!("in-domain int {a} moved to {b}"));
+                        }
+                        (Value::Cat(a), Value::Cat(b)) if a != b => {
+                            return Err(format!("in-domain cat {a} moved to {b}"));
+                        }
+                        _ => {}
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// SearchSpace invariant 3: categorical bins partition the unit interval —
+/// every interior coordinate of bin `j` decodes to `j` (equal-width bins,
+/// exhaustive, non-overlapping), endpoints included.
+#[test]
+fn prop_categorical_bins_partition_the_unit_interval() {
+    for seed in [0xCA7_0001u64, 0xCA7_0002, 0xCA7_0003] {
+        forall(
+            seed,
+            60,
+            |r| {
+                let n = Draw::usize_in(r, 1, 8);
+                let j = Draw::usize_in(r, 0, n - 1);
+                // Interior offset keeps the probe far from bin boundaries
+                // relative to the 2^-32 decode lattice.
+                let off = Draw::f64_in(r, 0.1, 0.9);
+                (n, j, off)
+            },
+            |&(n, j, off)| {
+                let d = Dim::Categorical((0..n).map(|i| format!("k{i}")).collect());
+                let u = (j as f64 + off) / n as f64;
+                match d.decode(u) {
+                    Value::Cat(i) if i == j => {}
+                    other => return Err(format!("n={n} u={u}: got {other:?}, want Cat({j})")),
+                }
+                // Endpoints: 0 is the first bin, 1 the last; outside
+                // saturates to the same cells.
+                if d.decode(0.0) != Value::Cat(0) || d.decode(-3.0) != Value::Cat(0) {
+                    return Err("floor bin mismatch".into());
+                }
+                if d.decode(1.0) != Value::Cat(n - 1) || d.decode(7.0) != Value::Cat(n - 1) {
+                    return Err("ceiling bin mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
 }
 
 #[test]
