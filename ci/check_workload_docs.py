@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Sync check for the workload docs surface (the docs CI gate).
+
+The typed workload registry (``rust/src/workloads/mod.rs``) is the single
+authority on workload names. Three rendered surfaces must agree with it:
+
+  * ``workloads::NAMES`` (the const mirrored from ``REGISTRY``),
+  * the README's "Workload gallery" table,
+  * the ``docs/WORKLOADS.md`` gallery table and its per-workload sections.
+
+This script fails (exit 1) when any surface drifts: a registry row
+missing from a gallery, a gallery row naming an unknown workload, rows
+out of registry order, or a cookbook section missing. (Byte-exact table
+sync with ``workloads::gallery_markdown()`` is additionally pinned by a
+Rust unit test; this checker guards the docs job, which does not run the
+test suite.)
+
+Usage:
+  python ci/check_workload_docs.py [--repo-root PATH]
+  python ci/check_workload_docs.py --self-test
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+REGISTRY_SRC = "rust/src/workloads/mod.rs"
+README = "README.md"
+COOKBOOK = "docs/WORKLOADS.md"
+GALLERY_HEADING = "| workload | paper role |"
+
+
+def registry_names(src: str) -> list[str]:
+    """Workload names from the REGISTRY const, in declaration order."""
+    block = src.split("pub const REGISTRY", 1)
+    if len(block) != 2:
+        raise ValueError(f"{REGISTRY_SRC}: REGISTRY const not found")
+    return re.findall(r'name: "([a-z0-9_-]+)"', block[1].split("];", 1)[0])
+
+
+def names_const(src: str) -> list[str]:
+    """Workload names from the NAMES const."""
+    m = re.search(r"pub const NAMES[^=]*=\s*&\[(.*?)\];", src, re.S)
+    if not m:
+        raise ValueError(f"{REGISTRY_SRC}: NAMES const not found")
+    return re.findall(r'"([a-z0-9_-]+)"', m.group(1))
+
+
+def gallery_rows(markdown: str, where: str) -> list[str]:
+    """First-column names of the gallery table under GALLERY_HEADING."""
+    lines = markdown.splitlines()
+    try:
+        start = next(i for i, l in enumerate(lines) if l.startswith(GALLERY_HEADING))
+    except StopIteration:
+        raise ValueError(f"{where}: gallery table ({GALLERY_HEADING!r} ...) not found")
+    names = []
+    for line in lines[start + 2 :]:  # skip the |---| separator row
+        if not line.startswith("|"):
+            break  # blank line / prose: the table ended cleanly
+        m = re.match(r"\| `([a-z0-9_-]+)` \|", line)
+        if not m:
+            raise ValueError(f"{where}: malformed gallery row {line!r}")
+        names.append(m.group(1))
+    return names
+
+
+def check(src: str, readme: str, cookbook: str) -> list[str]:
+    """Return a list of sync failures (empty when everything agrees)."""
+    failures = []
+    try:
+        registry = registry_names(src)
+    except ValueError as e:
+        return [str(e)]
+    if not registry:
+        return [f"{REGISTRY_SRC}: REGISTRY has no rows"]
+
+    try:
+        names = names_const(src)
+        if names != registry:
+            failures.append(
+                f"{REGISTRY_SRC}: NAMES {names} != REGISTRY order {registry}"
+            )
+    except ValueError as e:
+        failures.append(str(e))
+
+    for where, text in ((README, readme), (COOKBOOK, cookbook)):
+        try:
+            rows = gallery_rows(text, where)
+        except ValueError as e:
+            failures.append(str(e))
+            continue
+        if rows != registry:
+            failures.append(
+                f"{where}: gallery rows {rows} != REGISTRY order {registry} "
+                "(regenerate with workloads::gallery_markdown())"
+            )
+
+    for name in registry:
+        if f"### `{name}`" not in cookbook:
+            failures.append(f"{COOKBOOK}: missing per-workload section '### `{name}`'")
+    return failures
+
+
+def self_test() -> int:
+    src = """
+pub const REGISTRY: &[WorkloadInfo] = &[
+    WorkloadInfo { name: "alpha", paper_role: "a", build: build_a },
+    WorkloadInfo { name: "beta-2", paper_role: "b", build: build_b },
+];
+pub const NAMES: &[&str] = &["alpha", "beta-2"];
+"""
+    table = (
+        "| workload | paper role | tuned parameters | sizes (tune · full / quick) | oracle |\n"
+        "|---|---|---|---|---|\n"
+        "| `alpha` | a | p | s | o |\n"
+        "| `beta-2` | b | p | s | o |\n"
+    )
+    cookbook = table + "\n### `alpha`\n\n### `beta-2`\n"
+    assert check(src, table, cookbook) == [], check(src, table, cookbook)
+
+    # A gallery missing a registry row must fail.
+    short = table.rsplit("| `beta-2`", 1)[0]
+    assert any("gallery rows" in f for f in check(src, short, cookbook))
+    # A malformed trailing row (no backticks / bad name) must fail, not be
+    # silently ignored as "end of table".
+    malformed = table + "| SpMV-tuned | x | p | s | o |\n"
+    assert any("malformed gallery row" in f for f in check(src, malformed, cookbook))
+    # A gallery row with an unknown workload must fail.
+    extra = table + "| `ghost` | x | p | s | o |\n"
+    assert any("gallery rows" in f for f in check(src, extra, cookbook))
+    # Out-of-order rows must fail (the gallery mirrors registry order).
+    swapped = table.replace("| `alpha` | a", "| `zz` | a").replace(
+        "| `beta-2` | b", "| `alpha` | a"
+    )
+    assert any("gallery rows" in f for f in check(src, swapped, cookbook))
+    # NAMES drifting from REGISTRY must fail.
+    drifted = src.replace('&["alpha", "beta-2"]', '&["alpha"]')
+    assert any("NAMES" in f for f in check(drifted, table, cookbook))
+    # A missing cookbook section must fail.
+    no_section = table + "\n### `alpha`\n"
+    assert any("per-workload section" in f for f in check(src, table, no_section))
+    # A file without the gallery at all must fail.
+    assert any("not found" in f for f in check(src, "no table here", cookbook))
+
+    print("check_workload_docs self-test: OK")
+    return 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--repo-root", default=".", help="repository root")
+    parser.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the built-in unit test of the sync logic and exit",
+    )
+    args = parser.parse_args()
+    if args.self_test:
+        return self_test()
+
+    def read(rel: str) -> str:
+        with open(f"{args.repo_root}/{rel}", "r", encoding="utf-8") as fh:
+            return fh.read()
+
+    failures = check(read(REGISTRY_SRC), read(README), read(COOKBOOK))
+    for failure in failures:
+        print(f"OUT OF SYNC: {failure}", file=sys.stderr)
+    if failures:
+        print(
+            f"\n{len(failures)} workload-docs sync failure(s) — update the README "
+            "gallery / docs/WORKLOADS.md from workloads::gallery_markdown()",
+            file=sys.stderr,
+        )
+        return 1
+    print("workload docs check: registry, README gallery and cookbook agree")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,7 +38,7 @@ fn main() {
     // Phase 1+2: tune inside the solve, then bypass.
     let mut sweeps = 0u64;
     while !region.is_converged() {
-        let _ = w.sweep_adaptive(&mut region);
+        let _ = region.run_workload(&mut w);
         sweeps += 1;
     }
     println!(
@@ -48,7 +48,7 @@ fn main() {
         region.evaluations()
     );
     for _ in 0..12 {
-        let _ = w.sweep_adaptive(&mut region);
+        let _ = region.run_workload(&mut w);
         sweeps += 1;
     }
     println!(
@@ -61,7 +61,7 @@ fn main() {
     let before = region.retunes();
     let mut detect_sweeps = 0u64;
     while region.retunes() == before && detect_sweeps < 1000 {
-        let _ = w.sweep_adaptive(&mut region);
+        let _ = region.run_workload(&mut w);
         detect_sweeps += 1;
     }
     println!(
@@ -73,7 +73,7 @@ fn main() {
     // Phase 4: warm re-convergence at half budget.
     let mut recover_sweeps = 0u64;
     while !region.is_converged() {
-        let _ = w.sweep_adaptive(&mut region);
+        let _ = region.run_workload(&mut w);
         recover_sweeps += 1;
     }
     println!(

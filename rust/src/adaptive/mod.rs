@@ -35,6 +35,13 @@
 //! *together with* its granularity. `patsma adaptive demo` shows the full
 //! converge → drift → recover cycle on the CLI.
 //!
+//! Registry workloads need no wiring at all: the generic adapters
+//! [`TunedRegion::run_workload`] (integer parameter vector) and
+//! [`TunedSpace::run_workload`] (typed / joint cells via
+//! [`crate::workloads::Workload::run_point`]) tune any
+//! [`crate::workloads::NAMES`] entry online — `patsma adaptive run
+//! --workload spmv --joint` on the CLI.
+//!
 //! # Examples
 //!
 //! Tune a chunk parameter online, then keep running at zero overhead:

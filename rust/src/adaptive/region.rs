@@ -24,6 +24,7 @@ use crate::optimizer::OptimizerState;
 use crate::service::OptimizerSpec;
 use crate::space::{Dim, Point, SearchSpace};
 use crate::tuner::{Autotuning, PointValue, Sample};
+use crate::workloads::Workload;
 use std::time::Instant;
 
 /// Everything needed to build (and, on drift, rebuild) a region's
@@ -86,6 +87,19 @@ impl TunedRegionConfig {
                 .map(|(l, h)| Dim::Float { lo: l, hi: h })
                 .collect(),
         ))
+    }
+
+    /// Config over a registry workload's typed domain: its
+    /// [`Workload::space`] (plain parameters), or — when `joint` — its
+    /// [`Workload::joint_space`], the `(schedule kind, chunk, …)` surface.
+    /// Build with [`build_typed`](Self::build_typed) and drive with
+    /// [`TunedSpace::run_workload`].
+    pub fn for_workload(workload: &dyn Workload, joint: bool) -> Self {
+        Self::with_space(if joint {
+            workload.joint_space()
+        } else {
+            workload.space()
+        })
     }
 
     /// Typed-domain constructor: tune over any [`SearchSpace`] (integer,
@@ -367,6 +381,26 @@ impl<P: PointValue> TunedRegion<P> {
     }
 }
 
+impl TunedRegion<i32> {
+    /// Run one adaptively tuned iteration of `workload` — the generic
+    /// integer-chunk adapter over any registry [`Workload`]: the region's
+    /// point is the workload's parameter vector
+    /// ([`Workload::run_iteration`]), the iteration's wall-clock is the
+    /// cost, and the application value (residual, checksum) is returned.
+    /// Build the region over the workload's own domain
+    /// (`TunedRegionConfig::with_bounds(lo, hi)` from
+    /// [`Workload::bounds`]); for typed/joint domains use
+    /// [`TunedSpace::run_workload`] instead.
+    pub fn run_workload(&mut self, workload: &mut dyn Workload) -> f64 {
+        assert_eq!(
+            self.dim(),
+            workload.dim(),
+            "region dimension must match the workload's parameter count"
+        );
+        self.run(|p| workload.run_iteration(p))
+    }
+}
+
 /// Typed adaptive region over a mixed [`SearchSpace`] (built by
 /// [`TunedRegionConfig::build_typed`]): the same converge → bypass → warm
 /// re-tune lifecycle as [`TunedRegion`], but the application receives
@@ -415,6 +449,43 @@ impl TunedSpace {
             let out = target(p);
             (t0.elapsed().as_secs_f64(), out)
         })
+    }
+
+    /// Run one adaptively tuned iteration of `workload` at the current
+    /// decoded typed cell — the generic typed adapter over any registry
+    /// [`Workload`] (it replaced the per-workload `multiply_joint` /
+    /// `sweep_joint` entry points): the cell reaches the workload through
+    /// [`Workload::run_point`], the iteration's wall-clock is the cost, and
+    /// the application value is returned. Build the region over the
+    /// workload's [`Workload::space`] or [`Workload::joint_space`]
+    /// ([`TunedRegionConfig::for_workload`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::adaptive::TunedRegionConfig;
+    /// use patsma::workloads::{by_name_sized, SizeProfile};
+    ///
+    /// let mut w = by_name_sized("spmv", SizeProfile::Quick).unwrap();
+    /// let mut region = TunedRegionConfig::for_workload(w.as_ref(), true)
+    ///     .budget(2, 2)
+    ///     .seed(7)
+    ///     .build_typed();
+    /// while !region.is_converged() {
+    ///     region.run_workload(w.as_mut()); // one real multiply per call
+    /// }
+    /// assert!(w.joint_space().contains(region.point()));
+    /// ```
+    pub fn run_workload(&mut self, workload: &mut dyn Workload) -> f64 {
+        let dim = self.dim();
+        assert!(
+            dim == workload.dim() || dim == workload.dim() + 1,
+            "space dim {dim} fits neither the plain ({}) nor the joint ({}) surface of {}",
+            workload.dim(),
+            workload.dim() + 1,
+            workload.name()
+        );
+        self.run(|p| workload.run_point(p))
     }
 
     /// Run one application iteration with an application-defined cost:

@@ -14,10 +14,7 @@ use crate::optimizer::{drive, Csa, CsaConfig, NelderMead, NelderMeadConfig};
 use crate::sched::{Schedule, ThreadPool};
 use crate::service::{OptimizerSpec, SessionSpec, TuningService};
 use crate::stats::Summary;
-use crate::workloads::{
-    conv2d::Conv2d, fdm3d::Fdm3d, matmul::MatMul, rb_gauss_seidel::RbGaussSeidel, rtm::Rtm,
-    spmv::Spmv, Workload,
-};
+use crate::workloads::{self, SizeProfile, Workload};
 use anyhow::{bail, Context, Result};
 use std::hint::black_box;
 use std::time::Instant;
@@ -320,25 +317,28 @@ fn service_batch_specs() -> Vec<SessionSpec> {
     specs
 }
 
-/// The fixed workload list of a suite (constructed at bench sizes, smaller
-/// than the `workloads::by_name` tuning defaults so a suite run stays under
-/// CI budgets).
-fn suite_workloads(suite: Suite, quick: bool) -> Vec<Box<dyn Workload>> {
-    let mut list: Vec<Box<dyn Workload>> = vec![
-        Box::new(RbGaussSeidel::with_size(if quick { 128 } else { 256 })),
-        Box::new(Spmv::with_size(if quick { 20_000 } else { 60_000 }, 10_000, 8)),
-    ];
-    if suite == Suite::Full {
-        list.push(Box::new(MatMul::with_size(if quick { 96 } else { 192 })));
-        list.push(Box::new(Conv2d::with_size(
-            if quick { 128 } else { 256 },
-            if quick { 128 } else { 256 },
-            5,
-        )));
-        list.push(Box::new(Fdm3d::with_size(32, 32, if quick { 32 } else { 48 })));
-        list.push(Box::new(Rtm::with_size(16, 16, 24, if quick { 8 } else { 16 })));
+/// The suite's [`SizeProfile`]: `full` preserves the pre-registry bench
+/// sizes (so `BENCH_baseline.json` stays comparable), `quick` is the CI
+/// smoke size — both smaller than the `Tune` defaults `patsma tune` uses.
+fn suite_profile(quick: bool) -> SizeProfile {
+    if quick {
+        SizeProfile::Quick
+    } else {
+        SizeProfile::Full
     }
-    list
+}
+
+/// The fixed workload list of a suite, generated from the
+/// [`workloads::REGISTRY`] (no hand-listed per-workload constructors):
+/// tier-1 keeps the registry's `tier1` entries, `full` measures every
+/// registry workload.
+fn suite_workloads(suite: Suite, quick: bool) -> Vec<Box<dyn Workload>> {
+    let profile = suite_profile(quick);
+    workloads::REGISTRY
+        .iter()
+        .filter(|info| suite == Suite::Full || info.tier1)
+        .map(|info| (info.build)(profile))
+        .collect()
 }
 
 /// Mid-domain parameter vector for a workload — a fixed, deterministic
@@ -440,43 +440,48 @@ pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
     }
 
     // 6. Joint (schedule kind, chunk) tuning vs chunk-only on the skewed
-    // SpMV: tune both configurations live (wall-clock costs, equal seed and
-    // budget), then measure one multiply under each tuned configuration.
-    // The joint entry's median sitting at or below the chunk-only baseline
-    // is the report-level demonstration that searching the kind *with* the
-    // chunk never loses to tuning the chunk under a pinned kind.
+    // SpMV, built from the registry and driven through the generic workload
+    // adapters: tune both configurations live (wall-clock costs, equal seed
+    // and budget), then measure one multiply under each tuned
+    // configuration. The joint entry's median sitting at or below the
+    // chunk-only baseline is the report-level demonstration that searching
+    // the kind *with* the chunk never loses to tuning the chunk under a
+    // pinned kind. Note: since the registry refactor these entries measure
+    // the suite-profile SpMV (60k/20k rows) over its own bounds, not the
+    // earlier dedicated 30k/10k matrix with a [1, 512] chunk cap — the two
+    // sched/* ids are info-only until they enter BENCH_baseline.json.
     {
-        let mut spmv = Spmv::with_size(if quick { 10_000 } else { 30_000 }, 8_000, 8);
-        let max_chunk = 512usize;
-        let mut joint = TunedRegionConfig::with_space(Schedule::joint_space(max_chunk))
+        let mut spmv = workloads::by_name_sized("spmv", suite_profile(quick))?;
+        let mut joint = TunedRegionConfig::for_workload(spmv.as_ref(), true)
             .budget(3, 4)
             .seed(4242)
             .build_typed();
         let mut guard = 0;
         while !joint.is_converged() && guard < 200 {
-            black_box(spmv.multiply_joint(&mut joint));
+            black_box(joint.run_workload(spmv.as_mut()));
             guard += 1;
         }
-        let joint_sched = Schedule::from_joint(joint.point());
-        let mut chunk_only = TunedRegionConfig::new(1.0, max_chunk as f64)
+        let joint_cell = joint.point().clone();
+        let (lo, hi) = spmv.bounds();
+        let mut chunk_only = TunedRegionConfig::with_bounds(lo, hi)
             .budget(3, 4)
             .seed(4242)
             .build::<i32>();
         let mut guard = 0;
         while !chunk_only.is_converged() && guard < 200 {
-            black_box(spmv.multiply_adaptive(&mut chunk_only));
+            black_box(chunk_only.run_workload(spmv.as_mut()));
             guard += 1;
         }
-        let chunk_sched = Schedule::Dynamic(chunk_only.point()[0].max(1) as usize);
+        let chunk_params: Vec<i32> = chunk_only.point().to_vec();
         let m_joint = bench("sched/joint", warmup, samples, || {
-            black_box(spmv.multiply_sched(joint_sched));
+            black_box(spmv.run_point(&joint_cell));
         });
         entries.push(BenchEntry::from_measurement(
             "sched/joint-vs-chunk-only",
             &m_joint,
         ));
         let m_chunk = bench("sched/chunk-only", warmup, samples, || {
-            black_box(spmv.multiply_sched(chunk_sched));
+            black_box(spmv.run_iteration(&chunk_params));
         });
         entries.push(BenchEntry::from_measurement(
             "sched/chunk-only-baseline",

@@ -5,16 +5,18 @@
 //! patsma experiment <id|all> [--quick]
 //! patsma tune <workload> [--optimizer csa|nm|sa|random|pso|grid]
 //!                        [--num-opt N] [--max-iter N] [--ignore N]
-//!                        [--seed N] [--mode single|entire]
+//!                        [--seed N] [--mode single|entire] [--joint]
 //! patsma verify [<workload>]       # parallel-vs-oracle checks
 //! patsma bench [--suite tier1|full] [--json PATH] [--quick]
 //! patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
 //!                    [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
-//!                    [--registry PATH] [--joint]
+//!                    [--registry PATH] [--workload NAME] [--joint]
 //! patsma service report [--registry PATH]
 //! patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
 //!                       [--force]
 //! patsma adaptive demo [--seed N]  # online tuning: converge → drift → recover
+//! patsma adaptive run --workload NAME [--joint] [--num-opt N] [--max-iter N]
+//!                     [--seed N]   # online tuning of a registry workload
 //! patsma demo                      # 30-second guided tour
 //! ```
 
@@ -48,6 +50,9 @@ pub enum Command {
         ignore: u32,
         seed: u64,
         single_mode: bool,
+        /// Tune the joint (schedule kind, chunk, ..) typed space instead of
+        /// the plain parameter box.
+        joint: bool,
     },
     /// Verify workloads against their sequential oracles.
     Verify { workload: Option<String> },
@@ -67,9 +72,12 @@ pub enum Command {
         ignore: u32,
         seed: u64,
         registry: String,
-        /// Tune the joint (schedule kind, chunk) typed space instead of the
-        /// plain chunk landscape.
+        /// Tune the joint (schedule kind, chunk, ..) typed space instead of
+        /// the plain chunk landscape.
         joint: bool,
+        /// Tune a registry workload (measured wall-clock) instead of the
+        /// synthetic landscapes.
+        workload: Option<String>,
     },
     /// Render a saved service registry.
     ServiceReport { registry: String },
@@ -82,6 +90,14 @@ pub enum Command {
     },
     /// Online adaptive-tuning walkthrough (converge → drift → recover).
     AdaptiveDemo { seed: u64 },
+    /// Online adaptive tuning of a registry workload to convergence.
+    AdaptiveRun {
+        workload: String,
+        joint: bool,
+        num_opt: usize,
+        max_iter: usize,
+        seed: u64,
+    },
     /// Guided demo.
     Demo,
     /// Help text.
@@ -129,6 +145,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 ignore: flag_val("--ignore").unwrap_or("1").parse()?,
                 seed: flag_val("--seed").unwrap_or("42").parse()?,
                 single_mode: flag_val("--mode").unwrap_or("entire") == "single",
+                joint: has_flag("--joint"),
             })
         }
         "verify" => Ok(Command::Verify {
@@ -160,6 +177,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
                     seed: flag_val("--seed").unwrap_or("42").parse()?,
                     registry,
                     joint: has_flag("--joint"),
+                    workload: flag_val("--workload").map(str::to_string),
                 }),
                 "report" => Ok(Command::ServiceReport { registry }),
                 "retune" => Ok(Command::ServiceRetune {
@@ -176,12 +194,21 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .first()
                 .filter(|a| !a.starts_with("--"))
                 .map(|s| s.as_str())
-                .context("adaptive: missing action (demo)")?;
+                .context("adaptive: missing action (demo|run)")?;
             match action {
                 "demo" => Ok(Command::AdaptiveDemo {
                     seed: flag_val("--seed").unwrap_or("42").parse()?,
                 }),
-                other => bail!("unknown adaptive action {other:?} (demo)"),
+                "run" => Ok(Command::AdaptiveRun {
+                    workload: flag_val("--workload")
+                        .map(str::to_string)
+                        .context("adaptive run: missing --workload <name>")?,
+                    joint: has_flag("--joint"),
+                    num_opt: flag_val("--num-opt").unwrap_or("4").parse()?,
+                    max_iter: flag_val("--max-iter").unwrap_or("8").parse()?,
+                    seed: flag_val("--seed").unwrap_or("42").parse()?,
+                }),
+                other => bail!("unknown adaptive action {other:?} (demo|run)"),
             }
         }
         "demo" => Ok(Command::Demo),
@@ -189,18 +216,10 @@ pub fn parse(args: &[String]) -> Result<Command> {
     }
 }
 
-/// Known workload names: the shared-memory set (see
-/// [`workloads::by_name`]) plus the PJRT variant-selection workloads.
-pub const WORKLOADS: &[&str] = &[
-    "rb-gauss-seidel",
-    "fdm3d",
-    "rtm",
-    "matmul",
-    "conv2d",
-    "spmv",
-    "xla-rb",
-    "xla-wave",
-];
+/// The PJRT variant-selection workloads (constructed separately from the
+/// [`workloads::REGISTRY`] — they need a loaded engine). `patsma list`
+/// shows these after the registry's [`workloads::NAMES`].
+pub const XLA_WORKLOADS: &[&str] = &["xla-rb", "xla-wave"];
 
 fn make_workload(name: &str) -> Result<Box<dyn Workload>> {
     workloads::by_name(name)
@@ -240,7 +259,7 @@ pub fn execute(cmd: Command) -> Result<String> {
                 s.push_str(&format!("  {:4} {}\n", d.id, d.paper_ref));
             }
             s.push_str("\nworkloads:\n");
-            for w in WORKLOADS {
+            for w in workloads::NAMES.iter().chain(XLA_WORKLOADS) {
                 s.push_str(&format!("  {w}\n"));
             }
             Ok(s)
@@ -284,9 +303,24 @@ pub fn execute(cmd: Command) -> Result<String> {
             ignore,
             seed,
             single_mode,
+            joint,
         } => {
             if workload.starts_with("xla-") {
+                if joint {
+                    bail!("--joint applies to registry workloads, not {workload:?}");
+                }
                 return tune_xla(&workload, num_opt, max_iter, ignore, seed);
+            }
+            if joint {
+                return tune_joint(
+                    &workload,
+                    &optimizer,
+                    num_opt,
+                    max_iter,
+                    ignore,
+                    seed,
+                    single_mode,
+                );
             }
             let mut w = make_workload(&workload)?;
             let (lo, hi) = w.bounds();
@@ -335,6 +369,7 @@ pub fn execute(cmd: Command) -> Result<String> {
             seed,
             registry,
             joint,
+            workload,
         } => {
             // Deterministic variety: the landscape optimum cycles so the
             // batch overlaps enough to exercise the shared cache without
@@ -357,12 +392,18 @@ pub fn execute(cmd: Command) -> Result<String> {
                 };
                 let id = format!("s{i}-{}", opt.name());
                 let optimum = OPTIMA[i % OPTIMA.len()];
-                // --joint tunes the typed (schedule kind, chunk) space; the
-                // registry then carries the decoded cell (label=dynamic,48).
-                let mut spec = if joint {
-                    SessionSpec::synthetic_joint(id, optimum, seed + i as u64)
-                } else {
-                    SessionSpec::synthetic(id, optimum, seed + i as u64)
+                // --workload tunes a registry workload (measured
+                // wall-clock); --joint switches to the typed (schedule
+                // kind, chunk, ..) space. Without --workload the synthetic
+                // landscapes keep the batch deterministic. Either way the
+                // registry carries the decoded best cell (label=dynamic,48).
+                let mut spec = match (&workload, joint) {
+                    (Some(name), true) => {
+                        SessionSpec::named_joint(id, name.clone(), seed + i as u64)
+                    }
+                    (Some(name), false) => SessionSpec::named(id, name.clone(), seed + i as u64),
+                    (None, true) => SessionSpec::synthetic_joint(id, optimum, seed + i as u64),
+                    (None, false) => SessionSpec::synthetic(id, optimum, seed + i as u64),
                 }
                 .with_optimizer(opt)
                 .with_budget(num_opt, max_iter);
@@ -497,6 +538,47 @@ pub fn execute(cmd: Command) -> Result<String> {
             );
             Ok(s)
         }
+        Command::AdaptiveRun {
+            workload,
+            joint,
+            num_opt,
+            max_iter,
+            seed,
+        } => {
+            use crate::adaptive::TunedRegionConfig;
+            let mut w = workloads::by_name(&workload)?;
+            let mut region = TunedRegionConfig::for_workload(w.as_ref(), joint)
+                .budget(num_opt, max_iter)
+                .seed(seed)
+                .build_typed();
+            let mut iters = 0u64;
+            while !region.is_converged() && iters < 100_000 {
+                let _ = region.run_workload(w.as_mut());
+                iters += 1;
+            }
+            let mut s = format!(
+                "adaptive run: workload={} space={}\n converged cell = {} after {} \
+                 iterations ({} evaluations)\n",
+                workload,
+                if joint {
+                    "joint (schedule kind, chunk, ..)"
+                } else {
+                    "typed parameter box"
+                },
+                region.label(),
+                iters,
+                region.evaluations(),
+            );
+            if let Some((best, cost)) = region.best() {
+                s.push_str(&format!(
+                    " best measured: {} at {}\n",
+                    region.space().label(&best),
+                    crate::bench::fmt_time(cost)
+                ));
+            }
+            s.push_str(" (on drift: warm re-tune — see `patsma adaptive demo`)\n");
+            Ok(s)
+        }
         Command::Demo => {
             let mut s = String::from("PATSMA demo — tuning RB Gauss–Seidel's chunk:\n");
             let mut w = RbGaussSeidel::with_size(256);
@@ -521,6 +603,61 @@ pub fn execute(cmd: Command) -> Result<String> {
             Ok(s)
         }
     }
+}
+
+/// `patsma tune <workload> --joint`: tune the `(schedule kind, chunk, ..)`
+/// typed space of a registry workload through the typed `Autotuning`
+/// surface, in either execution mode.
+fn tune_joint(
+    workload: &str,
+    optimizer: &str,
+    num_opt: usize,
+    max_iter: usize,
+    ignore: u32,
+    seed: u64,
+    single_mode: bool,
+) -> Result<String> {
+    let mut w = workloads::by_name(workload)?;
+    let space = w.joint_space();
+    let opt = make_optimizer(optimizer, space.dim(), num_opt, max_iter, seed)?;
+    let mut at = Autotuning::with_space(space.clone(), ignore, opt);
+    let t0 = std::time::Instant::now();
+    if single_mode {
+        while !at.is_finished() {
+            at.single_exec_typed(|p| {
+                let t = std::time::Instant::now();
+                let _ = w.run_point(p);
+                (t.elapsed().as_secs_f64(), ())
+            });
+        }
+    } else {
+        at.entire_exec_typed(|p| {
+            let t = std::time::Instant::now();
+            let _ = w.run_point(p);
+            t.elapsed().as_secs_f64()
+        });
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let tuned = at.final_typed().expect("typed tuning finished");
+    let mut s = format!(
+        "workload={} optimizer={} mode={} space=joint\n tuned cell = {}\n evaluations = {} \
+         target iterations = {}\n tuning wall-clock = {}\n",
+        workload,
+        at.optimizer_name(),
+        if single_mode { "single" } else { "entire" },
+        space.label(&tuned),
+        at.evaluations(),
+        at.target_iterations(),
+        crate::bench::fmt_time(elapsed),
+    );
+    if let Some((bp, bc)) = at.best_typed() {
+        s.push_str(&format!(
+            " best measured: {} at {}\n",
+            space.label(&bp),
+            crate::bench::fmt_time(bc)
+        ));
+    }
+    Ok(s)
 }
 
 fn tune_xla(
@@ -571,22 +708,30 @@ USAGE:
   patsma experiment <e1..e12|all> [--quick] regenerate a paper table/figure
   patsma tune <workload> [--optimizer csa|nm|sa|random|pso|grid]
               [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
-              [--mode single|entire]
+              [--mode single|entire] [--joint]
+                                            one-off tuning; --joint searches
+                                            (schedule kind, chunk, ..) as
+                                            one typed space
   patsma verify [<workload>]                parallel vs sequential oracle
   patsma bench [--suite tier1|full] [--json PATH] [--quick]
                                             deterministic perf suite; --json
                                             emits the BENCH schema CI diffs
   patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
               [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
-              [--registry PATH] [--joint]   concurrent multi-session tuning;
-                                            --joint tunes (schedule kind,
-                                            chunk) as one typed space
+              [--registry PATH] [--workload NAME] [--joint]
+                                            concurrent multi-session tuning;
+                                            --workload tunes a registry
+                                            workload, --joint its (schedule
+                                            kind, chunk, ..) typed space
   patsma service report [--registry PATH]   render a saved registry
   patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
               [--force]                     warm-started re-tuning of drifted
                                             sessions (reduced budget)
   patsma adaptive demo [--seed N]           online tuning walkthrough:
                                             converge, drift, warm recovery
+  patsma adaptive run --workload NAME [--joint] [--num-opt N] [--max-iter N]
+              [--seed N]                    tune a registry workload online
+                                            to convergence (typed / joint)
   patsma demo                               30-second tour
 ";
 
@@ -653,6 +798,10 @@ mod tests {
                 assert_eq!(ignore, 2);
                 assert!(single_mode);
             }
+            other => panic!("{other:?}"),
+        }
+        match parse(&v(&["tune", "spmv", "--joint"])).unwrap() {
+            Command::Tune { joint, .. } => assert!(joint),
             other => panic!("{other:?}"),
         }
     }
@@ -748,6 +897,7 @@ mod tests {
             seed: 13,
             registry: registry.clone(),
             joint: false,
+            workload: None,
         })
         .unwrap();
         assert!(out.contains("4 sessions"), "{out}");
@@ -799,6 +949,57 @@ mod tests {
         );
         assert!(parse(&v(&["adaptive"])).is_err());
         assert!(parse(&v(&["adaptive", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn parse_adaptive_run_flags() {
+        assert_eq!(
+            parse(&v(&[
+                "adaptive",
+                "run",
+                "--workload",
+                "spmv",
+                "--joint",
+                "--num-opt",
+                "2",
+                "--max-iter",
+                "3",
+                "--seed",
+                "9",
+            ]))
+            .unwrap(),
+            Command::AdaptiveRun {
+                workload: "spmv".into(),
+                joint: true,
+                num_opt: 2,
+                max_iter: 3,
+                seed: 9,
+            }
+        );
+        // --workload is mandatory for adaptive run.
+        assert!(parse(&v(&["adaptive", "run"])).is_err());
+    }
+
+    #[test]
+    fn adaptive_run_converges_on_a_registry_workload() {
+        let out = execute(Command::AdaptiveRun {
+            workload: "rb-gauss-seidel".into(),
+            joint: true,
+            num_opt: 2,
+            max_iter: 2,
+            seed: 7,
+        })
+        .unwrap();
+        assert!(out.contains("converged cell = "), "{out}");
+        assert!(out.contains("joint (schedule kind"), "{out}");
+        assert!(execute(Command::AdaptiveRun {
+            workload: "nope".into(),
+            joint: false,
+            num_opt: 2,
+            max_iter: 2,
+            seed: 7,
+        })
+        .is_err());
     }
 
     #[test]
@@ -858,6 +1059,13 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        match parse(&v(&["service", "run", "--workload", "spmv", "--joint"])).unwrap() {
+            Command::ServiceRun { workload, joint, .. } => {
+                assert_eq!(workload.as_deref(), Some("spmv"));
+                assert!(joint);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -885,6 +1093,7 @@ mod tests {
             seed: 11,
             registry: registry.clone(),
             joint: true,
+            workload: None,
         })
         .unwrap();
         assert!(out.contains("synthetic-joint"), "{out}");
@@ -927,6 +1136,7 @@ mod tests {
             seed: 9,
             registry: registry.clone(),
             joint: false,
+            workload: None,
         })
         .unwrap();
         assert!(out.contains("4 sessions"), "{out}");

@@ -25,9 +25,16 @@
 //! categorical): optimizers keep searching their fixed internal box while
 //! [`space::SearchSpace`] encodes/decodes candidates with deterministic
 //! quantization — enabling joint `(schedule kind, chunk)` tuning through
-//! [`sched::Schedule::joint_space`] and [`adaptive::TunedSpace`].
+//! [`sched::Schedule::joint_space`] and [`adaptive::TunedSpace`]. The
+//! [`workloads`] module routes every application through that stack via a
+//! **typed registry**: each workload exposes `space()` / `joint_space()` /
+//! `run_point()`, and the generic adapters
+//! ([`adaptive::TunedSpace::run_workload`], named service sessions, the
+//! registry-generated bench suites) tune any `workloads::NAMES` entry
+//! with no per-workload wiring.
 //!
-//! See `docs/ARCHITECTURE.md` for the layer map and data flow.
+//! See `docs/ARCHITECTURE.md` for the layer map and data flow, and
+//! `docs/WORKLOADS.md` for the workload cookbook.
 
 pub mod adaptive;
 pub mod bench;

@@ -43,6 +43,13 @@
 //! session's result is bit-identical whether it runs alone, serially, or
 //! among concurrent sessions — `tests/service.rs` pins this.
 //!
+//! Real workloads go through the same surface: `WorkloadSpec::Named`
+//! sessions tune any [`workloads::NAMES`] entry over its typed
+//! [`Workload::space`], and `WorkloadSpec::NamedJoint` sessions tune it
+//! **jointly** over [`Workload::joint_space`] — cache keys are the decoded
+//! typed cell and the best cell's label is persisted into the registry
+//! (`patsma service run --workload spmv --joint`).
+//!
 //! Results land in a [`registry`] the CLI (`patsma service
 //! run|report|retune`) and the coordinator (experiment E12) consume.
 //!
@@ -257,11 +264,18 @@ pub enum WorkloadSpec {
         /// Inclusive chunk upper bound.
         hi: i64,
     },
-    /// A real shared-memory workload from [`workloads::by_name`]; the cost
-    /// is the measured wall-clock of one target iteration (after `ignore`
-    /// stabilisation iterations), so cached costs are the *measured* value
-    /// of the point's first run. Parameters are integer by construction.
+    /// A real shared-memory workload from [`workloads::by_name`], tuned
+    /// over its typed [`Workload::space`]; the cost is the measured
+    /// wall-clock of one target iteration (after `ignore` stabilisation
+    /// iterations), so cached costs are the *measured* value of the point's
+    /// first run. Cache keys are the decoded typed cell.
     Named(String),
+    /// A registry workload tuned **jointly** over its
+    /// [`Workload::joint_space`] — the `(schedule kind, chunk, …)` typed
+    /// surface. Cache keys are the decoded cell, so `dynamic,32` and
+    /// `guided,32` never collide, and the best cell is persisted as the
+    /// registry-v2 `label=` key.
+    NamedJoint(String),
 }
 
 impl WorkloadSpec {
@@ -284,11 +298,13 @@ impl WorkloadSpec {
                 format!("synthetic-joint/opt={optimum}/lo={lo}/hi={hi}")
             }
             Self::Named(name) => format!("named/{name}"),
+            Self::NamedJoint(name) => format!("named-joint/{name}"),
         }
     }
 
-    /// The typed search space of a joint workload; `None` for the plain
-    /// numeric-box domains.
+    /// The typed search space of a *synthetic* joint workload; `None` for
+    /// plain boxes and for named workloads (their spaces come from the
+    /// constructed [`Workload`] instance, which depends on the size).
     pub fn space(&self) -> Option<SearchSpace> {
         match self {
             Self::SyntheticJoint { lo, hi, .. } => Some(SearchSpace::new(vec![
@@ -305,6 +321,12 @@ impl WorkloadSpec {
     /// the round trip `parse_descriptor(d).descriptor() == d` holds for
     /// every descriptor this version emits.
     pub fn parse_descriptor(text: &str) -> Result<Self> {
+        if let Some(name) = text.strip_prefix("named-joint/") {
+            if name.is_empty() {
+                bail!("empty workload name in descriptor {text:?}");
+            }
+            return Ok(Self::NamedJoint(name.to_string()));
+        }
         if let Some(name) = text.strip_prefix("named/") {
             if name.is_empty() {
                 bail!("empty workload name in descriptor {text:?}");
@@ -443,6 +465,22 @@ impl SessionSpec {
         spec
     }
 
+    /// A session tuning a registry workload (a [`workloads::NAMES`] name)
+    /// over its typed [`Workload::space`], measured by wall-clock.
+    pub fn named(id: impl Into<String>, workload: impl Into<String>, seed: u64) -> Self {
+        let mut spec = Self::synthetic(id, 0.0, seed);
+        spec.workload = WorkloadSpec::Named(workload.into());
+        spec
+    }
+
+    /// A session tuning a registry workload **jointly** over its
+    /// `(schedule kind, chunk, …)` space ([`Workload::joint_space`]).
+    pub fn named_joint(id: impl Into<String>, workload: impl Into<String>, seed: u64) -> Self {
+        let mut spec = Self::synthetic(id, 0.0, seed);
+        spec.workload = WorkloadSpec::NamedJoint(workload.into());
+        spec
+    }
+
     /// Builder-style optimizer override.
     pub fn with_optimizer(mut self, opt: OptimizerSpec) -> Self {
         self.optimizer = opt;
@@ -473,7 +511,7 @@ impl SessionSpec {
     /// sessions may share entries regardless of it.
     pub fn fingerprint(&self) -> u64 {
         match &self.workload {
-            WorkloadSpec::Named(_) => fingerprint_str(&format!(
+            WorkloadSpec::Named(_) | WorkloadSpec::NamedJoint(_) => fingerprint_str(&format!(
                 "{}/ignore={}",
                 self.workload.descriptor(),
                 self.ignore
@@ -513,7 +551,7 @@ impl SessionSpec {
                 ])
                 .with_context(|| format!("session {}: joint chunk domain", self.id))?;
             }
-            WorkloadSpec::Named(name) => {
+            WorkloadSpec::Named(name) | WorkloadSpec::NamedJoint(name) => {
                 if !workloads::NAMES.contains(&name.as_str()) {
                     bail!(
                         "session {}: unknown workload {name:?}; known: {:?}",
@@ -542,8 +580,15 @@ impl SessionSpec {
 enum Target {
     /// Deterministic closed-form landscape.
     Pure(PureCost),
-    /// Stateful workload measured by wall-clock.
-    Measured(Box<dyn Workload>),
+    /// Stateful workload measured by wall-clock at decoded typed cells of
+    /// `space` (the workload's plain or joint surface).
+    Measured {
+        /// The constructed workload instance.
+        workload: Box<dyn Workload>,
+        /// The typed space cache keys decode through
+        /// ([`Workload::space`] / [`Workload::joint_space`]).
+        space: SearchSpace,
+    },
 }
 
 /// Which closed-form landscape a pure target evaluates (cheap to copy into
@@ -824,16 +869,28 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
         ),
         WorkloadSpec::Named(name) => {
             let w = workloads::by_name(name).expect("validated workload name");
-            let (lo, hi) = w.bounds();
-            let dim = w.dim();
+            let space = w.space();
+            let dim = space.dim();
             (
-                Target::Measured(w),
-                dim,
-                Domain::Box {
-                    lo,
-                    hi,
-                    kind: PointKind::Integer,
+                Target::Measured {
+                    workload: w,
+                    space: space.clone(),
                 },
+                dim,
+                Domain::Typed(space),
+            )
+        }
+        WorkloadSpec::NamedJoint(name) => {
+            let w = workloads::by_name(name).expect("validated workload name");
+            let space = w.joint_space();
+            let dim = space.dim();
+            (
+                Target::Measured {
+                    workload: w,
+                    space: space.clone(),
+                },
+                dim,
+                Domain::Typed(space),
             )
         }
     };
@@ -883,18 +940,21 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
                     })
                     .collect()
             }
-            Target::Measured(w) => points
+            Target::Measured { workload, space } => points
                 .iter()
                 .enumerate()
                 .map(|(i, point)| {
                     let (cost, hit) = cache.get_or_compute(fingerprint, point, || {
-                        let params: Vec<i32> = point.iter().map(|&v| v.round() as i32).collect();
+                        // Exact inverse for keys produced by decoding this
+                        // space — the cell the application is handed *is*
+                        // the cache key (typed, kind included).
+                        let typed = space.point_from_key(point);
                         // The ignore protocol (§2.3): run `ignore`
                         // stabilisation iterations, measure the last one.
                         let mut measured = 0.0;
                         for _ in 0..=spec.ignore {
                             let t = Instant::now();
-                            let _ = w.run_iteration(&params);
+                            let _ = workload.run_point(&typed);
                             measured = t.elapsed().as_secs_f64();
                         }
                         measured
@@ -915,7 +975,7 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
                     // Pure targets evaluate once; there is nothing to
                     // stabilise, so `ignore` adds no iterations.
                     Target::Pure(_) => 1,
-                    Target::Measured(_) => (spec.ignore as u64) + 1,
+                    Target::Measured { .. } => (spec.ignore as u64) + 1,
                 };
             }
             let cost = costs[i];
@@ -1178,6 +1238,29 @@ mod tests {
         );
         assert!(s.best_cost.is_finite());
         assert!((1.0..=128.0).contains(&s.best_point[0]));
+    }
+
+    #[test]
+    fn named_joint_descriptor_roundtrip_and_distinct_fingerprints() {
+        let spec = SessionSpec::named_joint("nj", "spmv", 1);
+        assert_eq!(spec.workload.descriptor(), "named-joint/spmv");
+        assert_eq!(
+            WorkloadSpec::parse_descriptor("named-joint/spmv").unwrap(),
+            spec.workload
+        );
+        spec.validate().unwrap();
+        // Unknown registry names are rejected up front, like plain Named.
+        let bad = SessionSpec::named_joint("bad", "nope", 1);
+        assert!(bad.validate().is_err());
+        // Joint and plain sessions over one workload never share cache
+        // entries, and the ignore protocol is part of both identities.
+        let plain = SessionSpec::named("n", "spmv", 1);
+        plain.validate().unwrap();
+        assert_ne!(spec.fingerprint(), plain.fingerprint());
+        let mut slow = spec.clone();
+        slow.ignore = 2;
+        assert_ne!(spec.fingerprint(), slow.fingerprint());
+        assert!(WorkloadSpec::parse_descriptor("named-joint/").is_err());
     }
 
     #[test]

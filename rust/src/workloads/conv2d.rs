@@ -65,31 +65,37 @@ impl Conv2d {
     /// One convolution with the row loop under `Dynamic(chunk)`; returns a
     /// checksum.
     pub fn convolve(&mut self, chunk: usize) -> f64 {
+        self.convolve_sched(Schedule::Dynamic(chunk.max(1)))
+    }
+
+    /// One convolution with the row loop under an arbitrary [`Schedule`];
+    /// returns a checksum. Each output row is written by exactly one claim,
+    /// so the numerics are schedule-invariant — only the speed changes.
+    pub fn convolve_sched(&mut self, sched: Schedule) -> f64 {
         let (oh, ow) = self.out_dims();
         let (w, k) = (self.w, self.k);
         let img = crate::ptr::SharedConst::new(self.img.as_ptr());
         let ker = crate::ptr::SharedConst::new(self.kernel.as_ptr());
         let out = crate::ptr::SharedMut::new(self.out.as_mut_ptr());
-        self.pool
-            .parallel_for_blocks(0, oh, Schedule::Dynamic(chunk.max(1)), |rows| {
-                let img = img.at(0);
-                let ker = ker.at(0);
-                for oy in rows {
-                    // SAFETY: output row oy written by exactly one claim.
-                    let orow = unsafe { std::slice::from_raw_parts_mut(out.at(oy * ow), ow) };
-                    for (ox, o) in orow.iter_mut().enumerate() {
-                        let mut acc = 0.0f32;
-                        for ky in 0..k {
-                            let irow = unsafe { img.add((oy + ky) * w + ox) };
-                            let krow = unsafe { ker.add(ky * k) };
-                            for kx in 0..k {
-                                acc += unsafe { *irow.add(kx) * *krow.add(kx) };
-                            }
+        self.pool.parallel_for_blocks(0, oh, sched, |rows| {
+            let img = img.at(0);
+            let ker = ker.at(0);
+            for oy in rows {
+                // SAFETY: output row oy written by exactly one claim.
+                let orow = unsafe { std::slice::from_raw_parts_mut(out.at(oy * ow), ow) };
+                for (ox, o) in orow.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for ky in 0..k {
+                        let irow = unsafe { img.add((oy + ky) * w + ox) };
+                        let krow = unsafe { ker.add(ky * k) };
+                        for kx in 0..k {
+                            acc += unsafe { *irow.add(kx) * *krow.add(kx) };
                         }
-                        *o = acc;
                     }
+                    *o = acc;
                 }
-            });
+            }
+        });
         self.checksum()
     }
 
@@ -139,6 +145,10 @@ impl Workload for Conv2d {
         self.convolve(params[0].max(1) as usize)
     }
 
+    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
+        self.convolve_sched(sched)
+    }
+
     fn verify(&mut self) -> Result<(), String> {
         let cp = self.convolve(3);
         let par = self.out.clone();
@@ -182,6 +192,22 @@ mod tests {
         let mut b = Conv2d::new(32, 32, 3, pool());
         assert_eq!(a.convolve(1), b.convolve(10));
         assert_eq!(a.output(), b.output());
+    }
+
+    #[test]
+    fn convolve_sched_is_schedule_invariant() {
+        let mut a = Conv2d::new(32, 32, 3, pool());
+        let mut b = Conv2d::new(32, 32, 3, pool());
+        let reference = a.convolve(4);
+        for sched in [
+            Schedule::Static,
+            Schedule::StaticChunk(3),
+            Schedule::Dynamic(8),
+            Schedule::Guided(2),
+        ] {
+            assert_eq!(b.convolve_sched(sched), reference, "{sched}");
+            assert_eq!(a.output(), b.output(), "{sched}");
+        }
     }
 
     #[test]

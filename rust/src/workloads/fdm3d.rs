@@ -330,6 +330,10 @@ impl Workload for Fdm3d {
         self.step_chunk(params[0].max(1) as usize)
     }
 
+    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
+        self.step_schedule(sched)
+    }
+
     fn verify(&mut self) -> Result<(), String> {
         self.reset_state();
         let mut seq = Fdm3d::new(self.nx, self.ny, self.nz, self.pool);

@@ -48,34 +48,39 @@ impl MatMul {
     /// One multiply with row-chunk `chunk` and column tile `j_block`.
     /// Returns a checksum of `C` (deterministic for given inputs).
     pub fn multiply(&mut self, chunk: usize, j_block: usize) -> f64 {
+        self.multiply_sched(Schedule::Dynamic(chunk.max(1)), j_block)
+    }
+
+    /// One multiply with the row loop under an arbitrary [`Schedule`] and
+    /// column tile `j_block`. Each row of `C` is written by exactly one
+    /// claim, so the numerics are schedule-invariant — only speed changes.
+    pub fn multiply_sched(&mut self, sched: Schedule, j_block: usize) -> f64 {
         let n = self.n;
-        let chunk = chunk.max(1);
         let j_block = j_block.max(1).min(n);
         let a = crate::ptr::SharedConst::new(self.a.as_ptr());
         let b = crate::ptr::SharedConst::new(self.b.as_ptr());
         let c = crate::ptr::SharedMut::new(self.c.as_mut_ptr());
-        self.pool
-            .parallel_for_blocks(0, n, Schedule::Dynamic(chunk), |rows| {
-                let a = a.at(0);
-                let b = b.at(0);
-                for i in rows {
-                    // SAFETY: row i of C is written by exactly one claim.
-                    let crow = unsafe { std::slice::from_raw_parts_mut(c.at(i * n), n) };
-                    crow.iter_mut().for_each(|v| *v = 0.0);
-                    // i-k-j ordering with j tiled: streams B rows, keeps a
-                    // C tile hot.
-                    for j0 in (0..n).step_by(j_block) {
-                        let j1 = (j0 + j_block).min(n);
-                        for k in 0..n {
-                            let aik = unsafe { *a.add(i * n + k) };
-                            let brow = unsafe { std::slice::from_raw_parts(b.add(k * n), n) };
-                            for j in j0..j1 {
-                                crow[j] += aik * brow[j];
-                            }
+        self.pool.parallel_for_blocks(0, n, sched, |rows| {
+            let a = a.at(0);
+            let b = b.at(0);
+            for i in rows {
+                // SAFETY: row i of C is written by exactly one claim.
+                let crow = unsafe { std::slice::from_raw_parts_mut(c.at(i * n), n) };
+                crow.iter_mut().for_each(|v| *v = 0.0);
+                // i-k-j ordering with j tiled: streams B rows, keeps a
+                // C tile hot.
+                for j0 in (0..n).step_by(j_block) {
+                    let j1 = (j0 + j_block).min(n);
+                    for k in 0..n {
+                        let aik = unsafe { *a.add(i * n + k) };
+                        let brow = unsafe { std::slice::from_raw_parts(b.add(k * n), n) };
+                        for j in j0..j1 {
+                            crow[j] += aik * brow[j];
                         }
                     }
                 }
-            });
+            }
+        });
         self.iterations += 1;
         self.checksum()
     }
@@ -122,6 +127,13 @@ impl Workload for MatMul {
 
     fn run_iteration(&mut self, params: &[i32]) -> f64 {
         self.multiply(params[0].max(1) as usize, params[1].max(1) as usize)
+    }
+
+    fn run_schedule(&mut self, sched: Schedule, rest: &[i32]) -> f64 {
+        // `rest` carries the j-tile (the joint space keeps every parameter
+        // beyond the chunk); default to a mid-size tile if absent.
+        let j_block = rest.first().copied().unwrap_or(16).max(1) as usize;
+        self.multiply_sched(sched, j_block)
     }
 
     fn verify(&mut self) -> Result<(), String> {
@@ -175,6 +187,22 @@ mod tests {
         let cb = b.multiply(9, 32);
         assert_eq!(ca, cb);
         assert_eq!(a.result(), b.result());
+    }
+
+    #[test]
+    fn multiply_sched_is_schedule_invariant() {
+        let mut a = MatMul::new(32, pool());
+        let mut b = MatMul::new(32, pool());
+        let reference = a.multiply(4, 8);
+        for sched in [
+            Schedule::Static,
+            Schedule::StaticChunk(3),
+            Schedule::Dynamic(5),
+            Schedule::Guided(2),
+        ] {
+            assert_eq!(b.multiply_sched(sched, 8), reference, "{sched}");
+            assert_eq!(a.result(), b.result(), "{sched}");
+        }
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! Shared-memory workloads — the applications PATSMA tunes.
+//! Shared-memory workloads — the applications PATSMA tunes — and the
+//! **typed workload registry** that routes every one of them through the
+//! same tuning stack.
 //!
 //! Each workload is an iterative method with one or more performance
 //! parameters (canonically the `Dynamic(chunk)` loop-scheduling chunk) and a
@@ -13,6 +15,25 @@
 //! | [`conv2d`] | 2-D convolution (related-work workload [5–7]) |
 //! | [`spmv`] | skewed CSR SpMV — the irregular workload where dynamic scheduling shines |
 //! | [`synthetic`] | closed-form cost landscapes for optimizer ground truth |
+//!
+//! Beyond the flat `&[i32]` parameter vector of the paper, every workload
+//! exposes a **typed surface**: [`Workload::space`] (its parameters as a
+//! typed [`SearchSpace`]), [`Workload::joint_space`] (the `(schedule kind,
+//! chunk, …)` space that tunes the loop-scheduling *policy* together with
+//! its granularity) and [`Workload::run_point`] (one iteration at a decoded
+//! typed [`Point`]). That one surface is what the whole stack drives:
+//! [`crate::adaptive::TunedSpace::run_workload`] tunes any registry
+//! workload online, `WorkloadSpec::Named`/`NamedJoint` sessions
+//! ([`crate::service`]) tune it offline with shared caching, and the bench
+//! suites ([`crate::bench`]) measure it — all without per-workload wiring.
+//!
+//! The [`REGISTRY`] is the single authority on workload facts: CLI names,
+//! paper roles, default sizes per [`SizeProfile`], tier-1 bench membership
+//! and constructors. The README workload gallery and the
+//! `docs/WORKLOADS.md` cookbook embed [`gallery_markdown`]'s rendering of
+//! it verbatim (pinned by a test and by `ci/check_workload_docs.py`).
+
+#![warn(missing_docs)]
 
 pub mod conv2d;
 pub mod fdm3d;
@@ -22,15 +43,44 @@ pub mod rtm;
 pub mod spmv;
 pub mod synthetic;
 
-use crate::sched::ThreadPool;
+use crate::sched::{Schedule, ThreadPool};
+use crate::space::{Dim, Point, SearchSpace, Value};
 use anyhow::{bail, Result};
 
-/// An iterative target method with tunable integer performance parameters.
+/// An iterative target method with tunable performance parameters.
 ///
 /// `run_iteration` executes **one** target iteration (one sweep, one
 /// time-step, one multiply) with the given parameter values — the unit the
 /// tuner wraps with `start`/`end`. The returned value is the application's
 /// own output (residual, checksum), never used by the tuner in runtime mode.
+///
+/// The typed surface ([`space`](Self::space) /
+/// [`joint_space`](Self::joint_space) / [`run_point`](Self::run_point))
+/// generalises the flat integer vector: candidates arrive as decoded typed
+/// [`Point`]s, including a categorical schedule kind when tuning jointly.
+/// The default implementations derive everything from
+/// [`bounds`](Self::bounds), so a minimal workload only implements the six
+/// base methods — see `docs/WORKLOADS.md` for the add-your-own walkthrough.
+///
+/// # Examples
+///
+/// Tuning a registry workload by name, jointly over `(schedule kind,
+/// chunk)`, with the generic adaptive adapter:
+///
+/// ```
+/// use patsma::adaptive::TunedRegionConfig;
+/// use patsma::workloads::{by_name_sized, SizeProfile};
+///
+/// let mut w = by_name_sized("rb-gauss-seidel", SizeProfile::Quick).unwrap();
+/// let mut region = TunedRegionConfig::for_workload(w.as_ref(), true)
+///     .budget(2, 2)
+///     .seed(7)
+///     .build_typed();
+/// while !region.is_converged() {
+///     region.run_workload(w.as_mut()); // one real sweep per call
+/// }
+/// assert!(w.joint_space().contains(region.point()));
+/// ```
 pub trait Workload {
     /// Workload name for reports.
     fn name(&self) -> &'static str;
@@ -38,7 +88,8 @@ pub trait Workload {
     /// Number of tunable parameters.
     fn dim(&self) -> usize;
 
-    /// Per-parameter inclusive bounds in the user domain.
+    /// Per-parameter inclusive bounds in the user domain. Integral for
+    /// every registry workload (the typed defaults read them as integers).
     fn bounds(&self) -> (Vec<f64>, Vec<f64>);
 
     /// Execute one target iteration with the given parameters.
@@ -51,6 +102,87 @@ pub trait Workload {
     /// Reset transient state so a fresh tuning run starts from identical
     /// conditions (grids re-initialised, iteration counters zeroed).
     fn reset_state(&mut self);
+
+    /// The typed search space of [`run_point`](Self::run_point) candidates:
+    /// one [`Dim::Int`] per parameter, derived from
+    /// [`bounds`](Self::bounds). Workloads with richer domains (powers of
+    /// two, categorical variants) override it; whatever this space decodes,
+    /// `run_point` must accept.
+    fn space(&self) -> SearchSpace {
+        let (lo, hi) = self.bounds();
+        SearchSpace::new(
+            lo.iter()
+                .zip(&hi)
+                .map(|(&l, &h)| Dim::Int {
+                    lo: l as i64,
+                    hi: h as i64,
+                })
+                .collect(),
+        )
+    }
+
+    /// The joint `(schedule kind, chunk, …)` search space: a categorical
+    /// dimension over [`Schedule::KINDS`], the first parameter re-read as
+    /// the schedule's chunk, and any remaining parameters as integer
+    /// dimensions. Tuning the kind *with* the chunk is where the real wins
+    /// are — the best pair beats the best chunk under a pinned kind.
+    fn joint_space(&self) -> SearchSpace {
+        let (lo, hi) = self.bounds();
+        let mut dims = Vec::with_capacity(lo.len() + 1);
+        dims.push(Dim::categorical(&Schedule::KINDS));
+        dims.push(Dim::Int {
+            lo: lo[0].max(1.0) as i64,
+            hi: hi[0] as i64,
+        });
+        for d in 1..lo.len() {
+            dims.push(Dim::Int {
+                lo: lo[d] as i64,
+                hi: hi[d] as i64,
+            });
+        }
+        SearchSpace::new(dims)
+    }
+
+    /// Execute one target iteration at a decoded typed point — the entry
+    /// the typed stack drives. Accepts points from **both** typed surfaces:
+    /// an all-numeric [`space`](Self::space) point runs
+    /// [`run_iteration`](Self::run_iteration) directly, while a
+    /// [`joint_space`](Self::joint_space) point (leading categorical kind)
+    /// decodes its `(kind, chunk)` head into a [`Schedule`] and runs
+    /// [`run_schedule`](Self::run_schedule) with the trailing parameters.
+    fn run_point(&mut self, point: &Point) -> f64 {
+        if matches!(point.values().first(), Some(Value::Cat(_))) {
+            assert!(point.len() >= 2, "a joint point is (kind, chunk, ..)");
+            let head = Point::new(point.values()[..2].to_vec());
+            let sched = Schedule::from_joint(&head);
+            let rest: Vec<i32> = point.values()[2..]
+                .iter()
+                .map(|v| v.as_i64() as i32)
+                .collect();
+            self.run_schedule(sched, &rest)
+        } else {
+            let params: Vec<i32> = point.values().iter().map(|v| v.as_i64() as i32).collect();
+            self.run_iteration(&params)
+        }
+    }
+
+    /// Execute one target iteration under an explicit loop [`Schedule`],
+    /// with `rest` carrying any tuned parameters beyond the `(kind, chunk)`
+    /// pair (e.g. matmul's j-tile). The default approximates the schedule
+    /// on the canonical `Dynamic(chunk)` loop (`Static` maps to one
+    /// maximal block) — a fallback for workloads without a kind-switchable
+    /// loop; every registry workload overrides it with the real thing.
+    fn run_schedule(&mut self, sched: Schedule, rest: &[i32]) -> f64 {
+        let chunk = match sched {
+            Schedule::Static => self.bounds().1.first().map(|&h| h as i32).unwrap_or(1),
+            Schedule::StaticChunk(c) | Schedule::Dynamic(c) | Schedule::Guided(c) => {
+                c.min(i32::MAX as usize) as i32
+            }
+        };
+        let mut params = vec![chunk.max(1)];
+        params.extend_from_slice(rest);
+        self.run_iteration(&params)
+    }
 }
 
 /// Shared helper: the pool every workload runs on (tests may inject their
@@ -59,21 +191,300 @@ pub fn default_pool() -> &'static ThreadPool {
     ThreadPool::global()
 }
 
-/// Names accepted by [`by_name`], in display order. (The `xla-*` variant
-/// workloads are constructed separately — they need a loaded PJRT engine.)
+/// Named problem sizes a registry workload can be constructed at — the one
+/// size authority the CLI, the service and the bench suites share (before
+/// the registry, `by_name` and the bench runner carried divergent
+/// hand-listed sizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeProfile {
+    /// Default tuning size ([`by_name`]): large enough that scheduling
+    /// effects dominate dispatch overhead — what `patsma
+    /// tune|verify|service` use.
+    Tune,
+    /// The bench `full`-suite size (the pre-registry bench defaults, kept
+    /// verbatim so `BENCH_baseline.json` stays comparable).
+    Full,
+    /// The bench `--quick` size (CI smoke, tests, doctests).
+    Quick,
+}
+
+/// One row of the workload [`REGISTRY`]: the facts every consumer — the
+/// CLI `--workload` flags, the bench suites, the README gallery and the
+/// `docs/WORKLOADS.md` cookbook sync check — reads from one place.
+pub struct WorkloadInfo {
+    /// CLI name (equals [`Workload::name`]).
+    pub name: &'static str,
+    /// Role in the source paper / related work.
+    pub paper_role: &'static str,
+    /// Human description of the tuned parameters.
+    pub tunables: &'static str,
+    /// Default sizes per [`SizeProfile`] (tune · full / quick).
+    pub sizes: &'static str,
+    /// What [`Workload::verify`] checks against.
+    pub oracle: &'static str,
+    /// Member of the tier-1 bench suite (cheap enough for every PR).
+    pub tier1: bool,
+    /// Constructor at a given size profile.
+    pub build: fn(SizeProfile) -> Box<dyn Workload>,
+}
+
+fn build_rbgs(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(rb_gauss_seidel::RbGaussSeidel::with_size(match p {
+        SizeProfile::Tune => 384,
+        SizeProfile::Full => 256,
+        SizeProfile::Quick => 128,
+    }))
+}
+
+fn build_fdm3d(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(match p {
+        SizeProfile::Tune => fdm3d::Fdm3d::with_size(56, 56, 64),
+        SizeProfile::Full => fdm3d::Fdm3d::with_size(32, 32, 48),
+        SizeProfile::Quick => fdm3d::Fdm3d::with_size(32, 32, 32),
+    })
+}
+
+fn build_rtm(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(match p {
+        SizeProfile::Tune => rtm::Rtm::with_size(32, 32, 40, 40),
+        SizeProfile::Full => rtm::Rtm::with_size(16, 16, 24, 16),
+        SizeProfile::Quick => rtm::Rtm::with_size(16, 16, 24, 8),
+    })
+}
+
+fn build_matmul(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(matmul::MatMul::with_size(match p {
+        SizeProfile::Tune => 256,
+        SizeProfile::Full => 192,
+        SizeProfile::Quick => 96,
+    }))
+}
+
+fn build_conv2d(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(match p {
+        SizeProfile::Tune => conv2d::Conv2d::with_size(512, 512, 7),
+        SizeProfile::Full => conv2d::Conv2d::with_size(256, 256, 5),
+        SizeProfile::Quick => conv2d::Conv2d::with_size(128, 128, 5),
+    })
+}
+
+fn build_spmv(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(match p {
+        SizeProfile::Tune => spmv::Spmv::with_size(200_000, 50_000, 12),
+        SizeProfile::Full => spmv::Spmv::with_size(60_000, 10_000, 8),
+        SizeProfile::Quick => spmv::Spmv::with_size(20_000, 10_000, 8),
+    })
+}
+
+/// The typed workload registry, in display order (see [`WorkloadInfo`]).
+pub const REGISTRY: &[WorkloadInfo] = &[
+    WorkloadInfo {
+        name: "rb-gauss-seidel",
+        paper_role: "§3 running example (Alg. 4–6)",
+        tunables: "per-sweep chunk over grid rows, both colours",
+        sizes: "384² · 256² / 128²",
+        oracle: "bitwise grid + residual vs sequential sweep",
+        tier1: true,
+        build: build_rbgs,
+    },
+    WorkloadInfo {
+        name: "fdm3d",
+        paper_role: "3-D acoustic wave propagation (refs [10, 11])",
+        tunables: "chunk over z-planes of the 8th-order stencil",
+        sizes: "56×56×64 · 32×32×48 / 32×32×32",
+        oracle: "bitwise wavefield + energy vs sequential step",
+        tier1: false,
+        build: build_fdm3d,
+    },
+    WorkloadInfo {
+        name: "rtm",
+        paper_role: "3-D reverse time migration (refs [12, 13])",
+        tunables: "chunk over z-planes, forward and backward passes",
+        sizes: "32×32×40, 40 steps · 16×16×24, 16 / 8 steps",
+        oracle: "bitwise migration image across chunk values",
+        tier1: false,
+        build: build_rtm,
+    },
+    WorkloadInfo {
+        name: "matmul",
+        paper_role: "blocked GEMM (related-work workloads [5–7])",
+        tunables: "(row chunk, j-tile) — a 2-D interacting pair",
+        sizes: "256² · 192² / 96²",
+        oracle: "bitwise C + checksum vs triple loop",
+        tier1: false,
+        build: build_matmul,
+    },
+    WorkloadInfo {
+        name: "conv2d",
+        paper_role: "2-D convolution (related-work workloads [5–7])",
+        tunables: "chunk over output rows (contention-dominated)",
+        sizes: "512×512 k7 · 256×256 k5 / 128×128 k5",
+        oracle: "bitwise output + checksum vs direct loop",
+        tier1: false,
+        build: build_conv2d,
+    },
+    WorkloadInfo {
+        name: "spmv",
+        paper_role: "skewed CSR SpMV — irregular, imbalance-dominated",
+        tunables: "chunk over matrix rows (Zipf row lengths)",
+        sizes: "200k×50k ×12nnz · 60k / 20k rows ×8nnz",
+        oracle: "bitwise y + checksum vs sequential multiply",
+        tier1: true,
+        build: build_spmv,
+    },
+];
+
+/// Names accepted by [`by_name`], in [`REGISTRY`] display order — mirrored
+/// from the registry and pinned by a test. (The `xla-*` variant workloads
+/// are constructed separately — they need a loaded PJRT engine.)
 pub const NAMES: &[&str] = &["rb-gauss-seidel", "fdm3d", "rtm", "matmul", "conv2d", "spmv"];
 
-/// Construct a workload at its default benchmark size by CLI name — the
-/// single registry shared by `patsma tune`, `patsma verify` and the
-/// service's named-workload sessions.
+/// Registry lookup by CLI name.
+pub fn info(name: &str) -> Option<&'static WorkloadInfo> {
+    REGISTRY.iter().find(|i| i.name == name)
+}
+
+/// Construct a workload by CLI name at the given [`SizeProfile`].
+pub fn by_name_sized(name: &str, profile: SizeProfile) -> Result<Box<dyn Workload>> {
+    match info(name) {
+        Some(i) => Ok((i.build)(profile)),
+        None => bail!("unknown workload {name:?}; known: {NAMES:?}"),
+    }
+}
+
+/// Construct a workload at its default tuning size
+/// ([`SizeProfile::Tune`]) — the single registry shared by `patsma tune`,
+/// `patsma verify` and the service's named-workload sessions.
 pub fn by_name(name: &str) -> Result<Box<dyn Workload>> {
-    Ok(match name {
-        "rb-gauss-seidel" => Box::new(rb_gauss_seidel::RbGaussSeidel::with_size(384)),
-        "fdm3d" => Box::new(fdm3d::Fdm3d::with_size(56, 56, 64)),
-        "rtm" => Box::new(rtm::Rtm::with_size(32, 32, 40, 40)),
-        "matmul" => Box::new(matmul::MatMul::with_size(256)),
-        "conv2d" => Box::new(conv2d::Conv2d::with_size(512, 512, 7)),
-        "spmv" => Box::new(spmv::Spmv::with_size(200_000, 50_000, 12)),
-        other => bail!("unknown workload {other:?}; known: {NAMES:?}"),
-    })
+    by_name_sized(name, SizeProfile::Tune)
+}
+
+/// Render the workload gallery table from the [`REGISTRY`] facts. The
+/// README and `docs/WORKLOADS.md` embed this rendering verbatim (pinned by
+/// a test here and by `ci/check_workload_docs.py` in the docs CI job).
+pub fn gallery_markdown() -> String {
+    let mut out = String::from(
+        "| workload | paper role | tuned parameters | sizes (tune · full / quick) | oracle |\n\
+         |---|---|---|---|---|\n",
+    );
+    for i in REGISTRY {
+        out.push_str(&format!(
+            "| `{}` | {} | {} | {} | {} |\n",
+            i.name, i.paper_role, i.tunables, i.sizes, i.oracle
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_mirror_the_registry() {
+        assert_eq!(NAMES.len(), REGISTRY.len());
+        for (name, row) in NAMES.iter().zip(REGISTRY) {
+            assert_eq!(*name, row.name);
+        }
+        for name in NAMES {
+            assert!(info(name).is_some());
+        }
+        assert!(info("nope").is_none());
+    }
+
+    #[test]
+    fn by_name_sized_builds_every_profile_entry() {
+        for row in REGISTRY {
+            let w = by_name_sized(row.name, SizeProfile::Quick).unwrap();
+            assert_eq!(w.name(), row.name, "constructor/name mismatch");
+        }
+        assert!(by_name_sized("nope", SizeProfile::Quick).is_err());
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn default_typed_spaces_mirror_bounds() {
+        for row in REGISTRY {
+            let w = (row.build)(SizeProfile::Quick);
+            let space = w.space();
+            assert_eq!(space.dim(), w.dim(), "{}", row.name);
+            let (lo, hi) = w.bounds();
+            let floor = space.decode_unit(&vec![0.0; space.dim()]);
+            let ceil = space.decode_unit(&vec![1.0; space.dim()]);
+            for d in 0..w.dim() {
+                assert_eq!(floor[d].as_f64(), lo[d], "{} dim {d} floor", row.name);
+                assert_eq!(ceil[d].as_f64(), hi[d], "{} dim {d} ceiling", row.name);
+            }
+            // The joint space prepends the categorical schedule kind.
+            let joint = w.joint_space();
+            assert_eq!(joint.dim(), w.dim() + 1, "{}", row.name);
+            assert!(
+                matches!(joint.dims()[0], Dim::Categorical(_)),
+                "{}: joint dim 0 must be the schedule kind",
+                row.name
+            );
+        }
+    }
+
+    #[test]
+    fn readme_and_cookbook_embed_the_generated_gallery() {
+        let gallery = gallery_markdown();
+        let readme = include_str!("../../../README.md");
+        assert!(
+            readme.contains(&gallery),
+            "README workload gallery out of sync — paste the output of \
+             workloads::gallery_markdown():\n{gallery}"
+        );
+        let cookbook = include_str!("../../../docs/WORKLOADS.md");
+        assert!(
+            cookbook.contains(&gallery),
+            "docs/WORKLOADS.md gallery out of sync — paste the output of \
+             workloads::gallery_markdown():\n{gallery}"
+        );
+    }
+
+    #[test]
+    fn default_run_point_routes_joint_points_through_run_schedule() {
+        /// Minimal workload relying on every trait default.
+        struct Probe {
+            last: Vec<i32>,
+        }
+        impl Workload for Probe {
+            fn name(&self) -> &'static str {
+                "probe"
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+            fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+                (vec![1.0, 4.0], vec![64.0, 32.0])
+            }
+            fn run_iteration(&mut self, params: &[i32]) -> f64 {
+                self.last = params.to_vec();
+                params.iter().map(|&p| p as f64).sum()
+            }
+            fn verify(&mut self) -> Result<(), String> {
+                Ok(())
+            }
+            fn reset_state(&mut self) {}
+        }
+
+        let mut w = Probe { last: vec![] };
+        // Plain typed point → run_iteration with the numeric values.
+        let plain = Point::new(vec![Value::Int(8), Value::Int(16)]);
+        assert_eq!(w.run_point(&plain), 24.0);
+        assert_eq!(w.last, vec![8, 16]);
+        // Joint point → the (kind, chunk) head becomes the schedule, the
+        // tail rides along; the default maps Dynamic(c) onto param 0.
+        let joint = Point::new(vec![Value::Cat(2), Value::Int(12), Value::Int(20)]);
+        assert_eq!(w.run_point(&joint), 32.0);
+        assert_eq!(w.last, vec![12, 20]);
+        // Static maps to one maximal block on the fallback path.
+        let stat = Point::new(vec![Value::Cat(0), Value::Int(3), Value::Int(20)]);
+        let _ = w.run_point(&stat);
+        assert_eq!(w.last, vec![64, 20]);
+        // The derived spaces match the bounds.
+        assert_eq!(w.space().dim(), 2);
+        assert_eq!(w.joint_space().dim(), 3);
+    }
 }

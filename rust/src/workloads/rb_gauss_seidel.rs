@@ -137,32 +137,6 @@ impl RbGaussSeidel {
         d1 + d2
     }
 
-    /// One **adaptively tuned** red–black sweep: the `Dynamic(chunk)`
-    /// granularity is chosen live by `region` ([`crate::adaptive`]) — tuning
-    /// during the first sweeps of the solve, zero-overhead bypass once
-    /// converged, warm re-tune if the per-sweep cost drifts. Returns the
-    /// residual like [`sweep`](Self::sweep).
-    ///
-    /// The numerics are schedule-invariant (pinned by
-    /// [`verify`](Workload::verify)), so letting the chunk change between
-    /// sweeps never changes the solution — only the speed.
-    pub fn sweep_adaptive(&mut self, region: &mut crate::adaptive::TunedRegion<i32>) -> f64 {
-        region.run(|p| self.sweep(p[0].max(1) as usize))
-    }
-
-    /// One **joint-space** adaptive red–black sweep: the schedule kind and
-    /// the chunk are tuned together by `region` (built over
-    /// [`Schedule::joint_space`]) and applied to both colours. The numerics
-    /// stay bitwise identical to the sequential oracle under every
-    /// schedule, so only the speed changes. Returns the residual like
-    /// [`sweep`](Self::sweep).
-    pub fn sweep_joint(&mut self, region: &mut crate::adaptive::TunedSpace) -> f64 {
-        region.run(|p| {
-            let sched = Schedule::from_joint(p);
-            self.sweep_schedules(sched, sched)
-        })
-    }
-
     /// Sequential reference sweep (the oracle).
     pub fn sweep_sequential(&mut self) -> f64 {
         let side = self.side();
@@ -230,6 +204,10 @@ impl Workload for RbGaussSeidel {
 
     fn run_iteration(&mut self, params: &[i32]) -> f64 {
         self.sweep(params[0].max(1) as usize)
+    }
+
+    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
+        self.sweep_schedules(sched, sched)
     }
 
     fn verify(&mut self) -> Result<(), String> {
@@ -365,7 +343,7 @@ mod tests {
         // Chunk choices change per sweep while tuning; the numerics must
         // track the sequential oracle bitwise throughout.
         for sweep in 0..20 {
-            let da = w.sweep_adaptive(&mut region);
+            let da = region.run_workload(&mut w);
             let ds = seq.sweep_sequential();
             assert!(
                 (da - ds).abs() < 1e-12,
@@ -378,8 +356,10 @@ mod tests {
     }
 
     // The joint (schedule kind, chunk) adaptive sweep is covered end to end
-    // by rust/tests/joint.rs (the ISSUE 4 acceptance pins), which tracks
-    // sweep_joint against the sequential oracle bitwise.
+    // by rust/tests/joint.rs and the registry conformance suite
+    // (rust/tests/workloads.rs), which track run_point through the generic
+    // TunedSpace::run_workload adapter against the sequential oracle
+    // bitwise.
 
     #[test]
     fn two_schedule_variant_matches_single() {

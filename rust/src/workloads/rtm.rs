@@ -21,7 +21,7 @@
 
 use super::fdm3d::Fdm3d;
 use super::Workload;
-use crate::sched::ThreadPool;
+use crate::sched::{Schedule, ThreadPool};
 
 /// RTM phase selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -132,9 +132,17 @@ impl Rtm {
     /// Execute one time-step of the current phase with the given chunk;
     /// advances phases automatically. Returns the step's field energy.
     pub fn step_chunk(&mut self, chunk: usize) -> f64 {
+        self.step_schedule(Schedule::Dynamic(chunk.max(1)))
+    }
+
+    /// Execute one time-step of the current phase with the z-plane loop
+    /// under an arbitrary [`Schedule`]; advances phases automatically.
+    /// The migration image is schedule-invariant (pinned by
+    /// [`verify`](Workload::verify)) — only the speed changes.
+    pub fn step_schedule(&mut self, sched: Schedule) -> f64 {
         match self.phase {
             Phase::Forward => {
-                let e = self.fwd.step_chunk(chunk);
+                let e = self.fwd.step_schedule(sched);
                 if self.cursor % self.snap_every == 0 {
                     self.snapshots
                         .push((self.fwd.step_index(), self.fwd.wavefield().to_vec()));
@@ -154,7 +162,7 @@ impl Rtm {
                 let t_rev = self.steps - 1 - self.cursor;
                 let trace = self.observed[t_rev].clone();
                 self.bwd.inject_receivers(&trace);
-                let e = self.bwd.step_chunk(chunk);
+                let e = self.bwd.step_schedule(sched);
                 // Imaging condition at snapshot times: the source wavefield
                 // at forward-time t_rev correlates with the receiver field
                 // holding data from the same physical time.
@@ -228,6 +236,14 @@ impl Workload for Rtm {
             self.reset_state();
         }
         self.step_chunk(params[0].max(1) as usize)
+    }
+
+    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
+        if self.is_complete() {
+            // Auto-restart so long tuning sessions always have work.
+            self.reset_state();
+        }
+        self.step_schedule(sched)
     }
 
     fn verify(&mut self) -> Result<(), String> {

@@ -134,25 +134,6 @@ impl Spmv {
         self.checksum()
     }
 
-    /// **Adaptively tuned** `y = A x`: the `Dynamic(chunk)` row-claim
-    /// granularity is chosen live by `region` ([`crate::adaptive`]) — the
-    /// skewed row lengths make this the workload where the right chunk
-    /// matters most (imbalance vs. counter contention). Returns the
-    /// checksum like [`multiply`](Self::multiply).
-    pub fn multiply_adaptive(&mut self, region: &mut crate::adaptive::TunedRegion<i32>) -> f64 {
-        region.run(|p| self.multiply(p[0].max(1) as usize))
-    }
-
-    /// **Joint-space** adaptive `y = A x`: the schedule kind *and* the
-    /// chunk are chosen together, live, by `region` (built over
-    /// [`Schedule::joint_space`]) — the skewed row lengths are exactly the
-    /// landscape where the best `(kind, chunk)` pair beats the best chunk
-    /// under a fixed kind. Returns the checksum like
-    /// [`multiply`](Self::multiply).
-    pub fn multiply_joint(&mut self, region: &mut crate::adaptive::TunedSpace) -> f64 {
-        region.run(|p| self.multiply_sched(Schedule::from_joint(p)))
-    }
-
     /// Sequential oracle.
     pub fn multiply_sequential(&mut self) -> f64 {
         for r in 0..self.rows {
@@ -190,6 +171,10 @@ impl Workload for Spmv {
 
     fn run_iteration(&mut self, params: &[i32]) -> f64 {
         self.multiply(params[0].max(1) as usize)
+    }
+
+    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
+        self.multiply_sched(sched)
     }
 
     fn verify(&mut self) -> Result<(), String> {
@@ -248,7 +233,7 @@ mod tests {
             .seed(23)
             .build::<i32>();
         for _ in 0..12 {
-            let cs = w.multiply_adaptive(&mut region);
+            let cs = region.run_workload(&mut w);
             assert_eq!(cs, reference, "checksum must be chunk-invariant");
         }
         assert_eq!(w.output(), fixed.output());
@@ -272,8 +257,9 @@ mod tests {
     }
 
     // The joint (schedule kind, chunk) adaptive path is covered end to end
-    // by rust/tests/joint.rs (the ISSUE 4 acceptance pins), which exercises
-    // multiply_joint against the same fixed-chunk reference.
+    // by rust/tests/joint.rs and the registry conformance suite
+    // (rust/tests/workloads.rs), which drive run_point through the generic
+    // TunedSpace::run_workload adapter against the same fixed references.
 
     #[test]
     fn row_lengths_are_skewed() {

@@ -217,7 +217,7 @@ fn adaptive_rbgs_solve_tracks_the_sequential_oracle() {
         .seed(29)
         .build::<i32>();
     for sweep in 0..25 {
-        let da = w.sweep_adaptive(&mut region);
+        let da = region.run_workload(&mut w);
         let ds = oracle.sweep_sequential();
         assert!(
             (da - ds).abs() < 1e-9 * ds.abs().max(1.0),

@@ -14,10 +14,12 @@
 //!    flat `static` ceiling and every run with the pinned seed converges
 //!    identically.
 //!
-//! The SpMV and RB Gauss–Seidel joint entry points are exercised end to
-//! end with real wall-clock costs (numerics pinned against fixed-schedule
-//! references; costs asserted only structurally — wall-clock ordering is
-//! machine noise, which is what the deterministic pins above are for).
+//! SpMV and RB Gauss–Seidel are exercised end to end through the generic
+//! `TunedSpace::run_workload` adapter (`Workload::run_point` under the
+//! hood) with real wall-clock costs (numerics pinned against
+//! fixed-schedule references; costs asserted only structurally —
+//! wall-clock ordering is machine noise, which is what the deterministic
+//! pins above are for).
 
 use patsma::adaptive::TunedRegionConfig;
 use patsma::sched::{Schedule, ThreadPool};
@@ -134,7 +136,7 @@ fn spmv_joint_tuning_runs_end_to_end_with_invariant_numerics() {
         .build_typed();
     let mut rounds = 0;
     while !region.is_converged() {
-        let cs = w.multiply_joint(&mut region);
+        let cs = region.run_workload(&mut w);
         assert_eq!(cs, reference, "checksum must be schedule-invariant");
         rounds += 1;
         assert!(rounds < 1000, "joint tuning never converged");
@@ -162,7 +164,7 @@ fn rbgs_joint_tuning_tracks_the_sequential_oracle() {
         .seed(7)
         .build_typed();
     for sweep in 0..24 {
-        let da = w.sweep_joint(&mut region);
+        let da = region.run_workload(&mut w);
         let ds = seq.sweep_sequential();
         assert!(
             (da - ds).abs() < 1e-12,

@@ -178,6 +178,36 @@ fn named_workload_session_runs_end_to_end() {
         0.0,
         "named workloads stay on the integer lattice"
     );
+    // Named sessions are typed now: the best cell carries a label.
+    let label = s.best_label.as_deref().expect("typed sessions are labelled");
+    assert!(!label.is_empty());
+}
+
+#[test]
+fn named_joint_session_labels_a_schedule_cell() {
+    // A registry workload tuned jointly over (schedule kind, chunk): the
+    // session's best point is a typed cell whose label leads with a
+    // schedule kind, and the registry persists it.
+    use patsma::sched::Schedule;
+    let spec = SessionSpec::named_joint("nj-rbgs", "rb-gauss-seidel", 7).with_budget(2, 2);
+    let report = TuningService::new(2).run(&[spec]).unwrap();
+    let s = &report.sessions[0];
+    assert_eq!(s.evaluations, 4);
+    assert_eq!(s.best_point.len(), 2, "(kind, chunk)");
+    assert!(s.best_cost.is_finite() && s.best_cost > 0.0);
+    let label = s.best_label.as_deref().expect("joint sessions are labelled");
+    let kind = label.split(',').next().unwrap();
+    assert!(
+        Schedule::KINDS.iter().any(|k| *k == kind),
+        "label {label:?} must lead with a schedule kind"
+    );
+    // The persisted state round-trips the joint descriptor, so a retune
+    // can rebuild the session.
+    assert_eq!(report.states[0].workload, "named-joint/rb-gauss-seidel");
+    assert_eq!(
+        WorkloadSpec::parse_descriptor(&report.states[0].workload).unwrap(),
+        WorkloadSpec::NamedJoint("rb-gauss-seidel".into())
+    );
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,155 @@
+//! Registry conformance suite (ISSUE 5 acceptance): every
+//! `workloads::NAMES` entry must be a first-class citizen of the typed
+//! tuning stack — oracle-verified, typed-space round-trippable, joint
+//! tunable through the generic adapters, reachable via
+//! `patsma service run --joint --workload <name>`, and measured by the
+//! registry-generated `patsma bench --suite full` workload set.
+
+use patsma::adaptive::TunedRegionConfig;
+use patsma::bench::{run_suite, Suite};
+use patsma::cli::{self, Command};
+use patsma::sched::Schedule;
+use patsma::space::{Dim, Value};
+use patsma::workloads::{self, by_name_sized, SizeProfile};
+
+#[test]
+fn every_registry_workload_verifies_against_its_oracle() {
+    for name in workloads::NAMES {
+        let mut w = by_name_sized(name, SizeProfile::Quick).unwrap();
+        w.verify()
+            .unwrap_or_else(|e| panic!("{name}: oracle mismatch — {e}"));
+    }
+}
+
+#[test]
+fn every_typed_space_roundtrips_decode_encode() {
+    for name in workloads::NAMES {
+        let w = by_name_sized(name, SizeProfile::Quick).unwrap();
+        for space in [w.space(), w.joint_space()] {
+            for u in [0.0, 0.31, 0.5, 0.77, 1.0] {
+                let p = space.decode_unit(&vec![u; space.dim()]);
+                assert!(space.contains(&p), "{name}: {p:?} out of domain at u={u}");
+                assert_eq!(
+                    space.decode_unit(&space.encode(&p)),
+                    p,
+                    "{name}: decode/encode round-trip broke at u={u}"
+                );
+            }
+        }
+        // The joint space prepends the schedule kind to the plain space.
+        let joint = w.joint_space();
+        assert_eq!(joint.dim(), w.dim() + 1, "{name}");
+        assert!(
+            matches!(&joint.dims()[0], Dim::Categorical(kinds)
+                if kinds.len() == Schedule::KINDS.len()),
+            "{name}: joint dim 0 must be the schedule-kind categorical"
+        );
+    }
+}
+
+#[test]
+fn short_budget_joint_tuning_returns_an_in_domain_cell() {
+    // The generic TunedSpace::run_workload adapter over every registry
+    // entry: a 2×2 budget must converge and freeze an in-domain typed cell
+    // whose label leads with a schedule kind.
+    for name in workloads::NAMES {
+        let mut w = by_name_sized(name, SizeProfile::Quick).unwrap();
+        let mut region = TunedRegionConfig::for_workload(w.as_ref(), true)
+            .budget(2, 2)
+            .seed(11)
+            .build_typed();
+        let mut guard = 0;
+        while !region.is_converged() {
+            let value = region.run_workload(w.as_mut());
+            assert!(value.is_finite(), "{name}: non-finite application value");
+            guard += 1;
+            assert!(guard < 100, "{name}: 2×2 budget never converged");
+        }
+        let cell = region.point().clone();
+        assert!(
+            w.joint_space().contains(&cell),
+            "{name}: converged cell {cell:?} out of domain"
+        );
+        assert!(matches!(cell[0], Value::Cat(_)), "{name}: {cell:?}");
+        let label = region.label();
+        assert!(
+            Schedule::KINDS.iter().any(|k| label.starts_with(k)),
+            "{name}: label {label:?}"
+        );
+    }
+}
+
+#[test]
+fn service_run_joint_covers_every_registry_name() {
+    // ISSUE 5 acceptance: every NAMES entry runs
+    // `patsma service run --joint --workload <name>` end to end, and the
+    // saved registry carries a typed schedule-cell label for it.
+    for &name in workloads::NAMES {
+        let registry = std::env::temp_dir()
+            .join(format!("patsma-conformance-{name}.txt"))
+            .to_str()
+            .unwrap()
+            .to_string();
+        let args: Vec<String> = [
+            "service",
+            "run",
+            "--joint",
+            "--workload",
+            name,
+            "--sessions",
+            "1",
+            "--concurrency",
+            "1",
+            "--optimizer",
+            "csa",
+            "--num-opt",
+            "2",
+            "--max-iter",
+            "2",
+            "--seed",
+            "5",
+            "--registry",
+            registry.as_str(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let cmd = cli::parse(&args).unwrap();
+        match &cmd {
+            Command::ServiceRun { workload, joint, .. } => {
+                assert_eq!(workload.as_deref(), Some(name));
+                assert!(*joint);
+            }
+            other => panic!("{other:?}"),
+        }
+        let out = cli::execute(cmd).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(
+            out.contains(&format!("named-joint/{name}")),
+            "{name}: {out}"
+        );
+        let path = std::path::Path::new(&registry);
+        let report = patsma::service::ServiceReport::load(path).unwrap();
+        let label = report.sessions[0]
+            .best_label
+            .as_deref()
+            .unwrap_or_else(|| panic!("{name}: joint session must be labelled"));
+        assert!(
+            Schedule::KINDS.iter().any(|k| label.starts_with(k)),
+            "{name}: label {label:?}"
+        );
+        let _ = std::fs::remove_file(&registry);
+    }
+}
+
+#[test]
+fn full_bench_suite_measures_every_registry_workload() {
+    // The bench workload set is generated from the registry — every NAMES
+    // entry must appear as a workload/<name> entry in the full suite.
+    let report = run_suite(Suite::Full, true).unwrap();
+    for name in workloads::NAMES {
+        assert!(
+            report.entry(&format!("workload/{name}")).is_some(),
+            "{name} missing from the full bench suite"
+        );
+    }
+}
