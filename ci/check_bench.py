@@ -13,9 +13,18 @@ Rules:
   * sub-microsecond medians are skipped — at that scale timer quantisation,
     not code, dominates the ratio.
 
+Beyond the regression scan, two opt-in gates:
+  * ``--require ID`` (repeatable) — the candidate must contain entry ID
+    (guards structural entries, e.g. the ``dispatch/*`` fast-path probes
+    and ``sched/steal-imbalanced``, against silently vanishing);
+  * ``--expect-speedup ID:FACTOR`` (repeatable) — the candidate median must
+    be at least FACTOR times *faster* than the baseline median (how the
+    work-stealing dispatch rewrite's >=2x win is pinned, not just
+    not-regressed).
+
 Usage:
   python ci/check_bench.py --baseline BENCH_baseline.json --candidate out.json \
-      [--max-regress 25]
+      [--max-regress 25] [--require ID ...] [--expect-speedup ID:FACTOR ...]
   python ci/check_bench.py --self-test
 """
 
@@ -65,6 +74,52 @@ def compare(baseline: dict, candidate: dict, max_regress_pct: float):
             failures.append(f"REGRESSION {line} > {limit:.2f}x allowed")
         else:
             notes.append(f"ok {line}")
+    return failures, notes
+
+
+def check_required(candidate: dict, required: list):
+    """Entries that must exist in the candidate report, no matter their
+    timing (structural presence check, exempt from the sub-µs skip)."""
+    cand = entries_by_id(candidate)
+    return [
+        f"MISSING required entry {entry_id!r} in candidate report"
+        for entry_id in required
+        if entry_id not in cand
+    ]
+
+
+def parse_speedup_spec(spec: str):
+    entry_id, sep, factor = spec.rpartition(":")
+    if not sep or not entry_id:
+        raise ValueError(f"--expect-speedup {spec!r}: want ID:FACTOR")
+    return entry_id, float(factor)
+
+
+def check_speedups(baseline: dict, candidate: dict, specs: list):
+    """Require candidate median <= baseline median / factor for each
+    ``ID:FACTOR`` spec. A missing entry on either side is a failure — an
+    expected speedup cannot be demonstrated by deleting the probe."""
+    base = entries_by_id(baseline)
+    cand = entries_by_id(candidate)
+    failures, notes = [], []
+    for spec in specs:
+        entry_id, factor = parse_speedup_spec(spec)
+        if entry_id not in base or entry_id not in cand:
+            failures.append(
+                f"SPEEDUP {entry_id!r}: entry missing from "
+                f"{'baseline' if entry_id not in base else 'candidate'}"
+            )
+            continue
+        b, c = base[entry_id]["median_secs"], cand[entry_id]["median_secs"]
+        achieved = b / c if c > 0 else float("inf")
+        line = (
+            f"{entry_id}: baseline {b:.6g}s candidate {c:.6g}s "
+            f"({achieved:.2f}x vs {factor:.2f}x wanted)"
+        )
+        if achieved >= factor:
+            notes.append(f"speedup ok {line}")
+        else:
+            failures.append(f"SPEEDUP SHORTFALL {line}")
     return failures, notes
 
 
@@ -121,6 +176,29 @@ def self_test() -> int:
     )
     assert fast == [], fast
 
+    # Required entries: present passes, absent is a named failure.
+    cand = {"schema": SCHEMA, "entries": [{"id": "dispatch/exec-empty-range", "median_secs": 5e-8}]}
+    assert check_required(cand, ["dispatch/exec-empty-range"]) == []
+    missing = check_required(cand, ["sched/steal-imbalanced"])
+    assert len(missing) == 1 and "steal" in missing[0], missing
+
+    # Expected speedups: 4x achieved passes a 2x gate, 1.5x does not, and a
+    # deleted probe is a failure rather than a silent pass.
+    b = {"schema": SCHEMA, "entries": [{"id": "d", "median_secs": 2.0e-5}]}
+    ok2x, notes2x = check_speedups(b, {"schema": SCHEMA, "entries": [{"id": "d", "median_secs": 0.5e-5}]}, ["d:2"])
+    assert ok2x == [] and any("speedup ok" in n for n in notes2x), (ok2x, notes2x)
+    short, _ = check_speedups(b, {"schema": SCHEMA, "entries": [{"id": "d", "median_secs": 1.4e-5}]}, ["d:2"])
+    assert len(short) == 1 and "SHORTFALL" in short[0], short
+    gone, _ = check_speedups(b, {"schema": SCHEMA, "entries": []}, ["d:2"])
+    assert len(gone) == 1 and "missing" in gone[0], gone
+    assert parse_speedup_spec("a:b:2.5") == ("a:b", 2.5)
+    try:
+        parse_speedup_spec("no-factor")
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("bad spec must raise")
+
     print("check_bench self-test: OK")
     return 0
 
@@ -137,6 +215,20 @@ def main() -> int:
         help="maximum allowed median regression in percent (default 25)",
     )
     parser.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="ID",
+        help="entry id that must exist in the candidate (repeatable)",
+    )
+    parser.add_argument(
+        "--expect-speedup",
+        action="append",
+        default=[],
+        metavar="ID:FACTOR",
+        help="candidate median must beat baseline by FACTOR (repeatable)",
+    )
+    parser.add_argument(
         "--self-test",
         action="store_true",
         help="run the built-in unit test of the threshold logic and exit",
@@ -151,6 +243,10 @@ def main() -> int:
     baseline = load_report(args.baseline)
     candidate = load_report(args.candidate)
     failures, notes = compare(baseline, candidate, args.max_regress)
+    failures.extend(check_required(candidate, args.require))
+    speed_failures, speed_notes = check_speedups(baseline, candidate, args.expect_speedup)
+    failures.extend(speed_failures)
+    notes.extend(speed_notes)
     for note in notes:
         print(note)
     for failure in failures:

@@ -24,7 +24,7 @@ fn main() {
     for t in [1usize, 2, pool.threads().min(8), pool.threads()] {
         let p = ThreadPool::new(t);
         rows.push(bench(&format!("empty region, {t} threads"), 50, samples, || {
-            p.parallel_for_blocks(0, t, Schedule::Static, |r| {
+            p.exec(0, t).sched(Schedule::Static).run(|r| {
                 black_box(r.len());
             });
         }));
@@ -81,7 +81,7 @@ fn main() {
         ("static", Schedule::Static),
     ] {
         rows.push(bench(label, 20, if quick { 100 } else { 500 }, || {
-            pool.parallel_for_blocks(0, work, sched, |r| {
+            pool.exec(0, work).sched(sched).run(|r| {
                 let mut acc = 0u64;
                 for i in r {
                     acc = acc.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9));

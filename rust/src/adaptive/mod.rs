@@ -25,15 +25,16 @@
 //!   strictly fewer evaluations than a cold restart (pinned by
 //!   `rust/tests/adaptive.rs`).
 //!
-//! The substrate hook is [`crate::sched::ThreadPool::parallel_for_auto`]:
-//! an auto-chunked `parallel_for` whose `Dynamic(chunk)` granularity is
-//! chosen live by a `TunedRegion` — the paper's tuned OpenMP clause as a
-//! drop-in loop primitive. Its joint sibling
-//! [`crate::sched::ThreadPool::parallel_for_auto_joint`] hands a
-//! [`TunedSpace`] the whole `(schedule kind, chunk)` pair — the typed
-//! [`crate::space::SearchSpace`] machinery tunes the categorical policy
-//! *together with* its granularity. `patsma adaptive demo` shows the full
-//! converge → drift → recover cycle on the CLI.
+//! The substrate hook is [`crate::sched::ParallelExec::auto`]
+//! (`pool.exec(a, b).auto(&mut region).run(body)`): an auto-chunked loop
+//! whose `Dynamic(chunk)` granularity is chosen live by a `TunedRegion` —
+//! the paper's tuned OpenMP clause as a drop-in loop primitive. Its joint
+//! sibling [`crate::sched::ParallelExec::auto_joint`] hands a
+//! [`TunedSpace`] the whole `(kind, chunk, steal-batch, backoff)` head —
+//! the typed [`crate::space::SearchSpace`] machinery tunes the
+//! categorical policy *together with* its granularity and the
+//! work-stealing executor's own knobs. `patsma adaptive demo` shows the
+//! full converge → drift → recover cycle on the CLI.
 //!
 //! Registry workloads need no wiring at all: the generic adapters
 //! [`TunedRegion::run_workload`] (integer parameter vector) and

@@ -408,8 +408,9 @@ impl TunedRegion<i32> {
 /// chunks, log-scaled floats. The optimizer underneath stages over the
 /// unit hypercube and never sees the types (see [`crate::space`]).
 ///
-/// The canonical use is joint `(schedule kind, chunk)` loop tuning via
-/// [`crate::sched::ThreadPool::parallel_for_auto_joint`].
+/// The canonical use is joint `(schedule kind, chunk, steal-batch,
+/// backoff)` loop tuning via
+/// [`crate::sched::ParallelExec::auto_joint`].
 ///
 /// # Examples
 ///
@@ -478,11 +479,13 @@ impl TunedSpace {
     /// ```
     pub fn run_workload(&mut self, workload: &mut dyn Workload) -> f64 {
         let dim = self.dim();
+        // Joint spaces replace the workload's first parameter (the chunk)
+        // with the scheduler head: (kind, chunk, steal-batch, backoff).
+        let joint_dim = workload.dim() - 1 + crate::sched::Schedule::JOINT_HEAD;
         assert!(
-            dim == workload.dim() || dim == workload.dim() + 1,
-            "space dim {dim} fits neither the plain ({}) nor the joint ({}) surface of {}",
+            dim == workload.dim() || dim == joint_dim,
+            "space dim {dim} fits neither the plain ({}) nor the joint ({joint_dim}) surface of {}",
             workload.dim(),
-            workload.dim() + 1,
             workload.name()
         );
         self.run(|p| workload.run_point(p))
@@ -829,7 +832,7 @@ mod tests {
             }
             assert_eq!(calls, 50, "single-iteration protocol");
             assert_eq!(region.iterations(), 50);
-            assert_eq!(region.dim(), 2);
+            assert_eq!(region.dim(), Schedule::JOINT_HEAD);
         }
 
         #[test]

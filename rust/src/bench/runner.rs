@@ -11,7 +11,7 @@
 use super::json::Json;
 use crate::adaptive::{DriftConfig, TunedRegionConfig};
 use crate::optimizer::{drive, Csa, CsaConfig, NelderMead, NelderMeadConfig};
-use crate::sched::{Schedule, ThreadPool};
+use crate::sched::{LoopMetrics, Schedule, ThreadPool};
 use crate::service::{OptimizerSpec, SessionSpec, TuningService};
 use crate::stats::Summary;
 use crate::workloads::{self, SizeProfile, Workload};
@@ -360,7 +360,7 @@ pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
 
     // 1. Fork/join dispatch latency on an empty region — the overhead floor.
     let dispatch = bench("dispatch", warmup.max(20), samples.max(200), || {
-        pool.parallel_for_blocks(0, pool.threads(), Schedule::Static, |r| {
+        pool.exec(0, pool.threads()).sched(Schedule::Static).run(|r| {
             black_box(r.len());
         });
     });
@@ -369,6 +369,48 @@ pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
         &dispatch,
     ));
     let dispatch_overhead_secs = dispatch.median();
+
+    // 1b. The inline fast path: empty and single-block ranges never wake a
+    // worker, so their floor is call overhead, not dispatch latency.
+    let empty = bench("dispatch-empty", warmup.max(20), samples.max(200), || {
+        pool.exec(0, 0).run(|r| {
+            black_box(r.len());
+        });
+    });
+    entries.push(BenchEntry::from_measurement(
+        "dispatch/exec-empty-range",
+        &empty,
+    ));
+    let inline = bench("dispatch-inline", warmup.max(20), samples.max(200), || {
+        pool.exec(0, 1).run(|r| {
+            black_box(r.len());
+        });
+    });
+    entries.push(BenchEntry::from_measurement(
+        "dispatch/single-chunk-inline",
+        &inline,
+    ));
+
+    // 1c. Steal traffic under a skewed per-index cost (Zipf-like: the first
+    // indices dominate), Dynamic(1) with single-chunk steals — members that
+    // drain their cheap shares must steal the expensive head to finish.
+    let mut steal_m = LoopMetrics::new(pool.threads());
+    let steal = bench("steal", warmup.max(5), samples.max(50), || {
+        let exec = pool.exec(0, 256).sched(Schedule::Dynamic(1)).steal_batch(1);
+        exec.metrics(&mut steal_m).run(|r| {
+            for i in r {
+                let mut acc = 0u64;
+                for k in 0..2048 / (i + 1) {
+                    acc = acc.wrapping_add(black_box(k as u64));
+                }
+                black_box(acc);
+            }
+        });
+    });
+    entries.push(BenchEntry::from_measurement(
+        "sched/steal-imbalanced",
+        &steal,
+    ));
 
     // 2. Optimizer cores on closed-form landscapes (pure CPU, deterministic
     // candidate trajectories — measures the staged machinery itself).

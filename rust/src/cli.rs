@@ -534,7 +534,7 @@ pub fn execute(cmd: Command) -> Result<String> {
                 cold_evals,
             ));
             s.push_str(
-                " (see `ThreadPool::parallel_for_auto` to drop this into any parallel loop)\n",
+                " (see `ParallelExec::auto` to drop this into any parallel loop)\n",
             );
             Ok(s)
         }

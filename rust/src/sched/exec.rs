@@ -1,0 +1,690 @@
+//! The unified parallel-loop execution surface: [`ParallelExec`] and the
+//! work-stealing engine behind it.
+//!
+//! Every loop goes through one builder:
+//!
+//! ```text
+//! pool.exec(start, end)        // range
+//!     .sched(s)                // optional: schedule (default Static)
+//!     .steal_batch(b)          // optional: executor knobs (ExecParams)
+//!     .metrics(&mut m)         // optional: per-member instrumentation
+//!     .auto(&mut region)       // optional: live-tuned chunk (or .auto_joint)
+//!     .run(|range| ...)        // or .run_indexed(|i| ...)
+//! ```
+//!
+//! ## Execution model
+//!
+//! The engine pre-splits `start..end` into one contiguous share per team
+//! member, published to that member's
+//! [`RangeQueue`](super::deque::RangeQueue). Members then *pop* blocks from
+//! the front of their own queue and, when empty, *steal* batches from the
+//! back of a victim's queue (stolen batches are parked in the thief's queue
+//! so other idle members can re-steal). The schedule decides the block
+//! grain, not the distribution mechanism:
+//!
+//! * `Static` — the owner pops its whole share as one block; a steal moves
+//!   the whole unstarted share, so block boundaries stay the classic
+//!   contiguous split and stealing only acts as overflow relief for a
+//!   member that is slow to wake.
+//! * `StaticChunk(c)` / `Dynamic(c)` — owners pop `c`-sized blocks; thieves
+//!   steal `steal_batch · c` at a time.
+//! * `Guided(min)` — owners and thieves claim half the remaining range
+//!   (at least `min`), reproducing the exponential decay per owner.
+//!
+//! An empty range returns immediately and a range that fits one block runs
+//! inline on the caller — neither ever wakes a worker (the
+//! `dispatch/parallel-for-empty` floor fix). Nested regions and
+//! single-member teams also run inline, preserving the pool's
+//! nested-parallelism-off semantics.
+
+use super::deque::{CachePadded, RangeQueue};
+use super::pool::RegionMark;
+use super::{in_region, ExecParams, LoopMetrics, Schedule, ThreadPool};
+use crate::adaptive::{TunedRegion, TunedSpace};
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Iterations per dispatched segment: queue spans are packed `u32` pairs,
+/// so longer loops run as sequential fork/join segments.
+const SEGMENT_MAX: usize = u32::MAX as usize;
+
+/// Block-grain policy derived from the schedule + executor knobs (see the
+/// module docs for the per-kind rules).
+#[derive(Clone, Copy)]
+struct Policy {
+    sched: Schedule,
+    chunk: u32,
+    batch: u32,
+}
+
+impl Policy {
+    fn new(sched: Schedule, params: ExecParams) -> Self {
+        let chunk = match sched {
+            Schedule::Static => 0,
+            Schedule::StaticChunk(c) | Schedule::Dynamic(c) | Schedule::Guided(c) => {
+                c.clamp(1, u32::MAX as usize) as u32
+            }
+        };
+        Policy {
+            sched,
+            chunk,
+            batch: params.steal_batch.clamp(1, 1 << 16) as u32,
+        }
+    }
+
+    /// Owner-side claim off the front of its own queue.
+    fn pop(&self, len: u32) -> u32 {
+        match self.sched {
+            Schedule::Static => len,
+            Schedule::StaticChunk(_) | Schedule::Dynamic(_) => self.chunk,
+            Schedule::Guided(_) => (len / 2).max(self.chunk),
+        }
+    }
+
+    /// Thief-side claim off the back of a victim's queue.
+    fn steal(&self, len: u32) -> u32 {
+        match self.sched {
+            Schedule::Static => len,
+            Schedule::StaticChunk(_) | Schedule::Dynamic(_) => {
+                self.batch.saturating_mul(self.chunk).min(len)
+            }
+            Schedule::Guided(_) => (len / 2).max(self.chunk),
+        }
+    }
+}
+
+/// True when the whole range fits a single scheduled block — the inline
+/// fast path that must never wake a worker.
+fn single_block(sched: Schedule, n: usize) -> bool {
+    match sched {
+        Schedule::Static => n == 1,
+        Schedule::StaticChunk(c) | Schedule::Dynamic(c) | Schedule::Guided(c) => n <= c.max(1),
+    }
+}
+
+/// Per-member instrumentation slot (padded: members write concurrently).
+#[derive(Default)]
+struct SinkSlot {
+    busy_ns: AtomicU64,
+    blocks: AtomicU64,
+    steals: AtomicU64,
+}
+
+/// Everything a region member needs, borrowed for the region's lifetime.
+struct Ctx<'a> {
+    /// Absolute index of queue-relative 0.
+    base: usize,
+    queues: &'a [CachePadded<RangeQueue>],
+    policy: Policy,
+    backoff_spins: u32,
+    /// Set on the first body panic; members bail out between blocks.
+    poisoned: AtomicBool,
+    sink: Option<&'a [CachePadded<SinkSlot>]>,
+}
+
+/// One member's region loop: drain own queue, then steal until two
+/// consecutive victim sweeps come up empty.
+fn drive(ctx: &Ctx<'_>, tid: usize, body: &(dyn Fn(Range<usize>) + Sync)) {
+    let q = &ctx.queues[tid];
+    let t = ctx.queues.len();
+    let mut busy_ns = 0u64;
+    let mut blocks = 0u64;
+    let mut steals = 0u64;
+    'region: loop {
+        // Drain the owned queue from the front.
+        loop {
+            if ctx.poisoned.load(Ordering::Relaxed) {
+                break 'region;
+            }
+            let Some((lo, hi)) = q.claim_front(|len| ctx.policy.pop(len)) else {
+                break;
+            };
+            run_block(ctx, lo, hi, body, &mut busy_ns, &mut blocks);
+        }
+        // Steal phase: sweep victims round-robin starting at the right
+        // neighbour. Two consecutive all-empty sweeps (with a tunable spin
+        // backoff between them) mean the region is drained — a concurrently
+        // parked batch we miss is simply finished by its thief.
+        let mut empty_sweeps = 0u32;
+        loop {
+            if ctx.poisoned.load(Ordering::Relaxed) {
+                break 'region;
+            }
+            let mut stolen = None;
+            for k in 1..t {
+                let victim = &ctx.queues[(tid + k) % t];
+                if let Some(batch) = victim.steal_back(|len| ctx.policy.steal(len)) {
+                    stolen = Some(batch);
+                    break;
+                }
+            }
+            match stolen {
+                Some((lo, hi)) => {
+                    steals += 1;
+                    q.count_steal();
+                    // Park the batch in our (empty) queue so other idle
+                    // members can re-steal part of it, then drain normally.
+                    q.publish(lo, hi);
+                    continue 'region;
+                }
+                None => {
+                    empty_sweeps += 1;
+                    if empty_sweeps >= 2 {
+                        break 'region;
+                    }
+                    for _ in 0..ctx.backoff_spins {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+        }
+    }
+    if let Some(sink) = ctx.sink {
+        let slot = &sink[tid];
+        slot.busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+        slot.blocks.fetch_add(blocks, Ordering::Relaxed);
+        slot.steals.fetch_add(steals, Ordering::Relaxed);
+    }
+}
+
+fn run_block(
+    ctx: &Ctx<'_>,
+    lo: u32,
+    hi: u32,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    busy_ns: &mut u64,
+    blocks: &mut u64,
+) {
+    let range = ctx.base + lo as usize..ctx.base + hi as usize;
+    let t0 = ctx.sink.is_some().then(Instant::now);
+    let result = catch_unwind(AssertUnwindSafe(|| body(range)));
+    match result {
+        Ok(()) => {
+            if let Some(t0) = t0 {
+                *busy_ns += t0.elapsed().as_nanos() as u64;
+            }
+            *blocks += 1;
+        }
+        Err(payload) => {
+            // Cancel the region's remaining blocks, then let the panic
+            // unwind to the member boundary (worker_loop / dispatch_region
+            // catch it there and re-raise on the caller).
+            ctx.poisoned.store(true, Ordering::Relaxed);
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// Inline execution on the calling thread: single-member teams, nested
+/// regions, and single-block ranges. Emulates each schedule's block grain
+/// sequentially so block-shape invariants hold on every path.
+fn run_inline(
+    start: usize,
+    end: usize,
+    sched: Schedule,
+    threads: usize,
+    mut metrics: Option<&mut LoopMetrics>,
+    body: &(dyn Fn(Range<usize>) + Sync),
+) {
+    let _mark = RegionMark::enter();
+    let mut run = |r: Range<usize>| match metrics.as_deref_mut() {
+        Some(m) => {
+            let t0 = Instant::now();
+            body(r);
+            m.busy_ns[0] += t0.elapsed().as_nanos() as u64;
+            m.blocks[0] += 1;
+        }
+        None => body(r),
+    };
+    match sched {
+        Schedule::Static => {
+            let n = end - start;
+            let t = threads.min(n).max(1);
+            let base = n / t;
+            let rem = n % t;
+            for tid in 0..t {
+                let lo = start + tid * base + tid.min(rem);
+                let hi = lo + base + usize::from(tid < rem);
+                if lo < hi {
+                    run(lo..hi);
+                }
+            }
+        }
+        Schedule::StaticChunk(c) | Schedule::Dynamic(c) => {
+            let c = c.max(1);
+            let mut lo = start;
+            while lo < end {
+                let hi = (lo + c).min(end);
+                run(lo..hi);
+                lo = hi;
+            }
+        }
+        Schedule::Guided(min_c) => {
+            let min_c = min_c.max(1);
+            let mut lo = start;
+            while lo < end {
+                let remaining = end - lo;
+                let c = (remaining / 2).max(min_c).min(remaining);
+                run(lo..lo + c);
+                lo += c;
+            }
+        }
+    }
+}
+
+impl ThreadPool {
+    /// Start building a parallel loop over `start..end` — the single entry
+    /// point every loop (plain, scheduled, instrumented, auto-tuned) goes
+    /// through. See [`ParallelExec`] for the knobs.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::sched::{Schedule, ThreadPool};
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    ///
+    /// let pool = ThreadPool::new(2);
+    /// let sum = AtomicUsize::new(0);
+    /// pool.exec(0, 100).sched(Schedule::Dynamic(8)).run_indexed(|i| {
+    ///     sum.fetch_add(i, Ordering::Relaxed);
+    /// });
+    /// assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    /// ```
+    pub fn exec<'r>(&self, start: usize, end: usize) -> ParallelExec<'_, 'r> {
+        ParallelExec {
+            pool: self,
+            start,
+            end,
+            sched: Schedule::Static,
+            params: ExecParams::default(),
+            metrics: None,
+            auto: AutoMode::Off,
+        }
+    }
+
+    /// The execution engine behind [`ParallelExec::run`]. Resets `metrics`
+    /// (when given) to this pool's team size and accumulates per-member
+    /// busy/block/steal figures into it.
+    pub(crate) fn execute(
+        &self,
+        start: usize,
+        end: usize,
+        sched: Schedule,
+        params: ExecParams,
+        mut metrics: Option<&mut LoopMetrics>,
+        body: &(dyn Fn(Range<usize>) + Sync),
+    ) {
+        if let Some(m) = metrics.as_deref_mut() {
+            *m = LoopMetrics::new(self.threads());
+        }
+        if start >= end {
+            return;
+        }
+        let mut lo = start;
+        while lo < end {
+            let hi = end.min(lo.saturating_add(SEGMENT_MAX));
+            self.execute_segment(lo, hi, sched, params, metrics.as_deref_mut(), body);
+            lo = hi;
+        }
+    }
+
+    fn execute_segment(
+        &self,
+        start: usize,
+        end: usize,
+        sched: Schedule,
+        params: ExecParams,
+        metrics: Option<&mut LoopMetrics>,
+        body: &(dyn Fn(Range<usize>) + Sync),
+    ) {
+        let t = self.threads();
+        let n = end - start;
+        // Inline fast path: no region slot, no queue traffic, no wakeups.
+        if t == 1 || in_region() || single_block(sched, n) {
+            run_inline(start, end, sched, t, metrics, body);
+            return;
+        }
+        let sink: Option<Vec<CachePadded<SinkSlot>>> = metrics
+            .is_some()
+            .then(|| (0..t).map(|_| CachePadded(SinkSlot::default())).collect());
+        {
+            let _guard = self.region_guard();
+            let queues = self.queues();
+            // Contiguous equal pre-split with the remainder spread over the
+            // first members (OpenMP static semantics; for the chunked kinds
+            // this is the share each owner dispenses blocks from).
+            let base = n / t;
+            let rem = n % t;
+            for (tid, q) in queues.iter().enumerate().take(t) {
+                let lo = tid * base + tid.min(rem);
+                let hi = lo + base + usize::from(tid < rem);
+                q.publish(lo as u32, hi as u32);
+            }
+            let ctx = Ctx {
+                base: start,
+                queues,
+                policy: Policy::new(sched, params),
+                backoff_spins: params.backoff_spins,
+                poisoned: AtomicBool::new(false),
+                sink: sink.as_deref(),
+            };
+            let task = |tid: usize| drive(&ctx, tid, body);
+            self.dispatch_region(&task);
+        }
+        if let (Some(m), Some(sink)) = (metrics, sink) {
+            for (tid, slot) in sink.iter().enumerate() {
+                m.busy_ns[tid] += slot.busy_ns.load(Ordering::Relaxed);
+                m.blocks[tid] += slot.blocks.load(Ordering::Relaxed);
+                m.steals[tid] += slot.steals.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// What chooses the schedule each run: nothing, a tuned chunk, or a tuned
+/// joint cell.
+enum AutoMode<'r> {
+    Off,
+    Chunk(&'r mut TunedRegion<i32>),
+    Joint(&'r mut TunedSpace),
+}
+
+/// Builder for one parallel-loop execution (see [`ThreadPool::exec`]).
+///
+/// Consumed by [`run`](Self::run) / [`run_indexed`](Self::run_indexed); one
+/// builder executes the loop exactly once.
+pub struct ParallelExec<'p, 'r> {
+    pool: &'p ThreadPool,
+    start: usize,
+    end: usize,
+    sched: Schedule,
+    params: ExecParams,
+    metrics: Option<&'r mut LoopMetrics>,
+    auto: AutoMode<'r>,
+}
+
+impl<'r> ParallelExec<'_, 'r> {
+    /// Set the loop schedule (default [`Schedule::Static`]). Ignored when
+    /// an [`auto`](Self::auto)/[`auto_joint`](Self::auto_joint) region is
+    /// attached — the region chooses the schedule each run.
+    pub fn sched(mut self, sched: Schedule) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Set both executor knobs at once (see [`ExecParams`]).
+    pub fn params(mut self, params: ExecParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Chunks a thief claims per steal (default
+    /// `ExecParams::default().steal_batch`).
+    pub fn steal_batch(mut self, batch: usize) -> Self {
+        self.params.steal_batch = batch.max(1);
+        self
+    }
+
+    /// Spin-loop hints between empty victim sweeps before a member leaves
+    /// the region (default `ExecParams::default().backoff_spins`).
+    pub fn backoff(mut self, spins: u32) -> Self {
+        self.params.backoff_spins = spins;
+        self
+    }
+
+    /// Collect per-member busy time, block and steal counts into `m`
+    /// (overwritten, resized to the pool's team). Composes with
+    /// [`auto`](Self::auto): after a tuned run, `m` holds the metrics of
+    /// the *last* executed region.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::sched::{LoopMetrics, Schedule, ThreadPool};
+    ///
+    /// let pool = ThreadPool::new(2);
+    /// let mut m = LoopMetrics::new(2);
+    /// pool.exec(0, 96).sched(Schedule::Dynamic(8)).metrics(&mut m).run(|r| {
+    ///     std::hint::black_box(r.len());
+    /// });
+    /// assert_eq!(m.total_blocks(), 12);
+    /// ```
+    pub fn metrics(mut self, m: &'r mut LoopMetrics) -> Self {
+        self.metrics = Some(m);
+        self
+    }
+
+    /// Tune the `Dynamic` chunk live with a one-dimensional
+    /// [`TunedRegion`] — the paper's tuned `schedule(dynamic, chunk)`
+    /// clause as a drop-in loop primitive. One [`run`](Self::run) executes
+    /// the whole loop exactly once (the region's Single-Iteration protocol:
+    /// each call is one tuning step or, after convergence, a zero-overhead
+    /// bypass). Overrides [`sched`](Self::sched).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::adaptive::TunedRegionConfig;
+    /// use patsma::sched::ThreadPool;
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    ///
+    /// let pool = ThreadPool::new(2);
+    /// let mut chunker = TunedRegionConfig::new(1.0, 64.0).budget(2, 3).build::<i32>();
+    /// let hits = AtomicUsize::new(0);
+    /// for _ in 0..10 {
+    ///     pool.exec(0, 100).auto(&mut chunker).run(|r| {
+    ///         hits.fetch_add(r.len(), Ordering::Relaxed);
+    ///     });
+    /// }
+    /// assert_eq!(hits.load(Ordering::Relaxed), 10 * 100);
+    /// ```
+    pub fn auto(mut self, region: &'r mut TunedRegion<i32>) -> Self {
+        self.auto = AutoMode::Chunk(region);
+        self
+    }
+
+    /// Tune the schedule kind, chunk and executor knobs **together** over
+    /// [`Schedule::joint_space`] with a [`TunedSpace`] — static vs.
+    /// static-chunk vs. dynamic vs. guided is searched as a categorical
+    /// dimension alongside the integer chunk, steal batch and backoff, so
+    /// a loop whose best policy is not `Dynamic` is not stuck with it (and
+    /// the scheduler's own internals are tuned per loop, not hard-coded).
+    /// Accepts both the full 4-dim space and the legacy 2-dim
+    /// [`Schedule::kind_chunk_space`] (executor knobs then stay at the
+    /// builder's values). Overrides [`sched`](Self::sched).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::adaptive::TunedRegionConfig;
+    /// use patsma::sched::{Schedule, ThreadPool};
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    ///
+    /// let pool = ThreadPool::new(2);
+    /// let mut region = TunedRegionConfig::with_space(Schedule::joint_space(32))
+    ///     .budget(2, 3)
+    ///     .build_typed();
+    /// let hits = AtomicUsize::new(0);
+    /// for _ in 0..10 {
+    ///     pool.exec(0, 100).auto_joint(&mut region).run(|r| {
+    ///         hits.fetch_add(r.len(), Ordering::Relaxed);
+    ///     });
+    /// }
+    /// assert_eq!(hits.load(Ordering::Relaxed), 10 * 100);
+    /// ```
+    pub fn auto_joint(mut self, region: &'r mut TunedSpace) -> Self {
+        self.auto = AutoMode::Joint(region);
+        self
+    }
+
+    /// Execute the loop, calling `body(range)` for every scheduled block.
+    /// The block form is the primitive: stencil loops want a contiguous
+    /// range so the compiler can vectorise the inner loop, and per-block
+    /// calls keep scheduling overhead proportional to the number of blocks,
+    /// as in OpenMP.
+    pub fn run<F>(self, body: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let ParallelExec {
+            pool,
+            start,
+            end,
+            sched,
+            params,
+            metrics,
+            auto,
+        } = self;
+        let mut metrics = metrics;
+        match auto {
+            AutoMode::Off => pool.execute(start, end, sched, params, metrics.take(), &body),
+            AutoMode::Chunk(region) => {
+                assert_eq!(
+                    region.dim(),
+                    1,
+                    "auto-chunked exec tunes exactly one parameter (the chunk)"
+                );
+                region.run(|p| {
+                    pool.execute(
+                        start,
+                        end,
+                        Schedule::Dynamic(p[0].max(1) as usize),
+                        params,
+                        metrics.as_deref_mut(),
+                        &body,
+                    );
+                });
+            }
+            AutoMode::Joint(region) => {
+                let dim = region.dim();
+                assert!(
+                    dim == 2 || dim == Schedule::JOINT_HEAD,
+                    "auto-joint exec needs a (kind, chunk[, steal-batch, backoff]) \
+                     space, got dim {dim}"
+                );
+                region.run(|p| {
+                    let exec_params = if p.len() >= Schedule::JOINT_HEAD {
+                        ExecParams::from_joint(p)
+                    } else {
+                        params
+                    };
+                    pool.execute(
+                        start,
+                        end,
+                        Schedule::from_joint(p),
+                        exec_params,
+                        metrics.as_deref_mut(),
+                        &body,
+                    );
+                });
+            }
+        }
+    }
+
+    /// Execute the loop, calling `body(i)` for every index (convenience
+    /// over [`run`](Self::run)).
+    pub fn run_indexed<F>(self, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run(|r| {
+            for i in r {
+                body(i);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    #[test]
+    fn single_block_ranges_run_inline_without_waking_workers() {
+        let pool = ThreadPool::new(4);
+        let caller = std::thread::current().id();
+        let runs: Mutex<Vec<std::thread::ThreadId>> = Mutex::new(Vec::new());
+        // n <= chunk: exactly one block, executed by the caller itself.
+        pool.exec(0, 64).sched(Schedule::Dynamic(64)).run(|r| {
+            assert_eq!(r, 0..64);
+            runs.lock().unwrap().push(std::thread::current().id());
+        });
+        pool.exec(0, 1).run(|r| {
+            assert_eq!(r, 0..1);
+            runs.lock().unwrap().push(std::thread::current().id());
+        });
+        pool.exec(0, 3).sched(Schedule::Guided(8)).run(|r| {
+            assert_eq!(r, 0..3);
+            runs.lock().unwrap().push(std::thread::current().id());
+        });
+        let runs = runs.into_inner().unwrap();
+        assert_eq!(runs.len(), 3);
+        assert!(runs.iter().all(|&id| id == caller), "must run on the caller");
+    }
+
+    #[test]
+    fn metrics_capture_steals_under_imbalance() {
+        // Power-law block costs concentrated at the front: the member
+        // owning the expensive share cannot finish alone, so someone must
+        // steal. Deterministic because the imbalance (tens of ms) dwarfs
+        // wakeup latency (µs).
+        let pool = ThreadPool::new(4);
+        let mut m = LoopMetrics::new(4);
+        pool.exec(0, 64)
+            .sched(Schedule::Dynamic(1))
+            .steal_batch(1)
+            .metrics(&mut m)
+            .run(|r| {
+                for i in r {
+                    if i < 16 {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                }
+            });
+        assert_eq!(m.total_blocks(), 64);
+        assert!(
+            m.total_steals() > 0,
+            "idle members must have stolen from the loaded one: {m:?}"
+        );
+        assert!(pool.total_steals() >= m.total_steals());
+    }
+
+    #[test]
+    fn guided_policy_halves_and_respects_min() {
+        let p = Policy::new(Schedule::Guided(4), ExecParams::default());
+        assert_eq!(p.pop(500), 250);
+        assert_eq!(p.pop(7), 4);
+        assert_eq!(p.steal(100), 50);
+        let knobs = ExecParams {
+            steal_batch: 3,
+            backoff_spins: 0,
+        };
+        let d = Policy::new(Schedule::Dynamic(10), knobs);
+        assert_eq!(d.pop(1000), 10);
+        assert_eq!(d.steal(1000), 30);
+        assert_eq!(d.steal(5), 5);
+        let s = Policy::new(Schedule::Static, ExecParams::default());
+        assert_eq!(s.pop(123), 123);
+        assert_eq!(s.steal(123), 123);
+    }
+
+    #[test]
+    fn builder_composes_metrics_with_auto() {
+        let pool = ThreadPool::new(2);
+        let mut chunker = crate::adaptive::TunedRegionConfig::new(1.0, 16.0)
+            .budget(1, 2)
+            .build::<i32>();
+        let mut m = LoopMetrics::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.exec(0, 200).auto(&mut chunker).metrics(&mut m).run(|r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 200);
+        assert_eq!(m.threads(), 2, "metrics resized to the team");
+        assert!(m.total_blocks() > 0);
+    }
+}

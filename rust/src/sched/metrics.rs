@@ -11,6 +11,10 @@ pub struct LoopMetrics {
     pub busy_ns: Vec<u64>,
     /// Number of scheduled blocks each member executed.
     pub blocks: Vec<u64>,
+    /// Number of successful steals each member performed (batches taken
+    /// from a victim's queue; 0 everywhere when the pre-split was already
+    /// balanced).
+    pub steals: Vec<u64>,
 }
 
 impl LoopMetrics {
@@ -19,6 +23,7 @@ impl LoopMetrics {
         Self {
             busy_ns: vec![0; threads],
             blocks: vec![0; threads],
+            steals: vec![0; threads],
         }
     }
 
@@ -35,6 +40,12 @@ impl LoopMetrics {
     /// Total busy nanoseconds across the team.
     pub fn total_busy_ns(&self) -> u64 {
         self.busy_ns.iter().sum()
+    }
+
+    /// Total steals performed across the team (a cheap proxy for how
+    /// imbalanced the pre-split was relative to actual block costs).
+    pub fn total_steals(&self) -> u64 {
+        self.steals.iter().sum()
     }
 
     /// Load imbalance in `[0, 1)`: `(max - mean) / max` over per-thread
@@ -54,6 +65,7 @@ impl LoopMetrics {
         for i in 0..self.threads() {
             self.busy_ns[i] += other.busy_ns[i];
             self.blocks[i] += other.blocks[i];
+            self.steals[i] += other.steals[i];
         }
     }
 }
@@ -90,8 +102,10 @@ mod tests {
         let mut b = LoopMetrics::new(2);
         b.busy_ns = vec![5, 5];
         b.blocks = vec![3, 4];
+        b.steals = vec![1, 0];
         a.merge(&b);
         assert_eq!(a.busy_ns, vec![15, 25]);
         assert_eq!(a.total_blocks(), 10);
+        assert_eq!(a.total_steals(), 1);
     }
 }

@@ -16,7 +16,7 @@
 //!   experiments to show *why* a chunk value wins (imbalance vs. contention).
 //!
 //! The chunk does not have to be chosen by hand:
-//! [`ThreadPool::parallel_for_auto`] delegates it to an online
+//! [`ParallelExec::auto`] delegates it to an online
 //! [`crate::adaptive::TunedRegion`], which tunes it live across loop
 //! executions and re-tunes when the workload drifts.
 //!
@@ -27,14 +27,69 @@
 //! overhead). The optimum depends on the loop body, the iteration count,
 //! the core count and the system state — exactly the paper's motivation.
 
+pub mod deque;
+pub mod exec;
 pub mod metrics;
 pub mod pool;
 
+pub use exec::ParallelExec;
 pub use metrics::LoopMetrics;
 pub use pool::{in_region, ThreadPool};
 
 use crate::space::{Dim, Point, SearchSpace, Value};
 use anyhow::{bail, Context, Result};
+
+/// Scheduler-execution knobs beyond the schedule itself: how aggressively
+/// idle members steal and how long they spin between empty victim sweeps.
+/// Both are tunable dimensions of [`Schedule::joint_space`] — the
+/// scheduler's own internals go through the same optimizer stack as the
+/// chunk (the KIT concurrency-libraries result: steal batch and backoff are
+/// workload-dependent, not constants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecParams {
+    /// How many chunks a thief claims per successful steal (clamped to at
+    /// least 1). Larger batches amortise steal CASes on fine-grained loops;
+    /// smaller batches keep the tail balanced.
+    pub steal_batch: usize,
+    /// `spin_loop` hints between two empty victim sweeps before a member
+    /// leaves the region. More spins catch late-arriving work (a stalled
+    /// owner's range becoming visible); fewer spins release the core
+    /// sooner on oversubscribed machines.
+    pub backoff_spins: u32,
+}
+
+impl ExecParams {
+    /// Inclusive `(lo, hi)` domain of the steal-batch joint dimension.
+    pub const STEAL_BATCH_RANGE: (i64, i64) = (1, 8);
+    /// Inclusive `(lo, hi)` domain of the backoff-spins joint dimension.
+    pub const BACKOFF_RANGE: (i64, i64) = (0, 256);
+
+    /// Decode the `(steal-batch, backoff)` tail of a full
+    /// [`Schedule::joint_space`] point (dims 2 and 3). Points from the
+    /// legacy two-dimensional `(kind, chunk)` space fall back to defaults,
+    /// so both joint generations drive the same executor.
+    pub fn from_joint(point: &Point) -> ExecParams {
+        match (point.values().get(2), point.values().get(3)) {
+            (Some(Value::Int(b)), Some(Value::Int(s))) => ExecParams {
+                steal_batch: (*b).max(1) as usize,
+                backoff_spins: (*s).max(0) as u32,
+            },
+            _ => ExecParams::default(),
+        }
+    }
+}
+
+impl Default for ExecParams {
+    /// Mid-range defaults: batch 2 amortises the steal CAS without
+    /// starving the victim; 32 spins cover a typical wakeup race without
+    /// burning a visible slice of an oversubscribed core.
+    fn default() -> Self {
+        ExecParams {
+            steal_batch: 2,
+            backoff_spins: 32,
+        }
+    }
+}
 
 /// Loop-scheduling policy (the OpenMP `schedule` clause).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,14 +143,50 @@ impl Schedule {
         })
     }
 
-    /// The joint `(schedule kind, chunk)` typed search space: a categorical
-    /// dimension over [`KINDS`](Self::KINDS) and an integer chunk in
-    /// `[1, max_chunk]`. Tuning both together is where the real wins are —
-    /// the best `(kind, chunk)` pair beats the best chunk under a fixed
-    /// kind (HPX Smart Executors) — and the typed cells keep
-    /// `dynamic,chunk=32` and `guided,chunk=32` from ever sharing a cache
-    /// entry.
+    /// Number of leading scheduler dimensions in a full joint point:
+    /// `(kind, chunk, steal-batch, backoff)`. Workload joint spaces append
+    /// their own parameters after this head.
+    pub const JOINT_HEAD: usize = 4;
+
+    /// The scheduler's joint dimensions — `(kind, chunk, steal-batch,
+    /// backoff)` — with the chunk in `[chunk_lo, chunk_hi]`. This is the
+    /// head every workload joint space starts with; [`Self::joint_space`]
+    /// wraps it into a standalone space.
+    pub fn joint_dims(chunk_lo: i64, chunk_hi: i64) -> Vec<Dim> {
+        vec![
+            Dim::categorical(&Self::KINDS),
+            Dim::Int {
+                lo: chunk_lo.max(1),
+                hi: chunk_hi.max(chunk_lo.max(1)),
+            },
+            Dim::Int {
+                lo: ExecParams::STEAL_BATCH_RANGE.0,
+                hi: ExecParams::STEAL_BATCH_RANGE.1,
+            },
+            Dim::Int {
+                lo: ExecParams::BACKOFF_RANGE.0,
+                hi: ExecParams::BACKOFF_RANGE.1,
+            },
+        ]
+    }
+
+    /// The joint scheduler search space: a categorical dimension over
+    /// [`KINDS`](Self::KINDS), an integer chunk in `[1, max_chunk]`, and
+    /// the work-stealing executor's own knobs (steal-batch, backoff —
+    /// [`ExecParams`]). Tuning kind and chunk together is where the real
+    /// wins are — the best `(kind, chunk)` pair beats the best chunk under
+    /// a fixed kind (HPX Smart Executors) — and registering the stealer's
+    /// internals as dims lets the same optimizer stack tune the scheduler
+    /// itself with zero optimizer changes.
     pub fn joint_space(max_chunk: usize) -> SearchSpace {
+        SearchSpace::new(Self::joint_dims(1, max_chunk.max(1) as i64))
+    }
+
+    /// The legacy two-dimensional `(kind, chunk)` space, kept for synthetic
+    /// landscapes and exhaustive-grid pins whose per-dimension lattices
+    /// must stay comparable to a chunk-only scan. [`Self::from_joint`] and
+    /// [`ExecParams::from_joint`] accept points from either generation.
+    pub fn kind_chunk_space(max_chunk: usize) -> SearchSpace {
         SearchSpace::new(vec![
             Dim::categorical(&Self::KINDS),
             Dim::Int {
@@ -105,12 +196,13 @@ impl Schedule {
         ])
     }
 
-    /// Decode a [`joint_space`](Self::joint_space) point into a schedule.
-    /// Panics on points of a different shape — the joint loop surfaces
-    /// ([`ThreadPool::parallel_for_auto_joint`]) only hand out points of
+    /// Decode the `(kind, chunk)` head of a joint point into a schedule.
+    /// Accepts both joint generations (2-dim legacy and
+    /// [`JOINT_HEAD`](Self::JOINT_HEAD)-dim); panics on points of a
+    /// different shape — the joint loop surfaces only hand out points of
     /// their own space.
     pub fn from_joint(point: &Point) -> Schedule {
-        assert_eq!(point.len(), 2, "joint point is (kind, chunk)");
+        assert!(point.len() >= 2, "joint point is (kind, chunk, ..)");
         let kind = match &point[0] {
             Value::Cat(i) => *i,
             other => panic!("joint dim 0 must be categorical, got {other:?}"),
@@ -181,7 +273,7 @@ mod tests {
     fn joint_space_decodes_every_kind() {
         use crate::space::Value;
         let space = Schedule::joint_space(64);
-        assert_eq!(space.dim(), 2);
+        assert_eq!(space.dim(), Schedule::JOINT_HEAD);
         // Bin centres of the 4 kinds, chunk mid-domain.
         for (i, expect) in [
             Schedule::Static,
@@ -193,21 +285,54 @@ mod tests {
         .enumerate()
         {
             let u = (i as f64 + 0.5) / 4.0;
-            let p = space.decode_unit(&[u, 0.5]);
+            let p = space.decode_unit(&[u, 0.5, 0.5, 0.5]);
             assert_eq!(p[0], Value::Cat(i));
             assert_eq!(Schedule::from_joint(&p), *expect, "kind bin {i}");
         }
-        // The kind names in the space match the canonical list.
-        let p = space.decode_unit(&[0.6, 0.0]);
-        assert_eq!(space.label(&p), "dynamic,1");
+        // The kind names in the space match the canonical list, and the
+        // label carries all four scheduler dims.
+        let p = space.decode_unit(&[0.6, 0.0, 0.0, 0.0]);
+        assert!(space.label(&p).starts_with("dynamic,1,"), "{}", space.label(&p));
     }
 
     #[test]
     fn joint_space_chunk_saturates_like_quantize_integer() {
         let space = Schedule::joint_space(16);
-        let lo = Schedule::from_joint(&space.decode_unit(&[0.6, -5.0]));
-        let hi = Schedule::from_joint(&space.decode_unit(&[0.6, 42.0]));
+        let lo = Schedule::from_joint(&space.decode_unit(&[0.6, -5.0, 0.5, 0.5]));
+        let hi = Schedule::from_joint(&space.decode_unit(&[0.6, 42.0, 0.5, 0.5]));
         assert_eq!(lo, Schedule::Dynamic(1));
         assert_eq!(hi, Schedule::Dynamic(16));
+    }
+
+    #[test]
+    fn kind_chunk_space_stays_two_dimensional() {
+        let space = Schedule::kind_chunk_space(64);
+        assert_eq!(space.dim(), 2);
+        let p = space.decode_unit(&[0.6, 0.5]);
+        assert_eq!(Schedule::from_joint(&p), Schedule::Dynamic(33));
+        // Legacy points decode to default executor knobs.
+        assert_eq!(ExecParams::from_joint(&p), ExecParams::default());
+    }
+
+    #[test]
+    fn exec_params_decode_the_joint_tail() {
+        use crate::space::Value;
+        let p = Point::new(vec![
+            Value::Cat(2),
+            Value::Int(12),
+            Value::Int(4),
+            Value::Int(128),
+        ]);
+        assert_eq!(Schedule::from_joint(&p), Schedule::Dynamic(12));
+        let e = ExecParams::from_joint(&p);
+        assert_eq!(e.steal_batch, 4);
+        assert_eq!(e.backoff_spins, 128);
+        // The full joint space round-trips its own cells through both
+        // decoders.
+        let space = Schedule::joint_space(64);
+        let cell = space.decode_unit(&[0.9, 0.5, 1.0, 0.0]);
+        assert_eq!(Schedule::from_joint(&cell), Schedule::Guided(33));
+        assert_eq!(ExecParams::from_joint(&cell).steal_batch, 8);
+        assert_eq!(ExecParams::from_joint(&cell).backoff_spins, 0);
     }
 }

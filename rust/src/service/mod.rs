@@ -779,7 +779,8 @@ impl TuningService {
         } else {
             let slots: Vec<Mutex<Option<SessionOutcome>>> =
                 specs.iter().map(|_| Mutex::new(None)).collect();
-            self.pool.parallel_for(0, specs.len(), Schedule::Dynamic(1), |i| {
+            let par = self.pool.exec(0, specs.len()).sched(Schedule::Dynamic(1));
+            par.run_indexed(|i| {
                 let outcome = run_session(&specs[i], &self.cache, &self.pool);
                 *slots[i].lock().unwrap() = Some(outcome);
             });
@@ -924,7 +925,8 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
                 let pure = *pure;
                 let slots: Vec<Mutex<(f64, bool)>> =
                     points.iter().map(|_| Mutex::new((0.0, false))).collect();
-                pool.parallel_for(0, points.len(), Schedule::Dynamic(1), |i| {
+                let par = pool.exec(0, points.len()).sched(Schedule::Dynamic(1));
+                par.run_indexed(|i| {
                     let (cost, hit) = cache.get_or_compute(fingerprint, &points[i], || {
                         pure.eval(&points[i])
                     });

@@ -9,7 +9,7 @@
 
 use super::Workload;
 use crate::rng::Xoshiro256pp;
-use crate::sched::{Schedule, ThreadPool};
+use crate::sched::{ExecParams, Schedule, ThreadPool};
 
 /// Direct 2-D convolution workload (see module docs).
 pub struct Conv2d {
@@ -72,12 +72,19 @@ impl Conv2d {
     /// returns a checksum. Each output row is written by exactly one claim,
     /// so the numerics are schedule-invariant — only the speed changes.
     pub fn convolve_sched(&mut self, sched: Schedule) -> f64 {
+        self.convolve_exec(sched, ExecParams::default())
+    }
+
+    /// [`convolve_sched`](Self::convolve_sched) with explicit work-stealing
+    /// executor knobs.
+    pub fn convolve_exec(&mut self, sched: Schedule, exec: ExecParams) -> f64 {
         let (oh, ow) = self.out_dims();
         let (w, k) = (self.w, self.k);
         let img = crate::ptr::SharedConst::new(self.img.as_ptr());
         let ker = crate::ptr::SharedConst::new(self.kernel.as_ptr());
         let out = crate::ptr::SharedMut::new(self.out.as_mut_ptr());
-        self.pool.parallel_for_blocks(0, oh, sched, |rows| {
+        let loop_exec = self.pool.exec(0, oh).sched(sched).params(exec);
+        loop_exec.run(|rows| {
             let img = img.at(0);
             let ker = ker.at(0);
             for oy in rows {
@@ -145,8 +152,8 @@ impl Workload for Conv2d {
         self.convolve(params[0].max(1) as usize)
     }
 
-    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
-        self.convolve_sched(sched)
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
+        self.convolve_exec(sched, exec)
     }
 
     fn verify(&mut self) -> Result<(), String> {

@@ -20,7 +20,7 @@
 //! the outer dimension).
 
 use super::Workload;
-use crate::sched::{Schedule, ThreadPool};
+use crate::sched::{ExecParams, Schedule, ThreadPool};
 
 /// 8th-order centred second-derivative coefficients (c0, c1, .., c4).
 const C: [f32; 5] = [
@@ -159,6 +159,12 @@ impl Fdm3d {
     /// One leapfrog time-step with the z-plane loop under `sched`.
     /// Returns the L2 energy of the new wavefield (the application value).
     pub fn step_schedule(&mut self, sched: Schedule) -> f64 {
+        self.step_exec(sched, ExecParams::default())
+    }
+
+    /// [`step_schedule`](Self::step_schedule) with explicit work-stealing
+    /// executor knobs.
+    pub fn step_exec(&mut self, sched: Schedule, exec: ExecParams) -> f64 {
         let (nx, ny, nz) = (self.nx, self.ny, self.nz);
         let src = self.ricker(self.step);
         let stride_y = nx;
@@ -173,7 +179,8 @@ impl Fdm3d {
         // Per-plane energies for a deterministic reduction.
         let mut plane_energy = vec![0.0f64; nz];
         let pe = crate::ptr::SharedMut::new(plane_energy.as_mut_ptr());
-        self.pool.parallel_for_blocks(R, nz - R, sched, |planes| {
+        let loop_exec = self.pool.exec(R, nz - R).sched(sched).params(exec);
+        loop_exec.run(|planes| {
             let p = p.at(0);
             let q = pq.ptr();
             let vf = vf.at(0);
@@ -330,8 +337,8 @@ impl Workload for Fdm3d {
         self.step_chunk(params[0].max(1) as usize)
     }
 
-    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
-        self.step_schedule(sched)
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
+        self.step_exec(sched, exec)
     }
 
     fn verify(&mut self) -> Result<(), String> {

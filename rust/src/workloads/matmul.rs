@@ -11,7 +11,7 @@
 
 use super::Workload;
 use crate::rng::Xoshiro256pp;
-use crate::sched::{Schedule, ThreadPool};
+use crate::sched::{ExecParams, Schedule, ThreadPool};
 
 /// Blocked parallel GEMM workload (see module docs).
 pub struct MatMul {
@@ -55,12 +55,18 @@ impl MatMul {
     /// column tile `j_block`. Each row of `C` is written by exactly one
     /// claim, so the numerics are schedule-invariant — only speed changes.
     pub fn multiply_sched(&mut self, sched: Schedule, j_block: usize) -> f64 {
+        self.multiply_exec(sched, ExecParams::default(), j_block)
+    }
+
+    /// [`multiply_sched`](Self::multiply_sched) with explicit work-stealing
+    /// executor knobs.
+    pub fn multiply_exec(&mut self, sched: Schedule, exec: ExecParams, j_block: usize) -> f64 {
         let n = self.n;
         let j_block = j_block.max(1).min(n);
         let a = crate::ptr::SharedConst::new(self.a.as_ptr());
         let b = crate::ptr::SharedConst::new(self.b.as_ptr());
         let c = crate::ptr::SharedMut::new(self.c.as_mut_ptr());
-        self.pool.parallel_for_blocks(0, n, sched, |rows| {
+        self.pool.exec(0, n).sched(sched).params(exec).run(|rows| {
             let a = a.at(0);
             let b = b.at(0);
             for i in rows {
@@ -129,11 +135,11 @@ impl Workload for MatMul {
         self.multiply(params[0].max(1) as usize, params[1].max(1) as usize)
     }
 
-    fn run_schedule(&mut self, sched: Schedule, rest: &[i32]) -> f64 {
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, rest: &[i32]) -> f64 {
         // `rest` carries the j-tile (the joint space keeps every parameter
         // beyond the chunk); default to a mid-size tile if absent.
         let j_block = rest.first().copied().unwrap_or(16).max(1) as usize;
-        self.multiply_sched(sched, j_block)
+        self.multiply_exec(sched, exec, j_block)
     }
 
     fn verify(&mut self) -> Result<(), String> {

@@ -43,7 +43,7 @@ pub mod rtm;
 pub mod spmv;
 pub mod synthetic;
 
-use crate::sched::{Schedule, ThreadPool};
+use crate::sched::{ExecParams, Schedule, ThreadPool};
 use crate::space::{Dim, Point, SearchSpace, Value};
 use anyhow::{bail, Result};
 
@@ -121,19 +121,16 @@ pub trait Workload {
         )
     }
 
-    /// The joint `(schedule kind, chunk, …)` search space: a categorical
-    /// dimension over [`Schedule::KINDS`], the first parameter re-read as
-    /// the schedule's chunk, and any remaining parameters as integer
-    /// dimensions. Tuning the kind *with* the chunk is where the real wins
-    /// are — the best pair beats the best chunk under a pinned kind.
+    /// The joint `(schedule kind, chunk, steal-batch, backoff, …)` search
+    /// space: the scheduler head from [`Schedule::joint_dims`] — with the
+    /// first parameter re-read as the schedule's chunk — followed by any
+    /// remaining parameters as integer dimensions. Tuning the kind *with*
+    /// the chunk is where the real wins are — the best pair beats the best
+    /// chunk under a pinned kind — and the head's trailing dims let the
+    /// optimizer tune the work-stealing executor itself per loop.
     fn joint_space(&self) -> SearchSpace {
         let (lo, hi) = self.bounds();
-        let mut dims = Vec::with_capacity(lo.len() + 1);
-        dims.push(Dim::categorical(&Schedule::KINDS));
-        dims.push(Dim::Int {
-            lo: lo[0].max(1.0) as i64,
-            hi: hi[0] as i64,
-        });
+        let mut dims = Schedule::joint_dims(lo[0].max(1.0) as i64, hi[0] as i64);
         for d in 1..lo.len() {
             dims.push(Dim::Int {
                 lo: lo[d] as i64,
@@ -148,31 +145,46 @@ pub trait Workload {
     /// an all-numeric [`space`](Self::space) point runs
     /// [`run_iteration`](Self::run_iteration) directly, while a
     /// [`joint_space`](Self::joint_space) point (leading categorical kind)
-    /// decodes its `(kind, chunk)` head into a [`Schedule`] and runs
+    /// decodes its `(kind, chunk, steal-batch, backoff)` head into a
+    /// [`Schedule`] + [`ExecParams`] and runs
     /// [`run_schedule`](Self::run_schedule) with the trailing parameters.
+    /// (A bare `(kind, chunk)` scheduler point — [`Schedule::kind_chunk_space`]
+    /// — is also accepted, with default executor knobs.)
     fn run_point(&mut self, point: &Point) -> f64 {
         if matches!(point.values().first(), Some(Value::Cat(_))) {
             assert!(point.len() >= 2, "a joint point is (kind, chunk, ..)");
-            let head = Point::new(point.values()[..2].to_vec());
-            let sched = Schedule::from_joint(&head);
-            let rest: Vec<i32> = point.values()[2..]
-                .iter()
-                .map(|v| v.as_i64() as i32)
-                .collect();
-            self.run_schedule(sched, &rest)
+            let sched = Schedule::from_joint(point);
+            let exec = ExecParams::from_joint(point);
+            let rest: Vec<i32> = if point.len() > 2 {
+                assert!(
+                    point.len() >= Schedule::JOINT_HEAD,
+                    "a joint point with workload parameters carries the full \
+                     {}-dim scheduler head",
+                    Schedule::JOINT_HEAD
+                );
+                point.values()[Schedule::JOINT_HEAD..]
+                    .iter()
+                    .map(|v| v.as_i64() as i32)
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            self.run_schedule(sched, exec, &rest)
         } else {
             let params: Vec<i32> = point.values().iter().map(|v| v.as_i64() as i32).collect();
             self.run_iteration(&params)
         }
     }
 
-    /// Execute one target iteration under an explicit loop [`Schedule`],
-    /// with `rest` carrying any tuned parameters beyond the `(kind, chunk)`
-    /// pair (e.g. matmul's j-tile). The default approximates the schedule
-    /// on the canonical `Dynamic(chunk)` loop (`Static` maps to one
-    /// maximal block) — a fallback for workloads without a kind-switchable
-    /// loop; every registry workload overrides it with the real thing.
-    fn run_schedule(&mut self, sched: Schedule, rest: &[i32]) -> f64 {
+    /// Execute one target iteration under an explicit loop [`Schedule`] and
+    /// executor knobs, with `rest` carrying any tuned parameters beyond the
+    /// scheduler head (e.g. matmul's j-tile). The default approximates the
+    /// schedule on the canonical `Dynamic(chunk)` loop (`Static` maps to
+    /// one maximal block) and ignores `exec` — a fallback for workloads
+    /// without a kind-switchable loop; every registry workload overrides it
+    /// with the real thing.
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, rest: &[i32]) -> f64 {
+        let _ = exec;
         let chunk = match sched {
             Schedule::Static => self.bounds().1.first().map(|&h| h as i32).unwrap_or(1),
             Schedule::StaticChunk(c) | Schedule::Dynamic(c) | Schedule::Guided(c) => {
@@ -415,9 +427,15 @@ mod tests {
                 assert_eq!(floor[d].as_f64(), lo[d], "{} dim {d} floor", row.name);
                 assert_eq!(ceil[d].as_f64(), hi[d], "{} dim {d} ceiling", row.name);
             }
-            // The joint space prepends the categorical schedule kind.
+            // The joint space prepends the 4-dim scheduler head (kind,
+            // chunk, steal-batch, backoff) in place of the chunk parameter.
             let joint = w.joint_space();
-            assert_eq!(joint.dim(), w.dim() + 1, "{}", row.name);
+            assert_eq!(
+                joint.dim(),
+                w.dim() - 1 + Schedule::JOINT_HEAD,
+                "{}",
+                row.name
+            );
             assert!(
                 matches!(joint.dims()[0], Dim::Categorical(_)),
                 "{}: joint dim 0 must be the schedule kind",
@@ -474,17 +492,35 @@ mod tests {
         let plain = Point::new(vec![Value::Int(8), Value::Int(16)]);
         assert_eq!(w.run_point(&plain), 24.0);
         assert_eq!(w.last, vec![8, 16]);
-        // Joint point → the (kind, chunk) head becomes the schedule, the
-        // tail rides along; the default maps Dynamic(c) onto param 0.
-        let joint = Point::new(vec![Value::Cat(2), Value::Int(12), Value::Int(20)]);
+        // Joint point → the (kind, chunk, steal, backoff) head becomes the
+        // schedule + executor knobs, the tail rides along; the default maps
+        // Dynamic(c) onto param 0.
+        let joint = Point::new(vec![
+            Value::Cat(2),
+            Value::Int(12),
+            Value::Int(4),
+            Value::Int(64),
+            Value::Int(20),
+        ]);
         assert_eq!(w.run_point(&joint), 32.0);
         assert_eq!(w.last, vec![12, 20]);
         // Static maps to one maximal block on the fallback path.
-        let stat = Point::new(vec![Value::Cat(0), Value::Int(3), Value::Int(20)]);
+        let stat = Point::new(vec![
+            Value::Cat(0),
+            Value::Int(3),
+            Value::Int(1),
+            Value::Int(0),
+            Value::Int(20),
+        ]);
         let _ = w.run_point(&stat);
         assert_eq!(w.last, vec![64, 20]);
+        // A bare scheduler pair still routes through run_schedule with
+        // default executor knobs.
+        let pair = Point::new(vec![Value::Cat(2), Value::Int(9)]);
+        let _ = w.run_point(&pair);
+        assert_eq!(w.last, vec![9]);
         // The derived spaces match the bounds.
         assert_eq!(w.space().dim(), 2);
-        assert_eq!(w.joint_space().dim(), 3);
+        assert_eq!(w.joint_space().dim(), 2 - 1 + Schedule::JOINT_HEAD);
     }
 }

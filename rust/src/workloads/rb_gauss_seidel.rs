@@ -16,7 +16,7 @@
 //! sequentially, keeping it deterministic under any schedule.
 
 use super::Workload;
-use crate::sched::{Schedule, ThreadPool};
+use crate::sched::{ExecParams, Schedule, ThreadPool};
 
 /// Red–Black Gauss–Seidel Laplace solver (paper Alg. 4).
 pub struct RbGaussSeidel {
@@ -77,7 +77,7 @@ impl RbGaussSeidel {
 
     /// One colour's sweep over rows `1..=n` under the given schedule.
     /// `colour` is the parity of `i + j` to update.
-    fn sweep_colour(&mut self, colour: usize, sched: Schedule) -> f64 {
+    fn sweep_colour(&mut self, colour: usize, sched: Schedule, exec: ExecParams) -> f64 {
         let side = self.side();
         let n = self.n;
         self.row_diff[..].iter_mut().for_each(|d| *d = 0.0);
@@ -86,7 +86,7 @@ impl RbGaussSeidel {
         // target a cell any other iteration writes.
         let grid_ptr = crate::ptr::SharedMut::new(self.grid.as_mut_ptr());
         let diff_ptr = crate::ptr::SharedMut::new(self.row_diff.as_mut_ptr());
-        self.pool.parallel_for_blocks(1, n + 1, sched, |rows| {
+        self.pool.exec(1, n + 1).sched(sched).params(exec).run(|rows| {
             let g = grid_ptr.ptr();
             let d = diff_ptr.ptr();
             for i in rows {
@@ -131,8 +131,14 @@ impl RbGaussSeidel {
     /// Full sweep with independent schedules per colour (the paper's
     /// two-chunk variant, §3).
     pub fn sweep_schedules(&mut self, black: Schedule, red: Schedule) -> f64 {
-        let d1 = self.sweep_colour(0, black);
-        let d2 = self.sweep_colour(1, red);
+        self.sweep_exec(black, red, ExecParams::default())
+    }
+
+    /// [`sweep_schedules`](Self::sweep_schedules) with explicit
+    /// work-stealing executor knobs (shared by both colours).
+    pub fn sweep_exec(&mut self, black: Schedule, red: Schedule, exec: ExecParams) -> f64 {
+        let d1 = self.sweep_colour(0, black, exec);
+        let d2 = self.sweep_colour(1, red, exec);
         self.sweeps += 1;
         d1 + d2
     }
@@ -206,8 +212,8 @@ impl Workload for RbGaussSeidel {
         self.sweep(params[0].max(1) as usize)
     }
 
-    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
-        self.sweep_schedules(sched, sched)
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
+        self.sweep_exec(sched, sched, exec)
     }
 
     fn verify(&mut self) -> Result<(), String> {

@@ -21,7 +21,7 @@
 
 use super::fdm3d::Fdm3d;
 use super::Workload;
-use crate::sched::{Schedule, ThreadPool};
+use crate::sched::{ExecParams, Schedule, ThreadPool};
 
 /// RTM phase selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -140,9 +140,15 @@ impl Rtm {
     /// The migration image is schedule-invariant (pinned by
     /// [`verify`](Workload::verify)) — only the speed changes.
     pub fn step_schedule(&mut self, sched: Schedule) -> f64 {
+        self.step_exec(sched, ExecParams::default())
+    }
+
+    /// [`step_schedule`](Self::step_schedule) with explicit work-stealing
+    /// executor knobs, threaded through to the wave-propagation loops.
+    pub fn step_exec(&mut self, sched: Schedule, exec: ExecParams) -> f64 {
         match self.phase {
             Phase::Forward => {
-                let e = self.fwd.step_schedule(sched);
+                let e = self.fwd.step_exec(sched, exec);
                 if self.cursor % self.snap_every == 0 {
                     self.snapshots
                         .push((self.fwd.step_index(), self.fwd.wavefield().to_vec()));
@@ -162,7 +168,7 @@ impl Rtm {
                 let t_rev = self.steps - 1 - self.cursor;
                 let trace = self.observed[t_rev].clone();
                 self.bwd.inject_receivers(&trace);
-                let e = self.bwd.step_schedule(sched);
+                let e = self.bwd.step_exec(sched, exec);
                 // Imaging condition at snapshot times: the source wavefield
                 // at forward-time t_rev correlates with the receiver field
                 // holding data from the same physical time.
@@ -177,20 +183,14 @@ impl Rtm {
                         let s = crate::ptr::SharedConst::new(snap.as_ptr());
                         let v = crate::ptr::SharedConst::new(rcv.as_ptr());
                         let n = self.image.len();
-                        self.pool.parallel_for_blocks(
-                            0,
-                            n,
-                            crate::sched::Schedule::Static,
-                            |r| {
-                                for i in r {
-                                    // SAFETY: disjoint writes per index.
-                                    unsafe {
-                                        *img.at(i) +=
-                                            (s.read(i) as f64) * (v.read(i) as f64);
-                                    }
+                        self.pool.exec(0, n).sched(Schedule::Static).run(|r| {
+                            for i in r {
+                                // SAFETY: disjoint writes per index.
+                                unsafe {
+                                    *img.at(i) += (s.read(i) as f64) * (v.read(i) as f64);
                                 }
-                            },
-                        );
+                            }
+                        });
                     }
                 }
                 self.cursor += 1;
@@ -238,12 +238,12 @@ impl Workload for Rtm {
         self.step_chunk(params[0].max(1) as usize)
     }
 
-    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
         if self.is_complete() {
             // Auto-restart so long tuning sessions always have work.
             self.reset_state();
         }
-        self.step_schedule(sched)
+        self.step_exec(sched, exec)
     }
 
     fn verify(&mut self) -> Result<(), String> {

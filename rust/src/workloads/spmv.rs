@@ -10,7 +10,7 @@
 
 use super::Workload;
 use crate::rng::Xoshiro256pp;
-use crate::sched::{Schedule, ThreadPool};
+use crate::sched::{ExecParams, Schedule, ThreadPool};
 
 /// CSR sparse matrix–vector product workload (see module docs).
 pub struct Spmv {
@@ -106,31 +106,37 @@ impl Spmv {
     /// a checksum of `y`. The numerics are schedule-invariant (each row is
     /// written by exactly one claim), so the schedule changes only speed.
     pub fn multiply_sched(&mut self, sched: Schedule) -> f64 {
+        self.multiply_exec(sched, ExecParams::default())
+    }
+
+    /// [`multiply_sched`](Self::multiply_sched) with explicit work-stealing
+    /// executor knobs — the full tuned surface of a joint scheduler cell.
+    pub fn multiply_exec(&mut self, sched: Schedule, exec: ExecParams) -> f64 {
         let rp = crate::ptr::SharedConst::new(self.row_ptr.as_ptr());
         let ci = crate::ptr::SharedConst::new(self.col_idx.as_ptr());
         let va = crate::ptr::SharedConst::new(self.vals.as_ptr());
         let xv = crate::ptr::SharedConst::new(self.x.as_ptr());
         let y = crate::ptr::SharedMut::new(self.y.as_mut_ptr());
-        self.pool
-            .parallel_for_blocks(0, self.rows, sched, |rows| {
-                let rp = rp.at(0);
-                let ci = ci.at(0);
-                let va = va.at(0);
-                let xv = xv.at(0);
-                for r in rows {
-                    // SAFETY: y[r] written by exactly one claim; all other
-                    // reads are shared immutable.
-                    unsafe {
-                        let lo = *rp.add(r);
-                        let hi = *rp.add(r + 1);
-                        let mut acc = 0.0f32;
-                        for k in lo..hi {
-                            acc += *va.add(k) * *xv.add(*ci.add(k) as usize);
-                        }
-                        *y.at(r) = acc;
+        let loop_exec = self.pool.exec(0, self.rows).sched(sched).params(exec);
+        loop_exec.run(|rows| {
+            let rp = rp.at(0);
+            let ci = ci.at(0);
+            let va = va.at(0);
+            let xv = xv.at(0);
+            for r in rows {
+                // SAFETY: y[r] written by exactly one claim; all other
+                // reads are shared immutable.
+                unsafe {
+                    let lo = *rp.add(r);
+                    let hi = *rp.add(r + 1);
+                    let mut acc = 0.0f32;
+                    for k in lo..hi {
+                        acc += *va.add(k) * *xv.add(*ci.add(k) as usize);
                     }
+                    *y.at(r) = acc;
                 }
-            });
+            }
+        });
         self.checksum()
     }
 
@@ -173,8 +179,8 @@ impl Workload for Spmv {
         self.multiply(params[0].max(1) as usize)
     }
 
-    fn run_schedule(&mut self, sched: Schedule, _rest: &[i32]) -> f64 {
-        self.multiply_sched(sched)
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
+        self.multiply_exec(sched, exec)
     }
 
     fn verify(&mut self) -> Result<(), String> {

@@ -182,9 +182,10 @@ fn non_finite_bypass_costs_never_trigger_retuning() {
 }
 
 #[test]
-fn auto_chunked_parallel_for_runs_real_loops_to_convergence() {
-    // The sched::pool entry point end to end: a real parallel loop whose
-    // chunk is tuned by wall-clock, with full index coverage every call.
+fn auto_chunked_exec_runs_real_loops_to_convergence() {
+    // The `pool.exec(..).auto(..)` builder end to end: a real parallel loop
+    // whose chunk is tuned by wall-clock, with full index coverage every
+    // call.
     let pool = pool();
     let mut chunker = TunedRegionConfig::new(1.0, 256.0)
         .budget(2, 5)
@@ -193,7 +194,7 @@ fn auto_chunked_parallel_for_runs_real_loops_to_convergence() {
     let n = 4096usize;
     for round in 0..30 {
         let count = AtomicUsize::new(0);
-        pool.parallel_for_auto(0, n, &mut chunker, |r| {
+        pool.exec(0, n).auto(&mut chunker).run(|r| {
             count.fetch_add(r.len(), Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), n, "round {round}");

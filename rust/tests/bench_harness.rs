@@ -40,6 +40,9 @@ fn tier1_suite_is_schema_stable_across_runs() {
 
     // Entry ids include the regression-checked groups.
     assert!(ids_a.contains(&"dispatch/parallel-for-empty"), "{ids_a:?}");
+    assert!(ids_a.contains(&"dispatch/exec-empty-range"), "{ids_a:?}");
+    assert!(ids_a.contains(&"dispatch/single-chunk-inline"), "{ids_a:?}");
+    assert!(ids_a.contains(&"sched/steal-imbalanced"), "{ids_a:?}");
     assert!(ids_a.contains(&"optimizer/csa-sphere"), "{ids_a:?}");
     assert!(ids_a.contains(&"service/synthetic-batch"), "{ids_a:?}");
     assert!(ids_a.contains(&"adaptive/region-drift-cycle"), "{ids_a:?}");

@@ -1,5 +1,5 @@
-//! Integration: joint `(schedule kind, chunk)` tuning over the typed
-//! search space (ISSUE 4 acceptance).
+//! Integration: joint `(schedule kind, chunk, steal-batch, backoff)`
+//! tuning over the typed search space (ISSUE 4 acceptance).
 //!
 //! The headline claim: tuning the schedule kind *together with* the chunk
 //! converges to a configuration whose cost is **no worse than** chunk-only
@@ -47,8 +47,10 @@ fn exhaustive_joint_grid_is_no_worse_than_chunk_only_grid() {
     // Same per-dimension lattice (16 points) for both searches: the joint
     // grid's dynamic row decodes to exactly the chunk-only grid's cells,
     // so min(joint) <= min(chunk-only) by set inclusion — this is the
-    // guarantee, independent of optimizer luck.
-    let mut joint = TunedRegionConfig::with_space(Schedule::joint_space(MAX_CHUNK as usize))
+    // guarantee, independent of optimizer luck. Uses the 2-dim
+    // kind_chunk_space: the executor-knob dims of the full joint_space are
+    // cost-neutral here and would only inflate the exhaustive lattice.
+    let mut joint = TunedRegionConfig::with_space(Schedule::kind_chunk_space(MAX_CHUNK as usize))
         .optimizer(OptimizerSpec::Grid)
         .budget(1, 16)
         .build_typed();

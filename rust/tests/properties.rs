@@ -47,7 +47,7 @@ fn prop_parallel_for_exact_coverage() {
         },
         |&(n, sched)| {
             let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
-            pool().parallel_for(0, n, sched, |i| {
+            pool().exec(0, n).sched(sched).run_indexed(|i| {
                 hits[i].fetch_add(1, Ordering::Relaxed);
             });
             for (i, h) in hits.iter().enumerate() {

@@ -193,7 +193,11 @@ fn named_joint_session_labels_a_schedule_cell() {
     let report = TuningService::new(2).run(&[spec]).unwrap();
     let s = &report.sessions[0];
     assert_eq!(s.evaluations, 4);
-    assert_eq!(s.best_point.len(), 2, "(kind, chunk)");
+    assert_eq!(
+        s.best_point.len(),
+        Schedule::JOINT_HEAD,
+        "(kind, chunk, steal-batch, backoff)"
+    );
     assert!(s.best_cost.is_finite() && s.best_cost > 0.0);
     let label = s.best_label.as_deref().expect("joint sessions are labelled");
     let kind = label.split(',').next().unwrap();
