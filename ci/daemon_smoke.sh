@@ -1,0 +1,88 @@
+#!/usr/bin/env bash
+# Daemon smoke test: start `patsma daemon`, run 16 concurrent CLI clients
+# against it, stop it, and assert a clean drain — registry snapshot on
+# disk, socket file removed, every client answered.
+#
+# Usage: ci/daemon_smoke.sh [path/to/patsma]
+set -euo pipefail
+
+PATSMA="${1:-./target/release/patsma}"
+CLIENTS="${CLIENTS:-16}"
+
+WORK="$(mktemp -d)"
+SOCKET="$WORK/daemon.sock"
+REGISTRY="$WORK/registry.txt"
+DAEMON_PID=""
+
+cleanup() {
+    if [[ -n "$DAEMON_PID" ]] && kill -0 "$DAEMON_PID" 2>/dev/null; then
+        kill "$DAEMON_PID" 2>/dev/null || true
+        wait "$DAEMON_PID" 2>/dev/null || true
+    fi
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== starting daemon on $SOCKET"
+"$PATSMA" daemon start --socket "$SOCKET" --registry "$REGISTRY" \
+    --concurrency 4 --snapshot-secs 2 >"$WORK/daemon.log" 2>&1 &
+DAEMON_PID=$!
+
+# Wait (up to ~10s) for the socket to answer pings.
+up=0
+for _ in $(seq 1 100); do
+    if "$PATSMA" daemon status --socket "$SOCKET" >/dev/null 2>&1; then
+        up=1
+        break
+    fi
+    sleep 0.1
+done
+if [[ "$up" != 1 ]]; then
+    echo "daemon never came up; log:" >&2
+    cat "$WORK/daemon.log" >&2
+    exit 1
+fi
+"$PATSMA" daemon status --socket "$SOCKET"
+
+echo "== $CLIENTS concurrent clients"
+pids=()
+for i in $(seq 1 "$CLIENTS"); do
+    "$PATSMA" client tune --socket "$SOCKET" --id "smoke-$i" \
+        --optimum "$((8 * i))" --num-opt 2 --max-iter 4 \
+        >"$WORK/client-$i.log" 2>&1 &
+    pids+=("$!")
+done
+fail=0
+for i in "${!pids[@]}"; do
+    if ! wait "${pids[$i]}"; then
+        echo "client $((i + 1)) failed:" >&2
+        cat "$WORK/client-$((i + 1)).log" >&2
+        fail=1
+    fi
+done
+[[ "$fail" == 0 ]]
+
+echo "== live report must list every client session"
+"$PATSMA" client report --socket "$SOCKET" >"$WORK/report.txt"
+for i in $(seq 1 "$CLIENTS"); do
+    grep -q "| smoke-$i |" "$WORK/report.txt" \
+        || { echo "session smoke-$i missing from live report" >&2; exit 1; }
+done
+
+echo "== stop and drain"
+"$PATSMA" daemon stop --socket "$SOCKET"
+wait "$DAEMON_PID"
+DAEMON_PID=""
+grep -q "drained" "$WORK/daemon.log" \
+    || { echo "daemon log missing drain summary" >&2; cat "$WORK/daemon.log" >&2; exit 1; }
+
+echo "== drained state: snapshot present, socket removed"
+[[ -f "$REGISTRY" ]] || { echo "registry snapshot missing" >&2; exit 1; }
+[[ ! -e "$SOCKET" ]] || { echo "socket file not removed" >&2; exit 1; }
+"$PATSMA" service report --registry "$REGISTRY" >"$WORK/final.txt"
+for i in $(seq 1 "$CLIENTS"); do
+    grep -q "| smoke-$i |" "$WORK/final.txt" \
+        || { echo "session smoke-$i lost in final snapshot" >&2; exit 1; }
+done
+
+echo "daemon smoke: OK ($CLIENTS clients, clean drain)"

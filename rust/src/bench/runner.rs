@@ -12,7 +12,7 @@ use super::json::Json;
 use crate::adaptive::{DriftConfig, TunedRegionConfig};
 use crate::optimizer::{drive, Csa, CsaConfig, NelderMead, NelderMeadConfig};
 use crate::sched::{LoopMetrics, Schedule, ThreadPool};
-use crate::service::{OptimizerSpec, SessionSpec, TuningService};
+use crate::service::{DaemonClient, DaemonConfig, OptimizerSpec, SessionSpec, TuningService};
 use crate::stats::Summary;
 use crate::workloads::{self, SizeProfile, Workload};
 use anyhow::{bail, Context, Result};
@@ -86,7 +86,8 @@ pub fn bench<F: FnMut()>(label: &str, warmup: usize, samples: usize, mut f: F) -
 pub enum Suite {
     /// The cheap deterministic set CI runs on every PR: dispatch latency,
     /// both paper optimizers on closed-form landscapes, a synthetic service
-    /// batch, and the two cheapest shared-memory workloads.
+    /// batch, the daemon under a concurrent client fleet, and the two
+    /// cheapest shared-memory workloads.
     Tier1,
     /// Tier-1 plus the remaining shared-memory workloads at reduced sizes.
     Full,
@@ -529,6 +530,77 @@ pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
             "sched/chunk-only-baseline",
             &m_chunk,
         ));
+    }
+
+    // 7. The daemon end to end over its unix socket: many concurrent
+    // clients (full: 64, quick: 8) hammering one converged session — the
+    // sharded read fast path a long-lived daemon mostly serves. Throughput
+    // is wall-clock per request across the whole client fleet; p95 is the
+    // per-request latency distribution seen by individual clients.
+    {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "patsma-bench-daemon-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating bench daemon dir {}", dir.display()))?;
+        let config = DaemonConfig::new(dir.join("daemon.sock"), dir.join("registry.txt"))
+            .with_concurrency(2)
+            .with_snapshot_interval(std::time::Duration::from_secs(3600));
+        let handle = crate::service::daemon::spawn(config)?;
+        let socket = handle.socket().to_path_buf();
+
+        // Converge the session once so every measured request is answered
+        // from the sharded converged state, not a fresh tuning run.
+        let spec = SessionSpec::synthetic("bench-daemon", 48.0, 4242).with_budget(4, 6);
+        DaemonClient::connect(&socket)?.tune(spec.clone(), false)?;
+
+        let (clients, per_client, rounds) = if quick { (8, 8, 3) } else { (64, 16, 3) };
+        let mut round_walls = Vec::with_capacity(rounds);
+        let mut latencies: Vec<f64> = Vec::new();
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            let mut fleet = Vec::with_capacity(clients);
+            for _ in 0..clients {
+                let socket = socket.clone();
+                let spec = spec.clone();
+                fleet.push(std::thread::spawn(
+                    move || -> Result<Vec<f64>, crate::error::PatsmaError> {
+                        let mut client = DaemonClient::connect(&socket)?;
+                        let mut lat = Vec::with_capacity(per_client);
+                        for _ in 0..per_client {
+                            let t = Instant::now();
+                            client.tune(spec.clone(), false)?;
+                            lat.push(t.elapsed().as_secs_f64());
+                        }
+                        Ok(lat)
+                    },
+                ));
+            }
+            for h in fleet {
+                latencies.extend(h.join().expect("bench client thread")?);
+            }
+            round_walls.push(t0.elapsed().as_secs_f64());
+        }
+        let total_requests = (clients * per_client) as f64;
+        let throughput = Measurement {
+            label: "daemon-throughput".into(),
+            samples: round_walls.iter().map(|w| w / total_requests).collect(),
+        };
+        entries.push(BenchEntry::from_measurement(
+            "service/daemon-throughput",
+            &throughput,
+        ));
+        let p95 = Measurement {
+            label: "daemon-p95".into(),
+            samples: latencies,
+        };
+        entries.push(BenchEntry::from_measurement("service/daemon-p95", &p95));
+        handle.begin_drain();
+        handle.wait()?;
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     Ok(BenchReport {

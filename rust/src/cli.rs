@@ -14,6 +14,14 @@
 //! patsma service report [--registry PATH]
 //! patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
 //!                       [--force]
+//! patsma daemon start [--socket PATH] [--registry PATH] [--concurrency N]
+//!                     [--shards N] [--cache-cap N] [--snapshot-secs N]
+//! patsma daemon stop [--socket PATH]
+//! patsma daemon status [--socket PATH]
+//! patsma client tune [--socket PATH] [--id NAME] [--optimum X]
+//!                    [--optimizer X] [--num-opt N] [--max-iter N] [--seed N]
+//!                    [--workload NAME] [--joint] [--fresh]
+//! patsma client report [--socket PATH]
 //! patsma adaptive demo [--seed N]  # online tuning: converge → drift → recover
 //! patsma adaptive run --workload NAME [--joint] [--num-opt N] [--max-iter N]
 //!                     [--seed N]   # online tuning of a registry workload
@@ -22,17 +30,21 @@
 
 use crate::bench;
 use crate::coordinator;
+use crate::error::PatsmaError;
 use crate::optimizer::{
     Csa, CsaConfig, GridSearch, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm,
     PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
 };
-use crate::service::{self, OptimizerSpec, SessionSpec, TuningService};
+use crate::service::{self, DaemonClient, DaemonConfig, OptimizerSpec, SessionSpec, TuningService};
 use crate::tuner::Autotuning;
 use crate::workloads::{self, rb_gauss_seidel::RbGaussSeidel, Workload};
 use anyhow::{bail, Context, Result};
 
 /// Default path of the on-disk service registry.
 pub const DEFAULT_REGISTRY: &str = "patsma-service-registry.txt";
+
+/// Default path of the daemon's unix socket.
+pub const DEFAULT_SOCKET: &str = "patsma-daemon.sock";
 
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +100,38 @@ pub enum Command {
         budget: u32,
         force: bool,
     },
+    /// Start the persistent tuning daemon on a unix socket; blocks until
+    /// the daemon drains (SIGTERM, SIGINT or `daemon stop`).
+    DaemonStart {
+        socket: String,
+        registry: String,
+        concurrency: usize,
+        shards: usize,
+        cache_cap: usize,
+        snapshot_secs: u64,
+    },
+    /// Ask a running daemon to drain and exit.
+    DaemonStop { socket: String },
+    /// Ping a running daemon (protocol version, sessions, drain state).
+    DaemonStatus { socket: String },
+    /// Tune one session through a running daemon.
+    ClientTune {
+        socket: String,
+        id: String,
+        optimum: f64,
+        optimizer: String,
+        num_opt: usize,
+        max_iter: usize,
+        seed: u64,
+        /// Tune a registry workload instead of the synthetic landscape.
+        workload: Option<String>,
+        /// Tune the joint (schedule kind, chunk, ..) typed space.
+        joint: bool,
+        /// Force a re-run even when the daemon holds a converged session.
+        fresh: bool,
+    },
+    /// Render a running daemon's registry.
+    ClientReport { socket: String },
     /// Online adaptive-tuning walkthrough (converge → drift → recover).
     AdaptiveDemo { seed: u64 },
     /// Online adaptive tuning of a registry workload to convergence.
@@ -104,8 +148,21 @@ pub enum Command {
     Help,
 }
 
+/// Parse one flag value as `T`, naming the flag in the error.
+fn flag_num<T: std::str::FromStr>(name: &str, raw: &str) -> Result<T, PatsmaError> {
+    raw.parse().map_err(|_| PatsmaError::Parse {
+        what: format!("flag {name}"),
+        input: raw.to_string(),
+        reason: "expected a number".to_string(),
+    })
+}
+
 /// Parse `args` (without argv[0]).
-pub fn parse(args: &[String]) -> Result<Command> {
+///
+/// Errors are typed [`PatsmaError`]s: [`PatsmaError::Unknown`] for
+/// out-of-vocabulary commands and actions, [`PatsmaError::Missing`] for
+/// absent required values, [`PatsmaError::Parse`] for malformed flags.
+pub fn parse(args: &[String]) -> Result<Command, PatsmaError> {
     let mut it = args.iter();
     let cmd = match it.next().map(String::as_str) {
         None | Some("help") | Some("--help") | Some("-h") => return Ok(Command::Help),
@@ -136,14 +193,17 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .first()
                 .filter(|a| !a.starts_with("--"))
                 .map(|s| s.to_string())
-                .context("tune: missing workload (try `patsma list`)")?;
+                .ok_or_else(|| PatsmaError::Missing {
+                    what: "tune workload".into(),
+                    hint: "try `patsma list`".into(),
+                })?;
             Ok(Command::Tune {
                 workload,
                 optimizer: flag_val("--optimizer").unwrap_or("csa").to_string(),
-                num_opt: flag_val("--num-opt").unwrap_or("4").parse()?,
-                max_iter: flag_val("--max-iter").unwrap_or("8").parse()?,
-                ignore: flag_val("--ignore").unwrap_or("1").parse()?,
-                seed: flag_val("--seed").unwrap_or("42").parse()?,
+                num_opt: flag_num("--num-opt", flag_val("--num-opt").unwrap_or("4"))?,
+                max_iter: flag_num("--max-iter", flag_val("--max-iter").unwrap_or("8"))?,
+                ignore: flag_num("--ignore", flag_val("--ignore").unwrap_or("1"))?,
+                seed: flag_num("--seed", flag_val("--seed").unwrap_or("42"))?,
                 single_mode: flag_val("--mode").unwrap_or("entire") == "single",
                 joint: has_flag("--joint"),
             })
@@ -164,17 +224,23 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .first()
                 .filter(|a| !a.starts_with("--"))
                 .map(|s| s.as_str())
-                .context("service: missing action (run|report)")?;
+                .ok_or_else(|| PatsmaError::Missing {
+                    what: "service action".into(),
+                    hint: "run|report|retune".into(),
+                })?;
             let registry = flag_val("--registry").unwrap_or(DEFAULT_REGISTRY).to_string();
             match action {
                 "run" => Ok(Command::ServiceRun {
-                    sessions: flag_val("--sessions").unwrap_or("8").parse()?,
-                    concurrency: flag_val("--concurrency").unwrap_or("4").parse()?,
+                    sessions: flag_num("--sessions", flag_val("--sessions").unwrap_or("8"))?,
+                    concurrency: flag_num(
+                        "--concurrency",
+                        flag_val("--concurrency").unwrap_or("4"),
+                    )?,
                     optimizer: flag_val("--optimizer").unwrap_or("mixed").to_string(),
-                    num_opt: flag_val("--num-opt").unwrap_or("4").parse()?,
-                    max_iter: flag_val("--max-iter").unwrap_or("8").parse()?,
-                    ignore: flag_val("--ignore").unwrap_or("0").parse()?,
-                    seed: flag_val("--seed").unwrap_or("42").parse()?,
+                    num_opt: flag_num("--num-opt", flag_val("--num-opt").unwrap_or("4"))?,
+                    max_iter: flag_num("--max-iter", flag_val("--max-iter").unwrap_or("8"))?,
+                    ignore: flag_num("--ignore", flag_val("--ignore").unwrap_or("0"))?,
+                    seed: flag_num("--seed", flag_val("--seed").unwrap_or("42"))?,
                     registry,
                     joint: has_flag("--joint"),
                     workload: flag_val("--workload").map(str::to_string),
@@ -182,11 +248,83 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 "report" => Ok(Command::ServiceReport { registry }),
                 "retune" => Ok(Command::ServiceRetune {
                     registry,
-                    concurrency: flag_val("--concurrency").unwrap_or("4").parse()?,
-                    budget: flag_val("--budget").unwrap_or("50").parse()?,
+                    concurrency: flag_num(
+                        "--concurrency",
+                        flag_val("--concurrency").unwrap_or("4"),
+                    )?,
+                    budget: flag_num("--budget", flag_val("--budget").unwrap_or("50"))?,
                     force: has_flag("--force"),
                 }),
-                other => bail!("unknown service action {other:?} (run|report|retune)"),
+                other => Err(PatsmaError::Unknown {
+                    kind: "service action",
+                    name: other.to_string(),
+                    expected: "run|report|retune",
+                }),
+            }
+        }
+        "daemon" => {
+            let action = rest
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .map(|s| s.as_str())
+                .ok_or_else(|| PatsmaError::Missing {
+                    what: "daemon action".into(),
+                    hint: "start|stop|status".into(),
+                })?;
+            let socket = flag_val("--socket").unwrap_or(DEFAULT_SOCKET).to_string();
+            match action {
+                "start" => Ok(Command::DaemonStart {
+                    socket,
+                    registry: flag_val("--registry").unwrap_or(DEFAULT_REGISTRY).to_string(),
+                    concurrency: flag_num(
+                        "--concurrency",
+                        flag_val("--concurrency").unwrap_or("4"),
+                    )?,
+                    shards: flag_num("--shards", flag_val("--shards").unwrap_or("16"))?,
+                    cache_cap: flag_num("--cache-cap", flag_val("--cache-cap").unwrap_or("65536"))?,
+                    snapshot_secs: flag_num(
+                        "--snapshot-secs",
+                        flag_val("--snapshot-secs").unwrap_or("30"),
+                    )?,
+                }),
+                "stop" => Ok(Command::DaemonStop { socket }),
+                "status" => Ok(Command::DaemonStatus { socket }),
+                other => Err(PatsmaError::Unknown {
+                    kind: "daemon action",
+                    name: other.to_string(),
+                    expected: "start|stop|status",
+                }),
+            }
+        }
+        "client" => {
+            let action = rest
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .map(|s| s.as_str())
+                .ok_or_else(|| PatsmaError::Missing {
+                    what: "client action".into(),
+                    hint: "tune|report".into(),
+                })?;
+            let socket = flag_val("--socket").unwrap_or(DEFAULT_SOCKET).to_string();
+            match action {
+                "tune" => Ok(Command::ClientTune {
+                    socket,
+                    id: flag_val("--id").unwrap_or("client").to_string(),
+                    optimum: flag_num("--optimum", flag_val("--optimum").unwrap_or("48"))?,
+                    optimizer: flag_val("--optimizer").unwrap_or("csa").to_string(),
+                    num_opt: flag_num("--num-opt", flag_val("--num-opt").unwrap_or("4"))?,
+                    max_iter: flag_num("--max-iter", flag_val("--max-iter").unwrap_or("8"))?,
+                    seed: flag_num("--seed", flag_val("--seed").unwrap_or("42"))?,
+                    workload: flag_val("--workload").map(str::to_string),
+                    joint: has_flag("--joint"),
+                    fresh: has_flag("--fresh"),
+                }),
+                "report" => Ok(Command::ClientReport { socket }),
+                other => Err(PatsmaError::Unknown {
+                    kind: "client action",
+                    name: other.to_string(),
+                    expected: "tune|report",
+                }),
             }
         }
         "adaptive" => {
@@ -194,25 +332,39 @@ pub fn parse(args: &[String]) -> Result<Command> {
                 .first()
                 .filter(|a| !a.starts_with("--"))
                 .map(|s| s.as_str())
-                .context("adaptive: missing action (demo|run)")?;
+                .ok_or_else(|| PatsmaError::Missing {
+                    what: "adaptive action".into(),
+                    hint: "demo|run".into(),
+                })?;
             match action {
                 "demo" => Ok(Command::AdaptiveDemo {
-                    seed: flag_val("--seed").unwrap_or("42").parse()?,
+                    seed: flag_num("--seed", flag_val("--seed").unwrap_or("42"))?,
                 }),
                 "run" => Ok(Command::AdaptiveRun {
-                    workload: flag_val("--workload")
-                        .map(str::to_string)
-                        .context("adaptive run: missing --workload <name>")?,
+                    workload: flag_val("--workload").map(str::to_string).ok_or_else(|| {
+                        PatsmaError::Missing {
+                            what: "adaptive run workload".into(),
+                            hint: "--workload <name>".into(),
+                        }
+                    })?,
                     joint: has_flag("--joint"),
-                    num_opt: flag_val("--num-opt").unwrap_or("4").parse()?,
-                    max_iter: flag_val("--max-iter").unwrap_or("8").parse()?,
-                    seed: flag_val("--seed").unwrap_or("42").parse()?,
+                    num_opt: flag_num("--num-opt", flag_val("--num-opt").unwrap_or("4"))?,
+                    max_iter: flag_num("--max-iter", flag_val("--max-iter").unwrap_or("8"))?,
+                    seed: flag_num("--seed", flag_val("--seed").unwrap_or("42"))?,
                 }),
-                other => bail!("unknown adaptive action {other:?} (demo|run)"),
+                other => Err(PatsmaError::Unknown {
+                    kind: "adaptive action",
+                    name: other.to_string(),
+                    expected: "demo|run",
+                }),
             }
         }
         "demo" => Ok(Command::Demo),
-        other => bail!("unknown command {other:?}; try `patsma help`"),
+        other => Err(PatsmaError::Unknown {
+            kind: "command",
+            name: other.to_string(),
+            expected: "list|experiment|tune|verify|bench|service|daemon|client|adaptive|demo|help",
+        }),
     }
 }
 
@@ -477,6 +629,91 @@ pub fn execute(cmd: Command) -> Result<String> {
             s.push_str(&format!("registry updated at {registry}\n"));
             Ok(s)
         }
+        Command::DaemonStart {
+            socket,
+            registry,
+            concurrency,
+            shards,
+            cache_cap,
+            snapshot_secs,
+        } => {
+            let config = DaemonConfig::new(socket, registry)
+                .with_concurrency(concurrency)
+                .with_shards(shards)
+                .with_cache_cap(cache_cap)
+                .with_snapshot_interval(std::time::Duration::from_secs(snapshot_secs));
+            let handle = service::daemon::spawn(config)?;
+            // Announce readiness eagerly — `daemon start` blocks until a
+            // drain (SIGTERM/SIGINT or `daemon stop`) and scripts poll on
+            // this line or on `daemon status`.
+            println!(
+                "daemon: listening on {} (registry {}, {shards} shard(s))",
+                handle.socket().display(),
+                handle.registry().display(),
+            );
+            let summary = handle.wait()?;
+            Ok(format!(
+                "daemon: drained — {} request(s) served, {} session(s) persisted, \
+                 {} snapshot(s) written, {} history record(s) compacted\n",
+                summary.requests, summary.sessions, summary.snapshots, summary.compacted,
+            ))
+        }
+        Command::DaemonStop { socket } => {
+            let mut client = DaemonClient::connect(std::path::Path::new(&socket))?;
+            client.shutdown()?;
+            Ok(format!("daemon at {socket}: draining\n"))
+        }
+        Command::DaemonStatus { socket } => {
+            let mut client = DaemonClient::connect(std::path::Path::new(&socket))?;
+            let (version, sessions, draining) = client.ping()?;
+            Ok(format!(
+                "daemon at {socket}: protocol v{version}, {sessions} session(s), {}\n",
+                if draining { "draining" } else { "serving" },
+            ))
+        }
+        Command::ClientTune {
+            socket,
+            id,
+            optimum,
+            optimizer,
+            num_opt,
+            max_iter,
+            seed,
+            workload,
+            joint,
+            fresh,
+        } => {
+            let spec = match (&workload, joint) {
+                (Some(name), true) => SessionSpec::named_joint(id, name.clone(), seed),
+                (Some(name), false) => SessionSpec::named(id, name.clone(), seed),
+                (None, true) => SessionSpec::synthetic_joint(id, optimum, seed),
+                (None, false) => SessionSpec::synthetic(id, optimum, seed),
+            }
+            .with_optimizer(OptimizerSpec::parse(&optimizer)?)
+            .with_budget(num_opt, max_iter);
+            let mut client = DaemonClient::connect(std::path::Path::new(&socket))?;
+            let (report, cached) = client.tune(spec, fresh)?;
+            let best = report
+                .best_label
+                .clone()
+                .unwrap_or_else(|| format!("{:?}", report.best_point));
+            Ok(format!(
+                "session {}: best {} at {} ({} evaluation(s), {})\n",
+                report.id,
+                best,
+                crate::bench::fmt_time(report.best_cost),
+                report.evaluations,
+                if cached {
+                    "answered from converged state"
+                } else {
+                    "tuned"
+                },
+            ))
+        }
+        Command::ClientReport { socket } => {
+            let mut client = DaemonClient::connect(std::path::Path::new(&socket))?;
+            Ok(client.report()?.render())
+        }
         Command::AdaptiveDemo { seed } => {
             use crate::adaptive::{DriftConfig, TunedRegionConfig};
             use crate::workloads::synthetic::chunk_cost_model;
@@ -727,6 +964,19 @@ USAGE:
   patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
               [--force]                     warm-started re-tuning of drifted
                                             sessions (reduced budget)
+  patsma daemon start [--socket PATH] [--registry PATH] [--concurrency N]
+              [--shards N] [--cache-cap N] [--snapshot-secs N]
+                                            persistent tuning daemon on a
+                                            unix socket; snapshots its
+                                            registry, drains on SIGTERM
+  patsma daemon stop [--socket PATH]        ask the daemon to drain and exit
+  patsma daemon status [--socket PATH]      ping: protocol, sessions, state
+  patsma client tune [--socket PATH] [--id NAME] [--optimum X] [--optimizer X]
+              [--num-opt N] [--max-iter N] [--seed N] [--workload NAME]
+              [--joint] [--fresh]           tune one session through the
+                                            daemon; converged sessions answer
+                                            instantly (--fresh re-runs)
+  patsma client report [--socket PATH]      the daemon's live registry
   patsma adaptive demo [--seed N]           online tuning walkthrough:
                                             converge, drift, warm recovery
   patsma adaptive run --workload NAME [--joint] [--num-opt N] [--max-iter N]
@@ -1149,5 +1399,178 @@ mod tests {
         assert!(rendered.contains("| s0-csa |"), "{rendered}");
         assert!(rendered.contains("cache hits"), "{rendered}");
         let _ = std::fs::remove_file(&registry);
+    }
+
+    #[test]
+    fn parse_daemon_commands() {
+        assert_eq!(
+            parse(&v(&["daemon", "status"])).unwrap(),
+            Command::DaemonStatus {
+                socket: DEFAULT_SOCKET.into()
+            }
+        );
+        assert_eq!(
+            parse(&v(&["daemon", "stop", "--socket", "/tmp/d.sock"])).unwrap(),
+            Command::DaemonStop {
+                socket: "/tmp/d.sock".into()
+            }
+        );
+        let c = parse(&v(&[
+            "daemon",
+            "start",
+            "--shards",
+            "8",
+            "--cache-cap",
+            "1024",
+            "--snapshot-secs",
+            "5",
+        ]))
+        .unwrap();
+        match c {
+            Command::DaemonStart {
+                socket,
+                registry,
+                concurrency,
+                shards,
+                cache_cap,
+                snapshot_secs,
+            } => {
+                assert_eq!(socket, DEFAULT_SOCKET);
+                assert_eq!(registry, DEFAULT_REGISTRY);
+                assert_eq!(concurrency, 4);
+                assert_eq!(shards, 8);
+                assert_eq!(cache_cap, 1024);
+                assert_eq!(snapshot_secs, 5);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&v(&["daemon"])).is_err());
+        assert!(parse(&v(&["daemon", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn parse_client_commands() {
+        let c = parse(&v(&["client", "tune", "--id", "c1", "--optimum", "24", "--fresh"])).unwrap();
+        match c {
+            Command::ClientTune {
+                socket,
+                id,
+                optimum,
+                optimizer,
+                workload,
+                joint,
+                fresh,
+                ..
+            } => {
+                assert_eq!(socket, DEFAULT_SOCKET);
+                assert_eq!(id, "c1");
+                assert_eq!(optimum, 24.0);
+                assert_eq!(optimizer, "csa");
+                assert_eq!(workload, None);
+                assert!(!joint);
+                assert!(fresh);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            parse(&v(&["client", "report", "--socket", "/tmp/d.sock"])).unwrap(),
+            Command::ClientReport {
+                socket: "/tmp/d.sock".into()
+            }
+        );
+        assert!(parse(&v(&["client"])).is_err());
+        assert!(parse(&v(&["client", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        assert!(matches!(
+            parse(&v(&["tune", "spmv", "--num-opt", "many"])).unwrap_err(),
+            PatsmaError::Parse { .. }
+        ));
+        assert!(matches!(
+            parse(&v(&["frobnicate"])).unwrap_err(),
+            PatsmaError::Unknown { kind: "command", .. }
+        ));
+        assert!(matches!(
+            parse(&v(&["tune"])).unwrap_err(),
+            PatsmaError::Missing { .. }
+        ));
+        assert!(matches!(
+            parse(&v(&["daemon", "start", "--shards", "x"])).unwrap_err(),
+            PatsmaError::Parse { .. }
+        ));
+    }
+
+    #[test]
+    fn daemon_cli_roundtrip_over_the_socket() {
+        static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "patsma-cli-daemon-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let socket = dir.join("d.sock").to_str().unwrap().to_string();
+        let registry = dir.join("registry.txt").to_str().unwrap().to_string();
+
+        let start = Command::DaemonStart {
+            socket: socket.clone(),
+            registry: registry.clone(),
+            concurrency: 2,
+            shards: 4,
+            cache_cap: 1024,
+            snapshot_secs: 3600,
+        };
+        let daemon = std::thread::spawn(move || execute(start).unwrap());
+
+        let mut up = false;
+        for _ in 0..300 {
+            if execute(Command::DaemonStatus {
+                socket: socket.clone(),
+            })
+            .is_ok()
+            {
+                up = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(up, "daemon never came up");
+
+        let out = execute(Command::ClientTune {
+            socket: socket.clone(),
+            id: "cli-e2e".into(),
+            optimum: 48.0,
+            optimizer: "csa".into(),
+            num_opt: 2,
+            max_iter: 4,
+            seed: 7,
+            workload: None,
+            joint: false,
+            fresh: false,
+        })
+        .unwrap();
+        assert!(out.contains("session cli-e2e"), "{out}");
+        assert!(out.contains("tuned"), "{out}");
+
+        let rendered = execute(Command::ClientReport {
+            socket: socket.clone(),
+        })
+        .unwrap();
+        assert!(rendered.contains("cli-e2e"), "{rendered}");
+
+        let stop = execute(Command::DaemonStop {
+            socket: socket.clone(),
+        })
+        .unwrap();
+        assert!(stop.contains("draining"), "{stop}");
+        let summary = daemon.join().unwrap();
+        assert!(summary.contains("drained"), "{summary}");
+        assert!(
+            execute(Command::DaemonStatus { socket }).is_err(),
+            "socket must be gone after the drain"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

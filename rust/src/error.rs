@@ -1,0 +1,211 @@
+//! Crate-wide typed error: [`PatsmaError`].
+//!
+//! PR 7 retires the stringly error surfaces (`anyhow!`/`bail!` with ad-hoc
+//! prose) on the crate's *parsing* boundaries — [`crate::sched::Schedule::parse`],
+//! the service registry loader, the wire protocol, and CLI argument
+//! handling — in favour of one typed enum implementing [`std::error::Error`].
+//!
+//! Interop is free in both directions:
+//!
+//! * call sites inside `anyhow` functions keep using `?` — `anyhow::Error`
+//!   absorbs any `E: Error + Send + Sync + 'static`;
+//! * the daemon and wire protocol, which must map failures onto typed
+//!   [`crate::service::proto::Response::Error`] records, now get a real enum
+//!   to match on instead of substring-probing a message.
+//!
+//! Variants are grouped by boundary: `Parse`/`Unknown`/`Missing`/`Invalid`
+//! for vocabulary-and-value errors, `Registry` for the persisted-state
+//! codec, `Io` for filesystem and socket operations (keeps the path and
+//! the underlying [`std::io::Error`] as `source()`), and
+//! `Protocol`/`Draining` for the daemon's wire surface.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The crate-wide error type for PATSMA's parsing and service boundaries.
+#[derive(Debug)]
+pub enum PatsmaError {
+    /// A value failed to parse as the expected type.
+    Parse {
+        /// What was being parsed ("schedule chunk", "flag --num-opt", …).
+        what: String,
+        /// The offending input, verbatim.
+        input: String,
+        /// Why it was rejected / what was expected.
+        reason: String,
+    },
+    /// A name outside a fixed vocabulary (schedule kind, CLI command, …).
+    Unknown {
+        /// The vocabulary ("schedule kind", "command", "daemon action").
+        kind: &'static str,
+        /// The name that was not recognised.
+        name: String,
+        /// The accepted vocabulary, rendered for the user.
+        expected: &'static str,
+    },
+    /// A required value was absent (CLI argument, record key).
+    Missing {
+        /// What is missing.
+        what: String,
+        /// How to supply it.
+        hint: String,
+    },
+    /// A value parsed but violates a domain constraint.
+    Invalid(String),
+    /// The service registry text is malformed.
+    Registry {
+        /// 1-based line number in the registry file, when known.
+        line: Option<usize>,
+        /// What is wrong with the record.
+        reason: String,
+    },
+    /// An I/O operation failed; keeps the path and the OS error as `source()`.
+    Io {
+        /// The operation, as a human-readable gerund ("reading registry").
+        op: &'static str,
+        /// The path involved.
+        path: PathBuf,
+        /// The underlying OS error.
+        source: std::io::Error,
+    },
+    /// A wire frame or record violated the daemon protocol.
+    Protocol(String),
+    /// The daemon is draining and refuses new tuning work.
+    Draining,
+}
+
+impl PatsmaError {
+    /// Shorthand constructor for [`PatsmaError::Io`].
+    pub fn io(op: &'static str, path: &Path, source: std::io::Error) -> Self {
+        PatsmaError::Io {
+            op,
+            path: path.to_path_buf(),
+            source,
+        }
+    }
+
+    /// Shorthand constructor for a line-less [`PatsmaError::Registry`].
+    pub fn registry(reason: impl Into<String>) -> Self {
+        PatsmaError::Registry {
+            line: None,
+            reason: reason.into(),
+        }
+    }
+
+    /// Attach (or replace) a registry line number, flattening nested
+    /// registry errors so "line 5: registry: bad hits" cannot happen.
+    pub fn at_line(self, lineno: usize) -> Self {
+        let reason = match self {
+            PatsmaError::Registry { reason, .. } => reason,
+            other => other.to_string(),
+        };
+        PatsmaError::Registry {
+            line: Some(lineno),
+            reason,
+        }
+    }
+}
+
+impl fmt::Display for PatsmaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PatsmaError::Parse {
+                what,
+                input,
+                reason,
+            } => {
+                write!(f, "{what}: cannot parse {input:?}: {reason}")
+            }
+            PatsmaError::Unknown {
+                kind,
+                name,
+                expected,
+            } => {
+                write!(f, "unknown {kind} {name:?} (expected {expected})")
+            }
+            PatsmaError::Missing { what, hint } => write!(f, "missing {what} ({hint})"),
+            PatsmaError::Invalid(reason) => write!(f, "{reason}"),
+            PatsmaError::Registry { line, reason } => match line {
+                Some(line) => write!(f, "registry line {line}: {reason}"),
+                None => write!(f, "registry: {reason}"),
+            },
+            PatsmaError::Io { op, path, source } => {
+                write!(f, "{op} {}: {source}", path.display())
+            }
+            PatsmaError::Protocol(reason) => write!(f, "protocol: {reason}"),
+            PatsmaError::Draining => write!(f, "daemon is draining; no new sessions accepted"),
+        }
+    }
+}
+
+impl std::error::Error for PatsmaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PatsmaError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_offender() {
+        let e = PatsmaError::Parse {
+            what: "flag --num-opt".into(),
+            input: "many".into(),
+            reason: "expected a number".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("--num-opt"), "{msg}");
+        assert!(msg.contains("many"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_lists_the_vocabulary() {
+        let e = PatsmaError::Unknown {
+            kind: "schedule kind",
+            name: "bogus".into(),
+            expected: "static|dynamic|guided",
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("bogus"), "{msg}");
+        assert!(msg.contains("static|dynamic|guided"), "{msg}");
+    }
+
+    #[test]
+    fn at_line_flattens_nested_registry_errors() {
+        let e = PatsmaError::registry("bad hits \"x\"").at_line(5);
+        assert_eq!(e.to_string(), "registry line 5: bad hits \"x\"");
+        // Non-registry errors keep their full message under the line tag.
+        let e = PatsmaError::Invalid("negative cost".into()).at_line(2);
+        assert_eq!(e.to_string(), "registry line 2: negative cost");
+    }
+
+    #[test]
+    fn io_preserves_the_source_chain() {
+        use std::error::Error as _;
+        let e = PatsmaError::io(
+            "reading registry",
+            Path::new("/nope"),
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("/nope"), "{e}");
+    }
+
+    #[test]
+    fn anyhow_interop_is_free() {
+        fn inner() -> Result<(), PatsmaError> {
+            Err(PatsmaError::Draining)
+        }
+        fn outer() -> anyhow::Result<()> {
+            inner()?;
+            Ok(())
+        }
+        let msg = format!("{:#}", outer().unwrap_err());
+        assert!(msg.contains("draining"), "{msg}");
+    }
+}

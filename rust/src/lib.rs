@@ -31,7 +31,13 @@
 //! `run_point()`, and the generic adapters
 //! ([`adaptive::TunedSpace::run_workload`], named service sessions, the
 //! registry-generated bench suites) tune any `workloads::NAMES` entry
-//! with no per-workload wiring.
+//! with no per-workload wiring. The [`service::daemon`] module keeps the
+//! whole stack **resident**: `patsma daemon start` serves length-prefixed
+//! [`service::proto`] records over a unix socket from an N-way sharded
+//! session map ([`service::shard`]), with periodic registry snapshots and
+//! graceful drain on SIGTERM — every request flowing through the one typed
+//! API [`service::TuningService::handle`]. Fallible boundaries speak the
+//! crate-wide typed [`error::PatsmaError`].
 //!
 //! See `docs/ARCHITECTURE.md` for the layer map and data flow, and
 //! `docs/WORKLOADS.md` for the workload cookbook.
@@ -40,6 +46,7 @@ pub mod adaptive;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod error;
 pub mod optimizer;
 pub mod ptr;
 pub mod rng;

@@ -7,7 +7,10 @@ use patsma::cli;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    match cli::parse(&args).and_then(cli::execute) {
+    match cli::parse(&args)
+        .map_err(anyhow::Error::from)
+        .and_then(cli::execute)
+    {
         Ok(out) => print!("{out}"),
         Err(e) => {
             eprintln!("error: {e:#}");

@@ -5,7 +5,7 @@
 //! offline), so it builds the substrate from scratch:
 //!
 //! * [`pool::ThreadPool`] — persistent worker threads with a low-overhead
-//!   fork/join dispatch (one `parallel_for` ≈ one OpenMP parallel-for
+//!   fork/join dispatch (one `pool.exec(..)` run ≈ one OpenMP parallel-for
 //!   region);
 //! * [`Schedule`] — the loop-scheduling policies whose granularity PATSMA
 //!   tunes: `Static`, `StaticChunk`, `Dynamic(chunk)`, `Guided(chunk)`,
@@ -36,8 +36,8 @@ pub use exec::ParallelExec;
 pub use metrics::LoopMetrics;
 pub use pool::{in_region, ThreadPool};
 
+use crate::error::PatsmaError;
 use crate::space::{Dim, Point, SearchSpace, Value};
-use anyhow::{bail, Context, Result};
 
 /// Scheduler-execution knobs beyond the schedule itself: how aggressively
 /// idle members steal and how long they spin between empty victim sweeps.
@@ -117,20 +117,24 @@ impl Schedule {
     /// A `chunk` of `0` is an explicit error, not a silent rewrite: every
     /// schedule implementation treats the chunk as "at least 1", so a user
     /// who typed `dynamic,0` would otherwise run `dynamic,1` without being
-    /// told (pinned by the tests below).
-    pub fn parse(s: &str) -> Result<Schedule> {
+    /// told (pinned by the tests below). Failures are typed
+    /// [`PatsmaError`]s, not prose.
+    pub fn parse(s: &str) -> Result<Schedule, PatsmaError> {
         let (kind, chunk) = match s.split_once(',') {
             Some((k, c)) => {
-                let c = c
-                    .trim()
-                    .parse::<usize>()
-                    .with_context(|| format!("bad chunk {:?} in schedule {s:?}", c.trim()))?;
+                let c = c.trim().parse::<usize>().map_err(|_| PatsmaError::Parse {
+                    what: "schedule chunk".into(),
+                    input: c.trim().into(),
+                    reason: format!("in schedule {s:?}"),
+                })?;
                 (k.trim(), Some(c))
             }
             None => (s.trim(), None),
         };
         if chunk == Some(0) {
-            bail!("schedule {s:?}: chunk must be >= 1 (a chunk of 0 claims nothing)");
+            return Err(PatsmaError::Invalid(format!(
+                "schedule {s:?}: chunk must be >= 1 (a chunk of 0 claims nothing)"
+            )));
         }
         Ok(match (kind, chunk) {
             ("static", None) => Schedule::Static,
@@ -139,7 +143,13 @@ impl Schedule {
             ("dynamic", None) => Schedule::Dynamic(1), // OpenMP default
             ("guided", Some(c)) => Schedule::Guided(c),
             ("guided", None) => Schedule::Guided(1),
-            (other, _) => bail!("unknown schedule kind {other:?} (static|dynamic|guided)"),
+            (other, _) => {
+                return Err(PatsmaError::Unknown {
+                    kind: "schedule kind",
+                    name: other.into(),
+                    expected: "static|dynamic|guided",
+                })
+            }
         })
     }
 
@@ -267,6 +277,27 @@ mod tests {
                 "{s}: {err:#}"
             );
         }
+    }
+
+    #[test]
+    fn parse_errors_are_typed_not_prose() {
+        // Callers (the daemon's wire surface, the CLI) match on variants;
+        // the message is derived, not the contract.
+        assert!(matches!(
+            Schedule::parse("bogus").unwrap_err(),
+            PatsmaError::Unknown {
+                kind: "schedule kind",
+                ..
+            }
+        ));
+        assert!(matches!(
+            Schedule::parse("dynamic,x").unwrap_err(),
+            PatsmaError::Parse { .. }
+        ));
+        assert!(matches!(
+            Schedule::parse("dynamic,0").unwrap_err(),
+            PatsmaError::Invalid(_)
+        ));
     }
 
     #[test]

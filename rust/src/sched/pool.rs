@@ -275,86 +275,6 @@ impl ThreadPool {
             std::panic::resume_unwind(payload);
         }
     }
-
-    /// OpenMP-style parallel loop over `start..end`, calling `body(range)`
-    /// for every scheduled block.
-    #[deprecated(
-        since = "0.6.0",
-        note = "use pool.exec(start, end).sched(sched).run(body)"
-    )]
-    pub fn parallel_for_blocks<F>(&self, start: usize, end: usize, sched: Schedule, body: F)
-    where
-        F: Fn(std::ops::Range<usize>) + Sync,
-    {
-        self.exec(start, end).sched(sched).run(body);
-    }
-
-    /// Per-index parallel loop (convenience over the block form).
-    #[deprecated(
-        since = "0.6.0",
-        note = "use pool.exec(start, end).sched(sched).run_indexed(body)"
-    )]
-    pub fn parallel_for<F>(&self, start: usize, end: usize, sched: Schedule, body: F)
-    where
-        F: Fn(usize) + Sync,
-    {
-        self.exec(start, end).sched(sched).run_indexed(body);
-    }
-
-    /// Auto-chunked parallel loop under a tuned `Dynamic(chunk)`.
-    #[deprecated(
-        since = "0.6.0",
-        note = "use pool.exec(start, end).auto(region).run(body)"
-    )]
-    pub fn parallel_for_auto<F>(
-        &self,
-        start: usize,
-        end: usize,
-        region: &mut crate::adaptive::TunedRegion<i32>,
-        body: F,
-    ) where
-        F: Fn(std::ops::Range<usize>) + Sync,
-    {
-        self.exec(start, end).auto(region).run(body);
-    }
-
-    /// Joint-mode auto loop over [`Schedule::joint_space`].
-    #[deprecated(
-        since = "0.6.0",
-        note = "use pool.exec(start, end).auto_joint(region).run(body)"
-    )]
-    pub fn parallel_for_auto_joint<F>(
-        &self,
-        start: usize,
-        end: usize,
-        region: &mut crate::adaptive::TunedSpace,
-        body: F,
-    ) where
-        F: Fn(std::ops::Range<usize>) + Sync,
-    {
-        self.exec(start, end).auto_joint(region).run(body);
-    }
-
-    /// Instrumented variant returning per-thread busy time, block and steal
-    /// counts.
-    #[deprecated(
-        since = "0.6.0",
-        note = "use pool.exec(start, end).sched(sched).metrics(&mut m).run(body)"
-    )]
-    pub fn parallel_for_blocks_metrics<F>(
-        &self,
-        start: usize,
-        end: usize,
-        sched: Schedule,
-        body: F,
-    ) -> super::LoopMetrics
-    where
-        F: Fn(std::ops::Range<usize>) + Sync,
-    {
-        let mut m = super::LoopMetrics::new(self.threads);
-        self.exec(start, end).sched(sched).metrics(&mut m).run(body);
-        m
-    }
 }
 
 impl Drop for ThreadPool {
@@ -660,38 +580,6 @@ mod tests {
                 total.fetch_add(1, Ordering::Relaxed);
             });
         assert_eq!(total.load(Ordering::Relaxed), 50);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_delegate_to_the_builder() {
-        // The five legacy entry points survive as thin shims; pin that each
-        // still runs the loop correctly end to end.
-        let pool = ThreadPool::new(4);
-        let total = AtomicUsize::new(0);
-        pool.parallel_for(0, 32, Schedule::Dynamic(4), |_| {
-            total.fetch_add(1, Ordering::Relaxed);
-        });
-        pool.parallel_for_blocks(0, 32, Schedule::Guided(2), |r| {
-            total.fetch_add(r.len(), Ordering::Relaxed);
-        });
-        let m = pool.parallel_for_blocks_metrics(0, 32, Schedule::Dynamic(8), |r| {
-            total.fetch_add(r.len(), Ordering::Relaxed);
-        });
-        assert_eq!(m.total_blocks(), 4);
-        let mut chunker = crate::adaptive::TunedRegionConfig::new(1.0, 16.0)
-            .budget(1, 2)
-            .build::<i32>();
-        pool.parallel_for_auto(0, 32, &mut chunker, |r| {
-            total.fetch_add(r.len(), Ordering::Relaxed);
-        });
-        let mut joint = crate::adaptive::TunedRegionConfig::with_space(Schedule::joint_space(8))
-            .budget(1, 2)
-            .build_typed();
-        pool.parallel_for_auto_joint(0, 32, &mut joint, |r| {
-            total.fetch_add(r.len(), Ordering::Relaxed);
-        });
-        assert_eq!(total.load(Ordering::Relaxed), 5 * 32);
     }
 
     #[test]

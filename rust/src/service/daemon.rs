@@ -1,0 +1,654 @@
+//! The tuning daemon — a persistent process serving the wire protocol.
+//!
+//! `patsma daemon start` promotes the in-process [`TuningService`] to a
+//! long-lived server: clients connect to a unix socket, exchange
+//! length-prefixed [`proto`] frames, and every request routes through the
+//! *same* [`TuningService::handle`] API an in-process caller uses — the
+//! daemon adds exactly three things on top:
+//!
+//! 1. **The socket** — an accept loop spawning one handler thread per
+//!    connection ([`DaemonClient`] is the typed client side);
+//! 2. **Persistence** — a background thread periodically compacts the
+//!    session history and atomically snapshots the compacted registry
+//!    (write-to-temp + rename), and the daemon seeds itself from the
+//!    registry on startup (leniently: corrupt records are skipped, not
+//!    fatal);
+//! 3. **Graceful drain** — on SIGTERM/SIGINT (or a `shutdown` request) the
+//!    daemon stops accepting connections, lets in-flight sessions finish,
+//!    answers idle clients with a clean `draining` frame, writes a final
+//!    snapshot, and removes the socket. No converged session is lost.
+//!
+//! ```text
+//!             ┌────────────────────────── patsma daemon ─┐
+//! client ──┐  │ accept loop ─▶ handler threads ─▶ handle()│
+//! client ──┼──▶   (socket)         │                 │    │
+//! client ──┘  │                    ▼                 ▼    │
+//!             │              proto frames    ShardedSessions + PointCache
+//!             │ snapshot thread ─▶ compact + atomic registry snapshot
+//!             └──────────────────────────────────────────┘
+//! ```
+
+use super::proto::{self, Request, Response};
+use super::registry::ServiceReport;
+use super::{SessionReport, SessionSpec, TuningService};
+use crate::error::PatsmaError;
+use std::io::{ErrorKind, Read};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// SIGTERM/SIGINT routing without a libc dependency: the C `signal`
+/// function with a handler that does nothing but one atomic store (the
+/// only async-signal-safe thing worth doing).
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_signal(_signum: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    /// Route SIGTERM and SIGINT to the termination flag. Idempotent;
+    /// installing again is harmless.
+    pub(super) fn install() {
+        unsafe {
+            signal(SIGTERM, on_signal as usize);
+            signal(SIGINT, on_signal as usize);
+        }
+    }
+
+    /// Whether a termination signal has arrived.
+    pub(super) fn requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+/// How a daemon is configured (what `patsma daemon start` flags build).
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Unix socket path the daemon listens on.
+    pub socket: PathBuf,
+    /// Registry file snapshots are written to (and seeded from on start).
+    pub registry: PathBuf,
+    /// Concurrent session bound (the service's thread pool).
+    pub concurrency: usize,
+    /// Session-map shard count.
+    pub shards: usize,
+    /// Point-cache residency cap (entries).
+    pub cache_cap: usize,
+    /// How often the background thread compacts and snapshots.
+    pub snapshot_interval: Duration,
+}
+
+impl DaemonConfig {
+    /// A config with the default concurrency (4), shard count, cache cap
+    /// and a 30-second snapshot interval.
+    pub fn new(socket: impl Into<PathBuf>, registry: impl Into<PathBuf>) -> Self {
+        Self {
+            socket: socket.into(),
+            registry: registry.into(),
+            concurrency: 4,
+            shards: super::DEFAULT_SHARDS,
+            cache_cap: super::DEFAULT_CACHE_CAP,
+            snapshot_interval: Duration::from_secs(30),
+        }
+    }
+
+    /// Builder-style concurrency override.
+    pub fn with_concurrency(mut self, concurrency: usize) -> Self {
+        self.concurrency = concurrency;
+        self
+    }
+
+    /// Builder-style shard-count override.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Builder-style cache-cap override.
+    pub fn with_cache_cap(mut self, cache_cap: usize) -> Self {
+        self.cache_cap = cache_cap;
+        self
+    }
+
+    /// Builder-style snapshot-interval override.
+    pub fn with_snapshot_interval(mut self, interval: Duration) -> Self {
+        self.snapshot_interval = interval;
+        self
+    }
+}
+
+/// What a drained daemon reports back (the `daemon start` exit summary).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DrainSummary {
+    /// Requests served over the daemon's lifetime.
+    pub requests: u64,
+    /// Sessions held at shutdown (all persisted in the final snapshot).
+    pub sessions: usize,
+    /// Registry snapshots written (the final one included).
+    pub snapshots: u64,
+    /// History entries dropped by compaction.
+    pub compacted: u64,
+}
+
+/// State shared between the accept loop, handler threads, the snapshot
+/// thread and the [`DaemonHandle`].
+struct DaemonShared {
+    service: TuningService,
+    config: DaemonConfig,
+    drain: AtomicBool,
+    requests: AtomicU64,
+    snapshots: AtomicU64,
+    compacted: AtomicU64,
+}
+
+impl DaemonShared {
+    /// Drain comes from three places: [`DaemonHandle::begin_drain`], a
+    /// termination signal, or a `shutdown` request (which drains the
+    /// service directly).
+    fn drain_requested(&self) -> bool {
+        self.drain.load(Ordering::SeqCst) || sig::requested() || self.service.is_draining()
+    }
+
+    /// Atomically publish the compacted registry: write a temp file next
+    /// to the target, then rename over it — a concurrent `service report
+    /// --registry` reader never sees a half-written file.
+    fn snapshot(&self) -> Result<(), PatsmaError> {
+        let report = self.service.registry_snapshot();
+        let tmp = self.config.registry.with_extension("tmp");
+        std::fs::write(&tmp, report.to_text())
+            .map_err(|e| PatsmaError::io("writing registry snapshot", &tmp, e))?;
+        std::fs::rename(&tmp, &self.config.registry)
+            .map_err(|e| PatsmaError::io("publishing registry snapshot", &self.config.registry, e))?;
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn compact(&self) {
+        let dropped = self.service.compact_history() as u64;
+        self.compacted.fetch_add(dropped, Ordering::Relaxed);
+    }
+}
+
+/// A running daemon (returned by [`spawn`]). Dropping the handle leaves
+/// the daemon running detached; [`wait`](Self::wait) blocks until drain.
+pub struct DaemonHandle {
+    shared: Arc<DaemonShared>,
+    accept: Option<JoinHandle<()>>,
+    snapshotter: Option<JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    /// The socket the daemon listens on.
+    pub fn socket(&self) -> &Path {
+        &self.shared.config.socket
+    }
+
+    /// The registry file the daemon snapshots to.
+    pub fn registry(&self) -> &Path {
+        &self.shared.config.registry
+    }
+
+    /// Begin a graceful drain (equivalent to sending SIGTERM): stop
+    /// accepting, let in-flight sessions finish, refuse new ones.
+    pub fn begin_drain(&self) {
+        self.shared.drain.store(true, Ordering::SeqCst);
+        self.shared.service.begin_drain();
+    }
+
+    /// Block until the daemon has drained (SIGTERM, `shutdown` request or
+    /// [`begin_drain`](Self::begin_drain)), write the final snapshot,
+    /// remove the socket and report lifetime counters.
+    pub fn wait(mut self) -> Result<DrainSummary, PatsmaError> {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.snapshotter.take() {
+            let _ = h.join();
+        }
+        // All in-flight sessions have finished; persist exactly what the
+        // service converged on.
+        self.shared.compact();
+        self.shared.snapshot()?;
+        let _ = std::fs::remove_file(&self.shared.config.socket);
+        Ok(DrainSummary {
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            sessions: self.shared.service.registry_snapshot().sessions.len(),
+            snapshots: self.shared.snapshots.load(Ordering::Relaxed),
+            compacted: self.shared.compacted.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// Start a daemon: bind the socket, seed the service from the registry
+/// (leniently — a corrupt record costs that record, not the daemon), and
+/// spawn the accept + snapshot threads. Refuses to start when another
+/// daemon is already answering on the socket.
+pub fn spawn(config: DaemonConfig) -> Result<DaemonHandle, PatsmaError> {
+    if UnixStream::connect(&config.socket).is_ok() {
+        return Err(PatsmaError::Invalid(format!(
+            "daemon already listening on {}",
+            config.socket.display()
+        )));
+    }
+    if config.socket.exists() {
+        // A stale socket file from a killed daemon; bind would fail on it.
+        std::fs::remove_file(&config.socket)
+            .map_err(|e| PatsmaError::io("removing stale socket", &config.socket, e))?;
+    }
+    let service = TuningService::with_options(config.concurrency, config.shards, config.cache_cap);
+    if config.registry.exists() {
+        let (loaded, _skipped) = ServiceReport::load_lenient(&config.registry)?;
+        service.seed_from(&loaded);
+    }
+    let listener = UnixListener::bind(&config.socket)
+        .map_err(|e| PatsmaError::io("binding daemon socket", &config.socket, e))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| PatsmaError::io("configuring daemon socket", &config.socket, e))?;
+    sig::install();
+    let shared = Arc::new(DaemonShared {
+        service,
+        config,
+        drain: AtomicBool::new(false),
+        requests: AtomicU64::new(0),
+        snapshots: AtomicU64::new(0),
+        compacted: AtomicU64::new(0),
+    });
+    let accept = {
+        let shared = Arc::clone(&shared);
+        thread::Builder::new()
+            .name("patsma-daemon-accept".into())
+            .spawn(move || accept_loop(&listener, &shared))
+            .map_err(|e| PatsmaError::Invalid(format!("spawning accept thread: {e}")))?
+    };
+    let snapshotter = {
+        let shared = Arc::clone(&shared);
+        thread::Builder::new()
+            .name("patsma-daemon-snapshot".into())
+            .spawn(move || snapshot_loop(&shared))
+            .map_err(|e| PatsmaError::Invalid(format!("spawning snapshot thread: {e}")))?
+    };
+    Ok(DaemonHandle {
+        shared,
+        accept: Some(accept),
+        snapshotter: Some(snapshotter),
+    })
+}
+
+/// Accept connections until drain, then join every handler — in-flight
+/// requests (tuning runs included) finish before the daemon exits.
+fn accept_loop(listener: &UnixListener, shared: &Arc<DaemonShared>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.drain_requested() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let shared = Arc::clone(shared);
+                if let Ok(h) = thread::Builder::new()
+                    .name("patsma-daemon-conn".into())
+                    .spawn(move || serve_connection(stream, &shared))
+                {
+                    handlers.push(h);
+                }
+                handlers.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            // A broken listener cannot accept anyone; drain what's left.
+            Err(_) => break,
+        }
+    }
+    // Queued-but-unhandled requests must see the drain, not start work.
+    shared.service.begin_drain();
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Periodic compaction + snapshot, in small ticks so drain is prompt.
+fn snapshot_loop(shared: &Arc<DaemonShared>) {
+    let tick = Duration::from_millis(50);
+    let mut elapsed = Duration::ZERO;
+    loop {
+        if shared.drain_requested() {
+            return;
+        }
+        thread::sleep(tick);
+        elapsed += tick;
+        if elapsed >= shared.config.snapshot_interval {
+            elapsed = Duration::ZERO;
+            shared.compact();
+            // A failed snapshot (disk full, registry dir gone) must not
+            // kill the daemon; the next interval retries.
+            let _ = shared.snapshot();
+        }
+    }
+}
+
+/// What one attempt to read a request produced.
+enum ReadOutcome {
+    /// A complete frame payload.
+    Frame(String),
+    /// The connection is idle between requests and the daemon is draining.
+    Idle,
+    /// The peer closed the connection cleanly.
+    Closed,
+}
+
+/// How long a client may stall *mid-frame* before the connection is
+/// dropped — bounds how long a half-sent request can hold up a drain.
+const MID_FRAME_PATIENCE: u32 = 200; // × the 50 ms read timeout = 10 s
+
+enum Filled {
+    Complete,
+    Eof,
+    DrainIdle,
+}
+
+/// Fill `buf` from the stream, tolerating read timeouts. With `idle_ok`,
+/// a clean EOF or a drain while nothing has been read yet are reported
+/// instead of treated as errors (that is the between-requests state).
+fn fill(
+    stream: &mut UnixStream,
+    buf: &mut [u8],
+    shared: &DaemonShared,
+    idle_ok: bool,
+) -> Result<Filled, PatsmaError> {
+    let mut filled = 0;
+    let mut stalls = 0u32;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 && idle_ok => return Ok(Filled::Eof),
+            Ok(0) => {
+                return Err(PatsmaError::Protocol(
+                    "connection closed mid-frame".into(),
+                ))
+            }
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if filled == 0 && idle_ok {
+                    if shared.drain_requested() {
+                        return Ok(Filled::DrainIdle);
+                    }
+                } else {
+                    stalls += 1;
+                    if stalls > MID_FRAME_PATIENCE {
+                        return Err(PatsmaError::Protocol(
+                            "client stalled mid-frame".into(),
+                        ));
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(PatsmaError::Protocol(format!("reading frame: {e}"))),
+        }
+    }
+    Ok(Filled::Complete)
+}
+
+/// Read one request frame, drain-aware (see [`fill`]).
+fn read_record(
+    stream: &mut UnixStream,
+    shared: &DaemonShared,
+) -> Result<ReadOutcome, PatsmaError> {
+    let mut len_buf = [0u8; 4];
+    match fill(stream, &mut len_buf, shared, true)? {
+        Filled::Complete => {}
+        Filled::Eof => return Ok(ReadOutcome::Closed),
+        Filled::DrainIdle => return Ok(ReadOutcome::Idle),
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > proto::MAX_FRAME {
+        return Err(PatsmaError::Protocol(format!(
+            "frame of {len} bytes exceeds the {}-byte cap",
+            proto::MAX_FRAME
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    match fill(stream, &mut payload, shared, false)? {
+        Filled::Complete => {}
+        Filled::Eof | Filled::DrainIdle => {
+            return Err(PatsmaError::Protocol("connection closed mid-frame".into()))
+        }
+    }
+    String::from_utf8(payload)
+        .map(ReadOutcome::Frame)
+        .map_err(|_| PatsmaError::Protocol("frame payload is not UTF-8".into()))
+}
+
+/// After pushing the unsolicited `draining` frame, how many more idle
+/// read timeouts to linger before closing — long enough that a request
+/// already in flight gets a `draining` answer instead of a broken pipe.
+const DRAIN_LINGER: u32 = 10; // × the 50 ms read timeout = 0.5 s
+
+/// One connection's request/response loop. Every parsed request routes
+/// through [`TuningService::handle`]; a drain while the client is idle
+/// gets a clean `draining` frame before the close.
+fn serve_connection(mut stream: UnixStream, shared: &Arc<DaemonShared>) {
+    // Accepted sockets are blocking; short read timeouts let the handler
+    // notice a drain between requests instead of blocking forever.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut linger = 0u32;
+    loop {
+        match read_record(&mut stream, shared) {
+            Ok(ReadOutcome::Closed) | Err(_) => return,
+            Ok(ReadOutcome::Idle) => {
+                if linger == 0
+                    && proto::write_frame(&mut stream, &Response::Draining.to_wire()).is_err()
+                {
+                    return;
+                }
+                linger += 1;
+                if linger > DRAIN_LINGER {
+                    return;
+                }
+            }
+            Ok(ReadOutcome::Frame(record)) => {
+                shared.requests.fetch_add(1, Ordering::Relaxed);
+                let response = match Request::from_wire(&record) {
+                    Ok(request) => shared.service.handle(request),
+                    Err(e) => Response::Error(e.to_string()),
+                };
+                if proto::write_frame(&mut stream, &response.to_wire()).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Typed client for a running daemon — the same [`Request`]/[`Response`]
+/// API, spoken over the socket.
+///
+/// One client holds one connection; requests on it are sequential (send,
+/// then block on the answer). Concurrency comes from multiple clients.
+pub struct DaemonClient {
+    stream: UnixStream,
+}
+
+impl DaemonClient {
+    /// Connect to a daemon's socket.
+    pub fn connect(socket: &Path) -> Result<Self, PatsmaError> {
+        let stream = UnixStream::connect(socket)
+            .map_err(|e| PatsmaError::io("connecting to daemon", socket, e))?;
+        Ok(Self { stream })
+    }
+
+    /// Send one request, block for the response.
+    pub fn request(&mut self, request: &Request) -> Result<Response, PatsmaError> {
+        proto::write_frame(&mut self.stream, &request.to_wire())?;
+        match proto::read_frame(&mut self.stream)? {
+            Some(record) => Response::from_wire(&record),
+            None => Err(PatsmaError::Protocol(
+                "daemon closed the connection without answering".into(),
+            )),
+        }
+    }
+
+    /// Liveness probe: `(protocol version, sessions held, draining)`.
+    pub fn ping(&mut self) -> Result<(u32, usize, bool), PatsmaError> {
+        match self.request(&Request::Ping)? {
+            Response::Pong {
+                version,
+                sessions,
+                draining,
+            } => Ok((version, sessions, draining)),
+            Response::Draining => Err(PatsmaError::Draining),
+            other => Err(unexpected("ping", &other)),
+        }
+    }
+
+    /// Run (or fetch the converged result of) one session. Returns the
+    /// report and whether it was answered from converged state.
+    pub fn tune(
+        &mut self,
+        spec: SessionSpec,
+        fresh: bool,
+    ) -> Result<(SessionReport, bool), PatsmaError> {
+        match self.request(&Request::Tune { spec, fresh })? {
+            Response::Session { report, cached } => Ok((report, cached)),
+            Response::Draining => Err(PatsmaError::Draining),
+            Response::Error(reason) => Err(PatsmaError::Invalid(reason)),
+            other => Err(unexpected("tune", &other)),
+        }
+    }
+
+    /// The daemon's full registry.
+    pub fn report(&mut self) -> Result<ServiceReport, PatsmaError> {
+        match self.request(&Request::Report)? {
+            Response::Report(report) => Ok(report),
+            Response::Draining => Err(PatsmaError::Draining),
+            Response::Error(reason) => Err(PatsmaError::Invalid(reason)),
+            other => Err(unexpected("report", &other)),
+        }
+    }
+
+    /// Re-tune drifted sessions at `budget` percent of their original
+    /// iteration budget; returns `(drifted, fresh)` id lists.
+    pub fn retune(
+        &mut self,
+        budget: u32,
+        force: bool,
+    ) -> Result<(Vec<String>, Vec<String>), PatsmaError> {
+        match self.request(&Request::Retune { budget, force })? {
+            Response::Retuned { drifted, fresh } => Ok((drifted, fresh)),
+            Response::Draining => Err(PatsmaError::Draining),
+            Response::Error(reason) => Err(PatsmaError::Invalid(reason)),
+            other => Err(unexpected("retune", &other)),
+        }
+    }
+
+    /// Ask the daemon to drain and exit; the `draining` answer is the ack.
+    pub fn shutdown(&mut self) -> Result<(), PatsmaError> {
+        match self.request(&Request::Shutdown)? {
+            Response::Draining => Ok(()),
+            other => Err(unexpected("shutdown", &other)),
+        }
+    }
+}
+
+fn unexpected(what: &str, response: &Response) -> PatsmaError {
+    PatsmaError::Protocol(format!("unexpected {what} response: {response:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Unique socket/registry paths per test — tests in one binary run
+    /// concurrently and unix socket paths are global.
+    fn scratch(tag: &str) -> (PathBuf, PathBuf, PathBuf) {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "patsma-daemon-unit-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        (dir.join("daemon.sock"), dir.join("registry.txt"), dir)
+    }
+
+    #[test]
+    fn daemon_serves_ping_tune_and_drains_cleanly() {
+        let (socket, registry, dir) = scratch("basic");
+        let config = DaemonConfig::new(&socket, &registry)
+            .with_concurrency(2)
+            .with_snapshot_interval(Duration::from_secs(3600));
+        let handle = spawn(config).unwrap();
+
+        let mut client = DaemonClient::connect(&socket).unwrap();
+        let (version, sessions, draining) = client.ping().unwrap();
+        assert_eq!(version, proto::PROTO_VERSION);
+        assert_eq!(sessions, 0);
+        assert!(!draining);
+
+        let spec = SessionSpec::synthetic("unit", 48.0, 7).with_budget(4, 6);
+        let (report, cached) = client.tune(spec.clone(), false).unwrap();
+        assert_eq!(report.id, "unit");
+        assert!(!cached);
+        let (again, cached) = client.tune(spec, false).unwrap();
+        assert!(cached, "second identical tune answers from state");
+        assert_eq!(again, report);
+
+        // A second daemon on a live socket is refused.
+        let dup = DaemonConfig::new(&socket, &registry);
+        assert!(matches!(spawn(dup), Err(PatsmaError::Invalid(_))));
+
+        client.shutdown().unwrap();
+        let summary = handle.wait().unwrap();
+        assert!(summary.requests >= 4, "{summary:?}");
+        assert_eq!(summary.sessions, 1);
+        assert!(summary.snapshots >= 1, "final snapshot always written");
+        assert!(!socket.exists(), "socket removed on drain");
+
+        // The snapshot is a loadable registry holding the session.
+        let persisted = ServiceReport::load(&registry).unwrap();
+        assert_eq!(persisted.sessions.len(), 1);
+        assert_eq!(persisted.sessions[0].id, "unit");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn spawn_replaces_a_stale_socket_file() {
+        let (socket, registry, dir) = scratch("stale");
+        // A dead daemon's leftover: a socket file nobody answers on.
+        let stale = UnixListener::bind(&socket).unwrap();
+        drop(stale);
+        assert!(socket.exists());
+
+        let handle = spawn(
+            DaemonConfig::new(&socket, &registry)
+                .with_concurrency(1)
+                .with_snapshot_interval(Duration::from_secs(3600)),
+        )
+        .unwrap();
+        let mut client = DaemonClient::connect(&socket).unwrap();
+        client.ping().unwrap();
+        client.shutdown().unwrap();
+        handle.wait().unwrap();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

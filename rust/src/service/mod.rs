@@ -73,11 +73,17 @@
 //! ```
 
 pub mod cache;
+pub mod daemon;
+pub mod proto;
 pub mod registry;
+pub mod shard;
 pub mod state;
 
-pub use cache::{fingerprint_str, CacheStats, PointCache};
+pub use cache::{fingerprint_str, CacheStats, DEFAULT_CACHE_CAP, PointCache};
+pub use daemon::{DaemonClient, DaemonConfig, DaemonHandle, DrainSummary};
+pub use proto::{Request, Response};
 pub use registry::{ServiceReport, SessionReport};
+pub use shard::{DEFAULT_SHARDS, SessionEntry, ShardedSessions};
 pub use state::{EnvFingerprint, SessionState};
 
 use crate::optimizer::{
@@ -89,6 +95,7 @@ use crate::space::{Dim, SearchSpace};
 use crate::tuner::{quantize_integer, rescale_internal};
 use crate::workloads::{self, synthetic, Workload};
 use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -735,18 +742,28 @@ pub struct TuningService {
     pool: ThreadPool,
     cache: PointCache,
     history: Mutex<Vec<SessionReport>>,
-    states: Mutex<Vec<SessionState>>,
+    sessions: ShardedSessions,
+    draining: AtomicBool,
 }
 
 impl TuningService {
     /// A service running at most `concurrency` sessions at once (0 is
-    /// promoted to 1, like [`ThreadPool::new`]).
+    /// promoted to 1, like [`ThreadPool::new`]), with the default shard
+    /// count and cache cap.
     pub fn new(concurrency: usize) -> Self {
+        Self::with_options(concurrency, DEFAULT_SHARDS, DEFAULT_CACHE_CAP)
+    }
+
+    /// A service with explicit session-map shard count and point-cache
+    /// residency cap (what `patsma daemon start --shards --cache-cap`
+    /// constructs).
+    pub fn with_options(concurrency: usize, shards: usize, cache_cap: usize) -> Self {
         Self {
             pool: ThreadPool::new(concurrency),
-            cache: PointCache::new(),
+            cache: PointCache::with_cap(cache_cap),
             history: Mutex::new(Vec::new()),
-            states: Mutex::new(Vec::new()),
+            sessions: ShardedSessions::new(shards, EnvFingerprint::current().hash),
+            draining: AtomicBool::new(false),
         }
     }
 
@@ -790,16 +807,21 @@ impl TuningService {
                 .collect()
         };
         let sessions: Vec<SessionReport> = outcomes.iter().map(|o| o.report.clone()).collect();
-        let batch_states: Vec<SessionState> =
-            outcomes.into_iter().filter_map(|o| o.state).collect();
-        self.history.lock().unwrap().extend(sessions.iter().cloned());
-        {
-            let mut all = self.states.lock().unwrap();
-            for st in &batch_states {
-                all.retain(|old| old.id != st.id);
-                all.push(st.clone());
+        let mut batch_states: Vec<SessionState> = Vec::new();
+        for (spec, outcome) in specs.iter().zip(outcomes) {
+            if let Some(st) = &outcome.state {
+                batch_states.push(st.clone());
             }
+            // Completed sessions answer later matching requests without a
+            // re-run (the daemon's converged read fast path).
+            self.sessions.insert(SessionEntry {
+                report: outcome.report,
+                state: outcome.state,
+                fingerprint: spec.fingerprint(),
+                converged: true,
+            });
         }
+        self.history.lock().unwrap().extend(sessions.iter().cloned());
         Ok(ServiceReport {
             sessions,
             states: batch_states,
@@ -808,12 +830,163 @@ impl TuningService {
     }
 
     /// Everything this service has run so far, with current cache counters
-    /// — the registry the coordinator and CLI consume.
+    /// — the registry the coordinator and CLI consume. Sessions are in run
+    /// order (every run, including re-runs); states dedupe by id (latest
+    /// wins) and come back sorted by id.
     pub fn report(&self) -> ServiceReport {
+        let (_, states) = self.sessions.snapshot();
         ServiceReport {
             sessions: self.history.lock().unwrap().clone(),
-            states: self.states.lock().unwrap().clone(),
+            states,
             cache: self.cache.stats(),
+        }
+    }
+
+    /// The *compacted* registry the daemon persists: one session report per
+    /// id (the latest), its state, current cache counters — what survives
+    /// a snapshot/restart cycle, as opposed to [`report`](Self::report)'s
+    /// full in-memory history.
+    pub fn registry_snapshot(&self) -> ServiceReport {
+        let (sessions, states) = self.sessions.snapshot();
+        ServiceReport {
+            sessions,
+            states,
+            cache: self.cache.stats(),
+        }
+    }
+
+    /// Drop all but the latest history entry per session id (what the
+    /// daemon's background compaction thread runs periodically so a
+    /// long-lived process does not accumulate unbounded re-run history).
+    /// Returns how many entries were dropped; run order is preserved.
+    pub fn compact_history(&self) -> usize {
+        let mut history = self.history.lock().unwrap();
+        let before = history.len();
+        let mut seen = std::collections::HashSet::new();
+        let mut kept: Vec<SessionReport> = Vec::new();
+        for report in history.drain(..).rev() {
+            if seen.insert(report.id.clone()) {
+                kept.push(report);
+            }
+        }
+        kept.reverse();
+        *history = kept;
+        before - history.len()
+    }
+
+    /// Seed the service from a previously persisted registry (what the
+    /// daemon does on startup). Loaded sessions count as converged: a
+    /// matching `tune` request is answered from state without a re-run.
+    pub fn seed_from(&self, report: &ServiceReport) {
+        self.sessions.load(&report.sessions, &report.states);
+        self.history
+            .lock()
+            .unwrap()
+            .extend(report.sessions.iter().cloned());
+    }
+
+    /// Refuse new sessions from now on (in-flight ones finish). Used by
+    /// the daemon's graceful SIGTERM drain; there is no un-drain.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether [`begin_drain`](Self::begin_drain) has been called.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// How many requests were answered from a converged session without a
+    /// tuning run.
+    pub fn fast_hits(&self) -> u64 {
+        self.sessions.fast_hits()
+    }
+
+    /// The single typed API the whole runtime speaks — both the in-process
+    /// service and the daemon wire protocol route every operation through
+    /// here (the 0.7 redesign of the ad-hoc `run`/`report`/`retune`
+    /// surface; those remain as conveniences over the same state).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use patsma::service::{Request, Response, SessionSpec, TuningService};
+    ///
+    /// let service = TuningService::new(1);
+    /// let spec = SessionSpec::synthetic("h", 48.0, 7);
+    /// match service.handle(Request::Tune { spec, fresh: false }) {
+    ///     Response::Session { report, cached } => {
+    ///         assert_eq!(report.id, "h");
+    ///         assert!(!cached, "first run is never cached");
+    ///     }
+    ///     other => panic!("unexpected {other:?}"),
+    /// }
+    /// ```
+    pub fn handle(&self, request: Request) -> Response {
+        match request {
+            Request::Ping => Response::Pong {
+                version: proto::PROTO_VERSION,
+                sessions: self.sessions.len(),
+                draining: self.is_draining(),
+            },
+            Request::Report => Response::Report(self.report()),
+            Request::Shutdown => {
+                self.begin_drain();
+                Response::Draining
+            }
+            Request::Tune { mut spec, fresh } => {
+                if self.is_draining() {
+                    return Response::Draining;
+                }
+                if let Err(e) = spec.validate() {
+                    return Response::Error(format!("{e:#}"));
+                }
+                let fingerprint = spec.fingerprint();
+                if !fresh {
+                    if let Some(entry) = self.sessions.get(fingerprint, &spec.id) {
+                        // Converged over the same landscape: answer from
+                        // state — a read, not a tuning run.
+                        if entry.converged && entry.fingerprint == fingerprint {
+                            return Response::Session {
+                                report: entry.report.clone(),
+                                cached: true,
+                            };
+                        }
+                        // Otherwise warm-start when the persisted state
+                        // still belongs to this landscape.
+                        if let Some(state) = &entry.state {
+                            if state.fingerprint == fingerprint {
+                                spec.warm = Some(state.clone());
+                            }
+                        }
+                    }
+                }
+                match self.run(std::slice::from_ref(&spec)) {
+                    Ok(report) => Response::Session {
+                        report: report.sessions[0].clone(),
+                        cached: false,
+                    },
+                    Err(e) => Response::Error(format!("{e:#}")),
+                }
+            }
+            Request::Retune { budget, force } => {
+                if self.is_draining() {
+                    return Response::Draining;
+                }
+                let (_, states) = self.sessions.snapshot();
+                let plan =
+                    match plan_retune(&states, &EnvFingerprint::current(), budget, force) {
+                        Ok(p) => p,
+                        Err(e) => return Response::Error(format!("{e:#}")),
+                    };
+                if let Err(e) = self.run(&plan.specs) {
+                    return Response::Error(format!("{e:#}"));
+                }
+                Response::Retuned {
+                    drifted: plan.drifted,
+                    fresh: plan.fresh,
+                }
+            }
         }
     }
 }
@@ -1507,5 +1680,138 @@ mod tests {
         assert_eq!(second.states[0].max_iter, 20, "budget must not compound");
         let plan2 = plan_retune(&second.states, &elsewhere, 40, true).unwrap();
         assert_eq!(plan2.specs[0].max_iter, 8, "still 40% of the original 20");
+    }
+
+    #[test]
+    fn handle_speaks_the_request_response_api() {
+        let service = TuningService::new(1);
+
+        // Ping on an empty service.
+        match service.handle(Request::Ping) {
+            Response::Pong {
+                version,
+                sessions,
+                draining,
+            } => {
+                assert_eq!(version, proto::PROTO_VERSION);
+                assert_eq!(sessions, 0);
+                assert!(!draining);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // First tune runs; the identical second one is answered from the
+        // converged entry without re-running.
+        let spec = SessionSpec::synthetic("h", 48.0, 7).with_budget(4, 6);
+        let first = match service.handle(Request::Tune {
+            spec: spec.clone(),
+            fresh: false,
+        }) {
+            Response::Session { report, cached } => {
+                assert!(!cached);
+                report
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        match service.handle(Request::Tune {
+            spec: spec.clone(),
+            fresh: false,
+        }) {
+            Response::Session { report, cached } => {
+                assert!(cached, "identical request must hit the fast path");
+                assert_eq!(report, first);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(service.fast_hits(), 1);
+
+        // `fresh` forces a re-run past the converged entry.
+        match service.handle(Request::Tune { spec, fresh: true }) {
+            Response::Session { cached, .. } => assert!(!cached),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Invalid specs come back as typed errors, not panics.
+        let bad = SessionSpec::synthetic("bad id", 48.0, 7);
+        assert!(matches!(
+            service.handle(Request::Tune {
+                spec: bad,
+                fresh: false
+            }),
+            Response::Error(_)
+        ));
+
+        // Report sees the history; retune in an unchanged environment is
+        // all-fresh.
+        match service.handle(Request::Report) {
+            Response::Report(r) => {
+                assert_eq!(r.sessions.len(), 2, "cached answers never re-log");
+                assert_eq!(r.states.len(), 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match service.handle(Request::Retune {
+            budget: 50,
+            force: false,
+        }) {
+            Response::Retuned { drifted, fresh } => {
+                assert!(drifted.is_empty());
+                assert_eq!(fresh, vec!["h"]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Shutdown drains: new sessions are refused, reads still work.
+        assert!(matches!(
+            service.handle(Request::Shutdown),
+            Response::Draining
+        ));
+        assert!(service.is_draining());
+        assert!(matches!(
+            service.handle(Request::Tune {
+                spec: SessionSpec::synthetic("late", 48.0, 7),
+                fresh: false
+            }),
+            Response::Draining
+        ));
+        assert!(matches!(service.handle(Request::Report), Response::Report(_)));
+    }
+
+    #[test]
+    fn compaction_and_snapshot_keep_the_latest_run_per_id() {
+        let service = TuningService::new(1);
+        let spec = SessionSpec::synthetic("c", 48.0, 7).with_budget(4, 6);
+        service.run(std::slice::from_ref(&spec)).unwrap();
+        let mut again = spec;
+        again.seed = 9;
+        service.run(&[again, SessionSpec::synthetic("d", 24.0, 1)]).unwrap();
+
+        assert_eq!(service.report().sessions.len(), 3);
+        let snap = service.registry_snapshot();
+        assert_eq!(snap.sessions.len(), 2, "snapshot is compacted");
+        let ids: Vec<&str> = snap.sessions.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["c", "d"], "sorted by id");
+
+        assert_eq!(service.compact_history(), 1, "one duplicate dropped");
+        assert_eq!(service.compact_history(), 0, "idempotent");
+        let after = service.report();
+        assert_eq!(after.sessions.len(), 2);
+        let ids: Vec<&str> = after.sessions.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["c", "d"], "run order preserved");
+
+        // A fresh service seeded from the snapshot answers from state.
+        let heir = TuningService::new(1);
+        heir.seed_from(&snap);
+        let mut warm = SessionSpec::synthetic("c", 48.0, 9).with_budget(4, 6);
+        warm.seed = 9;
+        match heir.handle(Request::Tune {
+            spec: warm,
+            fresh: false,
+        }) {
+            Response::Session { cached, .. } => {
+                assert!(cached, "seeded sessions answer without re-running")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

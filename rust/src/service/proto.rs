@@ -1,0 +1,501 @@
+//! The daemon wire protocol — typed requests/responses and socket framing.
+//!
+//! [`Request`] and [`Response`] are the *single* API surface the tuning
+//! runtime speaks: the in-process [`super::TuningService::handle`] consumes
+//! a `Request` and produces a `Response`, and the daemon
+//! ([`super::daemon`]) moves exactly those values across a unix socket.
+//! There is no second, richer in-process API — a local caller and a remote
+//! client can do the same things and nothing else.
+//!
+//! ## Wire format
+//!
+//! Each message is one **frame**: a 4-byte big-endian length prefix
+//! followed by that many bytes of UTF-8 text ([`write_frame`] /
+//! [`read_frame`]). The text payload reuses the registry-v2 `key=value`
+//! codec ([`super::registry`]) — a session record means the same thing in a
+//! registry file and in a socket frame:
+//!
+//! ```text
+//! ping v=1
+//! tune id=s0 workload=synthetic/opt=48/... optimizer=csa ignore=0 num_opt=4 max_iter=8 seed=42 fresh=0
+//! report
+//! retune budget=50 force=0
+//! shutdown
+//! ```
+//!
+//! Responses mirror the shape (`pong ...`, `session cached=0 id=...`,
+//! `retuned drifted=a,b fresh=-`, `draining`, `error <message>`); the
+//! `report` response embeds a whole registry after its first line. Unknown
+//! keys are ignored on both sides, so either end can grow fields without
+//! breaking the other.
+//!
+//! Warm-start state never crosses the wire: the daemon owns the session
+//! registry, so a `tune` request names a landscape and the daemon decides
+//! (from its own sharded state) whether to warm-start, answer from a
+//! converged session, or run cold (`fresh=1` forces a cold re-run).
+
+use super::registry::{kv_get, kv_num, kv_opt, split_kv};
+use super::{OptimizerSpec, ServiceReport, SessionReport, SessionSpec, WorkloadSpec};
+use crate::error::PatsmaError;
+use std::io::{Read, Write};
+
+/// Protocol version spoken by this build (carried in `ping`/`pong`).
+pub const PROTO_VERSION: u32 = 1;
+
+/// Frames above this many payload bytes are rejected — a corrupt or
+/// adversarial length prefix must not trigger a giant allocation.
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// One client request — everything the tuning runtime can be asked to do.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness + version probe.
+    Ping,
+    /// Run (or answer from converged state) one tuning session. `fresh`
+    /// forces a cold re-run even when a converged session exists.
+    Tune {
+        /// The session to run. Its `warm` field is daemon-owned and never
+        /// crosses the wire.
+        spec: SessionSpec,
+        /// Skip the converged fast path and any warm start.
+        fresh: bool,
+    },
+    /// Everything the service has run so far (the registry).
+    Report,
+    /// Re-tune sessions whose environment fingerprint drifted, at
+    /// `budget` percent of their original iteration budget.
+    Retune {
+        /// Percentage of each drifted session's original `max_iter`.
+        budget: u32,
+        /// Re-tune everything, drifted or not.
+        force: bool,
+    },
+    /// Begin a graceful drain (in-flight sessions finish, then exit).
+    Shutdown,
+}
+
+/// The service's answer to a [`Request`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Answer to [`Request::Ping`].
+    Pong {
+        /// Protocol version of the answering service.
+        version: u32,
+        /// Sessions currently held (shard-map population).
+        sessions: usize,
+        /// Whether the service is draining (new sessions refused).
+        draining: bool,
+    },
+    /// Answer to [`Request::Tune`].
+    Session {
+        /// The finished (or cached) session.
+        report: SessionReport,
+        /// True when answered from converged state without re-running.
+        cached: bool,
+    },
+    /// Answer to [`Request::Report`].
+    Report(ServiceReport),
+    /// Answer to [`Request::Retune`].
+    Retuned {
+        /// Ids that were re-tuned.
+        drifted: Vec<String>,
+        /// Ids left untouched (environment unchanged).
+        fresh: Vec<String>,
+    },
+    /// The service is draining; no new sessions are accepted.
+    Draining,
+    /// The request failed; human-readable reason.
+    Error(String),
+}
+
+/// Join ids with commas; empty lists become the `-` sentinel so the value
+/// stays non-empty (the codec splits records on whitespace).
+fn join_ids(ids: &[String]) -> String {
+    if ids.is_empty() {
+        "-".to_string()
+    } else {
+        ids.join(",")
+    }
+}
+
+/// Inverse of [`join_ids`].
+fn split_ids(text: &str) -> Vec<String> {
+    if text == "-" {
+        Vec::new()
+    } else {
+        text.split(',').map(str::to_string).collect()
+    }
+}
+
+fn bool_flag(pairs: &[(String, String)], key: &str) -> bool {
+    kv_opt(pairs, key) == Some("1")
+}
+
+impl Request {
+    /// Serialise to the single-line wire record.
+    pub fn to_wire(&self) -> String {
+        match self {
+            Request::Ping => format!("ping v={PROTO_VERSION}"),
+            Request::Tune { spec, fresh } => format!(
+                "tune id={} workload={} optimizer={} ignore={} num_opt={} max_iter={} seed={} fresh={}",
+                spec.id,
+                spec.workload.descriptor(),
+                spec.optimizer.name(),
+                spec.ignore,
+                spec.num_opt,
+                spec.max_iter,
+                spec.seed,
+                u8::from(*fresh),
+            ),
+            Request::Report => "report".to_string(),
+            Request::Retune { budget, force } => {
+                format!("retune budget={budget} force={}", u8::from(*force))
+            }
+            Request::Shutdown => "shutdown".to_string(),
+        }
+    }
+
+    /// Parse a wire record back into a request.
+    pub fn from_wire(record: &str) -> Result<Self, PatsmaError> {
+        let tokens: Vec<&str> = record.split_whitespace().collect();
+        let verb = *tokens
+            .first()
+            .ok_or_else(|| PatsmaError::Protocol("empty request".into()))?;
+        let pairs = split_kv(&tokens[1..])
+            .map_err(|e| PatsmaError::Protocol(format!("{verb}: {e}")))?;
+        match verb {
+            "ping" => Ok(Request::Ping),
+            "tune" => {
+                let descriptor = kv_get(&pairs, "workload")
+                    .map_err(|e| PatsmaError::Protocol(format!("tune: {e}")))?;
+                let workload = WorkloadSpec::parse_descriptor(descriptor)
+                    .map_err(|e| PatsmaError::Protocol(format!("tune: {e:#}")))?;
+                let opt_name = kv_get(&pairs, "optimizer")
+                    .map_err(|e| PatsmaError::Protocol(format!("tune: {e}")))?;
+                let optimizer = OptimizerSpec::parse(opt_name)
+                    .map_err(|e| PatsmaError::Protocol(format!("tune: {e:#}")))?;
+                let num = |key: &str| -> Result<u64, PatsmaError> {
+                    kv_num(&pairs, key)
+                        .map_err(|e| PatsmaError::Protocol(format!("tune: {e}")))
+                };
+                let spec = SessionSpec {
+                    id: kv_get(&pairs, "id")
+                        .map_err(|e| PatsmaError::Protocol(format!("tune: {e}")))?
+                        .to_string(),
+                    workload,
+                    optimizer,
+                    ignore: num("ignore")? as u32,
+                    num_opt: num("num_opt")? as usize,
+                    max_iter: num("max_iter")? as usize,
+                    seed: num("seed")?,
+                    warm: None,
+                };
+                Ok(Request::Tune {
+                    spec,
+                    fresh: bool_flag(&pairs, "fresh"),
+                })
+            }
+            "report" => Ok(Request::Report),
+            "retune" => Ok(Request::Retune {
+                budget: kv_num(&pairs, "budget")
+                    .map_err(|e| PatsmaError::Protocol(format!("retune: {e}")))?,
+                force: bool_flag(&pairs, "force"),
+            }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(PatsmaError::Protocol(format!(
+                "unknown request verb {other:?}"
+            ))),
+        }
+    }
+}
+
+impl Response {
+    /// Serialise to the wire record (multi-line for `report`).
+    pub fn to_wire(&self) -> String {
+        match self {
+            Response::Pong {
+                version,
+                sessions,
+                draining,
+            } => format!(
+                "pong v={version} sessions={sessions} draining={}",
+                u8::from(*draining)
+            ),
+            Response::Session { report, cached } => {
+                let body = report
+                    .to_kv()
+                    .into_iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                format!("session cached={} {body}", u8::from(*cached))
+            }
+            Response::Report(report) => format!("report\n{}", report.to_text()),
+            Response::Retuned { drifted, fresh } => format!(
+                "retuned drifted={} fresh={}",
+                join_ids(drifted),
+                join_ids(fresh)
+            ),
+            Response::Draining => "draining".to_string(),
+            Response::Error(reason) => format!("error {reason}"),
+        }
+    }
+
+    /// Parse a wire record back into a response.
+    pub fn from_wire(record: &str) -> Result<Self, PatsmaError> {
+        // `report` carries a whole registry after its first line; `error`
+        // carries free text. Both split on the first newline/space before
+        // the kv codec applies.
+        if let Some(rest) = record.strip_prefix("report\n") {
+            let report = ServiceReport::from_text(rest)
+                .map_err(|e| PatsmaError::Protocol(format!("report: {e}")))?;
+            return Ok(Response::Report(report));
+        }
+        if let Some(reason) = record.strip_prefix("error ") {
+            return Ok(Response::Error(reason.to_string()));
+        }
+        let tokens: Vec<&str> = record.split_whitespace().collect();
+        let verb = *tokens
+            .first()
+            .ok_or_else(|| PatsmaError::Protocol("empty response".into()))?;
+        let pairs = split_kv(&tokens[1..])
+            .map_err(|e| PatsmaError::Protocol(format!("{verb}: {e}")))?;
+        match verb {
+            "pong" => Ok(Response::Pong {
+                version: kv_num(&pairs, "v")
+                    .map_err(|e| PatsmaError::Protocol(format!("pong: {e}")))?,
+                sessions: kv_num(&pairs, "sessions")
+                    .map_err(|e| PatsmaError::Protocol(format!("pong: {e}")))?,
+                draining: bool_flag(&pairs, "draining"),
+            }),
+            "session" => Ok(Response::Session {
+                report: SessionReport::from_kv(&pairs)
+                    .map_err(|e| PatsmaError::Protocol(format!("session: {e}")))?,
+                cached: bool_flag(&pairs, "cached"),
+            }),
+            "retuned" => Ok(Response::Retuned {
+                drifted: split_ids(
+                    kv_get(&pairs, "drifted")
+                        .map_err(|e| PatsmaError::Protocol(format!("retuned: {e}")))?,
+                ),
+                fresh: split_ids(
+                    kv_get(&pairs, "fresh")
+                        .map_err(|e| PatsmaError::Protocol(format!("retuned: {e}")))?,
+                ),
+            }),
+            "draining" => Ok(Response::Draining),
+            "error" => Ok(Response::Error(String::new())),
+            other => Err(PatsmaError::Protocol(format!(
+                "unknown response verb {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Write one length-prefixed frame (4-byte big-endian length, then the
+/// UTF-8 payload) and flush.
+pub fn write_frame(w: &mut impl Write, record: &str) -> Result<(), PatsmaError> {
+    let bytes = record.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(PatsmaError::Protocol(format!(
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte cap",
+            bytes.len()
+        )));
+    }
+    let len = (bytes.len() as u32).to_be_bytes();
+    let io_err = |e: std::io::Error| PatsmaError::Protocol(format!("writing frame: {e}"));
+    w.write_all(&len).map_err(io_err)?;
+    w.write_all(bytes).map_err(io_err)?;
+    w.flush().map_err(io_err)
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection cleanly
+/// *before* a length prefix started — mid-frame EOF is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<String>, PatsmaError> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0;
+    while filled < len_buf.len() {
+        match r.read(&mut len_buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(PatsmaError::Protocol(
+                    "connection closed mid-frame (in length prefix)".into(),
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(PatsmaError::Protocol(format!("reading frame: {e}"))),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(PatsmaError::Protocol(format!(
+            "frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        match r.read(&mut payload[filled..]) {
+            Ok(0) => {
+                return Err(PatsmaError::Protocol(
+                    "connection closed mid-frame (in payload)".into(),
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(PatsmaError::Protocol(format!("reading frame: {e}"))),
+        }
+    }
+    String::from_utf8(payload)
+        .map(Some)
+        .map_err(|_| PatsmaError::Protocol("frame payload is not UTF-8".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::CacheStats;
+
+    fn sample_report() -> SessionReport {
+        SessionReport {
+            id: "s0".into(),
+            workload: "synthetic/opt=48/dim=1/lo=1/hi=128/kind=int".into(),
+            optimizer: "csa".into(),
+            evaluations: 32,
+            target_iterations: 28,
+            cache_hits: 4,
+            cache_misses: 28,
+            best_point: vec![47.0],
+            best_label: None,
+            best_cost: 1.0104,
+            wall_secs: 0.002,
+            warm_started: false,
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip_over_the_wire() {
+        let requests = [
+            Request::Ping,
+            Request::Tune {
+                spec: SessionSpec::synthetic("t", 48.0, 7),
+                fresh: false,
+            },
+            Request::Tune {
+                spec: SessionSpec::synthetic_joint("j", 48.0, 7)
+                    .with_optimizer(OptimizerSpec::Pso)
+                    .with_budget(5, 16),
+                fresh: true,
+            },
+            Request::Report,
+            Request::Retune {
+                budget: 50,
+                force: true,
+            },
+            Request::Shutdown,
+        ];
+        for req in requests {
+            let wire = req.to_wire();
+            assert!(!wire.contains('\n'), "requests are single-line: {wire:?}");
+            let parsed = Request::from_wire(&wire).unwrap();
+            assert_eq!(parsed, req, "{wire}");
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip_over_the_wire() {
+        let responses = [
+            Response::Pong {
+                version: PROTO_VERSION,
+                sessions: 3,
+                draining: false,
+            },
+            Response::Session {
+                report: sample_report(),
+                cached: true,
+            },
+            Response::Report(ServiceReport {
+                sessions: vec![sample_report()],
+                states: Vec::new(),
+                cache: CacheStats {
+                    hits: 4,
+                    misses: 28,
+                    entries: 28,
+                    evictions: 0,
+                    cap: 65_536,
+                },
+            }),
+            Response::Retuned {
+                drifted: vec!["a".into(), "b".into()],
+                fresh: Vec::new(),
+            },
+            Response::Draining,
+            Response::Error("workload nope is not registered".into()),
+        ];
+        for resp in responses {
+            let parsed = Response::from_wire(&resp.to_wire()).unwrap();
+            assert_eq!(parsed, resp, "{}", resp.to_wire());
+        }
+    }
+
+    #[test]
+    fn tune_requests_never_carry_warm_state() {
+        // Even if a caller stuffs a warm state into the spec, the wire form
+        // drops it — the daemon owns persistence.
+        let state = crate::service::TuningService::new(1)
+            .run(&[SessionSpec::synthetic("w", 48.0, 7).with_budget(4, 6)])
+            .unwrap()
+            .states[0]
+            .clone();
+        let req = Request::Tune {
+            spec: SessionSpec::synthetic("w", 48.0, 8).warm_start(state),
+            fresh: false,
+        };
+        let parsed = Request::from_wire(&req.to_wire()).unwrap();
+        match parsed {
+            Request::Tune { spec, .. } => assert!(spec.warm.is_none()),
+            other => panic!("expected tune, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_records_are_protocol_errors() {
+        for bad in [
+            "",
+            "frobnicate x=1",
+            "tune id=only",
+            "tune id=t workload=garbage optimizer=csa ignore=0 num_opt=4 max_iter=8 seed=1",
+            "retune budget=NaN",
+        ] {
+            let err = Request::from_wire(bad).unwrap_err();
+            assert!(
+                matches!(err, PatsmaError::Protocol(_)),
+                "{bad:?} gave {err}"
+            );
+        }
+        assert!(Response::from_wire("pong v=notanumber").is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_and_reject_oversize() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "ping v=1").unwrap();
+        write_frame(&mut buf, "report").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("ping v=1"));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("report"));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF is None");
+
+        // A hostile length prefix must not allocate 4 GiB.
+        let huge = (u32::MAX).to_be_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+
+        // Mid-frame EOF is an error, not a silent None.
+        let mut truncated = Vec::new();
+        write_frame(&mut truncated, "shutdown").unwrap();
+        truncated.truncate(truncated.len() - 3);
+        let mut r = &truncated[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

@@ -15,22 +15,31 @@
 //!
 //! ```text
 //! # patsma-service-registry v2
-//! cache hits=3 misses=29 entries=29
+//! cache hits=3 misses=29 entries=29 evictions=0 cap=65536
 //! session id=s0 workload=synthetic/... optimizer=csa evals=20 ... warm=0
 //! state id=s0 workload=synthetic/... fingerprint=... env=threads=8/os=linux ...
 //! ```
 //!
+//! The same `key=value` codec carries the daemon's wire payloads
+//! ([`crate::service::proto`]) — a session record means the same thing in
+//! a registry file and in a socket frame.
+//!
 //! Compatibility rules:
 //! * **unknown keys are ignored** on load — newer writers can add fields
 //!   without breaking older readers (pinned by tests);
-//! * **v1 files still load** (the positional format of the first release);
+//! * **v1 files still load** (the positional format of the first release),
+//!   and v2 files written before the cache grew `evictions`/`cap` load
+//!   with those counters zeroed;
 //! * [`ServiceReport::from_text`] is strict about malformed records, while
 //!   [`ServiceReport::from_text_lenient`] skips them and reports what it
 //!   skipped — corrupt-file recovery for long-lived registries.
+//!
+//! Failures are typed [`PatsmaError`]s: `Registry` for malformed records
+//! (with the 1-based line number attached), `Io` for filesystem errors.
 
 use super::cache::CacheStats;
 use super::state::SessionState;
-use anyhow::{bail, Context, Result};
+use crate::error::PatsmaError;
 use std::path::Path;
 
 /// Magic first line of a v2 registry file.
@@ -74,6 +83,53 @@ pub struct SessionReport {
     pub warm_started: bool,
 }
 
+impl SessionReport {
+    /// Serialise to the v2 `key=value` pairs — the one codec shared by the
+    /// registry file and the daemon wire protocol. Order is stable (the
+    /// registry is diffable); the optional `label` key comes last.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let mut kv = vec![
+            ("id".to_string(), self.id.clone()),
+            ("workload".to_string(), self.workload.clone()),
+            ("optimizer".to_string(), self.optimizer.clone()),
+            ("evals".to_string(), self.evaluations.to_string()),
+            ("iters".to_string(), self.target_iterations.to_string()),
+            ("hits".to_string(), self.cache_hits.to_string()),
+            ("misses".to_string(), self.cache_misses.to_string()),
+            ("best".to_string(), fmt_point(&self.best_point)),
+            ("cost".to_string(), format!("{}", self.best_cost)),
+            ("wall".to_string(), format!("{}", self.wall_secs)),
+            (
+                "warm".to_string(),
+                if self.warm_started { "1" } else { "0" }.to_string(),
+            ),
+        ];
+        if let Some(label) = &self.best_label {
+            kv.push(("label".to_string(), label.clone()));
+        }
+        kv
+    }
+
+    /// Parse from v2 `key=value` pairs (unknown keys ignored, `warm` and
+    /// `label` optional — see module compatibility rules).
+    pub fn from_kv(pairs: &[(String, String)]) -> Result<Self, PatsmaError> {
+        Ok(SessionReport {
+            id: kv_get(pairs, "id")?.to_string(),
+            workload: kv_get(pairs, "workload")?.to_string(),
+            optimizer: kv_get(pairs, "optimizer")?.to_string(),
+            evaluations: kv_num(pairs, "evals")?,
+            target_iterations: kv_num(pairs, "iters")?,
+            cache_hits: kv_num(pairs, "hits")?,
+            cache_misses: kv_num(pairs, "misses")?,
+            best_point: parse_point(kv_get(pairs, "best")?)?,
+            best_label: kv_opt(pairs, "label").map(str::to_string),
+            best_cost: kv_num(pairs, "cost")?,
+            wall_secs: kv_num(pairs, "wall")?,
+            warm_started: kv_opt(pairs, "warm") == Some("1"),
+        })
+    }
+}
+
 /// A batch of session results plus persisted states and cache counters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServiceReport {
@@ -98,14 +154,14 @@ fn fmt_point(point: &[f64]) -> String {
     }
 }
 
-fn parse_point(text: &str) -> Result<Vec<f64>> {
+fn parse_point(text: &str) -> Result<Vec<f64>, PatsmaError> {
     if text == "-" {
         return Ok(Vec::new());
     }
     text.split(',')
         .map(|v| {
             v.parse::<f64>()
-                .with_context(|| format!("bad point coord {v:?}"))
+                .map_err(|_| PatsmaError::registry(format!("bad point coord {v:?}")))
         })
         .collect()
 }
@@ -149,13 +205,15 @@ impl ServiceReport {
         let c = &self.cache;
         out.push_str(&format!(
             "\nsessions: {}; session cache hits: {}; shared cache: {} hits / {} misses \
-             ({:.1}% hit rate), {} entries; persisted states: {}\n",
+             ({:.1}% hit rate), {} entries (cap {}, {} evicted); persisted states: {}\n",
             self.sessions.len(),
             self.session_cache_hits(),
             c.hits,
             c.misses,
             100.0 * c.hit_rate(),
             c.entries,
+            c.cap,
+            c.evictions,
             self.states.len(),
         ));
         out
@@ -165,29 +223,21 @@ impl ServiceReport {
     pub fn to_text(&self) -> String {
         let mut out = format!("{HEADER_V2}\n");
         out.push_str(&format!(
-            "cache hits={} misses={} entries={}\n",
-            self.cache.hits, self.cache.misses, self.cache.entries
+            "cache hits={} misses={} entries={} evictions={} cap={}\n",
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.entries,
+            self.cache.evictions,
+            self.cache.cap
         ));
         for s in &self.sessions {
-            out.push_str(&format!(
-                "session id={} workload={} optimizer={} evals={} iters={} hits={} misses={} \
-                 best={} cost={} wall={} warm={}",
-                s.id,
-                s.workload,
-                s.optimizer,
-                s.evaluations,
-                s.target_iterations,
-                s.cache_hits,
-                s.cache_misses,
-                fmt_point(&s.best_point),
-                s.best_cost,
-                s.wall_secs,
-                if s.warm_started { 1 } else { 0 },
-            ));
-            if let Some(label) = &s.best_label {
-                out.push_str(&format!(" label={label}"));
-            }
-            out.push('\n');
+            let body = s
+                .to_kv()
+                .into_iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            out.push_str(&format!("session {body}\n"));
         }
         for st in &self.states {
             let body = st
@@ -205,7 +255,7 @@ impl ServiceReport {
     /// malformed records are an error (use
     /// [`from_text_lenient`](Self::from_text_lenient) to recover instead);
     /// unknown *keys* inside a known record are ignored.
-    pub fn from_text(text: &str) -> Result<Self> {
+    pub fn from_text(text: &str) -> Result<Self, PatsmaError> {
         let (report, skipped) = Self::parse(text, false)?;
         debug_assert!(skipped.is_empty(), "strict parse cannot skip");
         Ok(report)
@@ -215,21 +265,27 @@ impl ServiceReport {
     /// recovered report and one human-readable note per skipped line. The
     /// header must still match — without it the file is not a registry and
     /// "recovering" it would fabricate an empty report from garbage.
-    pub fn from_text_lenient(text: &str) -> Result<(Self, Vec<String>)> {
+    pub fn from_text_lenient(text: &str) -> Result<(Self, Vec<String>), PatsmaError> {
         Self::parse(text, true)
     }
 
-    fn parse(text: &str, lenient: bool) -> Result<(Self, Vec<String>)> {
+    fn parse(text: &str, lenient: bool) -> Result<(Self, Vec<String>), PatsmaError> {
         let mut lines = text.lines();
         let version = match lines.next().map(str::trim) {
             Some(h) if h == HEADER_V2 => 2,
             Some(h) if h == HEADER_V1 => 1,
-            other => bail!("not a service registry (header {other:?})"),
+            other => {
+                return Err(PatsmaError::registry(format!(
+                    "not a service registry (header {other:?})"
+                )))
+            }
         };
         let mut cache = CacheStats {
             hits: 0,
             misses: 0,
             entries: 0,
+            evictions: 0,
+            cap: 0,
         };
         let mut sessions = Vec::new();
         let mut states = Vec::new();
@@ -246,9 +302,9 @@ impl ServiceReport {
             };
             if let Err(e) = parsed {
                 if lenient {
-                    skipped.push(format!("line {}: {e:#}", lineno + 2));
+                    skipped.push(format!("line {}: {e}", lineno + 2));
                 } else {
-                    return Err(e.context(format!("registry line {}", lineno + 2)));
+                    return Err(e.at_line(lineno + 2));
                 }
             }
         }
@@ -263,49 +319,74 @@ impl ServiceReport {
     }
 
     /// Write the registry to `path`.
-    pub fn save(&self, path: &Path) -> Result<()> {
+    pub fn save(&self, path: &Path) -> Result<(), PatsmaError> {
         std::fs::write(path, self.to_text())
-            .with_context(|| format!("writing registry {}", path.display()))
+            .map_err(|e| PatsmaError::io("writing registry", path, e))
     }
 
     /// Read a registry from `path` (strict).
-    pub fn load(path: &Path) -> Result<Self> {
+    pub fn load(path: &Path) -> Result<Self, PatsmaError> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading registry {}", path.display()))?;
+            .map_err(|e| PatsmaError::io("reading registry", path, e))?;
         Self::from_text(&text)
     }
 
     /// Read a registry from `path`, recovering what a corrupted file still
     /// holds; returns the skipped-line notes alongside.
-    pub fn load_lenient(path: &Path) -> Result<(Self, Vec<String>)> {
+    pub fn load_lenient(path: &Path) -> Result<(Self, Vec<String>), PatsmaError> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading registry {}", path.display()))?;
+            .map_err(|e| PatsmaError::io("reading registry", path, e))?;
         Self::from_text_lenient(&text)
     }
 }
 
 /// Split a v2 record body into `(key, value)` pairs; values may themselves
 /// contain `=` (descriptors), so only the first `=` per token splits.
-fn split_kv(tokens: &[&str]) -> Result<Vec<(String, String)>> {
+pub(crate) fn split_kv(tokens: &[&str]) -> Result<Vec<(String, String)>, PatsmaError> {
     tokens
         .iter()
         .map(|t| {
             t.split_once('=')
                 .map(|(k, v)| (k.to_string(), v.to_string()))
-                .with_context(|| format!("token {t:?} is not key=value"))
+                .ok_or_else(|| PatsmaError::registry(format!("token {t:?} is not key=value")))
         })
         .collect()
 }
 
-fn kv_get<'a>(pairs: &'a [(String, String)], key: &str) -> Result<&'a str> {
-    kv_opt(pairs, key).with_context(|| format!("missing {key:?}"))
+pub(crate) fn kv_get<'a>(pairs: &'a [(String, String)], key: &str) -> Result<&'a str, PatsmaError> {
+    kv_opt(pairs, key).ok_or_else(|| PatsmaError::registry(format!("missing {key:?}")))
 }
 
-fn kv_opt<'a>(pairs: &'a [(String, String)], key: &str) -> Option<&'a str> {
+pub(crate) fn kv_opt<'a>(pairs: &'a [(String, String)], key: &str) -> Option<&'a str> {
     pairs
         .iter()
         .find(|(k, _)| k == key)
         .map(|(_, v)| v.as_str())
+}
+
+/// A required `key=value` whose value must parse as `T`.
+pub(crate) fn kv_num<T: std::str::FromStr>(
+    pairs: &[(String, String)],
+    key: &str,
+) -> Result<T, PatsmaError> {
+    let v = kv_get(pairs, key)?;
+    v.parse()
+        .map_err(|_| PatsmaError::registry(format!("bad {key} {v:?}")))
+}
+
+/// An optional `key=value` whose value, when present, must parse as `T`;
+/// absent keys yield `default` (back-compat with older writers).
+pub(crate) fn kv_num_or<T: std::str::FromStr>(
+    pairs: &[(String, String)],
+    key: &str,
+    default: T,
+) -> Result<T, PatsmaError> {
+    match kv_opt(pairs, key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| PatsmaError::registry(format!("bad {key} {v:?}"))),
+    }
 }
 
 fn parse_v2_record(
@@ -313,32 +394,22 @@ fn parse_v2_record(
     cache: &mut CacheStats,
     sessions: &mut Vec<SessionReport>,
     states: &mut Vec<SessionState>,
-) -> Result<()> {
+) -> Result<(), PatsmaError> {
     let tokens: Vec<&str> = line.split_whitespace().collect();
     let pairs = split_kv(&tokens[1..])?;
     match tokens[0] {
         "cache" => {
             *cache = CacheStats {
-                hits: kv_get(&pairs, "hits")?.parse().context("bad hits")?,
-                misses: kv_get(&pairs, "misses")?.parse().context("bad misses")?,
-                entries: kv_get(&pairs, "entries")?.parse().context("bad entries")?,
+                hits: kv_num(&pairs, "hits")?,
+                misses: kv_num(&pairs, "misses")?,
+                entries: kv_num(&pairs, "entries")?,
+                // Pre-LRU v2 writers did not emit these; zero is honest.
+                evictions: kv_num_or(&pairs, "evictions", 0)?,
+                cap: kv_num_or(&pairs, "cap", 0)?,
             };
         }
         "session" => {
-            sessions.push(SessionReport {
-                id: kv_get(&pairs, "id")?.to_string(),
-                workload: kv_get(&pairs, "workload")?.to_string(),
-                optimizer: kv_get(&pairs, "optimizer")?.to_string(),
-                evaluations: kv_get(&pairs, "evals")?.parse().context("bad evals")?,
-                target_iterations: kv_get(&pairs, "iters")?.parse().context("bad iters")?,
-                cache_hits: kv_get(&pairs, "hits")?.parse().context("bad hits")?,
-                cache_misses: kv_get(&pairs, "misses")?.parse().context("bad misses")?,
-                best_point: parse_point(kv_get(&pairs, "best")?)?,
-                best_label: kv_opt(&pairs, "label").map(str::to_string),
-                best_cost: kv_get(&pairs, "cost")?.parse().context("bad cost")?,
-                wall_secs: kv_get(&pairs, "wall")?.parse().context("bad wall")?,
-                warm_started: kv_get(&pairs, "warm").map(|v| v == "1").unwrap_or(false),
-            });
+            sessions.push(SessionReport::from_kv(&pairs)?);
         }
         "state" => {
             let borrowed: Vec<(&str, &str)> = pairs
@@ -347,7 +418,11 @@ fn parse_v2_record(
                 .collect();
             states.push(SessionState::from_kv(&borrowed)?);
         }
-        other => bail!("unrecognised record {other:?}"),
+        other => {
+            return Err(PatsmaError::registry(format!(
+                "unrecognised record {other:?}"
+            )))
+        }
     }
     Ok(())
 }
@@ -358,14 +433,24 @@ fn parse_v1_record(
     line: &str,
     cache: &mut CacheStats,
     sessions: &mut Vec<SessionReport>,
-) -> Result<()> {
+) -> Result<(), PatsmaError> {
+    let num = |v: &str, what: &str| -> Result<u64, PatsmaError> {
+        v.parse()
+            .map_err(|_| PatsmaError::registry(format!("bad {what} {v:?}")))
+    };
+    let float = |v: &str, what: &str| -> Result<f64, PatsmaError> {
+        v.parse()
+            .map_err(|_| PatsmaError::registry(format!("bad {what} {v:?}")))
+    };
     let f: Vec<&str> = line.split_whitespace().collect();
     match f[0] {
         "cache" if f.len() == 4 => {
             *cache = CacheStats {
-                hits: f[1].parse().context("bad hits")?,
-                misses: f[2].parse().context("bad misses")?,
-                entries: f[3].parse().context("bad entries")?,
+                hits: num(f[1], "hits")?,
+                misses: num(f[2], "misses")?,
+                entries: num(f[3], "entries")? as usize,
+                evictions: 0,
+                cap: 0,
             };
         }
         "session" if f.len() == 11 => {
@@ -373,18 +458,18 @@ fn parse_v1_record(
                 id: f[1].to_string(),
                 workload: f[2].to_string(),
                 optimizer: f[3].to_string(),
-                evaluations: f[4].parse().context("bad evaluations")?,
-                target_iterations: f[5].parse().context("bad iters")?,
-                cache_hits: f[6].parse().context("bad cache hits")?,
-                cache_misses: f[7].parse().context("bad cache misses")?,
+                evaluations: num(f[4], "evaluations")?,
+                target_iterations: num(f[5], "iters")?,
+                cache_hits: num(f[6], "cache hits")?,
+                cache_misses: num(f[7], "cache misses")?,
                 best_point: parse_point(f[8])?,
                 best_label: None,
-                best_cost: f[9].parse().context("bad best cost")?,
-                wall_secs: f[10].parse().context("bad wall seconds")?,
+                best_cost: float(f[9], "best cost")?,
+                wall_secs: float(f[10], "wall seconds")?,
                 warm_started: false,
             });
         }
-        _ => bail!("unrecognised record {line:?}"),
+        _ => return Err(PatsmaError::registry(format!("unrecognised record {line:?}"))),
     }
     Ok(())
 }
@@ -455,6 +540,8 @@ mod tests {
                 hits: 3,
                 misses: 29,
                 entries: 29,
+                evictions: 4,
+                cap: 65_536,
             },
         }
     }
@@ -491,6 +578,8 @@ mod tests {
         assert_eq!(r.sessions.len(), 1);
         assert_eq!(r.sessions[0].id, "s9");
         assert_eq!(r.cache.misses, 2);
+        // A pre-LRU cache record: evictions/cap default to zero.
+        assert_eq!((r.cache.evictions, r.cache.cap), (0, 0));
     }
 
     #[test]
@@ -517,6 +606,16 @@ mod tests {
             r.sessions[0].best_label, None,
             "old numeric records have no typed label"
         );
+    }
+
+    #[test]
+    fn session_kv_codec_roundtrips() {
+        // The wire protocol reuses to_kv/from_kv verbatim; pin the codec
+        // independently of the file framing.
+        for s in sample().sessions {
+            let parsed = SessionReport::from_kv(&s.to_kv()).unwrap();
+            assert_eq!(parsed, s);
+        }
     }
 
     #[test]
@@ -564,6 +663,19 @@ mod tests {
     }
 
     #[test]
+    fn strict_errors_carry_the_line_number() {
+        let text = "# patsma-service-registry v2\n\
+                    cache hits=1 misses=2 entries=2\n\
+                    session id=bad workload=w optimizer=csa evals=NaNsense\n";
+        let err = ServiceReport::from_text(text).unwrap_err();
+        assert!(
+            matches!(err, PatsmaError::Registry { line: Some(3), .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("line 3"), "{err}");
+    }
+
+    #[test]
     fn render_reports_cache_hits_and_states() {
         let text = sample().render();
         assert!(text.contains("cache hits"), "{text}");
@@ -571,6 +683,9 @@ mod tests {
         assert!(text.contains("| s0 |"), "{text}");
         assert!(text.contains("persisted states: 1"), "{text}");
         assert!(text.contains("| yes |"), "{text}");
+        // The LRU bound is operator-visible (satellite: cap + evict counts).
+        assert!(text.contains("cap 65536"), "{text}");
+        assert!(text.contains("4 evicted"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Sharded session map — the daemon's concurrent registry of finished
+//! sessions.
+//!
+//! A long-lived daemon answers most requests from state it already holds: a
+//! converged session is a read, not a tuning run. One big mutex around a
+//! `Vec<SessionState>` (the pre-0.7 shape) serialises every reader behind
+//! every writer; [`ShardedSessions`] splits the map into N shards selected
+//! by a hash of the session's **workload fingerprint mixed with the
+//! environment fingerprint**, so sessions over different landscapes almost
+//! never contend, and reads take only a shard-local `RwLock` read guard —
+//! the lock-free-in-practice fast path for converged sessions (many
+//! concurrent readers, zero writers).
+//!
+//! Entries dedupe by session id across *all* shards (latest wins), matching
+//! the registry's "latest state wins per id" rule.
+
+use super::cache::{fingerprint_str, fnv1a};
+use super::registry::SessionReport;
+use super::state::SessionState;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Default shard count (rounded up to a power of two by the constructor).
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// One finished session as the daemon retains it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionEntry {
+    /// The session's report (what a `tune` response carries).
+    pub report: SessionReport,
+    /// Persisted optimizer state, when the optimizer supports export.
+    pub state: Option<SessionState>,
+    /// Landscape identity the entry answers for.
+    pub fingerprint: u64,
+    /// Converged entries answer matching `tune` requests without
+    /// re-running (the read fast path).
+    pub converged: bool,
+}
+
+/// The N-way sharded session map (see module docs).
+pub struct ShardedSessions {
+    shards: Vec<RwLock<HashMap<String, Arc<SessionEntry>>>>,
+    /// Environment hash mixed into shard selection, so one workload's
+    /// sessions land on different shards under different environments.
+    env_hash: u64,
+    /// Requests answered from a converged entry without any tuning run.
+    fast_hits: AtomicU64,
+}
+
+impl ShardedSessions {
+    /// A map with `shards` shards (rounded up to a power of two, min 1)
+    /// under the `env_hash` environment.
+    pub fn new(shards: usize, env_hash: u64) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        Self {
+            shards: (0..n).map(|_| RwLock::new(HashMap::new())).collect(),
+            env_hash,
+            fast_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Shard count (power of two).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard a landscape lives on.
+    fn shard_index(&self, fingerprint: u64) -> usize {
+        let mixed = fnv1a((fingerprint ^ self.env_hash).to_le_bytes());
+        (mixed as usize) & (self.shards.len() - 1)
+    }
+
+    /// Read a session entry (read-lock only — the fast path). Counts a
+    /// fast hit when the entry is converged over the same landscape.
+    pub fn get(&self, fingerprint: u64, id: &str) -> Option<Arc<SessionEntry>> {
+        let shard = self.shards[self.shard_index(fingerprint)].read().unwrap();
+        let entry = shard.get(id)?.clone();
+        if entry.converged && entry.fingerprint == fingerprint {
+            self.fast_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(entry)
+    }
+
+    /// Insert (or replace) a session entry; the id is unique across all
+    /// shards, so a session re-run over a *different* landscape evicts the
+    /// stale entry from whatever shard it used to live on.
+    pub fn insert(&self, entry: SessionEntry) {
+        let target = self.shard_index(entry.fingerprint);
+        let id = entry.report.id.clone();
+        for (i, shard) in self.shards.iter().enumerate() {
+            if i != target {
+                shard.write().unwrap().remove(&id);
+            }
+        }
+        self.shards[target]
+            .write()
+            .unwrap()
+            .insert(id, Arc::new(entry));
+    }
+
+    /// Number of sessions held across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// True when no sessions are held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// How many requests were answered from a converged entry.
+    pub fn fast_hits(&self) -> u64 {
+        self.fast_hits.load(Ordering::Relaxed)
+    }
+
+    /// A consistent-enough snapshot for persistence: the latest report and
+    /// state per session id, sorted by id (the compacted registry body).
+    /// Shards are visited one read guard at a time — writers between
+    /// shards are fine; the registry's per-id rule still holds.
+    pub fn snapshot(&self) -> (Vec<SessionReport>, Vec<SessionState>) {
+        let mut entries: Vec<Arc<SessionEntry>> = Vec::new();
+        for shard in &self.shards {
+            entries.extend(shard.read().unwrap().values().cloned());
+        }
+        entries.sort_by(|a, b| a.report.id.cmp(&b.report.id));
+        let reports = entries.iter().map(|e| e.report.clone()).collect();
+        let states = entries.iter().filter_map(|e| e.state.clone()).collect();
+        (reports, states)
+    }
+
+    /// Seed the map from a loaded registry: one entry per session id
+    /// (latest report wins), joined with its persisted state when one
+    /// exists. Loaded entries count as converged — they answer matching
+    /// requests from state, exactly like sessions this process ran.
+    pub fn load(&self, sessions: &[SessionReport], states: &[SessionState]) {
+        for report in sessions {
+            let state = states.iter().find(|s| s.id == report.id).cloned();
+            let fingerprint = state
+                .as_ref()
+                .map(|s| s.fingerprint)
+                .unwrap_or_else(|| fingerprint_str(&report.workload));
+            self.insert(SessionEntry {
+                report: report.clone(),
+                state,
+                fingerprint,
+                converged: true,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: &str, fingerprint: u64, converged: bool) -> SessionEntry {
+        SessionEntry {
+            report: SessionReport {
+                id: id.into(),
+                workload: format!("w{fingerprint}"),
+                optimizer: "csa".into(),
+                evaluations: 8,
+                target_iterations: 8,
+                cache_hits: 0,
+                cache_misses: 8,
+                best_point: vec![1.0],
+                best_label: None,
+                best_cost: 0.5,
+                wall_secs: 0.001,
+                warm_started: false,
+            },
+            state: None,
+            fingerprint,
+            converged,
+        }
+    }
+
+    #[test]
+    fn shard_count_rounds_up_to_a_power_of_two() {
+        assert_eq!(ShardedSessions::new(0, 1).shard_count(), 1);
+        assert_eq!(ShardedSessions::new(5, 1).shard_count(), 8);
+        assert_eq!(ShardedSessions::new(16, 1).shard_count(), 16);
+    }
+
+    #[test]
+    fn insert_get_and_fast_hit_accounting() {
+        let map = ShardedSessions::new(16, 0xABCD);
+        map.insert(entry("a", 100, true));
+        map.insert(entry("b", 200, false));
+        assert_eq!(map.len(), 2);
+
+        // Converged + matching landscape: a fast hit.
+        assert!(map.get(100, "a").is_some());
+        assert_eq!(map.fast_hits(), 1);
+        // Unconverged entries are readable but never fast hits.
+        assert!(map.get(200, "b").is_some());
+        assert_eq!(map.fast_hits(), 1);
+        // Unknown id: nothing.
+        assert!(map.get(100, "zzz").is_none());
+    }
+
+    #[test]
+    fn reinsert_under_a_new_landscape_evicts_the_stale_entry() {
+        // With many shards, fingerprints 1 and 2 almost surely map to
+        // different shards for some env hash; assert the id stays unique
+        // regardless of where the entries land.
+        for env in 0..8u64 {
+            let map = ShardedSessions::new(16, env);
+            map.insert(entry("same-id", 1, true));
+            map.insert(entry("same-id", 2, true));
+            assert_eq!(map.len(), 1, "env {env}: id must stay unique");
+            let got = map.get(2, "same-id").expect("latest entry readable");
+            assert_eq!(got.fingerprint, 2);
+        }
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_joins_states() {
+        let map = ShardedSessions::new(4, 7);
+        let mut with_state = entry("b", 2, true);
+        with_state.state = Some(SessionState {
+            id: "b".into(),
+            workload: "w2".into(),
+            fingerprint: 2,
+            env: crate::service::EnvFingerprint::with_threads(4),
+            optimizer: "csa".into(),
+            num_opt: 4,
+            max_iter: 8,
+            seed: 1,
+            ignore: 0,
+            best_point: vec![1.0],
+            best_cost: 0.5,
+            opt_state: crate::optimizer::OptimizerState {
+                optimizer: "csa".into(),
+                best_internal: vec![0.1],
+                best_cost: 0.5,
+                temperatures: None,
+                points: vec![vec![0.1]],
+            },
+        });
+        map.insert(entry("c", 3, true));
+        map.insert(with_state);
+        map.insert(entry("a", 1, false));
+        let (reports, states) = map.snapshot();
+        let ids: Vec<&str> = reports.iter().map(|r| r.id.as_str()).collect();
+        assert_eq!(ids, vec!["a", "b", "c"], "sorted by id");
+        assert_eq!(states.len(), 1);
+        assert_eq!(states[0].id, "b");
+
+        // load() round-trips the snapshot into an equivalent map.
+        let reloaded = ShardedSessions::new(4, 7);
+        reloaded.load(&reports, &states);
+        assert_eq!(reloaded.len(), 3);
+        let b = reloaded.get(2, "b").unwrap();
+        assert!(b.converged, "loaded entries answer from state");
+        assert_eq!(b.state.as_ref().unwrap().fingerprint, 2);
+        // Reports without a persisted state fall back to the workload
+        // descriptor fingerprint.
+        let a = reloaded.get(fingerprint_str("w1"), "a").unwrap();
+        assert_eq!(a.fingerprint, fingerprint_str("w1"));
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers_do_not_lose_entries() {
+        let map = std::sync::Arc::new(ShardedSessions::new(8, 42));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let m = map.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let id = format!("t{t}-{i}");
+                    m.insert(entry(&id, t * 1000 + i, true));
+                    assert!(m.get(t * 1000 + i, &id).is_some());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(map.len(), 200);
+        assert!(map.fast_hits() >= 200);
+    }
+}

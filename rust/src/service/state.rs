@@ -20,9 +20,9 @@
 //! stay readable by older readers (forward compatibility).
 
 use super::cache::fingerprint_str;
+use crate::error::PatsmaError;
 use crate::optimizer::OptimizerState;
 use crate::sched::ThreadPool;
-use anyhow::{bail, Context, Result};
 
 /// Fingerprint of the execution environment costs were measured under.
 #[derive(Debug, Clone, PartialEq)]
@@ -105,12 +105,15 @@ fn join_f64(values: &[f64], sep: char) -> String {
 }
 
 /// Inverse of [`join_f64`].
-fn split_f64(text: &str, sep: char) -> Result<Vec<f64>> {
+fn split_f64(text: &str, sep: char) -> Result<Vec<f64>, PatsmaError> {
     if text == "-" {
         return Ok(Vec::new());
     }
     text.split(sep)
-        .map(|v| v.parse::<f64>().with_context(|| format!("bad float {v:?}")))
+        .map(|v| {
+            v.parse::<f64>()
+                .map_err(|_| PatsmaError::registry(format!("bad float {v:?}")))
+        })
         .collect()
 }
 
@@ -160,19 +163,20 @@ impl SessionState {
     }
 
     /// Parse from `key=value` pairs. Unknown keys are ignored (forward
-    /// compatibility); missing required keys are an error.
-    pub fn from_kv(pairs: &[(&str, &str)]) -> Result<SessionState> {
-        let get = |key: &str| -> Result<&str> {
+    /// compatibility); missing required keys are a typed
+    /// [`PatsmaError::Registry`].
+    pub fn from_kv(pairs: &[(&str, &str)]) -> Result<SessionState, PatsmaError> {
+        let get = |key: &str| -> Result<&str, PatsmaError> {
             pairs
                 .iter()
                 .find(|(k, _)| *k == key)
                 .map(|(_, v)| *v)
-                .with_context(|| format!("state record missing {key:?}"))
+                .ok_or_else(|| PatsmaError::registry(format!("state record missing {key:?}")))
         };
         let opt_get = |key: &str| pairs.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
-        let parse_num = |key: &str, v: &str| -> Result<f64> {
+        let parse_num = |key: &str, v: &str| -> Result<f64, PatsmaError> {
             v.parse::<f64>()
-                .with_context(|| format!("state record: bad {key} {v:?}"))
+                .map_err(|_| PatsmaError::registry(format!("state record: bad {key} {v:?}")))
         };
         let optimizer = get("optimizer")?.to_string();
         let impl_name = opt_get("impl").unwrap_or(&optimizer).to_string();
@@ -183,32 +187,34 @@ impl SessionState {
             points_text
                 .split(';')
                 .map(|p| split_f64(p, ','))
-                .collect::<Result<Vec<_>>>()
-                .context("state record: bad points")?
+                .collect::<Result<Vec<_>, PatsmaError>>()
+                .map_err(|e| PatsmaError::registry(format!("state record: bad points: {e}")))?
         };
         let temperatures = match (opt_get("tgen"), opt_get("tac")) {
             (Some(tg), Some(ta)) => Some((parse_num("tgen", tg)?, parse_num("tac", ta)?)),
             _ => None,
         };
-        let best_internal = split_f64(get("sbest")?, ',').context("state record: bad sbest")?;
+        let best_internal = split_f64(get("sbest")?, ',')
+            .map_err(|e| PatsmaError::registry(format!("state record: bad sbest: {e}")))?;
         if best_internal.is_empty() {
-            bail!("state record: empty sbest");
+            return Err(PatsmaError::registry("state record: empty sbest"));
         }
+        let parse_int = |key: &str, v: &str| -> Result<u64, PatsmaError> {
+            v.parse::<u64>()
+                .map_err(|_| PatsmaError::registry(format!("state record: bad {key} {v:?}")))
+        };
         Ok(SessionState {
             id: get("id")?.to_string(),
             workload: get("workload")?.to_string(),
-            fingerprint: get("fingerprint")?
-                .parse()
-                .context("state record: bad fingerprint")?,
+            fingerprint: parse_int("fingerprint", get("fingerprint")?)?,
             env: EnvFingerprint::new(get("env")?),
             optimizer: optimizer.clone(),
-            num_opt: get("num_opt")?.parse().context("state record: bad num_opt")?,
-            max_iter: get("max_iter")?
-                .parse()
-                .context("state record: bad max_iter")?,
-            seed: get("seed")?.parse().context("state record: bad seed")?,
-            ignore: get("ignore")?.parse().context("state record: bad ignore")?,
-            best_point: split_f64(get("best")?, ',').context("state record: bad best")?,
+            num_opt: parse_int("num_opt", get("num_opt")?)? as usize,
+            max_iter: parse_int("max_iter", get("max_iter")?)? as usize,
+            seed: parse_int("seed", get("seed")?)?,
+            ignore: parse_int("ignore", get("ignore")?)? as u32,
+            best_point: split_f64(get("best")?, ',')
+                .map_err(|e| PatsmaError::registry(format!("state record: bad best: {e}")))?,
             best_cost: parse_num("best_cost", get("best_cost")?)?,
             opt_state: OptimizerState {
                 optimizer: impl_name,

@@ -1,0 +1,231 @@
+//! Integration: the persistent tuning daemon (ISSUE 7 acceptance).
+//!
+//! Exercises the daemon across a real unix socket with concurrent
+//! clients: end-to-end request/response traffic, the drain-under-load
+//! guarantee (no converged session is lost, every client gets a clean
+//! answer), crash-tolerant registry seeding, and snapshot consistency
+//! while writers are active.
+
+use patsma::error::PatsmaError;
+use patsma::service::{self, DaemonClient, DaemonConfig, ServiceReport, SessionSpec, TuningService};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// Unique scratch dir per test (the tests in this binary run concurrently
+/// and unix socket paths must not collide).
+fn scratch(tag: &str) -> PathBuf {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "patsma-it-daemon-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A cheap synthetic session spec (2×4 budget keeps each run milliseconds).
+fn quick_spec(id: &str, optimum: f64) -> SessionSpec {
+    SessionSpec::synthetic(id, optimum, 4242).with_budget(2, 4)
+}
+
+#[test]
+fn daemon_end_to_end_over_the_socket() {
+    let dir = scratch("e2e");
+    let config = DaemonConfig::new(dir.join("d.sock"), dir.join("reg.txt"))
+        .with_concurrency(2)
+        .with_snapshot_interval(Duration::from_secs(3600));
+    let handle = service::daemon::spawn(config).unwrap();
+    let socket = handle.socket().to_path_buf();
+
+    let mut client = DaemonClient::connect(&socket).unwrap();
+    let (version, sessions, draining) = client.ping().unwrap();
+    assert_eq!(version, 1);
+    assert_eq!(sessions, 0);
+    assert!(!draining);
+
+    // Cold tune, then the sharded converged fast path, then a forced rerun.
+    let (report, cached) = client.tune(quick_spec("it-a", 48.0), false).unwrap();
+    assert!(!cached);
+    assert_eq!(report.id, "it-a");
+    let (_, cached) = client.tune(quick_spec("it-a", 48.0), false).unwrap();
+    assert!(cached, "identical tune must answer from converged state");
+    let (_, cached) = client.tune(quick_spec("it-a", 48.0), true).unwrap();
+    assert!(!cached, "fresh=true must force a re-run");
+
+    // A second client sees the same daemon state.
+    let mut other = DaemonClient::connect(&socket).unwrap();
+    let live = other.report().unwrap();
+    assert!(live.sessions.iter().any(|s| s.id == "it-a"), "{live:?}");
+
+    // Same environment: nothing drifted, the session is fresh.
+    let (drifted, fresh) = client.retune(50, false).unwrap();
+    assert!(drifted.is_empty(), "{drifted:?}");
+    assert_eq!(fresh, vec!["it-a".to_string()]);
+
+    client.shutdown().unwrap();
+    let summary = handle.wait().unwrap();
+    assert!(summary.requests >= 6, "{summary:?}");
+    assert_eq!(summary.sessions, 1, "{summary:?}");
+    assert!(summary.snapshots >= 1, "{summary:?}");
+    assert!(!socket.exists(), "socket file must be removed on drain");
+    let saved = ServiceReport::load(&dir.join("reg.txt")).unwrap();
+    assert!(saved.sessions.iter().any(|s| s.id == "it-a"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drain_under_load_loses_no_converged_session() {
+    let dir = scratch("drain");
+    let config = DaemonConfig::new(dir.join("d.sock"), dir.join("reg.txt"))
+        .with_concurrency(4)
+        .with_snapshot_interval(Duration::from_secs(3600));
+    let handle = service::daemon::spawn(config).unwrap();
+    let socket = handle.socket().to_path_buf();
+
+    let clients = 8;
+    let gate = Arc::new(Barrier::new(clients + 1));
+    let mut threads = Vec::new();
+    for i in 0..clients {
+        let socket = socket.clone();
+        let gate = Arc::clone(&gate);
+        threads.push(std::thread::spawn(move || {
+            let mut client = DaemonClient::connect(&socket).unwrap();
+            gate.wait();
+            let mut answered = Vec::new();
+            for r in 0..4 {
+                let id = format!("load-{i}-{r}");
+                match client.tune(quick_spec(&id, 16.0 + i as f64), false) {
+                    Ok((report, _)) => answered.push(report.id),
+                    // Usually the clean `Draining` refusal; the close that
+                    // follows it can also race the request, so any error
+                    // ends this client's run.
+                    Err(_) => break,
+                }
+            }
+            answered
+        }));
+    }
+    gate.wait();
+    // Let some sessions land, then drain mid-load.
+    std::thread::sleep(Duration::from_millis(30));
+    handle.begin_drain();
+    let mut answered = Vec::new();
+    for t in threads {
+        answered.extend(t.join().unwrap());
+    }
+    let summary = handle.wait().unwrap();
+    assert!(!answered.is_empty(), "no client got any answer before drain");
+    assert!(summary.sessions >= answered.len(), "{summary:?}");
+
+    // Every session a client was told about must survive in the snapshot.
+    let saved = ServiceReport::load(&dir.join("reg.txt")).unwrap();
+    for id in &answered {
+        assert!(
+            saved.sessions.iter().any(|s| &s.id == id),
+            "session {id} was answered before the drain but is missing \
+             from the final snapshot"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn startup_seeds_leniently_from_a_partially_corrupt_registry() {
+    let dir = scratch("corrupt");
+    let registry = dir.join("reg.txt");
+
+    // A real registry from a service batch...
+    let svc = TuningService::new(2);
+    svc.run(&[quick_spec("keep-a", 48.0), quick_spec("keep-b", 24.0)])
+        .unwrap();
+    svc.registry_snapshot().save(&registry).unwrap();
+    // ...then simulate a crash-truncated append: a record that parses as a
+    // type but is missing required keys.
+    let mut text = std::fs::read_to_string(&registry).unwrap();
+    text.push_str("session id=torn-record\n");
+    std::fs::write(&registry, text).unwrap();
+    assert!(
+        ServiceReport::load(&registry).is_err(),
+        "strict load must reject the torn record"
+    );
+
+    // The daemon must still come up, seeded with everything salvageable.
+    let config = DaemonConfig::new(dir.join("d.sock"), &registry)
+        .with_snapshot_interval(Duration::from_secs(3600));
+    let handle = service::daemon::spawn(config).unwrap();
+    let mut client = DaemonClient::connect(handle.socket()).unwrap();
+    let (_, sessions, _) = client.ping().unwrap();
+    assert_eq!(sessions, 2, "both intact sessions seeded");
+    let (_, cached) = client.tune(quick_spec("keep-a", 48.0), false).unwrap();
+    assert!(cached, "seeded sessions answer from converged state");
+
+    // After a drain the rewritten snapshot is strictly valid again.
+    handle.begin_drain();
+    handle.wait().unwrap();
+    let saved = ServiceReport::load(&registry).unwrap();
+    assert!(saved.sessions.iter().any(|s| s.id == "keep-a"));
+    assert!(saved.sessions.iter().any(|s| s.id == "keep-b"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_writers_during_snapshots_keep_the_registry_parseable() {
+    let service = Arc::new(TuningService::new(2));
+    let stop = Arc::new(AtomicUsize::new(0));
+    let mut writers = Vec::new();
+    for t in 0..4 {
+        let service = Arc::clone(&service);
+        let stop = Arc::clone(&stop);
+        writers.push(std::thread::spawn(move || {
+            let mut round = 0u64;
+            while stop.load(Ordering::Relaxed) == 0 {
+                let id = format!("w{t}-{}", round % 3);
+                service
+                    .run(&[quick_spec(&id, 12.0 + t as f64).with_budget(2, 2)])
+                    .unwrap();
+                round += 1;
+            }
+        }));
+    }
+    // Snapshot continuously while the writers mutate the sharded map; every
+    // snapshot must serialise to strictly parseable registry text.
+    for _ in 0..25 {
+        let snap = service.registry_snapshot();
+        let text = snap.to_text();
+        let reparsed = ServiceReport::from_text(&text).unwrap();
+        assert_eq!(reparsed.sessions.len(), snap.sessions.len());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(1, Ordering::Relaxed);
+    for w in writers {
+        w.join().unwrap();
+    }
+    // Quiesced: the final snapshot holds the latest run per id.
+    let snap = service.registry_snapshot();
+    assert!(snap.sessions.len() <= 12, "3 ids per writer, deduped");
+    assert!(!snap.sessions.is_empty());
+}
+
+#[test]
+fn a_draining_daemon_refuses_new_sessions_cleanly() {
+    let dir = scratch("refuse");
+    let config = DaemonConfig::new(dir.join("d.sock"), dir.join("reg.txt"))
+        .with_snapshot_interval(Duration::from_secs(3600));
+    let handle = service::daemon::spawn(config).unwrap();
+    let mut client = DaemonClient::connect(handle.socket()).unwrap();
+    client.ping().unwrap();
+
+    handle.begin_drain();
+    // The already-connected client's next tune is refused with the typed
+    // drain signal — either as a direct answer or via the pushed frame.
+    let refused = client.tune(quick_spec("late", 48.0), false);
+    assert!(
+        matches!(refused, Err(PatsmaError::Draining)),
+        "expected Draining, got {refused:?}"
+    );
+    handle.wait().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
