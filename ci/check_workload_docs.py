@@ -37,7 +37,7 @@ def registry_names(src: str) -> list[str]:
     block = src.split("pub const REGISTRY", 1)
     if len(block) != 2:
         raise ValueError(f"{REGISTRY_SRC}: REGISTRY const not found")
-    return re.findall(r'name: "([a-z0-9_-]+)"', block[1].split("];", 1)[0])
+    return re.findall(r'name: "([a-z0-9_/-]+)"', block[1].split("];", 1)[0])
 
 
 def names_const(src: str) -> list[str]:
@@ -45,7 +45,7 @@ def names_const(src: str) -> list[str]:
     m = re.search(r"pub const NAMES[^=]*=\s*&\[(.*?)\];", src, re.S)
     if not m:
         raise ValueError(f"{REGISTRY_SRC}: NAMES const not found")
-    return re.findall(r'"([a-z0-9_-]+)"', m.group(1))
+    return re.findall(r'"([a-z0-9_/-]+)"', m.group(1))
 
 
 def gallery_rows(markdown: str, where: str) -> list[str]:
@@ -59,7 +59,7 @@ def gallery_rows(markdown: str, where: str) -> list[str]:
     for line in lines[start + 2 :]:  # skip the |---| separator row
         if not line.startswith("|"):
             break  # blank line / prose: the table ended cleanly
-        m = re.match(r"\| `([a-z0-9_-]+)` \|", line)
+        m = re.match(r"\| `([a-z0-9_/-]+)` \|", line)
         if not m:
             raise ValueError(f"{where}: malformed gallery row {line!r}")
         names.append(m.group(1))
@@ -108,16 +108,18 @@ def self_test() -> int:
 pub const REGISTRY: &[WorkloadInfo] = &[
     WorkloadInfo { name: "alpha", paper_role: "a", build: build_a },
     WorkloadInfo { name: "beta-2", paper_role: "b", build: build_b },
+    WorkloadInfo { name: "stress/gamma", paper_role: "c", build: build_c },
 ];
-pub const NAMES: &[&str] = &["alpha", "beta-2"];
+pub const NAMES: &[&str] = &["alpha", "beta-2", "stress/gamma"];
 """
     table = (
         "| workload | paper role | tuned parameters | sizes (tune · full / quick) | oracle |\n"
         "|---|---|---|---|---|\n"
         "| `alpha` | a | p | s | o |\n"
         "| `beta-2` | b | p | s | o |\n"
+        "| `stress/gamma` | c | p | s | o |\n"
     )
-    cookbook = table + "\n### `alpha`\n\n### `beta-2`\n"
+    cookbook = table + "\n### `alpha`\n\n### `beta-2`\n\n### `stress/gamma`\n"
     assert check(src, table, cookbook) == [], check(src, table, cookbook)
 
     # A gallery missing a registry row must fail.
@@ -136,7 +138,7 @@ pub const NAMES: &[&str] = &["alpha", "beta-2"];
     )
     assert any("gallery rows" in f for f in check(src, swapped, cookbook))
     # NAMES drifting from REGISTRY must fail.
-    drifted = src.replace('&["alpha", "beta-2"]', '&["alpha"]')
+    drifted = src.replace('&["alpha", "beta-2", "stress/gamma"]', '&["alpha"]')
     assert any("NAMES" in f for f in check(drifted, table, cookbook))
     # A missing cookbook section must fail.
     no_section = table + "\n### `alpha`\n"

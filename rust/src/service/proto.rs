@@ -498,4 +498,114 @@ mod tests {
         let mut r = &truncated[..];
         assert!(read_frame(&mut r).is_err());
     }
+
+    /// Every malformed-frame failure on the daemon read path must be a
+    /// typed [`PatsmaError::Protocol`] — never a panic, never a hang, never
+    /// a giant allocation (ISSUE 8 satellite).
+    #[test]
+    fn truncated_length_prefixes_are_protocol_errors() {
+        // 1–3 bytes of prefix then EOF: mid-prefix close.
+        for cut in 1..4 {
+            let bytes = vec![0u8; cut];
+            let err = read_frame(&mut &bytes[..]).unwrap_err();
+            assert!(
+                matches!(err, PatsmaError::Protocol(_)),
+                "{cut}-byte prefix gave {err}"
+            );
+        }
+        // A full prefix promising bytes that never arrive: mid-payload close.
+        let mut bytes = 16u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"only half");
+        let err = read_frame(&mut &bytes[..]).unwrap_err();
+        assert!(matches!(err, PatsmaError::Protocol(_)), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_prefixes_are_rejected_from_the_prefix_alone() {
+        for len in [MAX_FRAME as u32 + 1, u32::MAX / 2, u32::MAX] {
+            let bytes = len.to_be_bytes();
+            let err = read_frame(&mut &bytes[..]).unwrap_err();
+            assert!(
+                matches!(err, PatsmaError::Protocol(_)),
+                "len {len} gave {err}"
+            );
+        }
+        // The writer enforces the same cap.
+        let big = "x".repeat(MAX_FRAME + 1);
+        let err = write_frame(&mut Vec::new(), &big).unwrap_err();
+        assert!(matches!(err, PatsmaError::Protocol(_)), "{err}");
+    }
+
+    #[test]
+    fn non_utf8_payloads_are_protocol_errors() {
+        let payloads: [&[u8]; 3] = [
+            &[0xFF, 0xFE, 0x80, 0x00],
+            &[0xC3],             // truncated 2-byte sequence
+            &[0xED, 0xA0, 0x80], // UTF-16 surrogate, invalid in UTF-8
+        ];
+        for payload in payloads {
+            let mut bytes = (payload.len() as u32).to_be_bytes().to_vec();
+            bytes.extend_from_slice(payload);
+            let err = read_frame(&mut &bytes[..]).unwrap_err();
+            assert!(
+                matches!(err, PatsmaError::Protocol(_)),
+                "{payload:?} gave {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_request_kinds_are_protocol_errors() {
+        for bad in [
+            "frobnicate",
+            "TUNE id=x", // verbs are case-sensitive
+            "pIng",
+            "tune2 id=x",
+            "daemonctl stop",
+            "ping\u{0}", // embedded NUL is part of the verb token
+        ] {
+            let err = Request::from_wire(bad).unwrap_err();
+            assert!(
+                matches!(err, PatsmaError::Protocol(_)),
+                "{bad:?} gave {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_frame_corpus_never_panics_the_read_path() {
+        // Deterministic fuzz-ish corpus: random bytes, half of them dressed
+        // with a plausible length prefix. Every outcome must be one of
+        // Ok(Some) → Request::from_wire (which may error, typed), Ok(None)
+        // (clean EOF), or a typed Protocol error — nothing else, no panic.
+        let mut rng = crate::rng::Xoshiro256pp::new(0xBAD_F4A3);
+        for case in 0..500 {
+            let body_len = rng.next_below(64) as usize;
+            let mut bytes = Vec::new();
+            if case % 2 == 0 {
+                // Plausible prefix, possibly lying about the length.
+                let claimed = rng.next_below(96) as u32;
+                bytes.extend_from_slice(&claimed.to_be_bytes());
+            }
+            for _ in 0..body_len {
+                bytes.push(rng.next_u64() as u8);
+            }
+            match read_frame(&mut &bytes[..]) {
+                Ok(Some(record)) => {
+                    // Parsing may fail, but only with the typed error.
+                    if let Err(e) = Request::from_wire(&record) {
+                        assert!(
+                            matches!(e, PatsmaError::Protocol(_)),
+                            "case {case}: {e}"
+                        );
+                    }
+                }
+                Ok(None) => assert!(bytes.is_empty(), "case {case}: None on data"),
+                Err(e) => assert!(
+                    matches!(e, PatsmaError::Protocol(_)),
+                    "case {case}: {e}"
+                ),
+            }
+        }
+    }
 }

@@ -262,6 +262,51 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_sees_every_converged_session_exactly_once_under_inserts() {
+        // ISSUE 8 satellite: cross-shard iteration under concurrent insert.
+        // 40 pre-seeded converged sessions must appear in *every* snapshot
+        // exactly once — distinct-id inserts landing on other shards
+        // mid-iteration must never hide or duplicate them.
+        let map = Arc::new(ShardedSessions::new(8, 0xBEEF));
+        let seeded: Vec<String> = (0..40).map(|i| format!("seed-{i:02}")).collect();
+        for (i, id) in seeded.iter().enumerate() {
+            map.insert(entry(id, 10_000 + i as u64, true));
+        }
+        let writers: Vec<_> = (0..3u64)
+            .map(|t| {
+                let m = map.clone();
+                std::thread::spawn(move || {
+                    for i in 0..2000u64 {
+                        m.insert(entry(&format!("new-{t}-{i}"), t * 100_000 + i, true));
+                    }
+                })
+            })
+            .collect();
+        let mut snapshots = 0u32;
+        while writers.iter().any(|h| !h.is_finished()) || snapshots == 0 {
+            let (reports, _) = map.snapshot();
+            let ids: Vec<&str> = reports.iter().map(|r| r.id.as_str()).collect();
+            // snapshot() sorts by id, so duplicates would be adjacent.
+            for pair in ids.windows(2) {
+                assert_ne!(pair[0], pair[1], "duplicate id in snapshot");
+            }
+            for id in &seeded {
+                assert!(
+                    ids.binary_search(&id.as_str()).is_ok(),
+                    "seeded session {id} missing from snapshot {snapshots}"
+                );
+            }
+            snapshots += 1;
+        }
+        for h in writers {
+            h.join().unwrap();
+        }
+        assert!(snapshots > 0);
+        let (reports, _) = map.snapshot();
+        assert_eq!(reports.len(), 40 + 3 * 2000);
+    }
+
+    #[test]
     fn concurrent_readers_and_writers_do_not_lose_entries() {
         let map = std::sync::Arc::new(ShardedSessions::new(8, 42));
         let mut handles = Vec::new();

@@ -14,6 +14,7 @@
 //! | [`matmul`] | blocked matrix multiply (related-work workload [5–7]) |
 //! | [`conv2d`] | 2-D convolution (related-work workload [5–7]) |
 //! | [`spmv`] | skewed CSR SpMV — the irregular workload where dynamic scheduling shines |
+//! | [`stress`] | adversarial scenarios — phase shifts, heavy tails, cache antagonists, multi-tenancy |
 //! | [`synthetic`] | closed-form cost landscapes for optimizer ground truth |
 //!
 //! Beyond the flat `&[i32]` parameter vector of the paper, every workload
@@ -41,6 +42,7 @@ pub mod matmul;
 pub mod rb_gauss_seidel;
 pub mod rtm;
 pub mod spmv;
+pub mod stress;
 pub mod synthetic;
 
 use crate::sched::{ExecParams, Schedule, ThreadPool};
@@ -288,6 +290,38 @@ fn build_spmv(p: SizeProfile) -> Box<dyn Workload> {
     })
 }
 
+fn build_stress_phase_shift(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(stress::phase_shift::PhaseShift::with_size(match p {
+        SizeProfile::Tune => 4096,
+        SizeProfile::Full => 2048,
+        SizeProfile::Quick => 512,
+    }))
+}
+
+fn build_stress_power_law(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(match p {
+        SizeProfile::Tune => stress::power_law::PowerLaw::with_size(4096, 512),
+        SizeProfile::Full => stress::power_law::PowerLaw::with_size(2048, 512),
+        SizeProfile::Quick => stress::power_law::PowerLaw::with_size(512, 256),
+    })
+}
+
+fn build_stress_cache_antagonist(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(match p {
+        SizeProfile::Tune => stress::cache_antagonist::CacheAntagonist::with_size(65_536, 2048),
+        SizeProfile::Full => stress::cache_antagonist::CacheAntagonist::with_size(32_768, 1024),
+        SizeProfile::Quick => stress::cache_antagonist::CacheAntagonist::with_size(8192, 256),
+    })
+}
+
+fn build_stress_multi_tenant(p: SizeProfile) -> Box<dyn Workload> {
+    Box::new(stress::multi_tenant::MultiTenant::with_size(match p {
+        SizeProfile::Tune => 2048,
+        SizeProfile::Full => 1024,
+        SizeProfile::Quick => 256,
+    }))
+}
+
 /// The typed workload registry, in display order (see [`WorkloadInfo`]).
 pub const REGISTRY: &[WorkloadInfo] = &[
     WorkloadInfo {
@@ -344,12 +378,59 @@ pub const REGISTRY: &[WorkloadInfo] = &[
         tier1: true,
         build: build_spmv,
     },
+    WorkloadInfo {
+        name: "stress/phase-shift",
+        paper_role: "phase-shifting landscape — drift detect → warm retune",
+        tunables: "chunk; optimum and cost level jump every period",
+        sizes: "4096 · 2048 / 512 items, period 64",
+        oracle: "bitwise out + checksum vs sequential pass, phase pinned",
+        tier1: true,
+        build: build_stress_phase_shift,
+    },
+    WorkloadInfo {
+        name: "stress/power-law",
+        paper_role: "heavy-tailed imbalance — where stealing must win",
+        tunables: "chunk over front-loaded Zipf-cost items",
+        sizes: "4096×512u · 2048×512u / 512×256u",
+        oracle: "bitwise out + checksum vs sequential pass",
+        tier1: true,
+        build: build_stress_power_law,
+    },
+    WorkloadInfo {
+        name: "stress/cache-antagonist",
+        paper_role: "co-running memory thrasher — chunk is the dominant dim",
+        tunables: "chunk under a strided-store antagonist thread",
+        sizes: "64k+2MiB · 32k+1MiB / 8k+256KiB",
+        oracle: "bitwise out vs quiet sequential gather, stores counted",
+        tier1: true,
+        build: build_stress_cache_antagonist,
+    },
+    WorkloadInfo {
+        name: "stress/multi-tenant",
+        paper_role: "K tenants tuning concurrently on one pool",
+        tunables: "chunk per tenant loop, 4 tenants serialised",
+        sizes: "4×2048 · 4×1024 / 4×256 items",
+        oracle: "bitwise out vs sequential all-tenant pass",
+        tier1: true,
+        build: build_stress_multi_tenant,
+    },
 ];
 
 /// Names accepted by [`by_name`], in [`REGISTRY`] display order — mirrored
 /// from the registry and pinned by a test. (The `xla-*` variant workloads
 /// are constructed separately — they need a loaded PJRT engine.)
-pub const NAMES: &[&str] = &["rb-gauss-seidel", "fdm3d", "rtm", "matmul", "conv2d", "spmv"];
+pub const NAMES: &[&str] = &[
+    "rb-gauss-seidel",
+    "fdm3d",
+    "rtm",
+    "matmul",
+    "conv2d",
+    "spmv",
+    "stress/phase-shift",
+    "stress/power-law",
+    "stress/cache-antagonist",
+    "stress/multi-tenant",
+];
 
 /// Registry lookup by CLI name.
 pub fn info(name: &str) -> Option<&'static WorkloadInfo> {

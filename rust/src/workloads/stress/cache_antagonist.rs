@@ -1,0 +1,233 @@
+//! Cache-antagonist workload — a co-running memory-thrashing thread makes
+//! chunk size the dominant tuning dimension.
+//!
+//! The measured loop is a scattered gather (`out[i] = data[i] +
+//! data[idx[i]] * 1.0001` with pseudo-random `idx`) whose working set the
+//! tuner would normally keep cache-resident with a large chunk. While it
+//! runs, an antagonist thread hammers a separate multi-MiB buffer with
+//! relaxed atomic stores at a large prime stride, evicting the workload's
+//! lines as fast as they are filled. Under that interference the chunk that
+//! balances claim overhead against cache reuse shifts — Karcher et al.'s
+//! point that the best parameter is a property of the *machine state*, not
+//! the algorithm. Numerics stay schedule-invariant: the antagonist only
+//! writes its own buffer, so [`Workload::verify`] pins the thrashed
+//! parallel pass bitwise against a quiet sequential one.
+//!
+//! The antagonist handshakes via a `started` flag before the pass begins
+//! and counts its stores, so tests can assert the interference was real
+//! (`antagonist_writes() > 0`) rather than a thread that never got
+//! scheduled.
+
+use crate::rng::Xoshiro256pp;
+use crate::sched::{ExecParams, Schedule, ThreadPool};
+use crate::workloads::Workload;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cache-antagonist stress workload (see module docs).
+pub struct CacheAntagonist {
+    n: usize,
+    data: Vec<f64>,
+    /// Scattered gather indices into `data`.
+    idx: Vec<u32>,
+    out: Vec<f64>,
+    /// The antagonist's thrash target, shared with its thread.
+    buf: Arc<Vec<AtomicU64>>,
+    /// Total antagonist stores across all passes so far.
+    writes: Arc<AtomicU64>,
+    pool: &'static ThreadPool,
+}
+
+impl CacheAntagonist {
+    /// `n` gather items against a `buf_kib` KiB antagonist buffer.
+    pub fn new(n: usize, buf_kib: usize, seed: u64, pool: &'static ThreadPool) -> Self {
+        assert!(n >= 4 && buf_kib >= 8);
+        let mut rng = Xoshiro256pp::new(seed);
+        let data: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 1.0)).collect();
+        let idx: Vec<u32> = (0..n).map(|_| rng.next_below(n as u64) as u32).collect();
+        let words = buf_kib * 1024 / std::mem::size_of::<AtomicU64>();
+        let buf: Vec<AtomicU64> = (0..words).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            n,
+            data,
+            idx,
+            out: vec![0.0; n],
+            buf: Arc::new(buf),
+            writes: Arc::new(AtomicU64::new(0)),
+            pool,
+        }
+    }
+
+    /// Default-pool constructor.
+    pub fn with_size(n: usize, buf_kib: usize) -> Self {
+        Self::new(n, buf_kib, 0xCAC4E_A17, super::super::default_pool())
+    }
+
+    /// Total antagonist stores observed so far (tests assert `> 0`).
+    pub fn antagonist_writes(&self) -> u64 {
+        self.writes.load(Ordering::Relaxed)
+    }
+
+    /// The scattered gather itself, no antagonist — quiet baseline.
+    pub fn quiet_pass(&mut self, sched: Schedule, exec: ExecParams) -> f64 {
+        let data = crate::ptr::SharedConst::new(self.data.as_ptr());
+        let idx = crate::ptr::SharedConst::new(self.idx.as_ptr());
+        let out = crate::ptr::SharedMut::new(self.out.as_mut_ptr());
+        self.pool
+            .exec(0, self.n)
+            .sched(sched)
+            .params(exec)
+            .run(|items| {
+                for i in items {
+                    // SAFETY: out[i] is written by exactly one claim; data
+                    // and idx are read-only.
+                    unsafe {
+                        let j = *idx.at(i) as usize;
+                        *out.at(i) = *data.at(i) + *data.at(j) * 1.0001;
+                    }
+                }
+            });
+        self.checksum()
+    }
+
+    /// The gather with the antagonist thread live for the duration of the
+    /// pass. Waits for the antagonist's first store before starting the
+    /// measured loop, so the interference is guaranteed concurrent.
+    pub fn thrashed_pass(&mut self, sched: Schedule, exec: ExecParams) -> f64 {
+        let stop = AtomicBool::new(false);
+        let started = AtomicBool::new(false);
+        let buf = Arc::clone(&self.buf);
+        let writes = Arc::clone(&self.writes);
+        let cs = std::thread::scope(|s| {
+            s.spawn(|| {
+                let len = buf.len();
+                let mut i = 0usize;
+                let mut local = 0u64;
+                // Large prime stride in words ≈ one store per cache line,
+                // walking far apart so the hardware prefetcher gets no help.
+                while !stop.load(Ordering::Relaxed) {
+                    buf[i].store(local, Ordering::Relaxed);
+                    local += 1;
+                    i = (i + 4099) % len;
+                    if local == 1 {
+                        started.store(true, Ordering::Release);
+                    }
+                }
+                writes.fetch_add(local, Ordering::Relaxed);
+            });
+            while !started.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+            let cs = self.quiet_pass(sched, exec);
+            stop.store(true, Ordering::Relaxed);
+            cs
+        });
+        cs
+    }
+
+    /// Sequential oracle, no antagonist.
+    pub fn run_sequential(&mut self) -> f64 {
+        for i in 0..self.n {
+            let j = self.idx[i] as usize;
+            self.out[i] = self.data[i] + self.data[j] * 1.0001;
+        }
+        self.checksum()
+    }
+
+    fn checksum(&self) -> f64 {
+        self.out.iter().sum()
+    }
+
+    /// Output buffer access (tests pin bitwise equality).
+    pub fn output(&self) -> &[f64] {
+        &self.out
+    }
+}
+
+impl Workload for CacheAntagonist {
+    fn name(&self) -> &'static str {
+        "stress/cache-antagonist"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        (vec![1.0], vec![(self.n / 2).max(2) as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        self.thrashed_pass(
+            Schedule::Dynamic(params[0].max(1) as usize),
+            ExecParams::default(),
+        )
+    }
+
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
+        self.thrashed_pass(sched, exec)
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        // Thrashed parallel pass vs quiet sequential oracle — the
+        // antagonist must never perturb the numerics.
+        let cp = self.thrashed_pass(Schedule::Dynamic(8), ExecParams::default());
+        let par = self.out.clone();
+        let cs = self.run_sequential();
+        for (i, (a, b)) in par.iter().zip(self.out.iter()).enumerate() {
+            if a != b {
+                return Err(format!("out[{i}]: {a} != {b}"));
+            }
+        }
+        if cp != cs {
+            return Err(format!("checksum {cp} != {cs}"));
+        }
+        if self.antagonist_writes() == 0 {
+            return Err("antagonist thread never stored".into());
+        }
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        self.out.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    #[test]
+    fn thrashed_parallel_matches_quiet_sequential() {
+        CacheAntagonist::new(4096, 64, 11, pool()).verify().unwrap();
+    }
+
+    #[test]
+    fn antagonist_actually_runs_and_counts() {
+        let mut w = CacheAntagonist::new(2048, 64, 12, pool());
+        assert_eq!(w.antagonist_writes(), 0);
+        let _ = w.thrashed_pass(Schedule::Dynamic(16), ExecParams::default());
+        assert!(w.antagonist_writes() > 0);
+    }
+
+    #[test]
+    fn identical_across_schedules_under_thrash() {
+        let mut a = CacheAntagonist::new(1024, 32, 13, pool());
+        let mut b = CacheAntagonist::new(1024, 32, 13, pool());
+        let reference = a.quiet_pass(Schedule::Static, ExecParams::default());
+        for sched in [
+            Schedule::StaticChunk(5),
+            Schedule::Dynamic(32),
+            Schedule::Guided(1),
+        ] {
+            assert_eq!(b.thrashed_pass(sched, ExecParams::default()), reference);
+            assert_eq!(a.output(), b.output(), "{sched:?}");
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Adversarial stress workloads — the scenarios that attack the tuner the
+//! way production traffic would (ISSUE 8).
+//!
+//! The six regular registry workloads are steady-state: their cost
+//! landscape never moves, their iterations are balanced, and nothing else
+//! runs on the machine. PATSMA's claim is that auto-tuning pays off
+//! precisely when those assumptions break (Karcher et al., *Autotuning and
+//! Self-Adaptability in Concurrency Libraries*; HPX Smart Executors), so
+//! this family breaks them one axis at a time:
+//!
+//! | module | attack axis |
+//! |---|---|
+//! | [`phase_shift`] | the landscape's optimum moves mid-run on a schedule — exercises `DriftMonitor` detect → warm-retune |
+//! | [`power_law`] | heavy-tailed per-item costs, front-loaded — where work stealing must beat a static split |
+//! | [`cache_antagonist`] | a co-running memory-thrashing thread — chunk size becomes the dominant dimension |
+//! | [`multi_tenant`] | K tenant loops tuning concurrently on one pool — tuner interference and region serialisation |
+//!
+//! Every member is a full [`super::Workload`]: registry-listed
+//! (`stress/<name>`), oracle-verified bitwise against a sequential pass,
+//! reachable from `patsma tune|adaptive|service --workload stress/<name>`,
+//! and measured by the tier-1 bench suite. The headline guarantees — drift
+//! recovered at strictly fewer evaluations than a cold re-tune, tuned joint
+//! cell beating the best static cell with steals observed, K concurrent
+//! regions converging uncorrupted — are pinned in `rust/tests/stress.rs`.
+
+#![warn(missing_docs)]
+
+pub mod cache_antagonist;
+pub mod multi_tenant;
+pub mod phase_shift;
+pub mod power_law;
+
+/// Deterministic floating-point busywork: `units` steps of a sequential
+/// multiply–add chain seeded at `seed`. The loop-carried dependency keeps
+/// the chain serial (no vectorisation), [`std::hint::black_box`] keeps the
+/// result observed, and the closed form is never constant-folded for
+/// floats — so wall-clock scales linearly with `units` while the returned
+/// value stays bitwise deterministic for oracle comparisons.
+#[inline]
+pub fn spin_work(seed: f64, units: u32) -> f64 {
+    let mut x = seed;
+    for _ in 0..units {
+        x = x * 1.000_000_119_f64 + 1.0e-6;
+    }
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spin_work_is_deterministic_and_unit_sensitive() {
+        assert_eq!(spin_work(0.5, 100), spin_work(0.5, 100));
+        assert_ne!(spin_work(0.5, 100), spin_work(0.5, 101));
+        assert_ne!(spin_work(0.5, 100), spin_work(0.25, 100));
+        assert!(spin_work(0.5, 1000).is_finite());
+    }
+}

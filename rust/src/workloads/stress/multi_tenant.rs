@@ -1,0 +1,210 @@
+//! Multi-tenant workload — K tenant loops driving one [`ThreadPool`]
+//! concurrently, the shape a shared-memory tuner meets inside a library
+//! (Karcher et al.): every caller tunes its own region while competing for
+//! the same workers.
+//!
+//! Each pass spawns `tenants − 1` OS threads (the caller is tenant 0); each
+//! tenant submits its own `pool.exec(0, per)` over a disjoint slice of the
+//! output buffer. The pool's region lock serialises root-level submissions,
+//! so tenants interleave rather than corrupt each other — but the *tuner*
+//! still sees contended timings, which is exactly the interference the
+//! multi-tenant stress tests probe (K concurrent `TunedRegion`s in
+//! `rust/tests/stress.rs`, each owning a private workload instance, all
+//! converging with no cross-tenant corruption of the converged cell).
+//!
+//! The oracle is bitwise: a sequential all-tenant pass over the same buffer
+//! must reproduce the concurrent pass exactly, tenant boundaries included.
+
+use super::spin_work;
+use crate::rng::Xoshiro256pp;
+use crate::sched::{ExecParams, Schedule, ThreadPool};
+use crate::workloads::Workload;
+
+/// Multi-tenant stress workload (see module docs).
+pub struct MultiTenant {
+    tenants: usize,
+    /// Items per tenant; the buffers hold `tenants * per` items.
+    per: usize,
+    data: Vec<f64>,
+    out: Vec<f64>,
+    work_units: u32,
+    pool: &'static ThreadPool,
+}
+
+impl MultiTenant {
+    /// `tenants` concurrent loops of `per` items each, `work_units`
+    /// busywork steps per item.
+    pub fn new(
+        tenants: usize,
+        per: usize,
+        work_units: u32,
+        seed: u64,
+        pool: &'static ThreadPool,
+    ) -> Self {
+        assert!(tenants >= 1 && per >= 4);
+        let mut rng = Xoshiro256pp::new(seed);
+        let n = tenants * per;
+        let data = (0..n).map(|_| rng.uniform(0.1, 1.0)).collect();
+        Self {
+            tenants,
+            per,
+            data,
+            out: vec![0.0; n],
+            work_units: work_units.max(1),
+            pool,
+        }
+    }
+
+    /// Default-pool constructor: 4 tenants, 16 busywork units per item.
+    pub fn with_size(per: usize) -> Self {
+        Self::new(4, per, 16, 0x7E4A_4715, super::super::default_pool())
+    }
+
+    /// Number of concurrent tenant loops per pass.
+    pub fn tenants(&self) -> usize {
+        self.tenants
+    }
+
+    /// All tenants at once, each submitting its own region to the shared
+    /// pool from its own thread; tenant 0 runs on the caller's thread.
+    pub fn run_concurrent(&mut self, sched: Schedule, exec: ExecParams) -> f64 {
+        let per = self.per;
+        let data = crate::ptr::SharedConst::new(self.data.as_ptr());
+        let out = crate::ptr::SharedMut::new(self.out.as_mut_ptr());
+        let units = self.work_units;
+        let pool = self.pool;
+        let tenant_pass = {
+            let data = &data;
+            let out = &out;
+            move |t: usize| {
+                let base = t * per;
+                pool.exec(0, per).sched(sched).params(exec).run(|items| {
+                    for i in items {
+                        // SAFETY: tenant t owns out[base..base+per]
+                        // exclusively; data is read-only.
+                        unsafe {
+                            *out.at(base + i) = spin_work(*data.at(base + i), units);
+                        }
+                    }
+                });
+            }
+        };
+        std::thread::scope(|s| {
+            let tenant_pass = &tenant_pass;
+            for t in 1..self.tenants {
+                s.spawn(move || tenant_pass(t));
+            }
+            tenant_pass(0);
+        });
+        self.checksum()
+    }
+
+    /// Sequential oracle: every tenant's slice in order, same numerics.
+    pub fn run_sequential(&mut self) -> f64 {
+        for i in 0..self.tenants * self.per {
+            self.out[i] = spin_work(self.data[i], self.work_units);
+        }
+        self.checksum()
+    }
+
+    fn checksum(&self) -> f64 {
+        self.out.iter().sum()
+    }
+
+    /// Output buffer access (tests pin bitwise equality).
+    pub fn output(&self) -> &[f64] {
+        &self.out
+    }
+}
+
+impl Workload for MultiTenant {
+    fn name(&self) -> &'static str {
+        "stress/multi-tenant"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        (vec![1.0], vec![(self.per / 2).max(2) as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        self.run_concurrent(
+            Schedule::Dynamic(params[0].max(1) as usize),
+            ExecParams::default(),
+        )
+    }
+
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
+        self.run_concurrent(sched, exec)
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        let cp = self.run_concurrent(Schedule::Dynamic(4), ExecParams::default());
+        let par = self.out.clone();
+        let cs = self.run_sequential();
+        for (i, (a, b)) in par.iter().zip(self.out.iter()).enumerate() {
+            if a != b {
+                return Err(format!("out[{i}] (tenant {}): {a} != {b}", i / self.per));
+            }
+        }
+        if cp != cs {
+            return Err(format!("checksum {cp} != {cs}"));
+        }
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        self.out.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    #[test]
+    fn concurrent_tenants_match_sequential() {
+        MultiTenant::new(4, 256, 4, 21, pool()).verify().unwrap();
+    }
+
+    #[test]
+    fn single_tenant_degenerates_cleanly() {
+        MultiTenant::new(1, 64, 2, 22, pool()).verify().unwrap();
+    }
+
+    #[test]
+    fn identical_across_schedules_and_tenant_counts() {
+        let mut a = MultiTenant::new(2, 128, 3, 23, pool());
+        let mut b = MultiTenant::new(2, 128, 3, 23, pool());
+        let reference = a.run_sequential();
+        for sched in [
+            Schedule::Static,
+            Schedule::Dynamic(8),
+            Schedule::Guided(2),
+        ] {
+            assert_eq!(b.run_concurrent(sched, ExecParams::default()), reference);
+            assert_eq!(a.output(), b.output(), "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn repeated_passes_are_stable() {
+        let mut w = MultiTenant::new(4, 64, 2, 24, pool());
+        let first = w.run_concurrent(Schedule::Dynamic(4), ExecParams::default());
+        for _ in 0..5 {
+            assert_eq!(
+                w.run_concurrent(Schedule::Guided(1), ExecParams::default()),
+                first
+            );
+        }
+    }
+}

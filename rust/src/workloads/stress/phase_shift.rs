@@ -1,0 +1,302 @@
+//! Phase-shifting workload — the cost landscape's optimum **moves mid-run**
+//! on a configurable schedule.
+//!
+//! Every `period` iterations the landscape alternates between two phases:
+//! phase 0 has its best chunk at `best_a`, phase 1 at `best_b` *and* runs
+//! at twice the cost level (the optimum does not just move, the whole curve
+//! lifts — the level shift is what an EWMA drift monitor can see at the
+//! converged chunk without re-probing the landscape). A region that
+//! converged during phase 0 is therefore measurably wrong after the flip:
+//! the `DriftMonitor` must detect the shift and `TunedRegion` must
+//! warm-retune onto the new phase — at strictly fewer evaluations than a
+//! cold restart (pinned in `rust/tests/stress.rs` against the exposed
+//! [`landscape_cost`] model, wall-clock-free and deterministic).
+//!
+//! The compute is real and schedule-invariant: each iteration runs a
+//! parallel map over `n` items whose per-item busywork depends only on the
+//! *phase* (it doubles in phase 1), never on the chunk — tuned parameters
+//! change speed, not results, so the sequential oracle comparison stays
+//! bitwise. [`verify`] pins both passes at the current phase without
+//! advancing the counter.
+//!
+//! [`landscape_cost`]: PhaseShift::landscape_cost
+//! [`verify`]: PhaseShift::verify
+
+use super::spin_work;
+use crate::rng::Xoshiro256pp;
+use crate::sched::{ExecParams, Schedule, ThreadPool};
+use crate::workloads::synthetic::chunk_cost_model;
+use crate::workloads::Workload;
+
+/// Phase-shifting stress workload (see module docs).
+pub struct PhaseShift {
+    n: usize,
+    data: Vec<f64>,
+    out: Vec<f64>,
+    iters: u64,
+    period: u64,
+    best_a: f64,
+    best_b: f64,
+    work_units: u32,
+    pool: &'static ThreadPool,
+}
+
+impl PhaseShift {
+    /// A phase-shifting landscape over `n` items flipping every `period`
+    /// iterations between best chunks `best_a` (phase 0) and `best_b`
+    /// (phase 1, at twice the cost level). `work_units` scales the per-item
+    /// busywork.
+    pub fn new(
+        n: usize,
+        period: u64,
+        best_a: f64,
+        best_b: f64,
+        work_units: u32,
+        seed: u64,
+        pool: &'static ThreadPool,
+    ) -> Self {
+        assert!(n >= 4 && period >= 1);
+        assert!(best_a >= 1.0 && best_b >= 1.0);
+        let mut rng = Xoshiro256pp::new(seed);
+        let data = (0..n).map(|_| rng.uniform(0.1, 1.0)).collect();
+        Self {
+            n,
+            data,
+            out: vec![0.0; n],
+            iters: 0,
+            period,
+            best_a,
+            best_b,
+            work_units: work_units.max(1),
+            pool,
+        }
+    }
+
+    /// Default-pool constructor at the registry sizes: period 64, phase-0
+    /// optimum near `n/32`, phase-1 optimum near `n/4`.
+    pub fn with_size(n: usize) -> Self {
+        let best_a = (n as f64 / 32.0).max(2.0);
+        let best_b = (n as f64 / 4.0).max(4.0);
+        Self::new(n, 64, best_a, best_b, 8, 0x9A5E_51F7, super::super::default_pool())
+    }
+
+    /// Iterations per phase.
+    pub fn period(&self) -> u64 {
+        self.period
+    }
+
+    /// Current phase: 0 or 1, alternating every [`period`](Self::period)
+    /// iterations.
+    pub fn phase(&self) -> u64 {
+        (self.iters / self.period) % 2
+    }
+
+    /// The best chunk of the *current* phase.
+    pub fn current_best(&self) -> f64 {
+        if self.phase() == 0 {
+            self.best_a
+        } else {
+            self.best_b
+        }
+    }
+
+    /// The current phase's synthetic cost at `chunk` — the deterministic
+    /// landscape the stress tests tune against directly (wall-clock-free).
+    /// Phase 1 doubles the level on top of moving the optimum, so the shift
+    /// is visible to an EWMA monitor at the converged chunk.
+    pub fn landscape_cost(&self, chunk: f64) -> f64 {
+        let base = chunk_cost_model(chunk, self.current_best());
+        if self.phase() == 0 {
+            base
+        } else {
+            2.0 * base
+        }
+    }
+
+    /// Advance the phase counter by `iters` iterations without running any
+    /// compute — lets tests place the flip exactly.
+    pub fn advance(&mut self, iters: u64) {
+        self.iters += iters;
+    }
+
+    /// Per-item busywork of the current phase: the configured unit budget,
+    /// doubled in phase 1 (level shift). Never a function of the chunk —
+    /// tuned parameters change speed, not results.
+    fn phase_units(&self) -> u32 {
+        if self.phase() == 0 {
+            self.work_units
+        } else {
+            2 * self.work_units
+        }
+    }
+
+    /// One parallel map at the given schedule, with per-item busywork of
+    /// `units` steps; does not advance the phase counter.
+    fn pass(&mut self, sched: Schedule, exec: ExecParams, units: u32) -> f64 {
+        let data = crate::ptr::SharedConst::new(self.data.as_ptr());
+        let out = crate::ptr::SharedMut::new(self.out.as_mut_ptr());
+        self.pool
+            .exec(0, self.n)
+            .sched(sched)
+            .params(exec)
+            .run(|items| {
+                for i in items {
+                    // SAFETY: out[i] is written by exactly one claim; data
+                    // is read-only.
+                    unsafe {
+                        *out.at(i) = spin_work(*data.at(i), units);
+                    }
+                }
+            });
+        self.checksum()
+    }
+
+    /// Sequential oracle at the same per-item busywork.
+    fn pass_sequential(&mut self, units: u32) -> f64 {
+        for i in 0..self.n {
+            self.out[i] = spin_work(self.data[i], units);
+        }
+        self.checksum()
+    }
+
+    fn checksum(&self) -> f64 {
+        self.out.iter().sum()
+    }
+
+    /// Output buffer access (tests pin bitwise equality).
+    pub fn output(&self) -> &[f64] {
+        &self.out
+    }
+}
+
+impl Workload for PhaseShift {
+    fn name(&self) -> &'static str {
+        "stress/phase-shift"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        (vec![1.0], vec![(self.n / 2).max(2) as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        let chunk = params[0].max(1) as usize;
+        let units = self.phase_units();
+        let cs = self.pass(Schedule::Dynamic(chunk), ExecParams::default(), units);
+        self.iters += 1;
+        cs
+    }
+
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
+        let units = self.phase_units();
+        let cs = self.pass(sched, exec, units);
+        self.iters += 1;
+        cs
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        // Compare both passes at the current phase without advancing the
+        // phase counter.
+        let units = self.phase_units();
+        let cp = self.pass(Schedule::Dynamic(4), ExecParams::default(), units);
+        let par = self.out.clone();
+        let cs = self.pass_sequential(units);
+        for (i, (a, b)) in par.iter().zip(self.out.iter()).enumerate() {
+            if a != b {
+                return Err(format!("out[{i}]: {a} != {b}"));
+            }
+        }
+        if cp != cs {
+            return Err(format!("checksum {cp} != {cs}"));
+        }
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        self.iters = 0;
+        self.out.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        PhaseShift::new(256, 8, 4.0, 32.0, 2, 7, pool())
+            .verify()
+            .unwrap();
+    }
+
+    #[test]
+    fn phase_flips_every_period_and_lifts_the_level() {
+        let mut w = PhaseShift::new(64, 3, 2.0, 16.0, 1, 1, pool());
+        assert_eq!(w.phase(), 0);
+        let phase0_cost = w.landscape_cost(16.0);
+        for _ in 0..3 {
+            let _ = w.run_iteration(&[2]);
+        }
+        assert_eq!(w.phase(), 1);
+        // Phase 1 lifts the level: even at phase 1's own optimum the cost
+        // sits at twice the phase-0 model's value there.
+        assert!(w.landscape_cost(16.0) >= 2.0 * 1.0 - 1e-12);
+        assert!(w.landscape_cost(2.0) > phase0_cost);
+        for _ in 0..3 {
+            let _ = w.run_iteration(&[2]);
+        }
+        assert_eq!(w.phase(), 0);
+    }
+
+    #[test]
+    fn optimum_moves_with_the_phase() {
+        let mut w = PhaseShift::new(128, 5, 4.0, 32.0, 1, 2, pool());
+        let argmin = |w: &PhaseShift| {
+            (1..=64)
+                .min_by(|&a, &b| {
+                    w.landscape_cost(a as f64)
+                        .partial_cmp(&w.landscape_cost(b as f64))
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        let a = argmin(&w);
+        w.advance(5);
+        let b = argmin(&w);
+        assert!((a as f64 - 4.0).abs() <= 2.0, "phase-0 argmin {a}");
+        assert!((b as f64 - 32.0).abs() <= 8.0, "phase-1 argmin {b}");
+    }
+
+    #[test]
+    fn advance_places_the_flip_without_compute() {
+        let mut w = PhaseShift::new(64, 10, 2.0, 16.0, 1, 1, pool());
+        w.advance(10);
+        assert_eq!(w.phase(), 1);
+        w.reset_state();
+        assert_eq!(w.phase(), 0);
+    }
+
+    #[test]
+    fn checksum_is_chunk_and_schedule_invariant_within_a_phase() {
+        let mut a = PhaseShift::new(128, 100, 4.0, 32.0, 2, 3, pool());
+        let mut b = PhaseShift::new(128, 100, 4.0, 32.0, 2, 3, pool());
+        let reference = a.run_iteration(&[8]);
+        assert_eq!(b.run_iteration(&[32]), reference);
+        assert_eq!(a.output(), b.output());
+        let mut c = PhaseShift::new(128, 100, 4.0, 32.0, 2, 3, pool());
+        assert_eq!(
+            c.run_schedule(Schedule::Guided(2), ExecParams::default(), &[]),
+            reference
+        );
+        assert_eq!(a.output(), c.output());
+    }
+}

@@ -1,0 +1,235 @@
+//! Power-law imbalance workload — heavy-tailed per-item costs,
+//! **front-loaded** so a static contiguous split is maximally wrong.
+//!
+//! Item `i` carries `≈ total / (i+1)^1.1` busywork units (truncated Zipf
+//! with deterministic jitter), in *descending* order: the head items — a
+//! dominant share of the total work — all land in member 0's contiguous
+//! span under `Schedule::Static`, which claims whole shares in one pop and
+//! therefore never lets thieves relieve the hot member. Chunked kinds pop
+//! at their grain and expose the remainder of the hot span to work
+//! stealing, so `Dynamic`/`Guided` cells balance the tail — this is the
+//! HPX-Smart-Executors scenario where schedule choice is the entire win,
+//! and the one PR 6's deque scheduler has to demonstrate, not just assert.
+//!
+//! `rust/tests/stress.rs` pins the headline: a tuned joint cell beats the
+//! best static cell's wall-clock by a stated margin, with `steals > 0`
+//! observed through [`run_metered`].
+//!
+//! [`run_metered`]: PowerLaw::run_metered
+
+use super::spin_work;
+use crate::rng::Xoshiro256pp;
+use crate::sched::{ExecParams, LoopMetrics, Schedule, ThreadPool};
+use crate::workloads::Workload;
+
+/// Heavy-tailed (Zipf) imbalance stress workload (see module docs).
+pub struct PowerLaw {
+    n: usize,
+    /// Per-item busywork units, descending (head-heavy).
+    work: Vec<u32>,
+    /// Per-item accumulator seeds.
+    seeds: Vec<f64>,
+    out: Vec<f64>,
+    total_units: u64,
+    pool: &'static ThreadPool,
+}
+
+impl PowerLaw {
+    /// `n` items with truncated-Zipf busywork averaging `avg_units` per
+    /// item, sorted descending so the heavy head is contiguous.
+    pub fn new(n: usize, avg_units: u32, seed: u64, pool: &'static ThreadPool) -> Self {
+        assert!(n >= 4 && avg_units >= 1);
+        let mut rng = Xoshiro256pp::new(seed);
+        // Zipf(1.1) weights with ±20% deterministic jitter, kept in rank
+        // order (descending) — the front-loaded worst case for Static.
+        let raw: Vec<f64> = (0..n)
+            .map(|i| rng.uniform(0.8, 1.2) / ((i + 1) as f64).powf(1.1))
+            .collect();
+        let raw_sum: f64 = raw.iter().sum();
+        let target = n as f64 * avg_units as f64;
+        let work: Vec<u32> = raw
+            .iter()
+            .map(|w| ((w / raw_sum * target).round() as u32).max(1))
+            .collect();
+        let seeds: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 1.0)).collect();
+        let total_units = work.iter().map(|&w| w as u64).sum();
+        Self {
+            n,
+            work,
+            seeds,
+            out: vec![0.0; n],
+            total_units,
+            pool,
+        }
+    }
+
+    /// Default-pool constructor.
+    pub fn with_size(n: usize, avg_units: u32) -> Self {
+        Self::new(n, avg_units, 0x21AF_5EED, super::super::default_pool())
+    }
+
+    /// Total busywork units across all items.
+    pub fn total_units(&self) -> u64 {
+        self.total_units
+    }
+
+    /// The heaviest single item's units (tail indicator).
+    pub fn max_item_units(&self) -> u32 {
+        self.work.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Fraction of all work carried by the first `k` items — the share a
+    /// static split hands to member 0 when `k = n / threads`.
+    pub fn head_fraction(&self, k: usize) -> f64 {
+        let head: u64 = self.work[..k.min(self.n)].iter().map(|&w| w as u64).sum();
+        head as f64 / self.total_units as f64
+    }
+
+    /// One full pass under `sched`/`exec`, optionally capturing per-member
+    /// [`LoopMetrics`] (the stress suite reads `total_steals()` from it).
+    pub fn run_metered(
+        &mut self,
+        sched: Schedule,
+        exec: ExecParams,
+        metrics: Option<&mut LoopMetrics>,
+    ) -> f64 {
+        let work = crate::ptr::SharedConst::new(self.work.as_ptr());
+        let seeds = crate::ptr::SharedConst::new(self.seeds.as_ptr());
+        let out = crate::ptr::SharedMut::new(self.out.as_mut_ptr());
+        let mut loop_exec = self.pool.exec(0, self.n).sched(sched).params(exec);
+        if let Some(m) = metrics {
+            loop_exec = loop_exec.metrics(m);
+        }
+        loop_exec.run(|items| {
+            for i in items {
+                // SAFETY: out[i] is written by exactly one claim; work and
+                // seeds are read-only.
+                unsafe {
+                    *out.at(i) = spin_work(*seeds.at(i), *work.at(i));
+                }
+            }
+        });
+        self.checksum()
+    }
+
+    /// Sequential oracle.
+    pub fn run_sequential(&mut self) -> f64 {
+        for i in 0..self.n {
+            self.out[i] = spin_work(self.seeds[i], self.work[i]);
+        }
+        self.checksum()
+    }
+
+    fn checksum(&self) -> f64 {
+        self.out.iter().sum()
+    }
+
+    /// Output buffer access (tests pin bitwise equality).
+    pub fn output(&self) -> &[f64] {
+        &self.out
+    }
+}
+
+impl Workload for PowerLaw {
+    fn name(&self) -> &'static str {
+        "stress/power-law"
+    }
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        (vec![1.0], vec![(self.n / 2).max(2) as f64])
+    }
+
+    fn run_iteration(&mut self, params: &[i32]) -> f64 {
+        self.run_metered(
+            Schedule::Dynamic(params[0].max(1) as usize),
+            ExecParams::default(),
+            None,
+        )
+    }
+
+    fn run_schedule(&mut self, sched: Schedule, exec: ExecParams, _rest: &[i32]) -> f64 {
+        self.run_metered(sched, exec, None)
+    }
+
+    fn verify(&mut self) -> Result<(), String> {
+        let cp = self.run_metered(Schedule::Dynamic(4), ExecParams::default(), None);
+        let par = self.out.clone();
+        let cs = self.run_sequential();
+        for (i, (a, b)) in par.iter().zip(self.out.iter()).enumerate() {
+            if a != b {
+                return Err(format!("out[{i}]: {a} != {b}"));
+            }
+        }
+        if cp != cs {
+            return Err(format!("checksum {cp} != {cs}"));
+        }
+        Ok(())
+    }
+
+    fn reset_state(&mut self) {
+        self.out.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static ThreadPool {
+        static P: OnceLock<ThreadPool> = OnceLock::new();
+        P.get_or_init(|| ThreadPool::new(4))
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        PowerLaw::new(512, 64, 42, pool()).verify().unwrap();
+    }
+
+    #[test]
+    fn work_is_heavy_tailed_and_front_loaded() {
+        let w = PowerLaw::new(1024, 128, 9, pool());
+        let mean = w.total_units() as f64 / 1024.0;
+        assert!(
+            w.max_item_units() as f64 > 20.0 * mean,
+            "tail not heavy: max {} mean {mean}",
+            w.max_item_units()
+        );
+        // Member 0's contiguous quarter carries the dominant share.
+        assert!(
+            w.head_fraction(256) > 0.75,
+            "head share {}",
+            w.head_fraction(256)
+        );
+        // Descending rank order.
+        assert!(w.work.windows(2).all(|p| p[0] >= p[1] || p[0] >= p[1] / 2));
+    }
+
+    #[test]
+    fn identical_across_schedules() {
+        let mut a = PowerLaw::new(256, 32, 5, pool());
+        let mut b = PowerLaw::new(256, 32, 5, pool());
+        let reference = a.run_metered(Schedule::Dynamic(1), ExecParams::default(), None);
+        for sched in [
+            Schedule::Static,
+            Schedule::StaticChunk(7),
+            Schedule::Dynamic(16),
+            Schedule::Guided(2),
+        ] {
+            assert_eq!(b.run_metered(sched, ExecParams::default(), None), reference);
+            assert_eq!(a.output(), b.output(), "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let a = PowerLaw::new(128, 16, 3, pool());
+        let b = PowerLaw::new(128, 16, 3, pool());
+        assert_eq!(a.work, b.work);
+        assert_eq!(a.seeds, b.seeds);
+    }
+}

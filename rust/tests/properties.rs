@@ -13,6 +13,7 @@
 //!    `[-1, 1]^d` for random configs and adversarial costs;
 //! 5. determinism: same seed ⇒ same tuning trajectory.
 
+use patsma::adaptive::{DriftConfig, DriftMonitor};
 use patsma::optimizer::{
     Csa, CsaConfig, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm, PsoConfig,
     RandomSearch, SaConfig, SimulatedAnnealing,
@@ -418,4 +419,92 @@ fn prop_single_exec_never_exceeds_app_iterations() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_drift_monitor_no_false_positive_on_stationary_noise() {
+    // Stationary streams with *bounded* relative noise never fire: with
+    // |cost − mean| ≤ 0.03·mean every EWMA value and the baseline mean both
+    // sit within 3% of the true mean, so their gap is ≤ 6% of the mean —
+    // strictly inside the rel_margin·|mean| = 20% band floor. This is a
+    // hard guarantee, not a probabilistic one, at every seed.
+    for seed in [0xD21F_0001u64, 0xD21F_0002, 0xD21F_0003] {
+        forall(
+            seed,
+            20,
+            |r| {
+                (
+                    r.uniform(0.5, 100.0),  // level
+                    r.uniform(0.0, 0.03),   // bounded relative noise
+                    r.next_u64(),           // stream seed
+                )
+            },
+            |&(mean, rel_noise, stream_seed)| {
+                let mut stream = Xoshiro256pp::new(stream_seed);
+                let mut m = DriftMonitor::new(DriftConfig::default());
+                for i in 0..3000 {
+                    let cost = mean * (1.0 + rel_noise * stream.uniform(-1.0, 1.0));
+                    if m.observe(cost) {
+                        return Err(format!(
+                            "false positive at sample {i} (mean {mean}, noise {rel_noise})"
+                        ));
+                    }
+                }
+                if !m.is_primed() {
+                    return Err("monitor never primed".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_drift_monitor_detects_every_step_beyond_the_band() {
+    // Any sustained level step clear of the full band (threshold_sigma
+    // baseline stddevs plus the rel_margin floor) is detected, and fast:
+    // the EWMA reaches the step as 1 − (1−alpha)^k, which passes band/step
+    // = 1/3 by the second post-step sample. 50 is a generous ceiling.
+    for seed in [0x57E9_0001u64, 0x57E9_0002, 0x57E9_0003] {
+        forall(
+            seed,
+            20,
+            |r| {
+                (
+                    r.uniform(0.5, 50.0),  // level
+                    r.uniform(0.0, 0.05),  // bounded relative noise: the
+                    // EWMA-to-baseline gap stays ≤ 10% of the mean, under
+                    // the 20% band floor — priming can never fire.
+                    r.next_u64(),          // stream seed
+                    Draw::usize_in(r, 8, 64), // priming samples
+                )
+            },
+            |&(mean, rel_noise, stream_seed, prime)| {
+                let mut stream = Xoshiro256pp::new(stream_seed);
+                let cfg = DriftConfig::default();
+                let mut m = DriftMonitor::new(cfg);
+                for _ in 0..prime {
+                    let cost = mean * (1.0 + rel_noise * stream.uniform(-1.0, 1.0));
+                    if m.observe(cost) {
+                        return Err("fired during stationary priming".into());
+                    }
+                }
+                // The realised band, from the monitor's own baseline stats.
+                let band = cfg.threshold_sigma * m.baseline_stddev()
+                    + cfg.rel_margin * m.baseline_mean().abs();
+                let stepped = m.baseline_mean() + 3.0 * band;
+                for i in 0..50 {
+                    if m.observe(stepped) {
+                        if i >= 10 {
+                            return Err(format!("detection took {i} samples"));
+                        }
+                        return Ok(());
+                    }
+                }
+                Err(format!(
+                    "step of 3x band never detected (mean {mean}, noise {rel_noise})"
+                ))
+            },
+        );
+    }
 }

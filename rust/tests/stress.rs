@@ -1,0 +1,301 @@
+//! Adversarial stress suite — pins the headline guarantees of the
+//! `workloads/stress/` family (ISSUE 8 acceptance criteria):
+//!
+//! 1. **phase-shift** — after the landscape flips, drift is detected from
+//!    bypass iterations alone and recovered by a *warm* re-tune at strictly
+//!    fewer evaluations than the cold tune, deterministically (the test
+//!    drives the exposed cost model, not wall-clock).
+//! 2. **power-law** — the front-loaded heavy tail forces `steals > 0`
+//!    under a chunked schedule, and a tuned joint cell beats the static
+//!    contiguous split's wall-clock by a stated margin (machine-dependent,
+//!    so guarded and seed-retried, never weakened to a tautology).
+//! 3. **multi-tenant** — K=4 concurrent `TunedRegion`s on one pool all
+//!    converge, and no tenant's converged cell is corrupted by a
+//!    neighbour's traffic.
+//!
+//! A `#[ignore]`-gated long-soak variant scales tenant count and rounds;
+//! CI runs it from the nightly `--include-ignored` timing job.
+
+use patsma::adaptive::{DriftConfig, TunedRegionConfig};
+use patsma::sched::{ExecParams, LoopMetrics, Schedule, ThreadPool};
+use patsma::workloads::stress::cache_antagonist::CacheAntagonist;
+use patsma::workloads::stress::multi_tenant::MultiTenant;
+use patsma::workloads::stress::phase_shift::PhaseShift;
+use patsma::workloads::stress::power_law::PowerLaw;
+use patsma::workloads::Workload;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+fn pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(4))
+}
+
+/// Median wall-clock of `runs` invocations, seconds.
+fn median_wall(runs: usize, mut f: impl FnMut()) -> f64 {
+    let mut walls: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    walls[walls.len() / 2]
+}
+
+// ---------------------------------------------------------------------------
+// (a) phase-shift: drift detected, warm-recovered, cheaper than cold.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn phase_shift_drift_is_detected_and_warm_recovered_cheaper_than_cold() {
+    // Drive the deterministic landscape directly: wall-clock-free, so the
+    // eval counts below are exact on any machine.
+    let w_pool = pool();
+    let mut w = PhaseShift::new(4096, 64, 8.0, 96.0, 1, 0xD21F, w_pool);
+    let mut region = TunedRegionConfig::new(1.0, 128.0)
+        .budget(4, 10)
+        .seed(5)
+        .build::<i32>();
+
+    // Cold tune on phase 0.
+    let mut guard = 0;
+    while !region.is_converged() {
+        region.run_with_cost(|p| (w.landscape_cost(p[0] as f64), ()));
+        guard += 1;
+        assert!(guard < 500, "cold tune did not converge");
+    }
+    let cold_evals = region.evaluations();
+    assert!(cold_evals > 0);
+    assert_eq!(region.retunes(), 0);
+
+    // Prime the drift baseline with bypass iterations at the converged
+    // point (still phase 0) — one past the monitor window.
+    for _ in 0..12 {
+        region.run_with_cost(|p| (w.landscape_cost(p[0] as f64), ()));
+    }
+    assert!(region.monitor().is_primed());
+    assert_eq!(region.retunes(), 0, "stationary phase must not fire");
+
+    // Flip the landscape: optimum moves 8 → 96 and the level doubles.
+    w.advance(w.period());
+    assert_eq!(w.phase(), 1);
+
+    // The monitor sees the level shift at the converged chunk within a few
+    // bypass iterations and triggers a warm re-tune.
+    let mut detected_after = 0;
+    while region.retunes() == 0 {
+        region.run_with_cost(|p| (w.landscape_cost(p[0] as f64), ()));
+        detected_after += 1;
+        assert!(detected_after < 50, "drift never detected");
+    }
+    assert!(
+        region.last_retune_was_warm(),
+        "retune must warm-start from the exported optimizer state"
+    );
+
+    // Recovery: re-converge on phase 1 at the reduced warm budget.
+    let mut guard = 0;
+    while !region.is_converged() {
+        region.run_with_cost(|p| (w.landscape_cost(p[0] as f64), ()));
+        guard += 1;
+        assert!(guard < 500, "warm retune did not converge");
+    }
+    let warm_evals = region.generation_evaluations();
+    assert!(
+        warm_evals < cold_evals,
+        "warm recovery ({warm_evals} evals) must be strictly cheaper than \
+         the cold tune ({cold_evals} evals)"
+    );
+    // And it actually recovered: the re-tuned point is competitive on the
+    // new landscape (within 2x of the new optimum's cost, far from the
+    // doubled-cost cliff the stale point sat on).
+    let tuned_cost = w.landscape_cost(region.point()[0] as f64);
+    let optimum_cost = w.landscape_cost(w.current_best());
+    assert!(
+        tuned_cost <= 2.0 * optimum_cost,
+        "recovered point cost {tuned_cost} vs optimum {optimum_cost}"
+    );
+}
+
+#[test]
+fn phase_shift_quick_profile_passes_its_oracle() {
+    let mut w = PhaseShift::with_size(512);
+    w.verify().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// (b) power-law: steals observed, tuned beats the static split.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn power_law_heavy_head_forces_steals() {
+    let mut w = PowerLaw::new(2048, 512, 7, pool());
+    // The first quarter of items carries the dominant work share...
+    assert!(w.head_fraction(512) > 0.75, "{}", w.head_fraction(512));
+    // ...so under a fine-grained chunked schedule the other members drain
+    // their spans and must steal from the hot member's deque.
+    let mut m = LoopMetrics::new(4);
+    let exec = ExecParams {
+        steal_batch: 1,
+        ..ExecParams::default()
+    };
+    let _ = w.run_metered(Schedule::Dynamic(1), exec, Some(&mut m));
+    assert!(
+        m.total_steals() > 0,
+        "no steals on a front-loaded heavy tail (imbalance {:.2})",
+        m.imbalance()
+    );
+}
+
+#[test]
+fn power_law_tuned_joint_cell_beats_the_static_split() {
+    if std::thread::available_parallelism().map_or(1, |n| n.get()) < 2 {
+        eprintln!("skipping: single-core runner, no parallel win to measure");
+        return;
+    }
+    let w_pool = pool();
+
+    // Baseline: the static contiguous split — member 0 owns the whole
+    // heavy head and the others idle (Static claims entire shares; the
+    // deque never exposes the hot span to thieves).
+    let mut baseline = PowerLaw::new(4096, 512, 11, w_pool);
+    let static_wall = median_wall(5, || {
+        let _ = baseline.run_metered(Schedule::Static, ExecParams::default(), None);
+    });
+
+    // Tuned: converge the joint (kind, chunk, steal-batch, backoff) space
+    // on real wall-clock, then measure the converged cell. Wall-clock
+    // tuning is machine-dependent, so retry across seeds and pass if any
+    // tuned cell clears the margin.
+    let margin = 0.85;
+    let mut best_ratio = f64::INFINITY;
+    for seed in [11u64, 17, 23] {
+        let mut w = PowerLaw::new(4096, 512, 11, w_pool);
+        let mut region = TunedRegionConfig::for_workload(&w, true)
+            .budget(3, 8)
+            .seed(seed)
+            // Wall-clock noise must not fire a retune mid-measurement.
+            .drift(DriftConfig::default().with_band(1e9, 1e9))
+            .build_typed();
+        let mut guard = 0;
+        while !region.is_converged() {
+            region.run_workload(&mut w);
+            guard += 1;
+            assert!(guard < 500, "joint tune did not converge");
+        }
+        let tuned_wall = median_wall(5, || {
+            let _ = region.run_workload(&mut w);
+        });
+        best_ratio = best_ratio.min(tuned_wall / static_wall);
+        if best_ratio < margin {
+            break;
+        }
+    }
+    assert!(
+        best_ratio < margin,
+        "tuned joint cell never beat the static split: best ratio \
+         {best_ratio:.3} (want < {margin})"
+    );
+}
+
+#[test]
+fn power_law_quick_profile_passes_its_oracle() {
+    let mut w = PowerLaw::with_size(512, 256);
+    w.verify().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// cache-antagonist: interference is real and numerics survive it.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cache_antagonist_interferes_without_perturbing_numerics() {
+    let mut w = CacheAntagonist::new(8192, 256, 3, pool());
+    // Quiet reference pass.
+    let reference = w.quiet_pass(Schedule::Dynamic(8), ExecParams::default());
+    let quiet_out = w.output().to_vec();
+    // Thrashed passes across schedules reproduce it bitwise.
+    for sched in [Schedule::Static, Schedule::Dynamic(4), Schedule::Guided(2)] {
+        assert_eq!(w.thrashed_pass(sched, ExecParams::default()), reference);
+        assert_eq!(w.output(), &quiet_out[..], "{sched:?}");
+    }
+    assert!(
+        w.antagonist_writes() > 0,
+        "the antagonist thread never stored — interference was not real"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) multi-tenant: K=4 concurrent regions converge, no corruption.
+// ---------------------------------------------------------------------------
+
+/// Each tenant owns a private workload + `TunedRegion` but shares the
+/// thread pool. All must converge; afterwards `rounds` of concurrent bypass
+/// traffic must leave every converged cell untouched (drift disabled, so
+/// *any* point change or retune is corruption, not adaptation).
+fn run_tenants(tenants: usize, rounds: usize) {
+    let shared = pool();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..tenants)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut w = PowerLaw::new(512, 64, 100 + t as u64, shared);
+                    let mut region = TunedRegionConfig::for_workload(&w, false)
+                        .budget(2, 6)
+                        .seed(40 + t as u64)
+                        // A drift band no measurement can cross: converged
+                        // cells must stay frozen under neighbour traffic.
+                        .drift(DriftConfig::default().with_band(1e9, 1e9))
+                        .build::<i32>();
+                    let mut guard = 0;
+                    while !region.is_converged() {
+                        region.run_workload(&mut w);
+                        guard += 1;
+                        assert!(guard < 500, "tenant {t} did not converge");
+                    }
+                    let converged_point = region.point().to_vec();
+                    let checksum = w.run_sequential();
+                    for _ in 0..rounds {
+                        region.run_workload(&mut w);
+                    }
+                    (
+                        t,
+                        converged_point,
+                        region.point().to_vec(),
+                        region.retunes(),
+                        checksum,
+                        w.run_sequential(),
+                    )
+                })
+            })
+            .collect();
+        for h in handles {
+            let (t, before, after, retunes, cs_before, cs_after) = h.join().unwrap();
+            assert_eq!(
+                before, after,
+                "tenant {t}: converged cell changed under neighbour traffic"
+            );
+            assert_eq!(retunes, 0, "tenant {t}: spurious retune");
+            assert_eq!(cs_before, cs_after, "tenant {t}: numerics corrupted");
+        }
+    });
+}
+
+#[test]
+fn four_concurrent_tuned_regions_converge_uncorrupted() {
+    run_tenants(4, 50);
+}
+
+#[test]
+fn multi_tenant_quick_profile_passes_its_oracle() {
+    let mut w = MultiTenant::with_size(256);
+    w.verify().unwrap();
+}
+
+#[test]
+#[ignore = "long soak: 8 tenants x 400 bypass rounds — nightly --include-ignored job"]
+fn long_soak_eight_tenants_stay_uncorrupted() {
+    run_tenants(8, 400);
+}

@@ -36,9 +36,10 @@ fn every_typed_space_roundtrips_decode_encode() {
                 );
             }
         }
-        // The joint space prepends the schedule kind to the plain space.
+        // The joint space swaps the chunk parameter for the full scheduler
+        // head (kind, chunk, steal-batch, backoff).
         let joint = w.joint_space();
-        assert_eq!(joint.dim(), w.dim() + 1, "{name}");
+        assert_eq!(joint.dim(), w.dim() - 1 + Schedule::JOINT_HEAD, "{name}");
         assert!(
             matches!(&joint.dims()[0], Dim::Categorical(kinds)
                 if kinds.len() == Schedule::KINDS.len()),
@@ -85,8 +86,10 @@ fn service_run_joint_covers_every_registry_name() {
     // `patsma service run --joint --workload <name>` end to end, and the
     // saved registry carries a typed schedule-cell label for it.
     for &name in workloads::NAMES {
+        // Registry names may carry a family prefix (stress/...) — keep the
+        // temp path flat.
         let registry = std::env::temp_dir()
-            .join(format!("patsma-conformance-{name}.txt"))
+            .join(format!("patsma-conformance-{}.txt", name.replace('/', "-")))
             .to_str()
             .unwrap()
             .to_string();
