@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Daemon smoke test: start `patsma daemon`, run 16 concurrent CLI clients
 # against it, stop it, and assert a clean drain — registry snapshot on
-# disk, socket file removed, every client answered.
+# disk, socket file removed, every client answered. Then the tuned-table
+# loop: a cold adaptive run promotes its converged cell to the daemon, an
+# exact revisit bypasses tuning entirely, the cell survives the drain into
+# the registry snapshot, and a restarted daemon serves it again.
 #
 # Usage: ci/daemon_smoke.sh [path/to/patsma]
 set -euo pipefail
@@ -69,6 +72,28 @@ for i in $(seq 1 "$CLIENTS"); do
         || { echo "session smoke-$i missing from live report" >&2; exit 1; }
 done
 
+echo "== tuned table: cold adaptive run promotes its cell to the daemon"
+"$PATSMA" adaptive run --workload rb-gauss-seidel --num-opt 2 --max-iter 3 \
+    --seed 7 --socket "$SOCKET" >"$WORK/adaptive-cold.log" 2>&1 \
+    || { cat "$WORK/adaptive-cold.log" >&2; exit 1; }
+grep -q "tuned table: miss" "$WORK/adaptive-cold.log" \
+    || { echo "first adaptive run should miss the table" >&2
+         cat "$WORK/adaptive-cold.log" >&2; exit 1; }
+grep -q "promoted to daemon table" "$WORK/adaptive-cold.log" \
+    || { echo "cold run did not promote its cell" >&2
+         cat "$WORK/adaptive-cold.log" >&2; exit 1; }
+
+echo "== tuned table: exact revisit bypasses with zero evaluations"
+"$PATSMA" adaptive run --workload rb-gauss-seidel --num-opt 2 --max-iter 3 \
+    --seed 99 --socket "$SOCKET" >"$WORK/adaptive-revisit.log" 2>&1 \
+    || { cat "$WORK/adaptive-revisit.log" >&2; exit 1; }
+grep -q "exact context hit" "$WORK/adaptive-revisit.log" \
+    || { echo "revisit should hit the daemon's tuned table" >&2
+         cat "$WORK/adaptive-revisit.log" >&2; exit 1; }
+grep -q "(0 evaluations)" "$WORK/adaptive-revisit.log" \
+    || { echo "exact hit should cost zero evaluations" >&2
+         cat "$WORK/adaptive-revisit.log" >&2; exit 1; }
+
 echo "== stop and drain"
 "$PATSMA" daemon stop --socket "$SOCKET"
 wait "$DAEMON_PID"
@@ -85,4 +110,37 @@ for i in $(seq 1 "$CLIENTS"); do
         || { echo "session smoke-$i lost in final snapshot" >&2; exit 1; }
 done
 
-echo "daemon smoke: OK ($CLIENTS clients, clean drain)"
+echo "== tuned table survived the drain into the registry snapshot"
+"$PATSMA" table show --registry "$REGISTRY" >"$WORK/table.txt"
+grep -q "tuned cell" "$WORK/table.txt" \
+    || { echo "tuned table lost in drain snapshot" >&2
+         cat "$WORK/table.txt" >&2; exit 1; }
+
+echo "== restart: a fresh daemon serves the persisted table"
+"$PATSMA" daemon start --socket "$SOCKET" --registry "$REGISTRY" \
+    --concurrency 4 --snapshot-secs 2 >"$WORK/daemon2.log" 2>&1 &
+DAEMON_PID=$!
+up=0
+for _ in $(seq 1 100); do
+    if "$PATSMA" daemon status --socket "$SOCKET" >/dev/null 2>&1; then
+        up=1
+        break
+    fi
+    sleep 0.1
+done
+if [[ "$up" != 1 ]]; then
+    echo "restarted daemon never came up; log:" >&2
+    cat "$WORK/daemon2.log" >&2
+    exit 1
+fi
+"$PATSMA" adaptive run --workload rb-gauss-seidel --num-opt 2 --max-iter 3 \
+    --seed 1234 --socket "$SOCKET" >"$WORK/adaptive-restart.log" 2>&1 \
+    || { cat "$WORK/adaptive-restart.log" >&2; exit 1; }
+grep -q "exact context hit" "$WORK/adaptive-restart.log" \
+    || { echo "restarted daemon lost the tuned table" >&2
+         cat "$WORK/adaptive-restart.log" >&2; exit 1; }
+"$PATSMA" daemon stop --socket "$SOCKET"
+wait "$DAEMON_PID"
+DAEMON_PID=""
+
+echo "daemon smoke: OK ($CLIENTS clients, clean drain, tuned table persisted)"

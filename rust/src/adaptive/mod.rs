@@ -67,6 +67,11 @@
 
 pub mod drift;
 pub mod region;
+pub mod table;
 
 pub use drift::{DriftConfig, DriftMonitor};
 pub use region::{TunedRegion, TunedRegionConfig, TunedSpace};
+pub use table::{
+    ContextKey, SharedTunedTable, TableAuthority, TableEntry, TableHit, TableSeed, TableUpdate,
+    TunedCell, TunedTable,
+};

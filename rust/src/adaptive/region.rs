@@ -20,12 +20,30 @@
 //!    fewer evaluations to spend than a cold restart.
 
 use super::drift::{DriftConfig, DriftMonitor};
+use super::table::{ContextKey, SharedTunedTable, TableHit, TableSeed};
 use crate::optimizer::OptimizerState;
 use crate::service::OptimizerSpec;
 use crate::space::{Dim, Point, SearchSpace};
 use crate::tuner::{Autotuning, PointValue, Sample};
 use crate::workloads::Workload;
 use std::time::Instant;
+
+/// Encode a user-domain point into the optimizer's internal `[-1, 1]^d`
+/// box (the inverse of [`crate::tuner::rescale_internal`]); degenerate
+/// `lo == hi` dimensions map to the centre.
+fn encode_box(point: &[f64], lo: &[f64], hi: &[f64]) -> Vec<f64> {
+    point
+        .iter()
+        .zip(lo.iter().zip(hi))
+        .map(|(&v, (&l, &h))| {
+            if h > l {
+                (2.0 * (v - l) / (h - l) - 1.0).clamp(-1.0, 1.0)
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
 
 /// Everything needed to build (and, on drift, rebuild) a region's
 /// optimizer: domain, budget, seed, drift policy.
@@ -64,9 +82,17 @@ pub struct TunedRegionConfig {
     pub seed: u64,
     /// Drift-detection policy for the bypass phase.
     pub drift: DriftConfig,
-    /// Percent of `max_iter` a warm re-tune gets (min 2 iterations: the
-    /// re-measure of the persisted best plus at least one refinement).
+    /// Percent of `max_iter` a warm re-tune (or a tuned-table near-hit
+    /// warm start) gets, **contractually `1..=100`** — a warm budget can
+    /// never exceed the cold budget (min 2 iterations: the re-measure of
+    /// the persisted best plus at least one refinement). The
+    /// [`retune_budget_pct`](Self::retune_budget_pct) builder clamps;
+    /// values poked directly into the field are clamped again at use.
     pub retune_budget_pct: u32,
+    /// Optional tuned-table wiring ([`table`](Self::table)): consult the
+    /// shared table under this context key before tuning, store the
+    /// converged cell after.
+    pub table: Option<(SharedTunedTable, ContextKey)>,
 }
 
 impl TunedRegionConfig {
@@ -115,6 +141,7 @@ impl TunedRegionConfig {
             seed: 42,
             drift: DriftConfig::default(),
             retune_budget_pct: 50,
+            table: None,
         }
     }
 
@@ -149,10 +176,31 @@ impl TunedRegionConfig {
         self
     }
 
-    /// Builder-style re-tune budget override (percent of `max_iter`).
+    /// Builder-style re-tune budget override (percent of `max_iter`),
+    /// clamped to `1..=100`: a warm re-tune exists to be *cheaper* than a
+    /// cold start, so a percentage above 100 (which would silently grant
+    /// the re-tune a larger budget than the cold tune) saturates at 100,
+    /// and 0 raises to 1 (the minimum-2-iterations floor still applies).
     pub fn retune_budget_pct(mut self, pct: u32) -> Self {
-        self.retune_budget_pct = pct;
+        self.retune_budget_pct = pct.clamp(1, 100);
         self
+    }
+
+    /// Builder-style tuned-table wiring: before tuning, consult `table`
+    /// under `key` — an exact context hit bypasses immediately with zero
+    /// evaluations, a neighbouring size bucket warm-starts at the re-tune
+    /// budget, a miss tunes cold; every convergence stores its cell back
+    /// ([`super::table`] module docs).
+    pub fn table(mut self, table: SharedTunedTable, key: ContextKey) -> Self {
+        self.table = Some((table, key));
+        self
+    }
+
+    /// Iterations a warm start gets: `retune_budget_pct`% of `max_iter`
+    /// (percent clamped to `1..=100`), floored at 2.
+    fn warm_budget(&self) -> usize {
+        let pct = self.retune_budget_pct.clamp(1, 100) as usize;
+        ((self.max_iter * pct) / 100).max(2)
     }
 
     /// Number of tuned parameters.
@@ -169,19 +217,68 @@ impl TunedRegionConfig {
         )
     }
 
-    /// Materialise the region (generation 0 = cold start at full budget).
-    /// Requires a numeric box space (the `new`/`with_bounds` constructors);
-    /// use [`build_typed`](Self::build_typed) for mixed spaces.
+    /// Resolve the tuned table into a ready [`Autotuning`]: exact hit →
+    /// pinned bypass (zero evaluations), near hit → warm start at the
+    /// re-tune budget, miss / no table / unusable cell → cold start at
+    /// full budget. Returns the tuner, how it was seeded and — when
+    /// pinned — the cell's user-domain point.
+    fn seeded_autotuning(&self, lo: &[f64], hi: &[f64]) -> (Autotuning, TableSeed, Option<Vec<f64>>) {
+        let dim = lo.len();
+        let cold = |iters: usize| {
+            let opt = self.optimizer.build(dim, self.num_opt, iters, self.seed);
+            Autotuning::with_optimizer(lo.to_vec(), hi.to_vec(), self.ignore, opt)
+        };
+        let Some((table, key)) = &self.table else {
+            return (cold(self.max_iter), TableSeed::None, None);
+        };
+        match table.lookup(key) {
+            TableHit::Exact(cell) if cell.point.len() == dim => {
+                let mut at = cold(self.max_iter);
+                at.pin(encode_box(&cell.point, lo, hi));
+                (at, TableSeed::Exact, Some(cell.point))
+            }
+            TableHit::Near(_, cell) if cell.point.len() == dim => {
+                let internal = encode_box(&cell.point, lo, hi);
+                let mut opt = self
+                    .optimizer
+                    .build(dim, self.num_opt, self.warm_budget(), self.seed);
+                let snapshot = OptimizerState {
+                    optimizer: opt.name().to_string(),
+                    best_internal: internal.clone(),
+                    best_cost: cell.cost,
+                    temperatures: None,
+                    points: vec![internal],
+                };
+                if opt.warm_start(&snapshot) {
+                    let at = Autotuning::with_optimizer(lo.to_vec(), hi.to_vec(), self.ignore, opt);
+                    (at, TableSeed::Near, None)
+                } else {
+                    // The optimizer cannot consume a snapshot (grid): a
+                    // reduced budget would just be a worse cold start.
+                    (cold(self.max_iter), TableSeed::None, None)
+                }
+            }
+            _ => (cold(self.max_iter), TableSeed::None, None),
+        }
+    }
+
+    /// Materialise the region (generation 0 = cold start at full budget,
+    /// unless a wired tuned table answers for the context — see
+    /// [`table`](Self::table)). Requires a numeric box space (the
+    /// `new`/`with_bounds` constructors); use
+    /// [`build_typed`](Self::build_typed) for mixed spaces.
     pub fn build<P: PointValue>(self) -> TunedRegion<P> {
-        let dim = self.dim();
         let (lo, hi) = self.numeric_bounds();
-        let opt = self
-            .optimizer
-            .build(dim, self.num_opt, self.max_iter, self.seed);
-        let at = Autotuning::with_optimizer(lo.clone(), hi, self.ignore, opt);
+        let (at, seeded, pinned) = self.seeded_autotuning(&lo, &hi);
         let monitor = DriftMonitor::new(self.drift);
+        let point = pinned
+            .as_deref()
+            .unwrap_or(&lo)
+            .iter()
+            .map(|&v| P::from_f64(v))
+            .collect();
         TunedRegion {
-            point: lo.iter().map(|&l| P::from_f64(l)).collect(),
+            point,
             cfg: self,
             at,
             monitor,
@@ -189,6 +286,7 @@ impl TunedRegionConfig {
             evals_prior: 0,
             iterations: 0,
             last_retune_warm: false,
+            seeded,
         }
     }
 
@@ -206,10 +304,13 @@ impl TunedRegionConfig {
             space: SearchSpace::unit(dim),
             ..self
         };
-        let point = space.decode_unit(&vec![0.0; dim]);
+        let inner = unit_cfg.build::<f64>();
+        // A table-pinned inner region already sits on the remembered unit
+        // cell; decode whatever it starts at.
+        let point = space.decode_unit(inner.point());
         TunedSpace {
             space,
-            inner: unit_cfg.build::<f64>(),
+            inner,
             point,
         }
     }
@@ -249,6 +350,8 @@ pub struct TunedRegion<P: PointValue> {
     /// Whether the latest re-tune actually warm-started (false when the
     /// optimizer cannot export/consume a snapshot and restarted cold).
     last_retune_warm: bool,
+    /// How the initial generation was seeded from the tuned table.
+    seeded: TableSeed,
 }
 
 impl<P: PointValue> TunedRegion<P> {
@@ -279,25 +382,46 @@ impl<P: PointValue> TunedRegion<P> {
         // converged point, so they are the baseline — and the signal.
         if bypass && self.monitor.observe(measured) {
             self.retune();
+        } else if !bypass && self.at.is_finished() {
+            // This call completed a tuning generation: remember the cell.
+            self.store_converged();
         }
         out
+    }
+
+    /// Fold the just-converged result into the wired tuned table (no-op
+    /// without one). The table's authority limit decides how much an
+    /// existing cell moves.
+    fn store_converged(&mut self) {
+        let Some((table, key)) = &self.cfg.table else {
+            return;
+        };
+        if let Some((point, cost)) = self.at.best() {
+            table.observe(*key, &point, cost, None);
+        }
     }
 
     /// Force a warm re-tune now (drift known out-of-band — e.g. the caller
     /// changed the problem size). Also the path the drift monitor triggers.
     pub fn retune(&mut self) {
-        let snapshot: Option<OptimizerState> = self.at.export_state();
         self.evals_prior += self.at.evaluations();
         self.generation += 1;
         let dim = self.cfg.dim();
         // Per-generation seed: deterministic, but a re-tune explores a
         // different trajectory than the generation it replaces.
         let seed = self.cfg.seed.wrapping_add(self.generation);
-        let reduced = ((self.cfg.max_iter * self.cfg.retune_budget_pct as usize) / 100).max(2);
+        let reduced = self.cfg.warm_budget();
         let mut opt = self
             .cfg
             .optimizer
             .build(dim, self.cfg.num_opt, reduced, seed);
+        // A region pinned from a table exact hit has no search history to
+        // export (zero evaluations); fabricate the snapshot from the cell
+        // so a drift after a pin still re-tunes warm.
+        let snapshot: Option<OptimizerState> = self
+            .at
+            .export_state()
+            .or_else(|| self.table_snapshot(opt.name(), dim));
         self.last_retune_warm = snapshot
             .as_ref()
             .map(|s| opt.warm_start(s))
@@ -313,6 +437,22 @@ impl<P: PointValue> TunedRegion<P> {
         let (lo, hi) = self.cfg.numeric_bounds();
         self.at = Autotuning::with_optimizer(lo, hi, self.cfg.ignore, opt);
         self.monitor.reset();
+    }
+
+    /// An [`OptimizerState`] fabricated from the wired table's exact-hit
+    /// cell, for re-tuning a generation that never searched (pinned).
+    fn table_snapshot(&self, optimizer: &str, dim: usize) -> Option<OptimizerState> {
+        let (table, key) = self.cfg.table.as_ref()?;
+        let cell = table.get(key).filter(|c| c.point.len() == dim)?;
+        let (lo, hi) = self.cfg.numeric_bounds();
+        let internal = encode_box(&cell.point, &lo, &hi);
+        Some(OptimizerState {
+            optimizer: optimizer.to_string(),
+            best_internal: internal.clone(),
+            best_cost: cell.cost,
+            temperatures: None,
+            points: vec![internal],
+        })
     }
 
     /// True while the optimizer has converged and `run` bypasses straight
@@ -353,6 +493,12 @@ impl<P: PointValue> TunedRegion<P> {
     /// before any re-tune, or when the optimizer restarted cold).
     pub fn last_retune_was_warm(&self) -> bool {
         self.last_retune_warm
+    }
+
+    /// How the initial generation was seeded from the wired tuned table
+    /// ([`TableSeed::None`] without a table or on a miss).
+    pub fn table_seed(&self) -> TableSeed {
+        self.seeded
     }
 
     /// Total `run*` calls over the region's lifetime.
@@ -558,6 +704,13 @@ impl TunedSpace {
         self.inner.last_retune_was_warm()
     }
 
+    /// How the initial generation was seeded from the wired tuned table.
+    /// Typed regions store **unit coordinates** in their cells — wire the
+    /// same [`SearchSpace`] to make revisits recognisable.
+    pub fn table_seed(&self) -> TableSeed {
+        self.inner.table_seed()
+    }
+
     /// Total `run*` calls over the region's lifetime.
     pub fn iterations(&self) -> u64 {
         self.inner.iterations()
@@ -739,6 +892,35 @@ mod tests {
     #[should_panic(expected = "bounds length mismatch")]
     fn mismatched_bounds_panic() {
         let _ = TunedRegionConfig::with_bounds(vec![1.0], vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn retune_budget_pct_builder_clamps_to_contract() {
+        // Regression (ISSUE 9 satellite): the builder used to pass any
+        // value through, silently granting warm re-tunes a *larger*
+        // budget than a cold start.
+        let cfg = TunedRegionConfig::new(1.0, 8.0).retune_budget_pct(400);
+        assert_eq!(cfg.retune_budget_pct, 100);
+        let cfg = TunedRegionConfig::new(1.0, 8.0).retune_budget_pct(0);
+        assert_eq!(cfg.retune_budget_pct, 1);
+        let cfg = TunedRegionConfig::new(1.0, 8.0).retune_budget_pct(75);
+        assert_eq!(cfg.retune_budget_pct, 75, "in-range values untouched");
+    }
+
+    #[test]
+    fn oversized_budget_poked_into_the_field_never_exceeds_cold() {
+        // The config fields are public; a percentage written directly
+        // into the struct is clamped again where the budget is computed.
+        let mut cfg = TunedRegionConfig::new(1.0, 128.0).budget(4, 10).seed(11);
+        cfg.retune_budget_pct = 400;
+        let mut region = cfg.build::<i32>();
+        converge(&mut region, 48.0);
+        region.retune();
+        assert!(region.last_retune_was_warm());
+        converge(&mut region, 48.0);
+        // Clamped to 100%: the warm generation gets exactly the cold
+        // budget (4 × 10), never the 4 × 40 the raw field asks for.
+        assert_eq!(region.generation_evaluations(), 40);
     }
 
     mod typed {

@@ -1,0 +1,717 @@
+//! [`TunedTable`] — contextual memory of converged tuning results.
+//!
+//! PATSMA's drift loop re-tunes whenever the landscape shifts, but it has
+//! no memory *across* contexts: a region built for a (workload, input
+//! size, thread count, environment) combination that was already paid for
+//! in an earlier run — or an earlier region — starts cold again. The
+//! tuned table closes that loop (ROADMAP open item 2, LibreTune's
+//! "AutoTune Live" design): converged cells are keyed by a [`ContextKey`]
+//! fingerprint and revisiting a known context costs **zero** tuning
+//! iterations.
+//!
+//! * **Exact hit** — same context fingerprint: the region pins the cell's
+//!   point and bypasses immediately ([`crate::tuner::Autotuning::pin`]).
+//! * **Near hit** — same context except a neighbouring input-size bucket
+//!   (the pow2 lattice of [`ContextKey::bucket_of`]): the cell seeds a
+//!   warm start at the region's reduced re-tune budget.
+//! * **Miss** — cold tune, then [`TunedTable::observe`] stores the result.
+//!
+//! Each cell carries a **confidence weight** that grows with confirming
+//! observations and an **authority limit**: a single new observation may
+//! move a cell by at most `max_move / weight` of each coordinate's scale,
+//! so one noisy (or adversarial) sample cannot overwrite a
+//! high-confidence cell — while a *sustained* shift erodes the weight and
+//! eventually wins. [`SharedTunedTable`] is the thread-safe handle regions
+//! hold; the daemon persists cells as registry-v2 `table` records and
+//! shares them across processes through the `lookup` / `promote` wire
+//! verbs ([`crate::service::Request`]).
+
+use crate::error::PatsmaError;
+use crate::service::cache::fnv1a;
+use crate::service::registry::{kv_num, kv_opt, split_kv};
+use crate::service::EnvFingerprint;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// The execution-context fingerprint a tuned cell is keyed by: workload
+/// identity, input-size bucket, thread count and environment — the same
+/// fields [`crate::service::SessionState`] already persists per session,
+/// collapsed into a hashable key.
+///
+/// # Examples
+///
+/// ```
+/// use patsma::adaptive::ContextKey;
+/// use patsma::service::EnvFingerprint;
+///
+/// let env = EnvFingerprint::with_threads(8);
+/// let a = ContextKey::new(0xFEED, 1_000_000, 8, &env);
+/// let b = ContextKey::new(0xFEED, 900_000, 8, &env);
+/// // Same pow2 size bucket → the same context.
+/// assert_eq!(a, b);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ContextKey {
+    /// Workload identity (e.g. [`crate::service::cache::fingerprint_str`]
+    /// of the workload descriptor).
+    pub workload: u64,
+    /// Input-size bucket on the pow2 lattice ([`Self::bucket_of`]).
+    pub bucket: u32,
+    /// Worker threads the region runs under.
+    pub threads: u32,
+    /// Environment hash ([`EnvFingerprint::hash`]).
+    pub env: u64,
+}
+
+impl ContextKey {
+    /// Key for `workload` (a precomputed fingerprint) at `input_size`
+    /// elements under `threads` workers in environment `env`. The input
+    /// size lands in its pow2 bucket; size `0` (unknown) lands in bucket 0.
+    pub fn new(workload: u64, input_size: u64, threads: usize, env: &EnvFingerprint) -> Self {
+        Self {
+            workload,
+            bucket: Self::bucket_of(input_size),
+            threads: threads as u32,
+            env: env.hash,
+        }
+    }
+
+    /// The pow2 lattice bucket of an input size: sizes in
+    /// `(2^(k-1), 2^k]` share bucket `k`; sizes 0 and 1 land in bucket 0.
+    /// Bucketing is what makes revisits *recognisable* — a 1,000,000-element
+    /// problem and a 980,000-element one are the same tuning context.
+    pub fn bucket_of(size: u64) -> u32 {
+        if size <= 1 {
+            0
+        } else {
+            64 - (size - 1).leading_zeros()
+        }
+    }
+
+    /// The same context at a different size bucket.
+    pub fn with_bucket(mut self, bucket: u32) -> Self {
+        self.bucket = bucket;
+        self
+    }
+
+    /// Neighbouring size buckets (`bucket ± 1`) — the near-hit candidates,
+    /// closest first (the smaller bucket is checked before the larger).
+    pub fn neighbors(&self) -> Vec<ContextKey> {
+        let mut out = Vec::with_capacity(2);
+        if self.bucket > 0 {
+            out.push(self.with_bucket(self.bucket - 1));
+        }
+        out.push(self.with_bucket(self.bucket + 1));
+        out
+    }
+
+    /// The cell index: FNV-1a over every field. Thread count and
+    /// environment *participate* in the key — the same workload under a
+    /// different pool size is a different context.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(24);
+        bytes.extend_from_slice(&self.workload.to_le_bytes());
+        bytes.extend_from_slice(&self.bucket.to_le_bytes());
+        bytes.extend_from_slice(&self.threads.to_le_bytes());
+        bytes.extend_from_slice(&self.env.to_le_bytes());
+        fnv1a(bytes)
+    }
+
+    /// The key as `key=value` pairs (registry-v2 / wire codec).
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        vec![
+            ("workload".into(), self.workload.to_string()),
+            ("bucket".into(), self.bucket.to_string()),
+            ("threads".into(), self.threads.to_string()),
+            ("env".into(), self.env.to_string()),
+        ]
+    }
+
+    /// Parse pairs produced by [`to_kv`](Self::to_kv); unknown keys are
+    /// ignored (forward compatibility).
+    pub fn from_kv(pairs: &[(String, String)]) -> Result<Self, PatsmaError> {
+        Ok(Self {
+            workload: kv_num(pairs, "workload")?,
+            bucket: kv_num(pairs, "bucket")?,
+            threads: kv_num(pairs, "threads")?,
+            env: kv_num(pairs, "env")?,
+        })
+    }
+}
+
+/// One remembered tuning result: the converged point (user domain for
+/// numeric regions, unit coordinates for typed spaces), its cost, and the
+/// confidence weight the authority limit scales against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedCell {
+    /// The converged parameter vector.
+    pub point: Vec<f64>,
+    /// The cost measured at the converged point.
+    pub cost: f64,
+    /// Confirming observations (≥ 1). High weight = tight authority.
+    pub weight: u32,
+    /// Optional human-readable cell label (typed spaces; display only).
+    pub label: Option<String>,
+}
+
+/// A keyed cell — the unit of persistence (registry-v2 `table` records)
+/// and of the `lookup` / `promote` wire verbs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableEntry {
+    /// The execution context the cell answers for.
+    pub key: ContextKey,
+    /// The remembered result.
+    pub cell: TunedCell,
+}
+
+impl TableEntry {
+    /// The record body as `key=value` pairs (registry-v2 / wire codec).
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let mut kv = self.key.to_kv();
+        kv.extend([
+            ("point".into(), join_point(&self.cell.point)),
+            ("cost".into(), format!("{:.17e}", self.cell.cost)),
+            ("weight".into(), self.cell.weight.to_string()),
+        ]);
+        if let Some(label) = &self.cell.label {
+            // Labels travel inside a whitespace-split record body.
+            kv.push(("label".into(), label.replace(char::is_whitespace, "_")));
+        }
+        kv
+    }
+
+    /// Parse a record body produced by [`to_kv`](Self::to_kv). Unknown
+    /// keys are ignored (forward compatibility).
+    pub fn from_kv(pairs: &[(String, String)]) -> Result<Self, PatsmaError> {
+        let entry = Self {
+            key: ContextKey::from_kv(pairs)?,
+            cell: TunedCell {
+                point: split_point(kv_opt(pairs, "point").unwrap_or("-"))?,
+                cost: kv_num(pairs, "cost")?,
+                weight: kv_num::<u32>(pairs, "weight")?.max(1),
+                label: kv_opt(pairs, "label").map(str::to_string),
+            },
+        };
+        if entry.cell.point.is_empty() {
+            return Err(PatsmaError::registry("table record with empty point"));
+        }
+        Ok(entry)
+    }
+
+    /// The full registry-v2 record line (without trailing newline).
+    pub fn to_record(&self) -> String {
+        let body: Vec<String> = self
+            .to_kv()
+            .into_iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        format!("table {}", body.join(" "))
+    }
+
+    /// Parse the body tokens of a `table` record line.
+    pub fn from_tokens(tokens: &[&str]) -> Result<Self, PatsmaError> {
+        Self::from_kv(&split_kv(tokens)?)
+    }
+}
+
+fn join_point(point: &[f64]) -> String {
+    if point.is_empty() {
+        return "-".into();
+    }
+    point
+        .iter()
+        .map(|v| format!("{v:.17e}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn split_point(text: &str) -> Result<Vec<f64>, PatsmaError> {
+    if text == "-" {
+        return Ok(Vec::new());
+    }
+    text.split(',')
+        .map(|t| {
+            t.parse()
+                .map_err(|_| PatsmaError::registry(format!("bad table point coord {t:?}")))
+        })
+        .collect()
+}
+
+/// How far a single observation may move an existing cell.
+///
+/// The allowance for a cell of weight `w` is `max_move / w` of each
+/// coordinate's scale (`max(|coord|, 1)`; for the cost, `|cost|`). A
+/// weight-1 cell moves freely (up to `max_move` of its scale per sample);
+/// a weight-8 cell barely moves — one poisoned sample cannot drag it off
+/// its optimum, while a *sustained* shift erodes the weight one
+/// disagreeing sample at a time until the new landscape wins.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TableAuthority {
+    /// Fraction of a coordinate's scale a weight-1 cell may move per
+    /// observation.
+    pub max_move: f64,
+    /// Confidence cap — confirmations beyond this stop tightening the
+    /// authority (and a cell can always be eroded back down).
+    pub max_weight: u32,
+}
+
+impl Default for TableAuthority {
+    fn default() -> Self {
+        Self {
+            max_move: 0.25,
+            max_weight: 64,
+        }
+    }
+}
+
+impl TableAuthority {
+    /// The per-observation movement allowance of a cell at `weight`, as a
+    /// fraction of coordinate scale.
+    pub fn allowance(&self, weight: u32) -> f64 {
+        self.max_move / weight.max(1) as f64
+    }
+}
+
+/// What [`TunedTable::observe`] did with a sample.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableUpdate {
+    /// First observation for the context: cell created at weight 1.
+    Inserted,
+    /// The sample agreed with the cell: weight grew.
+    Confirmed,
+    /// The sample disagreed: the cell moved within its authority
+    /// allowance and its weight eroded.
+    Adjusted,
+    /// The cell's dimensionality changed (new search space): replaced at
+    /// weight 1.
+    Replaced,
+    /// Non-finite or empty sample: dropped.
+    Rejected,
+}
+
+/// How a region was seeded from the table (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableSeed {
+    /// No table, a miss, or an unusable cell: cold start.
+    None,
+    /// Exact context hit: pinned, zero tuning evaluations.
+    Exact,
+    /// Neighbouring size bucket: warm start at the re-tune budget.
+    Near,
+}
+
+/// The tuned table: context-keyed cells under an authority limit. Most
+/// callers hold a [`SharedTunedTable`]; this is the single-threaded core.
+#[derive(Debug, Clone, Default)]
+pub struct TunedTable {
+    cells: HashMap<u64, TableEntry>,
+    authority: TableAuthority,
+}
+
+/// A table lookup outcome (owned — cells are small).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TableHit {
+    /// The exact context is known.
+    Exact(TunedCell),
+    /// A neighbouring size bucket is known (the key it was found under).
+    Near(ContextKey, TunedCell),
+    /// Unknown context.
+    Miss,
+}
+
+impl TunedTable {
+    /// An empty table under the default [`TableAuthority`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty table under an explicit authority limit.
+    pub fn with_authority(authority: TableAuthority) -> Self {
+        Self {
+            cells: HashMap::new(),
+            authority,
+        }
+    }
+
+    /// The authority limit in force.
+    pub fn authority(&self) -> TableAuthority {
+        self.authority
+    }
+
+    /// Exact cell for `key`, if one is stored.
+    pub fn get(&self, key: &ContextKey) -> Option<&TunedCell> {
+        self.cells.get(&key.fingerprint()).map(|e| &e.cell)
+    }
+
+    /// Exact-hit / near-hit / miss resolution (see module docs): the exact
+    /// context first, then the `bucket ± 1` neighbours, closest first.
+    pub fn lookup(&self, key: &ContextKey) -> TableHit {
+        if let Some(cell) = self.get(key) {
+            return TableHit::Exact(cell.clone());
+        }
+        for neighbor in key.neighbors() {
+            if let Some(cell) = self.get(&neighbor) {
+                return TableHit::Near(neighbor, cell.clone());
+            }
+        }
+        TableHit::Miss
+    }
+
+    /// Fold one converged result into the table under the authority limit
+    /// (see [`TableUpdate`] for the outcomes). Non-finite samples are
+    /// rejected; a dimensionality change replaces the cell outright.
+    pub fn observe(
+        &mut self,
+        key: ContextKey,
+        point: &[f64],
+        cost: f64,
+        label: Option<&str>,
+    ) -> TableUpdate {
+        if point.is_empty() || !cost.is_finite() || point.iter().any(|v| !v.is_finite()) {
+            return TableUpdate::Rejected;
+        }
+        let fresh = |weight| TableEntry {
+            key,
+            cell: TunedCell {
+                point: point.to_vec(),
+                cost,
+                weight,
+                label: label.map(str::to_string),
+            },
+        };
+        let Some(entry) = self.cells.get_mut(&key.fingerprint()) else {
+            self.cells.insert(key.fingerprint(), fresh(1));
+            return TableUpdate::Inserted;
+        };
+        if entry.cell.point.len() != point.len() {
+            *entry = fresh(1);
+            return TableUpdate::Replaced;
+        }
+        let allowance = self.authority.allowance(entry.cell.weight);
+        let agrees = entry
+            .cell
+            .point
+            .iter()
+            .zip(point)
+            .all(|(a, b)| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0));
+        // The cost always tracks within authority — even a confirming
+        // sample re-measures it (machines drift too).
+        entry.cell.cost += clamp_move(cost - entry.cell.cost, allowance * entry.cell.cost.abs());
+        if agrees {
+            entry.cell.weight = (entry.cell.weight + 1).min(self.authority.max_weight);
+            if let Some(label) = label {
+                entry.cell.label = Some(label.to_string());
+            }
+            TableUpdate::Confirmed
+        } else {
+            for (cur, &new) in entry.cell.point.iter_mut().zip(point) {
+                *cur += clamp_move(new - *cur, allowance * cur.abs().max(1.0));
+            }
+            entry.cell.weight = entry.cell.weight.saturating_sub(1).max(1);
+            TableUpdate::Adjusted
+        }
+    }
+
+    /// Merge a full entry (wire `promote`, registry load): the higher
+    /// weight wins, ties break toward the lower cost. Returns the weight
+    /// of the cell now stored for the context.
+    pub fn promote(&mut self, entry: TableEntry) -> Result<u32, PatsmaError> {
+        if entry.cell.point.is_empty()
+            || !entry.cell.cost.is_finite()
+            || entry.cell.point.iter().any(|v| !v.is_finite())
+        {
+            return Err(PatsmaError::registry("promoted cell must be finite"));
+        }
+        let mut entry = entry;
+        entry.cell.weight = entry.cell.weight.clamp(1, self.authority.max_weight);
+        let slot = self.cells.entry(entry.key.fingerprint());
+        let kept = slot
+            .and_modify(|cur| {
+                let wins = entry.cell.weight > cur.cell.weight
+                    || (entry.cell.weight == cur.cell.weight && entry.cell.cost < cur.cell.cost);
+                if wins {
+                    *cur = entry.clone();
+                }
+            })
+            .or_insert_with(|| entry.clone());
+        Ok(kept.cell.weight)
+    }
+
+    /// Merge every entry (registry seeding); invalid cells are skipped.
+    pub fn load(&mut self, entries: &[TableEntry]) {
+        for entry in entries {
+            let _ = self.promote(entry.clone());
+        }
+    }
+
+    /// Every cell, sorted by key fields (stable snapshot order).
+    pub fn entries(&self) -> Vec<TableEntry> {
+        let mut out: Vec<TableEntry> = self.cells.values().cloned().collect();
+        out.sort_by_key(|e| (e.key.workload, e.key.bucket, e.key.threads, e.key.env));
+        out
+    }
+
+    /// Stored cell count.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True when no cells are stored.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Drop every cell.
+    pub fn clear(&mut self) {
+        self.cells.clear();
+    }
+}
+
+fn clamp_move(delta: f64, limit: f64) -> f64 {
+    delta.clamp(-limit.abs(), limit.abs())
+}
+
+/// The thread-safe tuned-table handle regions and the daemon hold
+/// (cheaply cloneable; all clones share the cells).
+///
+/// # Examples
+///
+/// ```
+/// use patsma::adaptive::{ContextKey, SharedTunedTable, TableHit};
+/// use patsma::service::EnvFingerprint;
+///
+/// let table = SharedTunedTable::new();
+/// let key = ContextKey::new(7, 4096, 8, &EnvFingerprint::with_threads(8));
+/// table.observe(key, &[48.0], 0.25, None);
+/// assert!(matches!(table.lookup(&key), TableHit::Exact(_)));
+/// ```
+#[derive(Clone, Default)]
+pub struct SharedTunedTable(Arc<Mutex<TunedTable>>);
+
+impl SharedTunedTable {
+    /// An empty shared table under the default authority.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty shared table under an explicit authority limit.
+    pub fn with_authority(authority: TableAuthority) -> Self {
+        Self(Arc::new(Mutex::new(TunedTable::with_authority(authority))))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TunedTable> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// See [`TunedTable::lookup`].
+    pub fn lookup(&self, key: &ContextKey) -> TableHit {
+        self.lock().lookup(key)
+    }
+
+    /// See [`TunedTable::get`] (owned).
+    pub fn get(&self, key: &ContextKey) -> Option<TunedCell> {
+        self.lock().get(key).cloned()
+    }
+
+    /// See [`TunedTable::observe`].
+    pub fn observe(
+        &self,
+        key: ContextKey,
+        point: &[f64],
+        cost: f64,
+        label: Option<&str>,
+    ) -> TableUpdate {
+        self.lock().observe(key, point, cost, label)
+    }
+
+    /// See [`TunedTable::promote`].
+    pub fn promote(&self, entry: TableEntry) -> Result<u32, PatsmaError> {
+        self.lock().promote(entry)
+    }
+
+    /// See [`TunedTable::load`].
+    pub fn load(&self, entries: &[TableEntry]) {
+        self.lock().load(entries)
+    }
+
+    /// See [`TunedTable::entries`].
+    pub fn entries(&self) -> Vec<TableEntry> {
+        self.lock().entries()
+    }
+
+    /// See [`TunedTable::len`].
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// See [`TunedTable::is_empty`].
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// See [`TunedTable::clear`].
+    pub fn clear(&self) {
+        self.lock().clear()
+    }
+}
+
+impl fmt::Debug for SharedTunedTable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SharedTunedTable")
+            .field("cells", &self.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(workload: u64, size: u64) -> ContextKey {
+        ContextKey::new(workload, size, 8, &EnvFingerprint::with_threads(8))
+    }
+
+    #[test]
+    fn pow2_buckets_partition_sizes() {
+        assert_eq!(ContextKey::bucket_of(0), 0);
+        assert_eq!(ContextKey::bucket_of(1), 0);
+        assert_eq!(ContextKey::bucket_of(2), 1);
+        assert_eq!(ContextKey::bucket_of(3), 2);
+        assert_eq!(ContextKey::bucket_of(4), 2);
+        assert_eq!(ContextKey::bucket_of(5), 3);
+        assert_eq!(ContextKey::bucket_of(1 << 20), 20);
+        assert_eq!(ContextKey::bucket_of((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_every_field() {
+        let env = EnvFingerprint::with_threads(8);
+        let base = ContextKey::new(1, 1024, 8, &env);
+        let fp = base.fingerprint();
+        assert_ne!(ContextKey::new(2, 1024, 8, &env).fingerprint(), fp);
+        assert_ne!(ContextKey::new(1, 4096, 8, &env).fingerprint(), fp);
+        assert_ne!(ContextKey::new(1, 1024, 4, &env).fingerprint(), fp);
+        let other_env = EnvFingerprint::with_threads(16);
+        assert_ne!(ContextKey::new(1, 1024, 8, &other_env).fingerprint(), fp);
+    }
+
+    #[test]
+    fn observe_insert_confirm_and_erode() {
+        let mut t = TunedTable::new();
+        let k = key(1, 4096);
+        assert_eq!(t.observe(k, &[48.0], 1.0, None), TableUpdate::Inserted);
+        assert_eq!(t.get(&k).unwrap().weight, 1);
+        for expect in 2..=5u32 {
+            assert_eq!(t.observe(k, &[48.0], 1.0, None), TableUpdate::Confirmed);
+            assert_eq!(t.get(&k).unwrap().weight, expect);
+        }
+        // A disagreeing sample erodes the weight and barely moves the cell.
+        assert_eq!(t.observe(k, &[120.0], 1.0, None), TableUpdate::Adjusted);
+        let cell = t.get(&k).unwrap();
+        assert_eq!(cell.weight, 4);
+        let allowed = t.authority().allowance(5) * 48.0;
+        assert!(
+            (cell.point[0] - 48.0).abs() <= allowed + 1e-12,
+            "moved {} > allowance {allowed}",
+            (cell.point[0] - 48.0).abs()
+        );
+    }
+
+    #[test]
+    fn non_finite_samples_are_rejected() {
+        let mut t = TunedTable::new();
+        let k = key(2, 64);
+        assert_eq!(t.observe(k, &[f64::NAN], 1.0, None), TableUpdate::Rejected);
+        assert_eq!(
+            t.observe(k, &[1.0], f64::INFINITY, None),
+            TableUpdate::Rejected
+        );
+        assert_eq!(t.observe(k, &[], 1.0, None), TableUpdate::Rejected);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn dimension_change_replaces_the_cell() {
+        let mut t = TunedTable::new();
+        let k = key(3, 64);
+        t.observe(k, &[1.0], 1.0, None);
+        assert_eq!(t.observe(k, &[1.0, 2.0], 0.5, None), TableUpdate::Replaced);
+        let cell = t.get(&k).unwrap();
+        assert_eq!(cell.point.len(), 2);
+        assert_eq!(cell.weight, 1);
+    }
+
+    #[test]
+    fn lookup_prefers_exact_then_nearest_bucket() {
+        let mut t = TunedTable::new();
+        let k = key(4, 1 << 10);
+        t.observe(k.with_bucket(k.bucket - 1), &[10.0], 1.0, None);
+        t.observe(k.with_bucket(k.bucket + 1), &[20.0], 1.0, None);
+        match t.lookup(&k) {
+            TableHit::Near(found, cell) => {
+                assert_eq!(found.bucket, k.bucket - 1, "smaller bucket first");
+                assert_eq!(cell.point, vec![10.0]);
+            }
+            other => panic!("expected near hit, got {other:?}"),
+        }
+        t.observe(k, &[15.0], 0.5, None);
+        assert!(matches!(t.lookup(&k), TableHit::Exact(_)));
+        // A context two buckets away is a miss.
+        assert_eq!(t.lookup(&key(4, 1 << 14)), TableHit::Miss);
+    }
+
+    #[test]
+    fn promote_keeps_the_higher_confidence_cell() {
+        let mut t = TunedTable::new();
+        let k = key(5, 256);
+        let entry = |weight, cost| TableEntry {
+            key: k,
+            cell: TunedCell {
+                point: vec![7.0],
+                cost,
+                weight,
+                label: None,
+            },
+        };
+        assert_eq!(t.promote(entry(3, 1.0)).unwrap(), 3);
+        // Lower weight loses.
+        assert_eq!(t.promote(entry(2, 0.1)).unwrap(), 3);
+        assert_eq!(t.get(&k).unwrap().cost, 1.0);
+        // Equal weight, better cost wins.
+        assert_eq!(t.promote(entry(3, 0.5)).unwrap(), 3);
+        assert_eq!(t.get(&k).unwrap().cost, 0.5);
+        // Higher weight wins outright.
+        assert_eq!(t.promote(entry(9, 2.0)).unwrap(), 9);
+        assert!(t.promote(entry(1, f64::NAN)).is_err());
+    }
+
+    #[test]
+    fn entries_roundtrip_through_the_record_codec() {
+        let mut t = TunedTable::new();
+        t.observe(key(9, 4096), &[48.0, 0.5], 0.125, Some("dynamic,chunk=48"));
+        t.observe(key(1, 64), &[3.0], 2.5, None);
+        for entry in t.entries() {
+            let line = entry.to_record();
+            let tokens: Vec<&str> = line.split_whitespace().collect();
+            assert_eq!(tokens[0], "table");
+            let parsed = TableEntry::from_tokens(&tokens[1..]).unwrap();
+            assert_eq!(parsed, entry);
+        }
+        // Sorted by key fields.
+        let keys: Vec<u64> = t.entries().iter().map(|e| e.key.workload).collect();
+        assert_eq!(keys, vec![1, 9]);
+    }
+
+    #[test]
+    fn shared_table_is_cloneable_and_consistent() {
+        let table = SharedTunedTable::new();
+        let clone = table.clone();
+        let k = key(6, 512);
+        table.observe(k, &[4.0], 1.0, None);
+        assert_eq!(clone.len(), 1);
+        assert!(matches!(clone.lookup(&k), TableHit::Exact(_)));
+        clone.clear();
+        assert!(table.is_empty());
+    }
+}

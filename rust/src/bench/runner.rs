@@ -9,7 +9,7 @@
 //! (pinned by `tests/bench_harness.rs`).
 
 use super::json::Json;
-use crate::adaptive::{DriftConfig, TunedRegionConfig};
+use crate::adaptive::{ContextKey, DriftConfig, SharedTunedTable, TunedRegionConfig};
 use crate::optimizer::{drive, Csa, CsaConfig, NelderMead, NelderMeadConfig};
 use crate::sched::{LoopMetrics, Schedule, ThreadPool};
 use crate::service::{DaemonClient, DaemonConfig, OptimizerSpec, SessionSpec, TuningService};
@@ -471,6 +471,50 @@ pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
         "adaptive/region-drift-cycle",
         &adaptive,
     ));
+
+    // 4b. The tuned table's revisit promise, as a pair of entries: a cold
+    // tune of a fresh context (table miss, full budget) vs revisiting the
+    // same context through a pre-converged SharedTunedTable (exact hit —
+    // the region pins the remembered cell and spends zero tuning
+    // evaluations; what remains is build + bypass pass-through). The
+    // revisit median sitting far below the cold one is the report-level
+    // ISSUE 9 headline.
+    {
+        let env = crate::service::EnvFingerprint::current();
+        let key = ContextKey::new(0xBE9C, 1 << 16, ThreadPool::global().threads(), &env);
+        let landscape = |c: f64| crate::workloads::synthetic::chunk_cost_model(c, 32.0);
+        let region_cfg = |table: &SharedTunedTable| {
+            TunedRegionConfig::new(1.0, 128.0)
+                .budget(4, 6)
+                .seed(4242)
+                .table(table.clone(), key)
+        };
+        let converge = |table: &SharedTunedTable| {
+            let mut region = region_cfg(table).build::<i32>();
+            let mut iters = 0u32;
+            while !region.is_converged() && iters < 10_000 {
+                region.run_with_cost(|p| (landscape(p[0] as f64), ()));
+                iters += 1;
+            }
+            black_box(region.point()[0]);
+        };
+        let cold = bench("context-cold", warmup, samples, || {
+            converge(&SharedTunedTable::new());
+        });
+        entries.push(BenchEntry::from_measurement(
+            "adaptive/context-revisit-cold",
+            &cold,
+        ));
+        let table = SharedTunedTable::new();
+        converge(&table); // pay for the context once, outside the timer
+        let revisit = bench("context-revisit", warmup, samples, || {
+            converge(&table);
+        });
+        entries.push(BenchEntry::from_measurement(
+            "adaptive/context-revisit",
+            &revisit,
+        ));
+    }
 
     // 5. Shared-memory workloads, one target iteration at mid-domain params.
     for mut w in suite_workloads(suite, quick) {

@@ -24,7 +24,9 @@
 //! patsma client report [--socket PATH]
 //! patsma adaptive demo [--seed N]  # online tuning: converge → drift → recover
 //! patsma adaptive run --workload NAME [--joint] [--num-opt N] [--max-iter N]
-//!                     [--seed N]   # online tuning of a registry workload
+//!                     [--seed N] [--socket PATH] [--registry PATH]
+//!                     [--no-table] # online tuning of a registry workload
+//! patsma table show|clear [--registry PATH]  # the contextual tuned table
 //! patsma demo                      # 30-second guided tour
 //! ```
 
@@ -141,7 +143,17 @@ pub enum Command {
         num_opt: usize,
         max_iter: usize,
         seed: u64,
+        /// Consult/feed a daemon's tuned table over this socket.
+        socket: Option<String>,
+        /// Load/store the tuned table in this registry file (no daemon).
+        registry: Option<String>,
+        /// Opt out of the tuned table entirely (always cold-tune).
+        no_table: bool,
     },
+    /// Render the tuned-table records of a saved registry.
+    TableShow { registry: String },
+    /// Drop the tuned-table records from a saved registry.
+    TableClear { registry: String },
     /// Guided demo.
     Demo,
     /// Help text.
@@ -351,6 +363,9 @@ pub fn parse(args: &[String]) -> Result<Command, PatsmaError> {
                     num_opt: flag_num("--num-opt", flag_val("--num-opt").unwrap_or("4"))?,
                     max_iter: flag_num("--max-iter", flag_val("--max-iter").unwrap_or("8"))?,
                     seed: flag_num("--seed", flag_val("--seed").unwrap_or("42"))?,
+                    socket: flag_val("--socket").map(str::to_string),
+                    registry: flag_val("--registry").map(str::to_string),
+                    no_table: has_flag("--no-table"),
                 }),
                 other => Err(PatsmaError::Unknown {
                     kind: "adaptive action",
@@ -359,11 +374,32 @@ pub fn parse(args: &[String]) -> Result<Command, PatsmaError> {
                 }),
             }
         }
+        "table" => {
+            let action = rest
+                .first()
+                .filter(|a| !a.starts_with("--"))
+                .map(|s| s.as_str())
+                .ok_or_else(|| PatsmaError::Missing {
+                    what: "table action".into(),
+                    hint: "show|clear".into(),
+                })?;
+            let registry = flag_val("--registry").unwrap_or(DEFAULT_REGISTRY).to_string();
+            match action {
+                "show" => Ok(Command::TableShow { registry }),
+                "clear" => Ok(Command::TableClear { registry }),
+                other => Err(PatsmaError::Unknown {
+                    kind: "table action",
+                    name: other.to_string(),
+                    expected: "show|clear",
+                }),
+            }
+        }
         "demo" => Ok(Command::Demo),
         other => Err(PatsmaError::Unknown {
             kind: "command",
             name: other.to_string(),
-            expected: "list|experiment|tune|verify|bench|service|daemon|client|adaptive|demo|help",
+            expected:
+                "list|experiment|tune|verify|bench|service|daemon|client|adaptive|table|demo|help",
         }),
     }
 }
@@ -781,13 +817,50 @@ pub fn execute(cmd: Command) -> Result<String> {
             num_opt,
             max_iter,
             seed,
+            socket,
+            registry,
+            no_table,
         } => {
-            use crate::adaptive::TunedRegionConfig;
+            use crate::adaptive::{
+                ContextKey, SharedTunedTable, TableEntry, TableSeed, TunedRegionConfig,
+                TunedTable,
+            };
+            use crate::service::{fingerprint_str, EnvFingerprint, ServiceReport};
             let mut w = workloads::by_name(&workload)?;
-            let mut region = TunedRegionConfig::for_workload(w.as_ref(), joint)
+            // The execution context this run tunes for: workload identity
+            // (space shape included), input-size bucket, pool width, env.
+            let key = ContextKey::new(
+                fingerprint_str(&format!(
+                    "{workload}/{}",
+                    if joint { "joint" } else { "typed" }
+                )),
+                w.size_hint(),
+                crate::sched::ThreadPool::global().threads(),
+                &EnvFingerprint::current(),
+            );
+            let table = SharedTunedTable::new();
+            if !no_table {
+                if let Some(reg) = &registry {
+                    let path = std::path::Path::new(reg);
+                    if path.exists() {
+                        let (loaded, _skipped) = ServiceReport::load_lenient(path)?;
+                        table.load(&loaded.table);
+                    }
+                }
+                if let Some(sock) = &socket {
+                    let mut client = DaemonClient::connect(std::path::Path::new(sock))?;
+                    if let Some((entry, _exact)) = client.lookup(key)? {
+                        let _ = table.promote(entry);
+                    }
+                }
+            }
+            let mut cfg = TunedRegionConfig::for_workload(w.as_ref(), joint)
                 .budget(num_opt, max_iter)
-                .seed(seed)
-                .build_typed();
+                .seed(seed);
+            if !no_table {
+                cfg = cfg.table(table.clone(), key);
+            }
+            let mut region = cfg.build_typed();
             let mut iters = 0u64;
             while !region.is_converged() && iters < 100_000 {
                 let _ = region.run_workload(w.as_mut());
@@ -806,6 +879,20 @@ pub fn execute(cmd: Command) -> Result<String> {
                 iters,
                 region.evaluations(),
             );
+            s.push_str(&format!(
+                " tuned table: {}\n",
+                match region.table_seed() {
+                    TableSeed::Exact => "exact context hit — bypassed with zero tuning iterations",
+                    TableSeed::Near =>
+                        "near hit — warm-started from a neighbouring size bucket",
+                    TableSeed::None =>
+                        if no_table {
+                            "disabled (--no-table)"
+                        } else {
+                            "miss — cold tune, result stored"
+                        },
+                }
+            ));
             if let Some((best, cost)) = region.best() {
                 s.push_str(&format!(
                     " best measured: {} at {}\n",
@@ -813,8 +900,93 @@ pub fn execute(cmd: Command) -> Result<String> {
                     crate::bench::fmt_time(cost)
                 ));
             }
+            if !no_table {
+                if let Some(cell) = table.get(&key) {
+                    let entry = TableEntry { key, cell };
+                    if let Some(sock) = &socket {
+                        let mut client = DaemonClient::connect(std::path::Path::new(sock))?;
+                        let weight = client.promote(entry.clone())?;
+                        s.push_str(&format!(
+                            " promoted to daemon table (stored weight {weight})\n"
+                        ));
+                    }
+                    if let Some(reg) = &registry {
+                        let path = std::path::Path::new(reg);
+                        let mut report = if path.exists() {
+                            ServiceReport::load_lenient(path)?.0
+                        } else {
+                            ServiceReport {
+                                sessions: Vec::new(),
+                                states: Vec::new(),
+                                cache: crate::service::CacheStats {
+                                    hits: 0,
+                                    misses: 0,
+                                    entries: 0,
+                                    evictions: 0,
+                                    cap: 0,
+                                },
+                                table: Vec::new(),
+                                extras: Vec::new(),
+                            }
+                        };
+                        // Merge through promote so a higher-confidence cell
+                        // already on disk is never clobbered.
+                        let mut merged = TunedTable::new();
+                        merged.load(&report.table);
+                        let _ = merged.promote(entry);
+                        report.table = merged.entries();
+                        report.save(path)?;
+                        s.push_str(&format!(" table saved to {reg}\n"));
+                    }
+                }
+            }
             s.push_str(" (on drift: warm re-tune — see `patsma adaptive demo`)\n");
             Ok(s)
+        }
+        Command::TableShow { registry } => {
+            let path = std::path::Path::new(&registry);
+            if !path.exists() {
+                return Ok(format!("no registry at {registry}\n"));
+            }
+            let (report, _skipped) = service::ServiceReport::load_lenient(path)?;
+            if report.table.is_empty() {
+                return Ok("tuned table: empty\n".to_string());
+            }
+            let mut s = String::from(
+                "\n| workload | bucket | threads | env | point | cost | weight | label |\n\
+                 |---|---|---|---|---|---|---|---|\n",
+            );
+            for e in &report.table {
+                s.push_str(&format!(
+                    "| {:016x} | {} | {} | {:016x} | {} | {:.6e} | {} | {} |\n",
+                    e.key.workload,
+                    e.key.bucket,
+                    e.key.threads,
+                    e.key.env,
+                    e.cell
+                        .point
+                        .iter()
+                        .map(|v| format!("{v:.4}"))
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    e.cell.cost,
+                    e.cell.weight,
+                    e.cell.label.clone().unwrap_or_else(|| "-".into()),
+                ));
+            }
+            s.push_str(&format!("\n{} tuned cell(s)\n", report.table.len()));
+            Ok(s)
+        }
+        Command::TableClear { registry } => {
+            let path = std::path::Path::new(&registry);
+            if !path.exists() {
+                return Ok(format!("no registry at {registry}\n"));
+            }
+            let (mut report, _skipped) = service::ServiceReport::load_lenient(path)?;
+            let dropped = report.table.len();
+            report.table.clear();
+            report.save(path)?;
+            Ok(format!("cleared {dropped} tuned cell(s) from {registry}\n"))
         }
         Command::Demo => {
             let mut s = String::from("PATSMA demo — tuning RB Gauss–Seidel's chunk:\n");
@@ -980,8 +1152,15 @@ USAGE:
   patsma adaptive demo [--seed N]           online tuning walkthrough:
                                             converge, drift, warm recovery
   patsma adaptive run --workload NAME [--joint] [--num-opt N] [--max-iter N]
-              [--seed N]                    tune a registry workload online
-                                            to convergence (typed / joint)
+              [--seed N] [--socket PATH] [--registry PATH] [--no-table]
+                                            tune a registry workload online
+                                            to convergence (typed / joint);
+                                            --socket/--registry consult the
+                                            tuned table first — an exact
+                                            context revisit bypasses tuning
+                                            entirely (--no-table opts out)
+  patsma table show [--registry PATH]       render a registry's tuned table
+  patsma table clear [--registry PATH]      drop a registry's tuned table
   patsma demo                               30-second tour
 ";
 
@@ -1224,10 +1403,87 @@ mod tests {
                 num_opt: 2,
                 max_iter: 3,
                 seed: 9,
+                socket: None,
+                registry: None,
+                no_table: false,
             }
         );
+        match parse(&v(&[
+            "adaptive",
+            "run",
+            "--workload",
+            "spmv",
+            "--socket",
+            "/tmp/d.sock",
+            "--registry",
+            "/tmp/r.txt",
+            "--no-table",
+        ]))
+        .unwrap()
+        {
+            Command::AdaptiveRun {
+                socket,
+                registry,
+                no_table,
+                ..
+            } => {
+                assert_eq!(socket.as_deref(), Some("/tmp/d.sock"));
+                assert_eq!(registry.as_deref(), Some("/tmp/r.txt"));
+                assert!(no_table);
+            }
+            other => panic!("{other:?}"),
+        }
         // --workload is mandatory for adaptive run.
         assert!(parse(&v(&["adaptive", "run"])).is_err());
+    }
+
+    #[test]
+    fn parse_table_commands() {
+        assert_eq!(
+            parse(&v(&["table", "show"])).unwrap(),
+            Command::TableShow {
+                registry: DEFAULT_REGISTRY.into()
+            }
+        );
+        assert_eq!(
+            parse(&v(&["table", "clear", "--registry", "/tmp/r.txt"])).unwrap(),
+            Command::TableClear {
+                registry: "/tmp/r.txt".into()
+            }
+        );
+        assert!(parse(&v(&["table"])).is_err());
+        assert!(parse(&v(&["table", "frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn table_show_and_clear_roundtrip_a_registry() {
+        let dir = std::env::temp_dir().join(format!(
+            "patsma-cli-table-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let registry = dir.join("registry.txt");
+        let text = "# patsma-service-registry v2\n\
+                    cache hits=0 misses=0 entries=0 evictions=0 cap=0\n\
+                    table workload=7 bucket=12 threads=4 env=9 point=32 cost=0.25 weight=3 \
+                    label=dynamic,32\n";
+        std::fs::write(&registry, text).unwrap();
+        let reg = registry.to_string_lossy().to_string();
+        let shown = execute(Command::TableShow {
+            registry: reg.clone(),
+        })
+        .unwrap();
+        assert!(shown.contains("| 12 |"), "{shown}");
+        assert!(shown.contains("dynamic,32"), "{shown}");
+        assert!(shown.contains("1 tuned cell(s)"), "{shown}");
+        let cleared = execute(Command::TableClear {
+            registry: reg.clone(),
+        })
+        .unwrap();
+        assert!(cleared.contains("cleared 1 tuned cell(s)"), "{cleared}");
+        let shown = execute(Command::TableShow { registry: reg }).unwrap();
+        assert!(shown.contains("tuned table: empty"), "{shown}");
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]
@@ -1238,18 +1494,64 @@ mod tests {
             num_opt: 2,
             max_iter: 2,
             seed: 7,
+            socket: None,
+            registry: None,
+            no_table: false,
         })
         .unwrap();
         assert!(out.contains("converged cell = "), "{out}");
         assert!(out.contains("joint (schedule kind"), "{out}");
+        assert!(
+            out.contains("miss — cold tune"),
+            "no table source wired, the in-memory table starts empty: {out}"
+        );
         assert!(execute(Command::AdaptiveRun {
             workload: "nope".into(),
             joint: false,
             num_opt: 2,
             max_iter: 2,
             seed: 7,
+            socket: None,
+            registry: None,
+            no_table: false,
         })
         .is_err());
+    }
+
+    #[test]
+    fn adaptive_run_revisit_bypasses_through_a_registry_table() {
+        let dir = std::env::temp_dir().join(format!(
+            "patsma-cli-revisit-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let registry = dir.join("registry.txt").to_string_lossy().to_string();
+        let run = |no_table: bool| {
+            execute(Command::AdaptiveRun {
+                workload: "rb-gauss-seidel".into(),
+                joint: false,
+                num_opt: 2,
+                max_iter: 2,
+                seed: 7,
+                socket: None,
+                registry: Some(registry.clone()),
+                no_table,
+            })
+            .unwrap()
+        };
+        let cold = run(false);
+        assert!(cold.contains("miss — cold tune"), "{cold}");
+        assert!(cold.contains("table saved to "), "{cold}");
+        // Same context, second process: the stored cell answers instantly.
+        let revisit = run(false);
+        assert!(
+            revisit.contains("exact context hit — bypassed"),
+            "{revisit}"
+        );
+        // The opt-out really opts out.
+        let opted_out = run(true);
+        assert!(opted_out.contains("disabled (--no-table)"), "{opted_out}");
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

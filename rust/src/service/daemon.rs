@@ -31,8 +31,9 @@
 use super::proto::{self, Request, Response};
 use super::registry::ServiceReport;
 use super::{SessionReport, SessionSpec, TuningService};
+use crate::adaptive::table::{ContextKey, TableEntry};
 use crate::error::PatsmaError;
-use std::io::{ErrorKind, Read};
+use std::io::ErrorKind;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -342,99 +343,11 @@ fn snapshot_loop(shared: &Arc<DaemonShared>) {
     }
 }
 
-/// What one attempt to read a request produced.
-enum ReadOutcome {
-    /// A complete frame payload.
-    Frame(String),
-    /// The connection is idle between requests and the daemon is draining.
-    Idle,
-    /// The peer closed the connection cleanly.
-    Closed,
-}
-
-/// How long a client may stall *mid-frame* before the connection is
-/// dropped — bounds how long a half-sent request can hold up a drain.
+/// How many *stalled* read timeouts a client may spend mid-frame before
+/// the connection is dropped — bounds how long a half-sent request can
+/// hold up a drain. Timeouts where the frame made progress reset the
+/// clock: a slow-but-moving writer is resumed indefinitely.
 const MID_FRAME_PATIENCE: u32 = 200; // × the 50 ms read timeout = 10 s
-
-enum Filled {
-    Complete,
-    Eof,
-    DrainIdle,
-}
-
-/// Fill `buf` from the stream, tolerating read timeouts. With `idle_ok`,
-/// a clean EOF or a drain while nothing has been read yet are reported
-/// instead of treated as errors (that is the between-requests state).
-fn fill(
-    stream: &mut UnixStream,
-    buf: &mut [u8],
-    shared: &DaemonShared,
-    idle_ok: bool,
-) -> Result<Filled, PatsmaError> {
-    let mut filled = 0;
-    let mut stalls = 0u32;
-    while filled < buf.len() {
-        match stream.read(&mut buf[filled..]) {
-            Ok(0) if filled == 0 && idle_ok => return Ok(Filled::Eof),
-            Ok(0) => {
-                return Err(PatsmaError::Protocol(
-                    "connection closed mid-frame".into(),
-                ))
-            }
-            Ok(n) => {
-                filled += n;
-                stalls = 0;
-            }
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                if filled == 0 && idle_ok {
-                    if shared.drain_requested() {
-                        return Ok(Filled::DrainIdle);
-                    }
-                } else {
-                    stalls += 1;
-                    if stalls > MID_FRAME_PATIENCE {
-                        return Err(PatsmaError::Protocol(
-                            "client stalled mid-frame".into(),
-                        ));
-                    }
-                }
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(PatsmaError::Protocol(format!("reading frame: {e}"))),
-        }
-    }
-    Ok(Filled::Complete)
-}
-
-/// Read one request frame, drain-aware (see [`fill`]).
-fn read_record(
-    stream: &mut UnixStream,
-    shared: &DaemonShared,
-) -> Result<ReadOutcome, PatsmaError> {
-    let mut len_buf = [0u8; 4];
-    match fill(stream, &mut len_buf, shared, true)? {
-        Filled::Complete => {}
-        Filled::Eof => return Ok(ReadOutcome::Closed),
-        Filled::DrainIdle => return Ok(ReadOutcome::Idle),
-    }
-    let len = u32::from_be_bytes(len_buf) as usize;
-    if len > proto::MAX_FRAME {
-        return Err(PatsmaError::Protocol(format!(
-            "frame of {len} bytes exceeds the {}-byte cap",
-            proto::MAX_FRAME
-        )));
-    }
-    let mut payload = vec![0u8; len];
-    match fill(stream, &mut payload, shared, false)? {
-        Filled::Complete => {}
-        Filled::Eof | Filled::DrainIdle => {
-            return Err(PatsmaError::Protocol("connection closed mid-frame".into()))
-        }
-    }
-    String::from_utf8(payload)
-        .map(ReadOutcome::Frame)
-        .map_err(|_| PatsmaError::Protocol("frame payload is not UTF-8".into()))
-}
 
 /// After pushing the unsolicited `draining` frame, how many more idle
 /// read timeouts to linger before closing — long enough that a request
@@ -444,28 +357,51 @@ const DRAIN_LINGER: u32 = 10; // × the 50 ms read timeout = 0.5 s
 /// One connection's request/response loop. Every parsed request routes
 /// through [`TuningService::handle`]; a drain while the client is idle
 /// gets a clean `draining` frame before the close.
+///
+/// The [`proto::FrameReader`] persists across read timeouts, so a client
+/// writing a frame slower than the 50 ms timeout is *resumed* mid-frame
+/// rather than having its request dropped (ISSUE 9 bugfix); only a client
+/// making no progress at all runs down [`MID_FRAME_PATIENCE`].
 fn serve_connection(mut stream: UnixStream, shared: &Arc<DaemonShared>) {
     // Accepted sockets are blocking; short read timeouts let the handler
     // notice a drain between requests instead of blocking forever.
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut reader = proto::FrameReader::new();
     let mut linger = 0u32;
+    let mut stalls = 0u32;
+    let mut last_progress = 0usize;
     loop {
-        match read_record(&mut stream, shared) {
-            Ok(ReadOutcome::Closed) | Err(_) => return,
-            Ok(ReadOutcome::Idle) => {
-                if linger == 0
-                    && proto::write_frame(&mut stream, &Response::Draining.to_wire()).is_err()
-                {
-                    return;
-                }
-                linger += 1;
-                if linger > DRAIN_LINGER {
-                    return;
+        match reader.step(&mut stream) {
+            Ok(proto::FrameStep::Closed) | Err(_) => return,
+            Ok(proto::FrameStep::Pending) => {
+                if reader.mid_frame() {
+                    if reader.progress() == last_progress {
+                        stalls += 1;
+                        if stalls > MID_FRAME_PATIENCE {
+                            return;
+                        }
+                    } else {
+                        last_progress = reader.progress();
+                        stalls = 0;
+                    }
+                } else if shared.drain_requested() {
+                    if linger == 0
+                        && proto::write_frame(&mut stream, &Response::Draining.to_wire())
+                            .is_err()
+                    {
+                        return;
+                    }
+                    linger += 1;
+                    if linger > DRAIN_LINGER {
+                        return;
+                    }
                 }
             }
-            Ok(ReadOutcome::Frame(record)) => {
+            Ok(proto::FrameStep::Frame(record)) => {
+                stalls = 0;
+                last_progress = 0;
                 shared.requests.fetch_add(1, Ordering::Relaxed);
                 let response = match Request::from_wire(&record) {
                     Ok(request) => shared.service.handle(request),
@@ -557,6 +493,31 @@ impl DaemonClient {
             Response::Draining => Err(PatsmaError::Draining),
             Response::Error(reason) => Err(PatsmaError::Invalid(reason)),
             other => Err(unexpected("retune", &other)),
+        }
+    }
+
+    /// Look a context up in the daemon's tuned table. Returns the entry
+    /// and whether it was an exact context hit (`false` = neighbouring
+    /// size bucket — warm-start material, not a bypass). Lookups are
+    /// reads: a draining daemon still answers them.
+    pub fn lookup(&mut self, key: ContextKey) -> Result<Option<(TableEntry, bool)>, PatsmaError> {
+        match self.request(&Request::Lookup { key })? {
+            Response::Cell { entry, exact } => Ok(entry.map(|e| (e, exact))),
+            Response::Draining => Err(PatsmaError::Draining),
+            Response::Error(reason) => Err(PatsmaError::Invalid(reason)),
+            other => Err(unexpected("lookup", &other)),
+        }
+    }
+
+    /// Offer a converged cell to the daemon's tuned table; returns the
+    /// stored confidence weight (the daemon may keep a higher-confidence
+    /// cell it already holds).
+    pub fn promote(&mut self, entry: TableEntry) -> Result<u32, PatsmaError> {
+        match self.request(&Request::Promote { entry })? {
+            Response::Promoted { weight } => Ok(weight),
+            Response::Draining => Err(PatsmaError::Draining),
+            Response::Error(reason) => Err(PatsmaError::Invalid(reason)),
+            other => Err(unexpected("promote", &other)),
         }
     }
 

@@ -86,6 +86,7 @@ pub use registry::{ServiceReport, SessionReport};
 pub use shard::{DEFAULT_SHARDS, SessionEntry, ShardedSessions};
 pub use state::{EnvFingerprint, SessionState};
 
+use crate::adaptive::table::{SharedTunedTable, TableEntry, TableHit};
 use crate::optimizer::{
     Csa, CsaConfig, GridSearch, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm,
     PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
@@ -743,6 +744,12 @@ pub struct TuningService {
     cache: PointCache,
     history: Mutex<Vec<SessionReport>>,
     sessions: ShardedSessions,
+    /// Converged cells keyed by execution context — what `lookup` answers
+    /// from and `promote` merges into; persisted as `table` records.
+    table: SharedTunedTable,
+    /// Registry record lines from newer writers, carried through snapshots
+    /// verbatim (forward compatibility).
+    extras: Mutex<Vec<String>>,
     draining: AtomicBool,
 }
 
@@ -763,8 +770,16 @@ impl TuningService {
             cache: PointCache::with_cap(cache_cap),
             history: Mutex::new(Vec::new()),
             sessions: ShardedSessions::new(shards, EnvFingerprint::current().hash),
+            table: SharedTunedTable::new(),
+            extras: Mutex::new(Vec::new()),
             draining: AtomicBool::new(false),
         }
+    }
+
+    /// The shared tuned table — regions running in-process can hold the
+    /// same handle the daemon serves `lookup`/`promote` from.
+    pub fn table(&self) -> &SharedTunedTable {
+        &self.table
     }
 
     /// Session-level parallelism bound.
@@ -826,6 +841,8 @@ impl TuningService {
             sessions,
             states: batch_states,
             cache: self.cache.stats(),
+            table: self.table.entries(),
+            extras: self.extras.lock().unwrap().clone(),
         })
     }
 
@@ -839,6 +856,8 @@ impl TuningService {
             sessions: self.history.lock().unwrap().clone(),
             states,
             cache: self.cache.stats(),
+            table: self.table.entries(),
+            extras: self.extras.lock().unwrap().clone(),
         }
     }
 
@@ -852,6 +871,8 @@ impl TuningService {
             sessions,
             states,
             cache: self.cache.stats(),
+            table: self.table.entries(),
+            extras: self.extras.lock().unwrap().clone(),
         }
     }
 
@@ -883,6 +904,11 @@ impl TuningService {
             .lock()
             .unwrap()
             .extend(report.sessions.iter().cloned());
+        self.table.load(&report.table);
+        self.extras
+            .lock()
+            .unwrap()
+            .extend(report.extras.iter().cloned());
     }
 
     /// Refuse new sessions from now on (in-flight ones finish). Used by
@@ -967,6 +993,33 @@ impl TuningService {
                         cached: false,
                     },
                     Err(e) => Response::Error(format!("{e:#}")),
+                }
+            }
+            // A table lookup is a read — still answered while draining, so
+            // clients racing a shutdown keep their bypass hits.
+            Request::Lookup { key } => match self.table.lookup(&key) {
+                TableHit::Exact(cell) => Response::Cell {
+                    entry: Some(TableEntry { key, cell }),
+                    exact: true,
+                },
+                TableHit::Near(near_key, cell) => Response::Cell {
+                    entry: Some(TableEntry { key: near_key, cell }),
+                    exact: false,
+                },
+                TableHit::Miss => Response::Cell {
+                    entry: None,
+                    exact: false,
+                },
+            },
+            Request::Promote { entry } => {
+                if self.is_draining() {
+                    // A promote mutates state the drain is about to
+                    // snapshot; refuse it like any other write.
+                    return Response::Draining;
+                }
+                match self.table.promote(entry) {
+                    Ok(weight) => Response::Promoted { weight },
+                    Err(e) => Response::Error(format!("{e}")),
                 }
             }
             Request::Retune { budget, force } => {
@@ -1186,6 +1239,7 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
         best_point: best_point.clone(),
         best_cost,
         opt_state,
+        extra: Vec::new(),
     });
     SessionOutcome {
         report: SessionReport {
@@ -1201,6 +1255,7 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
             best_cost,
             wall_secs: t0.elapsed().as_secs_f64(),
             warm_started,
+            extra: Vec::new(),
         },
         state,
     }

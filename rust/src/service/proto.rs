@@ -36,6 +36,7 @@
 
 use super::registry::{kv_get, kv_num, kv_opt, split_kv};
 use super::{OptimizerSpec, ServiceReport, SessionReport, SessionSpec, WorkloadSpec};
+use crate::adaptive::table::{ContextKey, TableEntry};
 use crate::error::PatsmaError;
 use std::io::{Read, Write};
 
@@ -70,6 +71,20 @@ pub enum Request {
         /// Re-tune everything, drifted or not.
         force: bool,
     },
+    /// Look up the tuned table for an execution context: exact cell,
+    /// neighbouring size-bucket cell, or miss
+    /// ([`crate::adaptive::TunedTable`]).
+    Lookup {
+        /// The execution context to resolve.
+        key: ContextKey,
+    },
+    /// Merge a converged cell into the daemon's tuned table so other
+    /// processes revisiting the context skip tuning (higher confidence
+    /// wins — [`crate::adaptive::TunedTable::promote`]).
+    Promote {
+        /// The cell to merge.
+        entry: TableEntry,
+    },
     /// Begin a graceful drain (in-flight sessions finish, then exit).
     Shutdown,
 }
@@ -102,10 +117,34 @@ pub enum Response {
         /// Ids left untouched (environment unchanged).
         fresh: Vec<String>,
     },
+    /// Answer to [`Request::Lookup`].
+    Cell {
+        /// The resolved cell (keyed — for a near hit the key is the
+        /// neighbouring bucket it was found under); `None` on a miss.
+        entry: Option<TableEntry>,
+        /// True when the cell answers for the exact context (not a
+        /// neighbouring size bucket).
+        exact: bool,
+    },
+    /// Answer to [`Request::Promote`]: the confidence weight of the cell
+    /// now stored for the context.
+    Promoted {
+        /// Stored weight (the incoming cell's if it won, the incumbent's
+        /// otherwise).
+        weight: u32,
+    },
     /// The service is draining; no new sessions are accepted.
     Draining,
     /// The request failed; human-readable reason.
     Error(String),
+}
+
+/// Render `key=value` pairs as a record body.
+fn kv_join(kv: &[(String, String)]) -> String {
+    kv.iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(" ")
 }
 
 /// Join ids with commas; empty lists become the `-` sentinel so the value
@@ -151,6 +190,8 @@ impl Request {
             Request::Retune { budget, force } => {
                 format!("retune budget={budget} force={}", u8::from(*force))
             }
+            Request::Lookup { key } => format!("lookup {}", kv_join(&key.to_kv())),
+            Request::Promote { entry } => format!("promote {}", kv_join(&entry.to_kv())),
             Request::Shutdown => "shutdown".to_string(),
         }
     }
@@ -201,6 +242,14 @@ impl Request {
                     .map_err(|e| PatsmaError::Protocol(format!("retune: {e}")))?,
                 force: bool_flag(&pairs, "force"),
             }),
+            "lookup" => Ok(Request::Lookup {
+                key: ContextKey::from_kv(&pairs)
+                    .map_err(|e| PatsmaError::Protocol(format!("lookup: {e}")))?,
+            }),
+            "promote" => Ok(Request::Promote {
+                entry: TableEntry::from_kv(&pairs)
+                    .map_err(|e| PatsmaError::Protocol(format!("promote: {e}")))?,
+            }),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(PatsmaError::Protocol(format!(
                 "unknown request verb {other:?}"
@@ -236,6 +285,16 @@ impl Response {
                 join_ids(drifted),
                 join_ids(fresh)
             ),
+            Response::Cell { entry: None, .. } => "cell hit=0".to_string(),
+            Response::Cell {
+                entry: Some(entry),
+                exact,
+            } => format!(
+                "cell hit=1 exact={} {}",
+                u8::from(*exact),
+                kv_join(&entry.to_kv())
+            ),
+            Response::Promoted { weight } => format!("promoted weight={weight}"),
             Response::Draining => "draining".to_string(),
             Response::Error(reason) => format!("error {reason}"),
         }
@@ -268,11 +327,21 @@ impl Response {
                     .map_err(|e| PatsmaError::Protocol(format!("pong: {e}")))?,
                 draining: bool_flag(&pairs, "draining"),
             }),
-            "session" => Ok(Response::Session {
-                report: SessionReport::from_kv(&pairs)
-                    .map_err(|e| PatsmaError::Protocol(format!("session: {e}")))?,
-                cached: bool_flag(&pairs, "cached"),
-            }),
+            "session" => {
+                // `cached` belongs to the response envelope, not the
+                // report — keep it out of the report's forward-compat
+                // extra keys.
+                let body: Vec<(String, String)> = pairs
+                    .iter()
+                    .filter(|(k, _)| k != "cached")
+                    .cloned()
+                    .collect();
+                Ok(Response::Session {
+                    report: SessionReport::from_kv(&body)
+                        .map_err(|e| PatsmaError::Protocol(format!("session: {e}")))?,
+                    cached: bool_flag(&pairs, "cached"),
+                })
+            }
             "retuned" => Ok(Response::Retuned {
                 drifted: split_ids(
                     kv_get(&pairs, "drifted")
@@ -282,6 +351,25 @@ impl Response {
                     kv_get(&pairs, "fresh")
                         .map_err(|e| PatsmaError::Protocol(format!("retuned: {e}")))?,
                 ),
+            }),
+            "cell" => {
+                if !bool_flag(&pairs, "hit") {
+                    return Ok(Response::Cell {
+                        entry: None,
+                        exact: false,
+                    });
+                }
+                Ok(Response::Cell {
+                    entry: Some(
+                        TableEntry::from_kv(&pairs)
+                            .map_err(|e| PatsmaError::Protocol(format!("cell: {e}")))?,
+                    ),
+                    exact: bool_flag(&pairs, "exact"),
+                })
+            }
+            "promoted" => Ok(Response::Promoted {
+                weight: kv_num(&pairs, "weight")
+                    .map_err(|e| PatsmaError::Protocol(format!("promoted: {e}")))?,
             }),
             "draining" => Ok(Response::Draining),
             "error" => Ok(Response::Error(String::new())),
@@ -309,47 +397,135 @@ pub fn write_frame(w: &mut impl Write, record: &str) -> Result<(), PatsmaError> 
     w.flush().map_err(io_err)
 }
 
-/// Read one frame. `Ok(None)` means the peer closed the connection cleanly
-/// *before* a length prefix started — mid-frame EOF is an error.
+/// Incremental frame reader: buffers a partially-received length prefix
+/// and payload **across** reads, so a frame that arrives in dribs — a
+/// slow writer against a socket with a read timeout — is *resumed*, not
+/// dropped. (ISSUE 9 regression: [`read_frame`] used to treat
+/// `WouldBlock`/`TimedOut` as fatal, so a daemon client writing slower
+/// than the per-connection 50 ms read timeout lost its request
+/// mid-frame.)
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    /// The 4-byte big-endian length prefix, as far as received.
+    prefix: [u8; 4],
+    /// Prefix bytes received so far.
+    got: usize,
+    /// Payload buffer, allocated once the prefix validates.
+    payload: Option<Vec<u8>>,
+    /// Payload bytes received so far.
+    filled: usize,
+}
+
+/// One pump of a [`FrameReader`].
+#[derive(Debug)]
+pub enum FrameStep {
+    /// A complete frame payload.
+    Frame(String),
+    /// The stream signalled `WouldBlock`/`TimedOut`; partial state is
+    /// retained — call [`FrameReader::step`] again to resume.
+    Pending,
+    /// Clean EOF at a frame boundary (mid-frame EOF is an error).
+    Closed,
+}
+
+impl FrameReader {
+    /// A reader at a frame boundary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True while a frame is partially received — EOF here is a protocol
+    /// error, and the daemon's mid-frame patience clock runs only in this
+    /// state.
+    pub fn mid_frame(&self) -> bool {
+        self.got > 0 || self.payload.is_some()
+    }
+
+    /// Bytes consumed toward the current frame (stall detection: a
+    /// [`FrameStep::Pending`] with unchanged progress is a stall tick).
+    pub fn progress(&self) -> usize {
+        self.got + self.filled
+    }
+
+    /// Read until a frame completes, the stream closes, or it signals
+    /// `WouldBlock`/`TimedOut` ([`FrameStep::Pending`] — resumable).
+    pub fn step(&mut self, r: &mut impl Read) -> Result<FrameStep, PatsmaError> {
+        use std::io::ErrorKind;
+        loop {
+            if self.payload.is_none() {
+                if self.got < self.prefix.len() {
+                    match r.read(&mut self.prefix[self.got..]) {
+                        Ok(0) if self.got == 0 => return Ok(FrameStep::Closed),
+                        Ok(0) => {
+                            return Err(PatsmaError::Protocol(
+                                "connection closed mid-frame (in length prefix)".into(),
+                            ))
+                        }
+                        Ok(n) => {
+                            self.got += n;
+                            continue;
+                        }
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                            return Ok(FrameStep::Pending)
+                        }
+                        Err(e) => {
+                            return Err(PatsmaError::Protocol(format!("reading frame: {e}")))
+                        }
+                    }
+                }
+                let len = u32::from_be_bytes(self.prefix) as usize;
+                if len > MAX_FRAME {
+                    return Err(PatsmaError::Protocol(format!(
+                        "frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"
+                    )));
+                }
+                self.payload = Some(vec![0u8; len]);
+                self.filled = 0;
+            }
+            let buf = self.payload.as_mut().expect("payload allocated");
+            if self.filled < buf.len() {
+                match r.read(&mut buf[self.filled..]) {
+                    Ok(0) => {
+                        return Err(PatsmaError::Protocol(
+                            "connection closed mid-frame (in payload)".into(),
+                        ))
+                    }
+                    Ok(n) => {
+                        self.filled += n;
+                        continue;
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                        return Ok(FrameStep::Pending)
+                    }
+                    Err(e) => return Err(PatsmaError::Protocol(format!("reading frame: {e}"))),
+                }
+            }
+            let payload = self.payload.take().expect("payload complete");
+            self.got = 0;
+            self.filled = 0;
+            return String::from_utf8(payload)
+                .map(FrameStep::Frame)
+                .map_err(|_| PatsmaError::Protocol("frame payload is not UTF-8".into()));
+        }
+    }
+}
+
+/// Read one frame, resuming across `WouldBlock`/`TimedOut` until it
+/// completes (a slow writer is not an error). `Ok(None)` means the peer
+/// closed the connection cleanly *before* a length prefix started —
+/// mid-frame EOF is an error. Callers that need to bound how long they
+/// wait mid-frame (the daemon) drive a [`FrameReader`] directly.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<String>, PatsmaError> {
-    let mut len_buf = [0u8; 4];
-    let mut filled = 0;
-    while filled < len_buf.len() {
-        match r.read(&mut len_buf[filled..]) {
-            Ok(0) if filled == 0 => return Ok(None),
-            Ok(0) => {
-                return Err(PatsmaError::Protocol(
-                    "connection closed mid-frame (in length prefix)".into(),
-                ))
-            }
-            Ok(n) => filled += n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(PatsmaError::Protocol(format!("reading frame: {e}"))),
+    let mut reader = FrameReader::new();
+    loop {
+        match reader.step(r)? {
+            FrameStep::Frame(record) => return Ok(Some(record)),
+            FrameStep::Closed => return Ok(None),
+            FrameStep::Pending => continue,
         }
     }
-    let len = u32::from_be_bytes(len_buf) as usize;
-    if len > MAX_FRAME {
-        return Err(PatsmaError::Protocol(format!(
-            "frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"
-        )));
-    }
-    let mut payload = vec![0u8; len];
-    let mut filled = 0;
-    while filled < len {
-        match r.read(&mut payload[filled..]) {
-            Ok(0) => {
-                return Err(PatsmaError::Protocol(
-                    "connection closed mid-frame (in payload)".into(),
-                ))
-            }
-            Ok(n) => filled += n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(PatsmaError::Protocol(format!("reading frame: {e}"))),
-        }
-    }
-    String::from_utf8(payload)
-        .map(Some)
-        .map_err(|_| PatsmaError::Protocol("frame payload is not UTF-8".into()))
 }
 
 #[cfg(test)]
@@ -371,6 +547,28 @@ mod tests {
             best_cost: 1.0104,
             wall_secs: 0.002,
             warm_started: false,
+            extra: Vec::new(),
+        }
+    }
+
+    fn sample_key() -> ContextKey {
+        ContextKey {
+            workload: 0xFEED_BEEF,
+            bucket: 20,
+            threads: 8,
+            env: 0xD00D,
+        }
+    }
+
+    fn sample_entry() -> TableEntry {
+        TableEntry {
+            key: sample_key(),
+            cell: crate::adaptive::table::TunedCell {
+                point: vec![48.0, 0.25],
+                cost: 0.001953125,
+                weight: 5,
+                label: Some("dynamic,chunk=48".into()),
+            },
         }
     }
 
@@ -392,6 +590,10 @@ mod tests {
             Request::Retune {
                 budget: 50,
                 force: true,
+            },
+            Request::Lookup { key: sample_key() },
+            Request::Promote {
+                entry: sample_entry(),
             },
             Request::Shutdown,
         ];
@@ -425,11 +627,22 @@ mod tests {
                     evictions: 0,
                     cap: 65_536,
                 },
+                table: vec![sample_entry()],
+                extras: Vec::new(),
             }),
             Response::Retuned {
                 drifted: vec!["a".into(), "b".into()],
                 fresh: Vec::new(),
             },
+            Response::Cell {
+                entry: None,
+                exact: false,
+            },
+            Response::Cell {
+                entry: Some(sample_entry()),
+                exact: true,
+            },
+            Response::Promoted { weight: 5 },
             Response::Draining,
             Response::Error("workload nope is not registered".into()),
         ];
@@ -552,6 +765,83 @@ mod tests {
                 "{payload:?} gave {err}"
             );
         }
+    }
+
+    /// A reader that yields one byte at a time, interleaving a
+    /// `WouldBlock` before every byte — the shape of a slow writer seen
+    /// through a socket with a read timeout.
+    struct Stutter<'a> {
+        data: &'a [u8],
+        pos: usize,
+        ready: bool,
+        blocks: u32,
+    }
+
+    impl Read for Stutter<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            if !self.ready {
+                self.ready = true;
+                self.blocks += 1;
+                let kind = if self.blocks % 2 == 0 {
+                    std::io::ErrorKind::TimedOut
+                } else {
+                    std::io::ErrorKind::WouldBlock
+                };
+                return Err(std::io::Error::from(kind));
+            }
+            self.ready = false;
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    /// ISSUE 9 regression: a frame written slower than the read timeout
+    /// must be resumed across `WouldBlock`/`TimedOut`, not dropped
+    /// mid-frame as a protocol error.
+    #[test]
+    fn slow_writers_are_resumed_across_read_timeouts() {
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, "retune budget=50 force=0").unwrap();
+        write_frame(&mut bytes, "shutdown").unwrap();
+        let mut slow = Stutter {
+            data: &bytes,
+            pos: 0,
+            ready: false,
+            blocks: 0,
+        };
+        assert_eq!(
+            read_frame(&mut slow).unwrap().as_deref(),
+            Some("retune budget=50 force=0")
+        );
+        assert_eq!(read_frame(&mut slow).unwrap().as_deref(), Some("shutdown"));
+        assert_eq!(read_frame(&mut slow).unwrap(), None, "clean EOF");
+        assert!(slow.blocks > 8, "the stutter must actually have stuttered");
+
+        // The incremental reader reports mid-frame state for the daemon's
+        // patience clock: pending inside a frame, boundary after it.
+        let mut slow = Stutter {
+            data: &bytes,
+            pos: 0,
+            ready: false,
+            blocks: 0,
+        };
+        let mut reader = FrameReader::new();
+        let mut frames = 0;
+        loop {
+            match reader.step(&mut slow).unwrap() {
+                FrameStep::Frame(_) => {
+                    frames += 1;
+                    assert!(!reader.mid_frame(), "frame boundary after completion");
+                }
+                FrameStep::Pending => {}
+                FrameStep::Closed => break,
+            }
+        }
+        assert_eq!(frames, 2);
     }
 
     #[test]

@@ -25,8 +25,15 @@
 //! a registry file and in a socket frame.
 //!
 //! Compatibility rules:
-//! * **unknown keys are ignored** on load — newer writers can add fields
-//!   without breaking older readers (pinned by tests);
+//! * **unknown keys are preserved** on load — newer writers can add
+//!   fields without breaking older readers, and a load → snapshot
+//!   roundtrip through an older build keeps them (`extra` on
+//!   [`SessionReport`]/[`SessionState`]; pinned by tests). Unknown
+//!   *record types* whose body parses as `key=value` are carried
+//!   verbatim in [`ServiceReport::extras`]. The one exception is the
+//!   `cache` record: its counters are a live snapshot the service
+//!   rewrites wholesale, so stale unknown cache keys are dropped rather
+//!   than resurrected;
 //! * **v1 files still load** (the positional format of the first release),
 //!   and v2 files written before the cache grew `evictions`/`cap` load
 //!   with those counters zeroed;
@@ -39,6 +46,7 @@
 
 use super::cache::CacheStats;
 use super::state::SessionState;
+use crate::adaptive::table::TableEntry;
 use crate::error::PatsmaError;
 use std::path::Path;
 
@@ -81,6 +89,10 @@ pub struct SessionReport {
     pub wall_secs: f64,
     /// Whether the session was seeded from persisted state.
     pub warm_started: bool,
+    /// Keys this build does not understand, preserved verbatim so a load →
+    /// snapshot roundtrip through an older binary does not destroy fields a
+    /// newer writer added (module compatibility rules).
+    pub extra: Vec<(String, String)>,
 }
 
 impl SessionReport {
@@ -107,11 +119,18 @@ impl SessionReport {
         if let Some(label) = &self.best_label {
             kv.push(("label".to_string(), label.clone()));
         }
+        kv.extend(self.extra.iter().cloned());
         kv
     }
 
-    /// Parse from v2 `key=value` pairs (unknown keys ignored, `warm` and
-    /// `label` optional — see module compatibility rules).
+    /// Keys `to_kv`/`from_kv` understand; anything else lands in `extra`.
+    const KNOWN_KEYS: [&'static str; 12] = [
+        "id", "workload", "optimizer", "evals", "iters", "hits", "misses", "best", "label",
+        "cost", "wall", "warm",
+    ];
+
+    /// Parse from v2 `key=value` pairs (unknown keys preserved in `extra`,
+    /// `warm` and `label` optional — see module compatibility rules).
     pub fn from_kv(pairs: &[(String, String)]) -> Result<Self, PatsmaError> {
         Ok(SessionReport {
             id: kv_get(pairs, "id")?.to_string(),
@@ -126,6 +145,11 @@ impl SessionReport {
             best_cost: kv_num(pairs, "cost")?,
             wall_secs: kv_num(pairs, "wall")?,
             warm_started: kv_opt(pairs, "warm") == Some("1"),
+            extra: pairs
+                .iter()
+                .filter(|(k, _)| !Self::KNOWN_KEYS.contains(&k.as_str()))
+                .cloned()
+                .collect(),
         })
     }
 }
@@ -140,6 +164,13 @@ pub struct ServiceReport {
     pub states: Vec<SessionState>,
     /// Cache counters at the end of the batch.
     pub cache: CacheStats,
+    /// Converged tuned-table cells (`table` records) keyed by execution
+    /// context — what exact-revisit bypass and warm restarts load from.
+    pub table: Vec<TableEntry>,
+    /// Record lines of types this build does not recognise but whose bodies
+    /// parse as `key=value`; written back verbatim so a newer writer's
+    /// records survive a snapshot by this build.
+    pub extras: Vec<String>,
 }
 
 fn fmt_point(point: &[f64]) -> String {
@@ -248,6 +279,14 @@ impl ServiceReport {
                 .join(" ");
             out.push_str(&format!("state {body}\n"));
         }
+        for entry in &self.table {
+            out.push_str(&entry.to_record());
+            out.push('\n');
+        }
+        for line in &self.extras {
+            out.push_str(line);
+            out.push('\n');
+        }
         out
     }
 
@@ -289,6 +328,8 @@ impl ServiceReport {
         };
         let mut sessions = Vec::new();
         let mut states = Vec::new();
+        let mut table = Vec::new();
+        let mut extras = Vec::new();
         let mut skipped = Vec::new();
         for (lineno, line) in lines.enumerate() {
             let line = line.trim();
@@ -298,7 +339,14 @@ impl ServiceReport {
             let parsed = if version == 1 {
                 parse_v1_record(line, &mut cache, &mut sessions)
             } else {
-                parse_v2_record(line, &mut cache, &mut sessions, &mut states)
+                parse_v2_record(
+                    line,
+                    &mut cache,
+                    &mut sessions,
+                    &mut states,
+                    &mut table,
+                    &mut extras,
+                )
             };
             if let Err(e) = parsed {
                 if lenient {
@@ -313,6 +361,8 @@ impl ServiceReport {
                 sessions,
                 states,
                 cache,
+                table,
+                extras,
             },
             skipped,
         ))
@@ -394,6 +444,8 @@ fn parse_v2_record(
     cache: &mut CacheStats,
     sessions: &mut Vec<SessionReport>,
     states: &mut Vec<SessionState>,
+    table: &mut Vec<TableEntry>,
+    extras: &mut Vec<String>,
 ) -> Result<(), PatsmaError> {
     let tokens: Vec<&str> = line.split_whitespace().collect();
     let pairs = split_kv(&tokens[1..])?;
@@ -418,11 +470,13 @@ fn parse_v2_record(
                 .collect();
             states.push(SessionState::from_kv(&borrowed)?);
         }
-        other => {
-            return Err(PatsmaError::registry(format!(
-                "unrecognised record {other:?}"
-            )))
+        "table" => {
+            table.push(TableEntry::from_kv(&pairs)?);
         }
+        // A record type from a newer writer. The body already parsed as
+        // key=value above (binary junk still errors), so carry the line
+        // verbatim: it survives this build's next snapshot.
+        _ => extras.push(line.to_string()),
     }
     Ok(())
 }
@@ -467,6 +521,7 @@ fn parse_v1_record(
                 best_cost: float(f[9], "best cost")?,
                 wall_secs: float(f[10], "wall seconds")?,
                 warm_started: false,
+                extra: Vec::new(),
             });
         }
         _ => return Err(PatsmaError::registry(format!("unrecognised record {line:?}"))),
@@ -477,6 +532,7 @@ fn parse_v1_record(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adaptive::table::{ContextKey, TunedCell};
     use crate::optimizer::OptimizerState;
     use crate::service::state::EnvFingerprint;
 
@@ -500,6 +556,7 @@ mod tests {
                 temperatures: Some((0.125, 1.75)),
                 points: vec![vec![-0.28], vec![0.5]],
             },
+            extra: Vec::new(),
         }
     }
 
@@ -519,6 +576,7 @@ mod tests {
                     best_cost: 1.0104,
                     wall_secs: 0.002,
                     warm_started: false,
+                    extra: Vec::new(),
                 },
                 SessionReport {
                     id: "s1".into(),
@@ -533,6 +591,7 @@ mod tests {
                     best_cost: 2.1,
                     wall_secs: 0.001,
                     warm_started: true,
+                    extra: Vec::new(),
                 },
             ],
             states: vec![sample_state("s0")],
@@ -543,6 +602,21 @@ mod tests {
                 evictions: 4,
                 cap: 65_536,
             },
+            table: vec![TableEntry {
+                key: ContextKey {
+                    workload: 0xBEEF,
+                    bucket: 20,
+                    threads: 8,
+                    env: 0xD00D,
+                },
+                cell: TunedCell {
+                    point: vec![48.0, 0.25],
+                    cost: 0.001_953_125,
+                    weight: 5,
+                    label: Some("dynamic,chunk=48".into()),
+                },
+            }],
+            extras: Vec::new(),
         }
     }
 
@@ -564,8 +638,9 @@ mod tests {
     }
 
     #[test]
-    fn unknown_keys_are_ignored_forward_compat() {
-        // A future writer adds fields; this reader must not choke on them.
+    fn unknown_keys_are_preserved_forward_compat() {
+        // A future writer adds fields; this reader must not choke on them,
+        // and must not destroy them when it snapshots the registry back out.
         let mut text = String::from(
             "# patsma-service-registry v2\n\
              cache hits=1 misses=2 entries=2 compression=zstd\n",
@@ -577,9 +652,44 @@ mod tests {
         let r = ServiceReport::from_text(&text).unwrap();
         assert_eq!(r.sessions.len(), 1);
         assert_eq!(r.sessions[0].id, "s9");
+        assert_eq!(
+            r.sessions[0].extra,
+            vec![
+                ("gpu_time".to_string(), "0.3".to_string()),
+                ("battery".to_string(), "full".to_string()),
+            ]
+        );
         assert_eq!(r.cache.misses, 2);
         // A pre-LRU cache record: evictions/cap default to zero.
         assert_eq!((r.cache.evictions, r.cache.cap), (0, 0));
+    }
+
+    #[test]
+    fn load_snapshot_roundtrip_preserves_foreign_records_and_keys() {
+        // The satellite regression: a lenient load used to drop everything
+        // it did not understand, so the first snapshot by an older build
+        // silently destroyed a newer writer's records. Both unknown keys in
+        // known records and whole unknown record types must survive a
+        // load → to_text → load cycle.
+        let text = "# patsma-service-registry v2\n\
+                    cache hits=0 misses=1 entries=1 evictions=0 cap=16\n\
+                    session id=s0 workload=w optimizer=csa evals=2 iters=2 hits=0 misses=2 \
+                    best=7 cost=0.5 wall=0.01 warm=0 gpu_time=0.3\n\
+                    table workload=7 bucket=12 threads=4 env=9 point=32 cost=0.25 weight=3\n\
+                    telemetry format=v3 samples=128\n";
+        let first = ServiceReport::from_text(text).unwrap();
+        assert_eq!(first.table.len(), 1);
+        assert_eq!(first.table[0].cell.point, vec![32.0]);
+        assert_eq!(
+            first.extras,
+            vec!["telemetry format=v3 samples=128".to_string()]
+        );
+        let rewritten = first.to_text();
+        assert!(rewritten.contains("gpu_time=0.3"), "{rewritten}");
+        assert!(rewritten.contains("telemetry format=v3 samples=128"), "{rewritten}");
+        assert!(rewritten.contains("table "), "{rewritten}");
+        let second = ServiceReport::from_text(&rewritten).unwrap();
+        assert_eq!(second, first);
     }
 
     #[test]

@@ -169,6 +169,7 @@ mod tests {
                 best_cost: 0.5,
                 wall_secs: 0.001,
                 warm_started: false,
+                extra: Vec::new(),
             },
             state: None,
             fingerprint,
@@ -238,6 +239,7 @@ mod tests {
                 temperatures: None,
                 points: vec![vec![0.1]],
             },
+            extra: Vec::new(),
         });
         map.insert(entry("c", 3, true));
         map.insert(with_state);

@@ -88,6 +88,10 @@ pub struct SessionState {
     pub best_cost: f64,
     /// The optimizer's internal-domain snapshot.
     pub opt_state: OptimizerState,
+    /// Keys this build does not understand, preserved verbatim so a load →
+    /// snapshot roundtrip through an older binary keeps a newer writer's
+    /// fields (registry compatibility rules).
+    pub extra: Vec<(String, String)>,
 }
 
 /// Join floats with `sep`; empty slices become the `-` sentinel so every
@@ -159,11 +163,33 @@ impl SessionState {
             kv.push(("tgen".to_string(), format!("{t_gen}")));
             kv.push(("tac".to_string(), format!("{t_ac}")));
         }
+        kv.extend(self.extra.iter().cloned());
         kv
     }
 
-    /// Parse from `key=value` pairs. Unknown keys are ignored (forward
-    /// compatibility); missing required keys are a typed
+    /// Keys `to_kv`/`from_kv` understand; anything else lands in `extra`.
+    const KNOWN_KEYS: [&'static str; 17] = [
+        "id",
+        "workload",
+        "fingerprint",
+        "env",
+        "optimizer",
+        "impl",
+        "num_opt",
+        "max_iter",
+        "seed",
+        "ignore",
+        "best",
+        "best_cost",
+        "sbest",
+        "sbest_cost",
+        "points",
+        "tgen",
+        "tac",
+    ];
+
+    /// Parse from `key=value` pairs. Unknown keys are preserved in `extra`
+    /// (forward compatibility); missing required keys are a typed
     /// [`PatsmaError::Registry`].
     pub fn from_kv(pairs: &[(&str, &str)]) -> Result<SessionState, PatsmaError> {
         let get = |key: &str| -> Result<&str, PatsmaError> {
@@ -223,6 +249,11 @@ impl SessionState {
                 temperatures,
                 points,
             },
+            extra: pairs
+                .iter()
+                .filter(|(k, _)| !Self::KNOWN_KEYS.contains(k))
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
         })
     }
 }
@@ -251,6 +282,7 @@ mod tests {
                 temperatures: Some((0.125, 1.75)),
                 points: vec![vec![-0.28], vec![0.5], vec![-0.9], vec![0.1]],
             },
+            extra: Vec::new(),
         }
     }
 
@@ -276,13 +308,25 @@ mod tests {
     }
 
     #[test]
-    fn unknown_keys_are_ignored() {
+    fn unknown_keys_are_preserved() {
         let kv = sample_state().to_kv();
         let mut borrowed: Vec<(&str, &str)> =
             kv.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
         borrowed.push(("from_the_future", "whatever"));
         let parsed = SessionState::from_kv(&borrowed).unwrap();
-        assert_eq!(parsed, sample_state());
+        assert_eq!(
+            parsed.extra,
+            vec![("from_the_future".to_string(), "whatever".to_string())]
+        );
+        // The preserved key is written back out, so a snapshot by this
+        // build keeps what a newer writer recorded.
+        assert!(parsed
+            .to_kv()
+            .iter()
+            .any(|(k, v)| k == "from_the_future" && v == "whatever"));
+        let mut expected = sample_state();
+        expected.extra = parsed.extra.clone();
+        assert_eq!(parsed, expected);
     }
 
     #[test]

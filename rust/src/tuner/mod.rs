@@ -527,6 +527,29 @@ impl Autotuning {
         self.phase == Phase::Finished
     }
 
+    /// Enter the bypass state immediately at a known-good solution
+    /// (internal `[-1, 1]^d` domain) **without consuming any optimizer
+    /// evaluations** — the tuned-table exact-hit path
+    /// ([`crate::adaptive::TunedTable`]): `run*` calls hand the pinned
+    /// point to the application from the first iteration and
+    /// [`evaluations`](Self::evaluations) stays 0. A later
+    /// [`reset`](Self::reset) or re-tune leaves the pin as usual.
+    pub fn pin(&mut self, internal: Vec<f64>) {
+        assert_eq!(
+            internal.len(),
+            self.dimension(),
+            "pinned point/dimension mismatch"
+        );
+        assert!(
+            internal.iter().all(|v| v.is_finite()),
+            "pinned point must be finite"
+        );
+        self.final_internal = internal;
+        self.phase = Phase::Finished;
+        self.candidate = None;
+        self.timer = None;
+    }
+
     /// Problem dimensionality.
     pub fn dimension(&self) -> usize {
         self.opt.dimension()

@@ -105,6 +105,16 @@ pub trait Workload {
     /// conditions (grids re-initialised, iteration counters zeroed).
     fn reset_state(&mut self);
 
+    /// Problem-size hint for contextual tuned-table keys
+    /// ([`crate::adaptive::ContextKey`] buckets it on a pow2 lattice).
+    /// `0` means "no size identity" — all sizes share one bucket, which is
+    /// safe (just coarse) for workloads that never change size. Workloads
+    /// constructed at a [`SizeProfile`] override it with their element
+    /// count.
+    fn size_hint(&self) -> u64 {
+        0
+    }
+
     /// The typed search space of [`run_point`](Self::run_point) candidates:
     /// one [`Dim::Int`] per parameter, derived from
     /// [`bounds`](Self::bounds). Workloads with richer domains (powers of

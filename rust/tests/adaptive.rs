@@ -9,8 +9,11 @@
 //!    **strictly fewer** evaluations than a cold restart, via the
 //!    snapshot/warm-start path.
 
-use patsma::adaptive::{DriftConfig, TunedRegion, TunedRegionConfig};
+use patsma::adaptive::{
+    ContextKey, DriftConfig, SharedTunedTable, TableSeed, TunedRegion, TunedRegionConfig,
+};
 use patsma::sched::ThreadPool;
+use patsma::service::EnvFingerprint;
 use patsma::tuner::Autotuning;
 use patsma::workloads::rb_gauss_seidel::RbGaussSeidel;
 use patsma::workloads::synthetic::chunk_cost_model;
@@ -204,6 +207,139 @@ fn auto_chunked_exec_runs_real_loops_to_convergence() {
     }
     assert!(chunker.is_converged(), "2×5 budget spent within 30 loops");
     assert!((1..=256).contains(&chunker.point()[0]));
+}
+
+#[test]
+fn exact_context_revisit_bypasses_with_zero_evaluations() {
+    // ISSUE 9 headline: a brand-new region for an already-converged
+    // execution context pins the remembered cell and never tunes.
+    let table = SharedTunedTable::new();
+    let env = EnvFingerprint::with_threads(4);
+    let key = ContextKey::new(0xC0DE, 1 << 20, 4, &env);
+    let landscape = |c: f64| chunk_cost_model(c, 48.0);
+
+    let mut cold = TunedRegionConfig::new(1.0, 128.0)
+        .budget(4, 10)
+        .seed(7)
+        .table(table.clone(), key)
+        .build::<i32>();
+    assert_eq!(cold.table_seed(), TableSeed::None, "empty table: cold start");
+    converge(&mut cold, landscape);
+    assert_eq!(cold.evaluations(), 40);
+    let tuned = cold.point()[0];
+
+    // Revisit under a *different* RNG seed: the table answers, not luck.
+    let mut revisit = TunedRegionConfig::new(1.0, 128.0)
+        .budget(4, 10)
+        .seed(99)
+        .table(table.clone(), key)
+        .build::<i32>();
+    assert_eq!(revisit.table_seed(), TableSeed::Exact);
+    assert!(revisit.is_converged(), "pinned region starts converged");
+    assert_eq!(revisit.generation_evaluations(), 0, "zero tuning iterations");
+    assert_eq!(revisit.point()[0], tuned, "the remembered point");
+    // Application iterations pass straight through at the pinned point.
+    for _ in 0..5 {
+        revisit.run_with_cost(|p| (landscape(p[0] as f64), ()));
+    }
+    assert_eq!(revisit.evaluations(), 0);
+    assert_eq!(revisit.iterations(), 5);
+}
+
+#[test]
+fn near_bucket_hit_warm_starts_cheaper_than_a_cold_tune() {
+    // ISSUE 9 headline: a neighbouring size bucket seeds a warm start at
+    // the reduced re-tune budget — strictly fewer evaluations than cold,
+    // and never worse than the seed cell on the same landscape.
+    let (num_opt, max_iter) = (4usize, 12usize);
+    let cold_evals = (num_opt * max_iter) as u64;
+    let table = SharedTunedTable::new();
+    let env = EnvFingerprint::with_threads(4);
+    let small = ContextKey::new(0xF00D, 1 << 19, 4, &env);
+    let big = small.with_bucket(small.bucket + 1);
+    let landscape = |c: f64| chunk_cost_model(c, 48.0);
+    let config = |key| {
+        TunedRegionConfig::new(1.0, 128.0)
+            .budget(num_opt, max_iter)
+            .seed(7)
+            .retune_budget_pct(50)
+            .table(table.clone(), key)
+    };
+
+    let mut cold = config(small).build::<i32>();
+    converge(&mut cold, landscape);
+    assert_eq!(cold.evaluations(), cold_evals);
+
+    // The problem doubles: same context except the size bucket.
+    let mut warm = config(big).build::<i32>();
+    assert_eq!(warm.table_seed(), TableSeed::Near);
+    assert!(!warm.is_converged(), "a near hit still tunes");
+    converge(&mut warm, landscape);
+    assert!(
+        warm.generation_evaluations() < cold_evals,
+        "warm used {} evaluations, cold uses {cold_evals}",
+        warm.generation_evaluations()
+    );
+    assert_eq!(warm.generation_evaluations(), cold_evals / 2);
+    // The warm start re-measures the seed cell first, so on the same
+    // landscape the warm result can never regress past the seed.
+    let warm_cost = landscape(warm.point()[0] as f64);
+    let seed_cost = landscape(cold.point()[0] as f64);
+    assert!(
+        warm_cost <= seed_cost + 1e-12,
+        "warm result {warm_cost} regressed past its seed cell's {seed_cost}"
+    );
+}
+
+#[test]
+fn table_authority_pins_a_high_confidence_cell_against_one_drift() {
+    // ISSUE 9 headline: one disagreeing convergence cannot drag a
+    // high-confidence cell off its optimum — the region itself follows
+    // the new landscape, the *table* moves only within its authority.
+    let table = SharedTunedTable::new();
+    let env = EnvFingerprint::with_threads(4);
+    let key = ContextKey::new(0xA117, 1 << 12, 4, &env);
+    let mut region = TunedRegionConfig::new(1.0, 128.0)
+        .budget(4, 10)
+        .seed(11)
+        .table(table.clone(), key)
+        .build::<i32>();
+    converge(&mut region, |c| chunk_cost_model(c, 48.0));
+    let (stored, stored_cost) = region.best().expect("converged generation has a best");
+    // Confirm the cell four more times: weight 5 — high confidence.
+    for round in 0..4 {
+        table.observe(key, &stored, stored_cost, None);
+        assert_eq!(table.get(&key).unwrap().weight, round + 2);
+    }
+
+    // The landscape shifts hard and the region re-converges on it; the
+    // new convergence flows back into the table through the authority.
+    region.retune();
+    converge(&mut region, |c| chunk_cost_model(c, 120.0));
+
+    // The weight-5 cell barely moved, whatever the new convergence was.
+    let cell = table.get(&key).expect("cell survives the drift");
+    let allowance = 0.25 / 5.0; // TableAuthority::default().allowance(5)
+    let allowed = allowance * stored[0].abs().max(1.0);
+    assert!(
+        (cell.point[0] - stored[0]).abs() <= allowed + 1e-9,
+        "cell moved {} > authority allowance {allowed}",
+        (cell.point[0] - stored[0]).abs()
+    );
+    assert_eq!(cell.weight, 4, "one disagreeing sample erodes one weight");
+
+    // And a single wildly poisoned sample cannot drag the cell to its
+    // point: at weight 4 the whole move caps at 1/16 of the scale.
+    let before = cell.point[0];
+    table.observe(key, &[1.0], 1e-6, None);
+    let poisoned = table.get(&key).expect("cell survives the poison");
+    let cap = (0.25 / 4.0) * before.abs().max(1.0);
+    assert!(
+        (poisoned.point[0] - before).abs() <= cap + 1e-9,
+        "poisoned sample moved the cell {} > cap {cap}",
+        (poisoned.point[0] - before).abs()
+    );
+    assert!(poisoned.point[0] > 40.0, "cell dragged toward the poison");
 }
 
 #[test]

@@ -46,6 +46,8 @@ fn tier1_suite_is_schema_stable_across_runs() {
     assert!(ids_a.contains(&"optimizer/csa-sphere"), "{ids_a:?}");
     assert!(ids_a.contains(&"service/synthetic-batch"), "{ids_a:?}");
     assert!(ids_a.contains(&"adaptive/region-drift-cycle"), "{ids_a:?}");
+    assert!(ids_a.contains(&"adaptive/context-revisit-cold"), "{ids_a:?}");
+    assert!(ids_a.contains(&"adaptive/context-revisit"), "{ids_a:?}");
     assert!(ids_a.contains(&"workload/rb-gauss-seidel"), "{ids_a:?}");
     assert!(ids_a.contains(&"workload/spmv"), "{ids_a:?}");
     assert!(ids_a.contains(&"sched/joint-vs-chunk-only"), "{ids_a:?}");

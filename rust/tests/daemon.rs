@@ -6,8 +6,12 @@
 //! answer), crash-tolerant registry seeding, and snapshot consistency
 //! while writers are active.
 
+use patsma::adaptive::{ContextKey, TableEntry, TunedCell};
 use patsma::error::PatsmaError;
-use patsma::service::{self, DaemonClient, DaemonConfig, ServiceReport, SessionSpec, TuningService};
+use patsma::service::{
+    self, DaemonClient, DaemonConfig, EnvFingerprint, Request, Response, ServiceReport,
+    SessionSpec, TuningService,
+};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier};
@@ -207,6 +211,126 @@ fn concurrent_writers_during_snapshots_keep_the_registry_parseable() {
     let snap = service.registry_snapshot();
     assert!(snap.sessions.len() <= 12, "3 ids per writer, deduped");
     assert!(!snap.sessions.is_empty());
+}
+
+#[test]
+fn a_slow_writer_is_resumed_across_read_timeouts() {
+    use std::io::{Read, Write};
+
+    let dir = scratch("slow");
+    let config = DaemonConfig::new(dir.join("d.sock"), dir.join("reg.txt"))
+        .with_snapshot_interval(Duration::from_secs(3600));
+    let handle = service::daemon::spawn(config).unwrap();
+
+    // Hand-rolled client: dribble a `ping` frame one byte at a time,
+    // pausing longer than the daemon's 50 ms read timeout between bytes.
+    // ISSUE 9 bugfix: the handler resumes the partial frame across the
+    // timeouts instead of dropping the request.
+    let mut raw = std::os::unix::net::UnixStream::connect(handle.socket()).unwrap();
+    let payload = Request::Ping.to_wire();
+    let mut frame = (payload.len() as u32).to_be_bytes().to_vec();
+    frame.extend_from_slice(payload.as_bytes());
+    for byte in frame {
+        raw.write_all(&[byte]).unwrap();
+        raw.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(70));
+    }
+    let mut len = [0u8; 4];
+    raw.read_exact(&mut len).unwrap();
+    let mut body = vec![0u8; u32::from_be_bytes(len) as usize];
+    raw.read_exact(&mut body).unwrap();
+    let answer = String::from_utf8(body).unwrap();
+    assert!(answer.starts_with("pong "), "expected a pong, got {answer:?}");
+
+    drop(raw);
+    handle.begin_drain();
+    handle.wait().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A confident two-dimensional tuned cell for the wire/persistence tests.
+fn sample_entry(key: ContextKey) -> TableEntry {
+    TableEntry {
+        key,
+        cell: TunedCell {
+            point: vec![48.0, 0.5],
+            cost: 0.125,
+            weight: 3,
+            label: Some("dynamic,chunk=48".into()),
+        },
+    }
+}
+
+#[test]
+fn tuned_table_survives_a_graceful_drain_and_restart() {
+    let dir = scratch("table");
+    let registry = dir.join("reg.txt");
+    let env = EnvFingerprint::with_threads(4);
+    let key = ContextKey::new(0xDAE0, 1 << 16, 4, &env);
+    let entry = sample_entry(key);
+
+    let config = DaemonConfig::new(dir.join("d.sock"), &registry)
+        .with_snapshot_interval(Duration::from_secs(3600));
+    let handle = service::daemon::spawn(config).unwrap();
+    let mut client = DaemonClient::connect(handle.socket()).unwrap();
+    assert!(client.lookup(key).unwrap().is_none(), "table starts empty");
+    assert_eq!(client.promote(entry.clone()).unwrap(), 3);
+    // A lower-confidence offer for the same context is not taken.
+    let mut weak = entry.clone();
+    weak.cell.weight = 1;
+    weak.cell.point = vec![9.0, 0.9];
+    assert_eq!(client.promote(weak).unwrap(), 3);
+    let (found, exact) = client.lookup(key).unwrap().expect("cell stored");
+    assert!(exact);
+    assert_eq!(found, entry);
+    // The neighbouring size bucket answers as a near hit, keyed by where
+    // the cell actually lives.
+    let (near, exact) = client
+        .lookup(key.with_bucket(key.bucket + 1))
+        .unwrap()
+        .expect("neighbouring bucket is warm-start material");
+    assert!(!exact, "bucket+1 must not be an exact hit");
+    assert_eq!(near.key, key);
+
+    client.shutdown().unwrap();
+    handle.wait().unwrap();
+    // The snapshot carries the cell as a registry-v2 `table` record.
+    let saved = ServiceReport::load(&registry).unwrap();
+    assert_eq!(saved.table, vec![entry.clone()]);
+
+    // A fresh daemon on the same registry answers the revisit from disk.
+    let config = DaemonConfig::new(dir.join("d2.sock"), &registry)
+        .with_snapshot_interval(Duration::from_secs(3600));
+    let restarted = service::daemon::spawn(config).unwrap();
+    let mut client = DaemonClient::connect(restarted.socket()).unwrap();
+    let (found, exact) = client.lookup(key).unwrap().expect("cell survived restart");
+    assert!(exact);
+    assert_eq!(found, entry);
+    client.shutdown().unwrap();
+    restarted.wait().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_draining_service_answers_lookups_but_refuses_promotes() {
+    // Lookup is a read — a draining runtime still shares what it knows;
+    // Promote mutates state that may already be snapshotting, so it gets
+    // the same clean refusal as a late tune.
+    let env = EnvFingerprint::with_threads(2);
+    let key = ContextKey::new(0x10CC, 4096, 2, &env);
+    let entry = sample_entry(key);
+    let service = TuningService::new(1);
+    assert!(matches!(
+        service.handle(Request::Promote { entry: entry.clone() }),
+        Response::Promoted { weight: 3 }
+    ));
+
+    service.begin_drain();
+    match service.handle(Request::Lookup { key }) {
+        Response::Cell { entry: Some(found), exact: true } => assert_eq!(found, entry),
+        other => panic!("draining lookup must still answer: {other:?}"),
+    }
+    assert!(matches!(service.handle(Request::Promote { entry }), Response::Draining));
 }
 
 #[test]

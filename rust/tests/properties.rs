@@ -13,13 +13,17 @@
 //!    `[-1, 1]^d` for random configs and adversarial costs;
 //! 5. determinism: same seed ⇒ same tuning trajectory.
 
-use patsma::adaptive::{DriftConfig, DriftMonitor};
+use patsma::adaptive::{
+    ContextKey, DriftConfig, DriftMonitor, SharedTunedTable, TableEntry, TableSeed, TableUpdate,
+    TunedCell, TunedRegionConfig, TunedTable,
+};
 use patsma::optimizer::{
     Csa, CsaConfig, NelderMead, NelderMeadConfig, NumericalOptimizer, ParticleSwarm, PsoConfig,
     RandomSearch, SaConfig, SimulatedAnnealing,
 };
 use patsma::rng::Xoshiro256pp;
 use patsma::sched::{Schedule, ThreadPool};
+use patsma::service::EnvFingerprint;
 use patsma::space::{Dim, SearchSpace, Value};
 use patsma::testkit::{forall, Draw};
 use patsma::tuner::Autotuning;
@@ -419,6 +423,194 @@ fn prop_single_exec_never_exceeds_app_iterations() {
             Ok(())
         },
     );
+}
+
+/// TunedTable invariant 1 (ISSUE 9): for any budget and landscape, a
+/// region revisiting an exactly-known context starts converged at the
+/// remembered point and spends **zero** tuning evaluations — the RNG seed
+/// of the revisit is irrelevant.
+#[test]
+fn prop_exact_revisit_costs_zero_evaluations() {
+    for sweep in [0x7AB1_0001u64, 0x7AB1_0002, 0x7AB1_0003] {
+        forall(
+            sweep,
+            15,
+            |r| {
+                (
+                    Draw::usize_in(r, 1, 4),           // num_opt
+                    Draw::usize_in(r, 2, 6),           // max_iter
+                    Draw::f64_in(r, 4.0, 120.0),       // landscape optimum
+                    r.next_u64(),                      // cold seed
+                    r.next_u64(),                      // revisit seed
+                    r.next_u64(),                      // workload identity
+                )
+            },
+            |&(num_opt, max_iter, best, cold_seed, revisit_seed, workload)| {
+                let table = SharedTunedTable::new();
+                let env = EnvFingerprint::with_threads(4);
+                let key = ContextKey::new(workload, 1 << 16, 4, &env);
+                let landscape = |c: f64| patsma::workloads::synthetic::chunk_cost_model(c, best);
+                let config = |seed| {
+                    TunedRegionConfig::new(1.0, 128.0)
+                        .budget(num_opt, max_iter)
+                        .seed(seed)
+                        .table(table.clone(), key)
+                };
+                let mut cold = config(cold_seed).build::<i32>();
+                let mut guard = 0;
+                while !cold.is_converged() {
+                    cold.run_with_cost(|p| (landscape(p[0] as f64), ()));
+                    guard += 1;
+                    if guard > 10_000 {
+                        return Err("cold tune never converged".into());
+                    }
+                }
+                let revisit = config(revisit_seed).build::<i32>();
+                if revisit.table_seed() != TableSeed::Exact {
+                    return Err(format!("expected Exact, got {:?}", revisit.table_seed()));
+                }
+                if !revisit.is_converged() {
+                    return Err("revisit did not start converged".into());
+                }
+                if revisit.generation_evaluations() != 0 {
+                    return Err(format!(
+                        "revisit spent {} evaluations",
+                        revisit.generation_evaluations()
+                    ));
+                }
+                if revisit.point()[0] != cold.point()[0] {
+                    return Err(format!(
+                        "revisit point {} != remembered {}",
+                        revisit.point()[0],
+                        cold.point()[0]
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// TunedTable invariant 2 (ISSUE 9): a single observation moves a cell of
+/// weight `w` by at most `max_move / w` of each coordinate's scale, erodes
+/// exactly one weight, and never deletes the cell — for any stored point,
+/// confidence and poison sample.
+#[test]
+fn prop_authority_bounds_any_single_observation() {
+    for sweep in [0xAAA7_0001u64, 0xAAA7_0002, 0xAAA7_0003] {
+        forall(
+            sweep,
+            40,
+            |r| {
+                let dim = Draw::usize_in(r, 1, 3);
+                let stored: Vec<f64> = (0..dim).map(|_| Draw::f64_in(r, 1.0, 100.0)).collect();
+                // Poison clearly disagrees on every coordinate (the ±0.5
+                // floor keeps it outside the 1e-9 agreement tolerance).
+                let poison: Vec<f64> = stored
+                    .iter()
+                    .map(|v| {
+                        let sign = if Draw::usize_in(r, 0, 1) == 0 { -1.0 } else { 1.0 };
+                        (v + sign * Draw::f64_in(r, 0.5, 200.0)).max(0.001)
+                    })
+                    .collect();
+                let weight = Draw::usize_in(r, 1, 64) as u32;
+                let cost = Draw::f64_in(r, 0.01, 10.0);
+                let poison_cost = Draw::f64_in(r, 0.01, 10.0);
+                let workload = r.next_u64();
+                (stored, poison, weight, cost, poison_cost, workload)
+            },
+            |(stored, poison, weight, cost, poison_cost, workload)| {
+                let env = EnvFingerprint::with_threads(8);
+                let key = ContextKey::new(*workload, 4096, 8, &env);
+                let mut table = TunedTable::new();
+                table
+                    .promote(TableEntry {
+                        key,
+                        cell: TunedCell {
+                            point: stored.clone(),
+                            cost: *cost,
+                            weight: *weight,
+                            label: None,
+                        },
+                    })
+                    .map_err(|e| format!("seeding promote failed: {e}"))?;
+                let allowance = table.authority().allowance(*weight);
+                let update = table.observe(key, poison, *poison_cost, None);
+                if update != TableUpdate::Adjusted {
+                    return Err(format!("expected Adjusted, got {update:?}"));
+                }
+                let cell = table.get(&key).ok_or("cell vanished")?;
+                for (i, (before, after)) in stored.iter().zip(&cell.point).enumerate() {
+                    let cap = allowance * before.abs().max(1.0);
+                    if (after - before).abs() > cap + 1e-9 {
+                        return Err(format!(
+                            "coord {i} moved {} > cap {cap} (weight {weight})",
+                            (after - before).abs()
+                        ));
+                    }
+                }
+                let cost_cap = allowance * cost.abs();
+                if (cell.cost - cost).abs() > cost_cap + 1e-9 {
+                    return Err(format!("cost moved {} > cap {cost_cap}", (cell.cost - cost).abs()));
+                }
+                if cell.weight != (*weight).saturating_sub(1).max(1) {
+                    return Err(format!("weight {} after eroding {weight}", cell.weight));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// TunedTable invariant 3 (ISSUE 9): the pow2 size lattice makes revisits
+/// recognisable — any two sizes in the same bucket produce the identical
+/// context fingerprint, and changing any key field produces a different
+/// one.
+#[test]
+fn prop_context_fingerprints_follow_the_size_lattice() {
+    for sweep in [0xF1D0_0001u64, 0xF1D0_0002, 0xF1D0_0003] {
+        forall(
+            sweep,
+            60,
+            |r| {
+                let k = Draw::usize_in(r, 2, 40) as u32;
+                let span = 1u64 << (k - 1);
+                // Two sizes in bucket k's half-open range (2^(k-1), 2^k].
+                let a = span + 1 + r.next_u64() % span;
+                let b = span + 1 + r.next_u64() % span;
+                (k, a, b, r.next_u64())
+            },
+            |&(k, a, b, workload)| {
+                if ContextKey::bucket_of(a) != k || ContextKey::bucket_of(b) != k {
+                    return Err(format!(
+                        "sizes {a}/{b} left bucket {k}: {} / {}",
+                        ContextKey::bucket_of(a),
+                        ContextKey::bucket_of(b)
+                    ));
+                }
+                let env = EnvFingerprint::with_threads(8);
+                let base = ContextKey::new(workload, a, 8, &env);
+                let same = ContextKey::new(workload, b, 8, &env);
+                if base != same || base.fingerprint() != same.fingerprint() {
+                    return Err(format!("sizes {a} and {b} split bucket {k}"));
+                }
+                // Every field participates in the identity.
+                let fp = base.fingerprint();
+                let variants = [
+                    ContextKey::new(workload.wrapping_add(1), a, 8, &env),
+                    ContextKey::new(workload, a, 9, &env),
+                    ContextKey::new(workload, a, 8, &EnvFingerprint::with_threads(16)),
+                    base.with_bucket(k + 1),
+                ];
+                for (i, v) in variants.iter().enumerate() {
+                    if v.fingerprint() == fp {
+                        return Err(format!("variant {i} collided with the base key"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }
 
 #[test]
