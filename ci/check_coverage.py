@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""Line-coverage floor for the search-space layer (the coverage CI gate).
+
+Reads the ``cargo llvm-cov --summary-only --json`` export
+(``{"data":[{"files":[{"filename", "summary":{"lines":{"count","covered",
+"percent"}}}]}]}``), selects the files whose path contains ``--path``
+(default ``rust/src/space/`` — the multi-objective / conditional-dimension
+layer), aggregates their line counters, and fails (exit 1) when the
+aggregate percentage is below ``--floor``.
+
+Rules:
+  * aggregation is over raw line counters (``sum covered / sum count``),
+    not an average of per-file percentages — a large barely-covered file
+    cannot hide behind a small fully-covered one;
+  * matching zero files is a failure, never a vacuous pass — a moved or
+    renamed module must not silently drop out of the gate;
+  * path separators are normalised, so the filter matches the absolute
+    filenames llvm-cov emits on any runner.
+
+Usage:
+  python ci/check_coverage.py --summary coverage-summary.json \
+      [--path rust/src/space/] [--floor 80]
+  python ci/check_coverage.py --self-test
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+EXPORT_TYPE = "llvm.coverage.json.export"
+
+DEFAULT_PATH = "rust/src/space/"
+DEFAULT_FLOOR_PCT = 80.0
+
+
+def load_summary(path: str) -> dict:
+    with open(path, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+    doc_type = doc.get("type")
+    if doc_type is not None and doc_type != EXPORT_TYPE:
+        raise ValueError(f"{path}: type {doc_type!r} != {EXPORT_TYPE!r}")
+    if not isinstance(doc.get("data"), list) or not doc["data"]:
+        raise ValueError(f"{path}: no 'data' export array")
+    return doc
+
+
+def matched_files(doc: dict, path_filter: str):
+    """All file records across exports whose normalised filename contains
+    the normalised filter."""
+    wanted = path_filter.replace("\\", "/")
+    out = []
+    for export in doc["data"]:
+        for rec in export.get("files", []):
+            name = str(rec.get("filename", "")).replace("\\", "/")
+            if wanted in name:
+                out.append((name, rec))
+    return out
+
+
+def check_floor(doc: dict, path_filter: str, floor_pct: float):
+    """Return (failures, notes): the aggregate line coverage of the files
+    under ``path_filter`` must be >= ``floor_pct``."""
+    files = matched_files(doc, path_filter)
+    if not files:
+        return [f"NO FILES matched {path_filter!r} — gate cannot pass vacuously"], []
+    failures, notes = [], []
+    total_count, total_covered = 0, 0
+    for name, rec in sorted(files):
+        lines = rec.get("summary", {}).get("lines", {})
+        count, covered = int(lines.get("count", 0)), int(lines.get("covered", 0))
+        total_count += count
+        total_covered += covered
+        pct = 100.0 * covered / count if count else 100.0
+        notes.append(f"{name}: {covered}/{count} lines ({pct:.1f}%)")
+    aggregate = 100.0 * total_covered / total_count if total_count else 0.0
+    line = (
+        f"{path_filter}: {total_covered}/{total_count} lines "
+        f"({aggregate:.1f}% vs {floor_pct:.1f}% floor, {len(files)} files)"
+    )
+    if total_count == 0:
+        failures.append(f"NO EXECUTABLE LINES under {line}")
+    elif aggregate < floor_pct:
+        failures.append(f"COVERAGE BELOW FLOOR {line}")
+    else:
+        notes.append(f"ok {line}")
+    return failures, notes
+
+
+def _export(files: list) -> dict:
+    return {"type": EXPORT_TYPE, "data": [{"files": files}]}
+
+
+def _file(name: str, count: int, covered: int) -> dict:
+    pct = 100.0 * covered / count if count else 100.0
+    return {
+        "filename": name,
+        "summary": {"lines": {"count": count, "covered": covered, "percent": pct}},
+    }
+
+
+def self_test() -> int:
+    space = "/r/repo/rust/src/space/"
+    # 90/100 + 50/100 = 140/200 = 70% aggregate: passes 70, fails 75.
+    doc = _export(
+        [
+            _file(space + "mod.rs", 100, 90),
+            _file(space + "objective.rs", 100, 50),
+            _file("/r/repo/rust/src/tuner/mod.rs", 10, 0),
+        ]
+    )
+    ok, notes = check_floor(doc, DEFAULT_PATH, 70.0)
+    assert ok == [], ok
+    assert sum("lines" in n for n in notes) >= 2, notes
+    assert not any("tuner" in n for n in notes), notes
+    below, _ = check_floor(doc, DEFAULT_PATH, 75.0)
+    assert len(below) == 1 and "BELOW FLOOR" in below[0], below
+
+    # Raw-counter aggregation, not per-file-percent averaging: 99% of a big
+    # file and 0% of a tiny one averages 49.5 but aggregates to ~98.
+    skew = _export([_file(space + "mod.rs", 1000, 990), _file(space + "point.rs", 10, 0)])
+    agg_ok, _ = check_floor(skew, DEFAULT_PATH, 95.0)
+    assert agg_ok == [], agg_ok
+
+    # Zero matches is a failure, never a vacuous pass.
+    none, _ = check_floor(_export([_file("/r/repo/rust/src/cli.rs", 10, 10)]), DEFAULT_PATH, 1.0)
+    assert len(none) == 1 and "NO FILES" in none[0], none
+
+    # Windows-style separators in the export still match.
+    win = _export([_file("C:\\r\\rust\\src\\space\\mod.rs", 10, 9)])
+    win_ok, _ = check_floor(win, DEFAULT_PATH, 80.0)
+    assert win_ok == [], win_ok
+
+    # Matched files with zero executable lines cannot pass.
+    empty, _ = check_floor(_export([_file(space + "mod.rs", 0, 0)]), DEFAULT_PATH, 1.0)
+    assert len(empty) == 1 and "NO EXECUTABLE LINES" in empty[0], empty
+
+    # Schema sanity: a non-export document is rejected up front.
+    try:
+        bad = {"type": "something-else", "data": [{"files": []}]}
+        if bad.get("type") != EXPORT_TYPE:
+            raise ValueError("type mismatch")
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("bad export type must raise")
+
+    print("check_coverage self-test: OK")
+    return 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--summary", help="cargo llvm-cov --json summary export")
+    parser.add_argument(
+        "--path",
+        default=DEFAULT_PATH,
+        metavar="PREFIX",
+        help=f"path fragment selecting the gated files (default {DEFAULT_PATH})",
+    )
+    parser.add_argument(
+        "--floor",
+        type=float,
+        default=DEFAULT_FLOOR_PCT,
+        metavar="PCT",
+        help=f"minimum aggregate line coverage in percent (default {DEFAULT_FLOOR_PCT:.0f})",
+    )
+    parser.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the built-in unit test of the floor logic and exit",
+    )
+    args = parser.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if not args.summary:
+        parser.error("--summary is required (or --self-test)")
+
+    doc = load_summary(args.summary)
+    failures, notes = check_floor(doc, args.path, args.floor)
+    for note in notes:
+        print(note)
+    for failure in failures:
+        print(failure, file=sys.stderr)
+    if failures:
+        print(
+            f"\ncoverage gate failed for {args.path!r} "
+            f"— add tests or justify lowering the floor",
+            file=sys.stderr,
+        )
+        return 1
+    print("coverage check: floor satisfied")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,7 @@ use super::drift::{DriftConfig, DriftMonitor};
 use super::table::{ContextKey, SharedTunedTable, TableHit, TableSeed};
 use crate::optimizer::OptimizerState;
 use crate::service::OptimizerSpec;
-use crate::space::{Dim, Point, SearchSpace};
+use crate::space::{CostVector, Dim, MultiObjective, ObjectiveSpec, ParetoFront, Point, SearchSpace};
 use crate::tuner::{Autotuning, PointValue, Sample};
 use crate::workloads::Workload;
 use std::time::Instant;
@@ -93,6 +93,11 @@ pub struct TunedRegionConfig {
     /// shared table under this context key before tuning, store the
     /// converged cell after.
     pub table: Option<(SharedTunedTable, ContextKey)>,
+    /// What "best" means: the scalarization preset/weights applied to
+    /// [`CostVector`] measurements fed through
+    /// [`TunedSpace::run_with_cost_vector`]. Plain scalar costs are
+    /// unaffected (the default [`ObjectiveSpec`] is the identity on them).
+    pub objective: ObjectiveSpec,
 }
 
 impl TunedRegionConfig {
@@ -142,6 +147,7 @@ impl TunedRegionConfig {
             drift: DriftConfig::default(),
             retune_budget_pct: 50,
             table: None,
+            objective: ObjectiveSpec::default(),
         }
     }
 
@@ -183,6 +189,14 @@ impl TunedRegionConfig {
     /// and 0 raises to 1 (the minimum-2-iterations floor still applies).
     pub fn retune_budget_pct(mut self, pct: u32) -> Self {
         self.retune_budget_pct = pct.clamp(1, 100);
+        self
+    }
+
+    /// Builder-style objective override: which scalarization the region
+    /// applies to vector-valued costs
+    /// ([`TunedSpace::run_with_cost_vector`]).
+    pub fn objective(mut self, spec: ObjectiveSpec) -> Self {
+        self.objective = spec;
         self
     }
 
@@ -267,7 +281,16 @@ impl TunedRegionConfig {
     /// [`table`](Self::table)). Requires a numeric box space (the
     /// `new`/`with_bounds` constructors); use
     /// [`build_typed`](Self::build_typed) for mixed spaces.
-    pub fn build<P: PointValue>(self) -> TunedRegion<P> {
+    pub fn build<P: PointValue>(mut self) -> TunedRegion<P> {
+        // A cell tuned under one objective must not answer lookups made
+        // under another — the winning cells genuinely differ — so a
+        // non-scalar objective folds its preset code into the wired
+        // table's context key (regardless of builder-call order).
+        if !self.objective.is_scalar() {
+            if let Some((_, key)) = &mut self.table {
+                *key = key.with_objective(self.objective.preset.code());
+            }
+        }
         let (lo, hi) = self.numeric_bounds();
         let (at, seeded, pinned) = self.seeded_autotuning(&lo, &hi);
         let monitor = DriftMonitor::new(self.drift);
@@ -298,6 +321,7 @@ impl TunedRegionConfig {
     pub fn build_typed(self) -> TunedSpace {
         let space = self.space.clone();
         let dim = space.dim();
+        let objective = self.objective;
         // The inner numeric region stages the optimizer over the unit
         // hypercube; every candidate decodes through the typed space.
         let unit_cfg = Self {
@@ -312,6 +336,7 @@ impl TunedRegionConfig {
             space,
             inner,
             point,
+            mo: MultiObjective::new(objective),
         }
     }
 }
@@ -584,6 +609,8 @@ pub struct TunedSpace {
     inner: TunedRegion<f64>,
     /// Last decoded point handed to the application.
     point: Point,
+    /// Scalarization + Pareto-front bookkeeping for vector-valued costs.
+    mo: MultiObjective,
 }
 
 impl TunedSpace {
@@ -652,6 +679,42 @@ impl TunedSpace {
             self.point = p;
         }
         out
+    }
+
+    /// Run one application iteration with a **vector-valued** cost:
+    /// `target` returns `(CostVector, value)`. The vector is scalarized
+    /// under the configured [`ObjectiveSpec`]
+    /// ([`TunedRegionConfig::objective`]) before it reaches the optimizer,
+    /// and every measured cell is offered to the region's [`ParetoFront`]
+    /// ([`pareto`](Self::pareto)). Under the default scalar objective the
+    /// scalarized cost of [`CostVector::from_scalar`] is the scalar itself,
+    /// so this path is trajectory-identical to
+    /// [`run_with_cost`](Self::run_with_cost).
+    pub fn run_with_cost_vector<R>(
+        &mut self,
+        target: impl FnOnce(&Point) -> (CostVector, R),
+    ) -> R {
+        let space = &self.space;
+        let mo = &mut self.mo;
+        let mut decoded: Option<Point> = None;
+        let out = self.inner.run_with_cost(|u| {
+            let p = space.decode_unit(u);
+            let (vector, value) = target(&p);
+            let scalar = mo.observe(p.key(), Some(space.label(&p)), vector);
+            decoded = Some(p);
+            (scalar, value)
+        });
+        if let Some(p) = decoded {
+            self.point = p;
+        }
+        out
+    }
+
+    /// The Pareto front accumulated by
+    /// [`run_with_cost_vector`](Self::run_with_cost_vector) (empty until
+    /// the first vector-valued measurement).
+    pub fn pareto(&self) -> &ParetoFront {
+        self.mo.front()
     }
 
     /// Force a warm re-tune now (drift known out-of-band).
@@ -1021,6 +1084,65 @@ mod tests {
         #[should_panic(expected = "pow2/log/categorical")]
         fn numeric_build_rejects_mixed_spaces() {
             let _ = TunedRegionConfig::with_space(Schedule::joint_space(8)).build::<i32>();
+        }
+
+        #[test]
+        fn vector_cost_under_default_objective_matches_the_scalar_path() {
+            // scalarize(from_scalar(c)) == c exactly under the scalar
+            // preset (1·median + 0·p95 + 0·inv_eff), so the vector path
+            // must walk the identical same-seed trajectory.
+            let cfg = || {
+                TunedRegionConfig::with_space(Schedule::joint_space(128))
+                    .budget(4, 10)
+                    .seed(11)
+            };
+            let mut scalar = cfg().build_typed();
+            converge_joint(&mut scalar, 48.0);
+            let mut vector = cfg().build_typed();
+            let mut guard = 0;
+            while !vector.is_converged() {
+                vector.run_with_cost_vector(|p| {
+                    (CostVector::from_scalar(joint_cost(p, 48.0)), ())
+                });
+                guard += 1;
+                assert!(guard < 10_000, "vector tuning never converged");
+            }
+            assert_eq!(vector.point(), scalar.point(), "trajectories diverged");
+            assert_eq!(vector.evaluations(), scalar.evaluations());
+            let front = vector.pareto();
+            assert!(!front.is_empty() && front.len() <= front.cap());
+            let winner = front.winner().expect("non-empty front has a winner");
+            let best = vector.best().expect("converged region has a best").1;
+            assert!((winner.scalar - best).abs() < 1e-12);
+            // The scalar path never measured a vector: its front stays empty.
+            assert!(scalar.pareto().is_empty());
+        }
+
+        #[test]
+        fn vector_cost_scalarizes_under_fastest_stable() {
+            let spec = ObjectiveSpec::parse("fastest-stable").expect("known preset");
+            let mut region =
+                TunedRegionConfig::with_space(SearchSpace::new(vec![Dim::Int { lo: 1, hi: 64 }]))
+                    .budget(2, 6)
+                    .seed(7)
+                    .objective(spec)
+                    .build_typed();
+            let mut guard = 0;
+            while !region.is_converged() {
+                region.run_with_cost_vector(|p| {
+                    let x = p[0].as_f64();
+                    // Constant median, p95 rising with the knob: only the
+                    // p95 term differentiates candidates.
+                    let c = CostVector::new(1.0, 1.0 + x / 8.0, 1.0, 1).expect("finite");
+                    (c, ())
+                });
+                guard += 1;
+                assert!(guard < 10_000);
+            }
+            let winner = region.pareto().winner().expect("front populated");
+            // fastest-stable weights (1, 2, 0): scalar = median + 2·p95.
+            let p95 = 1.0 + winner.key[0] / 8.0;
+            assert!((winner.scalar - (1.0 + 2.0 * p95)).abs() < 1e-12);
         }
     }
 }

@@ -28,7 +28,7 @@
 
 use crate::error::PatsmaError;
 use crate::service::cache::fnv1a;
-use crate::service::registry::{kv_num, kv_opt, split_kv};
+use crate::service::registry::{kv_num, kv_num_or, kv_opt, split_kv};
 use crate::service::EnvFingerprint;
 use std::collections::HashMap;
 use std::fmt;
@@ -62,6 +62,11 @@ pub struct ContextKey {
     pub threads: u32,
     /// Environment hash ([`EnvFingerprint::hash`]).
     pub env: u64,
+    /// Objective-preset code ([`crate::space::ObjectivePreset::code`];
+    /// `0` = plain scalar). A cell tuned for "cheapest" must never answer
+    /// a "fastest-stable" lookup — the winning cells genuinely differ —
+    /// so the objective participates in the context identity.
+    pub objective: u32,
 }
 
 impl ContextKey {
@@ -74,7 +79,15 @@ impl ContextKey {
             bucket: Self::bucket_of(input_size),
             threads: threads as u32,
             env: env.hash,
+            objective: 0,
         }
+    }
+
+    /// The same context under a different objective preset
+    /// ([`crate::space::ObjectivePreset::code`]).
+    pub fn with_objective(mut self, code: u32) -> Self {
+        self.objective = code;
+        self
     }
 
     /// The pow2 lattice bucket of an input size: sizes in
@@ -110,32 +123,42 @@ impl ContextKey {
     /// environment *participate* in the key — the same workload under a
     /// different pool size is a different context.
     pub fn fingerprint(&self) -> u64 {
-        let mut bytes = Vec::with_capacity(24);
+        let mut bytes = Vec::with_capacity(28);
         bytes.extend_from_slice(&self.workload.to_le_bytes());
         bytes.extend_from_slice(&self.bucket.to_le_bytes());
         bytes.extend_from_slice(&self.threads.to_le_bytes());
         bytes.extend_from_slice(&self.env.to_le_bytes());
+        bytes.extend_from_slice(&self.objective.to_le_bytes());
         fnv1a(bytes)
     }
 
     /// The key as `key=value` pairs (registry-v2 / wire codec).
     pub fn to_kv(&self) -> Vec<(String, String)> {
-        vec![
+        let mut kv = vec![
             ("workload".into(), self.workload.to_string()),
             ("bucket".into(), self.bucket.to_string()),
             ("threads".into(), self.threads.to_string()),
             ("env".into(), self.env.to_string()),
-        ]
+        ];
+        if self.objective != 0 {
+            // Scalar cells keep the pre-objective record shape: registries
+            // written by this version load byte-identically in older
+            // readers as long as only the default objective is in play.
+            kv.push(("obj".into(), self.objective.to_string()));
+        }
+        kv
     }
 
     /// Parse pairs produced by [`to_kv`](Self::to_kv); unknown keys are
-    /// ignored (forward compatibility).
+    /// ignored and a missing `obj` means the scalar objective (forward
+    /// *and* backward compatibility).
     pub fn from_kv(pairs: &[(String, String)]) -> Result<Self, PatsmaError> {
         Ok(Self {
             workload: kv_num(pairs, "workload")?,
             bucket: kv_num(pairs, "bucket")?,
             threads: kv_num(pairs, "threads")?,
             env: kv_num(pairs, "env")?,
+            objective: kv_num_or(pairs, "obj", 0)?,
         })
     }
 }
@@ -594,6 +617,36 @@ mod tests {
         assert_ne!(ContextKey::new(1, 1024, 4, &env).fingerprint(), fp);
         let other_env = EnvFingerprint::with_threads(16);
         assert_ne!(ContextKey::new(1, 1024, 8, &other_env).fingerprint(), fp);
+        assert_ne!(base.with_objective(1).fingerprint(), fp);
+    }
+
+    #[test]
+    fn objective_separates_cells_and_roundtrips_leniently() {
+        let mut t = TunedTable::new();
+        let scalar = key(7, 4096);
+        let stable = scalar.with_objective(1);
+        t.observe(scalar, &[8.0], 1.0, None);
+        t.observe(stable, &[64.0], 2.0, None);
+        assert_eq!(t.get(&scalar).unwrap().point, vec![8.0]);
+        assert_eq!(t.get(&stable).unwrap().point, vec![64.0]);
+        // Scalar keys keep the legacy record shape; objective keys add obj=.
+        let records: Vec<String> = t.entries().iter().map(TableEntry::to_record).collect();
+        assert!(records.iter().any(|r| !r.contains("obj=")));
+        assert!(records.iter().any(|r| r.contains("obj=1")));
+        for line in &records {
+            let tokens: Vec<&str> = line.split_whitespace().collect();
+            let parsed = TableEntry::from_tokens(&tokens[1..]).unwrap();
+            assert!(t.get(&parsed.key).is_some(), "roundtrip lost {line:?}");
+        }
+        // A legacy record without obj= parses as the scalar objective.
+        let legacy = ContextKey::from_kv(&[
+            ("workload".into(), "7".into()),
+            ("bucket".into(), "12".into()),
+            ("threads".into(), "8".into()),
+            ("env".into(), "3".into()),
+        ])
+        .unwrap();
+        assert_eq!(legacy.objective, 0);
     }
 
     #[test]

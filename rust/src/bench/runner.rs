@@ -13,6 +13,7 @@ use crate::adaptive::{ContextKey, DriftConfig, SharedTunedTable, TunedRegionConf
 use crate::optimizer::{drive, Csa, CsaConfig, NelderMead, NelderMeadConfig};
 use crate::sched::{LoopMetrics, Schedule, ThreadPool};
 use crate::service::{DaemonClient, DaemonConfig, OptimizerSpec, SessionSpec, TuningService};
+use crate::space::{ObjectivePreset, ObjectiveSpec, ParetoFront};
 use crate::stats::Summary;
 use crate::workloads::{self, SizeProfile, Workload};
 use anyhow::{bail, Context, Result};
@@ -428,6 +429,50 @@ pub fn run_suite(suite: Suite, quick: bool) -> Result<BenchReport> {
     entries.push(BenchEntry::from_measurement(
         "optimizer/nelder-mead-sphere",
         &nm,
+    ));
+
+    // 2b. The multi-objective search layer (ISSUE 10): one sample streams
+    // 64 candidates through scalarize + Pareto offer *and* the plain scalar
+    // min fold it replaces — the gap between this entry and pure arithmetic
+    // is the per-candidate price of the front bookkeeping.
+    let weights = ObjectiveSpec::preset(ObjectivePreset::FastestStable).weights;
+    let mo = bench("mo-vs-scalar", warmup, samples, || {
+        let mut front = ParetoFront::new(8);
+        let mut scalar_best = f64::INFINITY;
+        for i in 0..64u32 {
+            let cost = workloads::synthetic::power_law_cost_vector(
+                (i % 4) as usize,
+                (1 + 4 * i) as f64,
+                4,
+                256.0,
+            );
+            let scalar = weights.scalarize(&cost);
+            scalar_best = scalar_best.min(scalar);
+            front.offer(vec![i as f64], None, cost, scalar);
+        }
+        black_box((front.len(), scalar_best));
+    });
+    entries.push(BenchEntry::from_measurement("search/mo-vs-scalar", &mo));
+
+    // 2c. The conditional codec against its dense counterpart: one sample
+    // round-trips 128 unit points through each tile space (decode + encode;
+    // the conditional decode pays the extra dead-cell collapse pass).
+    let dense_space = workloads::matmul::MatMul::dense_tile_space(64);
+    let cond_space = workloads::matmul::MatMul::conditional_tile_space(64);
+    let codec = bench("conditional-vs-dense", warmup, samples, || {
+        let mut acc = 0.0f64;
+        for space in [&dense_space, &cond_space] {
+            for i in 0..128u32 {
+                let u = (i as f64 + 0.5) / 128.0;
+                let p = space.decode_unit(&[u, 1.0 - u, u, 1.0 - u]);
+                acc += space.encode(&p).iter().sum::<f64>();
+            }
+        }
+        black_box(acc);
+    });
+    entries.push(BenchEntry::from_measurement(
+        "search/conditional-vs-dense",
+        &codec,
     ));
 
     // 3. The service path end to end on the synthetic landscape.

@@ -6,11 +6,14 @@
 //! patsma tune <workload> [--optimizer csa|nm|sa|random|pso|grid]
 //!                        [--num-opt N] [--max-iter N] [--ignore N]
 //!                        [--seed N] [--mode single|entire] [--joint]
+//!                        [--objective scalar|fastest-stable|cheapest]
+//!                        [--weights M,P,E]
 //! patsma verify [<workload>]       # parallel-vs-oracle checks
 //! patsma bench [--suite tier1|full] [--json PATH] [--quick]
 //! patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
 //!                    [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
 //!                    [--registry PATH] [--workload NAME] [--joint]
+//!                    [--objective NAME] [--weights M,P,E]
 //! patsma service report [--registry PATH]
 //! patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
 //!                       [--force]
@@ -21,11 +24,13 @@
 //! patsma client tune [--socket PATH] [--id NAME] [--optimum X]
 //!                    [--optimizer X] [--num-opt N] [--max-iter N] [--seed N]
 //!                    [--workload NAME] [--joint] [--fresh]
+//!                    [--objective NAME] [--weights M,P,E]
 //! patsma client report [--socket PATH]
 //! patsma adaptive demo [--seed N]  # online tuning: converge → drift → recover
 //! patsma adaptive run --workload NAME [--joint] [--num-opt N] [--max-iter N]
 //!                     [--seed N] [--socket PATH] [--registry PATH]
-//!                     [--no-table] # online tuning of a registry workload
+//!                     [--no-table] [--objective NAME] [--weights M,P,E]
+//!                                  # online tuning of a registry workload
 //! patsma table show|clear [--registry PATH]  # the contextual tuned table
 //! patsma demo                      # 30-second guided tour
 //! ```
@@ -38,6 +43,7 @@ use crate::optimizer::{
     PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
 };
 use crate::service::{self, DaemonClient, DaemonConfig, OptimizerSpec, SessionSpec, TuningService};
+use crate::space::{CostVector, Dim, ObjectiveSpec, ObjectiveWeights, ParetoFront, SearchSpace};
 use crate::tuner::Autotuning;
 use crate::workloads::{self, rb_gauss_seidel::RbGaussSeidel, Workload};
 use anyhow::{bail, Context, Result};
@@ -67,6 +73,10 @@ pub enum Command {
         /// Tune the joint (schedule kind, chunk, ..) typed space instead of
         /// the plain parameter box.
         joint: bool,
+        /// Objective preset (`scalar|fastest-stable|cheapest`).
+        objective: String,
+        /// Scalarization weight override `median,p95,efficiency`.
+        weights: Option<String>,
     },
     /// Verify workloads against their sequential oracles.
     Verify { workload: Option<String> },
@@ -92,6 +102,10 @@ pub enum Command {
         /// Tune a registry workload (measured wall-clock) instead of the
         /// synthetic landscapes.
         workload: Option<String>,
+        /// Objective preset (`scalar|fastest-stable|cheapest`).
+        objective: String,
+        /// Scalarization weight override `median,p95,efficiency`.
+        weights: Option<String>,
     },
     /// Render a saved service registry.
     ServiceReport { registry: String },
@@ -131,6 +145,10 @@ pub enum Command {
         joint: bool,
         /// Force a re-run even when the daemon holds a converged session.
         fresh: bool,
+        /// Objective preset (`scalar|fastest-stable|cheapest`).
+        objective: String,
+        /// Scalarization weight override `median,p95,efficiency`.
+        weights: Option<String>,
     },
     /// Render a running daemon's registry.
     ClientReport { socket: String },
@@ -149,6 +167,10 @@ pub enum Command {
         registry: Option<String>,
         /// Opt out of the tuned table entirely (always cold-tune).
         no_table: bool,
+        /// Objective preset (`scalar|fastest-stable|cheapest`).
+        objective: String,
+        /// Scalarization weight override `median,p95,efficiency`.
+        weights: Option<String>,
     },
     /// Render the tuned-table records of a saved registry.
     TableShow { registry: String },
@@ -218,6 +240,8 @@ pub fn parse(args: &[String]) -> Result<Command, PatsmaError> {
                 seed: flag_num("--seed", flag_val("--seed").unwrap_or("42"))?,
                 single_mode: flag_val("--mode").unwrap_or("entire") == "single",
                 joint: has_flag("--joint"),
+                objective: flag_val("--objective").unwrap_or("scalar").to_string(),
+                weights: flag_val("--weights").map(str::to_string),
             })
         }
         "verify" => Ok(Command::Verify {
@@ -256,6 +280,8 @@ pub fn parse(args: &[String]) -> Result<Command, PatsmaError> {
                     registry,
                     joint: has_flag("--joint"),
                     workload: flag_val("--workload").map(str::to_string),
+                    objective: flag_val("--objective").unwrap_or("scalar").to_string(),
+                    weights: flag_val("--weights").map(str::to_string),
                 }),
                 "report" => Ok(Command::ServiceReport { registry }),
                 "retune" => Ok(Command::ServiceRetune {
@@ -330,6 +356,8 @@ pub fn parse(args: &[String]) -> Result<Command, PatsmaError> {
                     workload: flag_val("--workload").map(str::to_string),
                     joint: has_flag("--joint"),
                     fresh: has_flag("--fresh"),
+                    objective: flag_val("--objective").unwrap_or("scalar").to_string(),
+                    weights: flag_val("--weights").map(str::to_string),
                 }),
                 "report" => Ok(Command::ClientReport { socket }),
                 other => Err(PatsmaError::Unknown {
@@ -366,6 +394,8 @@ pub fn parse(args: &[String]) -> Result<Command, PatsmaError> {
                     socket: flag_val("--socket").map(str::to_string),
                     registry: flag_val("--registry").map(str::to_string),
                     no_table: has_flag("--no-table"),
+                    objective: flag_val("--objective").unwrap_or("scalar").to_string(),
+                    weights: flag_val("--weights").map(str::to_string),
                 }),
                 other => Err(PatsmaError::Unknown {
                     kind: "adaptive action",
@@ -437,6 +467,76 @@ fn make_optimizer(
     })
 }
 
+/// Wall-clock samples taken per candidate on the vector-cost tuning paths
+/// (`--objective` ≠ scalar): enough for a median/p95 split without tripling
+/// the budget's cost the way a real percentile study would.
+const OBJECTIVE_SAMPLES: usize = 3;
+
+/// `--objective`/`--weights` → a validated [`ObjectiveSpec`].
+fn make_objective(name: &str, weights: Option<&str>) -> Result<ObjectiveSpec> {
+    let spec = ObjectiveSpec::parse(name)?;
+    match weights {
+        None => Ok(spec),
+        Some(raw) => {
+            let parts: Vec<&str> = raw.split(',').collect();
+            if parts.len() != 3 {
+                bail!(
+                    "--weights wants three comma-separated numbers \
+                     (median,p95,efficiency), got {raw:?}"
+                );
+            }
+            let num = |s: &str| -> Result<f64> {
+                s.trim()
+                    .parse()
+                    .with_context(|| format!("--weights component {s:?}"))
+            };
+            Ok(spec.with_weights(ObjectiveWeights::new(
+                num(parts[0])?,
+                num(parts[1])?,
+                num(parts[2])?,
+            )?)?)
+        }
+    }
+}
+
+/// The shared knobs of `patsma tune`'s execution paths (grouped so the
+/// helpers stay below the argument-count lint).
+struct TuneOpts<'a> {
+    optimizer: &'a str,
+    num_opt: usize,
+    max_iter: usize,
+    ignore: u32,
+    seed: u64,
+    single_mode: bool,
+    objective: ObjectiveSpec,
+}
+
+/// Render a non-empty Pareto front as an indented block (empty string
+/// otherwise, so scalar outputs are untouched).
+fn render_front(front: Option<&ParetoFront>) -> String {
+    let Some(front) = front.filter(|f| !f.is_empty()) else {
+        return String::new();
+    };
+    let mut s = String::from(" pareto front (non-dominated cells):\n");
+    for e in front.entries() {
+        let cell = e.label.clone().unwrap_or_else(|| {
+            e.key
+                .iter()
+                .map(|v| format!("{v}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        });
+        s.push_str(&format!(
+            "   {} median={} p95={} scalar={:.3e}\n",
+            cell,
+            bench::fmt_time(e.cost.median),
+            bench::fmt_time(e.cost.p95),
+            e.scalar,
+        ));
+    }
+    s
+}
+
 /// Execute a parsed command; returns the text to print.
 pub fn execute(cmd: Command) -> Result<String> {
     match cmd {
@@ -492,23 +592,33 @@ pub fn execute(cmd: Command) -> Result<String> {
             seed,
             single_mode,
             joint,
+            objective,
+            weights,
         } => {
+            let objective = make_objective(&objective, weights.as_deref())?;
             if workload.starts_with("xla-") {
                 if joint {
                     bail!("--joint applies to registry workloads, not {workload:?}");
                 }
+                if !objective.is_scalar() {
+                    bail!("--objective applies to registry workloads, not {workload:?}");
+                }
                 return tune_xla(&workload, num_opt, max_iter, ignore, seed);
             }
+            let opts = TuneOpts {
+                optimizer: &optimizer,
+                num_opt,
+                max_iter,
+                ignore,
+                seed,
+                single_mode,
+                objective,
+            };
             if joint {
-                return tune_joint(
-                    &workload,
-                    &optimizer,
-                    num_opt,
-                    max_iter,
-                    ignore,
-                    seed,
-                    single_mode,
-                );
+                return tune_joint(&workload, &opts);
+            }
+            if !objective.is_scalar() {
+                return tune_vector(&workload, &opts);
             }
             let mut w = make_workload(&workload)?;
             let (lo, hi) = w.bounds();
@@ -558,7 +668,10 @@ pub fn execute(cmd: Command) -> Result<String> {
             registry,
             joint,
             workload,
+            objective,
+            weights,
         } => {
+            let objective = make_objective(&objective, weights.as_deref())?;
             // Deterministic variety: the landscape optimum cycles so the
             // batch overlaps enough to exercise the shared cache without
             // the sessions being clones of each other.
@@ -594,7 +707,8 @@ pub fn execute(cmd: Command) -> Result<String> {
                     (None, false) => SessionSpec::synthetic(id, optimum, seed + i as u64),
                 }
                 .with_optimizer(opt)
-                .with_budget(num_opt, max_iter);
+                .with_budget(num_opt, max_iter)
+                .with_objective(objective);
                 spec.ignore = ignore;
                 specs.push(spec);
             }
@@ -718,6 +832,8 @@ pub fn execute(cmd: Command) -> Result<String> {
             workload,
             joint,
             fresh,
+            objective,
+            weights,
         } => {
             let spec = match (&workload, joint) {
                 (Some(name), true) => SessionSpec::named_joint(id, name.clone(), seed),
@@ -726,7 +842,8 @@ pub fn execute(cmd: Command) -> Result<String> {
                 (None, false) => SessionSpec::synthetic(id, optimum, seed),
             }
             .with_optimizer(OptimizerSpec::parse(&optimizer)?)
-            .with_budget(num_opt, max_iter);
+            .with_budget(num_opt, max_iter)
+            .with_objective(make_objective(&objective, weights.as_deref())?);
             let mut client = DaemonClient::connect(std::path::Path::new(&socket))?;
             let (report, cached) = client.tune(spec, fresh)?;
             let best = report
@@ -820,16 +937,21 @@ pub fn execute(cmd: Command) -> Result<String> {
             socket,
             registry,
             no_table,
+            objective,
+            weights,
         } => {
             use crate::adaptive::{
                 ContextKey, SharedTunedTable, TableEntry, TableSeed, TunedRegionConfig,
                 TunedTable,
             };
             use crate::service::{fingerprint_str, EnvFingerprint, ServiceReport};
+            let objective = make_objective(&objective, weights.as_deref())?;
             let mut w = workloads::by_name(&workload)?;
             // The execution context this run tunes for: workload identity
-            // (space shape included), input-size bucket, pool width, env.
-            let key = ContextKey::new(
+            // (space shape included), input-size bucket, pool width, env —
+            // and, when non-scalar, the objective preset (a cell tuned for
+            // the tail must not answer a latency-only revisit).
+            let mut key = ContextKey::new(
                 fingerprint_str(&format!(
                     "{workload}/{}",
                     if joint { "joint" } else { "typed" }
@@ -838,6 +960,9 @@ pub fn execute(cmd: Command) -> Result<String> {
                 crate::sched::ThreadPool::global().threads(),
                 &EnvFingerprint::current(),
             );
+            if !objective.is_scalar() {
+                key = key.with_objective(objective.preset.code());
+            }
             let table = SharedTunedTable::new();
             if !no_table {
                 if let Some(reg) = &registry {
@@ -856,14 +981,36 @@ pub fn execute(cmd: Command) -> Result<String> {
             }
             let mut cfg = TunedRegionConfig::for_workload(w.as_ref(), joint)
                 .budget(num_opt, max_iter)
-                .seed(seed);
+                .seed(seed)
+                .objective(objective);
             if !no_table {
                 cfg = cfg.table(table.clone(), key);
             }
             let mut region = cfg.build_typed();
+            let cores = crate::sched::ThreadPool::global().threads().max(1);
             let mut iters = 0u64;
             while !region.is_converged() && iters < 100_000 {
-                let _ = region.run_workload(w.as_mut());
+                if objective.is_scalar() {
+                    let _ = region.run_workload(w.as_mut());
+                } else {
+                    // Vector costs: sample each candidate a few times so
+                    // median and p95 separate, then let the region
+                    // scalarize under the requested objective.
+                    let _ = region.run_with_cost_vector(|p| {
+                        let mut samples = [0.0f64; OBJECTIVE_SAMPLES];
+                        let mut out = 0.0;
+                        for s in &mut samples {
+                            let t = std::time::Instant::now();
+                            out = w.run_point(p);
+                            *s = t.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+                        }
+                        (
+                            CostVector::from_samples(&samples, 1.0, cores)
+                                .expect("clamped wall-clock samples are finite and positive"),
+                            out,
+                        )
+                    });
+                }
                 iters += 1;
             }
             let mut s = format!(
@@ -900,6 +1047,10 @@ pub fn execute(cmd: Command) -> Result<String> {
                     crate::bench::fmt_time(cost)
                 ));
             }
+            if !objective.is_scalar() {
+                s.push_str(&format!(" objective: {}\n", objective.descriptor()));
+                s.push_str(&render_front(Some(region.pareto())));
+            }
             if !no_table {
                 if let Some(cell) = table.get(&key) {
                     let entry = TableEntry { key, cell };
@@ -926,6 +1077,7 @@ pub fn execute(cmd: Command) -> Result<String> {
                                     cap: 0,
                                 },
                                 table: Vec::new(),
+                                pareto: Vec::new(),
                                 extras: Vec::new(),
                             }
                         };
@@ -1016,22 +1168,31 @@ pub fn execute(cmd: Command) -> Result<String> {
 
 /// `patsma tune <workload> --joint`: tune the `(schedule kind, chunk, ..)`
 /// typed space of a registry workload through the typed `Autotuning`
-/// surface, in either execution mode.
-fn tune_joint(
-    workload: &str,
-    optimizer: &str,
-    num_opt: usize,
-    max_iter: usize,
-    ignore: u32,
-    seed: u64,
-    single_mode: bool,
-) -> Result<String> {
+/// surface, in either execution mode. A non-scalar `--objective` switches
+/// to vector costs ([`Autotuning::entire_exec_vector`], entire mode only).
+fn tune_joint(workload: &str, opts: &TuneOpts) -> Result<String> {
     let mut w = workloads::by_name(workload)?;
     let space = w.joint_space();
-    let opt = make_optimizer(optimizer, space.dim(), num_opt, max_iter, seed)?;
-    let mut at = Autotuning::with_space(space.clone(), ignore, opt);
+    let opt = make_optimizer(opts.optimizer, space.dim(), opts.num_opt, opts.max_iter, opts.seed)?;
+    let mut at = Autotuning::with_space(space.clone(), opts.ignore, opt);
     let t0 = std::time::Instant::now();
-    if single_mode {
+    if !opts.objective.is_scalar() {
+        if opts.single_mode {
+            bail!("--objective needs entire mode (drop `--mode single`)");
+        }
+        at.set_objective(opts.objective);
+        let cores = crate::sched::ThreadPool::global().threads().max(1);
+        at.entire_exec_vector(|p| {
+            let mut samples = [0.0f64; OBJECTIVE_SAMPLES];
+            for s in &mut samples {
+                let t = std::time::Instant::now();
+                let _ = w.run_point(p);
+                *s = t.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+            }
+            CostVector::from_samples(&samples, 1.0, cores)
+                .expect("clamped wall-clock samples are finite and positive")
+        });
+    } else if opts.single_mode {
         while !at.is_finished() {
             at.single_exec_typed(|p| {
                 let t = std::time::Instant::now();
@@ -1053,7 +1214,7 @@ fn tune_joint(
          target iterations = {}\n tuning wall-clock = {}\n",
         workload,
         at.optimizer_name(),
-        if single_mode { "single" } else { "entire" },
+        if opts.single_mode { "single" } else { "entire" },
         space.label(&tuned),
         at.evaluations(),
         at.target_iterations(),
@@ -1066,6 +1227,60 @@ fn tune_joint(
             crate::bench::fmt_time(bc)
         ));
     }
+    if !opts.objective.is_scalar() {
+        s.push_str(&format!(" objective = {}\n", opts.objective.descriptor()));
+        s.push_str(&render_front(at.pareto()));
+    }
+    Ok(s)
+}
+
+/// `patsma tune <workload> --objective <preset>` without `--joint`: the
+/// workload's plain integer parameter box tuned under vector costs — each
+/// candidate is sampled [`OBJECTIVE_SAMPLES`] times so median and p95
+/// separate, and the run reports the session's Pareto front.
+fn tune_vector(workload: &str, opts: &TuneOpts) -> Result<String> {
+    if opts.single_mode {
+        bail!("--objective needs entire mode (drop `--mode single`)");
+    }
+    let mut w = workloads::by_name(workload)?;
+    let (lo, hi) = w.bounds();
+    let dim = w.dim();
+    let space = SearchSpace::new(vec![
+        Dim::Int {
+            lo: lo.round() as i64,
+            hi: hi.round() as i64,
+        };
+        dim
+    ]);
+    let opt = make_optimizer(opts.optimizer, dim, opts.num_opt, opts.max_iter, opts.seed)?;
+    let mut at = Autotuning::with_space(space.clone(), opts.ignore, opt);
+    at.set_objective(opts.objective);
+    let cores = crate::sched::ThreadPool::global().threads().max(1);
+    let t0 = std::time::Instant::now();
+    let tuned = at.entire_exec_vector(|p| {
+        let cell: Vec<i32> = p.values().iter().map(|v| v.as_i64() as i32).collect();
+        let mut samples = [0.0f64; OBJECTIVE_SAMPLES];
+        for s in &mut samples {
+            let t = std::time::Instant::now();
+            let _ = w.run_iteration(&cell);
+            *s = t.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+        }
+        CostVector::from_samples(&samples, 1.0, cores)
+            .expect("clamped wall-clock samples are finite and positive")
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut s = format!(
+        "workload={} optimizer={} mode=entire objective={}\n tuned point = {}\n \
+         evaluations = {}\n target iterations = {}\n tuning wall-clock = {}\n",
+        workload,
+        at.optimizer_name(),
+        opts.objective.descriptor(),
+        space.label(&tuned),
+        at.evaluations(),
+        at.target_iterations(),
+        crate::bench::fmt_time(elapsed),
+    );
+    s.push_str(&render_front(at.pareto()));
     Ok(s)
 }
 
@@ -1118,9 +1333,15 @@ USAGE:
   patsma tune <workload> [--optimizer csa|nm|sa|random|pso|grid]
               [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
               [--mode single|entire] [--joint]
+              [--objective scalar|fastest-stable|cheapest] [--weights M,P,E]
                                             one-off tuning; --joint searches
                                             (schedule kind, chunk, ..) as
-                                            one typed space
+                                            one typed space; --objective
+                                            tunes a (median, p95,
+                                            efficiency) cost vector and
+                                            reports the Pareto front
+                                            (--weights overrides the
+                                            preset's scalarization)
   patsma verify [<workload>]                parallel vs sequential oracle
   patsma bench [--suite tier1|full] [--json PATH] [--quick]
                                             deterministic perf suite; --json
@@ -1128,10 +1349,14 @@ USAGE:
   patsma service run [--sessions N] [--concurrency N] [--optimizer X|mixed]
               [--num-opt N] [--max-iter N] [--ignore N] [--seed N]
               [--registry PATH] [--workload NAME] [--joint]
+              [--objective NAME] [--weights M,P,E]
                                             concurrent multi-session tuning;
                                             --workload tunes a registry
                                             workload, --joint its (schedule
-                                            kind, chunk, ..) typed space
+                                            kind, chunk, ..) typed space;
+                                            --objective persists each
+                                            session's Pareto front in the
+                                            registry
   patsma service report [--registry PATH]   render a saved registry
   patsma service retune [--registry PATH] [--concurrency N] [--budget PCT]
               [--force]                     warm-started re-tuning of drifted
@@ -1145,7 +1370,8 @@ USAGE:
   patsma daemon status [--socket PATH]      ping: protocol, sessions, state
   patsma client tune [--socket PATH] [--id NAME] [--optimum X] [--optimizer X]
               [--num-opt N] [--max-iter N] [--seed N] [--workload NAME]
-              [--joint] [--fresh]           tune one session through the
+              [--joint] [--fresh] [--objective NAME] [--weights M,P,E]
+                                            tune one session through the
                                             daemon; converged sessions answer
                                             instantly (--fresh re-runs)
   patsma client report [--socket PATH]      the daemon's live registry
@@ -1153,6 +1379,7 @@ USAGE:
                                             converge, drift, warm recovery
   patsma adaptive run --workload NAME [--joint] [--num-opt N] [--max-iter N]
               [--seed N] [--socket PATH] [--registry PATH] [--no-table]
+              [--objective NAME] [--weights M,P,E]
                                             tune a registry workload online
                                             to convergence (typed / joint);
                                             --socket/--registry consult the
@@ -1233,6 +1460,142 @@ mod tests {
             Command::Tune { joint, .. } => assert!(joint),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parse_objective_flags_and_defaults() {
+        match parse(&v(&["tune", "spmv"])).unwrap() {
+            Command::Tune {
+                objective, weights, ..
+            } => {
+                assert_eq!(objective, "scalar");
+                assert_eq!(weights, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&v(&[
+            "tune",
+            "spmv",
+            "--objective",
+            "fastest-stable",
+            "--weights",
+            "1,2,0.5",
+        ]))
+        .unwrap()
+        {
+            Command::Tune {
+                objective, weights, ..
+            } => {
+                assert_eq!(objective, "fastest-stable");
+                assert_eq!(weights.as_deref(), Some("1,2,0.5"));
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&v(&["service", "run", "--objective", "cheapest"])).unwrap() {
+            Command::ServiceRun { objective, .. } => assert_eq!(objective, "cheapest"),
+            other => panic!("{other:?}"),
+        }
+        match parse(&v(&["client", "tune", "--objective", "cheapest"])).unwrap() {
+            Command::ClientTune { objective, .. } => assert_eq!(objective, "cheapest"),
+            other => panic!("{other:?}"),
+        }
+        match parse(&v(&[
+            "adaptive",
+            "run",
+            "--workload",
+            "spmv",
+            "--objective",
+            "fastest-stable",
+        ]))
+        .unwrap()
+        {
+            Command::AdaptiveRun { objective, .. } => assert_eq!(objective, "fastest-stable"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn make_objective_validates_presets_and_weights() {
+        assert!(make_objective("scalar", None).unwrap().is_scalar());
+        let spec = make_objective("fastest-stable", Some("1,2,0.5")).unwrap();
+        assert!(!spec.is_scalar());
+        assert_eq!(spec.weights.p95, 2.0);
+        assert_eq!(spec.weights.efficiency, 0.5);
+        // Overriding scalar's weights back to the scalar defaults is still
+        // the scalar objective (bit-identical fast path).
+        assert!(make_objective("scalar", Some("1,0,0")).unwrap().is_scalar());
+        assert!(make_objective("bogus", None).is_err());
+        assert!(make_objective("cheapest", Some("1,2")).is_err());
+        assert!(make_objective("cheapest", Some("a,b,c")).is_err());
+        assert!(make_objective("cheapest", Some("0,0,0")).is_err());
+        assert!(make_objective("cheapest", Some("1,NaN,0")).is_err());
+    }
+
+    #[test]
+    fn tune_with_objective_reports_a_pareto_front() {
+        let out = execute(Command::Tune {
+            workload: "rb-gauss-seidel".into(),
+            optimizer: "csa".into(),
+            num_opt: 2,
+            max_iter: 3,
+            ignore: 0,
+            seed: 7,
+            single_mode: false,
+            joint: false,
+            objective: "fastest-stable".into(),
+            weights: None,
+        })
+        .unwrap();
+        assert!(out.contains("objective=fastest-stable"), "{out}");
+        assert!(out.contains("pareto front"), "{out}");
+        // Vector costs need the entire-execution protocol.
+        assert!(execute(Command::Tune {
+            workload: "rb-gauss-seidel".into(),
+            optimizer: "csa".into(),
+            num_opt: 2,
+            max_iter: 3,
+            ignore: 0,
+            seed: 7,
+            single_mode: true,
+            joint: false,
+            objective: "cheapest".into(),
+            weights: None,
+        })
+        .is_err());
+        // The PJRT variant workloads stay scalar-only.
+        assert!(execute(Command::Tune {
+            workload: "xla-rb".into(),
+            optimizer: "csa".into(),
+            num_opt: 2,
+            max_iter: 3,
+            ignore: 0,
+            seed: 7,
+            single_mode: false,
+            joint: false,
+            objective: "cheapest".into(),
+            weights: None,
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn adaptive_run_with_objective_reports_a_front() {
+        let out = execute(Command::AdaptiveRun {
+            workload: "rb-gauss-seidel".into(),
+            joint: false,
+            num_opt: 2,
+            max_iter: 2,
+            seed: 7,
+            socket: None,
+            registry: None,
+            no_table: false,
+            objective: "cheapest".into(),
+            weights: None,
+        })
+        .unwrap();
+        assert!(out.contains("converged cell = "), "{out}");
+        assert!(out.contains("objective: cheapest"), "{out}");
+        assert!(out.contains("pareto front"), "{out}");
     }
 
     #[test]
@@ -1327,6 +1690,8 @@ mod tests {
             registry: registry.clone(),
             joint: false,
             workload: None,
+            objective: "scalar".into(),
+            weights: None,
         })
         .unwrap();
         assert!(out.contains("4 sessions"), "{out}");
@@ -1406,6 +1771,8 @@ mod tests {
                 socket: None,
                 registry: None,
                 no_table: false,
+                objective: "scalar".into(),
+                weights: None,
             }
         );
         match parse(&v(&[
@@ -1497,6 +1864,8 @@ mod tests {
             socket: None,
             registry: None,
             no_table: false,
+            objective: "scalar".into(),
+            weights: None,
         })
         .unwrap();
         assert!(out.contains("converged cell = "), "{out}");
@@ -1514,6 +1883,8 @@ mod tests {
             socket: None,
             registry: None,
             no_table: false,
+            objective: "scalar".into(),
+            weights: None,
         })
         .is_err());
     }
@@ -1536,6 +1907,8 @@ mod tests {
                 socket: None,
                 registry: Some(registry.clone()),
                 no_table,
+                objective: "scalar".into(),
+                weights: None,
             })
             .unwrap()
         };
@@ -1646,6 +2019,8 @@ mod tests {
             registry: registry.clone(),
             joint: true,
             workload: None,
+            objective: "scalar".into(),
+            weights: None,
         })
         .unwrap();
         assert!(out.contains("synthetic-joint"), "{out}");
@@ -1689,6 +2064,8 @@ mod tests {
             registry: registry.clone(),
             joint: false,
             workload: None,
+            objective: "scalar".into(),
+            weights: None,
         })
         .unwrap();
         assert!(out.contains("4 sessions"), "{out}");
@@ -1851,6 +2228,8 @@ mod tests {
             workload: None,
             joint: false,
             fresh: false,
+            objective: "scalar".into(),
+            weights: None,
         })
         .unwrap();
         assert!(out.contains("session cli-e2e"), "{out}");

@@ -31,7 +31,15 @@
 //! `run_point()`, and the generic adapters
 //! ([`adaptive::TunedSpace::run_workload`], named service sessions, the
 //! registry-generated bench suites) tune any `workloads::NAMES` entry
-//! with no per-workload wiring. The [`service::daemon`] module keeps the
+//! with no per-workload wiring. On top of the typed spaces, the
+//! [`space::objective`] layer makes tuning **multi-objective and
+//! dependency-aware**: candidates measure a [`space::CostVector`]
+//! (median, p95, efficiency proxy) scalarized through named presets
+//! (`--objective fastest-stable|cheapest`), each session keeps a bounded
+//! dominance-pruned [`space::ParetoFront`], and conditional dimensions
+//! ([`space::Condition`]) collapse dead cells (a `j_block` under an
+//! unblocked schedule) onto one cache entry at the codec boundary so
+//! optimizers never burn evaluations on them. The [`service::daemon`] module keeps the
 //! whole stack **resident**: `patsma daemon start` serves length-prefixed
 //! [`service::proto`] records over a unix socket from an N-way sharded
 //! session map ([`service::shard`]), with periodic registry snapshots and

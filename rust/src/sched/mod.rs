@@ -192,6 +192,19 @@ impl Schedule {
         SearchSpace::new(Self::joint_dims(1, max_chunk.max(1) as i64))
     }
 
+    /// [`joint_space`](Self::joint_space) with the chunk dimension made
+    /// *conditional* on the kind: plain `static` (kind bin 0) ignores its
+    /// chunk, so every `(static, chunk)` cell is the same measurement. The
+    /// conditional space collapses that dead slab onto the single
+    /// `(static, chunk=1)` cell at the codec boundary
+    /// ([`crate::space::Condition`]) — the optimizer stops spending
+    /// evaluations distinguishing cells the executor cannot tell apart.
+    pub fn conditional_joint_space(max_chunk: usize) -> SearchSpace {
+        // Chunk active for static-chunk/dynamic/guided (kind bins 1..=3).
+        SearchSpace::new(Self::joint_dims(1, max_chunk.max(1) as i64))
+            .with_condition(1, 0, &[1, 2, 3])
+    }
+
     /// The legacy two-dimensional `(kind, chunk)` space, kept for synthetic
     /// landscapes and exhaustive-grid pins whose per-dimension lattices
     /// must stay comparable to a chunk-only scan. [`Self::from_joint`] and
@@ -333,6 +346,22 @@ mod tests {
         let hi = Schedule::from_joint(&space.decode_unit(&[0.6, 42.0, 0.5, 0.5]));
         assert_eq!(lo, Schedule::Dynamic(1));
         assert_eq!(hi, Schedule::Dynamic(16));
+    }
+
+    #[test]
+    fn conditional_joint_space_collapses_static_chunks() {
+        let space = Schedule::conditional_joint_space(64);
+        assert!(space.has_conditions());
+        // Every chunk coordinate under plain static is the same cell…
+        let a = space.decode_unit(&[0.1, 0.2, 0.5, 0.5]);
+        let b = space.decode_unit(&[0.1, 0.9, 0.5, 0.5]);
+        assert_eq!(Schedule::from_joint(&a), Schedule::Static);
+        assert_eq!(a.key(), b.key());
+        // …while chunked kinds keep their full chunk range.
+        let c = space.decode_unit(&[0.6, 0.2, 0.5, 0.5]);
+        let d = space.decode_unit(&[0.6, 0.9, 0.5, 0.5]);
+        assert_ne!(c.key(), d.key());
+        assert!(matches!(Schedule::from_joint(&c), Schedule::Dynamic(_)));
     }
 
     #[test]

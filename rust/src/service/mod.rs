@@ -82,7 +82,7 @@ pub mod state;
 pub use cache::{fingerprint_str, CacheStats, DEFAULT_CACHE_CAP, PointCache};
 pub use daemon::{DaemonClient, DaemonConfig, DaemonHandle, DrainSummary};
 pub use proto::{Request, Response};
-pub use registry::{ServiceReport, SessionReport};
+pub use registry::{ParetoRecord, ServiceReport, SessionReport};
 pub use shard::{DEFAULT_SHARDS, SessionEntry, ShardedSessions};
 pub use state::{EnvFingerprint, SessionState};
 
@@ -92,10 +92,11 @@ use crate::optimizer::{
     PsoConfig, RandomSearch, SaConfig, SimulatedAnnealing,
 };
 use crate::sched::{Schedule, ThreadPool};
-use crate::space::{Dim, SearchSpace};
+use crate::space::{CostVector, Dim, MultiObjective, ObjectiveSpec, ParetoFront, SearchSpace};
 use crate::tuner::{quantize_integer, rescale_internal};
 use crate::workloads::{self, synthetic, Workload};
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -427,6 +428,11 @@ pub struct SessionSpec {
     /// belong to the same workload fingerprint; optimizers that cannot
     /// consume the snapshot fall back to a cold start.
     pub warm: Option<SessionState>,
+    /// What "best" means: the scalarization applied to each candidate's
+    /// [`CostVector`]. The default scalar spec reproduces single-objective
+    /// behaviour bit-for-bit; non-scalar sessions also report a bounded
+    /// Pareto front ([`registry::ParetoRecord`]).
+    pub objective: ObjectiveSpec,
 }
 
 impl SessionSpec {
@@ -448,6 +454,7 @@ impl SessionSpec {
             max_iter: 8,
             seed,
             warm: None,
+            objective: ObjectiveSpec::default(),
         }
     }
 
@@ -502,6 +509,14 @@ impl SessionSpec {
         self
     }
 
+    /// Builder-style objective override: which scalarization of each
+    /// candidate's cost vector the session minimises (and, when
+    /// non-scalar, whose Pareto front it reports).
+    pub fn with_objective(mut self, objective: ObjectiveSpec) -> Self {
+        self.objective = objective;
+        self
+    }
+
     /// Builder-style warm start: seed the session's optimizer from a
     /// persisted state (see module docs). The state must carry the same
     /// workload fingerprint — [`validate`](Self::validate) rejects the spec
@@ -519,11 +534,20 @@ impl SessionSpec {
     /// sessions may share entries regardless of it.
     pub fn fingerprint(&self) -> u64 {
         match &self.workload {
-            WorkloadSpec::Named(_) | WorkloadSpec::NamedJoint(_) => fingerprint_str(&format!(
-                "{}/ignore={}",
-                self.workload.descriptor(),
-                self.ignore
-            )),
+            WorkloadSpec::Named(_) | WorkloadSpec::NamedJoint(_) => {
+                let mut key = format!("{}/ignore={}", self.workload.descriptor(), self.ignore);
+                // Measured workloads cache the *scalarized* cost, so what a
+                // cached value means depends on the objective; pure targets
+                // cache the raw landscape value and scalarize outside the
+                // cache, sharing entries across objectives. Scalar specs
+                // skip the segment so pre-objective fingerprints (and
+                // persisted states keyed by them) stay stable.
+                if !self.objective.is_scalar() {
+                    key.push_str("/objective=");
+                    key.push_str(&self.objective.descriptor());
+                }
+                fingerprint_str(&key)
+            }
             // Pure landscapes (plain and joint): ignore is a no-op.
             _ => self.workload.fingerprint(),
         }
@@ -536,6 +560,11 @@ impl SessionSpec {
         }
         if self.num_opt == 0 {
             bail!("session {}: num_opt must be >= 1", self.id);
+        }
+        // Weights can be poked directly into the public field, bypassing
+        // the validated `ObjectiveSpec::with_weights` constructor.
+        if let Err(e) = self.objective.weights.validate() {
+            bail!("session {}: {e}", self.id);
         }
         match &self.workload {
             WorkloadSpec::Synthetic { dim, lo, hi, .. } => {
@@ -711,6 +740,13 @@ pub fn plan_retune(
         let optimizer = OptimizerSpec::parse(&st.optimizer)
             .with_context(|| format!("state {}", st.id))?;
         let max_iter = (st.max_iter.saturating_mul(budget_pct as usize) / 100).max(2);
+        // Non-scalar sessions persist their objective descriptor as a state
+        // extra; reconstructing it here keeps the warm fingerprint valid.
+        let objective = match st.extra.iter().find(|(k, _)| k == "objective") {
+            Some((_, d)) => ObjectiveSpec::parse_descriptor(d)
+                .map_err(|e| anyhow::anyhow!("state {}: {e}", st.id))?,
+            None => ObjectiveSpec::default(),
+        };
         let spec = SessionSpec {
             id: st.id.clone(),
             workload,
@@ -719,6 +755,7 @@ pub fn plan_retune(
             num_opt: st.num_opt,
             max_iter,
             seed: st.seed,
+            objective,
             warm: Some(st.clone()),
         };
         spec.validate().with_context(|| format!("state {}", st.id))?;
@@ -750,6 +787,9 @@ pub struct TuningService {
     /// Registry record lines from newer writers, carried through snapshots
     /// verbatim (forward compatibility).
     extras: Mutex<Vec<String>>,
+    /// Latest Pareto front per session id (non-scalar objectives only),
+    /// flattened into `pareto` registry records on every report.
+    fronts: Mutex<BTreeMap<String, Vec<registry::ParetoRecord>>>,
     draining: AtomicBool,
 }
 
@@ -772,6 +812,7 @@ impl TuningService {
             sessions: ShardedSessions::new(shards, EnvFingerprint::current().hash),
             table: SharedTunedTable::new(),
             extras: Mutex::new(Vec::new()),
+            fronts: Mutex::new(BTreeMap::new()),
             draining: AtomicBool::new(false),
         }
     }
@@ -827,6 +868,15 @@ impl TuningService {
             if let Some(st) = &outcome.state {
                 batch_states.push(st.clone());
             }
+            if !outcome.front.is_empty() {
+                let records = outcome
+                    .front
+                    .entries()
+                    .iter()
+                    .map(|e| registry::ParetoRecord::from_entry(&spec.id, e))
+                    .collect();
+                self.fronts.lock().unwrap().insert(spec.id.clone(), records);
+            }
             // Completed sessions answer later matching requests without a
             // re-run (the daemon's converged read fast path).
             self.sessions.insert(SessionEntry {
@@ -842,8 +892,19 @@ impl TuningService {
             states: batch_states,
             cache: self.cache.stats(),
             table: self.table.entries(),
+            pareto: self.pareto_records(),
             extras: self.extras.lock().unwrap().clone(),
         })
+    }
+
+    /// The latest persisted Pareto records, flattened in session-id order.
+    fn pareto_records(&self) -> Vec<registry::ParetoRecord> {
+        self.fronts
+            .lock()
+            .unwrap()
+            .values()
+            .flat_map(|records| records.iter().cloned())
+            .collect()
     }
 
     /// Everything this service has run so far, with current cache counters
@@ -857,6 +918,7 @@ impl TuningService {
             states,
             cache: self.cache.stats(),
             table: self.table.entries(),
+            pareto: self.pareto_records(),
             extras: self.extras.lock().unwrap().clone(),
         }
     }
@@ -872,6 +934,7 @@ impl TuningService {
             states,
             cache: self.cache.stats(),
             table: self.table.entries(),
+            pareto: self.pareto_records(),
             extras: self.extras.lock().unwrap().clone(),
         }
     }
@@ -905,6 +968,14 @@ impl TuningService {
             .unwrap()
             .extend(report.sessions.iter().cloned());
         self.table.load(&report.table);
+        if !report.pareto.is_empty() {
+            // Latest front wins per session id, like session states.
+            let mut incoming: BTreeMap<String, Vec<registry::ParetoRecord>> = BTreeMap::new();
+            for p in &report.pareto {
+                incoming.entry(p.session.clone()).or_default().push(p.clone());
+            }
+            self.fronts.lock().unwrap().extend(incoming);
+        }
         self.extras
             .lock()
             .unwrap()
@@ -1066,6 +1137,9 @@ fn quantize_candidate(internal: &[f64], lo: &[f64], hi: &[f64], kind: PointKind)
 struct SessionOutcome {
     report: SessionReport,
     state: Option<SessionState>,
+    /// Non-dominated cells under a non-scalar objective (empty — and never
+    /// offered to — for the scalar default).
+    front: ParetoFront,
 }
 
 /// Drive one session to completion: pull candidate batches from the
@@ -1133,6 +1207,12 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
         .map(|ws| opt.warm_start(&ws.opt_state))
         .unwrap_or(false);
 
+    // Non-scalar sessions accumulate a Pareto front over cache *misses*;
+    // the scalar default constructs nothing and keeps the seed's exact
+    // single-objective cost path.
+    let cores = pool.threads().max(1);
+    let mut mo = (!spec.objective.is_scalar()).then(|| MultiObjective::new(spec.objective));
+
     let mut best: Option<(Vec<f64>, f64)> = None;
     let mut cache_hits = 0u64;
     let mut cache_misses = 0u64;
@@ -1146,6 +1226,10 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
         }
         let points: Vec<Vec<f64>> = batch.iter().map(|cand| domain.key(cand)).collect();
         let mut hit_flags = vec![false; points.len()];
+        // Measured-target cost vectors captured alongside the scalarized
+        // cache value (filled only on misses of non-scalar sessions; pure
+        // targets derive theirs from the raw landscape value instead).
+        let mut vectors: Vec<Option<CostVector>> = Vec::new();
         costs = match &mut target {
             Target::Pure(pure) => {
                 let pure = *pure;
@@ -1172,21 +1256,44 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
                 .iter()
                 .enumerate()
                 .map(|(i, point)| {
+                    let mut vector: Option<CostVector> = None;
                     let (cost, hit) = cache.get_or_compute(fingerprint, point, || {
                         // Exact inverse for keys produced by decoding this
                         // space — the cell the application is handed *is*
                         // the cache key (typed, kind included).
                         let typed = space.point_from_key(point);
-                        // The ignore protocol (§2.3): run `ignore`
-                        // stabilisation iterations, measure the last one.
-                        let mut measured = 0.0;
-                        for _ in 0..=spec.ignore {
-                            let t = Instant::now();
-                            let _ = workload.run_point(&typed);
-                            measured = t.elapsed().as_secs_f64();
+                        if mo.is_some() {
+                            // Non-scalar sessions keep *every* stabilisation
+                            // sample: the spread across the `ignore + 1`
+                            // runs is the p95 signal. The cached value is
+                            // the scalarized cost (the fingerprint already
+                            // carries the objective descriptor).
+                            let mut samples = Vec::with_capacity(spec.ignore + 1);
+                            for _ in 0..=spec.ignore {
+                                let t = Instant::now();
+                                let _ = workload.run_point(&typed);
+                                // Coarse timers report 0 for tiny cells;
+                                // clamp so the vector stays positive.
+                                samples
+                                    .push(t.elapsed().as_secs_f64().max(f64::MIN_POSITIVE));
+                            }
+                            let v = CostVector::from_samples(&samples, 1.0, cores)
+                                .expect("clamped samples are finite and positive");
+                            vector = Some(v);
+                            spec.objective.scalarize(&v)
+                        } else {
+                            // The ignore protocol (§2.3): run `ignore`
+                            // stabilisation iterations, measure the last one.
+                            let mut measured = 0.0;
+                            for _ in 0..=spec.ignore {
+                                let t = Instant::now();
+                                let _ = workload.run_point(&typed);
+                                measured = t.elapsed().as_secs_f64();
+                            }
+                            measured
                         }
-                        measured
                     });
+                    vectors.push(vector);
                     hit_flags[i] = hit;
                     cost
                 })
@@ -1205,6 +1312,28 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
                     Target::Pure(_) => 1,
                     Target::Measured { .. } => (spec.ignore as u64) + 1,
                 };
+            }
+            if let Some(mo) = &mut mo {
+                match &target {
+                    // Pure landscapes cache the *raw* value (shared across
+                    // objectives); scalarize outside the cache and offer
+                    // fresh evaluations to the front.
+                    Target::Pure(_) => {
+                        let vector = CostVector::from_scalar(costs[i]);
+                        costs[i] = if hit_flags[i] {
+                            spec.objective.scalarize(&vector)
+                        } else {
+                            mo.observe(point.clone(), domain.label(point), vector)
+                        };
+                    }
+                    // Measured values are cached already-scalarized; only a
+                    // fresh measurement carries a vector to offer.
+                    Target::Measured { .. } => {
+                        if let Some(v) = vectors.get(i).copied().flatten() {
+                            mo.observe(point.clone(), domain.label(point), v);
+                        }
+                    }
+                }
             }
             let cost = costs[i];
             if best.as_ref().map(|(_, c)| cost < *c).unwrap_or(true) {
@@ -1239,7 +1368,13 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
         best_point: best_point.clone(),
         best_cost,
         opt_state,
-        extra: Vec::new(),
+        // The objective descriptor rides along so `plan_retune` can rebuild
+        // the spec (and its fingerprint) from persisted state alone.
+        extra: if spec.objective.is_scalar() {
+            Vec::new()
+        } else {
+            vec![("objective".to_string(), spec.objective.descriptor())]
+        },
     });
     SessionOutcome {
         report: SessionReport {
@@ -1258,6 +1393,9 @@ fn run_session(spec: &SessionSpec, cache: &PointCache, pool: &ThreadPool) -> Ses
             extra: Vec::new(),
         },
         state,
+        front: mo
+            .map(|m| m.front().clone())
+            .unwrap_or_else(|| ParetoFront::new(1)),
     }
 }
 

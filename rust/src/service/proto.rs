@@ -18,10 +18,17 @@
 //! ```text
 //! ping v=1
 //! tune id=s0 workload=synthetic/opt=48/... optimizer=csa ignore=0 num_opt=4 max_iter=8 seed=42 fresh=0
+//! tune id=s1 workload=... optimizer=csa ignore=2 num_opt=4 max_iter=8 seed=42 fresh=0 objective=fastest-stable w_median=1 w_p95=2 w_eff=0
 //! report
 //! retune budget=50 force=0
 //! shutdown
 //! ```
+//!
+//! The optional `objective`/`w_median`/`w_p95`/`w_eff` keys select a
+//! non-scalar tuning objective (see [`crate::space::ObjectiveSpec`]);
+//! scalar sessions omit them, keeping the pre-objective frame shape.
+//! Duplicated or out-of-range objective keys are torn/forged frames and
+//! fail as typed [`PatsmaError::Protocol`].
 //!
 //! Responses mirror the shape (`pong ...`, `session cached=0 id=...`,
 //! `retuned drifted=a,b fresh=-`, `draining`, `error <message>`); the
@@ -38,6 +45,7 @@ use super::registry::{kv_get, kv_num, kv_opt, split_kv};
 use super::{OptimizerSpec, ServiceReport, SessionReport, SessionSpec, WorkloadSpec};
 use crate::adaptive::table::{ContextKey, TableEntry};
 use crate::error::PatsmaError;
+use crate::space::ObjectiveSpec;
 use std::io::{Read, Write};
 
 /// Protocol version spoken by this build (carried in `ping`/`pong`).
@@ -175,17 +183,31 @@ impl Request {
     pub fn to_wire(&self) -> String {
         match self {
             Request::Ping => format!("ping v={PROTO_VERSION}"),
-            Request::Tune { spec, fresh } => format!(
-                "tune id={} workload={} optimizer={} ignore={} num_opt={} max_iter={} seed={} fresh={}",
-                spec.id,
-                spec.workload.descriptor(),
-                spec.optimizer.name(),
-                spec.ignore,
-                spec.num_opt,
-                spec.max_iter,
-                spec.seed,
-                u8::from(*fresh),
-            ),
+            Request::Tune { spec, fresh } => {
+                let mut wire = format!(
+                    "tune id={} workload={} optimizer={} ignore={} num_opt={} max_iter={} seed={} fresh={}",
+                    spec.id,
+                    spec.workload.descriptor(),
+                    spec.optimizer.name(),
+                    spec.ignore,
+                    spec.num_opt,
+                    spec.max_iter,
+                    spec.seed,
+                    u8::from(*fresh),
+                );
+                // Scalar sessions keep the pre-objective frame shape, so an
+                // old daemon still parses them.
+                if !spec.objective.is_scalar() {
+                    wire.push_str(&format!(
+                        " objective={} w_median={} w_p95={} w_eff={}",
+                        spec.objective.preset.name(),
+                        spec.objective.weights.median,
+                        spec.objective.weights.p95,
+                        spec.objective.weights.efficiency,
+                    ));
+                }
+                wire
+            }
             Request::Report => "report".to_string(),
             Request::Retune { budget, force } => {
                 format!("retune budget={budget} force={}", u8::from(*force))
@@ -219,6 +241,45 @@ impl Request {
                     kv_num(&pairs, key)
                         .map_err(|e| PatsmaError::Protocol(format!("tune: {e}")))
                 };
+                // Optional multi-objective keys (absent ⇒ scalar). A
+                // duplicate is a torn or forged frame, not a leniency
+                // candidate — `kv_opt` would silently answer with the
+                // first and drop the contradiction.
+                for key in ["objective", "w_median", "w_p95", "w_eff"] {
+                    if pairs.iter().filter(|(k, _)| k == key).count() > 1 {
+                        return Err(PatsmaError::Protocol(format!(
+                            "tune: duplicate {key} key"
+                        )));
+                    }
+                }
+                let base = match kv_opt(&pairs, "objective") {
+                    Some(name) => ObjectiveSpec::parse(name)
+                        .map_err(|e| PatsmaError::Protocol(format!("tune: {e}")))?,
+                    None => ObjectiveSpec::default(),
+                };
+                let mut weights = base.weights;
+                let weight = |key: &str| -> Result<Option<f64>, PatsmaError> {
+                    match kv_opt(&pairs, key) {
+                        None => Ok(None),
+                        Some(v) => v.parse::<f64>().map(Some).map_err(|_| {
+                            PatsmaError::Protocol(format!("tune: bad {key} {v:?}"))
+                        }),
+                    }
+                };
+                if let Some(w) = weight("w_median")? {
+                    weights.median = w;
+                }
+                if let Some(w) = weight("w_p95")? {
+                    weights.p95 = w;
+                }
+                if let Some(w) = weight("w_eff")? {
+                    weights.efficiency = w;
+                }
+                // Re-validate: NaN, negative or oversized weights from a
+                // corrupt frame fail typed here, never poison a session.
+                let objective = base
+                    .with_weights(weights)
+                    .map_err(|e| PatsmaError::Protocol(format!("tune: {e}")))?;
                 let spec = SessionSpec {
                     id: kv_get(&pairs, "id")
                         .map_err(|e| PatsmaError::Protocol(format!("tune: {e}")))?
@@ -229,6 +290,7 @@ impl Request {
                     num_opt: num("num_opt")? as usize,
                     max_iter: num("max_iter")? as usize,
                     seed: num("seed")?,
+                    objective,
                     warm: None,
                 };
                 Ok(Request::Tune {
@@ -531,7 +593,8 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<String>, PatsmaError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::service::CacheStats;
+    use crate::service::{CacheStats, ParetoRecord};
+    use crate::space::ObjectiveWeights;
 
     fn sample_report() -> SessionReport {
         SessionReport {
@@ -557,6 +620,7 @@ mod tests {
             bucket: 20,
             threads: 8,
             env: 0xD00D,
+            objective: 0,
         }
     }
 
@@ -584,6 +648,20 @@ mod tests {
                 spec: SessionSpec::synthetic_joint("j", 48.0, 7)
                     .with_optimizer(OptimizerSpec::Pso)
                     .with_budget(5, 16),
+                fresh: true,
+            },
+            Request::Tune {
+                spec: SessionSpec::synthetic("mo", 48.0, 7)
+                    .with_objective(ObjectiveSpec::parse("fastest-stable").unwrap()),
+                fresh: false,
+            },
+            Request::Tune {
+                spec: SessionSpec::synthetic("mow", 48.0, 7).with_objective(
+                    ObjectiveSpec::parse("cheapest")
+                        .unwrap()
+                        .with_weights(ObjectiveWeights::new(0.25, 1.75, 0.125).unwrap())
+                        .unwrap(),
+                ),
                 fresh: true,
             },
             Request::Report,
@@ -628,6 +706,15 @@ mod tests {
                     cap: 65_536,
                 },
                 table: vec![sample_entry()],
+                pareto: vec![ParetoRecord {
+                    session: "s0".into(),
+                    cell: vec![2.0, 23.0],
+                    label: Some("dynamic,23".into()),
+                    median: 0.002,
+                    p95: 0.0025,
+                    efficiency: 50.0,
+                    scalar: 0.007,
+                }],
                 extras: Vec::new(),
             }),
             Response::Retuned {
@@ -674,19 +761,34 @@ mod tests {
 
     #[test]
     fn malformed_records_are_protocol_errors() {
+        let good_tune = "tune id=t workload=synthetic/opt=48/dim=1/lo=1/hi=128/kind=int \
+                         optimizer=csa ignore=0 num_opt=4 max_iter=8 seed=1";
         for bad in [
-            "",
-            "frobnicate x=1",
-            "tune id=only",
-            "tune id=t workload=garbage optimizer=csa ignore=0 num_opt=4 max_iter=8 seed=1",
-            "retune budget=NaN",
+            "".to_string(),
+            "frobnicate x=1".to_string(),
+            "tune id=only".to_string(),
+            "tune id=t workload=garbage optimizer=csa ignore=0 num_opt=4 max_iter=8 seed=1"
+                .to_string(),
+            "retune budget=NaN".to_string(),
+            // Objective keys: unknown preset, unparsable / out-of-range /
+            // NaN weights, duplicated keys (a torn frame).
+            format!("{good_tune} objective=bogus"),
+            format!("{good_tune} w_median=abc"),
+            format!("{good_tune} w_median=-1"),
+            format!("{good_tune} w_p95=NaN"),
+            format!("{good_tune} w_eff=1e99"),
+            format!("{good_tune} objective=cheapest w_eff=0 w_median=0 w_p95=0"),
+            format!("{good_tune} w_median=1 w_median=2"),
+            format!("{good_tune} objective=cheapest objective=scalar"),
         ] {
-            let err = Request::from_wire(bad).unwrap_err();
+            let err = Request::from_wire(&bad).unwrap_err();
             assert!(
                 matches!(err, PatsmaError::Protocol(_)),
                 "{bad:?} gave {err}"
             );
         }
+        // The same line without the poison parses.
+        assert!(Request::from_wire(good_tune).is_ok());
         assert!(Response::from_wire("pong v=notanumber").is_err());
     }
 
@@ -897,5 +999,60 @@ mod tests {
                 ),
             }
         }
+    }
+
+    #[test]
+    fn tune_objective_corpus_parses_or_fails_typed() {
+        // Structured companion to the random-bytes corpus: well-framed
+        // `tune` lines whose objective/weight segments are drawn from a
+        // pool of valid, hostile and duplicated values. Every line must
+        // parse or fail as a typed Protocol error — and when it parses, the
+        // weights must have survived validation.
+        let segments = [
+            "",
+            " objective=fastest-stable",
+            " objective=cheapest",
+            " objective=scalar",
+            " objective=bogus",
+            " objective=",
+            " w_median=1",
+            " w_median=0.5 w_p95=2.5",
+            " w_median=-1",
+            " w_median=abc",
+            " w_p95=NaN",
+            " w_p95=inf",
+            " w_eff=1e99",
+            " w_eff=1e-9",
+            " w_median=1 w_median=2",
+            " objective=cheapest objective=cheapest",
+            " w_median=0 w_p95=0 w_eff=0",
+            " objective=fastest-stable w_eff=0.125",
+        ];
+        let mut rng = crate::rng::Xoshiro256pp::new(0x0B1E_C71F);
+        let mut parsed_ok = 0u32;
+        for case in 0..500 {
+            let mut line = format!(
+                "tune id=c{case} workload=synthetic/opt=48/dim=1/lo=1/hi=128/kind=int \
+                 optimizer=csa ignore=0 num_opt=4 max_iter=8 seed={case}"
+            );
+            for _ in 0..rng.next_below(3) {
+                line.push_str(segments[rng.next_below(segments.len() as u64) as usize]);
+            }
+            match Request::from_wire(&line) {
+                Ok(Request::Tune { spec, .. }) => {
+                    parsed_ok += 1;
+                    assert!(
+                        spec.objective.weights.validate().is_ok(),
+                        "case {case}: invalid weights survived {line:?}"
+                    );
+                }
+                Ok(other) => panic!("case {case}: {other:?} from a tune line"),
+                Err(e) => assert!(
+                    matches!(e, PatsmaError::Protocol(_)),
+                    "case {case}: {line:?} gave {e}"
+                ),
+            }
+        }
+        assert!(parsed_ok > 50, "corpus must exercise the accept path");
     }
 }

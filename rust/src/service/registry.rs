@@ -48,6 +48,7 @@ use super::cache::CacheStats;
 use super::state::SessionState;
 use crate::adaptive::table::TableEntry;
 use crate::error::PatsmaError;
+use crate::space::FrontEntry;
 use std::path::Path;
 
 /// Magic first line of a v2 registry file.
@@ -154,6 +155,84 @@ impl SessionReport {
     }
 }
 
+/// One non-dominated cell of a session's Pareto front, as persisted in the
+/// registry (`pareto` records, one line per cell). Older builds see an
+/// unknown record type and carry the lines verbatim in
+/// [`ServiceReport::extras`], so a snapshot through an old binary does not
+/// destroy a newer writer's fronts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoRecord {
+    /// Owning session id.
+    pub session: String,
+    /// The cell's cache-key coordinates.
+    pub cell: Vec<f64>,
+    /// Typed rendering of the cell when the space is known (`dynamic,32`).
+    pub label: Option<String>,
+    /// Median cost of the cell's samples.
+    pub median: f64,
+    /// p95 tail cost.
+    pub p95: f64,
+    /// Efficiency proxy (work per core-second; higher is better).
+    pub efficiency: f64,
+    /// Scalarized cost under the owning session's objective weights.
+    pub scalar: f64,
+}
+
+impl ParetoRecord {
+    /// A record from one front entry of session `session`.
+    pub fn from_entry(session: &str, entry: &FrontEntry) -> Self {
+        Self {
+            session: session.to_string(),
+            cell: entry.key.clone(),
+            label: entry.label.clone(),
+            median: entry.cost.median,
+            p95: entry.cost.p95,
+            efficiency: entry.cost.efficiency,
+            scalar: entry.scalar,
+        }
+    }
+
+    /// Serialise to the v2 `key=value` pairs (optional `label` last).
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let mut kv = vec![
+            ("id".to_string(), self.session.clone()),
+            ("cell".to_string(), fmt_point(&self.cell)),
+            ("median".to_string(), format!("{}", self.median)),
+            ("p95".to_string(), format!("{}", self.p95)),
+            ("eff".to_string(), format!("{}", self.efficiency)),
+            ("scalar".to_string(), format!("{}", self.scalar)),
+        ];
+        if let Some(label) = &self.label {
+            kv.push(("label".to_string(), label.clone()));
+        }
+        kv
+    }
+
+    /// The full registry line (`pareto id=... cell=... ...`).
+    pub fn to_record(&self) -> String {
+        let body = self
+            .to_kv()
+            .into_iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!("pareto {body}")
+    }
+
+    /// Parse from v2 `key=value` pairs.
+    pub fn from_kv(pairs: &[(String, String)]) -> Result<Self, PatsmaError> {
+        Ok(Self {
+            session: kv_get(pairs, "id")?.to_string(),
+            cell: parse_point(kv_get(pairs, "cell")?)?,
+            label: kv_opt(pairs, "label").map(str::to_string),
+            median: kv_num(pairs, "median")?,
+            p95: kv_num(pairs, "p95")?,
+            efficiency: kv_num(pairs, "eff")?,
+            scalar: kv_num(pairs, "scalar")?,
+        })
+    }
+}
+
 /// A batch of session results plus persisted states and cache counters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServiceReport {
@@ -167,6 +246,10 @@ pub struct ServiceReport {
     /// Converged tuned-table cells (`table` records) keyed by execution
     /// context — what exact-revisit bypass and warm restarts load from.
     pub table: Vec<TableEntry>,
+    /// Pareto-front cells of non-scalar-objective sessions (`pareto`
+    /// records; latest run wins per session id). Empty for scalar-only
+    /// registries, whose files keep their pre-objective shape.
+    pub pareto: Vec<ParetoRecord>,
     /// Record lines of types this build does not recognise but whose bodies
     /// parse as `key=value`; written back verbatim so a newer writer's
     /// records survive a snapshot by this build.
@@ -247,6 +330,20 @@ impl ServiceReport {
             c.evictions,
             self.states.len(),
         ));
+        if !self.pareto.is_empty() {
+            out.push_str("\npareto fronts (non-dominated cells per session):\n");
+            for p in &self.pareto {
+                out.push_str(&format!(
+                    "  {}: {} median={:.3e} p95={:.3e} eff={:.3e} scalar={:.3e}\n",
+                    p.session,
+                    p.label.clone().unwrap_or_else(|| fmt_point(&p.cell)),
+                    p.median,
+                    p.p95,
+                    p.efficiency,
+                    p.scalar,
+                ));
+            }
+        }
         out
     }
 
@@ -281,6 +378,10 @@ impl ServiceReport {
         }
         for entry in &self.table {
             out.push_str(&entry.to_record());
+            out.push('\n');
+        }
+        for p in &self.pareto {
+            out.push_str(&p.to_record());
             out.push('\n');
         }
         for line in &self.extras {
@@ -329,6 +430,7 @@ impl ServiceReport {
         let mut sessions = Vec::new();
         let mut states = Vec::new();
         let mut table = Vec::new();
+        let mut pareto = Vec::new();
         let mut extras = Vec::new();
         let mut skipped = Vec::new();
         for (lineno, line) in lines.enumerate() {
@@ -345,6 +447,7 @@ impl ServiceReport {
                     &mut sessions,
                     &mut states,
                     &mut table,
+                    &mut pareto,
                     &mut extras,
                 )
             };
@@ -362,6 +465,7 @@ impl ServiceReport {
                 states,
                 cache,
                 table,
+                pareto,
                 extras,
             },
             skipped,
@@ -445,6 +549,7 @@ fn parse_v2_record(
     sessions: &mut Vec<SessionReport>,
     states: &mut Vec<SessionState>,
     table: &mut Vec<TableEntry>,
+    pareto: &mut Vec<ParetoRecord>,
     extras: &mut Vec<String>,
 ) -> Result<(), PatsmaError> {
     let tokens: Vec<&str> = line.split_whitespace().collect();
@@ -472,6 +577,9 @@ fn parse_v2_record(
         }
         "table" => {
             table.push(TableEntry::from_kv(&pairs)?);
+        }
+        "pareto" => {
+            pareto.push(ParetoRecord::from_kv(&pairs)?);
         }
         // A record type from a newer writer. The body already parsed as
         // key=value above (binary junk still errors), so carry the line
@@ -608,6 +716,7 @@ mod tests {
                     bucket: 20,
                     threads: 8,
                     env: 0xD00D,
+                    objective: 0,
                 },
                 cell: TunedCell {
                     point: vec![48.0, 0.25],
@@ -616,6 +725,26 @@ mod tests {
                     label: Some("dynamic,chunk=48".into()),
                 },
             }],
+            pareto: vec![
+                ParetoRecord {
+                    session: "s1".into(),
+                    cell: vec![2.0, 23.0],
+                    label: Some("dynamic,23".into()),
+                    median: 0.002,
+                    p95: 0.0025,
+                    efficiency: 50.0,
+                    scalar: 0.007,
+                },
+                ParetoRecord {
+                    session: "s1".into(),
+                    cell: vec![0.0, 64.0],
+                    label: None,
+                    median: 0.003,
+                    p95: 0.0031,
+                    efficiency: 80.645,
+                    scalar: 0.0092,
+                },
+            ],
             extras: Vec::new(),
         }
     }
@@ -783,6 +912,45 @@ mod tests {
             "{err}"
         );
         assert!(err.to_string().contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn pareto_records_roundtrip_and_torn_lines_are_typed_errors() {
+        // The codec itself (label present and absent) rides through
+        // text_roundtrip_is_lossless via sample(); pin the failure shape of
+        // torn lines here: strict parse fails with the line number, lenient
+        // parse skips the torn record and keeps the intact one.
+        let text = "# patsma-service-registry v2\n\
+                    cache hits=0 misses=0 entries=0 evictions=0 cap=16\n\
+                    pareto id=s1 cell=2,23 median=0.002 p95=0.0025 eff=50 scalar=0.007\n\
+                    pareto id=s1 cell=0,64 median=NOTANUMBER p95=0.0031\n";
+        let err = ServiceReport::from_text(text).unwrap_err();
+        assert!(
+            matches!(err, PatsmaError::Registry { line: Some(4), .. }),
+            "{err}"
+        );
+        let (r, skipped) = ServiceReport::from_text_lenient(text).unwrap();
+        assert_eq!(skipped.len(), 1, "{skipped:?}");
+        assert_eq!(r.pareto.len(), 1);
+        assert_eq!(r.pareto[0].cell, vec![2.0, 23.0]);
+        assert_eq!(r.pareto[0].label, None);
+        // A truncated record missing required keys is also typed, never a
+        // panic.
+        let torn = "# patsma-service-registry v2\n\
+                    pareto id=s1\n";
+        assert!(matches!(
+            ServiceReport::from_text(torn).unwrap_err(),
+            PatsmaError::Registry { .. }
+        ));
+    }
+
+    #[test]
+    fn render_lists_pareto_fronts() {
+        let text = sample().render();
+        assert!(text.contains("pareto fronts"), "{text}");
+        assert!(text.contains("s1: dynamic,23"), "{text}");
+        // The unlabeled cell falls back to its coordinates.
+        assert!(text.contains("s1: 0,64"), "{text}");
     }
 
     #[test]

@@ -34,6 +34,30 @@
 //! ([`Point::key`]) and the joint `(schedule kind, chunk)` loop surface
 //! ([`crate::sched::Schedule::joint_space`]).
 //!
+//! # Conditional dimensions
+//!
+//! A dimension may be **conditional** on a parent categorical/int
+//! dimension ([`Condition`]): it only *matters* when the parent's decoded
+//! value is in the condition's activation set (e.g. a `j_block` tile size
+//! only matters when the schedule structure is `blocked`). Dead cells are
+//! collapsed at the codec boundary, so the optimizers keep their dense
+//! unit-hypercube view unchanged:
+//!
+//! ```text
+//!        unit cube [0,1]^d                 typed Point
+//!   u_child ∈ [0,1] ──decode──▶  parent active?
+//!                                  ├─ yes → normal Dim::decode(u_child)
+//!                                  └─ no  → Dim::decode(0.0)   (floor cell)
+//!   v_child ──encode──▶ parent active? ── yes → Dim::encode(v)
+//!                                       └─ no  → 0.0
+//! ```
+//!
+//! Every unit coordinate of an inactive child decodes to the *same*
+//! collapsed floor value, so all dead cells share one [`Point::key`] —
+//! one evaluation-cache entry instead of a whole slab of duplicates —
+//! while `decode(encode(p)) == p` stays bit-exact (inactive children
+//! encode to `0.0`, and `decode(0.0)` *is* the collapsed floor).
+//!
 //! # Examples
 //!
 //! Joint `(schedule kind, chunk)` tuning — the categorical and the integer
@@ -77,8 +101,13 @@
 //! assert_eq!(space.decode_unit(&space.encode(&p)), p); // idempotent
 //! ```
 
+pub mod objective;
 pub mod point;
 
+pub use objective::{
+    CostVector, FrontEntry, MultiObjective, ObjectivePreset, ObjectiveSpec, ObjectiveWeights,
+    ParetoFront,
+};
 pub use point::{Point, Value};
 
 use crate::tuner::{quantize_integer, rescale_internal};
@@ -350,10 +379,68 @@ impl Dim {
     }
 }
 
+/// Activation rule for a conditional dimension: the child dimension is
+/// active iff its parent's decoded value ([`Value::as_i64`]; a categorical
+/// parent contributes its index) is one of `values`. See the module docs'
+/// *Conditional dimensions* section for the codec contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Condition {
+    /// Index of the parent dimension (must precede the child and be an
+    /// unconditional `Int` or `Categorical` dimension).
+    pub parent: usize,
+    /// Parent values (int value / categorical index) that activate the
+    /// child.
+    pub values: Vec<i64>,
+}
+
+impl Condition {
+    /// A condition from its parts.
+    pub fn new(parent: usize, values: &[i64]) -> Self {
+        Self {
+            parent,
+            values: values.to_vec(),
+        }
+    }
+
+    /// True when `parent_value` activates the child.
+    #[inline]
+    fn activates(&self, parent_value: &Value) -> bool {
+        self.values.contains(&parent_value.as_i64())
+    }
+
+    /// Descriptor suffix (`@parent:v1,v2`).
+    fn descriptor(&self) -> String {
+        let vals = self
+            .values
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        format!("@{}:{vals}", self.parent)
+    }
+
+    /// Parse the suffix produced by [`descriptor`](Self::descriptor).
+    fn parse_descriptor(text: &str) -> Result<Condition> {
+        let (parent, vals) = text
+            .split_once(':')
+            .with_context(|| format!("bad condition descriptor {text:?}"))?;
+        let parent = parent
+            .parse()
+            .with_context(|| format!("bad condition parent {parent:?}"))?;
+        let values = vals
+            .split(',')
+            .map(|v| v.parse().with_context(|| format!("bad condition value {v:?}")))
+            .collect::<Result<Vec<i64>>>()?;
+        Ok(Condition { parent, values })
+    }
+}
+
 /// A typed, mixed-kind parameter domain (see module docs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchSpace {
     dims: Vec<Dim>,
+    /// Per-dimension activation rule; `None` = unconditional.
+    conditions: Vec<Option<Condition>>,
 }
 
 impl SearchSpace {
@@ -365,13 +452,62 @@ impl SearchSpace {
 
     /// Fallible constructor: validates every dimension's bounds.
     pub fn try_new(dims: Vec<Dim>) -> Result<Self> {
+        let n = dims.len();
+        Self::try_conditional(dims, vec![None; n])
+    }
+
+    /// Fallible constructor with per-dimension activation rules (`None` =
+    /// unconditional). Each condition's parent must precede its child, be
+    /// itself unconditional (one level of nesting — the collapse stays a
+    /// single pass) and be an `Int` or `Categorical` dimension.
+    pub fn try_conditional(dims: Vec<Dim>, conditions: Vec<Option<Condition>>) -> Result<Self> {
         if dims.is_empty() {
             bail!("search space needs at least one dimension");
+        }
+        if conditions.len() != dims.len() {
+            bail!(
+                "condition list length {} != dimension count {}",
+                conditions.len(),
+                dims.len()
+            );
         }
         for (d, dim) in dims.iter().enumerate() {
             dim.check().with_context(|| format!("dimension {d}"))?;
         }
-        Ok(Self { dims })
+        for (d, cond) in conditions.iter().enumerate() {
+            let Some(c) = cond else { continue };
+            if c.parent >= d {
+                bail!("dimension {d}: condition parent {} must precede it", c.parent);
+            }
+            if conditions[c.parent].is_some() {
+                bail!(
+                    "dimension {d}: parent {} is itself conditional \
+                     (conditions nest one level only)",
+                    c.parent
+                );
+            }
+            if !matches!(dims[c.parent], Dim::Int { .. } | Dim::Categorical(_)) {
+                bail!(
+                    "dimension {d}: condition parent {} must be an int or \
+                     categorical dimension",
+                    c.parent
+                );
+            }
+            if c.values.is_empty() {
+                bail!("dimension {d}: condition with no activating values");
+            }
+        }
+        Ok(Self { dims, conditions })
+    }
+
+    /// Builder-style: make dimension `child` conditional on `parent`
+    /// taking one of `values` (panics on invalid wiring — use
+    /// [`try_conditional`](Self::try_conditional) for data-driven
+    /// construction).
+    pub fn with_condition(mut self, child: usize, parent: usize, values: &[i64]) -> Self {
+        assert!(child < self.dims.len(), "child dimension out of range");
+        self.conditions[child] = Some(Condition::new(parent, values));
+        Self::try_conditional(self.dims, self.conditions).expect("invalid condition")
     }
 
     /// The unit hypercube `[0, 1]^dim` as a space of float dimensions (the
@@ -390,18 +526,60 @@ impl SearchSpace {
         self.dims.len()
     }
 
+    /// True when any dimension carries an activation rule.
+    pub fn has_conditions(&self) -> bool {
+        self.conditions.iter().any(Option::is_some)
+    }
+
+    /// Per-dimension activation rules (`None` = unconditional), in
+    /// coordinate order.
+    pub fn conditions(&self) -> &[Option<Condition>] {
+        &self.conditions
+    }
+
+    /// True when dimension `d` is active for point `p` (unconditional
+    /// dimensions always are).
+    pub fn is_active(&self, p: &Point, d: usize) -> bool {
+        match &self.conditions[d] {
+            None => true,
+            Some(c) => c.activates(&p[c.parent]),
+        }
+    }
+
+    /// The value an inactive dimension collapses to: its domain floor,
+    /// `decode(0.0)`.
+    pub fn collapsed_value(&self, d: usize) -> Value {
+        self.dims[d].decode(0.0)
+    }
+
+    /// Collapse inactive dimensions in freshly decoded values onto their
+    /// floor cell (parents are unconditional, so one ordered pass settles
+    /// every child).
+    fn collapse(&self, values: &mut [Value]) {
+        for (d, cond) in self.conditions.iter().enumerate() {
+            if let Some(c) = cond {
+                if !c.activates(&values[c.parent]) {
+                    values[d] = self.collapsed_value(d);
+                }
+            }
+        }
+    }
+
     /// Decode a unit-hypercube candidate into a typed point. Out-of-range
     /// coordinates saturate (clamp to `[0, 1]` before snapping), so any
-    /// `f64` vector decodes to an in-domain point.
+    /// `f64` vector decodes to an in-domain point. Inactive conditional
+    /// dimensions collapse to their floor cell regardless of the raw
+    /// coordinate (module docs, *Conditional dimensions*).
     pub fn decode_unit(&self, unit: &[f64]) -> Point {
         assert_eq!(unit.len(), self.dims.len(), "unit point/dimension mismatch");
-        Point::new(
-            self.dims
-                .iter()
-                .zip(unit)
-                .map(|(d, &u)| d.decode(u))
-                .collect(),
-        )
+        let mut values: Vec<Value> = self
+            .dims
+            .iter()
+            .zip(unit)
+            .map(|(d, &u)| d.decode(u))
+            .collect();
+        self.collapse(&mut values);
+        Point::new(values)
     }
 
     /// Decode a candidate from the optimizers' internal `[-1, 1]^d` box
@@ -412,31 +590,45 @@ impl SearchSpace {
             self.dims.len(),
             "internal point/dimension mismatch"
         );
-        Point::new(
-            self.dims
-                .iter()
-                .zip(internal)
-                .map(|(d, &x)| d.decode(rescale_internal(x, 0.0, 1.0)))
-                .collect(),
-        )
+        let mut values: Vec<Value> = self
+            .dims
+            .iter()
+            .zip(internal)
+            .map(|(d, &x)| d.decode(rescale_internal(x, 0.0, 1.0)))
+            .collect();
+        self.collapse(&mut values);
+        Point::new(values)
     }
 
     /// Encode a typed point into the unit hypercube (saturating; see
-    /// [`Dim::encode`]). `decode_unit(encode(p)) == p` bit-exactly for every
-    /// decoded point `p`.
+    /// [`Dim::encode`]). Inactive conditional dimensions encode to `0.0` —
+    /// the coordinate whose decode is exactly the collapsed floor — so
+    /// `decode_unit(encode(p)) == p` stays bit-exact for every decoded
+    /// point `p`.
     pub fn encode(&self, p: &Point) -> Vec<f64> {
         assert_eq!(p.len(), self.dims.len(), "point/dimension mismatch");
         self.dims
             .iter()
             .zip(p.values())
-            .map(|(d, v)| d.encode(v))
+            .enumerate()
+            .map(|(d, (dim, v))| {
+                if self.is_active(p, d) {
+                    dim.encode(v)
+                } else {
+                    0.0
+                }
+            })
             .collect()
     }
 
-    /// True when every coordinate lies inside its dimension's domain.
+    /// True when every coordinate lies inside its dimension's domain and
+    /// every *inactive* conditional dimension sits on its collapsed floor
+    /// (a dead cell off the floor is not a valid point of this space).
     pub fn contains(&self, p: &Point) -> bool {
         p.len() == self.dims.len()
             && self.dims.iter().zip(p.values()).all(|(d, v)| d.contains(v))
+            && (0..self.dims.len())
+                .all(|d| self.is_active(p, d) || p[d] == self.collapsed_value(d))
     }
 
     /// Rebuild a typed point from its cache-key coordinates
@@ -445,13 +637,14 @@ impl SearchSpace {
     /// (old registries) it lands on the nearest cell.
     pub fn point_from_key(&self, key: &[f64]) -> Point {
         assert_eq!(key.len(), self.dims.len(), "key/dimension mismatch");
-        Point::new(
-            self.dims
-                .iter()
-                .zip(key)
-                .map(|(d, &k)| d.decode(d.encode(&Value::Float(k))))
-                .collect(),
-        )
+        let mut values: Vec<Value> = self
+            .dims
+            .iter()
+            .zip(key)
+            .map(|(d, &k)| d.decode(d.encode(&Value::Float(k))))
+            .collect();
+        self.collapse(&mut values);
+        Point::new(values)
     }
 
     /// Whitespace-free human-readable rendering, categorical values by
@@ -478,18 +671,33 @@ impl SearchSpace {
     pub fn descriptor(&self) -> String {
         self.dims
             .iter()
-            .map(Dim::descriptor)
+            .zip(&self.conditions)
+            .map(|(dim, cond)| match cond {
+                // Category names are [A-Za-z0-9_-], so `@` never collides.
+                Some(c) => format!("{}{}", dim.descriptor(), c.descriptor()),
+                None => dim.descriptor(),
+            })
             .collect::<Vec<_>>()
             .join("+")
     }
 
     /// Parse a [`descriptor`](Self::descriptor) back into a space.
     pub fn parse_descriptor(text: &str) -> Result<SearchSpace> {
-        let dims = text
-            .split('+')
-            .map(Dim::parse_descriptor)
-            .collect::<Result<Vec<_>>>()?;
-        Self::try_new(dims)
+        let mut dims = Vec::new();
+        let mut conditions = Vec::new();
+        for frag in text.split('+') {
+            match frag.split_once('@') {
+                Some((dim, cond)) => {
+                    dims.push(Dim::parse_descriptor(dim)?);
+                    conditions.push(Some(Condition::parse_descriptor(cond)?));
+                }
+                None => {
+                    dims.push(Dim::parse_descriptor(frag)?);
+                    conditions.push(None);
+                }
+            }
+        }
+        Self::try_conditional(dims, conditions)
     }
 
     /// The plain numeric box `(lo, hi)` when *every* dimension is `Int` or
@@ -714,6 +922,132 @@ mod tests {
             hi: 1.0
         }])
         .is_err());
+    }
+
+    /// (structure, chunk, j_block) with j_block active only for blocked.
+    fn conditional() -> SearchSpace {
+        SearchSpace::new(vec![
+            Dim::categorical(&["flat", "blocked"]),
+            Dim::Int { lo: 1, hi: 8 },
+            Dim::Int { lo: 2, hi: 64 },
+        ])
+        .with_condition(2, 0, &[1])
+    }
+
+    #[test]
+    fn inactive_dims_collapse_to_the_floor_cell() {
+        let s = conditional();
+        assert!(s.has_conditions());
+        assert_eq!(s.collapsed_value(2), Value::Int(2));
+        // Any j_block coordinate under the flat structure decodes to the
+        // same collapsed cell — one cache key for the whole dead slab.
+        let keys: Vec<_> = [0.0, 0.3, 0.7, 1.0]
+            .iter()
+            .map(|&u| s.decode_unit(&[0.1, 0.5, u]))
+            .collect();
+        for p in &keys {
+            assert_eq!(p[0], Value::Cat(0));
+            assert_eq!(p[2], Value::Int(2), "dead cell must collapse");
+            assert!(!s.is_active(p, 2));
+            assert!(s.contains(p));
+        }
+        assert!(keys.windows(2).all(|w| w[0].key() == w[1].key()));
+        // Under the blocked structure the same coordinates spread out.
+        let a = s.decode_unit(&[0.9, 0.5, 0.2]);
+        let b = s.decode_unit(&[0.9, 0.5, 0.8]);
+        assert!(s.is_active(&a, 2));
+        assert_ne!(a[2], b[2]);
+    }
+
+    #[test]
+    fn conditional_roundtrip_is_bit_exact() {
+        let s = conditional();
+        for u in [[0.0, 0.0, 0.0], [0.2, 0.6, 0.9], [0.8, 0.4, 0.55], [1.0, 1.0, 1.0]] {
+            let p = s.decode_unit(&u);
+            let enc = s.encode(&p);
+            assert_eq!(s.decode_unit(&enc), p, "u={u:?}");
+            if !s.is_active(&p, 2) {
+                assert_eq!(enc[2], 0.0, "inactive dims encode to 0.0");
+            }
+            assert_eq!(s.point_from_key(&p.key()), p);
+        }
+    }
+
+    #[test]
+    fn contains_rejects_dead_cells_off_the_floor() {
+        let s = conditional();
+        let dead = Point::new(vec![Value::Cat(0), Value::Int(4), Value::Int(32)]);
+        assert!(!s.contains(&dead), "flat structure with a live j_block");
+        let live = Point::new(vec![Value::Cat(1), Value::Int(4), Value::Int(32)]);
+        assert!(s.contains(&live));
+    }
+
+    #[test]
+    fn conditional_descriptor_roundtrips() {
+        let s = conditional();
+        let d = s.descriptor();
+        assert_eq!(d, "cat:flat,blocked+int:1:8+int:2:64@0:1");
+        let parsed = SearchSpace::parse_descriptor(&d).unwrap();
+        assert_eq!(parsed, s);
+        assert_eq!(parsed.descriptor(), d);
+        // Multi-value activation sets survive too.
+        let multi = SearchSpace::new(vec![
+            Dim::categorical(&["a", "b", "c"]),
+            Dim::Int { lo: 1, hi: 4 },
+        ])
+        .with_condition(1, 0, &[1, 2]);
+        let d = multi.descriptor();
+        assert_eq!(SearchSpace::parse_descriptor(&d).unwrap(), multi);
+    }
+
+    #[test]
+    fn invalid_conditions_are_rejected() {
+        let dims = || {
+            vec![
+                Dim::categorical(&["a", "b"]),
+                Dim::Float { lo: 0.0, hi: 1.0 },
+                Dim::Int { lo: 1, hi: 8 },
+            ]
+        };
+        // Parent must precede the child.
+        assert!(
+            SearchSpace::try_conditional(
+                dims(),
+                vec![Some(Condition::new(2, &[1])), None, None],
+            )
+            .is_err()
+        );
+        // Parent must be int or categorical.
+        assert!(
+            SearchSpace::try_conditional(dims(), vec![None, None, Some(Condition::new(1, &[0]))])
+                .is_err()
+        );
+        // Empty activation set.
+        assert!(
+            SearchSpace::try_conditional(dims(), vec![None, None, Some(Condition::new(0, &[]))])
+                .is_err()
+        );
+        // Conditions nest one level only.
+        assert!(SearchSpace::try_conditional(
+            vec![
+                Dim::categorical(&["a", "b"]),
+                Dim::Int { lo: 1, hi: 4 },
+                Dim::Int { lo: 1, hi: 8 },
+            ],
+            vec![
+                None,
+                Some(Condition::new(0, &[1])),
+                Some(Condition::new(1, &[2])),
+            ],
+        )
+        .is_err());
+        // Length mismatch.
+        assert!(SearchSpace::try_conditional(dims(), vec![None]).is_err());
+        // Torn descriptors fail typed, not by panic.
+        assert!(SearchSpace::parse_descriptor("int:1:8@").is_err());
+        assert!(SearchSpace::parse_descriptor("int:1:8@0").is_err());
+        assert!(SearchSpace::parse_descriptor("int:1:8@x:1").is_err());
+        assert!(SearchSpace::parse_descriptor("cat:a,b+int:1:8@5:1").is_err());
     }
 
     #[test]

@@ -1,0 +1,680 @@
+//! Multi-objective cost layer — vector costs, scalarization presets and a
+//! bounded per-session Pareto front.
+//!
+//! PATSMA's optimizers consume one scalar cost per candidate. Real tuning
+//! targets care about more than the typical iteration: tail latency (p95
+//! jitter under an imbalanced schedule) and resource cost (core-seconds
+//! burned per unit of work) routinely disagree with the median about which
+//! cell is "best". This module keeps the optimizers untouched — they still
+//! see one number — while the layer around them:
+//!
+//! * measures a [`CostVector`] per candidate (median, p95,
+//!   efficiency proxy = `work / (cores × p95)`),
+//! * **scalarizes** it through [`ObjectiveWeights`] (a non-negative
+//!   weighted sum over the *minimized* components; the efficiency term
+//!   enters inverted, as core-seconds per unit work), and
+//! * maintains a small dominance-pruned [`ParetoFront`] of the
+//!   non-dominated cells seen this session, bounded in size, with the
+//!   scalarized winner guaranteed to stay on it.
+//!
+//! Two named presets cover the common trade ([`ObjectivePreset`]):
+//! `fastest-stable` (median + 2×p95 — pick the cell whose *tail* is short)
+//! and `cheapest` (core-seconds per unit work — pick the cell that burns
+//! the fewest cycles, even if it is not the fastest wall-clock). The
+//! default `scalar` preset weighs only the median and reproduces the
+//! single-objective behaviour bit-for-bit.
+//!
+//! # Examples
+//!
+//! ```
+//! use patsma::space::{CostVector, MultiObjective, ObjectiveSpec};
+//!
+//! let mut mo = MultiObjective::new(ObjectiveSpec::parse("fastest-stable").unwrap());
+//! // A low-median/high-tail cell and a slightly slower but stable cell.
+//! let spiky = CostVector::new(1.0, 2.5, 1.0, 4).unwrap();
+//! let stable = CostVector::new(1.2, 1.3, 1.0, 4).unwrap();
+//! mo.observe(vec![0.0], Some("static".into()), spiky);
+//! mo.observe(vec![1.0], Some("dynamic,4".into()), stable);
+//! let winner = mo.front().winner().unwrap();
+//! assert_eq!(winner.label.as_deref(), Some("dynamic,4"));
+//! ```
+
+use crate::error::PatsmaError;
+use crate::stats::Summary;
+
+/// Upper bound on any single scalarization weight: large enough for any
+/// sane emphasis, small enough that a corrupted wire frame cannot push the
+/// scalarized sum into overflow territory.
+pub const MAX_WEIGHT: f64 = 1e6;
+
+/// Default bound on [`ParetoFront`] size — per-session fronts are a
+/// report, not an archive.
+pub const DEFAULT_FRONT_CAP: usize = 8;
+
+/// One candidate's measured cost vector. `median` and `p95` are minimized
+/// directly (seconds, or any application cost); `efficiency` is the
+/// work-per-core-second proxy (**higher** is better) — dominance and
+/// scalarization invert it, so every component participates as a
+/// minimized quantity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostVector {
+    /// Typical cost (nearest-rank p50 of the samples).
+    pub median: f64,
+    /// Tail cost (nearest-rank p95 of the samples).
+    pub p95: f64,
+    /// Efficiency proxy: `work / (cores × p95)` — work items delivered per
+    /// core-second of the tail-bounded window.
+    pub efficiency: f64,
+}
+
+impl CostVector {
+    /// A vector from its raw measurements: `median`/`p95` costs, the
+    /// amount of `work` one iteration delivers and the `cores` it occupies
+    /// (the efficiency proxy divides the work by `cores × p95`). Rejects
+    /// non-finite or non-positive cost components as typed
+    /// [`PatsmaError::Invalid`] — a NaN here would silently poison every
+    /// dominance comparison downstream.
+    pub fn new(median: f64, p95: f64, work: f64, cores: usize) -> Result<Self, PatsmaError> {
+        if !(median.is_finite() && p95.is_finite()) || median <= 0.0 || p95 <= 0.0 {
+            return Err(PatsmaError::Invalid(format!(
+                "cost vector needs finite positive median/p95, got ({median}, {p95})"
+            )));
+        }
+        if !work.is_finite() || work <= 0.0 || cores == 0 {
+            return Err(PatsmaError::Invalid(format!(
+                "cost vector needs positive work ({work}) and cores ({cores})"
+            )));
+        }
+        Ok(Self {
+            median,
+            p95,
+            efficiency: work / (cores as f64 * p95),
+        })
+    }
+
+    /// A vector from repeated cost samples of one candidate (the
+    /// `ignore + 1` runs of the stabilisation protocol are a natural
+    /// sample set). Percentiles follow the nearest-rank contract of
+    /// [`Summary::percentile`]; NaN samples are rejected as typed errors.
+    pub fn from_samples(samples: &[f64], work: f64, cores: usize) -> Result<Self, PatsmaError> {
+        let s = Summary::try_from_samples(samples)?;
+        Self::new(s.percentile(50.0), s.percentile(95.0), work, cores)
+    }
+
+    /// Degenerate vector for a single scalar cost (median = p95 = `cost`,
+    /// unit work on one core): the bridge that lets scalar-only call sites
+    /// flow through the multi-objective layer unchanged.
+    pub fn from_scalar(cost: f64) -> Self {
+        let c = if cost.is_finite() && cost > 0.0 {
+            cost
+        } else {
+            f64::MIN_POSITIVE
+        };
+        Self {
+            median: c,
+            p95: c,
+            efficiency: 1.0 / c,
+        }
+    }
+
+    /// Core-seconds per unit of work — the inverted efficiency proxy, the
+    /// form in which efficiency participates in dominance/scalarization
+    /// (lower is better, like the other components).
+    #[inline]
+    pub fn inv_efficiency(&self) -> f64 {
+        1.0 / self.efficiency
+    }
+
+    /// Pareto dominance: no component worse, at least one strictly better
+    /// (efficiency compared inverted, so all three minimize).
+    pub fn dominates(&self, other: &CostVector) -> bool {
+        let no_worse = self.median <= other.median
+            && self.p95 <= other.p95
+            && self.inv_efficiency() <= other.inv_efficiency();
+        let strictly = self.median < other.median
+            || self.p95 < other.p95
+            || self.inv_efficiency() < other.inv_efficiency();
+        no_worse && strictly
+    }
+}
+
+/// Non-negative scalarization weights over the minimized components
+/// (median, p95, inverted efficiency).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObjectiveWeights {
+    /// Weight on the median cost.
+    pub median: f64,
+    /// Weight on the p95 tail cost.
+    pub p95: f64,
+    /// Weight on core-seconds per unit work ([`CostVector::inv_efficiency`]).
+    pub efficiency: f64,
+}
+
+impl ObjectiveWeights {
+    /// Weights from their components, validated (see [`validate`](Self::validate)).
+    pub fn new(median: f64, p95: f64, efficiency: f64) -> Result<Self, PatsmaError> {
+        let w = Self {
+            median,
+            p95,
+            efficiency,
+        };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Reject non-finite, negative, oversized or all-zero weights as typed
+    /// [`PatsmaError::Invalid`] — an all-zero vector would scalarize every
+    /// candidate to 0 and turn the search into a random walk.
+    pub fn validate(&self) -> Result<(), PatsmaError> {
+        for (name, w) in [
+            ("median", self.median),
+            ("p95", self.p95),
+            ("efficiency", self.efficiency),
+        ] {
+            if !w.is_finite() || w < 0.0 || w > MAX_WEIGHT {
+                return Err(PatsmaError::Invalid(format!(
+                    "objective weight {name}={w} outside [0, {MAX_WEIGHT}]"
+                )));
+            }
+        }
+        if self.median + self.p95 + self.efficiency <= 0.0 {
+            return Err(PatsmaError::Invalid(
+                "objective weights must not all be zero".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// The weighted sum the optimizer minimizes.
+    #[inline]
+    pub fn scalarize(&self, c: &CostVector) -> f64 {
+        self.median * c.median + self.p95 * c.p95 + self.efficiency * c.inv_efficiency()
+    }
+}
+
+/// Named objective presets (the `--objective` CLI surface and the tuned
+/// table's context keying).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjectivePreset {
+    /// Single-objective back-compat: weigh only the median. The default.
+    Scalar,
+    /// Short *tail*: median + 2×p95 — prefer the cell whose worst
+    /// iterations stay close to its typical ones.
+    FastestStable,
+    /// Fewest core-seconds per unit work — prefer the cell that burns the
+    /// least compute, even when a wider schedule would finish sooner.
+    Cheapest,
+}
+
+impl ObjectivePreset {
+    /// Every preset, in code order.
+    pub const ALL: [ObjectivePreset; 3] = [
+        ObjectivePreset::Scalar,
+        ObjectivePreset::FastestStable,
+        ObjectivePreset::Cheapest,
+    ];
+
+    /// The CLI/wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjectivePreset::Scalar => "scalar",
+            ObjectivePreset::FastestStable => "fastest-stable",
+            ObjectivePreset::Cheapest => "cheapest",
+        }
+    }
+
+    /// Stable numeric code (tuned-table context keying; registry records).
+    pub fn code(&self) -> u32 {
+        match self {
+            ObjectivePreset::Scalar => 0,
+            ObjectivePreset::FastestStable => 1,
+            ObjectivePreset::Cheapest => 2,
+        }
+    }
+
+    /// Parse a preset name.
+    pub fn parse(name: &str) -> Result<Self, PatsmaError> {
+        Self::ALL
+            .into_iter()
+            .find(|p| p.name() == name)
+            .ok_or_else(|| PatsmaError::Unknown {
+                kind: "objective preset",
+                name: name.to_string(),
+                expected: "scalar|fastest-stable|cheapest",
+            })
+    }
+
+    /// The preset's scalarization weights.
+    pub fn weights(&self) -> ObjectiveWeights {
+        match self {
+            ObjectivePreset::Scalar => ObjectiveWeights {
+                median: 1.0,
+                p95: 0.0,
+                efficiency: 0.0,
+            },
+            ObjectivePreset::FastestStable => ObjectiveWeights {
+                median: 1.0,
+                p95: 2.0,
+                efficiency: 0.0,
+            },
+            ObjectivePreset::Cheapest => ObjectiveWeights {
+                median: 0.0,
+                p95: 0.0,
+                efficiency: 1.0,
+            },
+        }
+    }
+}
+
+/// A full objective specification: a named preset plus its (possibly
+/// overridden) scalarization weights. [`Default`] is the scalar preset —
+/// bit-for-bit the single-objective behaviour.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObjectiveSpec {
+    /// The named preset (context keying, reports).
+    pub preset: ObjectivePreset,
+    /// The active scalarization weights (the preset's, unless overridden).
+    pub weights: ObjectiveWeights,
+}
+
+impl Default for ObjectiveSpec {
+    fn default() -> Self {
+        Self::preset(ObjectivePreset::Scalar)
+    }
+}
+
+impl ObjectiveSpec {
+    /// A spec from a preset, with the preset's own weights.
+    pub fn preset(preset: ObjectivePreset) -> Self {
+        Self {
+            preset,
+            weights: preset.weights(),
+        }
+    }
+
+    /// A spec from a preset name (see [`ObjectivePreset::parse`]).
+    pub fn parse(name: &str) -> Result<Self, PatsmaError> {
+        Ok(Self::preset(ObjectivePreset::parse(name)?))
+    }
+
+    /// Builder-style weight override (validated).
+    pub fn with_weights(mut self, weights: ObjectiveWeights) -> Result<Self, PatsmaError> {
+        weights.validate()?;
+        self.weights = weights;
+        Ok(self)
+    }
+
+    /// True for the default scalar preset with unmodified weights — the
+    /// case every scalar-only code path (and wire rendering) can skip.
+    pub fn is_scalar(&self) -> bool {
+        self.preset == ObjectivePreset::Scalar
+            && self.weights == ObjectivePreset::Scalar.weights()
+    }
+
+    /// Scalarize one cost vector under this spec's weights.
+    #[inline]
+    pub fn scalarize(&self, c: &CostVector) -> f64 {
+        self.weights.scalarize(c)
+    }
+
+    /// Stable whitespace-free descriptor — folded into cache/session
+    /// fingerprints so two sessions scalarizing differently never share
+    /// measured-cost cache entries (scalar specs skip it entirely, keeping
+    /// pre-objective fingerprints stable).
+    pub fn descriptor(&self) -> String {
+        format!(
+            "{}/wm={}/wp={}/we={}",
+            self.preset.name(),
+            self.weights.median,
+            self.weights.p95,
+            self.weights.efficiency
+        )
+    }
+
+    /// Inverse of [`descriptor`](Self::descriptor) — how a persisted
+    /// session's objective is rebuilt for a warm re-tune. Unknown segments
+    /// are ignored (forward compatibility); the reconstructed weights are
+    /// re-validated.
+    pub fn parse_descriptor(text: &str) -> Result<Self, PatsmaError> {
+        let mut segs = text.split('/');
+        let preset = ObjectivePreset::parse(segs.next().unwrap_or(""))?;
+        let mut weights = preset.weights();
+        for seg in segs {
+            let (k, v) = seg
+                .split_once('=')
+                .ok_or_else(|| PatsmaError::Invalid(format!("bad objective segment {seg:?}")))?;
+            let num: f64 = v
+                .parse()
+                .map_err(|_| PatsmaError::Invalid(format!("bad objective weight {v:?}")))?;
+            match k {
+                "wm" => weights.median = num,
+                "wp" => weights.p95 = num,
+                "we" => weights.efficiency = num,
+                _ => {} // forward compatibility
+            }
+        }
+        Self::preset(preset).with_weights(weights)
+    }
+}
+
+/// One non-dominated cell on a [`ParetoFront`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontEntry {
+    /// The cell's cache-key coordinates ([`super::Point::key`]).
+    pub key: Vec<f64>,
+    /// Typed rendering of the cell when the space is known (`dynamic,32`).
+    pub label: Option<String>,
+    /// The measured cost vector.
+    pub cost: CostVector,
+    /// The scalarized cost under the session's weights.
+    pub scalar: f64,
+}
+
+/// A bounded, dominance-pruned set of the non-dominated cells seen so far.
+///
+/// Invariants (pinned by `rust/tests/properties.rs`):
+/// * no member dominates another,
+/// * `len() <= cap`,
+/// * the scalarized winner among all *offered* candidates is a member
+///   (under all-positive weights a dominated candidate always scalarizes
+///   strictly worse than its dominator, so the global argmin is
+///   non-dominated; eviction removes the scalarized *worst* member, which
+///   the argmin can only be when it is the sole member).
+#[derive(Debug, Clone)]
+pub struct ParetoFront {
+    entries: Vec<FrontEntry>,
+    cap: usize,
+}
+
+impl ParetoFront {
+    /// An empty front holding at most `cap` members (0 is promoted to 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Offer one evaluated cell. Returns `true` when the cell is on the
+    /// front afterwards: dominated offers are rejected, dominated members
+    /// are pruned, a revisited key is refreshed in place, and when the
+    /// front overflows its bound the scalarized-worst member is evicted.
+    pub fn offer(
+        &mut self,
+        key: Vec<f64>,
+        label: Option<String>,
+        cost: CostVector,
+        scalar: f64,
+    ) -> bool {
+        if let Some(existing) = self.entries.iter_mut().find(|e| e.key == key) {
+            // Same cell measured again: keep the latest measurement.
+            existing.label = label;
+            existing.cost = cost;
+            existing.scalar = scalar;
+            return true;
+        }
+        if self.entries.iter().any(|e| e.cost.dominates(&cost)) {
+            return false;
+        }
+        self.entries.retain(|e| !cost.dominates(&e.cost));
+        let offered = key.clone();
+        self.entries.push(FrontEntry {
+            key,
+            label,
+            cost,
+            scalar,
+        });
+        if self.entries.len() > self.cap {
+            // Evict the scalarized-worst member — never the winner.
+            let worst = self
+                .entries
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.scalar.total_cmp(&b.1.scalar))
+                .map(|(i, _)| i)
+                .expect("front is non-empty");
+            self.entries.swap_remove(worst);
+        }
+        self.contains_key(&offered)
+    }
+
+    /// The members, in insertion order (no ranking implied).
+    pub fn entries(&self) -> &[FrontEntry] {
+        &self.entries
+    }
+
+    /// The scalarized winner (`None` while empty).
+    pub fn winner(&self) -> Option<&FrontEntry> {
+        self.entries
+            .iter()
+            .min_by(|a, b| a.scalar.total_cmp(&b.scalar))
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True while no cell has been accepted.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The size bound.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// True when `key` names a current member.
+    pub fn contains_key(&self, key: &[f64]) -> bool {
+        self.entries.iter().any(|e| e.key == key)
+    }
+}
+
+/// The per-session multi-objective state: one [`ObjectiveSpec`] plus the
+/// [`ParetoFront`] it accumulates. Scalar-cost call sites never construct
+/// one; vector-cost call sites route every evaluation through
+/// [`observe`](Self::observe) and feed the returned scalar to the
+/// optimizer.
+#[derive(Debug, Clone)]
+pub struct MultiObjective {
+    spec: ObjectiveSpec,
+    front: ParetoFront,
+}
+
+impl MultiObjective {
+    /// Fresh state under `spec` with the default front bound.
+    pub fn new(spec: ObjectiveSpec) -> Self {
+        Self {
+            spec,
+            front: ParetoFront::new(DEFAULT_FRONT_CAP),
+        }
+    }
+
+    /// Fold one evaluated cell in and return its scalarized cost (what the
+    /// optimizer consumes).
+    pub fn observe(&mut self, key: Vec<f64>, label: Option<String>, cost: CostVector) -> f64 {
+        let scalar = self.spec.scalarize(&cost);
+        self.front.offer(key, label, cost, scalar);
+        scalar
+    }
+
+    /// The accumulated front.
+    pub fn front(&self) -> &ParetoFront {
+        &self.front
+    }
+
+    /// The objective specification.
+    pub fn spec(&self) -> &ObjectiveSpec {
+        &self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cv(median: f64, p95: f64) -> CostVector {
+        CostVector::new(median, p95, 1.0, 1).unwrap()
+    }
+
+    #[test]
+    fn cost_vector_construction_and_proxy() {
+        // The efficiency proxy divides the work by cores × p95.
+        let c = CostVector::new(1.0, 2.0, 8.0, 4).unwrap();
+        assert_eq!(c.efficiency, 1.0);
+        assert_eq!(c.inv_efficiency(), 1.0);
+        assert!(CostVector::new(f64::NAN, 1.0, 1.0, 1).is_err());
+        assert!(CostVector::new(1.0, 0.0, 1.0, 1).is_err());
+        assert!(CostVector::new(1.0, 1.0, 0.0, 1).is_err());
+        assert!(CostVector::new(1.0, 1.0, 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn from_samples_uses_nearest_rank() {
+        let c = CostVector::from_samples(&[5.0, 1.0, 3.0, 2.0, 4.0], 1.0, 1).unwrap();
+        assert_eq!(c.median, 3.0);
+        assert_eq!(c.p95, 5.0);
+        assert!(CostVector::from_samples(&[1.0, f64::NAN], 1.0, 1).is_err());
+        assert!(CostVector::from_samples(&[], 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn from_scalar_is_the_degenerate_bridge() {
+        let c = CostVector::from_scalar(2.0);
+        assert_eq!((c.median, c.p95), (2.0, 2.0));
+        assert_eq!(c.inv_efficiency(), 2.0);
+        // Garbage costs degrade to a tiny positive vector, never NaN.
+        assert!(CostVector::from_scalar(f64::NAN).median > 0.0);
+        assert!(CostVector::from_scalar(-1.0).median > 0.0);
+    }
+
+    #[test]
+    fn dominance_is_strict_and_inverts_efficiency() {
+        let a = CostVector::new(1.0, 1.0, 4.0, 1).unwrap();
+        let b = CostVector::new(2.0, 2.0, 2.0, 1).unwrap();
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&a), "equal vectors do not dominate");
+        // Better median but worse efficiency: incomparable.
+        let fast_wasteful = CostVector::new(1.0, 1.0, 1.0, 8).unwrap();
+        let slow_thrifty = CostVector::new(3.0, 3.0, 1.0, 1).unwrap();
+        assert!(!fast_wasteful.dominates(&slow_thrifty));
+        assert!(!slow_thrifty.dominates(&fast_wasteful));
+    }
+
+    #[test]
+    fn weights_validate_bounds() {
+        assert!(ObjectiveWeights::new(1.0, 2.0, 0.5).is_ok());
+        assert!(ObjectiveWeights::new(-1.0, 0.0, 0.0).is_err());
+        assert!(ObjectiveWeights::new(0.0, 0.0, 0.0).is_err(), "all-zero");
+        assert!(ObjectiveWeights::new(f64::NAN, 1.0, 0.0).is_err());
+        assert!(ObjectiveWeights::new(2e6, 0.0, 0.0).is_err(), "over MAX");
+    }
+
+    #[test]
+    fn preset_names_codes_and_parse_roundtrip() {
+        for p in ObjectivePreset::ALL {
+            assert_eq!(ObjectivePreset::parse(p.name()).unwrap(), p);
+            p.weights().validate().unwrap();
+        }
+        assert_eq!(ObjectivePreset::Scalar.code(), 0);
+        assert_eq!(ObjectivePreset::FastestStable.code(), 1);
+        assert_eq!(ObjectivePreset::Cheapest.code(), 2);
+        assert!(ObjectivePreset::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn scalar_preset_reproduces_single_objective() {
+        let spec = ObjectiveSpec::default();
+        assert!(spec.is_scalar());
+        for cost in [0.001, 1.0, 42.5] {
+            assert_eq!(spec.scalarize(&CostVector::from_scalar(cost)), cost);
+        }
+        let tweaked = spec
+            .with_weights(ObjectiveWeights::new(1.0, 0.5, 0.0).unwrap())
+            .unwrap();
+        assert!(!tweaked.is_scalar(), "overridden weights are not scalar");
+    }
+
+    #[test]
+    fn front_prunes_dominated_members_and_rejects_dominated_offers() {
+        let mut f = ParetoFront::new(8);
+        assert!(f.offer(vec![0.0], None, cv(2.0, 2.0), 2.0));
+        // A dominating cell replaces it.
+        assert!(f.offer(vec![1.0], None, cv(1.0, 1.0), 1.0));
+        assert_eq!(f.len(), 1);
+        assert!(f.contains_key(&[1.0]));
+        // A dominated offer is rejected outright.
+        assert!(!f.offer(vec![2.0], None, cv(3.0, 3.0), 3.0));
+        assert_eq!(f.len(), 1);
+        // An incomparable cell joins.
+        assert!(f.offer(vec![3.0], None, CostVector::new(0.5, 4.0, 1.0, 1).unwrap(), 2.25));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn front_is_bounded_and_keeps_the_winner() {
+        let mut f = ParetoFront::new(3);
+        // A chain of incomparable cells: decreasing median, increasing p95.
+        for i in 0..10 {
+            let c = CostVector::new(10.0 - i as f64 * 0.5, 1.0 + i as f64, 1.0, 1).unwrap();
+            f.offer(vec![i as f64], None, c, c.median + c.p95);
+        }
+        assert!(f.len() <= 3);
+        let winner = f.winner().unwrap();
+        // The scalarized minimum of the whole sequence must have survived.
+        let best = (0..10)
+            .map(|i| (10.0 - i as f64 * 0.5) + (1.0 + i as f64))
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(winner.scalar, best);
+    }
+
+    #[test]
+    fn front_refreshes_revisited_keys_in_place() {
+        let mut f = ParetoFront::new(4);
+        f.offer(vec![1.0, 2.0], Some("a".into()), cv(2.0, 2.0), 2.0);
+        f.offer(vec![1.0, 2.0], Some("a2".into()), cv(1.5, 1.5), 1.5);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.entries()[0].label.as_deref(), Some("a2"));
+        assert_eq!(f.entries()[0].cost.median, 1.5);
+    }
+
+    #[test]
+    fn descriptor_roundtrips_through_parse() {
+        for name in ["scalar", "fastest-stable", "cheapest"] {
+            let spec = ObjectiveSpec::parse(name).unwrap();
+            let back = ObjectiveSpec::parse_descriptor(&spec.descriptor()).unwrap();
+            assert_eq!(back.preset, spec.preset);
+            assert_eq!(back.weights.median, spec.weights.median);
+            assert_eq!(back.weights.p95, spec.weights.p95);
+            assert_eq!(back.weights.efficiency, spec.weights.efficiency);
+            assert_eq!(back.is_scalar(), spec.is_scalar());
+        }
+        // Custom weights survive, including non-round floats.
+        let custom = ObjectiveSpec::parse("fastest-stable")
+            .unwrap()
+            .with_weights(ObjectiveWeights::new(0.25, 1.75, 0.125).unwrap())
+            .unwrap();
+        let back = ObjectiveSpec::parse_descriptor(&custom.descriptor()).unwrap();
+        assert_eq!(back.weights.p95, 1.75);
+        assert_eq!(back.weights.efficiency, 0.125);
+        // Unknown segments are tolerated; broken ones are typed errors.
+        assert!(ObjectiveSpec::parse_descriptor("scalar/wq=3").is_ok());
+        assert!(ObjectiveSpec::parse_descriptor("bogus/wm=1").is_err());
+        assert!(ObjectiveSpec::parse_descriptor("scalar/wm=abc").is_err());
+        assert!(ObjectiveSpec::parse_descriptor("scalar/wm=-1").is_err());
+    }
+
+    #[test]
+    fn multi_objective_observe_returns_the_scalar_the_optimizer_sees() {
+        let mut mo = MultiObjective::new(ObjectiveSpec::parse("cheapest").unwrap());
+        let wide = CostVector::new(1.0, 1.2, 4.0, 4).unwrap(); // 1.2 core-s/unit
+        let narrow = CostVector::new(3.0, 3.1, 4.0, 1).unwrap(); // 0.775 core-s/unit
+        let s_wide = mo.observe(vec![0.0], None, wide);
+        let s_narrow = mo.observe(vec![1.0], None, narrow);
+        assert!(s_narrow < s_wide, "cheapest prefers the thrifty cell");
+        assert_eq!(mo.front().winner().unwrap().key, vec![1.0]);
+        assert_eq!(mo.spec().preset.name(), "cheapest");
+    }
+}

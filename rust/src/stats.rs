@@ -7,6 +7,8 @@
 //! * [`Summary`] — batch statistics over a retained sample vector (median,
 //!   percentiles, confidence interval), used by the bench harness.
 
+use crate::error::PatsmaError;
+
 /// Streaming mean / variance (Welford's online algorithm).
 #[derive(Debug, Clone, Default)]
 pub struct Welford {
@@ -110,7 +112,7 @@ impl Summary {
     pub fn from_samples(samples: &[f64]) -> Self {
         debug_assert!(samples.iter().all(|x| !x.is_nan()), "NaN sample");
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let mut w = Welford::new();
         for &x in samples {
             w.push(x);
@@ -120,6 +122,23 @@ impl Summary {
             mean: w.mean(),
             stddev: w.stddev(),
         }
+    }
+
+    /// Fallible [`from_samples`](Self::from_samples): empty input and NaN
+    /// samples come back as typed [`PatsmaError::Invalid`] instead of a
+    /// debug assertion. The multi-objective efficiency proxy divides by
+    /// the p95 this summary produces, so a NaN here must be stopped at
+    /// the boundary rather than propagated into dominance comparisons.
+    pub fn try_from_samples(samples: &[f64]) -> Result<Self, PatsmaError> {
+        if samples.is_empty() {
+            return Err(PatsmaError::Invalid(
+                "summary needs at least one sample".into(),
+            ));
+        }
+        if let Some(i) = samples.iter().position(|x| x.is_nan()) {
+            return Err(PatsmaError::Invalid(format!("sample {i} is NaN")));
+        }
+        Ok(Self::from_samples(samples))
     }
 
     /// Number of samples.
@@ -147,21 +166,20 @@ impl Summary {
         self.sorted.last().copied().unwrap_or(f64::NAN)
     }
 
-    /// Linear-interpolation percentile, `q` in `[0, 100]`.
+    /// Nearest-rank percentile, `q` in `[0, 100]`: the value at 1-based
+    /// rank `ceil(q/100 × n)`, clamped into `[1, n]` (so `q = 0` is the
+    /// minimum and `q = 100` the maximum). Always returns an actual
+    /// sample — never an interpolated value that no run produced — which
+    /// keeps the p95 the efficiency proxy divides by attached to a real
+    /// measurement even at bench-sized n.
     pub fn percentile(&self, q: f64) -> f64 {
-        if self.sorted.is_empty() {
+        let n = self.sorted.len();
+        if n == 0 {
             return f64::NAN;
         }
         let q = q.clamp(0.0, 100.0) / 100.0;
-        let pos = q * (self.sorted.len() - 1) as f64;
-        let lo = pos.floor() as usize;
-        let hi = pos.ceil() as usize;
-        if lo == hi {
-            self.sorted[lo]
-        } else {
-            let frac = pos - lo as f64;
-            self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
-        }
+        let rank = (q * n as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, n) - 1]
     }
 
     /// Median (p50).
@@ -276,6 +294,43 @@ mod tests {
         assert!((s.percentile(25.0) - 2.0).abs() < 1e-12);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_contract_n1_to_n5() {
+        // rank = clamp(ceil(q/100 × n), 1, n), 1-based — pinned for every
+        // sample count the ignore-protocol stabilisation window produces.
+        for n in 1..=5usize {
+            let samples: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+            let s = Summary::from_samples(&samples);
+            for q in [0.0, 25.0, 50.0, 75.0, 95.0, 100.0] {
+                let rank = ((q / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+                assert_eq!(s.percentile(q), rank as f64, "n={n} q={q}");
+            }
+            // Nearest-rank always returns an actual sample.
+            assert!(samples.contains(&s.percentile(95.0)), "n={n}");
+        }
+        // Worked examples, pinned explicitly.
+        let s3 = Summary::from_samples(&[10.0, 20.0, 30.0]);
+        assert_eq!(s3.median(), 20.0);
+        assert_eq!(s3.percentile(95.0), 30.0);
+        let s4 = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s4.median(), 2.0, "even n: lower of the middle pair");
+        assert_eq!(s4.percentile(95.0), 4.0);
+        let s5 = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s5.percentile(95.0), 5.0);
+        assert_eq!(s5.percentile(20.0), 1.0);
+        assert_eq!(s5.percentile(20.1), 2.0);
+    }
+
+    #[test]
+    fn try_from_samples_rejects_nan_and_empty_as_typed_errors() {
+        assert!(Summary::try_from_samples(&[1.0, 2.0]).is_ok());
+        let e = Summary::try_from_samples(&[]).unwrap_err();
+        assert!(matches!(e, PatsmaError::Invalid(_)), "{e}");
+        let e = Summary::try_from_samples(&[1.0, f64::NAN, 3.0]).unwrap_err();
+        assert!(matches!(e, PatsmaError::Invalid(_)), "{e}");
+        assert!(e.to_string().contains("NaN"), "{e}");
     }
 
     #[test]

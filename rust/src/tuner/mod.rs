@@ -29,7 +29,7 @@ pub mod point;
 pub use point::PointValue;
 
 use crate::optimizer::{Csa, CsaConfig, NumericalOptimizer, ResetLevel};
-use crate::space::{Point, SearchSpace};
+use crate::space::{CostVector, MultiObjective, ObjectiveSpec, ParetoFront, Point, SearchSpace};
 use std::time::Instant;
 
 /// Rescale one internal-domain coordinate (`[-1, 1]`) into the user box
@@ -124,6 +124,11 @@ pub struct Autotuning {
     /// Typed search space behind the `*_typed` methods (`None` for the
     /// paper's plain numeric-box constructors).
     space: Option<SearchSpace>,
+    /// Multi-objective state behind [`entire_exec_vector`]
+    /// (`Autotuning::entire_exec_vector`); `None` until
+    /// [`set_objective`](Autotuning::set_objective) — scalar tuning pays
+    /// nothing for the layer.
+    objective: Option<MultiObjective>,
 }
 
 impl Autotuning {
@@ -175,6 +180,7 @@ impl Autotuning {
             history: Vec::new(),
             target_iterations: 0,
             space: None,
+            objective: None,
         }
     }
 
@@ -498,6 +504,55 @@ impl Autotuning {
             self.submit_cost(cost);
         }
         self.final_typed().expect("optimization finished")
+    }
+
+    /// Set the objective this tuner scalarizes vector costs under
+    /// (resets any accumulated Pareto front). Only
+    /// [`entire_exec_vector`](Self::entire_exec_vector) consults it; the
+    /// scalar `*_exec*` paths are unaffected.
+    pub fn set_objective(&mut self, spec: ObjectiveSpec) {
+        self.objective = Some(MultiObjective::new(spec));
+    }
+
+    /// Entire-Execution mode with **vector** costs: `target` returns a
+    /// [`CostVector`] per decoded candidate, the tuner scalarizes it under
+    /// the objective set via [`set_objective`](Self::set_objective) (the
+    /// default scalar preset otherwise — median only, identical to
+    /// [`entire_exec_typed`](Self::entire_exec_typed)) and maintains the
+    /// session's [`ParetoFront`] ([`pareto`](Self::pareto)).
+    pub fn entire_exec_vector(&mut self, mut target: impl FnMut(&Point) -> CostVector) -> Point {
+        if self.objective.is_none() {
+            self.objective = Some(MultiObjective::new(ObjectiveSpec::default()));
+        }
+        let space = self
+            .space
+            .clone()
+            .expect("entire_exec_vector requires with_space");
+        while !self.is_finished() {
+            self.ensure_candidate();
+            if self.is_finished() {
+                break;
+            }
+            let internal = self.typed_internal();
+            let p = space.decode_internal(&internal);
+            self.last_written = p.key();
+            let vector = target(&p);
+            let label = space.label(&p);
+            let scalar = self
+                .objective
+                .as_mut()
+                .expect("objective set above")
+                .observe(p.key(), Some(label), vector);
+            self.submit_cost(scalar);
+        }
+        self.final_typed().expect("optimization finished")
+    }
+
+    /// The Pareto front accumulated by
+    /// [`entire_exec_vector`](Self::entire_exec_vector) (`None` before any
+    /// vector-cost tuning).
+    pub fn pareto(&self) -> Option<&ParetoFront> {
+        self.objective.as_ref().map(MultiObjective::front)
     }
 
     /// Final typed solution (`None` until finished or without a space).
@@ -1042,6 +1097,57 @@ mod tests {
         #[should_panic(expected = "optimizer dimension must match")]
         fn space_dimension_mismatch_panics() {
             let _ = Autotuning::with_space(joint_space(), 0, csa(1, 2, 2, 1));
+        }
+
+        #[test]
+        fn vector_mode_with_scalar_objective_matches_typed_mode() {
+            use crate::space::CostVector;
+            use crate::workloads::synthetic::joint_cost_model;
+            let cost = |p: &crate::space::Point| {
+                // Map the 3-kind test space onto the model's kind codes.
+                let kind = [0usize, 2, 3][p[0].index()];
+                joint_cost_model(kind, p[1].as_f64(), 24.0)
+            };
+            let mut scalar = Autotuning::with_space(joint_space(), 0, csa(2, 4, 10, 21));
+            let mut vector = Autotuning::with_space(joint_space(), 0, csa(2, 4, 10, 21));
+            let a = scalar.entire_exec_typed(cost);
+            let b = vector.entire_exec_vector(|p| CostVector::from_scalar(cost(p)));
+            // Default objective weighs only the median, so the optimizer
+            // sees identical costs and walks the identical trajectory.
+            assert_eq!(a, b);
+            assert_eq!(scalar.evaluations(), vector.evaluations());
+            let front = vector.pareto().expect("vector mode builds a front");
+            assert!(!front.is_empty());
+            assert!(front.len() <= front.cap());
+            // The scalarized winner matches the tuner's own best cost.
+            let winner = front.winner().unwrap();
+            let (_, best_cost) = vector.best_typed().unwrap();
+            assert_eq!(winner.scalar, best_cost);
+            assert!(scalar.pareto().is_none(), "scalar mode pays nothing");
+        }
+
+        #[test]
+        fn vector_mode_scalarizes_under_the_set_objective() {
+            use crate::space::{CostVector, ObjectiveSpec};
+            let space = SearchSpace::new(vec![Dim::Int { lo: 1, hi: 64 }]);
+            let mut at = Autotuning::with_space(space, 0, csa(1, 3, 8, 5));
+            at.set_objective(ObjectiveSpec::parse("fastest-stable").unwrap());
+            // Median flat, tail grows with the knob: fastest-stable must
+            // drive toward the small-tail floor.
+            let tuned = at.entire_exec_vector(|p| {
+                let x = p[0].as_f64();
+                CostVector::new(1.0, 1.0 + x / 8.0, 1.0, 1).unwrap()
+            });
+            assert!(at.is_finished());
+            assert_eq!(tuned.len(), 1);
+            // The best measured cell under median + 2·p95 is the smallest
+            // knob value visited — at worst the centre-first probe.
+            let (best, _) = at.best_typed().unwrap();
+            assert!(best[0].as_i64() <= 33, "tail-heavy cells must lose: {best:?}");
+            let front = at.pareto().unwrap();
+            let w = front.winner().unwrap();
+            // winner scalar = median + 2·p95 of the best cell.
+            assert!((w.scalar - w.cost.median - 2.0 * w.cost.p95).abs() < 1e-12);
         }
     }
 }

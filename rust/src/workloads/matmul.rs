@@ -12,6 +12,7 @@
 use super::Workload;
 use crate::rng::Xoshiro256pp;
 use crate::sched::{ExecParams, Schedule, ThreadPool};
+use crate::space::{Dim, Point, SearchSpace};
 
 /// Blocked parallel GEMM workload (see module docs).
 pub struct MatMul {
@@ -89,6 +90,55 @@ impl MatMul {
         });
         self.iterations += 1;
         self.checksum()
+    }
+
+    /// Names of the tile-structure categorical dimension of
+    /// [`dense_tile_space`](Self::dense_tile_space): `flat` runs the inner
+    /// loops untiled (one full-width `j` sweep), `blocked` tiles `j` by
+    /// the `j_block` dimension.
+    pub const STRUCTURES: [&'static str; 2] = ["flat", "blocked"];
+
+    /// The dense 4-dimensional tile space
+    /// `(structure, chunk_rows, j_block, steal_batch)`. Under `flat` the
+    /// `j_block` dimension is *dead* — every value runs the same untiled
+    /// kernel — but this space keeps all its cells distinct, so a tuner
+    /// burns separate evaluations on them.
+    pub fn dense_tile_space(n: usize) -> SearchSpace {
+        let n = n.max(4) as i64;
+        SearchSpace::new(vec![
+            Dim::categorical(&Self::STRUCTURES),
+            Dim::Int { lo: 1, hi: 8 },
+            Dim::Int { lo: 2, hi: n },
+            Dim::Int { lo: 1, hi: 8 },
+        ])
+    }
+
+    /// Dependency-aware variant of
+    /// [`dense_tile_space`](Self::dense_tile_space): `j_block` is
+    /// conditional on `structure == blocked`, so the whole flat×`j_block`
+    /// slab collapses onto one cell per `(chunk, steal_batch)` at the
+    /// codec boundary and revisits become cache hits instead of fresh
+    /// evaluations.
+    pub fn conditional_tile_space(n: usize) -> SearchSpace {
+        Self::dense_tile_space(n).with_condition(2, 0, &[1])
+    }
+
+    /// Run one multiply from a decoded tile-space point (either variant):
+    /// `flat` maps to a single full-width `j` tile, `blocked` uses the
+    /// point's `j_block`. Returns the checksum.
+    pub fn multiply_tile(&mut self, p: &Point) -> f64 {
+        assert_eq!(p.len(), 4, "tile point is (structure, chunk, j_block, steal)");
+        let chunk = p[1].as_i64().max(1) as usize;
+        let j_block = if p[0].as_i64() == 1 {
+            p[2].as_i64().max(1) as usize
+        } else {
+            self.n
+        };
+        let exec = ExecParams {
+            steal_batch: p[3].as_i64().max(1) as usize,
+            ..ExecParams::default()
+        };
+        self.multiply_exec(Schedule::Dynamic(chunk), exec, j_block)
     }
 
     /// Sequential oracle (plain triple loop, same i-k-j order).
@@ -230,6 +280,48 @@ mod tests {
         let (lo, hi) = w.bounds();
         assert_eq!(lo.len(), 2);
         assert!(hi[1] <= 16.0);
+    }
+
+    #[test]
+    fn tile_spaces_share_geometry_and_collapse_flat_j_block() {
+        let dense = MatMul::dense_tile_space(32);
+        let cond = MatMul::conditional_tile_space(32);
+        assert_eq!(dense.dim(), 4);
+        assert_eq!(cond.dim(), 4);
+        assert!(!dense.has_conditions());
+        assert!(cond.has_conditions());
+        // Identical unit coordinates, flat structure: dense keeps two
+        // cells, conditional collapses them onto one.
+        let (u1, u2) = ([0.1, 0.5, 0.2, 0.5], [0.1, 0.5, 0.9, 0.5]);
+        assert_ne!(dense.decode_unit(&u1).key(), dense.decode_unit(&u2).key());
+        assert_eq!(cond.decode_unit(&u1).key(), cond.decode_unit(&u2).key());
+        // Blocked cells stay distinct in both.
+        let (b1, b2) = ([0.9, 0.5, 0.2, 0.5], [0.9, 0.5, 0.9, 0.5]);
+        assert_ne!(cond.decode_unit(&b1).key(), cond.decode_unit(&b2).key());
+    }
+
+    #[test]
+    fn multiply_tile_matches_plain_kernels() {
+        let mut a = MatMul::new(24, pool());
+        let mut b = MatMul::new(24, pool());
+        let space = MatMul::conditional_tile_space(24);
+        // A blocked cell reproduces multiply_exec with the same j tile.
+        let blocked = space.decode_unit(&[0.9, 0.5, 0.3, 0.0]);
+        let j = blocked[2].as_i64() as usize;
+        let chunk = blocked[1].as_i64() as usize;
+        let checksum = a.multiply_tile(&blocked);
+        assert_eq!(
+            checksum,
+            b.multiply_exec(Schedule::Dynamic(chunk), ExecParams::default(), j)
+        );
+        // A flat cell runs the untiled kernel (j_block = n).
+        let flat = space.decode_unit(&[0.1, 0.5, 0.7, 0.0]);
+        assert_eq!(flat[2].as_i64(), 2, "collapsed to the floor");
+        let checksum = a.multiply_tile(&flat);
+        assert_eq!(
+            checksum,
+            b.multiply_exec(Schedule::Dynamic(chunk), ExecParams::default(), 24)
+        );
     }
 
     #[test]

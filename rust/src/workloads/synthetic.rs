@@ -5,6 +5,14 @@
 //! and are shifted so the global optimum is *not* at the centre (CSA and
 //! friends probe the centre first; an un-shifted benchmark would hand them
 //! the answer). Each entry records the known optimum for assertions.
+//!
+//! The runtime *models* at the bottom ([`chunk_cost_model`],
+//! [`joint_cost_model`], [`tile_cost_model`], [`power_law_cost_vector`])
+//! are the deterministic stand-ins for measured workloads: closed-form
+//! landscapes shaped like real scheduling trade-offs, so tuner tests can
+//! pin exact winners without wall-clock noise.
+
+use crate::space::CostVector;
 
 /// A synthetic benchmark function.
 #[derive(Clone, Copy)]
@@ -171,6 +179,78 @@ pub fn joint_cost_model(kind: usize, chunk: f64, best: f64) -> f64 {
     }
 }
 
+/// A synthetic runtime model over matmul's `(structure, chunk, j_block)`
+/// tile space — ground truth for the conditional-vs-dense convergence
+/// pins. `structure` indexes `{flat, blocked}`:
+///
+/// * `flat` (0) ignores `j_block` entirely (no tiling) and pays a flat
+///   cache penalty — the dead slab a conditional space collapses;
+/// * `blocked` (1) rewards a `j_block` near `n/4` (tile ≈ cache-resident
+///   panel) and beats flat's floor when it gets there.
+///
+/// The global minimum is `(blocked, chunk=max, j_block≈n/4)`: a tuner must
+/// pick the structure *and* the tile size together.
+pub fn tile_cost_model(structure: usize, chunk: f64, j_block: f64, n: f64) -> f64 {
+    let contention = 4.0 / chunk.max(1.0);
+    if structure == 0 {
+        2.0 + 0.1 * contention
+    } else {
+        let best = (n / 4.0).max(1.0);
+        let mismatch = ((j_block.max(1.0) - best) / best).powi(2);
+        1.0 + 0.1 * contention + 0.8 * mismatch
+    }
+}
+
+/// A deterministic *vector*-cost model of a power-law-imbalanced loop —
+/// ground truth for the objective-preset pins. Item costs follow a heavy
+/// tail, so the schedule kinds disagree across objectives (times
+/// normalised to ideal-parallel = 1.0 on `threads` cores):
+///
+/// * `static` halves the range contiguously: fine median, the heavy head
+///   lands on one core → long p95 tail, all cores held the whole time;
+/// * `static-chunk` at a serialising chunk (`>= items`) runs one core:
+///   slow wall-clock but no tail and the fewest core-seconds — the
+///   **cheapest** cell;
+/// * `dynamic` at a moderate chunk self-balances: slightly worse median
+///   than static, far shorter tail — the **fastest-stable** cell;
+/// * `guided` trails dynamic (its shrinking blocks still front-load the
+///   heavy items).
+///
+/// Returns the per-cell [`CostVector`] with `work = items` and the cores
+/// the cell actually occupies, so the efficiency proxy separates wide
+/// from narrow cells.
+pub fn power_law_cost_vector(kind: usize, chunk: f64, threads: usize, items: f64) -> CostVector {
+    let t = threads.max(1) as f64;
+    let items = items.max(1.0);
+    let c = chunk.clamp(1.0, items);
+    let blocks = (items / c).ceil();
+    let cores = if kind == 0 { t } else { t.min(blocks).max(1.0) };
+    let base = t / cores;
+    let imb = (cores - 1.0) / cores;
+    let (median, p95) = match kind {
+        // static: chunk is dead; power-law head on one core → 2.2× tail.
+        0 => (1.0, 2.2),
+        // static-chunk: good locality, but round-robin keeps the heavy
+        // items clustered — wide tail unless it serialises.
+        1 => {
+            let m = base * (0.95 + 0.4 / c.sqrt());
+            (m, m * (1.0 + 0.8 * imb))
+        }
+        // dynamic: queueing overhead at tiny/huge chunks, short tail.
+        2 => {
+            let m = base * (1.05 + 0.4 / c.sqrt() + (c / items).powi(2));
+            (m, m * (1.0 + 0.12 * imb))
+        }
+        // guided: between the two.
+        _ => {
+            let m = base * (1.08 + 0.2 / c.sqrt() + 0.5 * (c / items).powi(2));
+            (m, m * (1.0 + 0.2 * imb))
+        }
+    };
+    CostVector::new(median, p95, items, cores as usize)
+        .expect("power-law model is finite and positive")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +356,71 @@ mod tests {
         assert_eq!(
             joint_cost_model(0, 1.0, 48.0),
             joint_cost_model(0, 500.0, 48.0)
+        );
+    }
+
+    #[test]
+    fn tile_model_optimum_is_blocked_with_the_matched_tile() {
+        let n = 128.0;
+        // Flat ignores j_block entirely.
+        assert_eq!(
+            tile_cost_model(0, 4.0, 2.0, n),
+            tile_cost_model(0, 4.0, 100.0, n)
+        );
+        // Global argmin over the full grid: blocked, chunk at the top,
+        // j_block near n/4.
+        let mut argmin = (0usize, 0i64, 0i64);
+        let mut min_cost = f64::INFINITY;
+        for s in 0..2usize {
+            for chunk in 1..=8i64 {
+                for j in 2..=128i64 {
+                    let c = tile_cost_model(s, chunk as f64, j as f64, n);
+                    if c < min_cost {
+                        min_cost = c;
+                        argmin = (s, chunk, j);
+                    }
+                }
+            }
+        }
+        assert_eq!(argmin.0, 1, "blocked must win");
+        assert_eq!(argmin.1, 8);
+        assert!((argmin.2 - 32).abs() <= 2, "j_block argmin {}", argmin.2);
+        assert!(min_cost < tile_cost_model(0, 8.0, 2.0, n), "beats flat");
+    }
+
+    #[test]
+    fn power_law_presets_disagree_about_the_winner() {
+        use crate::space::ObjectiveSpec;
+        let (threads, items) = (4usize, 256.0);
+        let stable = ObjectiveSpec::parse("fastest-stable").unwrap();
+        let cheap = ObjectiveSpec::parse("cheapest").unwrap();
+        let mut best_stable = (f64::INFINITY, (0usize, 0i64));
+        let mut best_cheap = (f64::INFINITY, (0usize, 0i64));
+        for kind in 0..4usize {
+            for chunk in 1..=256i64 {
+                let cv = power_law_cost_vector(kind, chunk as f64, threads, items);
+                let s = stable.scalarize(&cv);
+                if s < best_stable.0 {
+                    best_stable = (s, (kind, chunk));
+                }
+                let c = cheap.scalarize(&cv);
+                if c < best_cheap.0 {
+                    best_cheap = (c, (kind, chunk));
+                }
+            }
+        }
+        assert_ne!(best_stable.1, best_cheap.1, "presets must disagree");
+        // The stable winner runs wide (dynamic); the cheapest winner
+        // serialises (static-chunk at the full-range chunk).
+        assert_eq!(best_stable.1 .0, 2, "fastest-stable picks dynamic");
+        assert_eq!(best_cheap.1, (1, 256), "cheapest picks the serial cell");
+        let p_stable =
+            power_law_cost_vector(best_stable.1 .0, best_stable.1 .1 as f64, threads, items).p95;
+        let p_cheap =
+            power_law_cost_vector(best_cheap.1 .0, best_cheap.1 .1 as f64, threads, items).p95;
+        assert!(
+            p_stable < p_cheap,
+            "stable p95 {p_stable} must undercut cheapest p95 {p_cheap}"
         );
     }
 

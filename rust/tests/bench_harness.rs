@@ -44,6 +44,8 @@ fn tier1_suite_is_schema_stable_across_runs() {
     assert!(ids_a.contains(&"dispatch/single-chunk-inline"), "{ids_a:?}");
     assert!(ids_a.contains(&"sched/steal-imbalanced"), "{ids_a:?}");
     assert!(ids_a.contains(&"optimizer/csa-sphere"), "{ids_a:?}");
+    assert!(ids_a.contains(&"search/mo-vs-scalar"), "{ids_a:?}");
+    assert!(ids_a.contains(&"search/conditional-vs-dense"), "{ids_a:?}");
     assert!(ids_a.contains(&"service/synthetic-batch"), "{ids_a:?}");
     assert!(ids_a.contains(&"adaptive/region-drift-cycle"), "{ids_a:?}");
     assert!(ids_a.contains(&"adaptive/context-revisit-cold"), "{ids_a:?}");

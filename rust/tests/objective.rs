@@ -1,0 +1,148 @@
+//! ISSUE 10 acceptance pins for the multi-objective, dependency-aware
+//! search layer:
+//!
+//! 1. A joint matmul tile tune over the *conditional* space (`j_block`
+//!    active only under the `blocked` structure) measures strictly fewer
+//!    distinct cells than the same deterministic sweep of the dense
+//!    4-dimensional space, at the identical optimizer budget and the
+//!    identical winning cell — the dead `flat × j_block` slab collapses
+//!    into cache hits instead of fresh evaluations.
+//! 2. The `fastest-stable` and `cheapest` presets pick *different* winning
+//!    cells on the power-law-imbalanced stress model, and the stable
+//!    preset's winner has a strictly lower p95 tail.
+
+use std::collections::HashMap;
+
+use patsma::optimizer::GridSearch;
+use patsma::sched::ThreadPool;
+use patsma::space::{MultiObjective, ObjectivePreset, ObjectiveSpec, Point, SearchSpace, Value};
+use patsma::tuner::Autotuning;
+use patsma::workloads::matmul::MatMul;
+use patsma::workloads::synthetic::{power_law_cost_vector, tile_cost_model};
+
+/// Matrix order for the tile-space pins (the model's optimum tile is
+/// `n / 4`).
+const N: usize = 16;
+/// Lattice resolution per dimension of the deterministic sweep.
+const GRID: usize = 4;
+
+/// Sweep one tile space with a full deterministic lattice (`GridSearch` —
+/// the strongest form of "same seed": both spaces see the identical
+/// candidate sequence), memoising the cost model by *decoded* cell so
+/// revisits of an already-measured cell are cache hits. Returns the tuned
+/// point, its model cost, the number of distinct cells measured and the
+/// optimizer evaluations consumed.
+fn tune_tile(space: SearchSpace) -> (Point, f64, usize, u64) {
+    let mut cache: HashMap<Vec<u64>, f64> = HashMap::new();
+    let mut at = Autotuning::with_space(space, 0, Box::new(GridSearch::new(4, GRID)));
+    let tuned = at.entire_exec_typed(|p| {
+        let key: Vec<u64> = p.key().iter().map(|v| v.to_bits()).collect();
+        *cache.entry(key).or_insert_with(|| {
+            tile_cost_model(p[0].index(), p[1].as_f64(), p[2].as_f64(), N as f64)
+        })
+    });
+    let cost = tile_cost_model(tuned[0].index(), tuned[1].as_f64(), tuned[2].as_f64(), N as f64);
+    let evals = at.evaluations();
+    (tuned, cost, cache.len(), evals)
+}
+
+#[test]
+fn conditional_tile_space_measures_strictly_fewer_cells_than_dense() {
+    let (dense_p, dense_cost, dense_cells, dense_evals) = tune_tile(MatMul::dense_tile_space(N));
+    let (cond_p, cond_cost, cond_cells, cond_evals) = tune_tile(MatMul::conditional_tile_space(N));
+    // Identical sweep budget on both spaces...
+    assert_eq!(dense_evals, cond_evals, "sweeps must consume equal budgets");
+    // ...but the conditional space collapses the dead `flat × j_block`
+    // slab, so strictly fewer distinct cells need a measurement.
+    assert!(
+        cond_cells < dense_cells,
+        "conditional space measured {cond_cells} cells, dense {dense_cells} — \
+         the dead slab did not collapse"
+    );
+    // Both sweeps land on the same global optimum: the blocked structure
+    // beats flat's 2.0 cost floor with the cache-resident tile.
+    assert_eq!(dense_cost, cond_cost, "{dense_p:?} vs {cond_p:?}");
+    assert!(cond_cost < 2.0, "optimum {cond_cost} must beat flat's floor");
+    assert_eq!(cond_p[0], Value::Cat(1), "optimum must be blocked: {cond_p:?}");
+    assert_eq!(dense_p[0], Value::Cat(1), "optimum must be blocked: {dense_p:?}");
+    // The winning cell drives the real kernel to the oracle's answer.
+    let mut mm = MatMul::new(N, ThreadPool::global());
+    let tiled = mm.multiply_tile(&cond_p);
+    let oracle = mm.multiply_sequential();
+    assert!(
+        (tiled - oracle).abs() <= 1e-6 * oracle.abs().max(1.0),
+        "tuned tile checksum {tiled} != oracle {oracle}"
+    );
+}
+
+/// Exhaustive scalarized argmin over the power-law stress model's
+/// `(schedule kind, chunk)` cells, routed through [`MultiObjective`] so the
+/// Pareto front machinery sees every cell. Returns the winning cell, its
+/// scalar and the accumulated front.
+fn sweep_power_law(
+    spec: ObjectiveSpec,
+    threads: usize,
+    items: f64,
+) -> (usize, usize, f64, MultiObjective) {
+    let mut mo = MultiObjective::new(spec);
+    let mut best = (0usize, 0usize, f64::INFINITY);
+    for kind in 0..4usize {
+        for chunk in 1..=items as usize {
+            let cost = power_law_cost_vector(kind, chunk as f64, threads, items);
+            let scalar = mo.observe(
+                vec![kind as f64, chunk as f64],
+                Some(format!("kind{kind}/chunk{chunk}")),
+                cost,
+            );
+            if scalar < best.2 {
+                best = (kind, chunk, scalar);
+            }
+        }
+    }
+    (best.0, best.1, best.2, mo)
+}
+
+#[test]
+fn fastest_stable_and_cheapest_pick_different_cells_on_the_power_law() {
+    let (threads, items) = (4usize, 256.0f64);
+    let (s_kind, s_chunk, s_scalar, s_mo) = sweep_power_law(
+        ObjectiveSpec::preset(ObjectivePreset::FastestStable),
+        threads,
+        items,
+    );
+    let (c_kind, c_chunk, c_scalar, c_mo) = sweep_power_law(
+        ObjectiveSpec::preset(ObjectivePreset::Cheapest),
+        threads,
+        items,
+    );
+    // The presets disagree: fastest-stable self-balances on a moderate
+    // dynamic chunk, cheapest serialises on the full-range static chunk.
+    assert_ne!(
+        (s_kind, s_chunk),
+        (c_kind, c_chunk),
+        "presets must pick different cells"
+    );
+    assert_eq!(s_kind, 2, "fastest-stable must land on dynamic");
+    assert_eq!(
+        (c_kind, c_chunk),
+        (1, items as usize),
+        "cheapest must land on the serialising static chunk"
+    );
+    // The stable preset's tail is strictly shorter.
+    let s_p95 = power_law_cost_vector(s_kind, s_chunk as f64, threads, items).p95;
+    let c_p95 = power_law_cost_vector(c_kind, c_chunk as f64, threads, items).p95;
+    assert!(
+        s_p95 < c_p95,
+        "fastest-stable p95 {s_p95} must undercut cheapest's {c_p95}"
+    );
+    // The front machinery saw every cell and kept each scalarized winner.
+    for (mo, min_scalar) in [(&s_mo, s_scalar), (&c_mo, c_scalar)] {
+        let front = mo.front();
+        assert!(!front.is_empty());
+        let winner = front.winner().expect("non-empty front");
+        assert_eq!(
+            winner.scalar, min_scalar,
+            "front winner must carry the sweep's minimal scalar"
+        );
+    }
+}

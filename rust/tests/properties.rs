@@ -11,7 +11,12 @@
 //!    ignore);
 //! 4. optimizer domain: every staged optimizer emits points inside
 //!    `[-1, 1]^d` for random configs and adversarial costs;
-//! 5. determinism: same seed ⇒ same tuning trajectory.
+//! 5. determinism: same seed ⇒ same tuning trajectory;
+//! 6. multi-objective laws (three fixed seeds each): the Pareto front
+//!    holds no mutually-dominating pair, keeps the scalarized winner and
+//!    stays bounded; conditional spaces collapse dead cells and round-trip
+//!    active ones; scalarization is monotone under dominance and shifting
+//!    weight onto a component never worsens the winner's value of it.
 
 use patsma::adaptive::{
     ContextKey, DriftConfig, DriftMonitor, SharedTunedTable, TableEntry, TableSeed, TableUpdate,
@@ -24,7 +29,7 @@ use patsma::optimizer::{
 use patsma::rng::Xoshiro256pp;
 use patsma::sched::{Schedule, ThreadPool};
 use patsma::service::EnvFingerprint;
-use patsma::space::{Dim, SearchSpace, Value};
+use patsma::space::{CostVector, Dim, ObjectiveWeights, ParetoFront, SearchSpace, Value};
 use patsma::testkit::{forall, Draw};
 use patsma::tuner::Autotuning;
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -696,6 +701,232 @@ fn prop_drift_monitor_detects_every_step_beyond_the_band() {
                 Err(format!(
                     "step of 3x band never detected (mean {mean}, noise {rel_noise})"
                 ))
+            },
+        );
+    }
+}
+
+/// One random, valid cost vector (positive components; the p95 at or above
+/// the median, as `CostVector::from_samples` would produce).
+fn random_cost_vector(r: &mut Xoshiro256pp) -> CostVector {
+    let median = Draw::f64_in(r, 0.01, 10.0);
+    let p95 = median * Draw::f64_in(r, 1.0, 3.0);
+    let work = Draw::f64_in(r, 0.1, 10.0);
+    let cores = Draw::usize_in(r, 1, 16);
+    CostVector::new(median, p95, work, cores).expect("generated components are positive")
+}
+
+/// One random, valid weight triple (the median weight is kept strictly
+/// positive so the all-zero rejection never trips).
+fn random_weights(r: &mut Xoshiro256pp) -> ObjectiveWeights {
+    ObjectiveWeights::new(
+        Draw::f64_in(r, 0.1, 2.0),
+        Draw::f64_in(r, 0.0, 2.0),
+        Draw::f64_in(r, 0.0, 2.0),
+    )
+    .expect("generated weights are valid")
+}
+
+/// Pareto-front invariants (ISSUE 10, three fixed seeds): after any offer
+/// sequence the front holds no mutually-dominating pair, stays within its
+/// bound, and its scalarized winner matches the best scalar ever offered —
+/// eviction and pruning may drop cells, never the winner.
+#[test]
+fn prop_pareto_front_no_dominated_members_winner_kept_bounded() {
+    for seed in [0x9A9E_0001u64, 0x9A9E_0002, 0x9A9E_0003] {
+        forall(
+            seed,
+            40,
+            |r| {
+                let cap = Draw::usize_in(r, 1, 6);
+                let vectors: Vec<CostVector> = (0..Draw::usize_in(r, 1, 30))
+                    .map(|_| random_cost_vector(r))
+                    .collect();
+                let weights = random_weights(r);
+                (cap, vectors, weights)
+            },
+            |(cap, vectors, weights)| {
+                let mut front = ParetoFront::new(*cap);
+                let mut best_offered = f64::INFINITY;
+                for (i, v) in vectors.iter().enumerate() {
+                    let scalar = weights.scalarize(v);
+                    best_offered = best_offered.min(scalar);
+                    front.offer(vec![i as f64], None, *v, scalar);
+                }
+                if front.is_empty() {
+                    return Err("front empty after accepting offers".into());
+                }
+                if front.len() > *cap {
+                    return Err(format!("front size {} exceeds cap {cap}", front.len()));
+                }
+                let entries = front.entries();
+                for a in entries {
+                    for b in entries {
+                        if a.key != b.key && a.cost.dominates(&b.cost) {
+                            return Err(format!(
+                                "member {:?} dominates member {:?}",
+                                a.key, b.key
+                            ));
+                        }
+                    }
+                }
+                let winner = front.winner().expect("non-empty front has a winner");
+                if (winner.scalar - best_offered).abs() > 1e-12 * best_offered.max(1.0) {
+                    return Err(format!(
+                        "winner scalar {} != best offered {best_offered}",
+                        winner.scalar
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Conditional-space invariants (ISSUE 10, three fixed seeds): uniform —
+/// even overshooting — samples always decode into valid cells,
+/// `decode(encode(p)) == p` holds whether or not the child is active, and a
+/// dead child always carries the collapsed floor value no matter where its
+/// raw coordinate lands (one cache key per dead slab).
+#[test]
+fn prop_conditional_spaces_collapse_dead_cells_and_roundtrip() {
+    for seed in [0xC0DE_0001u64, 0xC0DE_0002, 0xC0DE_0003] {
+        forall(
+            seed,
+            40,
+            |r| {
+                let n = Draw::usize_in(r, 2, 4);
+                let mut active: Vec<i64> = (0..n as i64)
+                    .filter(|_| Draw::usize_in(r, 0, 1) == 0)
+                    .collect();
+                if active.is_empty() {
+                    active.push(0);
+                }
+                let mut dims = vec![
+                    Dim::Categorical((0..n).map(|i| format!("s{i}")).collect()),
+                    random_dim(r),
+                ];
+                if Draw::usize_in(r, 0, 1) == 0 {
+                    dims.push(random_dim(r));
+                }
+                let raw: Vec<f64> = (0..dims.len())
+                    .map(|_| Draw::f64_in(r, -0.5, 1.5))
+                    .collect();
+                let alt_child = Draw::f64_in(r, 0.0, 1.0);
+                (dims, active, raw, alt_child)
+            },
+            |(dims, active, raw, alt_child)| {
+                let space = SearchSpace::try_conditional(
+                    dims.clone(),
+                    {
+                        let mut c: Vec<Option<patsma::space::Condition>> =
+                            vec![None; dims.len()];
+                        c[1] = Some(patsma::space::Condition::new(0, active));
+                        c
+                    },
+                )
+                .map_err(|e| format!("generated space invalid: {e:#}"))?;
+                let p = space.decode_unit(raw);
+                if !space.contains(&p) {
+                    return Err(format!("decoded point out of domain: {p:?}"));
+                }
+                let enc = space.encode(&p);
+                if !enc.iter().all(|u| (0.0..=1.0).contains(u)) {
+                    return Err(format!("encode left the unit cube: {enc:?}"));
+                }
+                if space.decode_unit(&enc) != p {
+                    return Err(format!("roundtrip moved the point: {p:?}"));
+                }
+                let parent = p[0].as_i64();
+                let child_active = active.contains(&parent);
+                if space.is_active(&p, 1) != child_active {
+                    return Err(format!(
+                        "is_active disagrees with the condition for parent {parent}"
+                    ));
+                }
+                if !child_active {
+                    if p[1] != space.collapsed_value(1) {
+                        return Err(format!(
+                            "dead child decoded {:?}, want collapsed {:?}",
+                            p[1],
+                            space.collapsed_value(1)
+                        ));
+                    }
+                    // The whole dead slab shares one cell: moving the dead
+                    // child's raw coordinate changes nothing.
+                    let mut raw2 = raw.clone();
+                    raw2[1] = *alt_child;
+                    if space.decode_unit(&raw2) != p {
+                        return Err("dead slab split into distinct cells".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Scalarization laws (ISSUE 10, three fixed seeds): dominance implies
+/// scalar order for every valid weight triple, and shifting weight onto the
+/// p95 component never *raises* the winning cell's p95 over a fixed
+/// candidate set (monotone comparative statics of linear scalarization).
+#[test]
+fn prop_scalarization_monotone_under_dominance_and_weight_shift() {
+    for seed in [0x5CA1_0001u64, 0x5CA1_0002, 0x5CA1_0003] {
+        forall(
+            seed,
+            40,
+            |r| {
+                let a = random_cost_vector(r);
+                // `b` is component-wise no better: median and p95 scaled up
+                // and work sized so its inverted efficiency is `a`'s divided
+                // by `h <= 1` (i.e. no smaller).
+                let p95_b = a.p95 * Draw::f64_in(r, 1.0, 4.0);
+                let h = Draw::f64_in(r, 0.25, 1.0);
+                let b = CostVector::new(
+                    a.median * Draw::f64_in(r, 1.0, 4.0),
+                    p95_b,
+                    h * p95_b / a.inv_efficiency(),
+                    1,
+                )
+                .expect("scaled components stay positive");
+                let weights = random_weights(r);
+                let delta = Draw::f64_in(r, 0.1, 3.0);
+                let pool: Vec<CostVector> = (0..Draw::usize_in(r, 2, 10))
+                    .map(|_| random_cost_vector(r))
+                    .collect();
+                (a, b, weights, delta, pool)
+            },
+            |(a, b, weights, delta, pool)| {
+                // Dominance (weak, by construction) implies scalar order.
+                if weights.scalarize(a) > weights.scalarize(b) + 1e-12 {
+                    return Err(format!(
+                        "dominating vector scalarized worse: {} > {}",
+                        weights.scalarize(a),
+                        weights.scalarize(b)
+                    ));
+                }
+                // Weight shift: the p95 of the argmin never rises when the
+                // p95 weight grows (other weights fixed).
+                let heavier = ObjectiveWeights::new(
+                    weights.median,
+                    weights.p95 + delta,
+                    weights.efficiency,
+                )
+                .expect("increasing one weight keeps the triple valid");
+                let argmin = |w: &ObjectiveWeights| {
+                    pool.iter()
+                        .min_by(|x, y| w.scalarize(x).total_cmp(&w.scalarize(y)))
+                        .expect("pool is non-empty")
+                };
+                let before = argmin(weights).p95;
+                let after = argmin(&heavier).p95;
+                if after > before + 1e-12 {
+                    return Err(format!(
+                        "heavier p95 weight raised the winner's p95: {before} -> {after}"
+                    ));
+                }
+                Ok(())
             },
         );
     }

@@ -12,6 +12,7 @@ use patsma::service::{
     plan_retune, EnvFingerprint, OptimizerSpec, PointKind, ServiceReport, SessionSpec,
     TuningService, WorkloadSpec,
 };
+use patsma::space::ObjectiveSpec;
 
 /// A mixed batch: 8 sessions over 2 landscapes × 4 optimizers, seeds fixed.
 fn mixed_specs() -> Vec<SessionSpec> {
@@ -166,6 +167,7 @@ fn named_workload_session_runs_end_to_end() {
         num_opt: 2,
         max_iter: 2,
         seed: 11,
+        objective: ObjectiveSpec::default(),
         warm: None,
     };
     let report = TuningService::new(2).run(&[spec]).unwrap();
@@ -461,4 +463,87 @@ fn retune_plan_roundtrips_through_registry_file() {
     assert_eq!(reloaded.states.len(), 2);
     assert!(reloaded.sessions.iter().all(|s| s.warm_started));
     let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// Multi-objective sessions (tentpole): the scalar default stays
+// bit-identical to the pre-objective service, non-scalar sessions report a
+// Pareto front that survives the registry, and plan_retune reconstructs the
+// objective from persisted state.
+// ---------------------------------------------------------------------
+
+#[test]
+fn scalar_default_is_bit_identical_and_reports_no_front() {
+    let plain = SessionSpec::synthetic("obj-base", 48.0, 31).with_budget(4, 10);
+    let explicit = SessionSpec::synthetic("obj-base", 48.0, 31)
+        .with_budget(4, 10)
+        .with_objective(ObjectiveSpec::default());
+    let a = TuningService::new(2).run(&[plain]).unwrap();
+    let b = TuningService::new(2).run(&[explicit]).unwrap();
+    assert_eq!(a.sessions[0].best_point, b.sessions[0].best_point);
+    assert_eq!(
+        a.sessions[0].best_cost.to_bits(),
+        b.sessions[0].best_cost.to_bits()
+    );
+    assert!(a.pareto.is_empty(), "scalar sessions never report a front");
+    assert!(b.pareto.is_empty());
+}
+
+#[test]
+fn non_scalar_session_reports_a_front_that_survives_the_registry() {
+    let spec = SessionSpec::synthetic("obj-fs", 48.0, 31)
+        .with_budget(4, 10)
+        .with_objective(ObjectiveSpec::parse("fastest-stable").unwrap());
+    let service = TuningService::new(2);
+    let report = service.run(&[spec]).unwrap();
+    let s = &report.sessions[0];
+    assert!(!report.pareto.is_empty(), "non-scalar sessions report a front");
+    assert!(report.pareto.len() <= 8, "front is bounded");
+    for p in &report.pareto {
+        assert_eq!(p.session, "obj-fs");
+        assert!((1.0..=128.0).contains(&p.cell[0]), "cell {:?}", p.cell);
+        assert!(p.median > 0.0 && p.p95 > 0.0 && p.efficiency > 0.0);
+    }
+    // The scalarized winner on the front is the session's best cost.
+    let winner = report
+        .pareto
+        .iter()
+        .map(|p| p.scalar)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        (winner - s.best_cost).abs() <= 1e-12 * s.best_cost.abs(),
+        "front winner {winner} vs session best {}",
+        s.best_cost
+    );
+    // The front survives a save/load cycle verbatim.
+    let reparsed = ServiceReport::from_text(&report.to_text()).unwrap();
+    assert_eq!(reparsed.pareto, report.pareto);
+    // And seeding a fresh service from the report restores it.
+    let seeded = TuningService::new(1);
+    seeded.seed_from(&reparsed);
+    assert_eq!(seeded.report().pareto, report.pareto);
+}
+
+#[test]
+fn plan_retune_reconstructs_the_objective_from_persisted_state() {
+    let objective = ObjectiveSpec::parse("cheapest").unwrap();
+    let spec = SessionSpec::synthetic("obj-retune", 48.0, 11)
+        .with_budget(4, 12)
+        .with_objective(objective);
+    let report = TuningService::new(1).run(&[spec]).unwrap();
+    let mut states = report.states.clone();
+    assert!(
+        states[0].extra.iter().any(|(k, _)| k == "objective"),
+        "non-scalar sessions persist their objective descriptor: {:?}",
+        states[0].extra
+    );
+    states[0].env = EnvFingerprint::new("threads=1024/os=plan9");
+    let plan = plan_retune(&states, &EnvFingerprint::current(), 50, false).unwrap();
+    assert_eq!(plan.drifted, vec!["obj-retune".to_string()]);
+    assert_eq!(plan.specs[0].objective, objective);
+    // The warm rerun keeps scalarizing under the same objective and still
+    // reports a front.
+    let rerun = TuningService::new(1).run(&plan.specs).unwrap();
+    assert!(rerun.sessions[0].warm_started);
+    assert!(!rerun.pareto.is_empty());
 }

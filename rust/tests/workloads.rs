@@ -9,7 +9,7 @@ use patsma::adaptive::TunedRegionConfig;
 use patsma::bench::{run_suite, Suite};
 use patsma::cli::{self, Command};
 use patsma::sched::Schedule;
-use patsma::space::{Dim, Value};
+use patsma::space::{CostVector, Dim, ObjectivePreset, ObjectiveSpec, Point, Value};
 use patsma::workloads::{self, by_name_sized, SizeProfile};
 
 #[test]
@@ -141,6 +141,69 @@ fn service_run_joint_covers_every_registry_name() {
             "{name}: label {label:?}"
         );
         let _ = std::fs::remove_file(&registry);
+    }
+}
+
+#[test]
+fn every_registry_workload_tunes_under_a_multi_objective() {
+    // ISSUE 10 conformance: every NAMES entry flows through the
+    // vector-cost path — a short fastest-stable joint tune must converge,
+    // accumulate a non-empty Pareto front, and every front cell must decode
+    // back into the workload's joint domain.
+    for name in workloads::NAMES {
+        let mut w = by_name_sized(name, SizeProfile::Quick).unwrap();
+        let mut region = TunedRegionConfig::for_workload(w.as_ref(), true)
+            .budget(2, 2)
+            .seed(13)
+            .objective(ObjectiveSpec::preset(ObjectivePreset::FastestStable))
+            .build_typed();
+        let mut guard = 0;
+        while !region.is_converged() {
+            let value = region.run_with_cost_vector(|p| {
+                let mut samples = [0.0f64; 3];
+                let mut out = 0.0;
+                for s in &mut samples {
+                    let t = std::time::Instant::now();
+                    out = w.run_point(p);
+                    *s = t.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+                }
+                let cost = CostVector::from_samples(&samples, 1.0, 1)
+                    .expect("clamped wall-clock samples are finite and positive");
+                (cost, out)
+            });
+            assert!(value.is_finite(), "{name}: non-finite application value");
+            guard += 1;
+            assert!(guard < 100, "{name}: 2×2 multi-objective budget never converged");
+        }
+        let space = w.joint_space();
+        let front = region.pareto();
+        assert!(!front.is_empty(), "{name}: empty Pareto front after tuning");
+        for entry in front.entries() {
+            // Front keys are the per-dimension cache coordinates
+            // (`Point::key`): ints and floats as themselves, categoricals
+            // as their index — rebuild the typed cell and check the domain.
+            let values: Vec<Value> = space
+                .dims()
+                .iter()
+                .zip(&entry.key)
+                .map(|(d, k)| match d {
+                    Dim::Categorical(_) => Value::Cat(*k as usize),
+                    Dim::Int { .. } | Dim::Pow2 { .. } => Value::Int(*k as i64),
+                    _ => Value::Float(*k),
+                })
+                .collect();
+            let cell = Point::new(values);
+            assert!(
+                space.contains(&cell),
+                "{name}: front cell {cell:?} out of the joint domain"
+            );
+        }
+        let winner = front.winner().unwrap();
+        assert!(
+            winner.cost.median > 0.0 && winner.cost.p95 >= winner.cost.median,
+            "{name}: degenerate winner cost {:?}",
+            winner.cost
+        );
     }
 }
 
